@@ -1,0 +1,98 @@
+//! Click-through-rate prediction: the workload that motivates the paper's
+//! introduction (criteo-style sparse logs). We build a high-dimensional,
+//! very sparse synthetic click log (hashed categorical features, Zipf
+//! popularity, like real ad logs) and compare DS-FACTO against the libFM
+//! baseline on logloss/AUC — the Fig. 4/5 comparison on a CTR workload.
+//!
+//! ```bash
+//! cargo run --release --example click_prediction [-- --rows 20000 --dims 5000 --workers 4]
+//! ```
+
+use dsfacto::baseline::{libfm_train, LibfmConfig};
+use dsfacto::data::{synth, Task};
+use dsfacto::fm::FmHyper;
+use dsfacto::metrics::evaluate;
+use dsfacto::nomad::{train_with_stats, NomadConfig};
+use dsfacto::optim::LrSchedule;
+use dsfacto::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env()?;
+    let rows: usize = args.get_or("rows", 20_000)?;
+    let dims: usize = args.get_or("dims", 5_000)?;
+    let workers: usize = args.get_or("workers", 4)?;
+    let iters: usize = args.get_or("iters", 25)?;
+    args.finish()?;
+
+    // A CTR log: ~30 active hashed features per impression out of `dims`,
+    // Zipf-distributed popularity (campaign/site ids follow power laws).
+    let spec = synth::SynthSpec {
+        name: "ctr".into(),
+        task: Task::Classification,
+        n: rows,
+        d: dims,
+        k: 8,
+        density: 30.0 / dims as f64,
+        factor_scale: 0.2,
+        noise: 0.5,
+        skew: 1.05,
+    };
+    let out = synth::generate(&spec, 1234);
+    let ds = out.dataset;
+    let (train, test) = ds.split(0.9, 99);
+    let ctr = train.labels.iter().filter(|&&y| y > 0.0).count() as f64 / train.n() as f64;
+    println!(
+        "click log: {} impressions, {} hashed features, {:.2} nnz/row, base CTR {:.3}",
+        ds.rows.n_rows() + 0,
+        dims,
+        train.nnz() as f64 / train.n() as f64,
+        ctr
+    );
+
+    let fm = FmHyper {
+        k: 8,
+        lambda_w: 1e-5,
+        lambda_v: 1e-5,
+        ..Default::default()
+    };
+
+    // DS-FACTO: hybrid-parallel across `workers` threads.
+    let ncfg = NomadConfig {
+        workers,
+        outer_iters: iters,
+        eta: LrSchedule::Constant(1.0),
+        eval_every: usize::MAX,
+        ..Default::default()
+    };
+    let (nomad, stats) = train_with_stats(&train, None, &fm, &ncfg)?;
+    let nm = evaluate(&nomad.model, &test);
+    println!(
+        "ds-facto  ({workers} workers, {iters} iters): {:>8.2}s  logloss {:.4}  acc {:.4}  AUC {:.4}",
+        nomad.wall_secs, nm.loss, nm.accuracy, nm.auc
+    );
+    println!(
+        "          tokens moved: {}  coordinate updates: {}",
+        stats.messages, stats.coordinate_updates
+    );
+
+    // libFM baseline: single-machine SGD over all dims per example.
+    let lcfg = LibfmConfig {
+        epochs: (iters / 5).max(3),
+        eta: LrSchedule::Constant(0.05),
+        eval_every: usize::MAX,
+        ..Default::default()
+    };
+    let libfm = libfm_train(&train, None, &fm, &lcfg);
+    let lm = evaluate(&libfm.model, &test);
+    println!(
+        "libfm     (1 thread, {} epochs):  {:>8.2}s  logloss {:.4}  acc {:.4}  AUC {:.4}",
+        lcfg.epochs, libfm.wall_secs, lm.loss, lm.accuracy, lm.auc
+    );
+
+    println!(
+        "\npaper claim (Figs. 4-5): the hybrid-parallel optimizer matches the\n\
+         single-machine baseline's quality — delta(AUC) = {:+.4}",
+        nm.auc - lm.auc
+    );
+    Ok(())
+}

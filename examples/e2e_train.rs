@@ -1,0 +1,132 @@
+//! End-to-end validation driver (DESIGN.md §5): train the paper's largest
+//! workload — the realsim twin (50,616 examples, 20,958 features, K=16,
+//! ~0.25% dense) — with the full DS-FACTO stack, log the convergence curve,
+//! and validate the XLA request path on the trained model. The run is
+//! recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example e2e_train [-- --iters 20 --workers 8 --dataset realsim]
+//! ```
+
+use dsfacto::coordinator::{write_trace_csv, Evaluator};
+use dsfacto::data::synth;
+use dsfacto::fm::FmHyper;
+use dsfacto::metrics::evaluate;
+use dsfacto::nomad::{train_with_stats, NomadConfig};
+use dsfacto::optim::LrSchedule;
+use dsfacto::runtime::Runtime;
+use dsfacto::util::cli::Args;
+use dsfacto::util::{human_bytes, human_secs};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env()?;
+    let dataset: String = args.get_or("dataset", "realsim".to_string())?;
+    let workers: usize = args.get_or("workers", 8)?;
+    let iters: usize = args.get_or("iters", 20)?;
+    let eta: String = args.get_or("eta", "inv:2.0,0.15".to_string())?;
+    let trace_out: String =
+        args.get_or("trace", "/tmp/dsfacto_e2e_trace.csv".to_string())?;
+    args.finish()?;
+
+    println!("== DS-FACTO end-to-end validation: {dataset} twin ==");
+    let ds = synth::table2_dataset(&dataset, 4242)?;
+    let (train, test) = ds.split(0.8, 11);
+    let fm = FmHyper {
+        k: synth::SynthSpec::table2(&dataset)?.k,
+        lambda_w: 1e-5,
+        lambda_v: 1e-5,
+        ..Default::default()
+    };
+    let n_params = 1 + train.d() * (fm.k + 1);
+    println!(
+        "data: {} train / {} test, D={}, nnz(train)={} ({:.3}% dense)",
+        train.n(),
+        test.n(),
+        train.d(),
+        train.nnz(),
+        100.0 * train.density()
+    );
+    println!(
+        "model: K={}, {} parameters ({})",
+        fm.k,
+        n_params,
+        human_bytes(n_params * 4)
+    );
+
+    let cfg = NomadConfig {
+        workers,
+        outer_iters: iters,
+        eta: LrSchedule::parse(&eta)?,
+        eval_every: 2,
+        ..Default::default()
+    };
+    println!(
+        "engine: {} workers, {} outer iterations, {} tokens in flight\n",
+        workers,
+        iters,
+        train.d() + 1
+    );
+
+    let (out, stats) = train_with_stats(&train, Some(&test), &fm, &cfg)?;
+
+    println!("{:>5} {:>10} {:>12} {:>12} {:>10}", "iter", "time", "objective", "train_loss", "test_acc");
+    for pt in &out.trace {
+        let acc = pt
+            .test
+            .map(|m| format!("{:.4}", m.accuracy))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:>5} {:>10} {:>12.6} {:>12.6} {:>10}",
+            pt.iter,
+            human_secs(pt.secs),
+            pt.objective,
+            pt.train_loss,
+            acc
+        );
+    }
+    let first = out.trace.first().unwrap().objective;
+    let last = out.trace.last().unwrap().objective;
+    println!(
+        "\ntrained in {}: objective {:.4} -> {:.4} ({:.1}% reduction)",
+        human_secs(out.wall_secs),
+        first,
+        last,
+        100.0 * (1.0 - last / first)
+    );
+    println!(
+        "engine counters: {} token hops, {} coordinate updates ({:.1}M/s/worker), holdback peak {}",
+        stats.messages,
+        stats.coordinate_updates,
+        stats.coordinate_updates as f64 / out.wall_secs / workers as f64 / 1e6,
+        stats.holdback_peak
+    );
+
+    let m = evaluate(&out.model, &test);
+    println!("final test accuracy {:.4}, AUC {:.4} (rust scorer)", m.accuracy, m.auc);
+
+    // Request path: score the test set through the AOT XLA artifact
+    // (Pallas kernel inside) and check agreement.
+    if Runtime::available("artifacts") {
+        let eval = Evaluator::for_dataset("artifacts", &test)?;
+        let sw = std::time::Instant::now();
+        let mx = eval.evaluate(&out.model, &test)?;
+        println!(
+            "final test accuracy {:.4}, AUC {:.4} (XLA request path, {:.2}s for {} examples)",
+            mx.accuracy,
+            mx.auc,
+            sw.elapsed().as_secs_f64(),
+            test.n()
+        );
+        anyhow::ensure!(
+            (mx.accuracy - m.accuracy).abs() < 1e-9,
+            "XLA and Rust paths disagree"
+        );
+    } else {
+        println!("(artifacts not built; skipping XLA request-path validation)");
+    }
+
+    write_trace_csv(&trace_out, &out)?;
+    println!("trace written to {trace_out}");
+    anyhow::ensure!(last < first, "objective did not descend");
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Quickstart: train a factorization machine with DS-FACTO on the
+//! diabetes twin (Table 2), evaluate it through both the Rust scorer and
+//! the AOT XLA artifact, and save the model.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dsfacto::coordinator::Evaluator;
+use dsfacto::data::synth;
+use dsfacto::fm::{io, FmHyper};
+use dsfacto::metrics::evaluate;
+use dsfacto::nomad::{train_with_stats, NomadConfig};
+use dsfacto::optim::LrSchedule;
+use dsfacto::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data: a synthetic twin of the paper's `diabetes` dataset
+    //    (513 examples, 8 features, classification; DESIGN.md §2).
+    let ds = synth::table2_dataset("diabetes", 42)?;
+    let (train, test) = ds.split(0.8, 7);
+    println!(
+        "dataset {}: {} train / {} test examples, {} features",
+        ds.name,
+        train.n(),
+        test.n(),
+        train.d()
+    );
+
+    // 2. Train with DS-FACTO: 4 workers, hybrid-parallel, no parameter
+    //    server — the parameter columns circulate as tokens.
+    let fm = FmHyper {
+        k: 4,
+        lambda_w: 1e-4,
+        lambda_v: 1e-4,
+        ..Default::default()
+    };
+    let cfg = NomadConfig {
+        workers: 4,
+        outer_iters: 60,
+        eta: LrSchedule::Constant(0.5),
+        ..Default::default()
+    };
+    let (out, stats) = train_with_stats(&train, Some(&test), &fm, &cfg)?;
+    println!(
+        "trained in {:.2}s: objective {:.4} -> {:.4} over {} outer iterations",
+        out.wall_secs,
+        out.trace.first().unwrap().objective,
+        out.trace.last().unwrap().objective,
+        cfg.outer_iters
+    );
+    println!(
+        "engine moved {} tokens ({} update visits, {} coordinate updates)",
+        stats.messages, stats.update_visits, stats.coordinate_updates
+    );
+
+    // 3. Evaluate: Rust scorer...
+    let m = evaluate(&out.model, &test);
+    println!("test accuracy {:.4}, AUC {:.4} (rust scorer)", m.accuracy, m.auc);
+
+    //    ...and the AOT XLA artifact (the request-path scorer), when built.
+    if Runtime::available("artifacts") {
+        let eval = Evaluator::for_dataset("artifacts", &test)?;
+        let mx = eval.evaluate(&out.model, &test)?;
+        println!(
+            "test accuracy {:.4}, AUC {:.4} (XLA artifact — Pallas kernel inside)",
+            mx.accuracy, mx.auc
+        );
+    } else {
+        println!("(run `make artifacts` to also evaluate through the XLA path)");
+    }
+
+    // 4. Persist.
+    let path = std::env::temp_dir().join("dsfacto_quickstart.dsfm");
+    io::save(&out.model, &path)?;
+    println!("model saved to {}", path.display());
+    Ok(())
+}

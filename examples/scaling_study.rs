@@ -1,0 +1,82 @@
+//! Scaling study: the Fig. 6 experiment as a runnable example. Sweeps the
+//! worker count over {1, 2, 4, 8, ...} in both communication modes
+//! (in-process threads vs simulated multi-machine network) and prints
+//! speedup tables.
+//!
+//! ```bash
+//! cargo run --release --example scaling_study [-- --dataset ijcnn1 --workers 1,2,4,8]
+//! ```
+
+use dsfacto::cluster::NetModel;
+use dsfacto::data::synth;
+use dsfacto::fm::FmHyper;
+use dsfacto::nomad::{train_with_stats, NomadConfig, TransportKind};
+use dsfacto::optim::LrSchedule;
+use dsfacto::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env()?;
+    let dataset: String = args.get_or("dataset", "ijcnn1".to_string())?;
+    let workers = args.get_list("workers", &[1usize, 2, 4, 8])?;
+    let iters: usize = args.get_or("iters", 5)?;
+    args.finish()?;
+
+    let ds = synth::table2_dataset(&dataset, 42)?;
+    let fm = FmHyper {
+        k: 4,
+        ..Default::default()
+    };
+    println!(
+        "scaling study on {dataset}: N={} D={} K={} — {iters} outer iterations per point\n",
+        ds.n(),
+        ds.d(),
+        fm.k
+    );
+
+    for (mode, label) in [(0, "multi-threaded (in-process queues)"), (1, "simulated multi-machine (100us / 10Gbps)")] {
+        println!("== {label} ==");
+        println!(
+            "{:>8} {:>10} {:>10} {:>9} {:>9} {:>12}",
+            "workers", "wall-s", "makespan", "speedup", "eff", "msgs"
+        );
+        let mut base = None;
+        for &p in &workers {
+            let transport = if mode == 0 {
+                TransportKind::Local
+            } else {
+                TransportKind::SimNet(NetModel {
+                    latency: std::time::Duration::from_micros(100),
+                    bandwidth_bps: 10e9 / 8.0,
+                    workers_per_machine: 1,
+                })
+            };
+            let cfg = NomadConfig {
+                workers: p,
+                outer_iters: iters,
+                eta: LrSchedule::Constant(0.5),
+                eval_every: usize::MAX,
+                transport,
+                ..Default::default()
+            };
+            let (out, stats) = train_with_stats(&ds, None, &fm, &cfg)?;
+            // Single-core container: wall-clock cannot show parallelism, so
+            // speedup uses the simulated parallel makespan max_p(busy_p)
+            // (same convention as the fig6_scalability bench).
+            let makespan = stats.makespan_secs();
+            let base_secs = *base.get_or_insert(makespan);
+            let speedup = base_secs / makespan.max(1e-12);
+            println!(
+                "{:>8} {:>10.3} {:>10.3} {:>9.2} {:>8.0}% {:>12}",
+                p,
+                out.wall_secs,
+                makespan,
+                speedup,
+                100.0 * speedup / p as f64,
+                stats.messages
+            );
+        }
+        println!();
+    }
+    println!("(dotted line in paper Fig. 6 = linear speedup; efficiency = speedup/P)");
+    Ok(())
+}

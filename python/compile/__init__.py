@@ -1,0 +1,1 @@
+"""Build-time compile package: L2 model + L1 kernels + AOT lowering."""

@@ -1,0 +1,159 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas) -> HLO text artifacts for Rust.
+
+Run once via ``make artifacts``. Python never runs on the request path; the
+Rust runtime (rust/src/runtime/) loads the HLO text with
+``HloModuleProto::from_text_file``, compiles it on the PJRT CPU client and
+executes it.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects with
+``proto.id() <= INT_MAX``. The text parser reassigns ids, so text
+round-trips cleanly. (See /opt/xla-example/README.md.)
+
+Artifacts are keyed by the paper's Table 2 dataset shapes; each line of
+``artifacts/manifest.txt`` is::
+
+    name entry task B D K filename
+
+Usage: ``python -m compile.aot --out ../artifacts [--only tiny,diabetes]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, task, B, D, K, entries)
+# B is the fixed minibatch the artifact is specialized for; the Rust side
+# pads the final partial batch with zero rows (zero rows score w0 and are
+# masked out of metrics).
+SPECS = [
+    ("tiny_reg", "regression", 8, 16, 4, ("score", "grad", "step")),
+    ("tiny_clf", "classification", 8, 16, 4, ("score", "grad", "step")),
+    ("diabetes", "classification", 256, 8, 4, ("score", "grad", "step")),
+    ("housing", "regression", 256, 13, 4, ("score", "grad", "step")),
+    ("ijcnn1", "classification", 256, 22, 4, ("score", "grad", "step")),
+    # realsim is D=20,958; score is the artifact the evaluator needs on the
+    # request path. grad/step at this width are built on demand (--full).
+    ("realsim", "classification", 256, 20958, 16, ("score",)),
+]
+
+FULL_EXTRA = {"realsim": ("grad", "step")}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shapes(task, B, D, K):
+    f32 = jnp.float32
+    w0 = jax.ShapeDtypeStruct((), f32)
+    w = jax.ShapeDtypeStruct((D,), f32)
+    V = jax.ShapeDtypeStruct((D, K), f32)
+    X = jax.ShapeDtypeStruct((B, D), f32)
+    y = jax.ShapeDtypeStruct((B,), f32)
+    s = jax.ShapeDtypeStruct((), f32)
+    return w0, w, V, X, y, s
+
+
+def lower_entry(entry, task, B, D, K):
+    """Lower one entry point to HLO text."""
+    w0, w, V, X, y, s = _shapes(task, B, D, K)
+    if entry == "score":
+        fn = model.score_batch
+        args = (w0, w, V, X)
+        lowered = jax.jit(fn).lower(*args)
+    elif entry == "score_aux":
+        fn = model.score_and_aux_batch
+        args = (w0, w, V, X)
+        lowered = jax.jit(fn).lower(*args)
+    elif entry == "grad":
+        fn = functools.partial(model.grad_batch, task=task)
+        args = (w0, w, V, X, y)
+        lowered = jax.jit(fn).lower(*args)
+    elif entry == "step":
+        fn = functools.partial(model.sgd_step_batch, task=task)
+        args = (w0, w, V, X, y, s, s, s)
+        # Donate the parameter buffers: the step graph aliases them in-place.
+        lowered = jax.jit(fn, donate_argnums=(0, 1, 2)).lower(*args)
+    else:
+        raise ValueError(f"unknown entry {entry!r}")
+    return to_hlo_text(lowered)
+
+
+def _input_fingerprint() -> str:
+    """Hash of the compile-path sources, for the no-op freshness check."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _dirs, files in sorted(os.walk(here)):
+        if "__pycache__" in root:
+            continue
+        for fname in sorted(files):
+            if fname.endswith(".py"):
+                with open(os.path.join(root, fname), "rb") as fh:
+                    h.update(fname.encode())
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default="", help="comma-separated spec names")
+    ap.add_argument("--full", action="store_true",
+                    help="also build the very wide realsim grad/step artifacts")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    only = {s for s in args.only.split(",") if s}
+    fp = _input_fingerprint()
+    fp_path = os.path.join(args.out, ".fingerprint")
+    manifest_path = os.path.join(args.out, "manifest.txt")
+    if not only and os.path.exists(fp_path) and os.path.exists(manifest_path):
+        with open(fp_path) as fh:
+            if fh.read().strip() == fp:
+                print("artifacts up to date; nothing to do")
+                return 0
+
+    lines = ["# name entry task B D K filename"]
+    for name, task, B, D, K, entries in SPECS:
+        if only and name not in only:
+            continue
+        if args.full:
+            entries = tuple(entries) + FULL_EXTRA.get(name, ())
+        for entry in entries:
+            fname = f"{name}_{entry}.hlo.txt"
+            path = os.path.join(args.out, fname)
+            print(f"lowering {name}/{entry}  (task={task} B={B} D={D} K={K})",
+                  flush=True)
+            text = lower_entry(entry, task, B, D, K)
+            with open(path, "w") as fh:
+                fh.write(text)
+            lines.append(f"{name} {entry} {task} {B} {D} {K} {fname}")
+
+    if not only:
+        with open(manifest_path, "w") as fh:
+            fh.write("\n".join(lines) + "\n")
+        with open(fp_path, "w") as fh:
+            fh.write(fp + "\n")
+    print(f"wrote {len(lines) - 1} artifacts to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,191 @@
+"""Layer-1 Pallas kernels for Factorization Machines.
+
+Two kernels cover the FM compute hot-spot for a dense minibatch tile:
+
+* ``fm_score_parts``  — the forward synchronization quantities
+  (A = X @ V, xw = X @ w, S2 = X^2 @ V^2), i.e. everything eq. 4 needs.
+* ``fm_grad_parts``   — the backward matmuls given the per-example loss
+  multipliers g (paper eq. 9): gw = X^T g, gA = X^T (g * A),
+  gs = X^2^T g (so that gV = gA - gs[:, None] * V).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+"synchronization term" a_ik = sum_d v_dk x_id is exactly a [B,D] x [D,K]
+matmul, so on TPU it maps onto the MXU systolic array. We tile the D axis
+(the model-parallel axis the Rust coordinator partitions) with BlockSpec so
+each grid step streams one X[B, Dt] tile and one V[Dt, K] slab HBM->VMEM and
+accumulates the K-resident partial sums in the output block — the in-kernel
+analogue of the paper's *incremental synchronization* with partial sums.
+
+All pallas_call sites use interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and the AOT path (aot.py) must produce HLO that the
+Rust runtime's CPU client executes. Real-TPU performance is estimated
+structurally in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fm_score_parts", "fm_grad_parts", "DEFAULT_BLOCK_D", "pick_block_d"]
+
+# Default D-tile. 512 f32 columns x B<=512 rows keeps an X tile <= 1 MiB and a
+# V slab (512 x K<=64) <= 128 KiB: comfortably inside a 16 MiB VMEM budget
+# with double-buffering headroom (see DESIGN.md §Perf).
+DEFAULT_BLOCK_D = 512
+
+
+def pick_block_d(d: int, block_d: int | None = None) -> int:
+    """Choose a D-tile size: the default, shrunk for tiny models."""
+    if block_d is not None:
+        return min(block_d, d)
+    return min(DEFAULT_BLOCK_D, d)
+
+
+def _score_parts_kernel(x_ref, w_ref, v_ref, a_ref, xw_ref, s2_ref):
+    """Grid step (d): accumulate partial sums over one D-tile.
+
+    Blocks:  x_ref [B, Dt], w_ref [Dt], v_ref [Dt, K]
+    Outputs: a_ref [B, K], xw_ref [B], s2_ref [B, K]  (same block every step,
+             accumulated across the D grid axis).
+    """
+    d = pl.program_id(0)
+
+    x = x_ref[...]
+    v = v_ref[...]
+    w = w_ref[...]
+
+    a_part = jnp.dot(x, v, preferred_element_type=jnp.float32)
+    xw_part = jnp.dot(x, w[:, None], preferred_element_type=jnp.float32)[:, 0]
+    s2_part = jnp.dot(x * x, v * v, preferred_element_type=jnp.float32)
+
+    @pl.when(d == 0)
+    def _init():
+        a_ref[...] = a_part
+        xw_ref[...] = xw_part
+        s2_ref[...] = s2_part
+
+    @pl.when(d != 0)
+    def _acc():
+        a_ref[...] += a_part
+        xw_ref[...] += xw_part
+        s2_ref[...] += s2_part
+
+
+def fm_score_parts(w, V, X, *, block_d: int | None = None):
+    """Compute (A, xw, S2) for a dense minibatch with a D-tiled Pallas kernel.
+
+    Args:
+      w: [D] linear weights.
+      V: [D, K] factor embeddings.
+      X: [B, D] minibatch.
+      block_d: optional D-tile override (testing / autotuning).
+
+    Returns (A [B,K], xw [B], S2 [B,K]) in float32.
+    """
+    B, D = X.shape
+    Dv, K = V.shape
+    assert Dv == D and w.shape == (D,), (X.shape, V.shape, w.shape)
+
+    bd = pick_block_d(D, block_d)
+    # Zero-pad D to a tile multiple: out-of-bounds block reads are undefined
+    # in interpret mode, and zeros contribute nothing to any of the sums.
+    Dp = pl.cdiv(D, bd) * bd
+    if Dp != D:
+        pad = ((0, 0), (0, Dp - D))
+        X = jnp.pad(X, pad)
+        w = jnp.pad(w, ((0, Dp - D),))
+        V = jnp.pad(V, ((0, Dp - D), (0, 0)))
+    grid = (Dp // bd,)
+
+    return pl.pallas_call(
+        _score_parts_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, bd), lambda d: (0, d)),
+            pl.BlockSpec((bd,), lambda d: (d,)),
+            pl.BlockSpec((bd, K), lambda d: (d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, K), lambda d: (0, 0)),
+            pl.BlockSpec((B,), lambda d: (0,)),
+            pl.BlockSpec((B, K), lambda d: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B, K), jnp.float32),
+        ],
+        interpret=True,
+    )(X, w, V)
+
+
+def _grad_parts_kernel(x_ref, g_ref, ga_in_ref, gw_ref, gacc_ref, gs_ref):
+    """Grid step (d): backward matmuls for one D-tile.
+
+    Blocks:  x_ref [B, Dt], g_ref [B], ga_in_ref [B, K] (g * A, precomputed)
+    Outputs: gw_ref [Dt], gacc_ref [Dt, K], gs_ref [Dt]
+
+    Each grid step owns a distinct D-tile of every output, so there is no
+    cross-step accumulation: one pass, three transposed matmuls on the MXU.
+    """
+    x = x_ref[...]
+    g = g_ref[...]
+    ga = ga_in_ref[...]
+
+    xt = x.T  # [Dt, B]
+    gw_ref[...] = jnp.dot(xt, g[:, None], preferred_element_type=jnp.float32)[:, 0]
+    gacc_ref[...] = jnp.dot(xt, ga, preferred_element_type=jnp.float32)
+    x2t = (x * x).T
+    gs_ref[...] = jnp.dot(x2t, g[:, None], preferred_element_type=jnp.float32)[:, 0]
+
+
+def fm_grad_parts(X, g, A, *, block_d: int | None = None):
+    """Backward matmuls: (gw, gA_acc, gs) from multipliers g and factor sums A.
+
+    gw[j]      = sum_b g_b X[b, j]
+    gA_acc[j,k]= sum_b g_b X[b, j] A[b, k]
+    gs[j]      = sum_b g_b X[b, j]^2
+
+    The caller finishes gV = gA_acc - gs[:, None] * V (an elementwise op the
+    XLA fusion pass handles; keeping it out of the kernel lets the same
+    artifact serve any V without re-streaming it).
+    """
+    B, D = X.shape
+    K = A.shape[1]
+    assert g.shape == (B,) and A.shape == (B, K)
+
+    bd = pick_block_d(D, block_d)
+    # Zero-pad D to a tile multiple (see fm_score_parts); padded output rows
+    # are sliced away below.
+    Dp = pl.cdiv(D, bd) * bd
+    if Dp != D:
+        X = jnp.pad(X, ((0, 0), (0, Dp - D)))
+    grid = (Dp // bd,)
+    ga = g[:, None] * A  # [B, K], tiny; fused by XLA outside the kernel
+
+    gw, gacc, gs = pl.pallas_call(
+        _grad_parts_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, bd), lambda d: (0, d)),
+            pl.BlockSpec((B,), lambda d: (0,)),
+            pl.BlockSpec((B, K), lambda d: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bd,), lambda d: (d,)),
+            pl.BlockSpec((bd, K), lambda d: (d, 0)),
+            pl.BlockSpec((bd,), lambda d: (d,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Dp,), jnp.float32),
+            jax.ShapeDtypeStruct((Dp, K), jnp.float32),
+            jax.ShapeDtypeStruct((Dp,), jnp.float32),
+        ],
+        interpret=True,
+    )(X, g, ga)
+    if Dp != D:
+        gw, gacc, gs = gw[:D], gacc[:D], gs[:D]
+    return gw, gacc, gs

@@ -1,0 +1,107 @@
+"""Pure-jnp reference oracle for the FM kernels.
+
+This module is the correctness ground-truth for the Pallas kernels in
+``fm_pallas.py``. Everything here is written in the most direct form of the
+paper's equations (eqs. 4, 6-13) with no tiling, blocking or other kernel
+machinery, so that a bug in the kernels cannot be masked by a shared
+implementation detail.
+
+Shapes (dense minibatch):
+    X  : [B, D]   minibatch of examples
+    w0 : []       global bias
+    w  : [D]      linear weights
+    V  : [D, K]   factor embeddings
+    y  : [B]      labels (regression: reals; classification: +/-1)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "fm_score_parts_ref",
+    "fm_score_ref",
+    "fm_score_naive_ref",
+    "loss_ref",
+    "multiplier_ref",
+    "fm_grad_ref",
+]
+
+
+def fm_score_parts_ref(w, V, X):
+    """The three synchronization quantities of the score function.
+
+    Returns (A, xw, S2) where
+        A[b, k]  = sum_d V[d, k] * X[b, d]          (paper eq. 10, batched)
+        xw[b]    = sum_d w[d] * X[b, d]
+        S2[b, k] = sum_d V[d, k]^2 * X[b, d]^2
+    """
+    A = X @ V
+    xw = X @ w
+    S2 = (X * X) @ (V * V)
+    return A, xw, S2
+
+
+def fm_score_ref(w0, w, V, X):
+    """FM score via the O(KD) rewrite (paper eq. 4)."""
+    A, xw, S2 = fm_score_parts_ref(w, V, X)
+    return w0 + xw + 0.5 * jnp.sum(A * A - S2, axis=-1)
+
+
+def fm_score_naive_ref(w0, w, V, X):
+    """FM score via the O(K D^2) double loop (paper eq. 2).
+
+    Deliberately naive: used only in tests to validate the eq. 3 rewrite.
+    """
+    B, D = X.shape
+    pair = jnp.zeros((B,), X.dtype)
+    gram = V @ V.T  # [D, D] of <v_j, v_j'>
+    for j in range(D):
+        for jp in range(j + 1, D):
+            pair = pair + gram[j, jp] * X[:, j] * X[:, jp]
+    return w0 + X @ w + pair
+
+
+def loss_ref(f, y, task):
+    """Per-example loss (paper eq. 5's l(.)).
+
+    task: "regression" -> squared loss 0.5 (f - y)^2
+          "classification" -> logistic loss log(1 + exp(-y f))
+    """
+    if task == "regression":
+        return 0.5 * (f - y) ** 2
+    if task == "classification":
+        # log(1 + exp(-y f)) computed stably.
+        return jnp.logaddexp(0.0, -y * f)
+    raise ValueError(f"unknown task {task!r}")
+
+
+def multiplier_ref(f, y, task):
+    """The G_i multiplier dl/df (paper eq. 9)."""
+    if task == "regression":
+        return f - y
+    if task == "classification":
+        return -y / (1.0 + jnp.exp(y * f))
+    raise ValueError(f"unknown task {task!r}")
+
+
+def fm_grad_ref(w0, w, V, X, y, task):
+    """Full-batch gradients of the mean loss (no regularizer).
+
+    Returns (g0, gw, gV, mean_loss) with
+        g0      = mean_i G_i
+        gw[j]   = mean_i G_i x_ij                       (paper eq. 7)
+        gV[j,k] = mean_i G_i (x_ij a_ik - v_jk x_ij^2)  (paper eq. 8)
+    The regularizer terms are added by the caller (they are trivially
+    separable and the Rust side owns the hyper-parameters).
+    """
+    B = X.shape[0]
+    A, xw, S2 = fm_score_parts_ref(w, V, X)
+    f = w0 + xw + 0.5 * jnp.sum(A * A - S2, axis=-1)
+    g = multiplier_ref(f, y, task)  # [B]
+    g0 = jnp.mean(g)
+    gw = (X.T @ g) / B
+    gA = g[:, None] * A  # [B, K]
+    gV = (X.T @ gA - ((X * X).T @ g)[:, None] * V) / B
+    mean_loss = jnp.mean(loss_ref(f, y, task))
+    return g0, gw, gV, mean_loss

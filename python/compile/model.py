@@ -1,0 +1,83 @@
+"""Layer-2 JAX model: Factorization Machine forward / loss / gradient graphs.
+
+These are the computations `aot.py` lowers to HLO text for the Rust runtime.
+They call the Layer-1 Pallas kernels (`kernels.fm_pallas`) so that the kernel
+lowers into the same HLO module; nothing here runs at serving/training time in
+Python.
+
+Conventions shared with the Rust side (rust/src/runtime/):
+  * all arrays are float32;
+  * classification labels are +/-1 floats;
+  * regularization is applied on the Rust side (it is separable and the
+    coordinator owns the hyper-parameters), so gradients here are pure
+    data-loss gradients of the *mean* loss over the batch;
+  * every entry point returns a flat tuple of arrays (lowered with
+    return_tuple=True; the Rust side unwraps the tuple).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import fm_pallas
+from .kernels import ref
+
+TASKS = ("regression", "classification")
+
+
+def score_batch(w0, w, V, X):
+    """FM scores f(x_i) for a dense minibatch (paper eq. 4).
+
+    Returns (f [B],).
+    """
+    A, xw, S2 = fm_pallas.fm_score_parts(w, V, X)
+    f = w0 + xw + 0.5 * jnp.sum(A * A - S2, axis=-1)
+    return (f,)
+
+
+def score_and_aux_batch(w0, w, V, X):
+    """Scores plus the synchronization quantities the coordinator caches.
+
+    Returns (f [B], A [B,K]): A is the paper's a_ik (eq. 10) — the NOMAD
+    engine's auxiliary variable — so the runtime can refresh worker-local
+    caches from the same artifact that scores.
+    """
+    A, xw, S2 = fm_pallas.fm_score_parts(w, V, X)
+    f = w0 + xw + 0.5 * jnp.sum(A * A - S2, axis=-1)
+    return (f, A)
+
+
+def loss_batch(w0, w, V, X, y, *, task):
+    """Mean data loss over the batch. Returns (loss [],)."""
+    (f,) = score_batch(w0, w, V, X)
+    return (jnp.mean(ref.loss_ref(f, y, task)),)
+
+
+def grad_batch(w0, w, V, X, y, *, task):
+    """Mean-loss gradients via the L1 backward kernel.
+
+    Returns (g0 [], gw [D], gV [D,K], loss []).
+    """
+    B = X.shape[0]
+    A, xw, S2 = fm_pallas.fm_score_parts(w, V, X)
+    f = w0 + xw + 0.5 * jnp.sum(A * A - S2, axis=-1)
+    g = ref.multiplier_ref(f, y, task)  # [B]
+    gw, gA_acc, gs = fm_pallas.fm_grad_parts(X, g, A)
+    g0 = jnp.mean(g)
+    gV = (gA_acc - gs[:, None] * V) / B
+    loss = jnp.mean(ref.loss_ref(f, y, task))
+    return (g0, gw / B, gV, loss)
+
+
+def sgd_step_batch(w0, w, V, X, y, eta, lam_w, lam_v, *, task):
+    """One dense-minibatch SGD step (the XLA-trainer variant's inner graph).
+
+    Applies paper eqs. 6-8 with the batch-mean gradient plus L2 terms.
+    Buffer donation for (w0, w, V) is declared at lowering time in aot.py.
+    Returns (w0', w', V', loss).
+    """
+    g0, gw, gV, loss = grad_batch(w0, w, V, X, y, task=task)
+    w0n = w0 - eta * g0
+    wn = w - eta * (gw + lam_w * w)
+    Vn = V - eta * (gV + lam_v * V)
+    return (w0n, wn, Vn, loss)

@@ -1,0 +1,71 @@
+"""AOT pipeline tests: HLO text generation, manifest format, freshness."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_entry_produces_hlo_text():
+    text = aot.lower_entry("score", "regression", 4, 8, 2)
+    assert text.startswith("HloModule"), text[:80]
+    # return_tuple=True: the root must be a tuple.
+    assert "ROOT" in text and "tuple" in text
+
+
+@pytest.mark.parametrize("entry", ["score", "score_aux", "grad", "step"])
+def test_all_entries_lower(entry):
+    text = aot.lower_entry(entry, "classification", 4, 8, 2)
+    assert text.startswith("HloModule")
+    # f32[4,8] minibatch parameter must appear.
+    assert "f32[4,8]" in text
+
+
+def test_entry_shapes_are_specialized():
+    t1 = aot.lower_entry("score", "regression", 8, 16, 4)
+    assert "f32[8,16]" in t1 and "f32[16,4]" in t1
+
+
+def test_unknown_entry_rejected():
+    with pytest.raises(ValueError):
+        aot.lower_entry("nope", "regression", 2, 2, 2)
+
+
+def test_tasks_change_grad_module():
+    reg = aot.lower_entry("grad", "regression", 4, 8, 2)
+    clf = aot.lower_entry("grad", "classification", 4, 8, 2)
+    assert reg != clf  # logistic multiplier vs residual must differ
+
+
+def test_fingerprint_is_stable():
+    assert aot._input_fingerprint() == aot._input_fingerprint()
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.txt")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestBuiltArtifacts:
+    def test_manifest_lines_well_formed(self):
+        with open(os.path.join(ART, "manifest.txt")) as fh:
+            lines = [l.split() for l in fh if l.strip() and not l.startswith("#")]
+        assert lines, "empty manifest"
+        for parts in lines:
+            name, entry, task, B, D, K, fname = parts
+            assert entry in ("score", "score_aux", "grad", "step")
+            assert task in ("regression", "classification")
+            assert int(B) > 0 and int(D) > 0 and int(K) > 0
+            assert os.path.exists(os.path.join(ART, fname)), fname
+
+    def test_every_table2_dataset_has_score_artifact(self):
+        with open(os.path.join(ART, "manifest.txt")) as fh:
+            names = {l.split()[0] for l in fh if l.strip() and not l.startswith("#")}
+        for ds in ("diabetes", "housing", "ijcnn1", "realsim"):
+            assert ds in names, f"missing {ds}"
+
+    def test_artifacts_are_parseable_hlo(self):
+        with open(os.path.join(ART, "tiny_reg_score.hlo.txt")) as fh:
+            head = fh.read(64)
+        assert head.startswith("HloModule")

@@ -1,0 +1,144 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer: every artifact the
+Rust runtime executes is built from these kernels, so a mismatch here would
+poison every downstream number.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fm_pallas, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand_problem(B, D, K, scale=1.0, density=1.0, rng=RNG):
+    X = rng.normal(size=(B, D)).astype(np.float32) * scale
+    if density < 1.0:
+        X *= (rng.random((B, D)) < density).astype(np.float32)
+    w = rng.normal(size=(D,)).astype(np.float32)
+    V = (rng.normal(size=(D, K)) * 0.1).astype(np.float32)
+    return X, w, V
+
+
+def _assert_score_parts_close(X, w, V, block_d=None, rtol=2e-4, atol=2e-4):
+    A, xw, S2 = fm_pallas.fm_score_parts(w, V, X, block_d=block_d)
+    Ar, xwr, S2r = ref.fm_score_parts_ref(w, V, X)
+    np.testing.assert_allclose(A, Ar, rtol=rtol, atol=atol)
+    np.testing.assert_allclose(xw, xwr, rtol=rtol, atol=atol)
+    np.testing.assert_allclose(S2, S2r, rtol=rtol, atol=atol)
+
+
+class TestScoreParts:
+    @pytest.mark.parametrize(
+        "B,D,K",
+        [(1, 1, 1), (2, 3, 2), (8, 16, 4), (16, 37, 5), (32, 100, 8),
+         (7, 513, 3), (256, 22, 4), (3, 1024, 16)],
+    )
+    def test_matches_ref(self, B, D, K):
+        X, w, V = _rand_problem(B, D, K)
+        _assert_score_parts_close(X, w, V)
+
+    @pytest.mark.parametrize("block_d", [1, 2, 7, 16, 64, 512, 10_000])
+    def test_any_tile_size(self, block_d):
+        X, w, V = _rand_problem(16, 37, 5)
+        _assert_score_parts_close(X, w, V, block_d=block_d)
+
+    def test_zero_input(self):
+        X = np.zeros((4, 9), np.float32)
+        w = np.zeros((9,), np.float32)
+        V = np.zeros((9, 3), np.float32)
+        A, xw, S2 = fm_pallas.fm_score_parts(w, V, X)
+        assert not np.any(A) and not np.any(xw) and not np.any(S2)
+
+    def test_sparse_input(self):
+        X, w, V = _rand_problem(64, 200, 8, density=0.05)
+        _assert_score_parts_close(X, w, V, block_d=32)
+
+    def test_large_magnitudes(self):
+        X, w, V = _rand_problem(8, 32, 4, scale=100.0)
+        _assert_score_parts_close(X, w, V, rtol=1e-3, atol=1e-1)
+
+    def test_single_column_tiles(self):
+        # Tiling at block_d=1 exercises the accumulate path maximally.
+        X, w, V = _rand_problem(4, 5, 2)
+        _assert_score_parts_close(X, w, V, block_d=1)
+
+
+class TestGradParts:
+    @pytest.mark.parametrize(
+        "B,D,K",
+        [(1, 1, 1), (2, 3, 2), (8, 16, 4), (16, 37, 5), (32, 100, 8), (7, 513, 3)],
+    )
+    def test_matches_dense_algebra(self, B, D, K):
+        X, w, V = _rand_problem(B, D, K)
+        A = np.asarray(ref.fm_score_parts_ref(w, V, X)[0])
+        g = RNG.normal(size=(B,)).astype(np.float32)
+        gw, gacc, gs = fm_pallas.fm_grad_parts(X, g, A)
+        np.testing.assert_allclose(gw, X.T @ g, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(gacc, X.T @ (g[:, None] * A), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(gs, (X * X).T @ g, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("block_d", [1, 3, 16, 512])
+    def test_any_tile_size(self, block_d):
+        B, D, K = 8, 37, 4
+        X, w, V = _rand_problem(B, D, K)
+        A = np.asarray(ref.fm_score_parts_ref(w, V, X)[0])
+        g = RNG.normal(size=(B,)).astype(np.float32)
+        gw, gacc, gs = fm_pallas.fm_grad_parts(X, g, A, block_d=block_d)
+        np.testing.assert_allclose(gw, X.T @ g, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(gacc, X.T @ (g[:, None] * A), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(gs, (X * X).T @ g, rtol=2e-4, atol=2e-4)
+
+    def test_zero_multipliers(self):
+        X, w, V = _rand_problem(8, 16, 4)
+        A = np.asarray(ref.fm_score_parts_ref(w, V, X)[0])
+        g = np.zeros((8,), np.float32)
+        gw, gacc, gs = fm_pallas.fm_grad_parts(X, g, A)
+        assert not np.any(gw) and not np.any(gacc) and not np.any(gs)
+
+
+class TestRewriteIdentity:
+    """Paper eq. 3: the O(KD) rewrite equals the naive O(KD^2) double sum."""
+
+    @pytest.mark.parametrize("B,D,K", [(3, 4, 2), (5, 8, 4), (2, 12, 3)])
+    def test_rewrite_equals_naive(self, B, D, K):
+        X, w, V = _rand_problem(B, D, K)
+        f_fast = ref.fm_score_ref(0.5, w, V, X)
+        f_naive = ref.fm_score_naive_ref(0.5, w, V, X)
+        np.testing.assert_allclose(f_fast, f_naive, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    B=st.integers(1, 24),
+    D=st.integers(1, 96),
+    K=st.integers(1, 12),
+    block_d=st.one_of(st.none(), st.integers(1, 128)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_score_sweep(B, D, K, block_d, seed):
+    """Property: kernel == oracle for arbitrary shapes and tilings."""
+    rng = np.random.default_rng(seed)
+    X, w, V = _rand_problem(B, D, K, rng=rng)
+    _assert_score_parts_close(X, w, V, block_d=block_d)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 16),
+    D=st.integers(1, 64),
+    K=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_grad_sweep(B, D, K, seed):
+    rng = np.random.default_rng(seed)
+    X, w, V = _rand_problem(B, D, K, rng=rng)
+    A = np.asarray(ref.fm_score_parts_ref(w, V, X)[0])
+    g = rng.normal(size=(B,)).astype(np.float32)
+    gw, gacc, gs = fm_pallas.fm_grad_parts(X, g, A)
+    np.testing.assert_allclose(gw, X.T @ g, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(gacc, X.T @ (g[:, None] * A), rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(gs, (X * X).T @ g, rtol=5e-4, atol=5e-4)

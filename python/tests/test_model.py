@@ -1,0 +1,99 @@
+"""L2 correctness: model graphs vs jax.grad and the analytic paper equations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def _problem(B, D, K, task):
+    X = RNG.normal(size=(B, D)).astype(np.float32)
+    w = RNG.normal(size=(D,)).astype(np.float32)
+    V = (RNG.normal(size=(D, K)) * 0.1).astype(np.float32)
+    w0 = np.float32(0.25)
+    if task == "regression":
+        y = RNG.normal(size=(B,)).astype(np.float32)
+    else:
+        y = np.where(RNG.random(B) > 0.5, 1.0, -1.0).astype(np.float32)
+    return w0, w, V, X, y
+
+
+@pytest.mark.parametrize("B,D,K", [(8, 16, 4), (5, 33, 7), (1, 2, 1)])
+def test_score_batch_matches_ref(B, D, K):
+    w0, w, V, X, _ = _problem(B, D, K, "regression")
+    (f,) = model.score_batch(w0, w, V, X)
+    np.testing.assert_allclose(f, ref.fm_score_ref(w0, w, V, X), rtol=2e-4, atol=2e-4)
+
+
+def test_score_and_aux_returns_paper_a():
+    w0, w, V, X, _ = _problem(6, 20, 4, "regression")
+    f, A = model.score_and_aux_batch(w0, w, V, X)
+    np.testing.assert_allclose(A, X @ V, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(f, ref.fm_score_ref(w0, w, V, X), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("task", ["regression", "classification"])
+@pytest.mark.parametrize("B,D,K", [(8, 16, 4), (12, 40, 6)])
+def test_grad_batch_matches_autodiff(task, B, D, K):
+    w0, w, V, X, y = _problem(B, D, K, task)
+
+    def mean_loss(w0_, w_, V_):
+        f = ref.fm_score_ref(w0_, w_, V_, X)
+        return jnp.mean(ref.loss_ref(f, y, task))
+
+    g0r, gwr, gVr = jax.grad(mean_loss, argnums=(0, 1, 2))(w0, w, V)
+    g0, gw, gV, loss = model.grad_batch(w0, w, V, X, y, task=task)
+    np.testing.assert_allclose(g0, g0r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gw, gwr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gV, gVr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(loss, mean_loss(w0, w, V), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("task", ["regression", "classification"])
+def test_sgd_step_decreases_loss(task):
+    w0, w, V, X, y = _problem(32, 24, 4, task)
+    eta, lw, lv = np.float32(0.05), np.float32(0.0), np.float32(0.0)
+    (_, l0) = model.loss_batch(w0, w, V, X, y, task=task), None
+    loss0 = model.loss_batch(w0, w, V, X, y, task=task)[0]
+    w0n, wn, Vn, reported = model.sgd_step_batch(w0, w, V, X, y, eta, lw, lv, task=task)
+    loss1 = model.loss_batch(w0n, wn, Vn, X, y, task=task)[0]
+    np.testing.assert_allclose(reported, loss0, rtol=1e-5, atol=1e-6)
+    assert float(loss1) < float(loss0)
+
+
+def test_sgd_step_applies_regularizer():
+    w0, w, V, X, y = _problem(8, 10, 3, "regression")
+    eta = np.float32(0.1)
+    # With a huge lambda and zero-centred data loss contribution the shrink
+    # direction must dominate: parameter norms decrease.
+    w0a, wa, Va, _ = model.sgd_step_batch(
+        w0, w, V, X, y, eta, np.float32(5.0), np.float32(5.0), task="regression"
+    )
+    assert float(jnp.linalg.norm(wa)) < float(jnp.linalg.norm(w))
+    assert float(jnp.linalg.norm(Va)) < float(jnp.linalg.norm(V))
+
+
+def test_multiplier_matches_loss_derivative():
+    # G_i (paper eq. 9) is dl/df: check by finite differences.
+    f = jnp.linspace(-3, 3, 13)
+    y_reg = jnp.linspace(-1, 1, 13)
+    y_clf = jnp.where(jnp.arange(13) % 2 == 0, 1.0, -1.0)
+    eps = 1e-3
+    for task, y in (("regression", y_reg), ("classification", y_clf)):
+        g = ref.multiplier_ref(f, y, task)
+        num = (ref.loss_ref(f + eps, y, task) - ref.loss_ref(f - eps, y, task)) / (2 * eps)
+        np.testing.assert_allclose(g, num, rtol=1e-2, atol=1e-3)
+
+
+def test_classification_loss_is_stable_at_extremes():
+    f = jnp.array([1e4, -1e4], jnp.float32)
+    y = jnp.array([-1.0, 1.0], jnp.float32)
+    loss = ref.loss_ref(f, y, "classification")
+    assert np.all(np.isfinite(loss))
+    g = ref.multiplier_ref(f, y, "classification")
+    assert np.all(np.isfinite(g))

@@ -1,0 +1,146 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the building blocks
+//! whose cost bounds every trainer — FM scoring, the per-example SGD
+//! update, the engine's column visits, the token codec, and transports.
+//!
+//! Run: `cargo bench --bench hotpath_micro`.
+
+use dsfacto::cluster::{codec, LocalTransport, Transport};
+use dsfacto::data::synth;
+use dsfacto::fm::FmModel;
+use dsfacto::nomad::token::{Phase, Token};
+use dsfacto::optim::sgd_update_example;
+use dsfacto::util::bench::{bench_ns_per_op, section};
+use dsfacto::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Pcg64::seeded(1);
+
+    section("FM scoring (eq. 4 rewrite)");
+    // Dense ijcnn1-like: D=22, K=4.
+    let ds = synth::table2_dataset("ijcnn1", 7)?;
+    let model = {
+        let mut m = FmModel::init(ds.d(), 4, 0.1, &mut rng);
+        for x in m.w.iter_mut() {
+            *x = rng.normal32(0.0, 0.3);
+        }
+        m
+    };
+    let n = ds.n();
+    let mut i = 0usize;
+    bench_ns_per_op("score_sparse dense d=22 k=4 (per example)", 20, || {
+        let (idx, val) = ds.rows.row(i % n);
+        i += 1;
+        std::hint::black_box(model.score_sparse(idx, val));
+        1
+    });
+
+    // Sparse realsim-like row: ~52 nnz, K=16.
+    let spec = synth::SynthSpec {
+        n: 2000,
+        ..synth::SynthSpec::table2("realsim")?
+    };
+    let sparse = synth::generate(&spec, 8).dataset;
+    let smodel = FmModel::init(sparse.d(), 16, 0.05, &mut rng);
+    let sn = sparse.n();
+    let mut si = 0usize;
+    let nnz_total: usize = sparse.nnz();
+    let avg_nnz = nnz_total as f64 / sn as f64;
+    bench_ns_per_op(
+        &format!("score_sparse sparse nnz~{avg_nnz:.0} k=16 (per example)"),
+        20,
+        || {
+            let (idx, val) = sparse.rows.row(si % sn);
+            si += 1;
+            std::hint::black_box(smodel.score_sparse(idx, val));
+            1
+        },
+    );
+
+    section("per-example SGD update (eqs. 11-13)");
+    let mut m2 = model.clone();
+    let mut a = vec![0f32; 4];
+    let mut j = 0usize;
+    bench_ns_per_op("sgd_update_example d=22 k=4 (per example)", 20, || {
+        let (idx, val) = ds.rows.row(j % n);
+        j += 1;
+        std::hint::black_box(sgd_update_example(
+            &mut m2,
+            idx,
+            val,
+            ds.labels[j % n],
+            ds.task,
+            1e-4,
+            1e-4,
+            1e-4,
+            &mut a,
+        ));
+        1
+    });
+
+    section("token codec (wire format)");
+    let tok = Token {
+        j: 123,
+        iter: 5,
+        phase: Phase::Update,
+        visits: 2,
+        w: Box::from([0.5f32]),
+        v: (0..16).map(|x| x as f32).collect(),
+    };
+    let mut buf = Vec::new();
+    bench_ns_per_op("encode_token k=16", 20, || {
+        codec::encode_token(&tok, &mut buf);
+        std::hint::black_box(buf.len());
+        1
+    });
+    codec::encode_token(&tok, &mut buf);
+    bench_ns_per_op("decode_token k=16", 20, || {
+        std::hint::black_box(codec::decode_token(&buf).unwrap());
+        1
+    });
+
+    section("transport (token hops)");
+    let t = LocalTransport::new(2);
+    let mk = || Token {
+        j: 1,
+        iter: 0,
+        phase: Phase::Update,
+        visits: 0,
+        w: Box::from([0f32]),
+        v: vec![0f32; 16].into_boxed_slice(),
+    };
+    let mut tok_cycle = Some(mk());
+    bench_ns_per_op("local transport send+recv (per hop)", 20, || {
+        let tk = tok_cycle.take().unwrap();
+        t.send(0, tk);
+        tok_cycle = Some(
+            t.recv_timeout(0, std::time::Duration::from_millis(100))
+                .unwrap(),
+        );
+        1
+    });
+
+    section("engine end-to-end (ijcnn1 twin, P=4, 2 iters)");
+    let fm = dsfacto::fm::FmHyper {
+        k: 4,
+        ..Default::default()
+    };
+    let cfg = dsfacto::nomad::NomadConfig {
+        workers: 4,
+        outer_iters: 2,
+        eval_every: usize::MAX,
+        ..Default::default()
+    };
+    let sw = dsfacto::util::timer::Stopwatch::start();
+    let (_, stats) = dsfacto::nomad::train_with_stats(&ds, None, &fm, &cfg)?;
+    let secs = sw.secs();
+    println!(
+        "engine: {} hops in {:.3}s = {:.0} ns/hop; {} coord updates = {:.0} ns/coord; busy makespan {:.3}s",
+        stats.messages,
+        secs,
+        secs * 1e9 / stats.messages as f64,
+        stats.coordinate_updates,
+        stats.total_busy_secs() * 1e9 / stats.coordinate_updates.max(1) as f64,
+        stats.makespan_secs(),
+    );
+    Ok(())
+}

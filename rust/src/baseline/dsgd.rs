@@ -1,0 +1,343 @@
+//! Synchronous DSGD-style hybrid-parallel baseline.
+//!
+//! The bulk-synchronous counterpart to DS-FACTO (paper §4.2, "DSGD style
+//! communication (synchronous)"): workers own disjoint row blocks; the
+//! parameter columns are split into P blocks; an epoch is P sub-epochs.
+//! In sub-epoch s, worker p updates column block (p + s) mod P against its
+//! row block — a block-diagonal schedule, so no two workers touch the same
+//! parameters. The synchronization terms G and A are recomputed exactly at
+//! a **barrier before every sub-epoch** (this is precisely the bulk
+//! synchronization whose cost DS-FACTO's incremental scheme removes).
+
+use crate::data::{Csc, Dataset};
+use crate::fm::{loss, FmHyper, FmModel};
+use crate::metrics::{TraceRecorder, TrainOutput};
+use crate::optim::LrSchedule;
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// DSGD configuration.
+#[derive(Debug, Clone)]
+pub struct DsgdConfig {
+    pub epochs: usize,
+    pub eta: LrSchedule,
+    pub workers: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+}
+
+impl Default for DsgdConfig {
+    fn default() -> Self {
+        DsgdConfig {
+            epochs: 50,
+            // Column-batch update semantics (see update_block): batch-GD
+            // scale steps.
+            eta: LrSchedule::Constant(0.5),
+            workers: 4,
+            seed: 42,
+            eval_every: 1,
+        }
+    }
+}
+
+/// Per-worker view: row range plus the CSC of that row block.
+struct RowBlock {
+    start: usize,
+    end: usize,
+    cols: Csc,
+}
+
+/// A worker's updates to one column block (applied after the join).
+struct ColumnDelta {
+    /// Column block id.
+    block: usize,
+    /// New values for w in the block (block-local order).
+    w: Vec<f32>,
+    /// New values for v rows in the block.
+    v: Vec<f32>,
+    /// Sum of G_i over the worker's rows (for the shared w0 step).
+    g_sum: f64,
+    n_rows: usize,
+}
+
+/// Column-block boundaries: block b covers `[bounds[b], bounds[b+1])`.
+fn column_bounds(d: usize, p: usize) -> Vec<usize> {
+    let chunk = d.div_ceil(p);
+    (0..=p).map(|b| (b * chunk).min(d)).collect()
+}
+
+/// Trains with synchronous block-cyclic DSGD.
+pub fn dsgd_train(
+    train: &Dataset,
+    test: Option<&Dataset>,
+    fm: &FmHyper,
+    cfg: &DsgdConfig,
+) -> TrainOutput {
+    let p = cfg.workers.max(1).min(train.d().max(1));
+    let n = train.n();
+    let d = train.d();
+    let k = fm.k;
+    let mut rng = Pcg64::new(cfg.seed, 0xd5fd);
+    let mut model = FmModel::init(d, k, fm.init_std, &mut rng);
+    let mut recorder = TraceRecorder::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
+
+    // Row blocks + per-block column views (built once).
+    let row_chunk = n.div_ceil(p);
+    let blocks: Vec<RowBlock> = (0..p)
+        .map(|b| {
+            let start = (b * row_chunk).min(n);
+            let end = ((b + 1) * row_chunk).min(n);
+            RowBlock {
+                start,
+                end,
+                cols: train.rows.slice_rows(start, end).to_csc(),
+            }
+        })
+        .collect();
+    let bounds = column_bounds(d, p);
+
+    let mut sw = Stopwatch::start();
+    let mut clock = 0f64;
+    recorder.record(0, 0.0, &model);
+    sw.lap();
+
+    for epoch in 0..cfg.epochs {
+        let eta = cfg.eta.at(epoch);
+        for sub in 0..p {
+            // --- Barrier: recompute G and A exactly (the bulk sync step).
+            let (g_all, a_all) = compute_aux(&model, train, p);
+
+            // --- Parallel block-diagonal updates.
+            let deltas = crossbeam_utils::thread::scope(|scope| {
+                let model_ref = &model;
+                let g_ref = &g_all;
+                let a_ref = &a_all;
+                let bounds_ref = &bounds;
+                let handles: Vec<_> = blocks
+                    .iter()
+                    .enumerate()
+                    .map(|(wid, rb)| {
+                        let col_block = (wid + sub) % p;
+                        scope.spawn(move |_| {
+                            update_block(
+                                model_ref, rb, g_ref, a_ref, bounds_ref, col_block, eta, fm, n, p,
+                            )
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect::<Vec<ColumnDelta>>()
+            })
+            .expect("dsgd scope");
+
+            // --- Apply deltas (disjoint column blocks; safe sequential write).
+            let mut g_total = 0f64;
+            let mut rows_total = 0usize;
+            for delta in deltas {
+                let (lo, hi) = (bounds[delta.block], bounds[delta.block + 1]);
+                model.w[lo..hi].copy_from_slice(&delta.w);
+                model.v[lo * k..hi * k].copy_from_slice(&delta.v);
+                g_total += delta.g_sum;
+                rows_total += delta.n_rows;
+            }
+            // Shared bias step with the merged multiplier mean (eq. 11).
+            if rows_total > 0 {
+                model.w0 -= eta * (g_total / rows_total as f64) as f32;
+            }
+        }
+        clock += sw.lap();
+        recorder.record(epoch + 1, clock, &model);
+        sw.lap();
+    }
+
+    TrainOutput {
+        model,
+        trace: recorder.into_trace(),
+        wall_secs: clock,
+    }
+}
+
+/// Exact G (multipliers) and A (factor sums) for all rows, in parallel.
+fn compute_aux(model: &FmModel, ds: &Dataset, p: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = ds.n();
+    let k = model.k;
+    let chunk = n.div_ceil(p);
+    let mut g = vec![0f32; n];
+    let mut a = vec![0f32; n * k];
+    crossbeam_utils::thread::scope(|scope| {
+        let mut g_rest: &mut [f32] = &mut g;
+        let mut a_rest: &mut [f32] = &mut a;
+        for b in 0..p {
+            let start = (b * chunk).min(n);
+            let end = ((b + 1) * chunk).min(n);
+            let take = end - start;
+            let (g_blk, g_next) = g_rest.split_at_mut(take);
+            let (a_blk, a_next) = a_rest.split_at_mut(take * k);
+            g_rest = g_next;
+            a_rest = a_next;
+            scope.spawn(move |_| {
+                for (r, i) in (start..end).enumerate() {
+                    let (idx, val) = ds.rows.row(i);
+                    let f = model.score_with_sums(idx, val, &mut a_blk[r * k..(r + 1) * k]);
+                    g_blk[r] = loss::multiplier(f, ds.labels[i], ds.task);
+                }
+            });
+        }
+    })
+    .expect("aux scope");
+    (g, a)
+}
+
+/// One worker's sub-epoch: updates of column block `col_block` against its
+/// row block, with the (stale within the sub-epoch) G/A.
+#[allow(clippy::too_many_arguments)]
+fn update_block(
+    model: &FmModel,
+    rb: &RowBlock,
+    g_all: &[f32],
+    a_all: &[f32],
+    bounds: &[usize],
+    col_block: usize,
+    eta: f32,
+    fm: &FmHyper,
+    n_total: usize,
+    p_total: usize,
+) -> ColumnDelta {
+    let k = model.k;
+    let (lo, hi) = (bounds[col_block], bounds[col_block + 1]);
+    let mut w = model.w[lo..hi].to_vec();
+    let mut v = model.v[lo * k..hi * k].to_vec();
+    let mut g_sum = 0f64;
+
+    // Column-batch semantics matching the NOMAD engine (see
+    // `nomad::engine::Worker::update_visit`): with G frozen for the
+    // sub-epoch, per-nonzero application of eqs. 12-13 compounds into an
+    // unnormalized batch step; instead each sub-epoch applies the
+    // 1/N-scaled local partial gradient with the L2 term split across the
+    // P sub-epochs that touch a column per epoch.
+    let inv_n = 1.0 / n_total.max(1) as f32;
+    let reg_split = 1.0 / p_total.max(1) as f32;
+    let mut gv = vec![0f32; k];
+    for j in lo..hi {
+        let (rows, xs) = rb.cols.col(j);
+        let jl = j - lo;
+        let mut gw = 0f32;
+        gv.fill(0.0);
+        let vj = &mut v[jl * k..(jl + 1) * k];
+        for (r, x) in rows.iter().zip(xs) {
+            let i = rb.start + *r as usize; // global row
+            let g = g_all[i];
+            let x = *x;
+            gw += g * x; // eq. 7 partial sum
+            let x2 = x * x;
+            let a_i = &a_all[i * k..(i + 1) * k];
+            for kk in 0..k {
+                gv[kk] += g * (x * a_i[kk] - vj[kk] * x2); // eq. 8 partial sum
+            }
+        }
+        w[jl] -= eta * (gw * inv_n + fm.lambda_w * reg_split * w[jl]);
+        for kk in 0..k {
+            vj[kk] -= eta * (gv[kk] * inv_n + fm.lambda_v * reg_split * vj[kk]);
+        }
+    }
+    for i in rb.start..rb.end {
+        g_sum += g_all[i] as f64;
+    }
+    ColumnDelta {
+        block: col_block,
+        w,
+        v,
+        g_sum,
+        n_rows: rb.end - rb.start,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn column_bounds_tile_dimensions() {
+        for (d, p) in [(10, 3), (8, 4), (7, 7), (5, 8), (1, 2)] {
+            let b = column_bounds(d, p);
+            assert_eq!(b.len(), p + 1);
+            assert_eq!(b[0], 0);
+            assert_eq!(*b.last().unwrap(), d);
+            for w in b.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn aux_matches_sequential() {
+        let ds = synth::table2_dataset("housing", 1).unwrap();
+        let mut rng = Pcg64::seeded(2);
+        let m = FmModel::init(ds.d(), 4, 0.1, &mut rng);
+        let (g, a) = compute_aux(&m, &ds, 3);
+        let mut ak = vec![0f32; 4];
+        for i in 0..ds.n() {
+            let (idx, val) = ds.rows.row(i);
+            let f = m.score_with_sums(idx, val, &mut ak);
+            assert!((g[i] - loss::multiplier(f, ds.labels[i], ds.task)).abs() < 1e-6);
+            for kk in 0..4 {
+                assert!((a[i * 4 + kk] - ak[kk]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn dsgd_converges_on_housing() {
+        let ds = synth::table2_dataset("housing", 2).unwrap();
+        let fm = FmHyper {
+            k: 4,
+            ..Default::default()
+        };
+        let cfg = DsgdConfig {
+            epochs: 20,
+            eta: LrSchedule::Constant(0.5),
+            workers: 4,
+            ..Default::default()
+        };
+        let out = dsgd_train(&ds, None, &fm, &cfg);
+        let first = out.trace.first().unwrap().objective;
+        let last = out.trace.last().unwrap().objective;
+        assert!(last < 0.5 * first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn dsgd_matches_quality_of_sequential_sgd() {
+        let ds = synth::table2_dataset("diabetes", 3).unwrap();
+        let (train, test) = ds.split(0.8, 1);
+        let fm = FmHyper {
+            k: 4,
+            ..Default::default()
+        };
+        let cfg = DsgdConfig {
+            epochs: 30,
+            eta: LrSchedule::Constant(0.5),
+            workers: 4,
+            ..Default::default()
+        };
+        let out = dsgd_train(&train, Some(&test), &fm, &cfg);
+        let acc = out.trace.last().unwrap().test.unwrap().accuracy;
+        assert!(acc > 0.6, "accuracy {acc}");
+    }
+
+    #[test]
+    fn single_worker_dsgd_reduces_objective() {
+        let ds = synth::table2_dataset("housing", 4).unwrap();
+        let fm = FmHyper::default();
+        let cfg = DsgdConfig {
+            epochs: 10,
+            workers: 1,
+            eta: LrSchedule::Constant(0.5),
+            ..Default::default()
+        };
+        let out = dsgd_train(&ds, None, &fm, &cfg);
+        assert!(out.trace.last().unwrap().objective < 0.7 * out.trace[0].objective);
+    }
+}

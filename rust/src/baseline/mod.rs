@@ -1,0 +1,19 @@
+//! Baseline trainers the paper compares against (or that bracket DS-FACTO's
+//! behaviour):
+//!
+//! * [`libfm`] — single-machine stochastic SGD over all dimensions of each
+//!   sampled example. This is what the paper's Figs. 4-5 plot as "libFM".
+//! * [`dsgd`] — synchronous block-cyclic hybrid parallelism (DSGD-style):
+//!   the bulk-synchronization counterpart that DS-FACTO's incremental
+//!   synchronization replaces. A per-sub-epoch barrier, otherwise the same
+//!   doubly-separable access pattern.
+//! * [`bulksync`] — deterministic full-batch gradient descent with an
+//!   all-reduce-style merge (the "Reduce step" strawman of §4.2).
+
+pub mod bulksync;
+pub mod dsgd;
+pub mod libfm;
+
+pub use bulksync::bulksync_train;
+pub use dsgd::{dsgd_train, DsgdConfig};
+pub use libfm::{libfm_train, LibfmConfig};

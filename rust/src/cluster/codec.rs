@@ -1,0 +1,161 @@
+//! Wire codec for parameter tokens.
+//!
+//! Layout (little-endian):
+//! `magic u16 | j u32 | iter u32 | phase u8 | visits u16 | k u16 | w f32 | v[k] f32`
+//!
+//! Used by the simulated-network transport (to account bytes) and the TCP
+//! transport (framed with a u32 length prefix).
+
+use anyhow::{bail, Result};
+
+use crate::nomad::token::{Phase, Token};
+
+const MAGIC: u16 = 0xD5FA;
+
+/// Serialized size of a token in bytes.
+pub fn token_wire_size(tok: &Token) -> usize {
+    2 + 4 + 4 + 1 + 2 + 4 + 4 + 4 * tok.w.len() + 4 * tok.v.len()
+}
+
+/// Serializes a token into `out` (cleared first).
+pub fn encode_token(tok: &Token, out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(token_wire_size(tok));
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&tok.j.to_le_bytes());
+    out.extend_from_slice(&tok.iter.to_le_bytes());
+    out.push(match tok.phase {
+        Phase::Update => 0,
+        Phase::Recompute => 1,
+    });
+    out.extend_from_slice(&tok.visits.to_le_bytes());
+    out.extend_from_slice(&(tok.w.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(tok.v.len() as u32).to_le_bytes());
+    for &x in tok.w.iter() {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for &x in tok.v.iter() {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Deserializes a token.
+pub fn decode_token(buf: &[u8]) -> Result<Token> {
+    const HDR: usize = 21;
+    if buf.len() < HDR {
+        bail!("token frame too short: {} bytes", buf.len());
+    }
+    let magic = u16::from_le_bytes([buf[0], buf[1]]);
+    if magic != MAGIC {
+        bail!("bad token magic {magic:#06x}");
+    }
+    let j = u32::from_le_bytes(buf[2..6].try_into().unwrap());
+    let iter = u32::from_le_bytes(buf[6..10].try_into().unwrap());
+    let phase = match buf[10] {
+        0 => Phase::Update,
+        1 => Phase::Recompute,
+        other => bail!("bad phase byte {other}"),
+    };
+    let visits = u16::from_le_bytes([buf[11], buf[12]]);
+    let nw = u32::from_le_bytes(buf[13..17].try_into().unwrap()) as usize;
+    let nv = u32::from_le_bytes(buf[17..21].try_into().unwrap()) as usize;
+    let need = HDR + 4 * (nw + nv);
+    if buf.len() != need {
+        bail!("token frame length {} != expected {need}", buf.len());
+    }
+    if nw > (1 << 24) || nv > (1 << 28) {
+        bail!("token block implausibly large: nw={nw} nv={nv}");
+    }
+    let mut w = vec![0f32; nw].into_boxed_slice();
+    for (i, chunk) in buf[HDR..HDR + 4 * nw].chunks_exact(4).enumerate() {
+        w[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    let mut v = vec![0f32; nv].into_boxed_slice();
+    for (i, chunk) in buf[HDR + 4 * nw..].chunks_exact(4).enumerate() {
+        v[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok(Token {
+        j,
+        iter,
+        phase,
+        visits,
+        w,
+        v,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_res;
+
+    fn sample(k: usize) -> Token {
+        Token {
+            j: 12345,
+            iter: 9,
+            phase: Phase::Recompute,
+            visits: 3,
+            w: Box::from([-0.75f32, 0.5]),
+            v: (0..2 * k).map(|i| i as f32 * 0.5).collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let tok = sample(8);
+        let mut buf = Vec::new();
+        encode_token(&tok, &mut buf);
+        assert_eq!(buf.len(), token_wire_size(&tok));
+        let back = decode_token(&buf).unwrap();
+        assert_eq!(back, tok);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode_token(&[]).is_err());
+        assert!(decode_token(&[0u8; 21]).is_err()); // bad magic
+        let tok = sample(2);
+        let mut buf = Vec::new();
+        encode_token(&tok, &mut buf);
+        buf.truncate(buf.len() - 1);
+        assert!(decode_token(&buf).is_err());
+        let mut buf2 = Vec::new();
+        encode_token(&tok, &mut buf2);
+        buf2[10] = 9; // bad phase
+        assert!(decode_token(&buf2).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_tokens() {
+        forall_res(
+            "token codec roundtrip",
+            64,
+            |rng| {
+                let ncols = 1 + rng.below_usize(8);
+                let k = rng.below_usize(9);
+                Token {
+                    j: rng.next_u32(),
+                    iter: rng.next_u32() % 1000,
+                    phase: if rng.chance(0.5) {
+                        Phase::Update
+                    } else {
+                        Phase::Recompute
+                    },
+                    visits: (rng.next_u32() % 64) as u16,
+                    w: (0..ncols).map(|_| rng.normal32(0.0, 10.0)).collect(),
+                    v: (0..ncols * k).map(|_| rng.normal32(0.0, 1.0)).collect(),
+                }
+            },
+            |tok| {
+                let mut buf = Vec::new();
+                encode_token(tok, &mut buf);
+                let back = decode_token(&buf).map_err(|e| e.to_string())?;
+                if back == *tok {
+                    Ok(())
+                } else {
+                    Err(format!("{back:?} != {tok:?}"))
+                }
+            },
+        );
+    }
+}

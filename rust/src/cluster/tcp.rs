@@ -1,0 +1,241 @@
+//! Real TCP transport over the token codec (loopback multi-process mode).
+//!
+//! Each worker owns one listening socket; `send(dst, tok)` writes a
+//! length-prefixed codec frame to a (lazily established, then cached)
+//! connection to `dst`'s listener. A reader thread per accepted connection
+//! pushes decoded tokens into the worker's local inbox.
+//!
+//! This is the transport the `--transport tcp` CLI mode uses; the engine
+//! semantics are identical to [`super::LocalTransport`], only the medium
+//! changes, which is exactly the property the Fig. 6 multi-machine
+//! comparison needs.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::{codec, LocalTransport, Transport, TransportStats};
+use crate::nomad::token::Token;
+
+/// TCP loopback transport for `p` workers.
+pub struct TcpTransport {
+    inbox: LocalTransport,
+    addrs: Vec<SocketAddr>,
+    conns: Vec<Mutex<Option<TcpStream>>>,
+    bytes: AtomicU64,
+    messages: AtomicU64,
+    down: Arc<AtomicBool>,
+    accept_threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl TcpTransport {
+    /// Binds `p` listeners on ephemeral loopback ports and starts acceptor
+    /// threads that feed each worker's inbox.
+    pub fn new(p: usize) -> Result<Arc<Self>> {
+        let mut listeners = Vec::with_capacity(p);
+        let mut addrs = Vec::with_capacity(p);
+        for _ in 0..p {
+            let l = TcpListener::bind("127.0.0.1:0").context("bind loopback")?;
+            addrs.push(l.local_addr()?);
+            listeners.push(l);
+        }
+        let t = Arc::new(TcpTransport {
+            inbox: LocalTransport::new(p),
+            addrs,
+            conns: (0..p).map(|_| Mutex::new(None)).collect(),
+            bytes: AtomicU64::new(0),
+            messages: AtomicU64::new(0),
+            down: Arc::new(AtomicBool::new(false)),
+            accept_threads: Mutex::new(Vec::new()),
+        });
+        for (w, listener) in listeners.into_iter().enumerate() {
+            let tt = Arc::clone(&t);
+            let down = Arc::clone(&t.down);
+            listener.set_nonblocking(true)?;
+            let h = std::thread::Builder::new()
+                .name(format!("tcp-accept-{w}"))
+                .spawn(move || {
+                    while !down.load(Ordering::Relaxed) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                stream.set_nodelay(true).ok();
+                                let tt2 = Arc::clone(&tt);
+                                let down2 = Arc::clone(&down);
+                                std::thread::Builder::new()
+                                    .name(format!("tcp-read-{w}"))
+                                    .spawn(move || tt2.read_loop(w, stream, down2))
+                                    .expect("spawn reader");
+                            }
+                            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("spawn acceptor");
+            t.accept_threads.lock().unwrap().push(h);
+        }
+        Ok(t)
+    }
+
+    fn read_loop(&self, worker: usize, mut stream: TcpStream, down: Arc<AtomicBool>) {
+        stream
+            .set_read_timeout(Some(Duration::from_millis(50)))
+            .ok();
+        let mut len_buf = [0u8; 4];
+        let mut frame = Vec::new();
+        while !down.load(Ordering::Relaxed) {
+            match stream.read_exact(&mut len_buf) {
+                Ok(()) => {}
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue;
+                }
+                Err(_) => return,
+            }
+            let len = u32::from_le_bytes(len_buf) as usize;
+            if len > 1 << 20 {
+                return; // corrupt frame; drop the connection
+            }
+            frame.resize(len, 0);
+            if read_fully(&mut stream, &mut frame, &down).is_err() {
+                return;
+            }
+            match codec::decode_token(&frame) {
+                Ok(tok) => self.inbox.send(worker, tok),
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn connect(&self, dst: usize) -> Result<TcpStream> {
+        let s = TcpStream::connect(self.addrs[dst]).context("connect")?;
+        s.set_nodelay(true).ok();
+        Ok(s)
+    }
+}
+
+/// read_exact that tolerates the read timeout while waiting mid-frame.
+fn read_fully(stream: &mut TcpStream, buf: &mut [u8], down: &AtomicBool) -> std::io::Result<()> {
+    let mut read = 0;
+    while read < buf.len() {
+        if down.load(Ordering::Relaxed) {
+            return Err(std::io::ErrorKind::Interrupted.into());
+        }
+        match stream.read(&mut buf[read..]) {
+            Ok(0) => return Err(std::io::ErrorKind::UnexpectedEof.into()),
+            Ok(n) => read += n,
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+impl Transport for TcpTransport {
+    fn send(&self, dst: usize, tok: Token) {
+        let mut frame = Vec::new();
+        codec::encode_token(&tok, &mut frame);
+        let mut msg = Vec::with_capacity(frame.len() + 4);
+        msg.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+        msg.extend_from_slice(&frame);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(msg.len() as u64, Ordering::Relaxed);
+
+        let mut guard = self.conns[dst].lock().unwrap();
+        if guard.is_none() {
+            match self.connect(dst) {
+                Ok(s) => *guard = Some(s),
+                Err(_) => return, // shutdown race: drop silently
+            }
+        }
+        if let Some(stream) = guard.as_mut() {
+            if stream.write_all(&msg).is_err() {
+                *guard = None;
+            }
+        }
+    }
+
+    fn recv_timeout(&self, worker: usize, timeout: Duration) -> Option<Token> {
+        self.inbox.recv_timeout(worker, timeout)
+    }
+
+    fn shutdown(&self) {
+        self.down.store(true, Ordering::SeqCst);
+        for c in &self.conns {
+            *c.lock().unwrap() = None;
+        }
+        let mut threads = self.accept_threads.lock().unwrap();
+        for h in threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats {
+            messages: self.messages.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nomad::token::Phase;
+
+    fn tok(j: u32, k: usize) -> Token {
+        Token {
+            j,
+            iter: 1,
+            phase: Phase::Update,
+            visits: 2,
+            w: Box::from([0.5f32]),
+            v: (0..k).map(|i| i as f32).collect(),
+        }
+    }
+
+    #[test]
+    fn tcp_roundtrip_between_workers() {
+        let t = TcpTransport::new(2).unwrap();
+        t.send(1, tok(42, 4));
+        let got = t
+            .recv_timeout(1, Duration::from_secs(5))
+            .expect("tcp delivery");
+        assert_eq!(got.j, 42);
+        assert_eq!(got.v.len(), 4);
+        assert!(t.stats().bytes > 0);
+        t.shutdown();
+    }
+
+    #[test]
+    fn tcp_many_messages_in_order() {
+        let t = TcpTransport::new(3).unwrap();
+        for j in 0..100 {
+            t.send(2, tok(j, 8));
+        }
+        for j in 0..100 {
+            let got = t.recv_timeout(2, Duration::from_secs(5)).expect("msg");
+            assert_eq!(got.j, j);
+        }
+        t.shutdown();
+    }
+}

@@ -1,0 +1,309 @@
+//! Experiment configuration: dataset specs, trainer selection, and a
+//! key=value config-file format with CLI overrides.
+//!
+//! Config files look like:
+//!
+//! ```text
+//! # fig4 diabetes run
+//! dataset   = diabetes
+//! trainer   = nomad
+//! workers   = 4
+//! outer_iters = 60
+//! eta       = inv:0.05,0.05
+//! lambda_w  = 1e-4
+//! lambda_v  = 1e-4
+//! k         = 4
+//! seed      = 42
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Task;
+use crate::fm::FmHyper;
+use crate::optim::LrSchedule;
+
+/// Which training engine to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainerKind {
+    /// DS-FACTO: the paper's hybrid-parallel NOMAD engine.
+    Nomad,
+    /// libFM-style single-machine SGD (the paper's baseline).
+    Libfm,
+    /// Synchronous DSGD (block-cyclic with barriers).
+    Dsgd,
+    /// Bulk-synchronous full-gradient descent.
+    BulkSync,
+    /// Dense-minibatch SGD through the AOT XLA `step` artifact.
+    XlaDense,
+}
+
+impl TrainerKind {
+    /// Parses the config spelling.
+    pub fn parse(s: &str) -> Result<TrainerKind> {
+        Ok(match s {
+            "nomad" | "dsfacto" | "ds-facto" => TrainerKind::Nomad,
+            "libfm" | "sgd" => TrainerKind::Libfm,
+            "dsgd" => TrainerKind::Dsgd,
+            "bulksync" | "gd" => TrainerKind::BulkSync,
+            "xla" | "xla-dense" => TrainerKind::XlaDense,
+            other => bail!("unknown trainer {other:?}"),
+        })
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrainerKind::Nomad => "nomad",
+            TrainerKind::Libfm => "libfm",
+            TrainerKind::Dsgd => "dsgd",
+            TrainerKind::BulkSync => "bulksync",
+            TrainerKind::XlaDense => "xla-dense",
+        }
+    }
+}
+
+/// Where a dataset comes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DatasetSpec {
+    /// A synthetic Table-2 twin by name (diabetes|housing|ijcnn1|realsim).
+    Table2(String),
+    /// A LIBSVM file on disk.
+    File {
+        path: String,
+        task: Task,
+        n_features: Option<usize>,
+    },
+}
+
+impl DatasetSpec {
+    /// Loads / generates the dataset.
+    pub fn load(&self, seed: u64) -> Result<crate::data::Dataset> {
+        match self {
+            DatasetSpec::Table2(name) => crate::data::synth::table2_dataset(name, seed),
+            DatasetSpec::File {
+                path,
+                task,
+                n_features,
+            } => crate::data::libsvm::load(path, path, *task, *n_features),
+        }
+    }
+
+    /// The dataset's display name.
+    pub fn name(&self) -> &str {
+        match self {
+            DatasetSpec::Table2(name) => name,
+            DatasetSpec::File { path, .. } => path,
+        }
+    }
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub dataset: DatasetSpec,
+    pub trainer: TrainerKind,
+    /// FM hyper-parameters (k, lambdas, init).
+    pub fm: FmHyper,
+    /// Learning-rate schedule.
+    pub eta: LrSchedule,
+    /// Outer iterations (epochs for the sequential baselines).
+    pub outer_iters: usize,
+    /// Worker count for the distributed engines.
+    pub workers: usize,
+    /// Train fraction of the split.
+    pub train_frac: f64,
+    /// RNG seed (data generation, init, sampling).
+    pub seed: u64,
+    /// Evaluate the test set every `eval_every` outer iterations.
+    pub eval_every: usize,
+    /// Optional CSV trace output path.
+    pub trace_path: Option<String>,
+    /// Artifact directory for the XLA evaluation / dense trainer.
+    pub artifacts_dir: String,
+    /// Use the XLA scorer for held-out evaluation when artifacts exist.
+    pub xla_eval: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: DatasetSpec::Table2("diabetes".into()),
+            trainer: TrainerKind::Nomad,
+            fm: FmHyper::default(),
+            eta: LrSchedule::default(),
+            outer_iters: 50,
+            workers: 4,
+            train_frac: 0.8,
+            seed: 42,
+            eval_every: 1,
+            trace_path: None,
+            artifacts_dir: "artifacts".into(),
+            xla_eval: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Applies one `key = value` assignment.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "dataset" => {
+                self.dataset = if value.contains('/') || value.ends_with(".svm") {
+                    DatasetSpec::File {
+                        path: value.to_string(),
+                        task: Task::Classification,
+                        n_features: None,
+                    }
+                } else {
+                    DatasetSpec::Table2(value.to_string())
+                }
+            }
+            "dataset_task" => {
+                if let DatasetSpec::File { task, .. } = &mut self.dataset {
+                    *task = Task::parse(value)?;
+                } else {
+                    bail!("dataset_task only applies to file datasets");
+                }
+            }
+            "trainer" => self.trainer = TrainerKind::parse(value)?,
+            "k" => self.fm.k = value.parse().context("k")?,
+            "lambda_w" => self.fm.lambda_w = value.parse().context("lambda_w")?,
+            "lambda_v" => self.fm.lambda_v = value.parse().context("lambda_v")?,
+            "init_std" => self.fm.init_std = value.parse().context("init_std")?,
+            "eta" => self.eta = LrSchedule::parse(value)?,
+            "outer_iters" => self.outer_iters = value.parse().context("outer_iters")?,
+            "workers" => self.workers = value.parse().context("workers")?,
+            "train_frac" => self.train_frac = value.parse().context("train_frac")?,
+            "seed" => self.seed = value.parse().context("seed")?,
+            "eval_every" => self.eval_every = value.parse().context("eval_every")?,
+            "trace" => self.trace_path = Some(value.to_string()),
+            "artifacts" => self.artifacts_dir = value.to_string(),
+            "xla_eval" => self.xla_eval = value.parse().context("xla_eval")?,
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Parses a config file body.
+    pub fn parse_str(text: &str) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            cfg.set(key.trim(), value.trim())
+                .with_context(|| format!("line {}", lineno + 1))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Loads a config file.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read config {}", path.as_ref().display()))?;
+        Self::parse_str(&text)
+    }
+
+    /// Key=value dump (round-trips through [`parse_str`]).
+    pub fn dump(&self) -> String {
+        let mut kv: BTreeMap<&str, String> = BTreeMap::new();
+        kv.insert("dataset", self.dataset.name().to_string());
+        kv.insert("trainer", self.trainer.name().to_string());
+        kv.insert("k", self.fm.k.to_string());
+        kv.insert("lambda_w", self.fm.lambda_w.to_string());
+        kv.insert("lambda_v", self.fm.lambda_v.to_string());
+        kv.insert("init_std", self.fm.init_std.to_string());
+        kv.insert(
+            "eta",
+            match self.eta {
+                LrSchedule::Constant(e) => format!("constant:{e}"),
+                LrSchedule::InvDecay { eta0, decay } => format!("inv:{eta0},{decay}"),
+                LrSchedule::Exponential { eta0, gamma } => format!("exp:{eta0},{gamma}"),
+            },
+        );
+        kv.insert("outer_iters", self.outer_iters.to_string());
+        kv.insert("workers", self.workers.to_string());
+        kv.insert("train_frac", self.train_frac.to_string());
+        kv.insert("seed", self.seed.to_string());
+        kv.insert("eval_every", self.eval_every.to_string());
+        kv.insert("artifacts", self.artifacts_dir.clone());
+        kv.insert("xla_eval", self.xla_eval.to_string());
+        kv.into_iter()
+            .map(|(k, v)| format!("{k} = {v}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_config() {
+        let cfg = ExperimentConfig::parse_str(
+            "dataset = housing\ntrainer = libfm\nk = 8\neta = inv:0.1,0.01\nworkers=16\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset, DatasetSpec::Table2("housing".into()));
+        assert_eq!(cfg.trainer, TrainerKind::Libfm);
+        assert_eq!(cfg.fm.k, 8);
+        assert_eq!(cfg.workers, 16);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let cfg = ExperimentConfig::parse_str("# hi\n\nseed = 7 # trailing\n").unwrap();
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn unknown_key_errors_with_line() {
+        let err = ExperimentConfig::parse_str("nope = 3\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"), "{err:#}");
+    }
+
+    #[test]
+    fn file_dataset_detected() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("dataset", "data/real.svm").unwrap();
+        match &cfg.dataset {
+            DatasetSpec::File { path, .. } => assert_eq!(path, "data/real.svm"),
+            other => panic!("{other:?}"),
+        }
+        cfg.set("dataset_task", "regression").unwrap();
+    }
+
+    #[test]
+    fn dump_roundtrips() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("trainer", "dsgd").unwrap();
+        cfg.set("eta", "exp:0.2,0.95").unwrap();
+        cfg.set("outer_iters", "33").unwrap();
+        let back = ExperimentConfig::parse_str(&cfg.dump()).unwrap();
+        assert_eq!(back.trainer, TrainerKind::Dsgd);
+        assert_eq!(back.eta, cfg.eta);
+        assert_eq!(back.outer_iters, 33);
+    }
+
+    #[test]
+    fn trainer_aliases() {
+        assert_eq!(TrainerKind::parse("ds-facto").unwrap(), TrainerKind::Nomad);
+        assert_eq!(TrainerKind::parse("gd").unwrap(), TrainerKind::BulkSync);
+        assert!(TrainerKind::parse("adam").is_err());
+    }
+
+    #[test]
+    fn table2_spec_loads() {
+        let spec = DatasetSpec::Table2("diabetes".into());
+        let ds = spec.load(1).unwrap();
+        assert_eq!(ds.n(), 513);
+    }
+}

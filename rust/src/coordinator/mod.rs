@@ -1,0 +1,286 @@
+//! Experiment driver: config -> data -> trainer -> trace/eval/persist.
+//!
+//! This is the layer the CLI, the examples and the benches call. It owns
+//! the trainer dispatch (DS-FACTO, the baselines, the XLA dense trainer)
+//! and the XLA-backed held-out evaluator.
+
+use anyhow::{Context, Result};
+
+use crate::baseline::{bulksync_train, dsgd_train, libfm_train, DsgdConfig, LibfmConfig};
+use crate::config::{ExperimentConfig, TrainerKind};
+use crate::data::Dataset;
+use crate::fm::FmModel;
+use crate::metrics::{evaluate_scores, EvalMetrics, TraceRecorder, TrainOutput};
+use crate::nomad::{self, EngineStats, NomadConfig};
+use crate::runtime::{artifact_name_for, FmExecutable, Runtime};
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// Everything a finished run reports.
+pub struct RunSummary {
+    pub output: TrainOutput,
+    /// Engine counters (DS-FACTO runs only).
+    pub stats: Option<EngineStats>,
+    pub train: Dataset,
+    pub test: Dataset,
+    /// Final held-out metrics via the Rust scorer.
+    pub final_eval: EvalMetrics,
+    /// Final held-out metrics via the XLA artifact (when available): the
+    /// request-path number. Tests assert it agrees with `final_eval`.
+    pub final_eval_xla: Option<EvalMetrics>,
+}
+
+/// Runs one experiment end to end.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunSummary> {
+    let ds = cfg.dataset.load(cfg.seed).context("load dataset")?;
+    let (train, test) = ds.split(cfg.train_frac, cfg.seed.wrapping_add(1));
+    run_on(cfg, train, test)
+}
+
+/// Runs one experiment on a pre-split dataset pair.
+pub fn run_on(cfg: &ExperimentConfig, train: Dataset, test: Dataset) -> Result<RunSummary> {
+    let (output, stats) = match cfg.trainer {
+        TrainerKind::Nomad => {
+            let ncfg = NomadConfig {
+                workers: cfg.workers,
+                outer_iters: cfg.outer_iters,
+                eta: cfg.eta,
+                seed: cfg.seed,
+                eval_every: cfg.eval_every,
+                transport: nomad::TransportKind::Local,
+                update_mode: nomad::UpdateMode::MeanGradient,
+                cols_per_token: 0,
+            };
+            let (out, st) = nomad::train_with_stats(&train, Some(&test), &cfg.fm, &ncfg)?;
+            (out, Some(st))
+        }
+        TrainerKind::Libfm => {
+            let lcfg = LibfmConfig {
+                epochs: cfg.outer_iters,
+                eta: cfg.eta,
+                seed: cfg.seed,
+                eval_every: cfg.eval_every,
+                shuffle: true,
+            };
+            (libfm_train(&train, Some(&test), &cfg.fm, &lcfg), None)
+        }
+        TrainerKind::Dsgd => {
+            let dcfg = DsgdConfig {
+                epochs: cfg.outer_iters,
+                eta: cfg.eta,
+                workers: cfg.workers,
+                seed: cfg.seed,
+                eval_every: cfg.eval_every,
+            };
+            (dsgd_train(&train, Some(&test), &cfg.fm, &dcfg), None)
+        }
+        TrainerKind::BulkSync => (
+            bulksync_train(
+                &train,
+                Some(&test),
+                &cfg.fm,
+                cfg.outer_iters,
+                cfg.eta,
+                cfg.workers,
+                cfg.seed,
+            ),
+            None,
+        ),
+        TrainerKind::XlaDense => (xla_dense_train(cfg, &train, &test)?, None),
+    };
+
+    // Held-out evaluation, Rust path + (optionally) the XLA request path.
+    let final_eval = crate::metrics::evaluate(&output.model, &test);
+    let final_eval_xla = if cfg.xla_eval && Runtime::available(&cfg.artifacts_dir) {
+        match Evaluator::for_dataset(&cfg.artifacts_dir, &test) {
+            Ok(eval) => Some(eval.evaluate(&output.model, &test)?),
+            Err(_) => None, // no artifact for this shape
+        }
+    } else {
+        None
+    };
+
+    if let Some(path) = &cfg.trace_path {
+        write_trace_csv(path, &output)?;
+    }
+
+    Ok(RunSummary {
+        output,
+        stats,
+        train,
+        test,
+        final_eval,
+        final_eval_xla,
+    })
+}
+
+/// Writes a convergence trace as CSV (the Fig 4/5 series format).
+pub fn write_trace_csv(path: &str, out: &TrainOutput) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &["iter", "secs", "objective", "train_loss", "test_loss", "test_metric"],
+    )?;
+    for pt in &out.trace {
+        let (tl, tm) = match &pt.test {
+            Some(m) => (
+                format!("{}", m.loss),
+                format!(
+                    "{}",
+                    if m.rmse.is_nan() { m.accuracy } else { m.rmse }
+                ),
+            ),
+            None => (String::new(), String::new()),
+        };
+        w.row(&[
+            pt.iter.to_string(),
+            format!("{:.6}", pt.secs),
+            format!("{}", pt.objective),
+            format!("{}", pt.train_loss),
+            tl,
+            tm,
+        ])?;
+    }
+    w.flush()
+}
+
+/// XLA-backed evaluator: scores held-out data through the AOT artifact.
+pub struct Evaluator {
+    exec: FmExecutable,
+}
+
+impl Evaluator {
+    /// Loads the score artifact matching the dataset's shape.
+    pub fn for_dataset(artifacts_dir: &str, ds: &Dataset) -> Result<Evaluator> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let name = artifact_name_for(ds);
+        let exec = rt.load(&name, "score")?;
+        anyhow::ensure!(
+            exec.spec.d == ds.d(),
+            "artifact {} d={} != dataset d={}",
+            name,
+            exec.spec.d,
+            ds.d()
+        );
+        Ok(Evaluator { exec })
+    }
+
+    /// Evaluates through the artifact (batched, padded).
+    pub fn evaluate(&self, model: &FmModel, ds: &Dataset) -> Result<EvalMetrics> {
+        let scores = self.exec.score_dataset(model, ds)?;
+        Ok(evaluate_scores(&scores, &ds.labels, ds.task))
+    }
+}
+
+/// Dense-minibatch SGD through the AOT `step` artifact: the trainer variant
+/// that runs the paper's update entirely inside XLA (demonstrates the
+/// L3->L2->L1 training path; used by quickstart and integration tests).
+pub fn xla_dense_train(
+    cfg: &ExperimentConfig,
+    train: &Dataset,
+    test: &Dataset,
+) -> Result<TrainOutput> {
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let name = artifact_name_for(train);
+    let step = rt.load(&name, "step")?;
+    anyhow::ensure!(step.spec.d == train.d(), "artifact/dataset shape mismatch");
+    let (b, k) = (step.spec.b, step.spec.k);
+    anyhow::ensure!(
+        k == cfg.fm.k,
+        "artifact k={k} != config k={} (dense XLA trainer is shape-specialized)",
+        cfg.fm.k
+    );
+
+    let mut rng = Pcg64::new(cfg.seed, 0x71a);
+    let mut model = FmModel::init(train.d(), k, cfg.fm.init_std, &mut rng);
+    let mut recorder =
+        TraceRecorder::new(train, Some(test), cfg.fm.lambda_w, cfg.fm.lambda_v, cfg.eval_every);
+
+    let mut xbuf = vec![0f32; b * train.d()];
+    let mut ybuf = vec![0f32; b];
+    let mut sw = Stopwatch::start();
+    let mut clock = 0f64;
+    recorder.record(0, 0.0, &model);
+    sw.lap();
+
+    let n_batches = train.n().div_ceil(b);
+    for epoch in 0..cfg.outer_iters {
+        let eta = cfg.eta.at(epoch);
+        for bi in 0..n_batches {
+            let start = bi * b;
+            let real = train.densify_batch(start, b, &mut xbuf);
+            train.labels_batch(start, b, &mut ybuf);
+            // Padding rows have x=0, y=0: their squared-loss gradient
+            // contribution is w0-only; rescale eta by real/b to keep the
+            // batch-mean semantics approximately right on the tail batch.
+            let eff_eta = eta * (real as f32 / b as f32);
+            step.step_batch(&mut model, &xbuf, &ybuf, eff_eta, cfg.fm.lambda_w, cfg.fm.lambda_v)?;
+        }
+        clock += sw.lap();
+        recorder.record(epoch + 1, clock, &model);
+        sw.lap();
+    }
+
+    Ok(TrainOutput {
+        model,
+        trace: recorder.into_trace(),
+        wall_secs: clock,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+
+    #[test]
+    fn run_experiment_with_each_cpu_trainer() {
+        for trainer in [
+            TrainerKind::Nomad,
+            TrainerKind::Libfm,
+            TrainerKind::Dsgd,
+            TrainerKind::BulkSync,
+        ] {
+            // Distributed engines take batch-GD-scale steps; libFM takes
+            // per-example SGD steps.
+            let eta = match trainer {
+                TrainerKind::Libfm => crate::optim::LrSchedule::Constant(0.02),
+                _ => crate::optim::LrSchedule::Constant(0.5),
+            };
+            let cfg = ExperimentConfig {
+                dataset: DatasetSpec::Table2("housing".into()),
+                trainer,
+                eta,
+                outer_iters: 5,
+                workers: 2,
+                ..Default::default()
+            };
+            let sum = run_experiment(&cfg)
+                .unwrap_or_else(|e| panic!("{trainer:?}: {e:#}"));
+            assert_eq!(sum.output.trace.len(), 6, "{trainer:?}");
+            assert!(
+                sum.output.trace[5].objective < sum.output.trace[0].objective,
+                "{trainer:?} did not descend"
+            );
+            assert!(sum.final_eval.rmse.is_finite());
+        }
+    }
+
+    #[test]
+    fn trace_csv_is_written() {
+        let dir = std::env::temp_dir().join("dsfacto_coord_test");
+        let path = dir.join("trace.csv").to_str().unwrap().to_string();
+        let cfg = ExperimentConfig {
+            dataset: DatasetSpec::Table2("housing".into()),
+            trainer: TrainerKind::Libfm,
+            outer_iters: 3,
+            trace_path: Some(path.clone()),
+            ..Default::default()
+        };
+        run_experiment(&cfg).unwrap();
+        let (hdr, rows) = crate::util::csv::read_csv(&path).unwrap();
+        assert_eq!(hdr[0], "iter");
+        assert_eq!(rows.len(), 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,193 @@
+//! LIBSVM / SVMlight format reader and writer.
+//!
+//! Format: one example per line, `label idx:val idx:val ...` with 1-based
+//! (conventional) or 0-based indices — auto-detected. Lines starting with
+//! `#` and blank lines are skipped. This is the loader that accepts the
+//! paper's real datasets (diabetes, housing, ijcnn1, realsim) when the user
+//! has the files; the synthetic twins are used otherwise.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Csr, Dataset, Task};
+
+/// Parses LIBSVM text into a [`Dataset`].
+///
+/// `n_features`: pass `Some(d)` to force the dimensionality (needed when a
+/// test split does not exercise the trailing features); `None` infers it.
+pub fn parse(text: &str, name: &str, task: Task, n_features: Option<usize>) -> Result<Dataset> {
+    let mut labels = Vec::new();
+    let mut indptr = vec![0usize];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    let mut max_idx: i64 = -1;
+    let mut min_idx: i64 = i64::MAX;
+
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label_tok = parts.next().unwrap();
+        let label: f32 = label_tok
+            .parse()
+            .with_context(|| format!("line {}: bad label {label_tok:?}", lineno + 1))?;
+        labels.push(label);
+
+        let mut last_idx: i64 = -1;
+        for tok in parts {
+            if tok.starts_with('#') {
+                break; // trailing comment
+            }
+            let (i_str, v_str) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
+            let idx: i64 = i_str
+                .parse()
+                .with_context(|| format!("line {}: bad index {i_str:?}", lineno + 1))?;
+            let val: f32 = v_str
+                .parse()
+                .with_context(|| format!("line {}: bad value {v_str:?}", lineno + 1))?;
+            if idx < 0 {
+                bail!("line {}: negative feature index {idx}", lineno + 1);
+            }
+            if idx <= last_idx {
+                bail!("line {}: indices not strictly increasing", lineno + 1);
+            }
+            last_idx = idx;
+            max_idx = max_idx.max(idx);
+            min_idx = min_idx.min(idx);
+            indices.push(idx as u32);
+            values.push(val);
+        }
+        indptr.push(indices.len());
+    }
+
+    // 1-based (LIBSVM convention) vs 0-based: if no zero index ever appears,
+    // assume 1-based and shift down.
+    let one_based = min_idx >= 1 && max_idx >= 1;
+    if one_based {
+        for i in indices.iter_mut() {
+            *i -= 1;
+        }
+        max_idx -= 1;
+    }
+    let inferred_d = (max_idx + 1).max(0) as usize;
+    let d = match n_features {
+        Some(d) => {
+            if d < inferred_d {
+                bail!("n_features {d} < max feature index {inferred_d}");
+            }
+            d
+        }
+        None => inferred_d,
+    };
+
+    let n = labels.len();
+    let ds = Dataset {
+        name: name.to_string(),
+        task,
+        rows: Csr::new(n, d, indptr, indices, values),
+        labels,
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+/// Loads a LIBSVM file from disk.
+pub fn load<P: AsRef<Path>>(
+    path: P,
+    name: &str,
+    task: Task,
+    n_features: Option<usize>,
+) -> Result<Dataset> {
+    let file = std::fs::File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut text = String::new();
+    BufReader::new(file).read_to_string(&mut text)?;
+    parse(&text, name, task, n_features)
+}
+
+use std::io::Read;
+
+/// Writes a dataset in LIBSVM format (1-based indices).
+pub fn save<P: AsRef<Path>>(ds: &Dataset, path: P) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = BufWriter::new(std::fs::File::create(path)?);
+    for i in 0..ds.n() {
+        write!(out, "{}", ds.labels[i])?;
+        let (idx, val) = ds.rows.row(i);
+        for (j, v) in idx.iter().zip(val) {
+            write!(out, " {}:{}", j + 1, v)?;
+        }
+        writeln!(out)?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_one_based() {
+        let ds = parse("1 1:0.5 3:2\n-1 2:1\n", "t", Task::Classification, None).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.rows.row(0), (&[0u32, 2][..], &[0.5f32, 2.0][..]));
+        assert_eq!(ds.labels, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn parses_zero_based() {
+        let ds = parse("2.5 0:1 2:3\n", "t", Task::Regression, None).unwrap();
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.rows.row(0), (&[0u32, 2][..], &[1.0f32, 3.0][..]));
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let ds = parse("# header\n\n1 1:1\n", "t", Task::Classification, None).unwrap();
+        assert_eq!(ds.n(), 1);
+    }
+
+    #[test]
+    fn forced_dimensionality() {
+        let ds = parse("1 1:1\n", "t", Task::Classification, Some(10)).unwrap();
+        assert_eq!(ds.d(), 10);
+        assert!(parse("1 5:1\n", "t", Task::Classification, Some(2)).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("abc 1:1\n", "t", Task::Regression, None).is_err());
+        assert!(parse("1 x:1\n", "t", Task::Regression, None).is_err());
+        assert!(parse("1 2:1 1:1\n", "t", Task::Regression, None).is_err()); // unsorted
+        assert!(parse("1 1:y\n", "t", Task::Regression, None).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ds = parse("1 1:0.5 3:2\n-1 2:1.25\n1 1:4\n", "t", Task::Classification, None).unwrap();
+        let dir = std::env::temp_dir().join("dsfacto_libsvm_test");
+        let path = dir.join("x.svm");
+        save(&ds, &path).unwrap();
+        let back = load(&path, "t", Task::Classification, Some(ds.d())).unwrap();
+        assert_eq!(back.rows, ds.rows);
+        assert_eq!(back.labels, ds.labels);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_input_is_empty_dataset() {
+        let ds = parse("", "t", Task::Regression, None).unwrap();
+        assert_eq!(ds.n(), 0);
+        assert_eq!(ds.d(), 0);
+    }
+}

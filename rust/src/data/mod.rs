@@ -1,0 +1,274 @@
+//! Data substrates: sparse matrices, LIBSVM parsing, synthetic Table-2
+//! dataset twins, splitting and feature scaling.
+//!
+//! The container has no network access, so the paper's UCI/LIBSVM datasets
+//! (diabetes, housing, ijcnn1, realsim) are reproduced as *synthetic twins*
+//! with identical (N, D, K), task type and sparsity, drawn from a planted
+//! ground-truth FM model ([`synth`]). The [`libsvm`] parser loads the real
+//! files unchanged if the user supplies them (DESIGN.md §2).
+
+pub mod libsvm;
+pub mod sparse;
+pub mod synth;
+
+pub use sparse::{Csc, Csr};
+
+use crate::util::rng::Pcg64;
+
+/// Prediction task, which selects the loss (paper eq. 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// Squared loss; labels are reals.
+    Regression,
+    /// Logistic loss; labels are +/-1.
+    Classification,
+}
+
+impl Task {
+    /// Parses `"regression"` / `"classification"` (manifest + config format).
+    pub fn parse(s: &str) -> anyhow::Result<Task> {
+        match s {
+            "regression" => Ok(Task::Regression),
+            "classification" => Ok(Task::Classification),
+            other => anyhow::bail!("unknown task {other:?}"),
+        }
+    }
+
+    /// The manifest/config spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Regression => "regression",
+            Task::Classification => "classification",
+        }
+    }
+}
+
+/// A labeled sparse dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Human-readable name (used in traces and artifact lookup).
+    pub name: String,
+    /// Task type.
+    pub task: Task,
+    /// Row-major sparse examples, `n x d`.
+    pub rows: Csr,
+    /// Labels, length `n`.
+    pub labels: Vec<f32>,
+}
+
+impl Dataset {
+    /// Number of examples.
+    pub fn n(&self) -> usize {
+        self.rows.n_rows()
+    }
+
+    /// Number of features.
+    pub fn d(&self) -> usize {
+        self.rows.n_cols()
+    }
+
+    /// Total stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.rows.nnz()
+    }
+
+    /// Density of the feature matrix in [0, 1].
+    pub fn density(&self) -> f64 {
+        if self.n() == 0 || self.d() == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.n() as f64 * self.d() as f64)
+        }
+    }
+
+    /// Deterministic train/test split by shuffled row assignment.
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!((0.0..=1.0).contains(&train_frac));
+        let mut rng = Pcg64::seeded(seed);
+        let perm = rng.permutation(self.n());
+        let n_train = ((self.n() as f64) * train_frac).round() as usize;
+        let (tr_idx, te_idx) = perm.split_at(n_train.min(self.n()));
+        (self.subset(tr_idx, "train"), self.subset(te_idx, "test"))
+    }
+
+    /// A new dataset containing the given rows (in the given order).
+    pub fn subset(&self, idx: &[usize], suffix: &str) -> Dataset {
+        let rows = self.rows.select_rows(idx);
+        let labels = idx.iter().map(|&i| self.labels[i]).collect();
+        Dataset {
+            name: format!("{}-{suffix}", self.name),
+            task: self.task,
+            rows,
+            labels,
+        }
+    }
+
+    /// Standardizes every column to zero mean / unit variance **computed on
+    /// this dataset**, returning the per-column (mean, std) so the same
+    /// transform can be applied to a held-out set. Stored zeros are treated
+    /// as zeros (sparse semantics: only stored entries are shifted is wrong —
+    /// instead we only *scale*, preserving sparsity, and center dense
+    /// columns). Scaling keeps zero entries zero, which is what LIBSVM-style
+    /// pipelines do for sparse data.
+    pub fn scale_columns(&mut self) -> Vec<f32> {
+        let d = self.d();
+        let mut max_abs = vec![0f32; d];
+        for i in 0..self.n() {
+            let (idx, val) = self.rows.row(i);
+            for (j, v) in idx.iter().zip(val) {
+                let a = v.abs();
+                if a > max_abs[*j as usize] {
+                    max_abs[*j as usize] = a;
+                }
+            }
+        }
+        let scale: Vec<f32> = max_abs
+            .iter()
+            .map(|&m| if m > 0.0 { 1.0 / m } else { 1.0 })
+            .collect();
+        self.rows.scale_columns(&scale);
+        scale
+    }
+
+    /// Applies a previously computed per-column scale.
+    pub fn apply_scale(&mut self, scale: &[f32]) {
+        self.rows.scale_columns(scale);
+    }
+
+    /// Densifies rows `start..start+b` into a row-major `b x d` buffer,
+    /// zero-padding past the end (the runtime's fixed-batch artifacts).
+    /// Returns the number of real (non-padding) rows.
+    pub fn densify_batch(&self, start: usize, b: usize, out: &mut [f32]) -> usize {
+        let d = self.d();
+        assert_eq!(out.len(), b * d, "densify buffer size");
+        out.fill(0.0);
+        let real = b.min(self.n().saturating_sub(start));
+        for r in 0..real {
+            let (idx, val) = self.rows.row(start + r);
+            let row = &mut out[r * d..(r + 1) * d];
+            for (j, v) in idx.iter().zip(val) {
+                row[*j as usize] = *v;
+            }
+        }
+        real
+    }
+
+    /// Labels for the batch starting at `start`, zero-padded to length `b`.
+    pub fn labels_batch(&self, start: usize, b: usize, out: &mut [f32]) -> usize {
+        assert_eq!(out.len(), b);
+        out.fill(0.0);
+        let real = b.min(self.n().saturating_sub(start));
+        out[..real].copy_from_slice(&self.labels[start..start + real]);
+        real
+    }
+
+    /// Basic sanity checks (used by loaders and tests).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.labels.len() == self.n(),
+            "label count {} != rows {}",
+            self.labels.len(),
+            self.n()
+        );
+        self.rows.validate()?;
+        if self.task == Task::Classification {
+            for (i, &y) in self.labels.iter().enumerate() {
+                anyhow::ensure!(
+                    y == 1.0 || y == -1.0,
+                    "classification label at {i} is {y}, want +/-1"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        // 4 x 3: rows [1 0 2], [0 3 0], [4 5 6], [0 0 0]
+        let rows = Csr::from_triplets(
+            4,
+            3,
+            &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0), (2, 0, 4.0), (2, 1, 5.0), (2, 2, 6.0)],
+        );
+        Dataset {
+            name: "tiny".into(),
+            task: Task::Regression,
+            rows,
+            labels: vec![1.0, 2.0, 3.0, 4.0],
+        }
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let ds = tiny();
+        assert_eq!(ds.n(), 4);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.nnz(), 6);
+        assert!((ds.density() - 0.5).abs() < 1e-12);
+        ds.validate().unwrap();
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let ds = tiny();
+        let (tr, te) = ds.split(0.5, 1);
+        assert_eq!(tr.n() + te.n(), ds.n());
+        assert_eq!(tr.n(), 2);
+        tr.validate().unwrap();
+        te.validate().unwrap();
+    }
+
+    #[test]
+    fn densify_pads_with_zeros() {
+        let ds = tiny();
+        let mut buf = vec![f32::NAN; 2 * 3];
+        let real = ds.densify_batch(3, 2, &mut buf);
+        assert_eq!(real, 1);
+        assert_eq!(buf, vec![0.0; 6]); // row 3 is all zeros, row 4 is padding
+        let real = ds.densify_batch(0, 2, &mut buf);
+        assert_eq!(real, 2);
+        assert_eq!(buf, vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn labels_batch_pads() {
+        let ds = tiny();
+        let mut y = vec![9.0; 3];
+        let real = ds.labels_batch(2, 3, &mut y);
+        assert_eq!(real, 2);
+        assert_eq!(y, vec![3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn scale_columns_bounds_values() {
+        let mut ds = tiny();
+        let scale = ds.scale_columns();
+        assert_eq!(scale.len(), 3);
+        for i in 0..ds.n() {
+            let (_, vals) = ds.rows.row(i);
+            for v in vals {
+                assert!(v.abs() <= 1.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn classification_labels_validated() {
+        let mut ds = tiny();
+        ds.task = Task::Classification;
+        assert!(ds.validate().is_err());
+        ds.labels = vec![1.0, -1.0, 1.0, -1.0];
+        ds.validate().unwrap();
+    }
+
+    #[test]
+    fn task_parse_roundtrip() {
+        assert_eq!(Task::parse("regression").unwrap(), Task::Regression);
+        assert_eq!(Task::parse(Task::Classification.name()).unwrap(), Task::Classification);
+        assert!(Task::parse("ranking").is_err());
+    }
+}

@@ -1,0 +1,416 @@
+//! Compressed sparse row / column matrices.
+//!
+//! `Csr` stores the examples (row = example); `Csc` is the column view each
+//! NOMAD worker builds over its local row block so that "apply token j to
+//! my examples" is a contiguous scan (the doubly-separable access pattern of
+//! paper Figs. 1-2).
+
+use anyhow::{ensure, Result};
+
+/// Compressed sparse row matrix (f32 values, u32 column indices).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    n_rows: usize,
+    n_cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl Csr {
+    /// Builds from raw CSR arrays.
+    pub fn new(
+        n_rows: usize,
+        n_cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Self {
+        let m = Csr {
+            n_rows,
+            n_cols,
+            indptr,
+            indices,
+            values,
+        };
+        debug_assert!(m.validate().is_ok(), "invalid CSR");
+        m
+    }
+
+    /// Builds from (row, col, value) triplets (any order; duplicates summed).
+    pub fn from_triplets(n_rows: usize, n_cols: usize, triplets: &[(usize, usize, f32)]) -> Self {
+        let mut per_row: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n_rows];
+        for &(r, c, v) in triplets {
+            assert!(r < n_rows && c < n_cols, "triplet out of bounds");
+            per_row[r].push((c as u32, v));
+        }
+        let mut indptr = Vec::with_capacity(n_rows + 1);
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values = Vec::with_capacity(triplets.len());
+        indptr.push(0);
+        for row in &mut per_row {
+            row.sort_by_key(|&(c, _)| c);
+            let mut last: Option<u32> = None;
+            for &(c, v) in row.iter() {
+                if last == Some(c) {
+                    *values.last_mut().unwrap() += v;
+                } else {
+                    indices.push(c);
+                    values.push(v);
+                    last = Some(c);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr::new(n_rows, n_cols, indptr, indices, values)
+    }
+
+    /// An empty matrix.
+    pub fn empty(n_rows: usize, n_cols: usize) -> Self {
+        Csr::new(n_rows, n_cols, vec![0; n_rows + 1], Vec::new(), Vec::new())
+    }
+
+    /// Number of rows.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Number of columns.
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// The (indices, values) pair of one row.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Non-zero count of one row.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// Dot product of row `i` with a dense vector.
+    pub fn row_dot(&self, i: usize, dense: &[f32]) -> f32 {
+        let (idx, val) = self.row(i);
+        let mut acc = 0f32;
+        for (j, v) in idx.iter().zip(val) {
+            acc += v * dense[*j as usize];
+        }
+        acc
+    }
+
+    /// Selects rows by index (with repetition allowed), preserving order.
+    pub fn select_rows(&self, idx: &[usize]) -> Csr {
+        let mut indptr = Vec::with_capacity(idx.len() + 1);
+        let nnz: usize = idx.iter().map(|&i| self.row_nnz(i)).sum();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for &i in idx {
+            let (ci, cv) = self.row(i);
+            indices.extend_from_slice(ci);
+            values.extend_from_slice(cv);
+            indptr.push(indices.len());
+        }
+        Csr::new(idx.len(), self.n_cols, indptr, indices, values)
+    }
+
+    /// A contiguous row-range slice.
+    pub fn slice_rows(&self, start: usize, end: usize) -> Csr {
+        assert!(start <= end && end <= self.n_rows);
+        let a = self.indptr[start];
+        let b = self.indptr[end];
+        let indptr = self.indptr[start..=end].iter().map(|&p| p - a).collect();
+        Csr::new(
+            end - start,
+            self.n_cols,
+            indptr,
+            self.indices[a..b].to_vec(),
+            self.values[a..b].to_vec(),
+        )
+    }
+
+    /// Multiplies each column by `scale[j]` in place.
+    pub fn scale_columns(&mut self, scale: &[f32]) {
+        assert_eq!(scale.len(), self.n_cols);
+        for (j, v) in self.indices.iter().zip(self.values.iter_mut()) {
+            *v *= scale[*j as usize];
+        }
+    }
+
+    /// Transposes into a CSC view (column -> (row, value) lists).
+    pub fn to_csc(&self) -> Csc {
+        let mut counts = vec![0usize; self.n_cols + 1];
+        for &j in &self.indices {
+            counts[j as usize + 1] += 1;
+        }
+        for j in 0..self.n_cols {
+            counts[j + 1] += counts[j];
+        }
+        let colptr = counts.clone();
+        let mut cursor = counts;
+        let mut rows = vec![0u32; self.nnz()];
+        let mut values = vec![0f32; self.nnz()];
+        for i in 0..self.n_rows {
+            let (idx, val) = self.row(i);
+            for (j, v) in idx.iter().zip(val) {
+                let p = cursor[*j as usize];
+                rows[p] = i as u32;
+                values[p] = *v;
+                cursor[*j as usize] += 1;
+            }
+        }
+        Csc {
+            n_rows: self.n_rows,
+            n_cols: self.n_cols,
+            colptr,
+            rows,
+            values,
+        }
+    }
+
+    /// Dense row-major copy (tests / tiny data only).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.n_rows * self.n_cols];
+        for i in 0..self.n_rows {
+            let (idx, val) = self.row(i);
+            for (j, v) in idx.iter().zip(val) {
+                out[i * self.n_cols + *j as usize] = *v;
+            }
+        }
+        out
+    }
+
+    /// Structural invariants.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.indptr.len() == self.n_rows + 1,
+            "indptr len {} != n_rows+1 {}",
+            self.indptr.len(),
+            self.n_rows + 1
+        );
+        ensure!(self.indptr[0] == 0, "indptr[0] != 0");
+        ensure!(
+            *self.indptr.last().unwrap() == self.values.len(),
+            "indptr end {} != nnz {}",
+            self.indptr.last().unwrap(),
+            self.values.len()
+        );
+        ensure!(
+            self.indices.len() == self.values.len(),
+            "indices/values length mismatch"
+        );
+        for w in self.indptr.windows(2) {
+            ensure!(w[0] <= w[1], "indptr not monotone");
+        }
+        for i in 0..self.n_rows {
+            let (idx, _) = self.row(i);
+            for w in idx.windows(2) {
+                ensure!(w[0] < w[1], "row {i}: column indices not strictly increasing");
+            }
+            if let Some(&last) = idx.last() {
+                ensure!((last as usize) < self.n_cols, "row {i}: column out of range");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Compressed sparse column matrix: the per-worker column view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csc {
+    n_rows: usize,
+    n_cols: usize,
+    colptr: Vec<usize>,
+    rows: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl Csc {
+    /// Number of rows.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Number of columns.
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// The (row indices, values) of one column.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.colptr[j], self.colptr[j + 1]);
+        (&self.rows[a..b], &self.values[a..b])
+    }
+
+    /// Non-zero count of one column.
+    #[inline]
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.colptr[j + 1] - self.colptr[j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_res;
+    use crate::util::rng::Pcg64;
+
+    fn example() -> Csr {
+        Csr::from_triplets(
+            3,
+            4,
+            &[(0, 1, 2.0), (0, 3, 4.0), (1, 0, 1.0), (2, 1, 5.0), (2, 2, 6.0)],
+        )
+    }
+
+    #[test]
+    fn triplets_build_sorted_rows() {
+        let m = Csr::from_triplets(2, 3, &[(0, 2, 3.0), (0, 0, 1.0), (1, 1, 2.0)]);
+        assert_eq!(m.row(0), (&[0u32, 2][..], &[1.0f32, 3.0][..]));
+        assert_eq!(m.row(1), (&[1u32][..], &[2.0f32][..]));
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn duplicate_triplets_sum() {
+        let m = Csr::from_triplets(1, 2, &[(0, 1, 2.0), (0, 1, 3.0)]);
+        assert_eq!(m.row(0), (&[1u32][..], &[5.0f32][..]));
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn row_dot_matches_dense() {
+        let m = example();
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(m.row_dot(0, &v), 2.0 * 2.0 + 4.0 * 4.0);
+        assert_eq!(m.row_dot(1, &v), 1.0);
+    }
+
+    #[test]
+    fn slice_and_select() {
+        let m = example();
+        let s = m.slice_rows(1, 3);
+        assert_eq!(s.n_rows(), 2);
+        assert_eq!(s.row(0), m.row(1));
+        assert_eq!(s.row(1), m.row(2));
+        let sel = m.select_rows(&[2, 0]);
+        assert_eq!(sel.row(0), m.row(2));
+        assert_eq!(sel.row(1), m.row(0));
+    }
+
+    #[test]
+    fn csc_transpose_roundtrip() {
+        let m = example();
+        let t = m.to_csc();
+        assert_eq!(t.nnz(), m.nnz());
+        // Column 1 holds rows 0 and 2.
+        assert_eq!(t.col(1), (&[0u32, 2][..], &[2.0f32, 5.0][..]));
+        assert_eq!(t.col(0), (&[1u32][..], &[1.0f32][..]));
+        assert_eq!(t.col_nnz(3), 1);
+    }
+
+    #[test]
+    fn dense_copy() {
+        let m = example();
+        let d = m.to_dense();
+        assert_eq!(d[0 * 4 + 1], 2.0);
+        assert_eq!(d[2 * 4 + 2], 6.0);
+        assert_eq!(d[1 * 4 + 3], 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_indptr() {
+        let m = Csr {
+            n_rows: 2,
+            n_cols: 2,
+            indptr: vec![0, 2, 1],
+            indices: vec![0, 1],
+            values: vec![1.0, 1.0],
+        };
+        assert!(m.validate().is_err());
+    }
+
+    fn random_csr(rng: &mut Pcg64) -> Csr {
+        let n = 1 + rng.below_usize(12);
+        let d = 1 + rng.below_usize(12);
+        let nnz = rng.below_usize(n * d);
+        let triplets: Vec<(usize, usize, f32)> = (0..nnz)
+            .map(|_| {
+                (
+                    rng.below_usize(n),
+                    rng.below_usize(d),
+                    rng.normal32(0.0, 1.0),
+                )
+            })
+            .collect();
+        Csr::from_triplets(n, d, &triplets)
+    }
+
+    #[test]
+    fn prop_transpose_preserves_entries() {
+        forall_res(
+            "csc transpose preserves all entries",
+            48,
+            random_csr,
+            |m| {
+                let t = m.to_csc();
+                if t.nnz() != m.nnz() {
+                    return Err(format!("nnz {} != {}", t.nnz(), m.nnz()));
+                }
+                // Every (i, j, v) in CSR appears in CSC column j.
+                for i in 0..m.n_rows() {
+                    let (idx, val) = m.row(i);
+                    for (j, v) in idx.iter().zip(val) {
+                        let (rows, vals) = t.col(*j as usize);
+                        let pos = rows.iter().position(|&r| r as usize == i);
+                        match pos {
+                            Some(p) if vals[p] == *v => {}
+                            _ => return Err(format!("entry ({i},{j}) lost")),
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_slice_rows_consistent() {
+        forall_res(
+            "slice_rows equals select_rows on ranges",
+            32,
+            |rng| {
+                let m = random_csr(rng);
+                let a = rng.below_usize(m.n_rows() + 1);
+                let b = a + rng.below_usize(m.n_rows() - a + 1);
+                (m, a, b)
+            },
+            |(m, a, b)| {
+                let s1 = m.slice_rows(*a, *b);
+                let idx: Vec<usize> = (*a..*b).collect();
+                let s2 = m.select_rows(&idx);
+                if s1 == s2 {
+                    Ok(())
+                } else {
+                    Err("slice != select".to_string())
+                }
+            },
+        );
+    }
+}

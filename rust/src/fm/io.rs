@@ -1,0 +1,161 @@
+//! Binary model (de)serialization.
+//!
+//! Format (little-endian): magic `DSFM`, version u32, d u64, k u64, w0 f32,
+//! then `w` (d f32s) and `V` (d*k f32s). Self-describing enough for the CLI
+//! `inspect` subcommand and stable across runs.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::FmModel;
+
+const MAGIC: &[u8; 4] = b"DSFM";
+const VERSION: u32 = 1;
+
+/// Serializes a model to a writer.
+pub fn write_model<W: Write>(m: &FmModel, mut out: W) -> Result<()> {
+    out.write_all(MAGIC)?;
+    out.write_all(&VERSION.to_le_bytes())?;
+    out.write_all(&(m.d as u64).to_le_bytes())?;
+    out.write_all(&(m.k as u64).to_le_bytes())?;
+    out.write_all(&m.w0.to_le_bytes())?;
+    for &x in &m.w {
+        out.write_all(&x.to_le_bytes())?;
+    }
+    for &x in &m.v {
+        out.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Deserializes a model from a reader.
+pub fn read_model<R: Read>(mut inp: R) -> Result<FmModel> {
+    let mut magic = [0u8; 4];
+    inp.read_exact(&mut magic).context("read magic")?;
+    if &magic != MAGIC {
+        bail!("not a DSFM model file (bad magic {magic:?})");
+    }
+    let version = read_u32(&mut inp)?;
+    if version != VERSION {
+        bail!("unsupported model version {version}");
+    }
+    let d = read_u64(&mut inp)? as usize;
+    let k = read_u64(&mut inp)? as usize;
+    // Guard absurd sizes before allocating.
+    if d.checked_mul(k.max(1)).map_or(true, |p| p > 1 << 34) {
+        bail!("model dimensions too large: d={d} k={k}");
+    }
+    let w0 = read_f32(&mut inp)?;
+    let mut w = vec![0f32; d];
+    read_f32s(&mut inp, &mut w)?;
+    let mut v = vec![0f32; d * k];
+    read_f32s(&mut inp, &mut v)?;
+    Ok(FmModel { d, k, w0, w, v })
+}
+
+/// Saves a model to a file (creating parent dirs).
+pub fn save<P: AsRef<Path>>(m: &FmModel, path: P) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let file = std::fs::File::create(&path)
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    write_model(m, std::io::BufWriter::new(file))
+}
+
+/// Loads a model from a file.
+pub fn load<P: AsRef<Path>>(path: P) -> Result<FmModel> {
+    let file = std::fs::File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    read_model(std::io::BufReader::new(file))
+}
+
+fn read_u32<R: Read>(inp: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    inp.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(inp: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    inp.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32<R: Read>(inp: &mut R) -> Result<f32> {
+    let mut b = [0u8; 4];
+    inp.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+fn read_f32s<R: Read>(inp: &mut R, out: &mut [f32]) -> Result<()> {
+    // Bulk read: reinterpret the output as bytes once, then fix endianness.
+    let mut bytes = vec![0u8; out.len() * 4];
+    inp.read_exact(&mut bytes)?;
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        out[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn model() -> FmModel {
+        let mut rng = Pcg64::seeded(1);
+        let mut m = FmModel::init(7, 3, 0.1, &mut rng);
+        m.w0 = 1.5;
+        for x in m.w.iter_mut() {
+            *x = rng.normal32(0.0, 1.0);
+        }
+        m
+    }
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let m = model();
+        let mut buf = Vec::new();
+        write_model(&m, &mut buf).unwrap();
+        let back = read_model(&buf[..]).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn roundtrip_on_disk() {
+        let m = model();
+        let path = std::env::temp_dir().join("dsfacto_io_test.dsfm");
+        save(&m, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let err = read_model(&b"NOPE...."[..]).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let m = model();
+        let mut buf = Vec::new();
+        write_model(&m, &mut buf).unwrap();
+        buf.truncate(buf.len() - 5);
+        assert!(read_model(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_future_version() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&99u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 32]);
+        let err = read_model(&buf[..]).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Losses and their multipliers G_i = dl/df (paper eq. 9).
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly — the Rust trainers and
+//! the AOT artifacts must agree on these formulas (tested both here and in
+//! the integration suite against artifact outputs).
+
+use crate::data::Task;
+
+/// Per-example loss l(f, y).
+#[inline]
+pub fn loss(f: f32, y: f32, task: Task) -> f32 {
+    match task {
+        Task::Regression => 0.5 * (f - y) * (f - y),
+        Task::Classification => {
+            // log(1 + exp(-y f)), stable for large |f|.
+            let m = -y * f;
+            if m > 30.0 {
+                m
+            } else {
+                m.exp().ln_1p()
+            }
+        }
+    }
+}
+
+/// The multiplier G_i = dl/df (paper eq. 9).
+#[inline]
+pub fn multiplier(f: f32, y: f32, task: Task) -> f32 {
+    match task {
+        Task::Regression => f - y,
+        Task::Classification => {
+            let z = y * f;
+            // -y / (1 + exp(y f)), stable on both tails.
+            if z > 30.0 {
+                0.0
+            } else if z < -30.0 {
+                -y
+            } else {
+                -y / (1.0 + z.exp())
+            }
+        }
+    }
+}
+
+/// Hard prediction from a score.
+#[inline]
+pub fn predict(f: f32, task: Task) -> f32 {
+    match task {
+        Task::Regression => f,
+        Task::Classification => {
+            if f >= 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squared_loss_and_grad() {
+        assert_eq!(loss(3.0, 1.0, Task::Regression), 2.0);
+        assert_eq!(multiplier(3.0, 1.0, Task::Regression), 2.0);
+        assert_eq!(multiplier(1.0, 3.0, Task::Regression), -2.0);
+    }
+
+    #[test]
+    fn logistic_loss_known_values() {
+        // l(0, y) = ln 2 for either label.
+        assert!((loss(0.0, 1.0, Task::Classification) - 2f32.ln()).abs() < 1e-6);
+        assert!((loss(0.0, -1.0, Task::Classification) - 2f32.ln()).abs() < 1e-6);
+        // G(0, 1) = -1/2.
+        assert!((multiplier(0.0, 1.0, Task::Classification) + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn logistic_stable_at_extremes() {
+        for &(f, y) in &[(1e5f32, -1.0f32), (-1e5, 1.0), (1e5, 1.0), (-1e5, -1.0)] {
+            assert!(loss(f, y, Task::Classification).is_finite());
+            assert!(multiplier(f, y, Task::Classification).is_finite());
+        }
+        // Confident-correct gradient goes to 0; confident-wrong to -y.
+        assert_eq!(multiplier(100.0, 1.0, Task::Classification), 0.0);
+        assert!((multiplier(-100.0, 1.0, Task::Classification) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn multiplier_is_loss_derivative() {
+        // Finite-difference check over a grid.
+        let eps = 1e-3f32;
+        for task in [Task::Regression, Task::Classification] {
+            for f in [-2.0f32, -0.5, 0.0, 0.7, 2.5] {
+                for y in [-1.0f32, 1.0] {
+                    let num = (loss(f + eps, y, task) - loss(f - eps, y, task)) / (2.0 * eps);
+                    let ana = multiplier(f, y, task);
+                    assert!(
+                        (num - ana).abs() < 5e-3,
+                        "task={task:?} f={f} y={y}: {num} vs {ana}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn predictions() {
+        assert_eq!(predict(0.3, Task::Regression), 0.3);
+        assert_eq!(predict(0.3, Task::Classification), 1.0);
+        assert_eq!(predict(-0.3, Task::Classification), -1.0);
+    }
+}

@@ -1,0 +1,286 @@
+//! Factorization Machine model: parameters, scoring (paper eqs. 2-4),
+//! losses/multipliers (eq. 9), gradients (eqs. 6-8) and (de)serialization.
+//!
+//! Everything here is the *single-node* model math. The distributed
+//! coordination that is the paper's contribution lives in [`crate::nomad`];
+//! the AOT-compiled dense-batch versions of these same equations live in
+//! `python/compile/` and are executed through [`crate::runtime`].
+
+pub mod io;
+pub mod loss;
+
+
+use crate::util::rng::Pcg64;
+
+/// Hyper-parameters of an FM model (paper Table 1).
+#[derive(Debug, Clone, Copy)]
+pub struct FmHyper {
+    /// Number of latent factors K.
+    pub k: usize,
+    /// L2 penalty on the linear weights (lambda_w).
+    pub lambda_w: f32,
+    /// L2 penalty on the factors (lambda_v).
+    pub lambda_v: f32,
+    /// Std-dev of the factor initialization (paper: N(0, 0.01)).
+    pub init_std: f32,
+}
+
+impl Default for FmHyper {
+    fn default() -> Self {
+        FmHyper {
+            k: 4,
+            lambda_w: 1e-4,
+            lambda_v: 1e-4,
+            init_std: 0.01,
+        }
+    }
+}
+
+/// FM parameters: `w0`, `w in R^D`, `V in R^{D x K}` (row-major, K
+/// contiguous per feature — the token layout the NOMAD engine circulates).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FmModel {
+    pub d: usize,
+    pub k: usize,
+    pub w0: f32,
+    pub w: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl FmModel {
+    /// All-zero model.
+    pub fn zeros(d: usize, k: usize) -> Self {
+        FmModel {
+            d,
+            k,
+            w0: 0.0,
+            w: vec![0.0; d],
+            v: vec![0.0; d * k],
+        }
+    }
+
+    /// Paper initialization: `w = 0`, `V ~ N(0, init_std)` (Algorithm 1 l.4).
+    pub fn init(d: usize, k: usize, init_std: f32, rng: &mut Pcg64) -> Self {
+        let mut m = FmModel::zeros(d, k);
+        for x in m.v.iter_mut() {
+            *x = rng.normal32(0.0, init_std);
+        }
+        m
+    }
+
+    /// The factor row `v_j` (length K).
+    #[inline]
+    pub fn vrow(&self, j: usize) -> &[f32] {
+        &self.v[j * self.k..(j + 1) * self.k]
+    }
+
+    /// Mutable factor row `v_j`.
+    #[inline]
+    pub fn vrow_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.v[j * self.k..(j + 1) * self.k]
+    }
+
+    /// Computes the factor sums `a_k = sum_j v_jk x_j` (paper eq. 10) into
+    /// `a` (length K) and returns `sum_k v_jk^2 x_j^2` accumulated in `s2`.
+    #[inline]
+    pub fn factor_sums(&self, idx: &[u32], val: &[f32], a: &mut [f32], s2: &mut [f32]) {
+        debug_assert_eq!(a.len(), self.k);
+        debug_assert_eq!(s2.len(), self.k);
+        a.fill(0.0);
+        s2.fill(0.0);
+        for (j, x) in idx.iter().zip(val) {
+            let vj = self.vrow(*j as usize);
+            let x = *x;
+            for k in 0..self.k {
+                let vx = vj[k] * x;
+                a[k] += vx;
+                s2[k] += vx * vx;
+            }
+        }
+    }
+
+    /// FM score of a sparse example via the O(K nnz) rewrite (eq. 4).
+    pub fn score_sparse(&self, idx: &[u32], val: &[f32]) -> f32 {
+        let mut linear = self.w0;
+        for (j, x) in idx.iter().zip(val) {
+            linear += self.w[*j as usize] * x;
+        }
+        let mut pair = 0f32;
+        // Stack buffers for the common small-K case; heap for large K.
+        if self.k <= 32 {
+            let mut a = [0f32; 32];
+            let mut s2 = [0f32; 32];
+            self.factor_sums(idx, val, &mut a[..self.k], &mut s2[..self.k]);
+            for k in 0..self.k {
+                pair += a[k] * a[k] - s2[k];
+            }
+        } else {
+            let mut a = vec![0f32; self.k];
+            let mut s2 = vec![0f32; self.k];
+            self.factor_sums(idx, val, &mut a, &mut s2);
+            for k in 0..self.k {
+                pair += a[k] * a[k] - s2[k];
+            }
+        }
+        linear + 0.5 * pair
+    }
+
+    /// Score plus the factor sums `a` (callers that need eq. 10's cache).
+    pub fn score_with_sums(&self, idx: &[u32], val: &[f32], a: &mut [f32]) -> f32 {
+        let mut s2 = vec![0f32; self.k];
+        self.factor_sums(idx, val, a, &mut s2);
+        let mut linear = self.w0;
+        for (j, x) in idx.iter().zip(val) {
+            linear += self.w[*j as usize] * x;
+        }
+        let mut pair = 0f32;
+        for k in 0..self.k {
+            pair += a[k] * a[k] - s2[k];
+        }
+        linear + 0.5 * pair
+    }
+
+    /// Naive O(K nnz^2) score via eq. 2 — test oracle for the rewrite.
+    pub fn score_naive(&self, idx: &[u32], val: &[f32]) -> f32 {
+        let mut f = self.w0;
+        for (j, x) in idx.iter().zip(val) {
+            f += self.w[*j as usize] * x;
+        }
+        for (p, (j, xj)) in idx.iter().zip(val).enumerate() {
+            for (jp, xjp) in idx.iter().zip(val).skip(p + 1) {
+                let (vj, vjp) = (self.vrow(*j as usize), self.vrow(*jp as usize));
+                let dot: f32 = vj.iter().zip(vjp).map(|(a, b)| a * b).sum();
+                f += dot * xj * xjp;
+            }
+        }
+        f
+    }
+
+    /// The regularized objective (paper eq. 5) over a dataset.
+    pub fn objective(&self, ds: &crate::data::Dataset, lambda_w: f32, lambda_v: f32) -> f64 {
+        let mut total = 0f64;
+        for i in 0..ds.n() {
+            let (idx, val) = ds.rows.row(i);
+            let f = self.score_sparse(idx, val);
+            total += loss::loss(f, ds.labels[i], ds.task) as f64;
+        }
+        let data = total / ds.n().max(1) as f64;
+        let rw: f64 = self.w.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let rv: f64 = self.v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        data + 0.5 * lambda_w as f64 * rw + 0.5 * lambda_v as f64 * rv
+    }
+
+    /// Total parameter count (for logs).
+    pub fn n_params(&self) -> usize {
+        1 + self.d + self.d * self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::prop::forall_res;
+
+    fn random_model(d: usize, k: usize, seed: u64) -> FmModel {
+        let mut rng = Pcg64::seeded(seed);
+        let mut m = FmModel::init(d, k, 0.3, &mut rng);
+        for x in m.w.iter_mut() {
+            *x = rng.normal32(0.0, 0.5);
+        }
+        m.w0 = 0.7;
+        m
+    }
+
+    #[test]
+    fn zeros_scores_zero() {
+        let m = FmModel::zeros(5, 3);
+        assert_eq!(m.score_sparse(&[0, 4], &[1.0, 2.0]), 0.0);
+        assert_eq!(m.n_params(), 1 + 5 + 15);
+    }
+
+    #[test]
+    fn rewrite_matches_naive() {
+        // Paper eq. 3: O(K nnz) rewrite == O(K nnz^2) double sum.
+        let m = random_model(10, 4, 1);
+        let idx = [0u32, 3, 7, 9];
+        let val = [0.5f32, -1.0, 2.0, 0.25];
+        let fast = m.score_sparse(&idx, &val);
+        let naive = m.score_naive(&idx, &val);
+        assert!((fast - naive).abs() < 1e-4, "{fast} vs {naive}");
+    }
+
+    #[test]
+    fn prop_rewrite_matches_naive() {
+        forall_res(
+            "eq3 rewrite equals naive pairwise sum",
+            64,
+            |rng| {
+                let d = 2 + rng.below_usize(20);
+                let k = 1 + rng.below_usize(8);
+                let m = random_model(d, k, rng.next_u64());
+                let nnz = 1 + rng.below_usize(d);
+                let cols = rng.sample_indices(d, nnz);
+                let mut idx: Vec<u32> = cols.iter().map(|&c| c as u32).collect();
+                idx.sort_unstable();
+                let val: Vec<f32> = idx.iter().map(|_| rng.normal32(0.0, 1.0)).collect();
+                (m, idx, val)
+            },
+            |(m, idx, val)| {
+                let fast = m.score_sparse(idx, val);
+                let naive = m.score_naive(idx, val);
+                let tol = 1e-3 * (1.0 + naive.abs());
+                if (fast - naive).abs() < tol {
+                    Ok(())
+                } else {
+                    Err(format!("fast {fast} != naive {naive}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn score_with_sums_returns_eq10() {
+        let m = random_model(6, 3, 2);
+        let idx = [1u32, 4];
+        let val = [2.0f32, -0.5];
+        let mut a = vec![0f32; 3];
+        let f = m.score_with_sums(&idx, &val, &mut a);
+        assert!((f - m.score_sparse(&idx, &val)).abs() < 1e-6);
+        for k in 0..3 {
+            let want = m.vrow(1)[k] * 2.0 + m.vrow(4)[k] * -0.5;
+            assert!((a[k] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn large_k_heap_path() {
+        let m = random_model(8, 40, 3);
+        let idx = [0u32, 2, 5];
+        let val = [1.0f32, 1.0, 1.0];
+        let fast = m.score_sparse(&idx, &val);
+        let naive = m.score_naive(&idx, &val);
+        assert!((fast - naive).abs() < 2e-3 * (1.0 + naive.abs()));
+    }
+
+    #[test]
+    fn objective_includes_regularizer() {
+        let ds = synth::table2_dataset("housing", 11).unwrap();
+        let m = random_model(ds.d(), 4, 4);
+        let o0 = m.objective(&ds, 0.0, 0.0);
+        let o1 = m.objective(&ds, 1.0, 1.0);
+        let rw: f64 = m.w.iter().map(|&x| (x as f64).powi(2)).sum();
+        let rv: f64 = m.v.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!((o1 - o0 - 0.5 * (rw + rv)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn init_matches_paper_scheme() {
+        let mut rng = Pcg64::seeded(5);
+        let m = FmModel::init(100, 8, 0.01, &mut rng);
+        assert!(m.w.iter().all(|&x| x == 0.0), "w starts at zero");
+        assert_eq!(m.w0, 0.0);
+        let std: f32 = (m.v.iter().map(|&x| x * x).sum::<f32>() / m.v.len() as f32).sqrt();
+        assert!((std - 0.01).abs() < 0.002, "factor std {std}");
+    }
+}

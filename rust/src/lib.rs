@@ -1,0 +1,59 @@
+//! # DS-FACTO — Doubly Separable Factorization Machines
+//!
+//! A production-oriented reproduction of *"DS-FACTO: Doubly Separable
+//! Factorization Machines"* (Raman & Vishwanathan, 2020): a hybrid-parallel,
+//! fully decentralized, asynchronous stochastic optimizer for factorization
+//! machines that partitions **both** the data (row blocks per worker) and the
+//! model (parameter columns circulating as tokens through worker queues,
+//! NOMAD-style) with no parameter server.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — the coordinator: the NOMAD-style token
+//!   engine ([`nomad`]), single-machine and synchronous baselines
+//!   ([`baseline`]), data substrates ([`data`]), metrics, config, CLI.
+//! * **Layer 2/1 (build time, `python/compile/`)** — the FM compute graphs
+//!   (JAX) built on Pallas kernels, AOT-lowered to HLO text artifacts that
+//!   the [`runtime`] module loads and executes through the PJRT CPU client
+//!   (`xla` crate). Python never runs on the training/serving path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! // A synthetic twin of the paper's `diabetes` dataset (Table 2).
+//! let ds = dsfacto::data::synth::table2_dataset("diabetes", 42).unwrap();
+//! let (train, test) = ds.split(0.8, 7);
+//! let cfg = dsfacto::nomad::NomadConfig {
+//!     workers: 4,
+//!     outer_iters: 50,
+//!     ..Default::default()
+//! };
+//! let fm = dsfacto::fm::FmHyper { k: 4, ..Default::default() };
+//! let out = dsfacto::nomad::train(&train, Some(&test), &fm, &cfg).unwrap();
+//! println!("final objective {}", out.trace.last().unwrap().objective);
+//! ```
+
+pub mod baseline;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fm;
+pub mod metrics;
+pub mod nomad;
+pub mod optim;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::config::{DatasetSpec, ExperimentConfig, TrainerKind};
+    pub use crate::data::{Dataset, Task};
+    pub use crate::fm::{FmHyper, FmModel};
+    pub use crate::metrics::{EvalMetrics, TracePoint};
+    pub use crate::nomad::{train as nomad_train, NomadConfig};
+    pub use crate::util::rng::Pcg64;
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,312 @@
+//! `dsfacto` CLI — train / evaluate / inspect factorization machines with
+//! the DS-FACTO engine and its baselines.
+//!
+//! ```text
+//! dsfacto train --dataset diabetes --trainer nomad --workers 4 --outer-iters 50
+//! dsfacto train --config configs/fig4_diabetes.conf --trace /tmp/trace.csv
+//! dsfacto evaluate --model /tmp/model.dsfm --dataset diabetes
+//! dsfacto inspect --model /tmp/model.dsfm
+//! dsfacto datasets
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use dsfacto::config::{ExperimentConfig, TrainerKind};
+use dsfacto::coordinator::{run_experiment, Evaluator};
+use dsfacto::data::synth::SynthSpec;
+use dsfacto::data::Task;
+use dsfacto::fm;
+use dsfacto::nomad;
+use dsfacto::runtime::Runtime;
+use dsfacto::util::cli::Args;
+use dsfacto::util::human_secs;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args
+        .positionals()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "help".to_string());
+    match cmd.as_str() {
+        "train" => cmd_train(args),
+        "evaluate" => cmd_evaluate(args),
+        "inspect" => cmd_inspect(args),
+        "datasets" => cmd_datasets(args),
+        "artifacts" => cmd_artifacts(args),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (see `dsfacto help`)"),
+    }
+}
+
+const HELP: &str = "\
+dsfacto — Doubly Separable Factorization Machines
+
+USAGE:
+  dsfacto train      [--config FILE] [--dataset NAME|FILE] [--trainer nomad|libfm|dsgd|bulksync|xla]
+                     [--workers P] [--outer-iters T] [--eta SPEC] [--k K]
+                     [--lambda-w L] [--lambda-v L] [--seed S] [--eval-every E]
+                     [--transport local|simnet|tcp] [--trace FILE] [--save-model FILE]
+                     [--xla-eval] [--artifacts DIR] [--quiet]
+  dsfacto evaluate   --model FILE --dataset NAME|FILE [--xla] [--artifacts DIR]
+  dsfacto inspect    --model FILE
+  dsfacto datasets                      # list Table-2 synthetic twins
+  dsfacto artifacts  [--artifacts DIR]  # list AOT artifacts
+
+eta SPEC: constant:0.05 | inv:0.1,0.01 | exp:0.1,0.99
+";
+
+fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &mut Args) -> Result<()> {
+    if let Some(v) = args.get("dataset") {
+        cfg.set("dataset", &v)?;
+    }
+    if let Some(v) = args.get("dataset-task") {
+        cfg.set("dataset_task", &v)?;
+    }
+    if let Some(v) = args.get("trainer") {
+        cfg.set("trainer", &v)?;
+    }
+    if let Some(v) = args.get("workers") {
+        cfg.set("workers", &v)?;
+    }
+    if let Some(v) = args.get("outer-iters") {
+        cfg.set("outer_iters", &v)?;
+    }
+    if let Some(v) = args.get("eta") {
+        cfg.set("eta", &v)?;
+    }
+    if let Some(v) = args.get("k") {
+        cfg.set("k", &v)?;
+    }
+    if let Some(v) = args.get("lambda-w") {
+        cfg.set("lambda_w", &v)?;
+    }
+    if let Some(v) = args.get("lambda-v") {
+        cfg.set("lambda_v", &v)?;
+    }
+    if let Some(v) = args.get("seed") {
+        cfg.set("seed", &v)?;
+    }
+    if let Some(v) = args.get("eval-every") {
+        cfg.set("eval_every", &v)?;
+    }
+    if let Some(v) = args.get("trace") {
+        cfg.set("trace", &v)?;
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.set("artifacts", &v)?;
+    }
+    if args.has("xla-eval") {
+        cfg.xla_eval = true;
+    }
+    Ok(())
+}
+
+fn cmd_train(mut args: Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(&path)?,
+        None => ExperimentConfig::default(),
+    };
+    apply_cli_overrides(&mut cfg, &mut args)?;
+    let quiet = args.has("quiet");
+    let save_model = args.get("save-model");
+    let transport = args.get("transport").unwrap_or_else(|| "local".into());
+    args.finish()?;
+
+    if !quiet {
+        println!("== dsfacto train ==");
+        println!("{}", cfg.dump());
+    }
+
+    // Non-local transports only apply to the DS-FACTO engine.
+    let summary = if cfg.trainer == TrainerKind::Nomad && transport != "local" {
+        let kind = match transport.as_str() {
+            "simnet" => nomad::TransportKind::SimNet(Default::default()),
+            "tcp" => nomad::TransportKind::Tcp,
+            other => bail!("unknown transport {other:?}"),
+        };
+        let ds = cfg.dataset.load(cfg.seed)?;
+        let (train, test) = ds.split(cfg.train_frac, cfg.seed.wrapping_add(1));
+        let ncfg = nomad::NomadConfig {
+            workers: cfg.workers,
+            outer_iters: cfg.outer_iters,
+            eta: cfg.eta,
+            seed: cfg.seed,
+            eval_every: cfg.eval_every,
+            transport: kind,
+            update_mode: nomad::UpdateMode::MeanGradient,
+            cols_per_token: 0,
+        };
+        let (out, stats) = nomad::train_with_stats(&train, Some(&test), &cfg.fm, &ncfg)?;
+        let final_eval = dsfacto::metrics::evaluate(&out.model, &test);
+        if let Some(path) = &cfg.trace_path {
+            dsfacto::coordinator::write_trace_csv(path, &out)?;
+        }
+        dsfacto::coordinator::RunSummary {
+            output: out,
+            stats: Some(stats),
+            train,
+            test,
+            final_eval,
+            final_eval_xla: None,
+        }
+    } else {
+        run_experiment(&cfg)?
+    };
+
+    let out = &summary.output;
+    if !quiet {
+        for pt in &out.trace {
+            let test_str = match &pt.test {
+                Some(m) => match summary.test.task {
+                    Task::Regression => format!(" test_rmse={:.5}", m.rmse),
+                    Task::Classification => format!(" test_acc={:.4}", m.accuracy),
+                },
+                None => String::new(),
+            };
+            println!(
+                "iter {:>4}  t={:>9}  objective={:.6}  train_loss={:.6}{}",
+                pt.iter,
+                human_secs(pt.secs),
+                pt.objective,
+                pt.train_loss,
+                test_str
+            );
+        }
+    }
+    println!(
+        "trained {} on {} ({} examples, {} features) in {} — final objective {:.6}",
+        cfg.trainer.name(),
+        cfg.dataset.name(),
+        summary.train.n(),
+        summary.train.d(),
+        human_secs(out.wall_secs),
+        out.trace.last().map(|p| p.objective).unwrap_or(f64::NAN),
+    );
+    match summary.test.task {
+        Task::Regression => println!("test RMSE {:.5}", summary.final_eval.rmse),
+        Task::Classification => println!(
+            "test accuracy {:.4} (AUC {:.4})",
+            summary.final_eval.accuracy, summary.final_eval.auc
+        ),
+    }
+    if let Some(x) = &summary.final_eval_xla {
+        println!(
+            "XLA request-path eval: loss={:.6} headline={:.5}",
+            x.loss,
+            x.headline(summary.test.task)
+        );
+    }
+    if let Some(stats) = &summary.stats {
+        println!(
+            "engine: {} messages, {} bytes, {} update visits, {} coordinate updates, holdback peak {}",
+            stats.messages, stats.bytes, stats.update_visits, stats.coordinate_updates,
+            stats.holdback_peak
+        );
+    }
+    if let Some(path) = save_model {
+        fm::io::save(&out.model, &path)?;
+        println!("model saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_evaluate(mut args: Args) -> Result<()> {
+    let model_path: String = args.require("model")?;
+    let dataset: String = args.require("dataset")?;
+    let use_xla = args.has("xla");
+    let artifacts = args.get("artifacts").unwrap_or_else(|| "artifacts".into());
+    let task = args.get("dataset-task");
+    let seed: u64 = args.get_or("seed", 42)?;
+    args.finish()?;
+
+    let model = fm::io::load(&model_path)?;
+    let mut cfg = ExperimentConfig::default();
+    cfg.set("dataset", &dataset)?;
+    if let Some(t) = task {
+        cfg.set("dataset_task", &t)?;
+    }
+    let ds = cfg.dataset.load(seed)?;
+    anyhow::ensure!(
+        ds.d() == model.d,
+        "model d={} but dataset d={}",
+        model.d,
+        ds.d()
+    );
+
+    let metrics = if use_xla {
+        Evaluator::for_dataset(&artifacts, &ds)
+            .context("load score artifact")?
+            .evaluate(&model, &ds)?
+    } else {
+        dsfacto::metrics::evaluate(&model, &ds)
+    };
+    println!(
+        "n={} loss={:.6} rmse={:.5} accuracy={:.4} auc={:.4} ({})",
+        ds.n(),
+        metrics.loss,
+        metrics.rmse,
+        metrics.accuracy,
+        metrics.auc,
+        if use_xla { "XLA scorer" } else { "rust scorer" }
+    );
+    Ok(())
+}
+
+fn cmd_inspect(mut args: Args) -> Result<()> {
+    let model_path: String = args.require("model")?;
+    args.finish()?;
+    let m = fm::io::load(&model_path)?;
+    let wnorm: f64 = m.w.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    let vnorm: f64 = m.v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    println!("DSFM model {model_path}");
+    println!("  d={} k={} params={}", m.d, m.k, m.n_params());
+    println!("  w0={:.6} |w|={wnorm:.6} |V|={vnorm:.6}", m.w0);
+    Ok(())
+}
+
+fn cmd_datasets(args: Args) -> Result<()> {
+    args.finish()?;
+    println!("{:<10} {:>8} {:>8} {:>4}  task            density", "name", "N", "D", "K");
+    for name in SynthSpec::table2_names() {
+        let spec = SynthSpec::table2(name)?;
+        println!(
+            "{:<10} {:>8} {:>8} {:>4}  {:<15} {:.4}",
+            spec.name,
+            spec.n,
+            spec.d,
+            spec.k,
+            spec.task.name(),
+            spec.density
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(mut args: Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or_else(|| "artifacts".into());
+    args.finish()?;
+    if !Runtime::available(&dir) {
+        bail!("no manifest in {dir:?}; run `make artifacts`");
+    }
+    let rt = Runtime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("{:<10} {:<10} {:<15} {:>4} {:>6} {:>3}  file", "name", "entry", "task", "B", "D", "K");
+    for e in rt.manifest().entries() {
+        println!(
+            "{:<10} {:<10} {:<15} {:>4} {:>6} {:>3}  {}",
+            e.name, e.entry, e.task.name(), e.b, e.d, e.k, e.filename
+        );
+    }
+    Ok(())
+}

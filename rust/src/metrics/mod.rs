@@ -1,0 +1,274 @@
+//! Evaluation metrics (test RMSE / accuracy / logloss / AUC — the Fig. 5
+//! quantities) and the convergence trace record shared by all trainers.
+
+use crate::data::{Dataset, Task};
+use crate::fm::{loss, FmModel};
+
+/// One point of a convergence trace (a row of Fig 4/5's series).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TracePoint {
+    /// Outer iteration (epoch) index, 0 = before training.
+    pub iter: usize,
+    /// Wall-clock seconds since training started.
+    pub secs: f64,
+    /// Regularized training objective (paper eq. 5).
+    pub objective: f64,
+    /// Mean training data loss (no regularizer).
+    pub train_loss: f64,
+    /// Held-out metrics, when a test set was provided.
+    pub test: Option<EvalMetrics>,
+}
+
+/// Held-out evaluation results.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalMetrics {
+    /// Mean data loss on the eval set.
+    pub loss: f64,
+    /// RMSE (regression) — NaN for classification.
+    pub rmse: f64,
+    /// Accuracy in [0,1] (classification) — NaN for regression.
+    pub accuracy: f64,
+    /// ROC AUC (classification) — NaN for regression.
+    pub auc: f64,
+}
+
+impl EvalMetrics {
+    /// The paper's Fig. 5 headline metric for the task: RMSE or accuracy.
+    pub fn headline(&self, task: Task) -> f64 {
+        match task {
+            Task::Regression => self.rmse,
+            Task::Classification => self.accuracy,
+        }
+    }
+}
+
+/// Evaluates a model on a dataset by scoring every row (Rust scorer).
+///
+/// The `coordinator::Evaluator` offers the same computation through the
+/// AOT XLA artifact; integration tests assert they agree.
+pub fn evaluate(model: &FmModel, ds: &Dataset) -> EvalMetrics {
+    let scores: Vec<f32> = (0..ds.n())
+        .map(|i| {
+            let (idx, val) = ds.rows.row(i);
+            model.score_sparse(idx, val)
+        })
+        .collect();
+    evaluate_scores(&scores, &ds.labels, ds.task)
+}
+
+/// Metrics from precomputed scores (used by the XLA evaluation path too).
+pub fn evaluate_scores(scores: &[f32], labels: &[f32], task: Task) -> EvalMetrics {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len().max(1) as f64;
+    let mean_loss = scores
+        .iter()
+        .zip(labels)
+        .map(|(&f, &y)| loss::loss(f, y, task) as f64)
+        .sum::<f64>()
+        / n;
+    match task {
+        Task::Regression => {
+            let mse = scores
+                .iter()
+                .zip(labels)
+                .map(|(&f, &y)| ((f - y) as f64).powi(2))
+                .sum::<f64>()
+                / n;
+            EvalMetrics {
+                loss: mean_loss,
+                rmse: mse.sqrt(),
+                accuracy: f64::NAN,
+                auc: f64::NAN,
+            }
+        }
+        Task::Classification => {
+            let correct = scores
+                .iter()
+                .zip(labels)
+                .filter(|&(&f, &y)| (f >= 0.0) == (y > 0.0))
+                .count();
+            EvalMetrics {
+                loss: mean_loss,
+                rmse: f64::NAN,
+                accuracy: correct as f64 / n,
+                auc: roc_auc(scores, labels),
+            }
+        }
+    }
+}
+
+/// ROC AUC via the rank-sum (Mann-Whitney) formulation, ties averaged.
+pub fn roc_auc(scores: &[f32], labels: &[f32]) -> f64 {
+    let n = scores.len();
+    let n_pos = labels.iter().filter(|&&y| y > 0.0).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return f64::NAN;
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // Average ranks over tied score groups.
+    let mut rank = vec![0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0; // ranks are 1-based
+        for p in i..=j {
+            rank[order[p]] = avg;
+        }
+        i = j + 1;
+    }
+    let rank_sum_pos: f64 = labels
+        .iter()
+        .enumerate()
+        .filter(|(_, &y)| y > 0.0)
+        .map(|(i, _)| rank[i])
+        .sum();
+    (rank_sum_pos - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0) / (n_pos as f64 * n_neg as f64)
+}
+
+/// The result every trainer returns: final model + convergence trace.
+#[derive(Debug, Clone)]
+pub struct TrainOutput {
+    pub model: FmModel,
+    pub trace: Vec<TracePoint>,
+    /// Total wall-clock training seconds (excludes evaluation time).
+    pub wall_secs: f64,
+}
+
+/// Shared trace recording: evaluates objective/train-loss/test metrics and
+/// accumulates [`TracePoint`]s. Evaluation time is excluded from the
+/// training clock (the paper's convergence plots are vs optimization time).
+pub struct TraceRecorder<'a> {
+    train: &'a Dataset,
+    test: Option<&'a Dataset>,
+    lambda_w: f32,
+    lambda_v: f32,
+    eval_every: usize,
+    trace: Vec<TracePoint>,
+}
+
+impl<'a> TraceRecorder<'a> {
+    /// New recorder; `eval_every` controls how often test metrics are run.
+    pub fn new(
+        train: &'a Dataset,
+        test: Option<&'a Dataset>,
+        lambda_w: f32,
+        lambda_v: f32,
+        eval_every: usize,
+    ) -> Self {
+        TraceRecorder {
+            train,
+            test,
+            lambda_w,
+            lambda_v,
+            eval_every: eval_every.max(1),
+            trace: Vec::new(),
+        }
+    }
+
+    /// Records a point at outer iteration `iter` with training clock `secs`.
+    pub fn record(&mut self, iter: usize, secs: f64, model: &FmModel) {
+        let mut data_loss = 0f64;
+        for i in 0..self.train.n() {
+            let (idx, val) = self.train.rows.row(i);
+            data_loss +=
+                loss::loss(model.score_sparse(idx, val), self.train.labels[i], self.train.task)
+                    as f64;
+        }
+        data_loss /= self.train.n().max(1) as f64;
+        let rw: f64 = model.w.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let rv: f64 = model.v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let objective =
+            data_loss + 0.5 * self.lambda_w as f64 * rw + 0.5 * self.lambda_v as f64 * rv;
+        let test = match self.test {
+            Some(ts) if iter % self.eval_every == 0 => Some(evaluate(model, ts)),
+            _ => None,
+        };
+        self.trace.push(TracePoint {
+            iter,
+            secs,
+            objective,
+            train_loss: data_loss,
+            test,
+        });
+    }
+
+    /// Consumes the recorder.
+    pub fn into_trace(self) -> Vec<TracePoint> {
+        self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Csr;
+
+    fn ds(task: Task, labels: Vec<f32>) -> Dataset {
+        let n = labels.len();
+        let rows = Csr::from_triplets(
+            n,
+            2,
+            &(0..n).map(|i| (i, 0, i as f32)).collect::<Vec<_>>(),
+        );
+        Dataset {
+            name: "m".into(),
+            task,
+            rows,
+            labels,
+        }
+    }
+
+    #[test]
+    fn regression_rmse() {
+        let m = evaluate_scores(&[1.0, 2.0, 3.0], &[1.0, 2.0, 5.0], Task::Regression);
+        assert!((m.rmse - (4.0f64 / 3.0).sqrt()).abs() < 1e-9);
+        assert!(m.accuracy.is_nan());
+    }
+
+    #[test]
+    fn classification_accuracy() {
+        let m = evaluate_scores(&[0.5, -0.5, 0.5, -0.5], &[1.0, -1.0, -1.0, 1.0], Task::Classification);
+        assert_eq!(m.accuracy, 0.5);
+        assert!(m.rmse.is_nan());
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let labels = [1.0f32, 1.0, -1.0, -1.0];
+        assert_eq!(roc_auc(&[4.0, 3.0, 2.0, 1.0], &labels), 1.0);
+        assert_eq!(roc_auc(&[1.0, 2.0, 3.0, 4.0], &labels), 0.0);
+        // All-tied scores give AUC 0.5.
+        assert_eq!(roc_auc(&[1.0, 1.0, 1.0, 1.0], &labels), 0.5);
+    }
+
+    #[test]
+    fn auc_degenerate_is_nan() {
+        assert!(roc_auc(&[1.0, 2.0], &[1.0, 1.0]).is_nan());
+    }
+
+    #[test]
+    fn evaluate_uses_model_scores() {
+        let data = ds(Task::Regression, vec![0.0, 1.0, 2.0]);
+        let mut model = FmModel::zeros(2, 2);
+        model.w[0] = 1.0; // f(x_i) = i
+        let m = evaluate(&model, &data);
+        assert!(m.rmse < 1e-6, "rmse {}", m.rmse);
+    }
+
+    #[test]
+    fn headline_selects_by_task() {
+        let m = EvalMetrics {
+            loss: 0.0,
+            rmse: 1.5,
+            accuracy: 0.9,
+            auc: 0.8,
+        };
+        assert_eq!(m.headline(Task::Regression), 1.5);
+        assert_eq!(m.headline(Task::Classification), 0.9);
+    }
+}

@@ -1,0 +1,687 @@
+//! The DS-FACTO execution engine: P workers, a ring of circulating
+//! parameter tokens, and the two-pass (update / recompute) protocol of
+//! paper Algorithm 1 with incremental synchronization of G and A.
+//!
+//! ## Protocol invariants (tested in `nomad::tests` and `rust/tests/`)
+//!
+//! 1. **Single ownership** — a token is held by exactly one worker at a
+//!    time; parameters need no locks.
+//! 2. **Phase lockstep (+/-1)** — a worker at phase sequence `s` only ever
+//!    receives tokens at `s` (processed) or `s+1` (held back); tokens never
+//!    arrive *behind* a worker.
+//! 3. **Conservation** — every token makes exactly `P` visits per phase and
+//!    is collected exactly once at the end; no token is lost or duplicated.
+//! 4. **Exact finalization** — the returned model is assembled from the
+//!    tokens themselves (not the eventually-consistent mirror).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use super::mirror::ParamMirror;
+use super::token::{Phase, Token, BIAS};
+use super::NomadConfig;
+use crate::cluster::Transport;
+use crate::data::{Csc, Dataset, Task};
+use crate::fm::{loss, FmHyper, FmModel};
+use crate::metrics::{evaluate, TracePoint, TrainOutput};
+use crate::optim::LrSchedule;
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// Engine-level counters (Fig. 6 analysis; transport adds its own).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// Token hops through the transport.
+    pub messages: u64,
+    /// Serialized bytes (simulated / TCP transports only).
+    pub bytes: u64,
+    /// Update-phase token visits processed.
+    pub update_visits: u64,
+    /// Coordinate updates applied (sum over visits of local column nnz).
+    pub coordinate_updates: u64,
+    /// Peak holdback-queue length observed on any worker.
+    pub holdback_peak: usize,
+    /// Per-worker busy seconds: time spent processing tokens (update,
+    /// recompute, finalize, serialization), excluding queue waits.
+    ///
+    /// On machines with fewer cores than workers, wall-clock speedup is
+    /// meaningless; `busy` gives the *simulated parallel makespan*
+    /// `max_p busy_p` — the quantity the Fig. 6 reproduction reports
+    /// (EXPERIMENTS.md documents this substitution).
+    pub worker_busy_secs: Vec<f64>,
+}
+
+impl EngineStats {
+    /// Simulated parallel makespan: the slowest worker's busy time.
+    pub fn makespan_secs(&self) -> f64 {
+        self.worker_busy_secs.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Total busy time across workers (the "work" in work-span terms).
+    pub fn total_busy_secs(&self) -> f64 {
+        self.worker_busy_secs.iter().sum()
+    }
+}
+
+/// A worker's end-of-recompute report (drives the convergence trace).
+struct FinalizePost {
+    iter: u32,
+    loss_sum: f64,
+    n_local: usize,
+    /// Sum of w_j^2 over tokens this worker flipped this iteration.
+    reg_w: f64,
+    /// Sum of ||v_j||^2 over tokens this worker flipped this iteration.
+    reg_v: f64,
+}
+
+/// Shared engine context (borrowed by every worker).
+struct Shared<'a> {
+    transport: &'a dyn Transport,
+    mirror: &'a ParamMirror,
+    collector: Mutex<Vec<Token>>,
+    collected: AtomicUsize,
+    done: AtomicBool,
+    update_visits: AtomicU64,
+    coordinate_updates: AtomicU64,
+    holdback_peak: AtomicUsize,
+    busy_secs: Mutex<Vec<f64>>,
+}
+
+/// Per-worker engine state.
+struct Worker<'a> {
+    id: usize,
+    p: usize,
+    ntok: usize,
+    n_total: usize,
+    t_max: u32,
+    k: usize,
+    /// Columns per token (block size C).
+    block_cols: usize,
+    /// Model width D.
+    d: usize,
+    task: Task,
+    eta: LrSchedule,
+    lambda_w: f32,
+    lambda_v: f32,
+    /// Local row block: global rows `[row_start, row_start + nloc)`.
+    labels: &'a [f32],
+    cols: Csc,
+    nloc: usize,
+    /// Auxiliary variables (paper's G and A) for the local rows.
+    g: Vec<f32>,
+    aa: Vec<f32>,
+    /// Recompute-phase partial-sum accumulators.
+    acc_xw: Vec<f32>,
+    acc_a: Vec<f32>,
+    acc_s2: Vec<f32>,
+    /// Local copy of the bias (refreshed whenever the bias token passes).
+    w0: f32,
+    /// Phase gating.
+    seq: u64,
+    seen: usize,
+    holdback: Vec<Token>,
+    /// Per-iteration regularizer contributions of tokens this worker flips.
+    reg_w: f64,
+    reg_v: f64,
+    /// Local loss of the last finalize.
+    post_tx: Sender<FinalizePost>,
+    shared: &'a Shared<'a>,
+    visits_processed: u64,
+    coords_applied: u64,
+    update_mode: super::UpdateMode,
+    rng: Pcg64,
+}
+
+impl<'a> Worker<'a> {
+    fn cur_iter(&self) -> u32 {
+        (self.seq / 2) as u32
+    }
+
+    fn run(&mut self) {
+        loop {
+            if self.shared.done.load(Ordering::Relaxed) {
+                self.flush_stats();
+                return;
+            }
+            let tok = match self.pop_holdback() {
+                Some(t) => t,
+                None => match self
+                    .shared
+                    .transport
+                    .recv_timeout(self.id, Duration::from_millis(20))
+                {
+                    Some(t) => t,
+                    None => continue,
+                },
+            };
+            self.handle(tok);
+        }
+    }
+
+    fn flush_stats(&self) {
+        self.shared
+            .update_visits
+            .fetch_add(self.visits_processed, Ordering::Relaxed);
+        self.shared
+            .coordinate_updates
+            .fetch_add(self.coords_applied, Ordering::Relaxed);
+        // Thread CPU time: excludes blocking waits and (crucially, on hosts
+        // with fewer cores than workers) preemption by sibling workers.
+        self.shared.busy_secs.lock().unwrap()[self.id] =
+            crate::util::timer::thread_cpu_secs();
+    }
+
+    fn pop_holdback(&mut self) -> Option<Token> {
+        let seq = self.seq;
+        let pos = self.holdback.iter().position(|t| t.seq() == seq)?;
+        Some(self.holdback.swap_remove(pos))
+    }
+
+    fn handle(&mut self, mut tok: Token) {
+        // Terminal state: training iterations exhausted — collect.
+        if self.cur_iter() >= self.t_max {
+            debug_assert_eq!(tok.iter, self.t_max);
+            self.shared.collector.lock().unwrap().push(tok);
+            self.shared.collected.fetch_add(1, Ordering::SeqCst);
+            return;
+        }
+        let cur = self.seq;
+        let ts = tok.seq();
+        if ts > cur {
+            // Invariant 2: ahead by exactly one phase.
+            debug_assert!(ts == cur + 1, "token seq {ts} vs worker {cur}");
+            self.holdback.push(tok);
+            let peak = self.holdback.len();
+            if peak > self.shared.holdback_peak.load(Ordering::Relaxed) {
+                self.shared.holdback_peak.store(peak, Ordering::Relaxed);
+            }
+            return;
+        }
+        debug_assert!(ts == cur, "token behind worker: {ts} < {cur}");
+
+        match tok.phase {
+            Phase::Update => self.update_visit(&mut tok),
+            Phase::Recompute => self.recompute_visit(&tok),
+        }
+        tok.visits += 1;
+
+        if tok.visits as usize == self.p {
+            // Last visitor: publish (recompute pass only) and flip.
+            if tok.phase == Phase::Recompute {
+                if tok.is_bias() {
+                    self.shared.mirror.publish_bias(tok.w[0]);
+                } else {
+                    let (lo, _hi) = self.block_range(tok.j);
+                    let k = self.k;
+                    for (bi, &wj) in tok.w.iter().enumerate() {
+                        self.shared.mirror.publish_column(
+                            lo + bi,
+                            wj,
+                            &tok.v[bi * k..(bi + 1) * k],
+                        );
+                        self.reg_w += (wj as f64) * (wj as f64);
+                    }
+                    self.reg_v += tok.v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+                }
+            }
+            tok.flip();
+        }
+        self.shared.transport.send((self.id + 1) % self.p, tok);
+
+        self.seen += 1;
+        if self.seen == self.ntok {
+            self.advance_phase();
+        }
+    }
+
+    /// Paper Algorithm 1 lines 12-17: eqs. 11-13 with cached G and A,
+    /// applied as *incremental gradient descent* over the local column
+    /// (footnote 2). Because `G` is frozen between recompute passes, the
+    /// per-example contributions are partial sums of the eq. 5-normalized
+    /// gradient (scaled by 1/N, with the L2 term split across the P
+    /// visits): after all P visits of an outer iteration the column has
+    /// moved by exactly `-eta * (mean gradient + lambda * column)`. This is
+    /// the stable semantics of updating with stale multipliers — applying
+    /// eq. 12/13 per-nonzero with frozen G would compound into an
+    /// unnormalized batch step and diverge at any practical eta.
+    fn update_visit(&mut self, tok: &mut Token) {
+        self.visits_processed += 1;
+        let eta = self.eta.at(self.cur_iter() as usize);
+        let inv_n = 1.0 / self.n_total.max(1) as f32;
+        if tok.is_bias() {
+            // eq. 11 aggregated over the local block: after all P visits
+            // the bias has moved by -eta * mean(G).
+            let gsum: f32 = self.g.iter().sum();
+            tok.w[0] -= eta * gsum * inv_n;
+            self.w0 = tok.w[0];
+            return;
+        }
+        if let super::UpdateMode::Stochastic { samples } = self.update_mode {
+            return self.update_visit_stochastic(tok, eta, samples);
+        }
+        let (lo, hi) = self.block_range(tok.j);
+        let k = self.k;
+        let reg_split = 1.0 / self.p as f32;
+        let mut gv_buf = [0f32; 64];
+        let mut gv_heap = Vec::new();
+        for (bi, j) in (lo..hi).enumerate() {
+            let (rows, xs) = self.cols.col(j);
+            self.coords_applied += rows.len() as u64;
+            let vj = &mut tok.v[bi * k..(bi + 1) * k];
+            // Accumulate the local partial gradient (eqs. 7-8 restricted
+            // to this worker's rows), with v_j fixed at its entry value.
+            let mut gw = 0f32;
+            let gv: &mut [f32] = if k <= 64 {
+                gv_buf[..k].fill(0.0);
+                &mut gv_buf[..k]
+            } else {
+                gv_heap.clear();
+                gv_heap.resize(k, 0.0);
+                &mut gv_heap
+            };
+            for (r, x) in rows.iter().zip(xs) {
+                let r = *r as usize;
+                let gi = self.g[r];
+                let x = *x;
+                gw += gi * x;
+                let x2 = x * x;
+                let ai = &self.aa[r * k..(r + 1) * k];
+                for kk in 0..k {
+                    gv[kk] += gi * (x * ai[kk] - vj[kk] * x2);
+                }
+            }
+            // eq. 12 / eq. 13, 1/N-normalized, L2 split across the P visits.
+            let wj = &mut tok.w[bi];
+            *wj -= eta * (gw * inv_n + self.lambda_w * reg_split * *wj);
+            for kk in 0..k {
+                vj[kk] -= eta * (gv[kk] * inv_n + self.lambda_v * reg_split * vj[kk]);
+            }
+        }
+    }
+
+    /// Columns `[lo, hi)` of block `b`.
+    #[inline]
+    fn block_range(&self, b: u32) -> (usize, usize) {
+        let lo = b as usize * self.block_cols;
+        (lo, (lo + self.block_cols).min(self.d))
+    }
+
+    /// Paper-literal Algorithm 1 line 14 (`UpdateMode::Stochastic`):
+    /// sample local examples and apply the per-example eq. 12/13 updates
+    /// with the frozen multipliers.
+    fn update_visit_stochastic(&mut self, tok: &mut Token, eta: f32, samples: usize) {
+        let (lo, hi) = self.block_range(tok.j);
+        let k = self.k;
+        for (bi, j) in (lo..hi).enumerate() {
+            let (rows, xs) = self.cols.col(j);
+            if rows.is_empty() {
+                continue;
+            }
+            let vj = &mut tok.v[bi * k..(bi + 1) * k];
+            for _ in 0..samples {
+                let t = self.rng.below_usize(rows.len());
+                let r = rows[t] as usize;
+                let x = xs[t];
+                let gi = self.g[r];
+                // eq. 12
+                let wj = &mut tok.w[bi];
+                *wj -= eta * (gi * x + self.lambda_w * *wj);
+                // eq. 13 with the cached a_ik
+                let x2 = x * x;
+                let ai = &self.aa[r * k..(r + 1) * k];
+                for kk in 0..k {
+                    let vjk = vj[kk];
+                    vj[kk] = vjk - eta * (gi * (x * ai[kk] - vjk * x2) + self.lambda_v * vjk);
+                }
+                self.coords_applied += 1;
+            }
+        }
+    }
+
+    /// Algorithm 1 lines 18-21: fold the token into the partial sums for
+    /// G and A (incremental synchronization).
+    fn recompute_visit(&mut self, tok: &Token) {
+        if tok.is_bias() {
+            self.w0 = tok.w[0];
+            return;
+        }
+        let (lo, hi) = self.block_range(tok.j);
+        let k = self.k;
+        for (bi, j) in (lo..hi).enumerate() {
+            let (rows, xs) = self.cols.col(j);
+            let wj = tok.w[bi];
+            let vj = &tok.v[bi * k..(bi + 1) * k];
+            for (r, x) in rows.iter().zip(xs) {
+                let r = *r as usize;
+                let x = *x;
+                self.acc_xw[r] += wj * x;
+                let acc_a = &mut self.acc_a[r * k..(r + 1) * k];
+                let acc_s2 = &mut self.acc_s2[r * k..(r + 1) * k];
+                for kk in 0..k {
+                    let vx = vj[kk] * x;
+                    acc_a[kk] += vx;
+                    acc_s2[kk] += vx * vx;
+                }
+            }
+        }
+    }
+
+    fn advance_phase(&mut self) {
+        if self.seq % 2 == 1 {
+            self.finalize();
+        }
+        self.seq += 1;
+        self.seen = 0;
+    }
+
+    /// End of a recompute pass: rebuild G and A from the partial sums,
+    /// report the local loss + regularizer contributions.
+    fn finalize(&mut self) {
+        let iter = (self.seq / 2) as u32;
+        let k = self.k;
+        let mut loss_sum = 0f64;
+        for r in 0..self.nloc {
+            let mut pair = 0f32;
+            for kk in 0..k {
+                let a = self.acc_a[r * k + kk];
+                pair += a * a - self.acc_s2[r * k + kk];
+            }
+            let f = self.w0 + self.acc_xw[r] + 0.5 * pair;
+            self.g[r] = loss::multiplier(f, self.labels[r], self.task);
+            loss_sum += loss::loss(f, self.labels[r], self.task) as f64;
+        }
+        self.aa.copy_from_slice(&self.acc_a);
+        self.acc_xw.fill(0.0);
+        self.acc_a.fill(0.0);
+        self.acc_s2.fill(0.0);
+        let _ = self.post_tx.send(FinalizePost {
+            iter,
+            loss_sum,
+            n_local: self.nloc,
+            reg_w: std::mem::take(&mut self.reg_w),
+            reg_v: std::mem::take(&mut self.reg_v),
+        });
+    }
+}
+
+/// Runs DS-FACTO over an arbitrary transport. Returns the trained model,
+/// trace and engine counters.
+pub fn train_with_transport(
+    train: &Dataset,
+    test: Option<&Dataset>,
+    fm: &FmHyper,
+    cfg: &NomadConfig,
+    transport: &dyn Transport,
+) -> Result<(TrainOutput, EngineStats)> {
+    ensure!(train.n() > 0, "empty training set");
+    ensure!(train.d() > 0, "zero-dimensional training set");
+    let p = cfg.workers.max(1);
+    let d = train.d();
+    let k = fm.k;
+    let n = train.n();
+    // Column-block size: the granularity optimization (EXPERIMENTS.md
+    // §Perf). 0 = auto heuristic.
+    let c = if cfg.cols_per_token == 0 {
+        super::token::auto_block_cols(d, p)
+    } else {
+        cfg.cols_per_token
+    };
+    let nblocks = d.div_ceil(c);
+    let ntok = nblocks + 1; // + bias token
+    let t_max = cfg.outer_iters as u32;
+
+    // ---- Initial model and auxiliary variables (exact, pre-launch).
+    let mut rng = Pcg64::new(cfg.seed, 0x0ad);
+    let init = FmModel::init(d, k, fm.init_std, &mut rng);
+    let mirror = ParamMirror::new(&init);
+
+    // Row blocks.
+    let chunk = n.div_ceil(p);
+    let bounds: Vec<(usize, usize)> = (0..p)
+        .map(|b| ((b * chunk).min(n), ((b + 1) * chunk).min(n)))
+        .collect();
+
+    let (post_tx, post_rx) = channel::<FinalizePost>();
+    let shared = Shared {
+        transport,
+        mirror: &mirror,
+        collector: Mutex::new(Vec::with_capacity(ntok)),
+        collected: AtomicUsize::new(0),
+        done: AtomicBool::new(false),
+        update_visits: AtomicU64::new(0),
+        coordinate_updates: AtomicU64::new(0),
+        holdback_peak: AtomicUsize::new(0),
+        busy_secs: Mutex::new(vec![0.0; p]),
+    };
+
+    // ---- Seed the ring: deal tokens across workers (Algorithm 1 l.5-8).
+    {
+        let mut deal_rng = Pcg64::new(cfg.seed, 0xdea1);
+        for b in 0..ntok {
+            let tok = if b == nblocks {
+                Token {
+                    j: BIAS,
+                    iter: 0,
+                    phase: Phase::Update,
+                    visits: 0,
+                    w: Box::from([init.w0]),
+                    v: Box::from([]),
+                }
+            } else {
+                let lo = b * c;
+                let hi = (lo + c).min(d);
+                Token {
+                    j: b as u32,
+                    iter: 0,
+                    phase: Phase::Update,
+                    visits: 0,
+                    w: Box::from(&init.w[lo..hi]),
+                    v: Box::from(&init.v[lo * k..hi * k]),
+                }
+            };
+            transport.send(deal_rng.below_usize(p), tok);
+        }
+    }
+
+    let sw = Stopwatch::start();
+    let mut trace: Vec<TracePoint> = Vec::with_capacity(cfg.outer_iters + 1);
+    // Initial point (iter 0 = before training), computed exactly.
+    {
+        let mut rec =
+            crate::metrics::TraceRecorder::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
+        rec.record(0, 0.0, &init);
+        trace.extend(rec.into_trace());
+    }
+
+    let stats = std::thread::scope(|scope| -> Result<EngineStats> {
+        let shared_ref = &shared;
+        let mut handles = Vec::with_capacity(p);
+        for (id, &(start, end)) in bounds.iter().enumerate() {
+            let post_tx = post_tx.clone();
+            let init_ref = &init;
+            let train_ref = train;
+            handles.push(scope.spawn(move || {
+                let nloc = end - start;
+                let block = train_ref.rows.slice_rows(start, end);
+                let cols = block.to_csc();
+                // Exact initial G/A from the init model.
+                let mut g = vec![0f32; nloc];
+                let mut aa = vec![0f32; nloc * k];
+                for r in 0..nloc {
+                    let (idx, val) = block.row(r);
+                    let f = init_ref.score_with_sums(idx, val, &mut aa[r * k..(r + 1) * k]);
+                    g[r] = loss::multiplier(f, train_ref.labels[start + r], train_ref.task);
+                }
+                let mut w = Worker {
+                    id,
+                    p,
+                    ntok,
+                    n_total: n,
+                    t_max,
+                    k,
+                    block_cols: c,
+                    d,
+                    task: train_ref.task,
+                    eta: cfg.eta,
+                    lambda_w: fm.lambda_w,
+                    lambda_v: fm.lambda_v,
+                    labels: &train_ref.labels[start..end],
+                    cols,
+                    nloc,
+                    g,
+                    aa,
+                    acc_xw: vec![0f32; nloc],
+                    acc_a: vec![0f32; nloc * k],
+                    acc_s2: vec![0f32; nloc * k],
+                    w0: init_ref.w0,
+                    seq: 0,
+                    seen: 0,
+                    holdback: Vec::new(),
+                    reg_w: 0.0,
+                    reg_v: 0.0,
+                    post_tx,
+                    shared: shared_ref,
+                    visits_processed: 0,
+                    coords_applied: 0,
+                    update_mode: cfg.update_mode,
+                    rng: Pcg64::new(cfg.seed, 0x3a17 + id as u64),
+                };
+                w.run();
+            }));
+        }
+        drop(post_tx);
+
+        // ---- Driver: aggregate finalize posts into the trace.
+        let mut pending: HashMap<u32, (usize, f64, f64, f64)> = HashMap::new();
+        let mut iters_done = 0u32;
+        while iters_done < t_max {
+            match post_rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(post) => {
+                    let e = pending.entry(post.iter).or_insert((0, 0.0, 0.0, 0.0));
+                    e.0 += 1;
+                    e.1 += post.loss_sum;
+                    e.2 += post.reg_w;
+                    e.3 += post.reg_v;
+                    debug_assert!(post.n_local <= n);
+                    if e.0 == p {
+                        let (_, loss_sum, reg_w, reg_v) = pending.remove(&post.iter).unwrap();
+                        let train_loss = loss_sum / n as f64;
+                        let objective = train_loss
+                            + 0.5 * fm.lambda_w as f64 * reg_w
+                            + 0.5 * fm.lambda_v as f64 * reg_v;
+                        let iter1 = post.iter as usize + 1;
+                        let test_metrics = match test {
+                            Some(ts) if iter1 % cfg.eval_every.max(1) == 0 => {
+                                Some(evaluate(&mirror.snapshot(), ts))
+                            }
+                            _ => None,
+                        };
+                        trace.push(TracePoint {
+                            iter: iter1,
+                            secs: sw.secs(),
+                            objective,
+                            train_loss,
+                            test: test_metrics,
+                        });
+                        iters_done += 1;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("all workers exited before training completed")
+                }
+            }
+        }
+
+        // ---- Drain: wait for every token to land in the collector.
+        let drain = Stopwatch::start();
+        while shared.collected.load(Ordering::SeqCst) < ntok {
+            std::thread::sleep(Duration::from_millis(1));
+            ensure!(
+                drain.secs() < 60.0,
+                "token drain timed out: {}/{} collected",
+                shared.collected.load(Ordering::SeqCst),
+                ntok
+            );
+        }
+        shared.done.store(true, Ordering::SeqCst);
+        for h in handles {
+            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+        }
+        Ok(EngineStats {
+            messages: 0,
+            bytes: 0,
+            update_visits: shared.update_visits.load(Ordering::Relaxed),
+            coordinate_updates: shared.coordinate_updates.load(Ordering::Relaxed),
+            holdback_peak: shared.holdback_peak.load(Ordering::Relaxed),
+            worker_busy_secs: shared.busy_secs.lock().unwrap().clone(),
+        })
+    })?;
+
+    let wall = sw.secs();
+
+    // ---- Exact final model from the collected tokens (invariant 4).
+    let tokens = shared.collector.into_inner().unwrap();
+    ensure!(
+        tokens.len() == ntok,
+        "collector has {} tokens, want {ntok}",
+        tokens.len()
+    );
+    let mut model = FmModel::zeros(d, k);
+    let mut seen_bias = false;
+    let mut seen_blocks = vec![false; nblocks];
+    for tok in tokens {
+        ensure!(tok.iter == t_max, "token finished at iter {}", tok.iter);
+        if tok.is_bias() {
+            ensure!(!seen_bias, "duplicate bias token");
+            seen_bias = true;
+            model.w0 = tok.w[0];
+        } else {
+            let b = tok.j as usize;
+            ensure!(!seen_blocks[b], "duplicate token for block {b}");
+            seen_blocks[b] = true;
+            let lo = b * c;
+            let hi = (lo + c).min(d);
+            ensure!(tok.w.len() == hi - lo, "block {b} width mismatch");
+            model.w[lo..hi].copy_from_slice(&tok.w);
+            model.v[lo * k..hi * k].copy_from_slice(&tok.v);
+        }
+    }
+    ensure!(seen_bias, "bias token missing");
+    ensure!(
+        seen_blocks.iter().all(|&s| s),
+        "missing column-block tokens after drain"
+    );
+
+    let tstats = transport.stats();
+    let mut stats = stats;
+    stats.messages = tstats.messages;
+    stats.bytes = tstats.bytes;
+
+    trace.sort_by_key(|pt| pt.iter);
+    Ok((
+        TrainOutput {
+            model,
+            trace,
+            wall_secs: wall,
+        },
+        stats,
+    ))
+}
+
+/// Context binding for anyhow (keeps the public signature tidy).
+pub(super) fn run(
+    train: &Dataset,
+    test: Option<&Dataset>,
+    fm: &FmHyper,
+    cfg: &NomadConfig,
+    transport: &dyn Transport,
+) -> Result<(TrainOutput, EngineStats)> {
+    train_with_transport(train, test, fm, cfg, transport)
+        .context("DS-FACTO engine run failed")
+}

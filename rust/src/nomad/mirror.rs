@@ -1,0 +1,126 @@
+//! A lock-free read-mostly mirror of the circulating parameters.
+//!
+//! The true parameters live inside tokens (single-owner, no locks). For
+//! held-out evaluation during training the driver needs *approximate*
+//! snapshots without pausing the ring, so the last visitor of each token's
+//! Recompute pass publishes the column here (one relaxed atomic store per
+//! value, once per token per iteration).
+//!
+//! Snapshots are **eventually consistent**: a reader may observe columns
+//! from adjacent iterations. That is inherent to asynchronous execution —
+//! the paper evaluates the same way (convergence curves from periodic
+//! snapshots) — and the *final* model is assembled exactly from the tokens
+//! themselves, not from the mirror.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::fm::FmModel;
+
+/// Atomic f32 array mirror of `w0`, `w`, `V`.
+pub struct ParamMirror {
+    d: usize,
+    k: usize,
+    w0: AtomicU32,
+    w: Vec<AtomicU32>,
+    v: Vec<AtomicU32>,
+}
+
+#[inline]
+fn store(cell: &AtomicU32, x: f32) {
+    cell.store(x.to_bits(), Ordering::Relaxed);
+}
+
+#[inline]
+fn load(cell: &AtomicU32) -> f32 {
+    f32::from_bits(cell.load(Ordering::Relaxed))
+}
+
+impl ParamMirror {
+    /// Initializes the mirror from the starting model.
+    pub fn new(init: &FmModel) -> Self {
+        ParamMirror {
+            d: init.d,
+            k: init.k,
+            w0: AtomicU32::new(init.w0.to_bits()),
+            w: init.w.iter().map(|&x| AtomicU32::new(x.to_bits())).collect(),
+            v: init.v.iter().map(|&x| AtomicU32::new(x.to_bits())).collect(),
+        }
+    }
+
+    /// Publishes column `j`.
+    pub fn publish_column(&self, j: usize, w: f32, v: &[f32]) {
+        debug_assert_eq!(v.len(), self.k);
+        store(&self.w[j], w);
+        for (kk, &x) in v.iter().enumerate() {
+            store(&self.v[j * self.k + kk], x);
+        }
+    }
+
+    /// Publishes the bias.
+    pub fn publish_bias(&self, w0: f32) {
+        store(&self.w0, w0);
+    }
+
+    /// Copies the mirror into a plain model.
+    pub fn snapshot(&self) -> FmModel {
+        FmModel {
+            d: self.d,
+            k: self.k,
+            w0: load(&self.w0),
+            w: self.w.iter().map(load).collect(),
+            v: self.v.iter().map(load).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_publishes() {
+        let init = FmModel::zeros(3, 2);
+        let m = ParamMirror::new(&init);
+        m.publish_column(1, 0.5, &[1.0, 2.0]);
+        m.publish_bias(-0.25);
+        let snap = m.snapshot();
+        assert_eq!(snap.w0, -0.25);
+        assert_eq!(snap.w, vec![0.0, 0.5, 0.0]);
+        assert_eq!(snap.vrow(1), &[1.0, 2.0]);
+        assert_eq!(snap.vrow(0), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn initial_snapshot_equals_init() {
+        let mut init = FmModel::zeros(2, 2);
+        init.w0 = 3.0;
+        init.w[1] = 4.0;
+        init.v[3] = 5.0;
+        let m = ParamMirror::new(&init);
+        assert_eq!(m.snapshot(), init);
+    }
+
+    #[test]
+    fn concurrent_publish_and_snapshot_are_safe() {
+        let init = FmModel::zeros(64, 4);
+        let m = std::sync::Arc::new(ParamMirror::new(&init));
+        let writer = {
+            let m = std::sync::Arc::clone(&m);
+            std::thread::spawn(move || {
+                for round in 0..200 {
+                    for j in 0..64 {
+                        let x = (round * 64 + j) as f32;
+                        m.publish_column(j, x, &[x; 4]);
+                    }
+                }
+            })
+        };
+        for _ in 0..50 {
+            let snap = m.snapshot();
+            assert_eq!(snap.w.len(), 64);
+        }
+        writer.join().unwrap();
+        let snap = m.snapshot();
+        assert_eq!(snap.w[63], (199 * 64 + 63) as f32);
+    }
+}

@@ -1,0 +1,360 @@
+//! DS-FACTO: the paper's hybrid-parallel, decentralized, asynchronous
+//! training engine (paper §4, Algorithm 1).
+//!
+//! * Data is partitioned by **rows** across workers (each worker owns a
+//!   contiguous example block and its column-sliced CSC view).
+//! * The model is partitioned by **columns**: each parameter column
+//!   `{w_j, v_j}` circulates as a [`token::Token`] through per-worker
+//!   queues in a ring — no parameter server (peer-only topology).
+//! * The synchronization terms `G_i` (loss multipliers) and
+//!   `a_ik` (factor sums, eq. 10) are maintained as worker-local auxiliary
+//!   variables and refreshed by an extra recompute ring pass per outer
+//!   iteration (*incremental synchronization*, §4.2), instead of a bulk
+//!   synchronization barrier.
+//!
+//! See [`engine`] for the protocol invariants.
+
+pub mod engine;
+pub mod mirror;
+pub mod token;
+
+pub use engine::{train_with_transport, EngineStats};
+
+use crate::cluster::{LocalTransport, NetModel, SimNetTransport, Transport};
+use crate::data::Dataset;
+use crate::fm::FmHyper;
+use crate::metrics::TrainOutput;
+use crate::optim::LrSchedule;
+
+/// Which medium tokens move through (the Fig. 6 comparison axis).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TransportKind {
+    /// In-process queues (multi-threaded mode).
+    Local,
+    /// Serialized tokens with a modeled network (multi-machine mode).
+    SimNet(NetModel),
+    /// Real TCP loopback sockets.
+    Tcp,
+}
+
+/// How an update-phase token visit applies eqs. 12-13 (both use the frozen
+/// auxiliary G/A; they differ in how example contributions combine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateMode {
+    /// Fold the whole local column into one 1/N-normalized gradient step
+    /// per visit: an outer iteration equals one incremental full-gradient
+    /// pass. Stable at batch-GD step sizes; the default.
+    MeanGradient,
+    /// Paper-literal Algorithm 1 line 14: sample `samples` local examples
+    /// and apply the *stochastic* eq. 12/13 update per example. Noisier,
+    /// escapes saddles (e.g. FM-as-MF factor growth) that full-gradient
+    /// steps crawl out of; use per-example-SGD-scale step sizes.
+    Stochastic {
+        /// Stochastic updates applied per token visit.
+        samples: usize,
+    },
+}
+
+/// DS-FACTO engine configuration.
+#[derive(Debug, Clone)]
+pub struct NomadConfig {
+    /// Worker count P.
+    pub workers: usize,
+    /// Outer iterations T (each = one update pass + one recompute pass).
+    pub outer_iters: usize,
+    /// Learning-rate schedule.
+    pub eta: LrSchedule,
+    /// Seed for init and token dealing.
+    pub seed: u64,
+    /// Evaluate held-out metrics every this many outer iterations.
+    pub eval_every: usize,
+    /// Token medium.
+    pub transport: TransportKind,
+    /// Update-visit semantics.
+    pub update_mode: UpdateMode,
+    /// Columns carried per token (block granularity). 0 = auto heuristic
+    /// (`token::auto_block_cols`): wide models circulate column blocks so
+    /// per-visit dispatch overhead amortizes — the §Perf optimization that
+    /// makes realsim-scale models scale (EXPERIMENTS.md §Perf).
+    pub cols_per_token: usize,
+}
+
+impl Default for NomadConfig {
+    fn default() -> Self {
+        NomadConfig {
+            workers: 4,
+            outer_iters: 50,
+            // One outer iteration applies ~one 1/N-normalized gradient pass
+            // (see engine::Worker::update_visit), so the stable step size is
+            // batch-GD-scale, much larger than per-example SGD's.
+            eta: LrSchedule::Constant(0.5),
+            seed: 42,
+            eval_every: 1,
+            transport: TransportKind::Local,
+            update_mode: UpdateMode::MeanGradient,
+            cols_per_token: 0,
+        }
+    }
+}
+
+/// Trains an FM with DS-FACTO; the transport is built from the config.
+pub fn train(
+    train_ds: &Dataset,
+    test: Option<&Dataset>,
+    fm: &FmHyper,
+    cfg: &NomadConfig,
+) -> crate::Result<TrainOutput> {
+    train_with_stats(train_ds, test, fm, cfg).map(|(out, _)| out)
+}
+
+/// Like [`train`] but also returns engine counters.
+pub fn train_with_stats(
+    train_ds: &Dataset,
+    test: Option<&Dataset>,
+    fm: &FmHyper,
+    cfg: &NomadConfig,
+) -> crate::Result<(TrainOutput, EngineStats)> {
+    match cfg.transport {
+        TransportKind::Local => {
+            let t = LocalTransport::new(cfg.workers.max(1));
+            engine::run(train_ds, test, fm, cfg, &t)
+        }
+        TransportKind::SimNet(model) => {
+            let t = SimNetTransport::new(cfg.workers.max(1), model);
+            let out = engine::run(train_ds, test, fm, cfg, &*t);
+            t.shutdown();
+            out
+        }
+        TransportKind::Tcp => {
+            let t = crate::cluster::tcp::TcpTransport::new(cfg.workers.max(1))?;
+            let out = engine::run(train_ds, test, fm, cfg, &*t);
+            t.shutdown();
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::{libfm_train, LibfmConfig};
+    use crate::data::synth;
+    use crate::metrics::evaluate;
+
+    fn housing() -> Dataset {
+        synth::table2_dataset("housing", 1).unwrap()
+    }
+
+    #[test]
+    fn single_worker_converges() {
+        let ds = housing();
+        let fm = FmHyper {
+            k: 4,
+            ..Default::default()
+        };
+        let cfg = NomadConfig {
+            workers: 1,
+            outer_iters: 40,
+            eta: LrSchedule::Constant(0.5),
+            ..Default::default()
+        };
+        let out = train(&ds, None, &fm, &cfg).unwrap();
+        let first = out.trace.first().unwrap().objective;
+        let last = out.trace.last().unwrap().objective;
+        assert!(last < 0.5 * first, "{first} -> {last}");
+        assert_eq!(out.trace.len(), 41);
+    }
+
+    #[test]
+    fn four_workers_converge_to_libfm_quality() {
+        let ds = synth::table2_dataset("diabetes", 2).unwrap();
+        let (train_ds, test_ds) = ds.split(0.8, 3);
+        let fm = FmHyper {
+            k: 4,
+            ..Default::default()
+        };
+        let cfg = NomadConfig {
+            workers: 4,
+            outer_iters: 50,
+            eta: LrSchedule::Constant(0.5),
+            ..Default::default()
+        };
+        let out = train(&train_ds, Some(&test_ds), &fm, &cfg).unwrap();
+        let nomad_acc = evaluate(&out.model, &test_ds).accuracy;
+
+        let lcfg = LibfmConfig {
+            epochs: 30,
+            eta: LrSchedule::Constant(0.02),
+            ..Default::default()
+        };
+        let lout = libfm_train(&train_ds, Some(&test_ds), &fm, &lcfg);
+        let libfm_acc = evaluate(&lout.model, &test_ds).accuracy;
+        // Paper Fig. 5: DS-FACTO reaches the same quality as libFM.
+        assert!(
+            nomad_acc > libfm_acc - 0.05,
+            "nomad {nomad_acc} vs libfm {libfm_acc}"
+        );
+    }
+
+    #[test]
+    fn trace_is_complete_and_ordered() {
+        let ds = housing();
+        let fm = FmHyper::default();
+        let cfg = NomadConfig {
+            workers: 3,
+            outer_iters: 7,
+            ..Default::default()
+        };
+        let out = train(&ds, None, &fm, &cfg).unwrap();
+        assert_eq!(out.trace.len(), 8);
+        for (i, pt) in out.trace.iter().enumerate() {
+            assert_eq!(pt.iter, i);
+        }
+        assert!(out.trace.windows(2).all(|w| w[0].secs <= w[1].secs));
+    }
+
+    #[test]
+    fn stats_account_for_all_hops() {
+        let ds = housing();
+        let d = ds.d();
+        let fm = FmHyper::default();
+        let p = 3;
+        let t = 5;
+        let cfg = NomadConfig {
+            workers: p,
+            outer_iters: t,
+            ..Default::default()
+        };
+        let (_, stats) = train_with_stats(&ds, None, &fm, &cfg).unwrap();
+        // Hops: initial deal (ntok) + one send per visit per phase:
+        // ntok * P * 2 phases * T iters.
+        let ntok = (d + 1) as u64;
+        let expected = ntok + ntok * (p as u64) * 2 * (t as u64);
+        assert_eq!(stats.messages, expected);
+        // Update visits: every non-bias token visits every worker once per
+        // update pass (bias visits counted too).
+        assert_eq!(stats.update_visits, ntok * p as u64 * t as u64);
+    }
+
+    #[test]
+    fn simnet_transport_reaches_same_quality() {
+        let ds = housing();
+        let fm = FmHyper {
+            k: 4,
+            ..Default::default()
+        };
+        let model = NetModel {
+            latency: std::time::Duration::from_micros(50),
+            bandwidth_bps: 1e9,
+            workers_per_machine: 2,
+        };
+        let cfg = NomadConfig {
+            workers: 4,
+            outer_iters: 15,
+            eta: LrSchedule::Constant(0.5),
+            transport: TransportKind::SimNet(model),
+            ..Default::default()
+        };
+        let (out, stats) = train_with_stats(&ds, None, &fm, &cfg).unwrap();
+        assert!(out.trace.last().unwrap().objective < 0.6 * out.trace[0].objective);
+        assert!(stats.bytes > 0, "cross-machine hops must serialize");
+    }
+
+    #[test]
+    fn worker_count_exceeding_rows_is_safe() {
+        let spec = synth::SynthSpec {
+            n: 6,
+            ..synth::SynthSpec::table2("housing").unwrap()
+        };
+        let ds = synth::generate(&spec, 4).dataset;
+        let fm = FmHyper::default();
+        let cfg = NomadConfig {
+            workers: 8, // more workers than rows: some blocks are empty
+            outer_iters: 3,
+            ..Default::default()
+        };
+        let out = train(&ds, None, &fm, &cfg).unwrap();
+        assert_eq!(out.trace.len(), 4);
+    }
+
+    #[test]
+    fn stochastic_mode_converges() {
+        let ds = housing();
+        let fm = FmHyper {
+            k: 4,
+            ..Default::default()
+        };
+        let cfg = NomadConfig {
+            workers: 4,
+            outer_iters: 40,
+            eta: LrSchedule::Constant(0.02),
+            update_mode: UpdateMode::Stochastic { samples: 2 },
+            ..Default::default()
+        };
+        let out = train(&ds, None, &fm, &cfg).unwrap();
+        let first = out.trace.first().unwrap().objective;
+        let last = out.trace.last().unwrap().objective;
+        assert!(last < 0.7 * first, "stochastic mode: {first} -> {last}");
+    }
+
+    #[test]
+    fn block_tokens_match_single_column_quality() {
+        // Granularity must not change what is computed, only how it is
+        // batched: same mean-gradient pass either way.
+        let ds = housing();
+        let fm = FmHyper {
+            k: 4,
+            ..Default::default()
+        };
+        let run = |cols| {
+            let cfg = NomadConfig {
+                workers: 1, // deterministic schedule
+                outer_iters: 10,
+                eta: LrSchedule::Constant(0.5),
+                cols_per_token: cols,
+                ..Default::default()
+            };
+            train(&ds, None, &fm, &cfg).unwrap()
+        };
+        let single = run(1);
+        let blocked = run(5);
+        let (a, b) = (
+            single.trace.last().unwrap().objective,
+            blocked.trace.last().unwrap().objective,
+        );
+        assert!(
+            (a - b).abs() < 1e-6 * (1.0 + a.abs()),
+            "single-col {a} vs blocked {b}"
+        );
+    }
+
+    #[test]
+    fn block_token_count_accounting() {
+        let ds = housing(); // d = 13
+        let fm = FmHyper::default();
+        let cfg = NomadConfig {
+            workers: 2,
+            outer_iters: 3,
+            cols_per_token: 5, // 3 blocks + bias = 4 tokens
+            ..Default::default()
+        };
+        let (_, stats) = train_with_stats(&ds, None, &fm, &cfg).unwrap();
+        let ntok = 4u64;
+        assert_eq!(stats.messages, ntok + ntok * 2 * 2 * 3);
+    }
+
+    #[test]
+    fn deterministic_final_model_single_worker() {
+        // With P=1 there is no cross-worker nondeterminism at all.
+        let ds = housing();
+        let fm = FmHyper::default();
+        let cfg = NomadConfig {
+            workers: 1,
+            outer_iters: 4,
+            ..Default::default()
+        };
+        let a = train(&ds, None, &fm, &cfg).unwrap();
+        let b = train(&ds, None, &fm, &cfg).unwrap();
+        assert_eq!(a.model, b.model);
+    }
+}

@@ -1,0 +1,172 @@
+//! Parameter tokens: the unit of circulation in DS-FACTO.
+//!
+//! A token owns a **block of parameter columns** `{w_j, v_j : j in block}`
+//! (paper Fig. 3 circulates single columns; blocking is the granularity
+//! optimization NOMAD applies in practice — per-visit queue/dispatch
+//! overhead is paid once per *block* instead of once per column, which is
+//! what lets wide models like realsim scale; see EXPERIMENTS.md §Perf).
+//! Exactly one worker holds a token at any instant — this ownership
+//! invariant is what makes the engine lock-free on parameters. A special
+//! **bias token** carries `w0`.
+//!
+//! Each outer iteration a token makes two full ring passes:
+//! * [`Phase::Update`]   — each worker applies eqs. 12-13 against its row
+//!   block (eq. 11 for the bias token);
+//! * [`Phase::Recompute`] — each worker folds the token's (fresh) values
+//!   into its partial sums for the auxiliary variables G and A
+//!   (the paper's *incremental synchronization*, §4.2).
+//!
+//! After `P` visits in a phase the last visitor flips the token to the next
+//! phase (Update -> Recompute -> next iteration's Update).
+
+/// Block id of the bias token (carries `w0`).
+pub const BIAS: u32 = u32::MAX;
+
+/// Which ring pass the token is on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Parameter-update pass (paper Algorithm 1, lines 12-17).
+    Update,
+    /// G/A recomputation pass (Algorithm 1, lines 18-21).
+    Recompute,
+}
+
+/// A circulating block of parameter columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    /// Column-block id (block `b` covers columns `[b*C, min((b+1)*C, D))`
+    /// for block size C), or [`BIAS`].
+    pub j: u32,
+    /// Outer iteration the token is currently in.
+    pub iter: u32,
+    /// Current ring pass.
+    pub phase: Phase,
+    /// Completed worker visits in the current phase.
+    pub visits: u16,
+    /// Linear weights `w_j` for the block's columns (length = #cols;
+    /// length 1 holding `w0` for the bias token).
+    pub w: Box<[f32]>,
+    /// Factor rows `v_j`, row-major `#cols x K` (empty for bias).
+    pub v: Box<[f32]>,
+}
+
+impl Token {
+    /// True for the bias token.
+    #[inline]
+    pub fn is_bias(&self) -> bool {
+        self.j == BIAS
+    }
+
+    /// Number of columns this token carries.
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        if self.is_bias() {
+            0
+        } else {
+            self.w.len()
+        }
+    }
+
+    /// Total phase sequence number: tokens and workers advance through
+    /// `seq = 2*iter + (phase == Recompute)` in lockstep (+/- 1).
+    #[inline]
+    pub fn seq(&self) -> u64 {
+        2 * self.iter as u64
+            + match self.phase {
+                Phase::Update => 0,
+                Phase::Recompute => 1,
+            }
+    }
+
+    /// Advances to the next phase; returns true if a new iteration started.
+    pub fn flip(&mut self) -> bool {
+        self.visits = 0;
+        match self.phase {
+            Phase::Update => {
+                self.phase = Phase::Recompute;
+                false
+            }
+            Phase::Recompute => {
+                self.phase = Phase::Update;
+                self.iter += 1;
+                true
+            }
+        }
+    }
+}
+
+/// Block size heuristic: keep ~`TOKENS_PER_WORKER` tokens in flight per
+/// worker so the ring stays busy while per-visit dispatch overhead
+/// amortizes over many columns.
+pub fn auto_block_cols(d: usize, p: usize) -> usize {
+    const TOKENS_PER_WORKER: usize = 64;
+    (d / (p.max(1) * TOKENS_PER_WORKER)).max(1)
+}
+
+/// Number of circulating tokens (column blocks + bias) for a model with
+/// `d` columns at block size `c`.
+pub fn n_tokens(d: usize, c: usize) -> usize {
+    d.div_ceil(c.max(1)) + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Token {
+        Token {
+            j: 3,
+            iter: 0,
+            phase: Phase::Update,
+            visits: 0,
+            w: vec![0.0; 4].into_boxed_slice(),
+            v: vec![0.0; 8].into_boxed_slice(),
+        }
+    }
+
+    #[test]
+    fn seq_orders_phases() {
+        let mut t = tok();
+        assert_eq!(t.seq(), 0);
+        t.flip();
+        assert_eq!(t.seq(), 1);
+        assert_eq!(t.iter, 0);
+        let new_iter = t.flip();
+        assert!(new_iter);
+        assert_eq!(t.seq(), 2);
+        assert_eq!(t.iter, 1);
+        assert_eq!(t.phase, Phase::Update);
+    }
+
+    #[test]
+    fn flip_resets_visits() {
+        let mut t = tok();
+        t.visits = 7;
+        assert!(!t.flip());
+        assert_eq!(t.visits, 0);
+    }
+
+    #[test]
+    fn bias_token_detection() {
+        let mut t = tok();
+        assert!(!t.is_bias());
+        assert_eq!(t.ncols(), 4);
+        t.j = BIAS;
+        assert!(t.is_bias());
+        assert_eq!(t.ncols(), 0);
+    }
+
+    #[test]
+    fn auto_block_scales_with_width() {
+        assert_eq!(auto_block_cols(22, 4), 1);
+        assert_eq!(auto_block_cols(20_958, 8), 40);
+        assert!(auto_block_cols(1, 32) >= 1);
+    }
+
+    #[test]
+    fn token_counts() {
+        assert_eq!(n_tokens(10, 1), 11);
+        assert_eq!(n_tokens(10, 3), 5); // 4 blocks + bias
+        assert_eq!(n_tokens(10, 100), 2);
+    }
+}

@@ -1,0 +1,10 @@
+//! Optimizer substrates: learning-rate schedules, the canonical
+//! per-example FM SGD update (paper eqs. 11-13), and a DiFacto-style
+//! AdaGrad variant (frequency-adaptive regularization, the extension the
+//! related-work section calls out).
+
+pub mod schedule;
+pub mod sgd;
+
+pub use schedule::LrSchedule;
+pub use sgd::{sgd_update_example, AdaGradState};

@@ -1,0 +1,99 @@
+//! Learning-rate schedules.
+
+/// Learning-rate schedule: eta(t) for outer iteration t.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// Constant eta.
+    Constant(f32),
+    /// eta0 / (1 + decay * t) — the classic Robbins-Monro style decay.
+    InvDecay { eta0: f32, decay: f32 },
+    /// eta0 * gamma^t — exponential decay.
+    Exponential { eta0: f32, gamma: f32 },
+}
+
+impl LrSchedule {
+    /// The rate at outer iteration `t` (0-based).
+    pub fn at(&self, t: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant(eta) => eta,
+            LrSchedule::InvDecay { eta0, decay } => eta0 / (1.0 + decay * t as f32),
+            LrSchedule::Exponential { eta0, gamma } => eta0 * gamma.powi(t as i32),
+        }
+    }
+
+    /// Parses `"constant:0.05"`, `"inv:0.1,0.01"`, `"exp:0.1,0.99"`.
+    pub fn parse(s: &str) -> anyhow::Result<LrSchedule> {
+        let (kind, rest) = s.split_once(':').unwrap_or(("constant", s));
+        let nums: Vec<f32> = rest
+            .split(',')
+            .map(|x| x.trim().parse::<f32>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad schedule {s:?}: {e}"))?;
+        match (kind, nums.as_slice()) {
+            ("constant", [eta]) => Ok(LrSchedule::Constant(*eta)),
+            ("inv", [eta0, decay]) => Ok(LrSchedule::InvDecay {
+                eta0: *eta0,
+                decay: *decay,
+            }),
+            ("exp", [eta0, gamma]) => Ok(LrSchedule::Exponential {
+                eta0: *eta0,
+                gamma: *gamma,
+            }),
+            _ => anyhow::bail!("bad schedule spec {s:?}"),
+        }
+    }
+}
+
+impl Default for LrSchedule {
+    fn default() -> Self {
+        LrSchedule::Constant(0.02)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant(0.1);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(1000), 0.1);
+    }
+
+    #[test]
+    fn inv_decay_decreases() {
+        let s = LrSchedule::InvDecay {
+            eta0: 1.0,
+            decay: 1.0,
+        };
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(1), 0.5);
+        assert_eq!(s.at(3), 0.25);
+    }
+
+    #[test]
+    fn exponential_decreases() {
+        let s = LrSchedule::Exponential {
+            eta0: 1.0,
+            gamma: 0.5,
+        };
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(2), 0.25);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(LrSchedule::parse("constant:0.2").unwrap(), LrSchedule::Constant(0.2));
+        assert_eq!(LrSchedule::parse("0.2").unwrap(), LrSchedule::Constant(0.2));
+        assert_eq!(
+            LrSchedule::parse("inv:0.1,0.5").unwrap(),
+            LrSchedule::InvDecay {
+                eta0: 0.1,
+                decay: 0.5
+            }
+        );
+        assert!(LrSchedule::parse("warmup:1").is_err());
+        assert!(LrSchedule::parse("inv:0.1").is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. One line per artifact:
+//!
+//! ```text
+//! # name entry task B D K filename
+//! diabetes score classification 256 8 4 diabetes_score.hlo.txt
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Task;
+
+/// One manifest row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// `score` | `grad` | `step` | `score_aux`.
+    pub entry: String,
+    pub task: Task,
+    /// Fixed batch size the artifact is specialized for.
+    pub b: usize,
+    pub d: usize,
+    pub k: usize,
+    pub filename: String,
+}
+
+/// Parsed manifest plus its directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    dir: PathBuf,
+    entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Reads `<dir>/manifest.txt`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        let entries = Self::parse(&text)?;
+        Ok(Manifest { dir, entries })
+    }
+
+    /// Parses manifest text.
+    pub fn parse(text: &str) -> Result<Vec<ArtifactEntry>> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 7 {
+                bail!("manifest line {}: want 7 fields, got {}", lineno + 1, parts.len());
+            }
+            entries.push(ArtifactEntry {
+                name: parts[0].to_string(),
+                entry: parts[1].to_string(),
+                task: Task::parse(parts[2])
+                    .with_context(|| format!("manifest line {}", lineno + 1))?,
+                b: parts[3].parse().context("B")?,
+                d: parts[4].parse().context("D")?,
+                k: parts[5].parse().context("K")?,
+                filename: parts[6].to_string(),
+            });
+        }
+        Ok(entries)
+    }
+
+    /// The artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// All rows.
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Finds a row by dataset name and entry point.
+    pub fn find(&self, name: &str, entry: &str) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name && e.entry == entry)
+    }
+
+    /// All dataset names present.
+    pub fn names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.entries.iter().map(|e| e.name.as_str()).collect();
+        names.dedup();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# name entry task B D K filename
+tiny_reg score regression 8 16 4 tiny_reg_score.hlo.txt
+tiny_reg grad regression 8 16 4 tiny_reg_grad.hlo.txt
+diabetes score classification 256 8 4 diabetes_score.hlo.txt
+";
+
+    #[test]
+    fn parses_rows() {
+        let rows = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].name, "tiny_reg");
+        assert_eq!(rows[0].task, Task::Regression);
+        assert_eq!(rows[2].b, 256);
+        assert_eq!(rows[2].d, 8);
+    }
+
+    #[test]
+    fn find_by_name_and_entry() {
+        let m = Manifest {
+            dir: PathBuf::from("/tmp"),
+            entries: Manifest::parse(SAMPLE).unwrap(),
+        };
+        assert!(m.find("tiny_reg", "grad").is_some());
+        assert!(m.find("tiny_reg", "step").is_none());
+        assert!(m.find("nope", "score").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("a b c\n").is_err());
+        assert!(Manifest::parse("a score bad-task 1 2 3 f.txt\n").is_err());
+        assert!(Manifest::parse("a score regression x 2 3 f.txt\n").is_err());
+    }
+
+    #[test]
+    fn load_errors_on_missing_dir() {
+        assert!(Manifest::load("/definitely/not/here").is_err());
+    }
+}

@@ -1,0 +1,221 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place Python's output touches the request path — as
+//! pre-compiled XLA executables. Interchange is HLO *text* (see aot.py /
+//! DESIGN.md §3 for why serialized protos are rejected by xla_extension
+//! 0.5.1).
+//!
+//! Entry points per dataset shape (from `artifacts/manifest.txt`):
+//! * `score` — `(w0, w[D], V[D,K], X[B,D]) -> (f[B],)`
+//! * `grad`  — `(w0, w, V, X, y[B]) -> (g0, gw[D], gV[D,K], loss)`
+//! * `step`  — `(w0, w, V, X, y, eta, lw, lv) -> (w0', w', V', loss)`
+
+pub mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest};
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::data::{Dataset, Task};
+use crate::fm::FmModel;
+
+/// A compiled FM entry point bound to a fixed (B, D, K) shape.
+pub struct FmExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Manifest row this executable was compiled from.
+    pub spec: ArtifactEntry,
+}
+
+/// The PJRT client plus the artifact manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Creates a CPU PJRT client and reads the manifest in `dir`.
+    pub fn new<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, manifest })
+    }
+
+    /// True when the artifact directory has a manifest (used by callers
+    /// that fall back to the pure-Rust scorer).
+    pub fn available<P: AsRef<Path>>(dir: P) -> bool {
+        dir.as_ref().join("manifest.txt").exists()
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Platform string (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Loads + compiles one entry point.
+    pub fn load(&self, name: &str, entry: &str) -> Result<FmExecutable> {
+        let spec = self
+            .manifest
+            .find(name, entry)
+            .with_context(|| format!("artifact {name}/{entry} not in manifest"))?
+            .clone();
+        let path = self.manifest.dir().join(&spec.filename);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}/{entry}"))?;
+        Ok(FmExecutable { exe, spec })
+    }
+}
+
+fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+fn lit_vec(xs: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(xs).reshape(dims)?)
+}
+
+impl FmExecutable {
+    /// Batch size the artifact is specialized for.
+    pub fn batch(&self) -> usize {
+        self.spec.b
+    }
+
+    /// Scores one dense batch `x` (row-major `B x D`). Returns `f[B]`.
+    pub fn score_batch(&self, model: &FmModel, x: &[f32]) -> Result<Vec<f32>> {
+        let (b, d, k) = (self.spec.b, self.spec.d, self.spec.k);
+        anyhow::ensure!(self.spec.entry == "score", "not a score artifact");
+        anyhow::ensure!(model.d == d && model.k == k, "model/artifact shape mismatch");
+        anyhow::ensure!(x.len() == b * d, "batch buffer size");
+        let inputs = [
+            lit_scalar(model.w0),
+            lit_vec(&model.w, &[d as i64])?,
+            lit_vec(&model.v, &[d as i64, k as i64])?,
+            lit_vec(x, &[b as i64, d as i64])?,
+        ];
+        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let f = result.to_tuple1()?;
+        Ok(f.to_vec::<f32>()?)
+    }
+
+    /// Full-batch gradient: returns `(g0, gw, gV, mean_loss)`.
+    pub fn grad_batch(
+        &self,
+        model: &FmModel,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<(f32, Vec<f32>, Vec<f32>, f32)> {
+        let (b, d, k) = (self.spec.b, self.spec.d, self.spec.k);
+        anyhow::ensure!(self.spec.entry == "grad", "not a grad artifact");
+        anyhow::ensure!(x.len() == b * d && y.len() == b, "batch buffer size");
+        let inputs = [
+            lit_scalar(model.w0),
+            lit_vec(&model.w, &[d as i64])?,
+            lit_vec(&model.v, &[d as i64, k as i64])?,
+            lit_vec(x, &[b as i64, d as i64])?,
+            lit_vec(y, &[b as i64])?,
+        ];
+        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let (g0, gw, gv, loss) = result.to_tuple4()?;
+        Ok((
+            g0.get_first_element::<f32>()?,
+            gw.to_vec::<f32>()?,
+            gv.to_vec::<f32>()?,
+            loss.get_first_element::<f32>()?,
+        ))
+    }
+
+    /// One dense-minibatch SGD step; updates `model` in place, returns the
+    /// pre-step batch loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_batch(
+        &self,
+        model: &mut FmModel,
+        x: &[f32],
+        y: &[f32],
+        eta: f32,
+        lambda_w: f32,
+        lambda_v: f32,
+    ) -> Result<f32> {
+        let (b, d, k) = (self.spec.b, self.spec.d, self.spec.k);
+        anyhow::ensure!(self.spec.entry == "step", "not a step artifact");
+        anyhow::ensure!(x.len() == b * d && y.len() == b, "batch buffer size");
+        let inputs = [
+            lit_scalar(model.w0),
+            lit_vec(&model.w, &[d as i64])?,
+            lit_vec(&model.v, &[d as i64, k as i64])?,
+            lit_vec(x, &[b as i64, d as i64])?,
+            lit_vec(y, &[b as i64])?,
+            lit_scalar(eta),
+            lit_scalar(lambda_w),
+            lit_scalar(lambda_v),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let (w0n, wn, vn, loss) = result.to_tuple4()?;
+        model.w0 = w0n.get_first_element::<f32>()?;
+        model.w = wn.to_vec::<f32>()?;
+        model.v = vn.to_vec::<f32>()?;
+        Ok(loss.get_first_element::<f32>()?)
+    }
+
+    /// Scores an entire dataset through fixed-size padded batches.
+    /// Returns one score per example (padding rows dropped).
+    pub fn score_dataset(&self, model: &FmModel, ds: &Dataset) -> Result<Vec<f32>> {
+        let (b, d) = (self.spec.b, self.spec.d);
+        anyhow::ensure!(ds.d() == d, "dataset d {} != artifact d {d}", ds.d());
+        let mut xbuf = vec![0f32; b * d];
+        let mut out = Vec::with_capacity(ds.n());
+        let mut start = 0;
+        while start < ds.n() {
+            let real = ds.densify_batch(start, b, &mut xbuf);
+            let scores = self.score_batch(model, &xbuf)?;
+            out.extend_from_slice(&scores[..real]);
+            start += b;
+        }
+        Ok(out)
+    }
+}
+
+/// Maps a Table-2 dataset name + task to its manifest artifact name.
+pub fn artifact_name_for(ds: &Dataset) -> String {
+    // Synthetic twins and real files use the dataset name directly when it
+    // matches a manifest row; the `tiny_*` artifacts serve tests.
+    match ds.task {
+        Task::Regression => ds.name.split('-').next().unwrap_or("tiny_reg").to_string(),
+        Task::Classification => ds.name.split('-').next().unwrap_or("tiny_clf").to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Compile-light tests only; executing artifacts requires `make
+    // artifacts` and is covered by rust/tests/runtime_integration.rs.
+
+    #[test]
+    fn availability_check() {
+        assert!(!Runtime::available("/nonexistent/dir"));
+    }
+
+    #[test]
+    fn artifact_name_strips_split_suffix() {
+        let ds = crate::data::synth::table2_dataset("housing", 1).unwrap();
+        let (train, test) = ds.split(0.8, 2);
+        assert_eq!(artifact_name_for(&train), "housing");
+        assert_eq!(artifact_name_for(&test), "housing");
+    }
+}

@@ -1,0 +1,87 @@
+//! Bench-harness support (the offline crate set has no criterion): timing
+//! loops with warmup, ns/op reporting, and table printing shared by the
+//! `rust/benches/*` targets.
+
+use crate::util::stats::Summary;
+use crate::util::timer::Stopwatch;
+
+/// Times `f` for `iters` iterations after `warmup` iterations; returns
+/// per-iteration seconds samples.
+pub fn time_iters(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.secs());
+    }
+    samples
+}
+
+/// Runs a micro-benchmark: repeatedly calls `f` in batches sized so each
+/// sample takes >= `min_batch_secs`, reporting ns/op.
+pub fn bench_ns_per_op(name: &str, samples: usize, mut f: impl FnMut() -> u64) -> f64 {
+    // Calibrate batch size.
+    let mut batch = 1u64;
+    loop {
+        let sw = Stopwatch::start();
+        let mut ops = 0u64;
+        for _ in 0..batch {
+            ops += f();
+        }
+        let secs = sw.secs();
+        if secs >= 0.01 || batch >= 1 << 24 {
+            let _ = ops;
+            break;
+        }
+        batch *= 4;
+    }
+    let mut per_op = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let sw = Stopwatch::start();
+        let mut ops = 0u64;
+        for _ in 0..batch {
+            ops += f();
+        }
+        per_op.push(sw.secs() * 1e9 / ops.max(1) as f64);
+    }
+    let s = Summary::of(&per_op);
+    println!("{name:<44} {:>10.1} ns/op  (p50 {:>9.1}, p95 {:>9.1}, n={})", s.mean, s.p50, s.p95, s.n);
+    s.p50
+}
+
+/// Prints a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Formats a ratio as a "who wins" string.
+pub fn ratio_str(a: f64, b: f64) -> String {
+    if a <= b {
+        format!("{:.2}x faster", b / a.max(1e-12))
+    } else {
+        format!("{:.2}x slower", a / b.max(1e-12))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_iters_returns_samples() {
+        let s = time_iters(1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.len(), 5);
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn ratio_formatting() {
+        assert!(ratio_str(1.0, 2.0).contains("faster"));
+        assert!(ratio_str(2.0, 1.0).contains("slower"));
+    }
+}

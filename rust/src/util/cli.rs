@@ -1,0 +1,220 @@
+//! A small GNU-style argument parser (`--key value`, `--key=value`,
+//! `--flag`, positionals) — the offline crate set has no `clap`.
+//!
+//! Typed lookups parse on access and report friendly errors; unknown-flag
+//! detection is the caller's choice via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, Vec<String>>,
+    positionals: Vec<String>,
+    consumed: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parses an iterator of raw arguments (without argv[0]).
+    pub fn parse<I, S>(raw: I) -> Result<Self>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().map(Into::into).peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` ends flag parsing.
+                    args.positionals.extend(iter);
+                    break;
+                }
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let value = match inline {
+                    Some(v) => Some(v),
+                    // A following token that is not itself a flag is the value.
+                    None => match iter.peek() {
+                        Some(next) if !next.starts_with("--") => iter.next(),
+                        _ => None,
+                    },
+                };
+                args.flags
+                    .entry(key)
+                    .or_default()
+                    .push(value.unwrap_or_default());
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parses the process arguments.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Positional arguments (in order).
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// True if `--key` was given (with or without a value).
+    pub fn has(&mut self, key: &str) -> bool {
+        let present = self.flags.contains_key(key);
+        if present {
+            self.consumed.insert(key.to_string());
+        }
+        present
+    }
+
+    /// Raw string value of `--key` (last occurrence wins).
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        let v = self.flags.get(key).and_then(|vs| vs.last()).cloned();
+        if v.is_some() {
+            self.consumed.insert(key.to_string());
+        }
+        v.filter(|s| !s.is_empty())
+    }
+
+    /// Typed value of `--key`, or `default` when absent.
+    pub fn get_or<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key} {raw:?}: {e}")),
+        }
+    }
+
+    /// Typed value of a required `--key`.
+    pub fn require<T: std::str::FromStr>(&mut self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(key)
+            .with_context(|| format!("missing required --{key}"))?;
+        raw.parse::<T>()
+            .map_err(|e| anyhow::anyhow!("--{key} {raw:?}: {e}"))
+    }
+
+    /// All values given for a repeatable `--key`.
+    pub fn get_all(&mut self, key: &str) -> Vec<String> {
+        if self.flags.contains_key(key) {
+            self.consumed.insert(key.to_string());
+        }
+        self.flags.get(key).cloned().unwrap_or_default()
+    }
+
+    /// Comma-separated list value (`--workers 1,2,4`).
+    pub fn get_list<T: std::str::FromStr>(&mut self, key: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(raw) => raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse::<T>()
+                        .map_err(|e| anyhow::anyhow!("--{key} item {s:?}: {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Errors on any flag that was never consumed — catches typos.
+    pub fn finish(&self) -> Result<()> {
+        let unknown: Vec<_> = self
+            .flags
+            .keys()
+            .filter(|k| !self.consumed.contains(*k))
+            .cloned()
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown flag(s): {}", unknown.join(", "));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().copied()).unwrap()
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let mut a = parse(&["--eta", "0.1", "--quiet", "--k=8", "train"]);
+        assert_eq!(a.get_or("eta", 0.0).unwrap(), 0.1);
+        assert!(a.has("quiet"));
+        assert_eq!(a.get_or("k", 0usize).unwrap(), 8);
+        assert_eq!(a.positionals(), &["train".to_string()]);
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let mut a = parse(&["--p", "1", "--p", "2"]);
+        assert_eq!(a.get_or("p", 0).unwrap(), 2);
+        assert_eq!(a.get_all("p"), vec!["1", "2"]);
+    }
+
+    #[test]
+    fn required_missing_errors() {
+        let mut a = parse(&[]);
+        assert!(a.require::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn bad_parse_reports_key() {
+        let mut a = parse(&["--n", "abc"]);
+        let err = a.require::<usize>("n").unwrap_err().to_string();
+        assert!(err.contains("--n"), "{err}");
+    }
+
+    #[test]
+    fn lists() {
+        let mut a = parse(&["--workers", "1,2,4,8"]);
+        assert_eq!(a.get_list("workers", &[1]).unwrap(), vec![1, 2, 4, 8]);
+        let mut b = parse(&[]);
+        assert_eq!(b.get_list("workers", &[3]).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn double_dash_stops_flags() {
+        let mut a = parse(&["--x", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.get_or("x", 0).unwrap(), 1);
+        assert_eq!(a.positionals(), &["--not-a-flag".to_string()]);
+    }
+
+    #[test]
+    fn finish_flags_unknown() {
+        let mut a = parse(&["--known", "1", "--typo", "2"]);
+        let _ = a.get_or("known", 0).unwrap();
+        let err = a.finish().unwrap_err().to_string();
+        assert!(err.contains("typo"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_has_no_value() {
+        let mut a = parse(&["--quiet", "--eta", "0.5"]);
+        assert!(a.has("quiet"));
+        assert_eq!(a.get_or("eta", 0.0).unwrap(), 0.5);
+    }
+}

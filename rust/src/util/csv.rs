@@ -1,0 +1,87 @@
+//! CSV trace writer for convergence curves and bench series.
+//!
+//! Every experiment writes its (iter, time, objective, metric, ...) rows
+//! through this so that Fig 4/5/6 series can be re-plotted from disk.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Creates the file (and parent dirs) and writes the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            cols: header.len(),
+        })
+    }
+
+    /// Writes one row; panics in debug builds if the arity is wrong.
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "csv arity mismatch");
+        writeln!(self.out, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    /// Convenience: writes a row of display-able values.
+    pub fn rowd(&mut self, fields: &[&dyn std::fmt::Display]) -> Result<()> {
+        let strs: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&strs)
+    }
+
+    /// Flushes buffered rows to disk.
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Parses a simple CSV file (no quoting) into header + rows.
+pub fn read_csv<P: AsRef<Path>>(path: P) -> Result<(Vec<String>, Vec<Vec<String>>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .map(|h| h.split(',').map(str::to_string).collect())
+        .unwrap_or_default();
+    let rows = lines
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.split(',').map(str::to_string).collect())
+        .collect();
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("dsfacto_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["iter", "loss"]).unwrap();
+            w.rowd(&[&0, &0.5]).unwrap();
+            w.rowd(&[&1, &0.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let (hdr, rows) = read_csv(&path).unwrap();
+        assert_eq!(hdr, vec!["iter", "loss"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], vec!["1", "0.25"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,60 @@
+//! Small self-contained substrates: RNG, CLI parsing, timing, CSV traces,
+//! statistics helpers and a miniature property-testing harness.
+//!
+//! The offline crate universe for this build contains none of `rand`,
+//! `clap`, `criterion` or `proptest`, so the pieces of each that DS-FACTO
+//! needs are implemented here from scratch (and tested).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Formats a byte count for logs (`1.5 GiB` style).
+pub fn human_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Formats seconds for logs (`1m23.4s` style).
+pub fn human_secs(s: f64) -> String {
+    if s < 60.0 {
+        format!("{s:.2}s")
+    } else if s < 3600.0 {
+        format!("{}m{:.1}s", (s / 60.0) as u64, s % 60.0)
+    } else {
+        format!("{}h{}m", (s / 3600.0) as u64, ((s % 3600.0) / 60.0) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(human_secs(1.5), "1.50s");
+        assert_eq!(human_secs(75.0), "1m15.0s");
+        assert_eq!(human_secs(3700.0), "1h1m");
+    }
+}

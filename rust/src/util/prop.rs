@@ -1,0 +1,111 @@
+//! A miniature property-testing harness (the offline crate set has no
+//! `proptest`/`quickcheck`).
+//!
+//! `forall` runs a property over generated cases; on failure it reports the
+//! case index and the seed that reproduces it, so failures are replayable
+//! with `PROP_SEED=<seed> cargo test <name>`.
+
+use crate::util::rng::Pcg64;
+
+/// Number of cases per property (overridable via `PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Base seed (overridable via `PROP_SEED` for replay).
+pub fn base_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xd5fac70)
+}
+
+/// Runs `prop` on `cases` inputs drawn by `gen`. Panics with the seed on the
+/// first failing case.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Pcg64::seeded(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case} (replay with PROP_SEED={seed}): \
+                 input = {input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result`, so assertion context
+/// can carry an error message.
+pub fn forall_res<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Pcg64::seeded(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case} (replay with PROP_SEED={seed}): {msg}\n\
+                 input = {input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            "reverse twice is identity",
+            32,
+            |rng| {
+                let n = rng.below_usize(20);
+                (0..n).map(|_| rng.next_u32()).collect::<Vec<_>>()
+            },
+            |xs| {
+                let mut r = xs.clone();
+                r.reverse();
+                r.reverse();
+                r == *xs
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "PROP_SEED")]
+    fn failing_property_reports_seed() {
+        forall("always fails", 4, |rng| rng.next_u32(), |_| false);
+    }
+
+    #[test]
+    fn forall_res_reports_message() {
+        let r = std::panic::catch_unwind(|| {
+            forall_res(
+                "msg prop",
+                2,
+                |rng| rng.below(10),
+                |_| Err("custom context".to_string()),
+            )
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("custom context"));
+    }
+}

@@ -1,0 +1,228 @@
+//! PCG64 (DXSM) pseudo-random generator plus the sampling helpers the
+//! trainers need (normals, permutations, Bernoulli draws).
+//!
+//! The offline crate set ships `rand_core` but not `rand`, so this is a
+//! from-scratch implementation of the PCG-DXSM generator (O'Neill 2014;
+//! the variant numpy's default generator uses). Deterministic across
+//! platforms — every experiment in EXPERIMENTS.md records its seed.
+
+/// A 128-bit-state PCG64-DXSM generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const MUL: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Creates a generator from a seed and a stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        rng.state = rng.state.wrapping_add(rng.inc).wrapping_add(seed as u128);
+        rng.step();
+        rng
+    }
+
+    /// Creates a generator from a seed on the default stream.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e39cb94b95bdb)
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
+    }
+
+    /// Next uniform u64 (PCG-DXSM output permutation).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let state = self.state;
+        self.step();
+        let mut hi = (state >> 64) as u64;
+        let lo = (state as u64) | 1;
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(0xda942042e4dd58b5);
+        hi ^= hi >> 48;
+        hi.wrapping_mul(lo)
+    }
+
+    /// Next uniform u32.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) via Lemire rejection (unbiased).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        // Draw until u1 > 0 to avoid ln(0).
+        let mut u1 = self.f64();
+        while u1 <= f64::MIN_POSITIVE {
+            u1 = self.f64();
+        }
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean / stddev, as f32.
+    pub fn normal32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Bernoulli draw.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Samples `k` distinct indices from 0..n (k <= n), unordered.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // Floyd's algorithm: O(k) expected.
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in n - k..n {
+            let t = self.below_usize(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Pcg64::seeded(3);
+        let n = 20_000;
+        let s: f64 = (0..n).map(|_| r.f64()).sum();
+        assert!((s / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Pcg64::seeded(4);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seeded(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = Pcg64::seeded(6);
+        let p = r.permutation(100);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Pcg64::seeded(7);
+        for _ in 0..50 {
+            let s = r.sample_indices(20, 8);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), 8);
+            assert!(s.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = Pcg64::new(9, 0);
+        let mut b = Pcg64::new(9, 1);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+}

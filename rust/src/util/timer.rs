@@ -1,0 +1,109 @@
+//! Wall-clock timing helpers used by the trainers and the bench harness.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Starts a new stopwatch.
+    pub fn start() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed nanoseconds since start.
+    pub fn nanos(&self) -> u128 {
+        self.start.elapsed().as_nanos()
+    }
+
+    /// Resets the stopwatch and returns the elapsed seconds.
+    pub fn lap(&mut self) -> f64 {
+        let s = self.secs();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Times a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (out, sw.secs())
+}
+
+/// CPU time consumed by the *calling thread*, in seconds.
+///
+/// Unlike wall-clock, this excludes blocking waits and preemption by other
+/// threads — the right basis for per-worker busy time on machines with
+/// fewer cores than workers (the Fig. 6 simulated-makespan substitution).
+pub fn thread_cpu_secs() -> f64 {
+    let mut ts = libc::timespec {
+        tv_sec: 0,
+        tv_nsec: 0,
+    };
+    // SAFETY: ts is a valid out-pointer; CLOCK_THREAD_CPUTIME_ID is
+    // supported on all Linux targets this crate builds for.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    if rc != 0 {
+        return 0.0;
+    }
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.secs() >= 0.004);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        let first = sw.lap();
+        assert!(first >= 0.002);
+        assert!(sw.secs() < first);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn thread_cpu_time_advances_with_work() {
+        let t0 = thread_cpu_secs();
+        let mut acc = 0u64;
+        for i in 0..2_000_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        let t1 = thread_cpu_secs();
+        assert!(t1 > t0, "{t0} -> {t1}");
+    }
+
+    #[test]
+    fn thread_cpu_time_ignores_sleep() {
+        let t0 = thread_cpu_secs();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let t1 = thread_cpu_secs();
+        assert!(t1 - t0 < 0.02, "sleep must not count as CPU time: {}", t1 - t0);
+    }
+}

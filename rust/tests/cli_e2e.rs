@@ -1,0 +1,176 @@
+//! End-to-end CLI tests: drive the `dsfacto` binary as a user would.
+
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_dsfacto")
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn dsfacto");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["train", "evaluate", "inspect", "datasets", "artifacts"] {
+        assert!(text.contains(cmd), "help missing {cmd}: {text}");
+    }
+}
+
+#[test]
+fn datasets_prints_table2() {
+    let (ok, text) = run(&["datasets"]);
+    assert!(ok, "{text}");
+    for name in ["diabetes", "housing", "ijcnn1", "realsim"] {
+        assert!(text.contains(name), "{text}");
+    }
+    assert!(text.contains("20958"), "realsim D missing: {text}");
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"), "{text}");
+}
+
+#[test]
+fn unknown_flag_fails_cleanly() {
+    let (ok, text) = run(&["train", "--dataset", "housing", "--not-a-flag", "1"]);
+    assert!(!ok);
+    assert!(text.contains("not-a-flag"), "{text}");
+}
+
+#[test]
+fn train_save_inspect_evaluate_roundtrip() {
+    let dir = std::env::temp_dir().join("dsfacto_cli_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("m.dsfm");
+    let model_s = model.to_str().unwrap();
+    let trace = dir.join("trace.csv");
+
+    let (ok, text) = run(&[
+        "train",
+        "--dataset",
+        "housing",
+        "--trainer",
+        "nomad",
+        "--workers",
+        "2",
+        "--outer-iters",
+        "10",
+        "--eta",
+        "constant:0.5",
+        "--seed",
+        "7",
+        "--trace",
+        trace.to_str().unwrap(),
+        "--save-model",
+        model_s,
+        "--quiet",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("test RMSE"), "{text}");
+    assert!(model.exists());
+    assert!(trace.exists());
+
+    let (ok, text) = run(&["inspect", "--model", model_s]);
+    assert!(ok, "{text}");
+    assert!(text.contains("d=13 k=4"), "{text}");
+
+    let (ok, text) = run(&["evaluate", "--model", model_s, "--dataset", "housing", "--seed", "7"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("rmse="), "{text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_with_config_file() {
+    let dir = std::env::temp_dir().join("dsfacto_cli_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("exp.conf");
+    std::fs::write(
+        &cfg,
+        "dataset = housing\ntrainer = libfm\nouter_iters = 5\neta = constant:0.02\nseed = 3\n",
+    )
+    .unwrap();
+    let (ok, text) = run(&["train", "--config", cfg.to_str().unwrap(), "--quiet"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("trained libfm"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn artifacts_listing_when_built() {
+    let manifest = format!("{}/artifacts/manifest.txt", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&manifest).exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (ok, text) = run(&["artifacts"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("realsim"), "{text}");
+    assert!(text.contains("PJRT platform"), "{text}");
+}
+
+#[test]
+fn train_on_libsvm_file_dataset() {
+    // Full user flow with a real LIBSVM file on disk: write the housing
+    // twin out in LIBSVM format, then train on it via --dataset <path>.
+    let dir = std::env::temp_dir().join("dsfacto_cli_libsvm");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("housing.svm");
+    let ds = dsfacto::data::synth::table2_dataset("housing", 17).unwrap();
+    dsfacto::data::libsvm::save(&ds, &path).unwrap();
+
+    let (ok, text) = run(&[
+        "train",
+        "--dataset",
+        path.to_str().unwrap(),
+        "--dataset-task",
+        "regression",
+        "--trainer",
+        "libfm",
+        "--outer-iters",
+        "5",
+        "--eta",
+        "constant:0.02",
+        "--quiet",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("test RMSE"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tcp_transport_from_cli() {
+    let (ok, text) = run(&[
+        "train",
+        "--dataset",
+        "housing",
+        "--trainer",
+        "nomad",
+        "--workers",
+        "2",
+        "--outer-iters",
+        "3",
+        "--transport",
+        "tcp",
+        "--quiet",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("bytes"), "{text}");
+}

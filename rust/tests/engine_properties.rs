@@ -1,0 +1,217 @@
+//! Property tests on the DS-FACTO engine's protocol invariants
+//! (see `nomad::engine` docs): token conservation, visit accounting,
+//! convergence sanity across worker counts / transports / shapes.
+
+use dsfacto::data::{synth, Dataset, Task};
+use dsfacto::fm::FmHyper;
+use dsfacto::nomad::{train_with_stats, NomadConfig, TransportKind};
+use dsfacto::optim::LrSchedule;
+use dsfacto::util::prop::{default_cases, forall_res};
+
+fn small_dataset(rng: &mut dsfacto::util::rng::Pcg64) -> Dataset {
+    let task = if rng.chance(0.5) {
+        Task::Regression
+    } else {
+        Task::Classification
+    };
+    let spec = synth::SynthSpec {
+        name: "prop".into(),
+        task,
+        n: 8 + rng.below_usize(60),
+        d: 1 + rng.below_usize(24),
+        k: 1 + rng.below_usize(6),
+        density: if rng.chance(0.5) { 1.0 } else { 0.4 },
+        factor_scale: 0.3,
+        noise: 0.3,
+        skew: 0.0,
+    };
+    synth::generate(&spec, rng.next_u64()).dataset
+}
+
+/// Conservation + accounting: for arbitrary (dataset, P, T) the engine
+/// returns a complete model and the exact expected hop/visit counts.
+#[test]
+fn prop_token_conservation_and_accounting() {
+    forall_res(
+        "token conservation across random configs",
+        default_cases().min(24),
+        |rng| {
+            let ds = small_dataset(rng);
+            let p = 1 + rng.below_usize(6);
+            let t = 1 + rng.below_usize(4);
+            let seed = rng.next_u64();
+            (ds, p, t, seed)
+        },
+        |(ds, p, t, seed)| {
+            let fm = FmHyper {
+                k: ds.rows.n_cols().min(4).max(1),
+                ..Default::default()
+            };
+            let cfg = NomadConfig {
+                workers: *p,
+                outer_iters: *t,
+                eta: LrSchedule::Constant(0.1),
+                seed: *seed,
+                eval_every: usize::MAX, // no eval: pure engine exercise
+                transport: TransportKind::Local,
+                update_mode: dsfacto::nomad::UpdateMode::MeanGradient,
+                cols_per_token: 1,
+            };
+            let (out, stats) =
+                train_with_stats(ds, None, &fm, &cfg).map_err(|e| format!("{e:#}"))?;
+            let ntok = (ds.d() + 1) as u64;
+            let expect_msgs = ntok + ntok * (*p as u64) * 2 * (*t as u64);
+            if stats.messages != expect_msgs {
+                return Err(format!(
+                    "messages {} != expected {expect_msgs} (conservation violated)",
+                    stats.messages
+                ));
+            }
+            if stats.update_visits != ntok * *p as u64 * *t as u64 {
+                return Err(format!("update visits {}", stats.update_visits));
+            }
+            // Model must be complete and finite.
+            if out.model.d != ds.d() {
+                return Err("model dimension mismatch".into());
+            }
+            if !out.model.w0.is_finite()
+                || out.model.w.iter().any(|x| !x.is_finite())
+                || out.model.v.iter().any(|x| !x.is_finite())
+            {
+                return Err("non-finite parameters".into());
+            }
+            // Trace covers every iteration exactly once, in order.
+            if out.trace.len() != *t + 1 {
+                return Err(format!("trace len {} != {}", out.trace.len(), t + 1));
+            }
+            for (i, pt) in out.trace.iter().enumerate() {
+                if pt.iter != i {
+                    return Err(format!("trace order broken at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The engine's objective must descend on well-conditioned planted data
+/// for any worker count (the Fig. 4 qualitative claim).
+#[test]
+fn prop_descends_for_any_worker_count() {
+    for p in [1, 2, 3, 5, 8] {
+        let ds = synth::table2_dataset("housing", 100 + p as u64).unwrap();
+        let fm = FmHyper {
+            k: 4,
+            ..Default::default()
+        };
+        let cfg = NomadConfig {
+            workers: p,
+            outer_iters: 25,
+            eta: LrSchedule::Constant(0.5),
+            ..Default::default()
+        };
+        let (out, _) = train_with_stats(&ds, None, &fm, &cfg).unwrap();
+        let first = out.trace.first().unwrap().objective;
+        let last = out.trace.last().unwrap().objective;
+        assert!(
+            last < 0.7 * first,
+            "P={p}: objective {first} -> {last} did not descend"
+        );
+    }
+}
+
+/// Worker count must not change the *final quality* materially (the paper's
+/// central claim: hybrid parallelism preserves convergence).
+#[test]
+fn prop_quality_invariant_to_worker_count() {
+    let ds = synth::table2_dataset("housing", 55).unwrap();
+    let (train, test) = ds.split(0.8, 56);
+    let fm = FmHyper {
+        k: 4,
+        ..Default::default()
+    };
+    let mut rmses = Vec::new();
+    for p in [1, 4, 8] {
+        let cfg = NomadConfig {
+            workers: p,
+            outer_iters: 40,
+            eta: LrSchedule::Constant(0.5),
+            ..Default::default()
+        };
+        let (out, _) = train_with_stats(&train, Some(&test), &fm, &cfg).unwrap();
+        rmses.push(dsfacto::metrics::evaluate(&out.model, &test).rmse);
+    }
+    let max = rmses.iter().cloned().fold(f64::MIN, f64::max);
+    let min = rmses.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(
+        max - min < 0.15 * min.max(0.1),
+        "final test RMSE varies too much across P: {rmses:?}"
+    );
+}
+
+/// All three transports implement the same protocol: identical message
+/// counts and comparable final quality on the same seed.
+#[test]
+fn prop_transports_are_equivalent() {
+    let ds = synth::table2_dataset("housing", 77).unwrap();
+    let fm = FmHyper {
+        k: 4,
+        ..Default::default()
+    };
+    let mk_cfg = |transport| NomadConfig {
+        workers: 3,
+        outer_iters: 8,
+        eta: LrSchedule::Constant(0.5),
+        transport,
+        ..Default::default()
+    };
+    let (out_local, st_local) =
+        train_with_stats(&ds, None, &fm, &mk_cfg(TransportKind::Local)).unwrap();
+    let sim = TransportKind::SimNet(dsfacto::cluster::NetModel {
+        latency: std::time::Duration::from_micros(20),
+        bandwidth_bps: 1e9,
+        workers_per_machine: 1,
+    });
+    let (out_sim, st_sim) = train_with_stats(&ds, None, &fm, &mk_cfg(sim)).unwrap();
+    let (out_tcp, st_tcp) = train_with_stats(&ds, None, &fm, &mk_cfg(TransportKind::Tcp)).unwrap();
+
+    assert_eq!(st_local.messages, st_sim.messages);
+    assert_eq!(st_local.messages, st_tcp.messages);
+    let obj = |o: &dsfacto::metrics::TrainOutput| o.trace.last().unwrap().objective;
+    let (a, b, c) = (obj(&out_local), obj(&out_sim), obj(&out_tcp));
+    // Async schedules differ, but all must land in the same basin.
+    assert!((a - b).abs() < 0.3 * a.max(0.05), "local {a} vs simnet {b}");
+    assert!((a - c).abs() < 0.3 * a.max(0.05), "local {a} vs tcp {c}");
+}
+
+/// Degenerate shapes must not wedge the engine.
+#[test]
+fn prop_degenerate_shapes() {
+    // One feature; one example; P > D; P > N.
+    for (n, d, p) in [(1usize, 1usize, 1usize), (1, 3, 2), (5, 1, 4), (3, 2, 8)] {
+        let spec = synth::SynthSpec {
+            name: "degen".into(),
+            task: Task::Regression,
+            n,
+            d,
+            k: 1,
+            density: 1.0,
+            factor_scale: 0.1,
+            noise: 0.1,
+            skew: 0.0,
+        };
+        let ds = synth::generate(&spec, 1).dataset;
+        let fm = FmHyper {
+            k: 1,
+            ..Default::default()
+        };
+        let cfg = NomadConfig {
+            workers: p,
+            outer_iters: 2,
+            ..Default::default()
+        };
+        let (out, _) = train_with_stats(&ds, None, &fm, &cfg)
+            .unwrap_or_else(|e| panic!("n={n} d={d} p={p}: {e:#}"));
+        assert_eq!(out.trace.len(), 3, "n={n} d={d} p={p}");
+    }
+}

@@ -1,0 +1,268 @@
+//! Integration tests for the PJRT runtime: load real AOT artifacts, execute
+//! them, and check them against the pure-Rust implementations of the same
+//! equations.
+//!
+//! These tests are skipped (not failed) when `artifacts/` has not been
+//! built — CI runs `make artifacts` first.
+
+use dsfacto::data::{synth, Dataset, Task};
+use dsfacto::fm::{loss, FmModel};
+use dsfacto::runtime::Runtime;
+use dsfacto::util::rng::Pcg64;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("DSFACTO_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    Runtime::available(&dir).then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(dir) => dir,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn random_model(d: usize, k: usize, seed: u64) -> FmModel {
+    let mut rng = Pcg64::seeded(seed);
+    let mut m = FmModel::init(d, k, 0.1, &mut rng);
+    for x in m.w.iter_mut() {
+        *x = rng.normal32(0.0, 0.3);
+    }
+    m.w0 = 0.2;
+    m
+}
+
+fn random_batch(b: usize, d: usize, task: Task, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg64::seeded(seed);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal32(0.0, 1.0)).collect();
+    let y: Vec<f32> = (0..b)
+        .map(|_| match task {
+            Task::Regression => rng.normal32(0.0, 1.0),
+            Task::Classification => {
+                if rng.chance(0.5) {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+        })
+        .collect();
+    (x, y)
+}
+
+#[test]
+fn score_artifact_matches_rust_scorer() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    for name in ["tiny_reg", "tiny_clf"] {
+        let exec = rt.load(name, "score").unwrap();
+        let (b, d, k) = (exec.spec.b, exec.spec.d, exec.spec.k);
+        let model = random_model(d, k, 1);
+        let (x, _) = random_batch(b, d, exec.spec.task, 2);
+        let scores = exec.score_batch(&model, &x).unwrap();
+        assert_eq!(scores.len(), b);
+        for r in 0..b {
+            let row = &x[r * d..(r + 1) * d];
+            let idx: Vec<u32> = (0..d as u32).collect();
+            let want = model.score_sparse(&idx, row);
+            assert!(
+                (scores[r] - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "{name} row {r}: xla {} vs rust {want}",
+                scores[r]
+            );
+        }
+    }
+}
+
+#[test]
+fn grad_artifact_matches_finite_differences() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    for name in ["tiny_reg", "tiny_clf"] {
+        let exec = rt.load(name, "grad").unwrap();
+        let (b, d, k) = (exec.spec.b, exec.spec.d, exec.spec.k);
+        let task = exec.spec.task;
+        let model = random_model(d, k, 3);
+        let (x, y) = random_batch(b, d, task, 4);
+        let (g0, gw, gv, loss_val) = exec.grad_batch(&model, &x, &y).unwrap();
+        assert_eq!(gw.len(), d);
+        assert_eq!(gv.len(), d * k);
+
+        // Mean loss via the Rust scorer.
+        let mean_loss = |m: &FmModel| -> f32 {
+            let idx: Vec<u32> = (0..d as u32).collect();
+            (0..b)
+                .map(|r| loss::loss(m.score_sparse(&idx, &x[r * d..(r + 1) * d]), y[r], task))
+                .sum::<f32>()
+                / b as f32
+        };
+        assert!((loss_val - mean_loss(&model)).abs() < 1e-3);
+
+        let eps = 1e-2f32;
+        // Spot-check a few coordinates by central differences.
+        for &j in &[0usize, d / 2, d - 1] {
+            let mut mp = model.clone();
+            mp.w[j] += eps;
+            let mut mm = model.clone();
+            mm.w[j] -= eps;
+            let num = (mean_loss(&mp) - mean_loss(&mm)) / (2.0 * eps);
+            assert!(
+                (gw[j] - num).abs() < 2e-2 * (1.0 + num.abs()),
+                "{name} gw[{j}]: xla {} vs fd {num}",
+                gw[j]
+            );
+        }
+        let p = (d / 2) * k;
+        let mut mp = model.clone();
+        mp.v[p] += eps;
+        let mut mm = model.clone();
+        mm.v[p] -= eps;
+        let num = (mean_loss(&mp) - mean_loss(&mm)) / (2.0 * eps);
+        assert!(
+            (gv[p] - num).abs() < 2e-2 * (1.0 + num.abs()),
+            "{name} gv[{p}]: xla {} vs fd {num}",
+            gv[p]
+        );
+        let mut mp = model.clone();
+        mp.w0 += eps;
+        let mut mm = model.clone();
+        mm.w0 -= eps;
+        let num = (mean_loss(&mp) - mean_loss(&mm)) / (2.0 * eps);
+        assert!((g0 - num).abs() < 2e-2 * (1.0 + num.abs()));
+    }
+}
+
+#[test]
+fn step_artifact_descends_and_matches_grad() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let grad = rt.load("tiny_reg", "grad").unwrap();
+    let step = rt.load("tiny_reg", "step").unwrap();
+    let (b, d, k) = (step.spec.b, step.spec.d, step.spec.k);
+    let model = random_model(d, k, 5);
+    let (x, y) = random_batch(b, d, Task::Regression, 6);
+
+    let (g0, gw, gv, loss0) = grad.grad_batch(&model, &x, &y).unwrap();
+    let mut stepped = model.clone();
+    let eta = 0.05f32;
+    let loss_reported = step.step_batch(&mut stepped, &x, &y, eta, 0.0, 0.0).unwrap();
+    assert!((loss_reported - loss0).abs() < 1e-4);
+
+    // step == model - eta * grad (lambda = 0).
+    assert!((stepped.w0 - (model.w0 - eta * g0)).abs() < 1e-4);
+    for j in 0..d {
+        assert!((stepped.w[j] - (model.w[j] - eta * gw[j])).abs() < 1e-4);
+    }
+    for p in 0..d * k {
+        assert!((stepped.v[p] - (model.v[p] - eta * gv[p])).abs() < 1e-4);
+    }
+
+    // And the loss actually decreased.
+    let (_, _, _, loss1) = grad.grad_batch(&stepped, &x, &y).unwrap();
+    assert!(loss1 < loss0, "{loss0} -> {loss1}");
+}
+
+#[test]
+fn xla_evaluator_agrees_with_rust_evaluator() {
+    let dir = require_artifacts!();
+    // Use the real diabetes-twin artifact shape (B=256, D=8, K=4).
+    let ds = synth::table2_dataset("diabetes", 7).unwrap();
+    let model = random_model(ds.d(), 4, 8);
+    let eval = dsfacto::coordinator::Evaluator::for_dataset(&dir, &ds).unwrap();
+    let xla = eval.evaluate(&model, &ds).unwrap();
+    let rust = dsfacto::metrics::evaluate(&model, &ds);
+    assert!((xla.loss - rust.loss).abs() < 1e-4, "{} vs {}", xla.loss, rust.loss);
+    assert!((xla.accuracy - rust.accuracy).abs() < 1e-9);
+    assert!((xla.auc - rust.auc).abs() < 1e-6);
+}
+
+#[test]
+fn score_dataset_handles_padding_tail() {
+    let dir = require_artifacts!();
+    // diabetes twin: 513 rows = 2 full batches of 256 + tail of 1.
+    let ds = synth::table2_dataset("diabetes", 9).unwrap();
+    assert_eq!(ds.n() % 256, 1, "want a ragged tail");
+    let rt = Runtime::new(&dir).unwrap();
+    let exec = rt.load("diabetes", "score").unwrap();
+    let model = random_model(ds.d(), 4, 10);
+    let scores = exec.score_dataset(&model, &ds).unwrap();
+    assert_eq!(scores.len(), ds.n());
+    // Tail row agrees with the Rust scorer.
+    let (idx, val) = ds.rows.row(ds.n() - 1);
+    let want = model.score_sparse(idx, val);
+    let got = scores[ds.n() - 1];
+    assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()), "{got} vs {want}");
+}
+
+#[test]
+fn xla_dense_trainer_converges_on_tiny() {
+    let dir = require_artifacts!();
+    // Build a dataset matching the tiny_reg artifact (D=16, K=4).
+    let spec = synth::SynthSpec {
+        name: "tiny_reg".into(),
+        task: Task::Regression,
+        n: 160,
+        d: 16,
+        k: 4,
+        density: 1.0,
+        factor_scale: 0.3,
+        noise: 0.2,
+        skew: 0.0,
+    };
+    let ds = synth::generate(&spec, 11).dataset;
+    let (train, test) = ds.split(0.8, 12);
+    let mut cfg = dsfacto::config::ExperimentConfig::default();
+    cfg.trainer = dsfacto::config::TrainerKind::XlaDense;
+    cfg.artifacts_dir = dir;
+    cfg.outer_iters = 30;
+    cfg.eta = dsfacto::optim::LrSchedule::Constant(0.05);
+    cfg.fm.k = 4;
+    let out = dsfacto::coordinator::xla_dense_train(&cfg, &train, &test).unwrap();
+    let first = out.trace.first().unwrap().objective;
+    let last = out.trace.last().unwrap().objective;
+    assert!(last < 0.6 * first, "XLA dense trainer: {first} -> {last}");
+}
+
+#[test]
+fn manifest_covers_all_table2_datasets() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    for ds in ["diabetes", "housing", "ijcnn1", "realsim"] {
+        assert!(
+            rt.manifest().find(ds, "score").is_some(),
+            "missing score artifact for {ds}"
+        );
+    }
+}
+
+#[test]
+fn nomad_model_scores_identically_through_xla() {
+    // End-to-end L3 -> L2/L1 agreement: train with the NOMAD engine, then
+    // verify the XLA request path scores its model like the Rust path.
+    let dir = require_artifacts!();
+    let ds = synth::table2_dataset("housing", 13).unwrap();
+    let (train, test) = ds.split(0.8, 14);
+    let fm = dsfacto::fm::FmHyper {
+        k: 4,
+        ..Default::default()
+    };
+    let cfg = dsfacto::nomad::NomadConfig {
+        workers: 4,
+        outer_iters: 10,
+        ..Default::default()
+    };
+    let out = dsfacto::nomad::train(&train, Some(&test), &fm, &cfg).unwrap();
+    let eval = dsfacto::coordinator::Evaluator::for_dataset(&dir, &test).unwrap();
+    let xla = eval.evaluate(&out.model, &test).unwrap();
+    let rust = dsfacto::metrics::evaluate(&out.model, &test);
+    assert!((xla.rmse - rust.rmse).abs() < 1e-3, "{} vs {}", xla.rmse, rust.rmse);
+}
+
+fn _assert_dataset_traits(_: &Dataset) {}

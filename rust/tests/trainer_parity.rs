@@ -1,0 +1,178 @@
+//! Cross-trainer parity (the Fig. 4/5 qualitative claims): DS-FACTO reaches
+//! the same solution quality as the libFM baseline and the synchronous
+//! variants on every Table-2 twin that fits in test time.
+
+use dsfacto::baseline::{bulksync_train, dsgd_train, libfm_train, DsgdConfig, LibfmConfig};
+use dsfacto::data::{synth, Task};
+use dsfacto::fm::FmHyper;
+use dsfacto::metrics::evaluate;
+use dsfacto::nomad::{train as nomad_train, NomadConfig};
+use dsfacto::optim::LrSchedule;
+
+struct Quality {
+    name: &'static str,
+    headline: f64,
+}
+
+fn run_all(dataset: &str, seed: u64) -> (Task, Vec<Quality>) {
+    let ds = synth::table2_dataset(dataset, seed).unwrap();
+    let (train, test) = ds.split(0.8, seed + 1);
+    let task = train.task;
+    let fm = FmHyper {
+        k: 4,
+        ..Default::default()
+    };
+    let mut out = Vec::new();
+
+    let ncfg = NomadConfig {
+        workers: 4,
+        outer_iters: 60,
+        eta: LrSchedule::Constant(0.5),
+        ..Default::default()
+    };
+    let nomad = nomad_train(&train, None, &fm, &ncfg).unwrap();
+    out.push(Quality {
+        name: "ds-facto",
+        headline: evaluate(&nomad.model, &test).headline(task),
+    });
+
+    let lcfg = LibfmConfig {
+        epochs: 40,
+        eta: LrSchedule::Constant(0.02),
+        ..Default::default()
+    };
+    let libfm = libfm_train(&train, None, &fm, &lcfg);
+    out.push(Quality {
+        name: "libfm",
+        headline: evaluate(&libfm.model, &test).headline(task),
+    });
+
+    let dcfg = DsgdConfig {
+        epochs: 60,
+        eta: LrSchedule::Constant(0.5),
+        workers: 4,
+        ..Default::default()
+    };
+    let dsgd = dsgd_train(&train, None, &fm, &dcfg);
+    out.push(Quality {
+        name: "dsgd",
+        headline: evaluate(&dsgd.model, &test).headline(task),
+    });
+
+    let bulk = bulksync_train(&train, None, &fm, 60, LrSchedule::Constant(0.5), 4, seed);
+    out.push(Quality {
+        name: "bulksync",
+        headline: evaluate(&bulk.model, &test).headline(task),
+    });
+
+    (task, out)
+}
+
+fn assert_parity(dataset: &str, seed: u64) {
+    let (task, quals) = run_all(dataset, seed);
+    let report: Vec<String> = quals
+        .iter()
+        .map(|q| format!("{}={:.4}", q.name, q.headline))
+        .collect();
+    eprintln!("{dataset}: {}", report.join(" "));
+    match task {
+        Task::Classification => {
+            // Accuracy: every trainer within 6 points of the best.
+            let best = quals.iter().map(|q| q.headline).fold(f64::MIN, f64::max);
+            for q in &quals {
+                assert!(
+                    q.headline > best - 0.06,
+                    "{dataset}: {} acc {:.4} too far below best {best:.4} ({report:?})",
+                    q.name,
+                    q.headline
+                );
+            }
+        }
+        Task::Regression => {
+            // RMSE: every trainer within 20% of the best.
+            let best = quals.iter().map(|q| q.headline).fold(f64::MAX, f64::min);
+            for q in &quals {
+                assert!(
+                    q.headline < best * 1.2 + 0.02,
+                    "{dataset}: {} rmse {:.4} too far above best {best:.4} ({report:?})",
+                    q.name,
+                    q.headline
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parity_on_diabetes_twin() {
+    assert_parity("diabetes", 21);
+}
+
+#[test]
+fn parity_on_housing_twin() {
+    assert_parity("housing", 22);
+}
+
+#[test]
+fn parity_on_ijcnn1_twin() {
+    // ijcnn1 is 50k examples; keep budgets moderate.
+    let ds = synth::table2_dataset("ijcnn1", 23).unwrap();
+    let (train, test) = ds.split(0.8, 24);
+    let fm = FmHyper {
+        k: 4,
+        ..Default::default()
+    };
+    let ncfg = NomadConfig {
+        workers: 4,
+        outer_iters: 30,
+        eta: LrSchedule::Constant(1.0),
+        eval_every: usize::MAX,
+        ..Default::default()
+    };
+    let nomad = nomad_train(&train, None, &fm, &ncfg).unwrap();
+    let nomad_acc = evaluate(&nomad.model, &test).accuracy;
+
+    let lcfg = LibfmConfig {
+        epochs: 5,
+        eta: LrSchedule::Constant(0.01),
+        ..Default::default()
+    };
+    let libfm = libfm_train(&train, None, &fm, &lcfg);
+    let libfm_acc = evaluate(&libfm.model, &test).accuracy;
+    eprintln!("ijcnn1: nomad={nomad_acc:.4} libfm={libfm_acc:.4}");
+    assert!(
+        nomad_acc > libfm_acc - 0.06,
+        "nomad {nomad_acc} vs libfm {libfm_acc}"
+    );
+    assert!(nomad_acc > 0.6, "nomad accuracy {nomad_acc}");
+}
+
+/// AdaGrad extension sanity: frequency-adaptive steps also converge.
+#[test]
+fn adagrad_extension_converges() {
+    use dsfacto::optim::AdaGradState;
+    let ds = synth::table2_dataset("diabetes", 30).unwrap();
+    let (train, test) = ds.split(0.8, 31);
+    let mut rng = dsfacto::util::rng::Pcg64::seeded(32);
+    let mut model = dsfacto::fm::FmModel::init(train.d(), 4, 0.01, &mut rng);
+    let mut st = AdaGradState::new(train.d(), 4);
+    let mut a = vec![0f32; 4];
+    for _ in 0..20 {
+        for i in 0..train.n() {
+            let (idx, val) = train.rows.row(i);
+            st.update_example(
+                &mut model,
+                idx,
+                val,
+                train.labels[i],
+                train.task,
+                0.1,
+                1e-4,
+                1e-4,
+                &mut a,
+            );
+        }
+    }
+    let acc = evaluate(&model, &test).accuracy;
+    assert!(acc > 0.6, "adagrad accuracy {acc}");
+}
