@@ -3,17 +3,16 @@
 //! very sparse synthetic click log (hashed categorical features, Zipf
 //! popularity, like real ad logs) and compare DS-FACTO against the libFM
 //! baseline on logloss/AUC — the Fig. 4/5 comparison on a CTR workload.
+//! Both engines run through the same `Trainer` interface.
 //!
 //! ```bash
 //! cargo run --release --example click_prediction [-- --rows 20000 --dims 5000 --workers 4]
 //! ```
 
-use dsfacto::baseline::{libfm_train, LibfmConfig};
-use dsfacto::data::{synth, Task};
-use dsfacto::fm::FmHyper;
+use dsfacto::data::synth;
 use dsfacto::metrics::evaluate;
-use dsfacto::nomad::{train_with_stats, NomadConfig};
 use dsfacto::optim::LrSchedule;
+use dsfacto::prelude::*;
 use dsfacto::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -43,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     let ctr = train.labels.iter().filter(|&&y| y > 0.0).count() as f64 / train.n() as f64;
     println!(
         "click log: {} impressions, {} hashed features, {:.2} nnz/row, base CTR {:.3}",
-        ds.rows.n_rows() + 0,
+        ds.rows.n_rows(),
         dims,
         train.nnz() as f64 / train.n() as f64,
         ctr
@@ -57,36 +56,43 @@ fn main() -> anyhow::Result<()> {
     };
 
     // DS-FACTO: hybrid-parallel across `workers` threads.
-    let ncfg = NomadConfig {
+    let nomad_cfg = ExperimentConfig {
+        trainer: TrainerKind::Nomad,
+        fm,
         workers,
         outer_iters: iters,
         eta: LrSchedule::Constant(1.0),
         eval_every: usize::MAX,
         ..Default::default()
     };
-    let (nomad, stats) = train_with_stats(&train, None, &fm, &ncfg)?;
+    let nomad_trainer = nomad_cfg.trainer.build(&nomad_cfg);
+    let nomad = nomad_trainer.fit(&train, None, &mut ())?;
     let nm = evaluate(&nomad.model, &test);
     println!(
         "ds-facto  ({workers} workers, {iters} iters): {:>8.2}s  logloss {:.4}  acc {:.4}  AUC {:.4}",
         nomad.wall_secs, nm.loss, nm.accuracy, nm.auc
     );
+    let stats = nomad_trainer.stats().expect("engine counters");
     println!(
         "          tokens moved: {}  coordinate updates: {}",
         stats.messages, stats.coordinate_updates
     );
 
     // libFM baseline: single-machine SGD over all dims per example.
-    let lcfg = LibfmConfig {
-        epochs: (iters / 5).max(3),
+    let libfm_epochs = (iters / 5).max(3);
+    let libfm_cfg = ExperimentConfig {
+        trainer: TrainerKind::Libfm,
+        fm,
+        outer_iters: libfm_epochs,
         eta: LrSchedule::Constant(0.05),
         eval_every: usize::MAX,
         ..Default::default()
     };
-    let libfm = libfm_train(&train, None, &fm, &lcfg);
+    let libfm = libfm_cfg.trainer.build(&libfm_cfg).fit(&train, None, &mut ())?;
     let lm = evaluate(&libfm.model, &test);
     println!(
         "libfm     (1 thread, {} epochs):  {:>8.2}s  logloss {:.4}  acc {:.4}  AUC {:.4}",
-        lcfg.epochs, libfm.wall_secs, lm.loss, lm.accuracy, lm.auc
+        libfm_epochs, libfm.wall_secs, lm.loss, lm.accuracy, lm.auc
     );
 
     println!(

@@ -1,8 +1,8 @@
 //! End-to-end validation driver (DESIGN.md §5): train the paper's largest
 //! workload — the realsim twin (50,616 examples, 20,958 features, K=16,
-//! ~0.25% dense) — with the full DS-FACTO stack, log the convergence curve,
-//! and validate the XLA request path on the trained model. The run is
-//! recorded in EXPERIMENTS.md.
+//! ~0.25% dense) — through the uniform `Trainer` API, log the convergence
+//! curve, and validate the XLA request path on the trained model. The run
+//! is recorded in EXPERIMENTS.md.
 //!
 //! ```bash
 //! cargo run --release --example e2e_train [-- --iters 20 --workers 8 --dataset realsim]
@@ -10,10 +10,8 @@
 
 use dsfacto::coordinator::{write_trace_csv, Evaluator};
 use dsfacto::data::synth;
-use dsfacto::fm::FmHyper;
 use dsfacto::metrics::evaluate;
-use dsfacto::nomad::{train_with_stats, NomadConfig};
-use dsfacto::optim::LrSchedule;
+use dsfacto::prelude::*;
 use dsfacto::runtime::Runtime;
 use dsfacto::util::cli::Args;
 use dsfacto::util::{human_bytes, human_secs};
@@ -31,13 +29,22 @@ fn main() -> anyhow::Result<()> {
     println!("== DS-FACTO end-to-end validation: {dataset} twin ==");
     let ds = synth::table2_dataset(&dataset, 4242)?;
     let (train, test) = ds.split(0.8, 11);
-    let fm = FmHyper {
+    let mut cfg = ExperimentConfig {
+        dataset: DatasetSpec::Table2(dataset.clone()),
+        trainer: TrainerKind::Nomad,
+        workers,
+        outer_iters: iters,
+        eval_every: 2,
+        ..Default::default()
+    };
+    cfg.fm = FmHyper {
         k: synth::SynthSpec::table2(&dataset)?.k,
         lambda_w: 1e-5,
         lambda_v: 1e-5,
         ..Default::default()
     };
-    let n_params = 1 + train.d() * (fm.k + 1);
+    cfg.set("eta", &eta)?;
+    let n_params = 1 + train.d() * (cfg.fm.k + 1);
     println!(
         "data: {} train / {} test, D={}, nnz(train)={} ({:.3}% dense)",
         train.n(),
@@ -48,18 +55,10 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "model: K={}, {} parameters ({})",
-        fm.k,
+        cfg.fm.k,
         n_params,
         human_bytes(n_params * 4)
     );
-
-    let cfg = NomadConfig {
-        workers,
-        outer_iters: iters,
-        eta: LrSchedule::parse(&eta)?,
-        eval_every: 2,
-        ..Default::default()
-    };
     println!(
         "engine: {} workers, {} outer iterations, {} tokens in flight\n",
         workers,
@@ -67,7 +66,9 @@ fn main() -> anyhow::Result<()> {
         train.d() + 1
     );
 
-    let (out, stats) = train_with_stats(&train, Some(&test), &fm, &cfg)?;
+    let trainer = cfg.trainer.build(&cfg);
+    let out = trainer.fit(&train, Some(&test), &mut ())?;
+    let stats = trainer.stats().expect("engine counters");
 
     println!("{:>5} {:>10} {:>12} {:>12} {:>10}", "iter", "time", "objective", "train_loss", "test_acc");
     for pt in &out.trace {

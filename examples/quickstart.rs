@@ -1,23 +1,31 @@
-//! Quickstart: train a factorization machine with DS-FACTO on the
-//! diabetes twin (Table 2), evaluate it through both the Rust scorer and
-//! the AOT XLA artifact, and save the model.
+//! Quickstart: train a factorization machine with DS-FACTO through the
+//! uniform `Trainer` API, score it through both `Predictor` backends
+//! (native Rust and the AOT XLA artifact), and save the model.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use dsfacto::coordinator::Evaluator;
-use dsfacto::data::synth;
-use dsfacto::fm::{io, FmHyper};
+use dsfacto::fm::io;
 use dsfacto::metrics::evaluate;
-use dsfacto::nomad::{train_with_stats, NomadConfig};
-use dsfacto::optim::LrSchedule;
+use dsfacto::prelude::*;
 use dsfacto::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Data: a synthetic twin of the paper's `diabetes` dataset
-    //    (513 examples, 8 features, classification; DESIGN.md §2).
-    let ds = synth::table2_dataset("diabetes", 42)?;
+    // 1. Configure: the diabetes twin (513 examples, 8 features,
+    //    classification; Table 2) trained by the DS-FACTO engine. Swapping
+    //    `trainer` for Libfm / Dsgd / BulkSync changes nothing below —
+    //    every engine implements the same `Trainer` trait.
+    let cfg = ExperimentConfig {
+        dataset: DatasetSpec::Table2("diabetes".into()),
+        trainer: TrainerKind::Nomad,
+        workers: 4,
+        outer_iters: 60,
+        eta: dsfacto::optim::LrSchedule::Constant(0.5),
+        ..Default::default()
+    };
+    let ds = cfg.dataset.load(42)?;
     let (train, test) = ds.split(0.8, 7);
     println!(
         "dataset {}: {} train / {} test examples, {} features",
@@ -27,47 +35,50 @@ fn main() -> anyhow::Result<()> {
         train.d()
     );
 
-    // 2. Train with DS-FACTO: 4 workers, hybrid-parallel, no parameter
-    //    server — the parameter columns circulate as tokens.
-    let fm = FmHyper {
-        k: 4,
-        lambda_w: 1e-4,
-        lambda_v: 1e-4,
-        ..Default::default()
-    };
-    let cfg = NomadConfig {
-        workers: 4,
-        outer_iters: 60,
-        eta: LrSchedule::Constant(0.5),
-        ..Default::default()
-    };
-    let (out, stats) = train_with_stats(&train, Some(&test), &fm, &cfg)?;
+    // 2. Train: hybrid-parallel, no parameter server — the parameter
+    //    columns circulate as tokens. The observer records every trace
+    //    point as the session runs.
+    let trainer = cfg.trainer.build(&cfg);
+    let mut recorder = TraceRecorder::default();
+    let out = trainer.fit(&train, Some(&test), &mut recorder)?;
     println!(
-        "trained in {:.2}s: objective {:.4} -> {:.4} over {} outer iterations",
+        "trained {} in {:.2}s: objective {:.4} -> {:.4} over {} outer iterations",
+        trainer.name(),
         out.wall_secs,
         out.trace.first().unwrap().objective,
         out.trace.last().unwrap().objective,
         cfg.outer_iters
     );
+    let stats = trainer.stats().expect("the DS-FACTO engine reports counters");
     println!(
-        "engine moved {} tokens ({} update visits, {} coordinate updates)",
-        stats.messages, stats.update_visits, stats.coordinate_updates
+        "engine moved {} tokens ({} update visits, {} coordinate updates); observer saw {} points",
+        stats.messages,
+        stats.update_visits,
+        stats.coordinate_updates,
+        recorder.trace.len()
     );
 
     // 3. Evaluate: Rust scorer...
     let m = evaluate(&out.model, &test);
     println!("test accuracy {:.4}, AUC {:.4} (rust scorer)", m.accuracy, m.auc);
 
-    //    ...and the AOT XLA artifact (the request-path scorer), when built.
+    //    ...and the AOT XLA artifact, reached through the same `Predictor`
+    //    trait as the native model (the request-path scorer), when built.
     if Runtime::available("artifacts") {
-        let eval = Evaluator::for_dataset("artifacts", &test)?;
-        let mx = eval.evaluate(&out.model, &test)?;
+        let xla = Evaluator::for_dataset("artifacts", &test)?
+            .into_predictor(out.model.clone())?;
+        let native_scores = Predictor::predict_dataset(&out.model, &test)?;
+        let xla_scores = xla.predict_dataset(&test)?;
+        let max_delta = native_scores
+            .iter()
+            .zip(&xla_scores)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
         println!(
-            "test accuracy {:.4}, AUC {:.4} (XLA artifact — Pallas kernel inside)",
-            mx.accuracy, mx.auc
+            "XLA artifact (Pallas kernel inside) agrees with the native scorer: max |delta| = {max_delta:.2e}"
         );
     } else {
-        println!("(run `make artifacts` to also evaluate through the XLA path)");
+        println!("(run `make artifacts` to also score through the XLA predictor)");
     }
 
     // 4. Persist.

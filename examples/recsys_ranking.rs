@@ -1,20 +1,17 @@
 //! Recommender-system example: FMs subsume matrix factorization when the
 //! features are one-hot (user, item) pairs (Rendle 2010, §V). We simulate a
 //! ratings matrix with latent user/item structure, encode each rating as a
-//! sparse two-hot FM example, train with DS-FACTO, and rank held-out items
-//! per user.
+//! sparse two-hot FM example, train with DS-FACTO through the `Trainer`
+//! API, and rank held-out items per user through the `Predictor` API.
 //!
 //! ```bash
 //! cargo run --release --example recsys_ranking [-- --users 400 --items 300]
 //! ```
 
-use dsfacto::data::{Csr, Dataset, Task};
-use dsfacto::fm::FmHyper;
+use dsfacto::data::Csr;
 use dsfacto::metrics::evaluate;
-use dsfacto::nomad::{train, NomadConfig};
-use dsfacto::optim::LrSchedule;
+use dsfacto::prelude::*;
 use dsfacto::util::cli::Args;
-use dsfacto::util::rng::Pcg64;
 
 /// Builds a two-hot (user, item) ratings dataset from planted latent
 /// factors: rating = <p_u, q_i> + bias terms + noise, standardized.
@@ -88,25 +85,27 @@ fn main() -> anyhow::Result<()> {
     // K=8 FM over the two-hot encoding == biased matrix factorization with
     // rank-8 embeddings, trained hybrid-parallel.
     // Matrix-factorization-style problems need stochastic noise to grow
-    // the factors out of the V~0 saddle, so this example uses the
+    // the factors out of the V~0 saddle, so this run uses the
     // paper-literal stochastic update mode (Algorithm 1 line 14): each
     // token visit applies per-example eq. 12/13 updates for a handful of
-    // sampled local ratings, at per-example-SGD step sizes.
-    let fm = FmHyper {
-        k: 8,
-        lambda_w: 1e-4,
-        lambda_v: 1e-4,
-        init_std: 0.1,
-    };
-    let cfg = NomadConfig {
+    // sampled local ratings, at per-example-SGD step sizes. Both engine
+    // knobs are plain config keys now.
+    let mut cfg = ExperimentConfig {
+        trainer: TrainerKind::Nomad,
+        fm: FmHyper {
+            k: 8,
+            lambda_w: 1e-4,
+            lambda_v: 1e-4,
+            init_std: 0.1,
+        },
         workers,
         outer_iters: iters,
-        eta: LrSchedule::parse(&eta)?,
         eval_every: usize::MAX,
-        update_mode: dsfacto::nomad::UpdateMode::Stochastic { samples },
         ..Default::default()
     };
-    let out = train(&train_ds, None, &fm, &cfg)?;
+    cfg.set("eta", &eta)?;
+    cfg.set("update_mode", &format!("stochastic:{samples}"))?;
+    let out = cfg.trainer.build(&cfg).fit(&train_ds, None, &mut ())?;
     let m = evaluate(&out.model, &test_ds);
     println!(
         "trained {} outer iters in {:.2}s: test RMSE {:.4} (label std = 1.0)",
@@ -114,13 +113,14 @@ fn main() -> anyhow::Result<()> {
     );
     anyhow::ensure!(m.rmse < 0.7, "FM failed to learn the latent structure");
 
-    // Rank: for user 0, score every item and show the top 5.
+    // Rank: for user 0, score every item through the Predictor trait and
+    // show the top 5.
     let u = pairs[0].0;
     let mut scored: Vec<(usize, f32)> = (0..items)
         .map(|i| {
             let idx = [u as u32, (users + i) as u32];
             let val = [1.0f32, 1.0];
-            (i, out.model.score_sparse(&idx, &val))
+            (i, out.model.predict_one(&idx, &val).expect("in-range features"))
         })
         .collect();
     scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());

@@ -1,17 +1,16 @@
 //! Scaling study: the Fig. 6 experiment as a runnable example. Sweeps the
 //! worker count over {1, 2, 4, 8, ...} in both communication modes
 //! (in-process threads vs simulated multi-machine network) and prints
-//! speedup tables.
+//! speedup tables. The transport is an `ExperimentConfig` key, so every
+//! point runs through the same `TrainerKind::build` dispatch as the CLI.
 //!
 //! ```bash
 //! cargo run --release --example scaling_study [-- --dataset ijcnn1 --workers 1,2,4,8]
 //! ```
 
-use dsfacto::cluster::NetModel;
 use dsfacto::data::synth;
-use dsfacto::fm::FmHyper;
-use dsfacto::nomad::{train_with_stats, NomadConfig, TransportKind};
 use dsfacto::optim::LrSchedule;
+use dsfacto::prelude::*;
 use dsfacto::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -33,7 +32,10 @@ fn main() -> anyhow::Result<()> {
         fm.k
     );
 
-    for (mode, label) in [(0, "multi-threaded (in-process queues)"), (1, "simulated multi-machine (100us / 10Gbps)")] {
+    for (transport, label) in [
+        ("local", "multi-threaded (in-process queues)"),
+        ("simnet:100us,1.25e9,1", "simulated multi-machine (100us / 10Gbps)"),
+    ] {
         println!("== {label} ==");
         println!(
             "{:>8} {:>10} {:>10} {:>9} {:>9} {:>12}",
@@ -41,24 +43,20 @@ fn main() -> anyhow::Result<()> {
         );
         let mut base = None;
         for &p in &workers {
-            let transport = if mode == 0 {
-                TransportKind::Local
-            } else {
-                TransportKind::SimNet(NetModel {
-                    latency: std::time::Duration::from_micros(100),
-                    bandwidth_bps: 10e9 / 8.0,
-                    workers_per_machine: 1,
-                })
-            };
-            let cfg = NomadConfig {
+            let mut cfg = ExperimentConfig {
+                dataset: DatasetSpec::Table2(dataset.clone()),
+                trainer: TrainerKind::Nomad,
+                fm,
                 workers: p,
                 outer_iters: iters,
                 eta: LrSchedule::Constant(0.5),
                 eval_every: usize::MAX,
-                transport,
                 ..Default::default()
             };
-            let (out, stats) = train_with_stats(&ds, None, &fm, &cfg)?;
+            cfg.set("transport", transport)?;
+            let trainer = cfg.trainer.build(&cfg);
+            let out = trainer.fit(&ds, None, &mut ())?;
+            let stats = trainer.stats().expect("engine counters");
             // Single-core container: wall-clock cannot show parallelism, so
             // speedup uses the simulated parallel makespan max_p(busy_p)
             // (same convention as the fig6_scalability bench).

@@ -6,12 +6,15 @@
 //! * incremental synchronization: DS-FACTO vs the bulk-sync counterpart
 //!   (synchronous DSGD) vs full-barrier GD on the same budget.
 //!
+//! Every variant is just an `ExperimentConfig` — granularity, update mode
+//! and the competing trainers are all config keys dispatched through
+//! `TrainerKind::build`.
+//!
 //! Run: `cargo bench --bench ablation_engine`.
 
-use dsfacto::baseline::{bulksync_train, dsgd_train, DsgdConfig};
+use dsfacto::config::{DatasetSpec, ExperimentConfig, TrainerKind};
 use dsfacto::data::synth;
 use dsfacto::fm::FmHyper;
-use dsfacto::nomad::{train_with_stats, NomadConfig, UpdateMode};
 use dsfacto::optim::LrSchedule;
 
 fn main() -> anyhow::Result<()> {
@@ -22,13 +25,16 @@ fn main() -> anyhow::Result<()> {
         "cols/token", "tokens", "makespan", "speedup*", "msgs"
     );
     let ds = synth::table2_dataset("realsim", 42)?;
-    let fm = FmHyper {
+    let fm16 = FmHyper {
         k: 16,
         ..Default::default()
     };
     let mut baseline = None;
     for cols in [1usize, 8, 40, 256, 2048] {
-        let cfg = NomadConfig {
+        let cfg = ExperimentConfig {
+            dataset: DatasetSpec::Table2("realsim".into()),
+            trainer: TrainerKind::Nomad,
+            fm: fm16,
             workers: 8,
             outer_iters: 2,
             eta: LrSchedule::Constant(0.5),
@@ -36,7 +42,9 @@ fn main() -> anyhow::Result<()> {
             cols_per_token: cols,
             ..Default::default()
         };
-        let (_, stats) = train_with_stats(&ds, None, &fm, &cfg)?;
+        let trainer = cfg.trainer.build(&cfg);
+        trainer.fit(&ds, None, &mut ())?;
+        let stats = trainer.stats().expect("engine counters");
         let mk = stats.makespan_secs();
         let base = *baseline.get_or_insert(mk);
         println!(
@@ -54,25 +62,28 @@ fn main() -> anyhow::Result<()> {
     println!("\n== Ablation 2: update-visit semantics (housing twin, P=4) ==");
     let ds = synth::table2_dataset("housing", 7)?;
     let (train, test) = ds.split(0.8, 8);
-    let fm = FmHyper {
+    let fm4 = FmHyper {
         k: 4,
         ..Default::default()
     };
     println!("{:<34} {:>12} {:>10}", "mode", "objective", "test RMSE");
     for (label, mode, eta, iters) in [
-        ("mean-gradient (eta=0.5)", UpdateMode::MeanGradient, 0.5f32, 60usize),
-        ("stochastic x1 (eta=0.02)", UpdateMode::Stochastic { samples: 1 }, 0.02, 60),
-        ("stochastic x4 (eta=0.02)", UpdateMode::Stochastic { samples: 4 }, 0.02, 60),
+        ("mean-gradient (eta=0.5)", "mean", 0.5f32, 60usize),
+        ("stochastic x1 (eta=0.02)", "stochastic:1", 0.02, 60),
+        ("stochastic x4 (eta=0.02)", "stochastic:4", 0.02, 60),
     ] {
-        let cfg = NomadConfig {
+        let mut cfg = ExperimentConfig {
+            dataset: DatasetSpec::Table2("housing".into()),
+            trainer: TrainerKind::Nomad,
+            fm: fm4,
             workers: 4,
             outer_iters: iters,
             eta: LrSchedule::Constant(eta),
             eval_every: usize::MAX,
-            update_mode: mode,
             ..Default::default()
         };
-        let (out, _) = train_with_stats(&train, None, &fm, &cfg)?;
+        cfg.set("update_mode", mode)?;
+        let out = cfg.trainer.build(&cfg).fit(&train, None, &mut ())?;
         let m = dsfacto::metrics::evaluate(&out.model, &test);
         println!(
             "{:<34} {:>12.6} {:>10.5}",
@@ -86,31 +97,29 @@ fn main() -> anyhow::Result<()> {
     println!("\n== Ablation 3: incremental vs bulk synchronization (ijcnn1, P=4) ==");
     let ds = synth::table2_dataset("ijcnn1", 9)?;
     let (train, test) = ds.split(0.8, 10);
-    let fm = FmHyper {
-        k: 4,
-        ..Default::default()
-    };
     let iters = 15;
 
-    let ncfg = NomadConfig {
+    let mk_cfg = |trainer| ExperimentConfig {
+        dataset: DatasetSpec::Table2("ijcnn1".into()),
+        trainer,
+        fm: fm4,
         workers: 4,
         outer_iters: iters,
         eta: LrSchedule::Constant(1.0),
         eval_every: usize::MAX,
         ..Default::default()
     };
-    let (nomad, nstats) = train_with_stats(&train, None, &fm, &ncfg)?;
 
-    let dcfg = DsgdConfig {
-        epochs: iters,
-        eta: LrSchedule::Constant(1.0),
-        workers: 4,
-        seed: 42,
-        eval_every: usize::MAX,
-    };
-    let dsgd = dsgd_train(&train, None, &fm, &dcfg);
+    let ncfg = mk_cfg(TrainerKind::Nomad);
+    let nomad_trainer = ncfg.trainer.build(&ncfg);
+    let nomad = nomad_trainer.fit(&train, None, &mut ())?;
+    let nstats = nomad_trainer.stats().expect("engine counters");
 
-    let bulk = bulksync_train(&train, None, &fm, iters, LrSchedule::Constant(1.0), 4, 42);
+    let dcfg = mk_cfg(TrainerKind::Dsgd);
+    let dsgd = dcfg.trainer.build(&dcfg).fit(&train, None, &mut ())?;
+
+    let bcfg = mk_cfg(TrainerKind::BulkSync);
+    let bulk = bcfg.trainer.build(&bcfg).fit(&train, None, &mut ())?;
 
     println!(
         "{:<42} {:>12} {:>10} {:>10}",

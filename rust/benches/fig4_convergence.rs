@@ -6,11 +6,10 @@
 //! libFM by making updates just on a subset of dimensions per iteration."
 //! Run: `cargo bench --bench fig4_convergence`.
 
-use dsfacto::baseline::{libfm_train, LibfmConfig};
+use dsfacto::config::{DatasetSpec, ExperimentConfig, TrainerKind};
 use dsfacto::data::synth;
 use dsfacto::fm::FmHyper;
 use dsfacto::metrics::TrainOutput;
-use dsfacto::nomad::{train as nomad_train, NomadConfig};
 use dsfacto::optim::LrSchedule;
 
 struct Setup {
@@ -83,22 +82,22 @@ fn main() -> anyhow::Result<()> {
             train.d()
         );
 
-        let ncfg = NomadConfig {
+        // Both engines run through the uniform Trainer API.
+        let mk_cfg = |trainer, iters, eta| ExperimentConfig {
+            dataset: DatasetSpec::Table2(s.dataset.into()),
+            trainer,
+            fm,
             workers: 4,
-            outer_iters: s.iters,
-            eta: LrSchedule::Constant(s.nomad_eta),
+            outer_iters: iters,
+            eta: LrSchedule::Constant(eta),
             eval_every: usize::MAX,
             ..Default::default()
         };
-        let nomad = nomad_train(&train, None, &fm, &ncfg)?;
+        let ncfg = mk_cfg(TrainerKind::Nomad, s.iters, s.nomad_eta);
+        let nomad = ncfg.trainer.build(&ncfg).fit(&train, None, &mut ())?;
 
-        let lcfg = LibfmConfig {
-            epochs: s.libfm_epochs,
-            eta: LrSchedule::Constant(s.libfm_eta),
-            eval_every: usize::MAX,
-            ..Default::default()
-        };
-        let libfm = libfm_train(&train, None, &fm, &lcfg);
+        let lcfg = mk_cfg(TrainerKind::Libfm, s.libfm_epochs, s.libfm_eta);
+        let libfm = lcfg.trainer.build(&lcfg).fit(&train, None, &mut ())?;
 
         print_series("ds-facto (P=4)", &nomad, (s.iters / 10).max(1));
         print_series("libfm (1 thread)", &libfm, (s.libfm_epochs / 8).max(1));

@@ -4,11 +4,10 @@
 //!
 //! Run: `cargo bench --bench fig5_predictive`.
 
-use dsfacto::baseline::{libfm_train, LibfmConfig};
+use dsfacto::config::{DatasetSpec, ExperimentConfig, TrainerKind};
 use dsfacto::data::{synth, Task};
 use dsfacto::fm::FmHyper;
 use dsfacto::metrics::TrainOutput;
-use dsfacto::nomad::{train as nomad_train, NomadConfig};
 use dsfacto::optim::LrSchedule;
 
 struct Setup {
@@ -85,22 +84,22 @@ fn main() -> anyhow::Result<()> {
         };
         println!("\n-- {} ({:?}) --", s.dataset, task);
 
-        let ncfg = NomadConfig {
+        // Both engines run through the uniform Trainer API.
+        let mk_cfg = |trainer, iters, eta, eval_every| ExperimentConfig {
+            dataset: DatasetSpec::Table2(s.dataset.into()),
+            trainer,
+            fm,
             workers: 4,
-            outer_iters: s.iters,
-            eta: LrSchedule::Constant(s.nomad_eta),
-            eval_every: s.eval_every,
+            outer_iters: iters,
+            eta: LrSchedule::Constant(eta),
+            eval_every,
             ..Default::default()
         };
-        let nomad = nomad_train(&train, Some(&test), &fm, &ncfg)?;
+        let ncfg = mk_cfg(TrainerKind::Nomad, s.iters, s.nomad_eta, s.eval_every);
+        let nomad = ncfg.trainer.build(&ncfg).fit(&train, Some(&test), &mut ())?;
 
-        let lcfg = LibfmConfig {
-            epochs: s.libfm_epochs,
-            eta: LrSchedule::Constant(s.libfm_eta),
-            eval_every: 1,
-            ..Default::default()
-        };
-        let libfm = libfm_train(&train, Some(&test), &fm, &lcfg);
+        let lcfg = mk_cfg(TrainerKind::Libfm, s.libfm_epochs, s.libfm_eta, 1);
+        let libfm = lcfg.trainer.build(&lcfg).fit(&train, Some(&test), &mut ())?;
 
         print_series("ds-facto (P=4)", &nomad, task);
         print_series("libfm (1 thread)", &libfm, task);

@@ -18,9 +18,10 @@
 //! Run: `cargo bench --bench fig6_scalability`.
 
 use dsfacto::cluster::NetModel;
+use dsfacto::config::{DatasetSpec, ExperimentConfig, TrainerKind};
 use dsfacto::data::synth;
 use dsfacto::fm::FmHyper;
-use dsfacto::nomad::{train_with_stats, NomadConfig, TransportKind};
+use dsfacto::nomad::TransportKind;
 use dsfacto::optim::LrSchedule;
 
 fn main() -> anyhow::Result<()> {
@@ -69,7 +70,10 @@ fn main() -> anyhow::Result<()> {
                         workers_per_machine: 1,
                     })
                 };
-                let cfg = NomadConfig {
+                let cfg = ExperimentConfig {
+                    dataset: DatasetSpec::Table2(dataset.into()),
+                    trainer: TrainerKind::Nomad,
+                    fm,
                     workers: p,
                     outer_iters: iters,
                     eta: LrSchedule::Constant(0.5),
@@ -77,7 +81,9 @@ fn main() -> anyhow::Result<()> {
                     transport,
                     ..Default::default()
                 };
-                let (out, stats) = train_with_stats(&ds, None, &fm, &cfg)?;
+                let trainer = cfg.trainer.build(&cfg);
+                let out = trainer.fit(&ds, None, &mut ())?;
+                let stats = trainer.stats().expect("engine counters");
                 let makespan = stats.makespan_secs();
                 let base = *base_makespan.get_or_insert(makespan);
                 let speedup = base / makespan.max(1e-12);

@@ -120,19 +120,23 @@ fn main() -> anyhow::Result<()> {
     });
 
     section("engine end-to-end (ijcnn1 twin, P=4, 2 iters)");
-    let fm = dsfacto::fm::FmHyper {
-        k: 4,
-        ..Default::default()
-    };
-    let cfg = dsfacto::nomad::NomadConfig {
+    let cfg = dsfacto::config::ExperimentConfig {
+        dataset: dsfacto::config::DatasetSpec::Table2("ijcnn1".into()),
+        trainer: dsfacto::config::TrainerKind::Nomad,
+        fm: dsfacto::fm::FmHyper {
+            k: 4,
+            ..Default::default()
+        },
         workers: 4,
         outer_iters: 2,
         eval_every: usize::MAX,
         ..Default::default()
     };
+    let trainer = cfg.trainer.build(&cfg);
     let sw = dsfacto::util::timer::Stopwatch::start();
-    let (_, stats) = dsfacto::nomad::train_with_stats(&ds, None, &fm, &cfg)?;
+    trainer.fit(&ds, None, &mut ())?;
     let secs = sw.secs();
+    let stats = trainer.stats().expect("engine counters");
     println!(
         "engine: {} hops in {:.3}s = {:.0} ns/hop; {} coord updates = {:.0} ns/coord; busy makespan {:.3}s",
         stats.messages,

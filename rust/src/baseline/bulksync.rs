@@ -5,13 +5,44 @@
 //! here the reduction is performed over per-worker partial gradients
 //! computed on row blocks by scoped threads), then take one deterministic
 //! gradient step (eqs. 6-8).
+//!
+//! The session-facing entry point is [`crate::train::BulkSyncTrainer`].
 
 use crate::data::Dataset;
 use crate::fm::{loss, FmHyper, FmModel};
-use crate::metrics::{TraceRecorder, TrainOutput};
+use crate::metrics::TrainOutput;
 use crate::optim::LrSchedule;
+use crate::train::{Probe, TrainObserver};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
+
+/// Bulk-synchronous GD configuration (replaces the old seven-positional
+/// argument signature).
+#[derive(Debug, Clone)]
+pub struct BulkSyncConfig {
+    /// Gradient iterations.
+    pub iters: usize,
+    /// Learning-rate schedule.
+    pub eta: LrSchedule,
+    /// Parallel reduce width.
+    pub workers: usize,
+    /// RNG seed (model init).
+    pub seed: u64,
+    /// Evaluate held-out metrics every this many iterations.
+    pub eval_every: usize,
+}
+
+impl Default for BulkSyncConfig {
+    fn default() -> Self {
+        BulkSyncConfig {
+            iters: 50,
+            eta: LrSchedule::Constant(0.5),
+            workers: 4,
+            seed: 42,
+            eval_every: 1,
+        }
+    }
+}
 
 /// Dense gradient buffers (the "reduce" payload).
 #[derive(Debug, Clone)]
@@ -70,50 +101,51 @@ fn partial_gradient(model: &FmModel, ds: &Dataset, start: usize, end: usize) -> 
     buf
 }
 
-/// Deterministic full-batch gradient descent with a P-way parallel reduce.
+/// Deterministic full-batch gradient descent with a P-way parallel reduce,
+/// reporting each iteration to `obs` (which may stop the run).
 pub fn bulksync_train(
     train: &Dataset,
     test: Option<&Dataset>,
     fm: &FmHyper,
-    iters: usize,
-    eta: LrSchedule,
-    workers: usize,
-    seed: u64,
+    cfg: &BulkSyncConfig,
+    obs: &mut dyn TrainObserver,
 ) -> TrainOutput {
-    let workers = workers.max(1).min(train.n().max(1));
-    let mut rng = Pcg64::new(seed, 0xb51c);
+    let workers = cfg.workers.max(1).min(train.n().max(1));
+    let mut rng = Pcg64::new(cfg.seed, 0xb51c);
     let mut model = FmModel::init(train.d(), fm.k, fm.init_std, &mut rng);
-    let mut recorder = TraceRecorder::new(train, test, fm.lambda_w, fm.lambda_v, 1);
+    let mut probe = Probe::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
 
     let mut sw = Stopwatch::start();
     let mut clock = 0f64;
-    recorder.record(0, 0.0, &model);
+    let mut stopped = probe.record(0, 0.0, &model, obs).is_stop();
     sw.lap();
 
     let n = train.n();
     let chunk = n.div_ceil(workers);
-    for t in 0..iters {
+    for t in 0..cfg.iters {
+        if stopped {
+            break;
+        }
         // Map: per-worker partial gradients on disjoint row blocks.
-        let total = crossbeam_utils::thread::scope(|scope| {
+        let total = std::thread::scope(|scope| {
             let model_ref = &model;
             let handles: Vec<_> = (0..workers)
                 .map(|p| {
                     let start = p * chunk;
                     let end = ((p + 1) * chunk).min(n);
-                    scope.spawn(move |_| partial_gradient(model_ref, train, start, end))
+                    scope.spawn(move || partial_gradient(model_ref, train, start, end))
                 })
                 .collect();
             // Reduce: merge in worker order (deterministic).
             let mut total = GradBuf::zeros(model_ref.d, model_ref.k);
             for h in handles {
-                total.merge(&h.join().unwrap());
+                total.merge(&h.join().expect("bulksync worker panicked"));
             }
             total
-        })
-        .expect("bulksync scope");
+        });
 
         // Step (eqs. 6-8 with the mean gradient + L2 terms).
-        let lr = eta.at(t);
+        let lr = cfg.eta.at(t);
         let inv_n = 1.0 / n as f64;
         model.w0 -= lr * (total.g0 * inv_n) as f32;
         for j in 0..model.d {
@@ -126,13 +158,13 @@ pub fn bulksync_train(
         }
 
         clock += sw.lap();
-        recorder.record(t + 1, clock, &model);
+        stopped = probe.record(t + 1, clock, &model, obs).is_stop();
         sw.lap();
     }
 
     TrainOutput {
         model,
-        trace: recorder.into_trace(),
+        trace: probe.into_trace(),
         wall_secs: clock,
     }
 }
@@ -151,7 +183,14 @@ mod tests {
             lambda_v: 0.0,
             ..Default::default()
         };
-        let out = bulksync_train(&ds, None, &fm, 20, LrSchedule::Constant(0.05), 4, 2);
+        let cfg = BulkSyncConfig {
+            iters: 20,
+            eta: LrSchedule::Constant(0.05),
+            workers: 4,
+            seed: 2,
+            ..Default::default()
+        };
+        let out = bulksync_train(&ds, None, &fm, &cfg, &mut ());
         let objs: Vec<f64> = out.trace.iter().map(|p| p.objective).collect();
         for w in objs.windows(2) {
             assert!(
@@ -166,8 +205,15 @@ mod tests {
     fn worker_count_does_not_change_result() {
         let ds = synth::table2_dataset("housing", 3).unwrap();
         let fm = FmHyper::default();
-        let one = bulksync_train(&ds, None, &fm, 5, LrSchedule::Constant(0.02), 1, 7);
-        let four = bulksync_train(&ds, None, &fm, 5, LrSchedule::Constant(0.02), 4, 7);
+        let cfg = |workers| BulkSyncConfig {
+            iters: 5,
+            eta: LrSchedule::Constant(0.02),
+            workers,
+            seed: 7,
+            ..Default::default()
+        };
+        let one = bulksync_train(&ds, None, &fm, &cfg(1), &mut ());
+        let four = bulksync_train(&ds, None, &fm, &cfg(4), &mut ());
         // The reduce is order-deterministic but f64 summation differs by
         // block boundaries; results must agree to tight tolerance.
         for (a, b) in one.model.w.iter().zip(&four.model.w) {

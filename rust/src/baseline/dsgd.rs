@@ -8,11 +8,14 @@
 //! parameters. The synchronization terms G and A are recomputed exactly at
 //! a **barrier before every sub-epoch** (this is precisely the bulk
 //! synchronization whose cost DS-FACTO's incremental scheme removes).
+//!
+//! The session-facing entry point is [`crate::train::DsgdTrainer`].
 
 use crate::data::{Csc, Dataset};
 use crate::fm::{loss, FmHyper, FmModel};
-use crate::metrics::{TraceRecorder, TrainOutput};
+use crate::metrics::TrainOutput;
 use crate::optim::LrSchedule;
+use crate::train::{Probe, TrainObserver};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -66,12 +69,14 @@ fn column_bounds(d: usize, p: usize) -> Vec<usize> {
     (0..=p).map(|b| (b * chunk).min(d)).collect()
 }
 
-/// Trains with synchronous block-cyclic DSGD.
+/// Trains with synchronous block-cyclic DSGD, reporting each epoch to
+/// `obs` (which may stop the run at an epoch boundary).
 pub fn dsgd_train(
     train: &Dataset,
     test: Option<&Dataset>,
     fm: &FmHyper,
     cfg: &DsgdConfig,
+    obs: &mut dyn TrainObserver,
 ) -> TrainOutput {
     let p = cfg.workers.max(1).min(train.d().max(1));
     let n = train.n();
@@ -79,7 +84,7 @@ pub fn dsgd_train(
     let k = fm.k;
     let mut rng = Pcg64::new(cfg.seed, 0xd5fd);
     let mut model = FmModel::init(d, k, fm.init_std, &mut rng);
-    let mut recorder = TraceRecorder::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
+    let mut probe = Probe::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
 
     // Row blocks + per-block column views (built once).
     let row_chunk = n.div_ceil(p);
@@ -98,17 +103,20 @@ pub fn dsgd_train(
 
     let mut sw = Stopwatch::start();
     let mut clock = 0f64;
-    recorder.record(0, 0.0, &model);
+    let mut stopped = probe.record(0, 0.0, &model, obs).is_stop();
     sw.lap();
 
     for epoch in 0..cfg.epochs {
+        if stopped {
+            break;
+        }
         let eta = cfg.eta.at(epoch);
         for sub in 0..p {
             // --- Barrier: recompute G and A exactly (the bulk sync step).
             let (g_all, a_all) = compute_aux(&model, train, p);
 
             // --- Parallel block-diagonal updates.
-            let deltas = crossbeam_utils::thread::scope(|scope| {
+            let deltas = std::thread::scope(|scope| {
                 let model_ref = &model;
                 let g_ref = &g_all;
                 let a_ref = &a_all;
@@ -118,7 +126,7 @@ pub fn dsgd_train(
                     .enumerate()
                     .map(|(wid, rb)| {
                         let col_block = (wid + sub) % p;
-                        scope.spawn(move |_| {
+                        scope.spawn(move || {
                             update_block(
                                 model_ref, rb, g_ref, a_ref, bounds_ref, col_block, eta, fm, n, p,
                             )
@@ -127,10 +135,9 @@ pub fn dsgd_train(
                     .collect();
                 handles
                     .into_iter()
-                    .map(|h| h.join().unwrap())
+                    .map(|h| h.join().expect("dsgd worker panicked"))
                     .collect::<Vec<ColumnDelta>>()
-            })
-            .expect("dsgd scope");
+            });
 
             // --- Apply deltas (disjoint column blocks; safe sequential write).
             let mut g_total = 0f64;
@@ -148,13 +155,13 @@ pub fn dsgd_train(
             }
         }
         clock += sw.lap();
-        recorder.record(epoch + 1, clock, &model);
+        stopped = probe.record(epoch + 1, clock, &model, obs).is_stop();
         sw.lap();
     }
 
     TrainOutput {
         model,
-        trace: recorder.into_trace(),
+        trace: probe.into_trace(),
         wall_secs: clock,
     }
 }
@@ -166,7 +173,7 @@ fn compute_aux(model: &FmModel, ds: &Dataset, p: usize) -> (Vec<f32>, Vec<f32>) 
     let chunk = n.div_ceil(p);
     let mut g = vec![0f32; n];
     let mut a = vec![0f32; n * k];
-    crossbeam_utils::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         let mut g_rest: &mut [f32] = &mut g;
         let mut a_rest: &mut [f32] = &mut a;
         for b in 0..p {
@@ -177,7 +184,7 @@ fn compute_aux(model: &FmModel, ds: &Dataset, p: usize) -> (Vec<f32>, Vec<f32>) 
             let (a_blk, a_next) = a_rest.split_at_mut(take * k);
             g_rest = g_next;
             a_rest = a_next;
-            scope.spawn(move |_| {
+            scope.spawn(move || {
                 for (r, i) in (start..end).enumerate() {
                     let (idx, val) = ds.rows.row(i);
                     let f = model.score_with_sums(idx, val, &mut a_blk[r * k..(r + 1) * k]);
@@ -185,8 +192,7 @@ fn compute_aux(model: &FmModel, ds: &Dataset, p: usize) -> (Vec<f32>, Vec<f32>) 
                 }
             });
         }
-    })
-    .expect("aux scope");
+    });
     (g, a)
 }
 
@@ -302,7 +308,7 @@ mod tests {
             workers: 4,
             ..Default::default()
         };
-        let out = dsgd_train(&ds, None, &fm, &cfg);
+        let out = dsgd_train(&ds, None, &fm, &cfg, &mut ());
         let first = out.trace.first().unwrap().objective;
         let last = out.trace.last().unwrap().objective;
         assert!(last < 0.5 * first, "{first} -> {last}");
@@ -322,7 +328,7 @@ mod tests {
             workers: 4,
             ..Default::default()
         };
-        let out = dsgd_train(&train, Some(&test), &fm, &cfg);
+        let out = dsgd_train(&train, Some(&test), &fm, &cfg, &mut ());
         let acc = out.trace.last().unwrap().test.unwrap().accuracy;
         assert!(acc > 0.6, "accuracy {acc}");
     }
@@ -337,7 +343,7 @@ mod tests {
             eta: LrSchedule::Constant(0.5),
             ..Default::default()
         };
-        let out = dsgd_train(&ds, None, &fm, &cfg);
+        let out = dsgd_train(&ds, None, &fm, &cfg, &mut ());
         assert!(out.trace.last().unwrap().objective < 0.7 * out.trace[0].objective);
     }
 }

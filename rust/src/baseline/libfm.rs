@@ -5,11 +5,16 @@
 //! while making the parameter updates." (paper §5.1). One epoch = one
 //! shuffled pass over the training examples, applying the full eq. 11-13
 //! update at every example.
+//!
+//! The session-facing entry point is [`crate::train::LibfmTrainer`]; the
+//! free function here is the loop itself, reporting through the
+//! [`TrainObserver`] it is handed.
 
 use crate::data::Dataset;
 use crate::fm::{FmHyper, FmModel};
-use crate::metrics::{TraceRecorder, TrainOutput};
+use crate::metrics::TrainOutput;
 use crate::optim::{sgd_update_example, LrSchedule};
+use crate::train::{Probe, TrainObserver};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -41,24 +46,29 @@ impl Default for LibfmConfig {
 }
 
 /// Trains an FM with single-machine SGD; returns the model and trace.
+/// Each recorded iteration is reported to `obs`, which may stop the run.
 pub fn libfm_train(
     train: &Dataset,
     test: Option<&Dataset>,
     fm: &FmHyper,
     cfg: &LibfmConfig,
+    obs: &mut dyn TrainObserver,
 ) -> TrainOutput {
     let mut rng = Pcg64::new(cfg.seed, 0x11bf);
     let mut model = FmModel::init(train.d(), fm.k, fm.init_std, &mut rng);
-    let mut recorder = TraceRecorder::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
+    let mut probe = Probe::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
     let mut order: Vec<usize> = (0..train.n()).collect();
     let mut a = vec![0f32; fm.k];
 
     let mut sw = Stopwatch::start();
     let mut train_clock = 0f64;
-    recorder.record(0, 0.0, &model);
+    let mut stopped = probe.record(0, 0.0, &model, obs).is_stop();
     sw.lap(); // exclude the initial evaluation
 
     for epoch in 0..cfg.epochs {
+        if stopped {
+            break;
+        }
         let eta = cfg.eta.at(epoch);
         if cfg.shuffle {
             rng.shuffle(&mut order);
@@ -78,13 +88,13 @@ pub fn libfm_train(
             );
         }
         train_clock += sw.lap();
-        recorder.record(epoch + 1, train_clock, &model);
+        stopped = probe.record(epoch + 1, train_clock, &model, obs).is_stop();
         sw.lap(); // evaluation excluded from the training clock
     }
 
     TrainOutput {
         model,
-        trace: recorder.into_trace(),
+        trace: probe.into_trace(),
         wall_secs: train_clock,
     }
 }
@@ -108,7 +118,7 @@ mod tests {
             eta: LrSchedule::Constant(0.02),
             ..Default::default()
         };
-        let out = libfm_train(&train, Some(&test), &fm, &cfg);
+        let out = libfm_train(&train, Some(&test), &fm, &cfg, &mut ());
         let first = out.trace.first().unwrap().objective;
         let last = out.trace.last().unwrap().objective;
         assert!(last < 0.5 * first, "objective {first} -> {last}");
@@ -139,7 +149,7 @@ mod tests {
             eta: LrSchedule::Constant(0.05),
             ..Default::default()
         };
-        let out = libfm_train(&train, Some(&test), &fm, &cfg);
+        let out = libfm_train(&train, Some(&test), &fm, &cfg, &mut ());
         let acc = evaluate(&out.model, &test).accuracy;
         // Planted-model accuracy is well above the majority class rate.
         let pos = test.labels.iter().filter(|&&y| y > 0.0).count() as f64 / test.n() as f64;
@@ -156,7 +166,7 @@ mod tests {
             epochs: 3,
             ..Default::default()
         };
-        let out = libfm_train(&ds, None, &fm, &cfg);
+        let out = libfm_train(&ds, None, &fm, &cfg, &mut ());
         assert_eq!(out.trace.len(), 4); // 0 + 3 epochs
         assert!(out.trace.windows(2).all(|w| w[0].secs <= w[1].secs));
         assert!(out.trace.iter().all(|p| p.test.is_none()));
@@ -170,8 +180,34 @@ mod tests {
             epochs: 2,
             ..Default::default()
         };
-        let a = libfm_train(&ds, None, &fm, &cfg);
-        let b = libfm_train(&ds, None, &fm, &cfg);
+        let a = libfm_train(&ds, None, &fm, &cfg, &mut ());
+        let b = libfm_train(&ds, None, &fm, &cfg, &mut ());
         assert_eq!(a.model, b.model);
+    }
+
+    #[test]
+    fn observer_stop_ends_training_early() {
+        struct StopAt(usize);
+        impl TrainObserver for StopAt {
+            fn on_iter(
+                &mut self,
+                pt: &crate::metrics::TracePoint,
+                _m: Option<&FmModel>,
+            ) -> crate::train::ControlFlow {
+                if pt.iter >= self.0 {
+                    crate::train::ControlFlow::Stop
+                } else {
+                    crate::train::ControlFlow::Continue
+                }
+            }
+        }
+        let ds = synth::table2_dataset("housing", 7).unwrap();
+        let fm = FmHyper::default();
+        let cfg = LibfmConfig {
+            epochs: 30,
+            ..Default::default()
+        };
+        let out = libfm_train(&ds, None, &fm, &cfg, &mut StopAt(4));
+        assert_eq!(out.trace.len(), 5); // iters 0..=4
     }
 }

@@ -9,11 +9,15 @@
 //!   doubly-separable access pattern.
 //! * [`bulksync`] — deterministic full-batch gradient descent with an
 //!   all-reduce-style merge (the "Reduce step" strawman of §4.2).
+//!
+//! All three are normally driven through the uniform session API in
+//! [`crate::train`] ([`crate::train::LibfmTrainer`] etc.); the free
+//! functions here are the loops themselves.
 
 pub mod bulksync;
 pub mod dsgd;
 pub mod libfm;
 
-pub use bulksync::bulksync_train;
+pub use bulksync::{bulksync_train, BulkSyncConfig};
 pub use dsgd::{dsgd_train, DsgdConfig};
 pub use libfm::{libfm_train, LibfmConfig};

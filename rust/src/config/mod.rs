@@ -14,7 +14,14 @@
 //! lambda_v  = 1e-4
 //! k         = 4
 //! seed      = 42
+//! # DS-FACTO engine knobs (ignored by the other trainers):
+//! transport = simnet:50us,1e9,2
+//! update_mode = mean
+//! cols_per_token = 0
 //! ```
+//!
+//! [`TrainerKind::build`] (defined in [`crate::train`]) turns a parsed
+//! config into a ready `Box<dyn Trainer>`.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -23,6 +30,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::data::Task;
 use crate::fm::FmHyper;
+use crate::nomad::{TransportKind, UpdateMode};
 use crate::optim::LrSchedule;
 
 /// Which training engine to run.
@@ -63,6 +71,17 @@ impl TrainerKind {
             TrainerKind::XlaDense => "xla-dense",
         }
     }
+
+    /// All kinds, in canonical order (test/bench sweeps).
+    pub fn all() -> [TrainerKind; 5] {
+        [
+            TrainerKind::Nomad,
+            TrainerKind::Libfm,
+            TrainerKind::Dsgd,
+            TrainerKind::BulkSync,
+            TrainerKind::XlaDense,
+        ]
+    }
 }
 
 /// Where a dataset comes from.
@@ -79,7 +98,10 @@ pub enum DatasetSpec {
 }
 
 impl DatasetSpec {
-    /// Loads / generates the dataset.
+    /// Loads / generates the dataset. File datasets are named by the file
+    /// *stem* (not the full path), so `runtime::artifact_name_for` — and
+    /// anything else keyed on the dataset name — stays stable no matter
+    /// which directory the file lives in.
     pub fn load(&self, seed: u64) -> Result<crate::data::Dataset> {
         match self {
             DatasetSpec::Table2(name) => crate::data::synth::table2_dataset(name, seed),
@@ -87,11 +109,19 @@ impl DatasetSpec {
                 path,
                 task,
                 n_features,
-            } => crate::data::libsvm::load(path, path, *task, *n_features),
+            } => {
+                let name = Path::new(path)
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or(path.as_str());
+                crate::data::libsvm::load(path, name, *task, *n_features)
+            }
         }
     }
 
-    /// The dataset's display name.
+    /// The dataset's display name: the Table-2 name, or a file dataset's
+    /// config spelling (the path, so [`ExperimentConfig::dump`]
+    /// round-trips).
     pub fn name(&self) -> &str {
         match self {
             DatasetSpec::Table2(name) => name,
@@ -125,6 +155,14 @@ pub struct ExperimentConfig {
     pub artifacts_dir: String,
     /// Use the XLA scorer for held-out evaluation when artifacts exist.
     pub xla_eval: bool,
+    /// Token medium for the DS-FACTO engine (`local`, `tcp`,
+    /// `simnet[:LAT,BW,WPM]`).
+    pub transport: TransportKind,
+    /// Update-visit semantics for the DS-FACTO engine (`mean`,
+    /// `stochastic[:N]`).
+    pub update_mode: UpdateMode,
+    /// Columns per circulating token for the DS-FACTO engine (0 = auto).
+    pub cols_per_token: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -142,6 +180,9 @@ impl Default for ExperimentConfig {
             trace_path: None,
             artifacts_dir: "artifacts".into(),
             xla_eval: false,
+            transport: TransportKind::Local,
+            update_mode: UpdateMode::MeanGradient,
+            cols_per_token: 0,
         }
     }
 }
@@ -182,6 +223,11 @@ impl ExperimentConfig {
             "trace" => self.trace_path = Some(value.to_string()),
             "artifacts" => self.artifacts_dir = value.to_string(),
             "xla_eval" => self.xla_eval = value.parse().context("xla_eval")?,
+            "transport" => self.transport = TransportKind::parse(value)?,
+            "update_mode" => self.update_mode = UpdateMode::parse(value)?,
+            "cols_per_token" => {
+                self.cols_per_token = value.parse().context("cols_per_token")?
+            }
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -211,10 +257,13 @@ impl ExperimentConfig {
         Self::parse_str(&text)
     }
 
-    /// Key=value dump (round-trips through [`parse_str`]).
+    /// Key=value dump (round-trips through [`parse_str`](Self::parse_str)).
     pub fn dump(&self) -> String {
         let mut kv: BTreeMap<&str, String> = BTreeMap::new();
         kv.insert("dataset", self.dataset.name().to_string());
+        if let DatasetSpec::File { task, .. } = &self.dataset {
+            kv.insert("dataset_task", task.name().to_string());
+        }
         kv.insert("trainer", self.trainer.name().to_string());
         kv.insert("k", self.fm.k.to_string());
         kv.insert("lambda_w", self.fm.lambda_w.to_string());
@@ -235,6 +284,9 @@ impl ExperimentConfig {
         kv.insert("eval_every", self.eval_every.to_string());
         kv.insert("artifacts", self.artifacts_dir.clone());
         kv.insert("xla_eval", self.xla_eval.to_string());
+        kv.insert("transport", self.transport.spec());
+        kv.insert("update_mode", self.update_mode.spec());
+        kv.insert("cols_per_token", self.cols_per_token.to_string());
         kv.into_iter()
             .map(|(k, v)| format!("{k} = {v}"))
             .collect::<Vec<_>>()
@@ -282,6 +334,27 @@ mod tests {
     }
 
     #[test]
+    fn file_dataset_name_uses_stem() {
+        // The *loaded* dataset is named by the file stem so artifact lookup
+        // is independent of the directory the file came from.
+        let dir = std::env::temp_dir().join("dsfacto_cfg_stem_test");
+        let path = dir.join("housing.svm");
+        let ds = crate::data::synth::table2_dataset("housing", 17).unwrap();
+        crate::data::libsvm::save(&ds, &path).unwrap();
+        let spec = DatasetSpec::File {
+            path: path.to_str().unwrap().to_string(),
+            task: Task::Regression,
+            n_features: None,
+        };
+        let loaded = spec.load(1).unwrap();
+        assert_eq!(loaded.name, "housing");
+        assert_eq!(crate::runtime::artifact_name_for(&loaded), "housing");
+        // The config-facing name stays the path (dump round-trip).
+        assert_eq!(spec.name(), path.to_str().unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn dump_roundtrips() {
         let mut cfg = ExperimentConfig::default();
         cfg.set("trainer", "dsgd").unwrap();
@@ -294,10 +367,42 @@ mod tests {
     }
 
     #[test]
+    fn dump_roundtrips_engine_keys() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("transport", "simnet:50us,1e9,2").unwrap();
+        cfg.set("update_mode", "stochastic:4").unwrap();
+        cfg.set("cols_per_token", "40").unwrap();
+        let back = ExperimentConfig::parse_str(&cfg.dump()).unwrap();
+        assert_eq!(back.transport, cfg.transport);
+        assert_eq!(back.update_mode, cfg.update_mode);
+        assert_eq!(back.cols_per_token, 40);
+        match back.transport {
+            TransportKind::SimNet(m) => {
+                assert_eq!(m.latency, std::time::Duration::from_micros(50));
+                assert_eq!(m.bandwidth_bps, 1e9);
+                assert_eq!(m.workers_per_machine, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn dump_roundtrips_file_dataset_task() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("dataset", "data/real.svm").unwrap();
+        cfg.set("dataset_task", "regression").unwrap();
+        let back = ExperimentConfig::parse_str(&cfg.dump()).unwrap();
+        assert_eq!(back.dataset, cfg.dataset);
+    }
+
+    #[test]
     fn trainer_aliases() {
         assert_eq!(TrainerKind::parse("ds-facto").unwrap(), TrainerKind::Nomad);
         assert_eq!(TrainerKind::parse("gd").unwrap(), TrainerKind::BulkSync);
         assert!(TrainerKind::parse("adam").is_err());
+        for kind in TrainerKind::all() {
+            assert_eq!(TrainerKind::parse(kind.name()).unwrap(), kind);
+        }
     }
 
     #[test]

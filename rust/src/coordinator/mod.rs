@@ -1,21 +1,21 @@
 //! Experiment driver: config -> data -> trainer -> trace/eval/persist.
 //!
-//! This is the layer the CLI, the examples and the benches call. It owns
-//! the trainer dispatch (DS-FACTO, the baselines, the XLA dense trainer)
-//! and the XLA-backed held-out evaluator.
+//! This is the layer the CLI, the examples and the benches call. Since the
+//! [`crate::train`] redesign it is a thin shell: it builds the trainer via
+//! [`TrainerKind::build`], wires up the session observers (CSV streaming
+//! when a trace path is configured), and runs the held-out evaluation on
+//! both scoring backends. It owns no trainer-specific dispatch.
 
 use anyhow::{Context, Result};
 
-use crate::baseline::{bulksync_train, dsgd_train, libfm_train, DsgdConfig, LibfmConfig};
-use crate::config::{ExperimentConfig, TrainerKind};
+use crate::config::ExperimentConfig;
 use crate::data::Dataset;
 use crate::fm::FmModel;
-use crate::metrics::{evaluate_scores, EvalMetrics, TraceRecorder, TrainOutput};
-use crate::nomad::{self, EngineStats, NomadConfig};
+use crate::metrics::{evaluate_scores, EvalMetrics, TrainOutput};
+use crate::nomad::EngineStats;
 use crate::runtime::{artifact_name_for, FmExecutable, Runtime};
+use crate::train::observers::{trace_row, CsvStreamer, Observers, TRACE_COLUMNS};
 use crate::util::csv::CsvWriter;
-use crate::util::rng::Pcg64;
-use crate::util::timer::Stopwatch;
 
 /// Everything a finished run reports.
 pub struct RunSummary {
@@ -38,57 +38,26 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunSummary> {
     run_on(cfg, train, test)
 }
 
-/// Runs one experiment on a pre-split dataset pair.
+/// Runs one experiment on a pre-split dataset pair. All trainers dispatch
+/// through [`crate::config::TrainerKind::build`].
 pub fn run_on(cfg: &ExperimentConfig, train: Dataset, test: Dataset) -> Result<RunSummary> {
-    let (output, stats) = match cfg.trainer {
-        TrainerKind::Nomad => {
-            let ncfg = NomadConfig {
-                workers: cfg.workers,
-                outer_iters: cfg.outer_iters,
-                eta: cfg.eta,
-                seed: cfg.seed,
-                eval_every: cfg.eval_every,
-                transport: nomad::TransportKind::Local,
-                update_mode: nomad::UpdateMode::MeanGradient,
-                cols_per_token: 0,
-            };
-            let (out, st) = nomad::train_with_stats(&train, Some(&test), &cfg.fm, &ncfg)?;
-            (out, Some(st))
-        }
-        TrainerKind::Libfm => {
-            let lcfg = LibfmConfig {
-                epochs: cfg.outer_iters,
-                eta: cfg.eta,
-                seed: cfg.seed,
-                eval_every: cfg.eval_every,
-                shuffle: true,
-            };
-            (libfm_train(&train, Some(&test), &cfg.fm, &lcfg), None)
-        }
-        TrainerKind::Dsgd => {
-            let dcfg = DsgdConfig {
-                epochs: cfg.outer_iters,
-                eta: cfg.eta,
-                workers: cfg.workers,
-                seed: cfg.seed,
-                eval_every: cfg.eval_every,
-            };
-            (dsgd_train(&train, Some(&test), &cfg.fm, &dcfg), None)
-        }
-        TrainerKind::BulkSync => (
-            bulksync_train(
-                &train,
-                Some(&test),
-                &cfg.fm,
-                cfg.outer_iters,
-                cfg.eta,
-                cfg.workers,
-                cfg.seed,
-            ),
-            None,
-        ),
-        TrainerKind::XlaDense => (xla_dense_train(cfg, &train, &test)?, None),
+    let trainer = cfg.trainer.build(cfg);
+
+    let mut csv = match &cfg.trace_path {
+        Some(path) => Some(CsvStreamer::create(path)?),
+        None => None,
     };
+    let output = {
+        let mut obs = Observers::new();
+        if let Some(c) = csv.as_mut() {
+            obs.push(c);
+        }
+        trainer.fit(&train, Some(&test), &mut obs)?
+    };
+    if let Some(c) = csv {
+        c.finish().context("stream trace CSV")?;
+    }
+    let stats = trainer.stats();
 
     // Held-out evaluation, Rust path + (optionally) the XLA request path.
     let final_eval = crate::metrics::evaluate(&output.model, &test);
@@ -101,10 +70,6 @@ pub fn run_on(cfg: &ExperimentConfig, train: Dataset, test: Dataset) -> Result<R
         None
     };
 
-    if let Some(path) = &cfg.trace_path {
-        write_trace_csv(path, &output)?;
-    }
-
     Ok(RunSummary {
         output,
         stats,
@@ -115,36 +80,22 @@ pub fn run_on(cfg: &ExperimentConfig, train: Dataset, test: Dataset) -> Result<R
     })
 }
 
-/// Writes a convergence trace as CSV (the Fig 4/5 series format).
+/// Writes a convergence trace as CSV (the Fig 4/5 series format) after the
+/// fact. Runs driven through [`run_on`] stream the same format live via
+/// [`CsvStreamer`]; this helper serves callers that hold a finished
+/// [`TrainOutput`].
 pub fn write_trace_csv(path: &str, out: &TrainOutput) -> Result<()> {
-    let mut w = CsvWriter::create(
-        path,
-        &["iter", "secs", "objective", "train_loss", "test_loss", "test_metric"],
-    )?;
+    let mut w = CsvWriter::create(path, &TRACE_COLUMNS)?;
     for pt in &out.trace {
-        let (tl, tm) = match &pt.test {
-            Some(m) => (
-                format!("{}", m.loss),
-                format!(
-                    "{}",
-                    if m.rmse.is_nan() { m.accuracy } else { m.rmse }
-                ),
-            ),
-            None => (String::new(), String::new()),
-        };
-        w.row(&[
-            pt.iter.to_string(),
-            format!("{:.6}", pt.secs),
-            format!("{}", pt.objective),
-            format!("{}", pt.train_loss),
-            tl,
-            tm,
-        ])?;
+        w.row(&trace_row(pt))?;
     }
     w.flush()
 }
 
 /// XLA-backed evaluator: scores held-out data through the AOT artifact.
+/// For a serving-shaped interface over the same executable, see
+/// [`crate::train::XlaPredictor`] (obtainable via
+/// [`Evaluator::into_predictor`]).
 pub struct Evaluator {
     exec: FmExecutable,
 }
@@ -170,68 +121,17 @@ impl Evaluator {
         let scores = self.exec.score_dataset(model, ds)?;
         Ok(evaluate_scores(&scores, &ds.labels, ds.task))
     }
-}
 
-/// Dense-minibatch SGD through the AOT `step` artifact: the trainer variant
-/// that runs the paper's update entirely inside XLA (demonstrates the
-/// L3->L2->L1 training path; used by quickstart and integration tests).
-pub fn xla_dense_train(
-    cfg: &ExperimentConfig,
-    train: &Dataset,
-    test: &Dataset,
-) -> Result<TrainOutput> {
-    let rt = Runtime::new(&cfg.artifacts_dir)?;
-    let name = artifact_name_for(train);
-    let step = rt.load(&name, "step")?;
-    anyhow::ensure!(step.spec.d == train.d(), "artifact/dataset shape mismatch");
-    let (b, k) = (step.spec.b, step.spec.k);
-    anyhow::ensure!(
-        k == cfg.fm.k,
-        "artifact k={k} != config k={} (dense XLA trainer is shape-specialized)",
-        cfg.fm.k
-    );
-
-    let mut rng = Pcg64::new(cfg.seed, 0x71a);
-    let mut model = FmModel::init(train.d(), k, cfg.fm.init_std, &mut rng);
-    let mut recorder =
-        TraceRecorder::new(train, Some(test), cfg.fm.lambda_w, cfg.fm.lambda_v, cfg.eval_every);
-
-    let mut xbuf = vec![0f32; b * train.d()];
-    let mut ybuf = vec![0f32; b];
-    let mut sw = Stopwatch::start();
-    let mut clock = 0f64;
-    recorder.record(0, 0.0, &model);
-    sw.lap();
-
-    let n_batches = train.n().div_ceil(b);
-    for epoch in 0..cfg.outer_iters {
-        let eta = cfg.eta.at(epoch);
-        for bi in 0..n_batches {
-            let start = bi * b;
-            let real = train.densify_batch(start, b, &mut xbuf);
-            train.labels_batch(start, b, &mut ybuf);
-            // Padding rows have x=0, y=0: their squared-loss gradient
-            // contribution is w0-only; rescale eta by real/b to keep the
-            // batch-mean semantics approximately right on the tail batch.
-            let eff_eta = eta * (real as f32 / b as f32);
-            step.step_batch(&mut model, &xbuf, &ybuf, eff_eta, cfg.fm.lambda_w, cfg.fm.lambda_v)?;
-        }
-        clock += sw.lap();
-        recorder.record(epoch + 1, clock, &model);
-        sw.lap();
+    /// Binds the executable to a model as a [`crate::train::Predictor`].
+    pub fn into_predictor(self, model: FmModel) -> Result<crate::train::XlaPredictor> {
+        crate::train::XlaPredictor::new(self.exec, model)
     }
-
-    Ok(TrainOutput {
-        model,
-        trace: recorder.into_trace(),
-        wall_secs: clock,
-    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::DatasetSpec;
+    use crate::config::{DatasetSpec, TrainerKind};
 
     #[test]
     fn run_experiment_with_each_cpu_trainer() {
@@ -263,6 +163,8 @@ mod tests {
                 "{trainer:?} did not descend"
             );
             assert!(sum.final_eval.rmse.is_finite());
+            // Engine counters surface exactly for the engine that has them.
+            assert_eq!(sum.stats.is_some(), trainer == TrainerKind::Nomad, "{trainer:?}");
         }
     }
 
@@ -282,5 +184,20 @@ mod tests {
         assert_eq!(hdr[0], "iter");
         assert_eq!(rows.len(), 4);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nomad_runs_through_simnet_transport_from_config() {
+        // The former `main.rs` special case, now plain config.
+        let mut cfg = ExperimentConfig {
+            dataset: DatasetSpec::Table2("housing".into()),
+            outer_iters: 4,
+            workers: 2,
+            ..Default::default()
+        };
+        cfg.set("transport", "simnet:20us,1e9,1").unwrap();
+        let sum = run_experiment(&cfg).unwrap();
+        let stats = sum.stats.expect("nomad stats");
+        assert!(stats.bytes > 0, "simnet hops must serialize");
     }
 }

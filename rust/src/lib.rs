@@ -11,7 +11,8 @@
 //!
 //! * **Layer 3 (this crate)** — the coordinator: the NOMAD-style token
 //!   engine ([`nomad`]), single-machine and synchronous baselines
-//!   ([`baseline`]), data substrates ([`data`]), metrics, config, CLI.
+//!   ([`baseline`]), the uniform trainer/predictor session API ([`train`]),
+//!   data substrates ([`data`]), metrics, config, CLI.
 //! * **Layer 2/1 (build time, `python/compile/`)** — the FM compute graphs
 //!   (JAX) built on Pallas kernels, AOT-lowered to HLO text artifacts that
 //!   the [`runtime`] module loads and executes through the PJRT CPU client
@@ -19,19 +20,38 @@
 //!
 //! ## Quick start
 //!
+//! Every engine — DS-FACTO and all the paper's baselines — sits behind one
+//! [`train::Trainer`] trait; [`config::TrainerKind::build`] turns a config
+//! into a ready trainer, and composable [`train::TrainObserver`]s handle
+//! trace capture, early stopping and checkpointing:
+//!
 //! ```no_run
+//! use dsfacto::prelude::*;
+//!
 //! // A synthetic twin of the paper's `diabetes` dataset (Table 2).
-//! let ds = dsfacto::data::synth::table2_dataset("diabetes", 42).unwrap();
-//! let (train, test) = ds.split(0.8, 7);
-//! let cfg = dsfacto::nomad::NomadConfig {
-//!     workers: 4,
+//! let cfg = ExperimentConfig {
+//!     dataset: DatasetSpec::Table2("diabetes".into()),
+//!     trainer: TrainerKind::Nomad, // or Libfm | Dsgd | BulkSync | XlaDense
 //!     outer_iters: 50,
+//!     workers: 4,
 //!     ..Default::default()
 //! };
-//! let fm = dsfacto::fm::FmHyper { k: 4, ..Default::default() };
-//! let out = dsfacto::nomad::train(&train, Some(&test), &fm, &cfg).unwrap();
-//! println!("final objective {}", out.trace.last().unwrap().objective);
+//! let ds = cfg.dataset.load(cfg.seed).unwrap();
+//! let (train, test) = ds.split(cfg.train_frac, 7);
+//!
+//! let trainer = cfg.trainer.build(&cfg);
+//! let mut stop = dsfacto::train::EarlyStop::new(5, 1e-6);
+//! let out = trainer.fit(&train, Some(&test), &mut stop).unwrap();
+//! println!("{}: final objective {}", trainer.name(),
+//!          out.trace.last().unwrap().objective);
+//!
+//! // Serving: the same interface regardless of backend.
+//! let scores = Predictor::predict_dataset(&out.model, &test).unwrap();
+//! assert_eq!(scores.len(), test.n());
 //! ```
+//!
+//! Or run a whole experiment (split, trainer, trace CSV, dual-backend
+//! evaluation) in one call with [`coordinator::run_experiment`].
 
 pub mod baseline;
 pub mod cluster;
@@ -43,6 +63,7 @@ pub mod metrics;
 pub mod nomad;
 pub mod optim;
 pub mod runtime;
+pub mod train;
 pub mod util;
 
 /// Convenience re-exports for downstream users and the examples.
@@ -50,8 +71,11 @@ pub mod prelude {
     pub use crate::config::{DatasetSpec, ExperimentConfig, TrainerKind};
     pub use crate::data::{Dataset, Task};
     pub use crate::fm::{FmHyper, FmModel};
-    pub use crate::metrics::{EvalMetrics, TracePoint};
-    pub use crate::nomad::{train as nomad_train, NomadConfig};
+    pub use crate::metrics::{EvalMetrics, TracePoint, TrainOutput};
+    pub use crate::nomad::NomadConfig;
+    pub use crate::train::{
+        ControlFlow, Observers, Predictor, TraceRecorder, TrainObserver, Trainer,
+    };
     pub use crate::util::rng::Pcg64;
 }
 

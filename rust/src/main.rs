@@ -1,8 +1,13 @@
 //! `dsfacto` CLI — train / evaluate / inspect factorization machines with
 //! the DS-FACTO engine and its baselines.
 //!
+//! Every trainer runs through the uniform session API
+//! (`TrainerKind::build -> Trainer::fit`); the CLI itself only parses a
+//! config and prints the summary.
+//!
 //! ```text
 //! dsfacto train --dataset diabetes --trainer nomad --workers 4 --outer-iters 50
+//! dsfacto train --trainer nomad --transport simnet:50us,1e9,2 --update-mode stochastic:4
 //! dsfacto train --config configs/fig4_diabetes.conf --trace /tmp/trace.csv
 //! dsfacto evaluate --model /tmp/model.dsfm --dataset diabetes
 //! dsfacto inspect --model /tmp/model.dsfm
@@ -11,12 +16,11 @@
 
 use anyhow::{bail, Context, Result};
 
-use dsfacto::config::{ExperimentConfig, TrainerKind};
+use dsfacto::config::ExperimentConfig;
 use dsfacto::coordinator::{run_experiment, Evaluator};
 use dsfacto::data::synth::SynthSpec;
 use dsfacto::data::Task;
 use dsfacto::fm;
-use dsfacto::nomad;
 use dsfacto::runtime::Runtime;
 use dsfacto::util::cli::Args;
 use dsfacto::util::human_secs;
@@ -52,59 +56,60 @@ fn real_main() -> Result<()> {
 const HELP: &str = "\
 dsfacto — Doubly Separable Factorization Machines
 
+Training is uniform across engines: pick a trainer, every other flag is a
+config key. All five trainers (nomad = DS-FACTO, libfm, dsgd, bulksync,
+xla-dense) implement the same Trainer interface and accept the same
+session options (trace streaming, eval cadence, checkpoints via the
+library's observer API).
+
 USAGE:
-  dsfacto train      [--config FILE] [--dataset NAME|FILE] [--trainer nomad|libfm|dsgd|bulksync|xla]
+  dsfacto train      [--config FILE] [--dataset NAME|FILE] [--dataset-task TASK]
+                     [--trainer nomad|libfm|dsgd|bulksync|xla]
                      [--workers P] [--outer-iters T] [--eta SPEC] [--k K]
                      [--lambda-w L] [--lambda-v L] [--seed S] [--eval-every E]
-                     [--transport local|simnet|tcp] [--trace FILE] [--save-model FILE]
+                     [--transport local|tcp|simnet[:LAT,BW,WPM]]
+                     [--update-mode mean|stochastic[:N]] [--cols-per-token C]
+                     [--trace FILE] [--save-model FILE]
                      [--xla-eval] [--artifacts DIR] [--quiet]
   dsfacto evaluate   --model FILE --dataset NAME|FILE [--xla] [--artifacts DIR]
   dsfacto inspect    --model FILE
   dsfacto datasets                      # list Table-2 synthetic twins
   dsfacto artifacts  [--artifacts DIR]  # list AOT artifacts
 
-eta SPEC: constant:0.05 | inv:0.1,0.01 | exp:0.1,0.99
+SPECS:
+  eta        constant:0.05 | inv:0.1,0.01 | exp:0.1,0.99
+  transport  local | tcp | simnet:50us,1e9,2
+             (latency[us|ms|s], bandwidth bytes/s, workers per machine;
+              applies to the nomad trainer)
+  update-mode  mean | stochastic:4   (nomad update-visit semantics)
+
+Config files use the same keys with underscores (transport, update_mode,
+cols_per_token, ...); `--config` values are overridden by explicit flags.
 ";
 
 fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &mut Args) -> Result<()> {
-    if let Some(v) = args.get("dataset") {
-        cfg.set("dataset", &v)?;
-    }
-    if let Some(v) = args.get("dataset-task") {
-        cfg.set("dataset_task", &v)?;
-    }
-    if let Some(v) = args.get("trainer") {
-        cfg.set("trainer", &v)?;
-    }
-    if let Some(v) = args.get("workers") {
-        cfg.set("workers", &v)?;
-    }
-    if let Some(v) = args.get("outer-iters") {
-        cfg.set("outer_iters", &v)?;
-    }
-    if let Some(v) = args.get("eta") {
-        cfg.set("eta", &v)?;
-    }
-    if let Some(v) = args.get("k") {
-        cfg.set("k", &v)?;
-    }
-    if let Some(v) = args.get("lambda-w") {
-        cfg.set("lambda_w", &v)?;
-    }
-    if let Some(v) = args.get("lambda-v") {
-        cfg.set("lambda_v", &v)?;
-    }
-    if let Some(v) = args.get("seed") {
-        cfg.set("seed", &v)?;
-    }
-    if let Some(v) = args.get("eval-every") {
-        cfg.set("eval_every", &v)?;
-    }
-    if let Some(v) = args.get("trace") {
-        cfg.set("trace", &v)?;
-    }
-    if let Some(v) = args.get("artifacts") {
-        cfg.set("artifacts", &v)?;
+    // CLI flag -> config key; values share one parser with config files.
+    for (flag, key) in [
+        ("dataset", "dataset"),
+        ("dataset-task", "dataset_task"),
+        ("trainer", "trainer"),
+        ("workers", "workers"),
+        ("outer-iters", "outer_iters"),
+        ("eta", "eta"),
+        ("k", "k"),
+        ("lambda-w", "lambda_w"),
+        ("lambda-v", "lambda_v"),
+        ("seed", "seed"),
+        ("eval-every", "eval_every"),
+        ("trace", "trace"),
+        ("artifacts", "artifacts"),
+        ("transport", "transport"),
+        ("update-mode", "update_mode"),
+        ("cols-per-token", "cols_per_token"),
+    ] {
+        if let Some(v) = args.get(flag) {
+            cfg.set(key, &v).with_context(|| format!("--{flag}"))?;
+        }
     }
     if args.has("xla-eval") {
         cfg.xla_eval = true;
@@ -120,7 +125,6 @@ fn cmd_train(mut args: Args) -> Result<()> {
     apply_cli_overrides(&mut cfg, &mut args)?;
     let quiet = args.has("quiet");
     let save_model = args.get("save-model");
-    let transport = args.get("transport").unwrap_or_else(|| "local".into());
     args.finish()?;
 
     if !quiet {
@@ -128,41 +132,7 @@ fn cmd_train(mut args: Args) -> Result<()> {
         println!("{}", cfg.dump());
     }
 
-    // Non-local transports only apply to the DS-FACTO engine.
-    let summary = if cfg.trainer == TrainerKind::Nomad && transport != "local" {
-        let kind = match transport.as_str() {
-            "simnet" => nomad::TransportKind::SimNet(Default::default()),
-            "tcp" => nomad::TransportKind::Tcp,
-            other => bail!("unknown transport {other:?}"),
-        };
-        let ds = cfg.dataset.load(cfg.seed)?;
-        let (train, test) = ds.split(cfg.train_frac, cfg.seed.wrapping_add(1));
-        let ncfg = nomad::NomadConfig {
-            workers: cfg.workers,
-            outer_iters: cfg.outer_iters,
-            eta: cfg.eta,
-            seed: cfg.seed,
-            eval_every: cfg.eval_every,
-            transport: kind,
-            update_mode: nomad::UpdateMode::MeanGradient,
-            cols_per_token: 0,
-        };
-        let (out, stats) = nomad::train_with_stats(&train, Some(&test), &cfg.fm, &ncfg)?;
-        let final_eval = dsfacto::metrics::evaluate(&out.model, &test);
-        if let Some(path) = &cfg.trace_path {
-            dsfacto::coordinator::write_trace_csv(path, &out)?;
-        }
-        dsfacto::coordinator::RunSummary {
-            output: out,
-            stats: Some(stats),
-            train,
-            test,
-            final_eval,
-            final_eval_xla: None,
-        }
-    } else {
-        run_experiment(&cfg)?
-    };
+    let summary = run_experiment(&cfg)?;
 
     let out = &summary.output;
     if !quiet {

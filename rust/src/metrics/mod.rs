@@ -131,76 +131,15 @@ pub fn roc_auc(scores: &[f32], labels: &[f32]) -> f64 {
 }
 
 /// The result every trainer returns: final model + convergence trace.
+///
+/// Trace recording itself lives in the session layer
+/// ([`crate::train::Probe`] computes the points; observers consume them).
 #[derive(Debug, Clone)]
 pub struct TrainOutput {
     pub model: FmModel,
     pub trace: Vec<TracePoint>,
     /// Total wall-clock training seconds (excludes evaluation time).
     pub wall_secs: f64,
-}
-
-/// Shared trace recording: evaluates objective/train-loss/test metrics and
-/// accumulates [`TracePoint`]s. Evaluation time is excluded from the
-/// training clock (the paper's convergence plots are vs optimization time).
-pub struct TraceRecorder<'a> {
-    train: &'a Dataset,
-    test: Option<&'a Dataset>,
-    lambda_w: f32,
-    lambda_v: f32,
-    eval_every: usize,
-    trace: Vec<TracePoint>,
-}
-
-impl<'a> TraceRecorder<'a> {
-    /// New recorder; `eval_every` controls how often test metrics are run.
-    pub fn new(
-        train: &'a Dataset,
-        test: Option<&'a Dataset>,
-        lambda_w: f32,
-        lambda_v: f32,
-        eval_every: usize,
-    ) -> Self {
-        TraceRecorder {
-            train,
-            test,
-            lambda_w,
-            lambda_v,
-            eval_every: eval_every.max(1),
-            trace: Vec::new(),
-        }
-    }
-
-    /// Records a point at outer iteration `iter` with training clock `secs`.
-    pub fn record(&mut self, iter: usize, secs: f64, model: &FmModel) {
-        let mut data_loss = 0f64;
-        for i in 0..self.train.n() {
-            let (idx, val) = self.train.rows.row(i);
-            data_loss +=
-                loss::loss(model.score_sparse(idx, val), self.train.labels[i], self.train.task)
-                    as f64;
-        }
-        data_loss /= self.train.n().max(1) as f64;
-        let rw: f64 = model.w.iter().map(|&x| (x as f64) * (x as f64)).sum();
-        let rv: f64 = model.v.iter().map(|&x| (x as f64) * (x as f64)).sum();
-        let objective =
-            data_loss + 0.5 * self.lambda_w as f64 * rw + 0.5 * self.lambda_v as f64 * rv;
-        let test = match self.test {
-            Some(ts) if iter % self.eval_every == 0 => Some(evaluate(model, ts)),
-            _ => None,
-        };
-        self.trace.push(TracePoint {
-            iter,
-            secs,
-            objective,
-            train_loss: data_loss,
-            test,
-        });
-    }
-
-    /// Consumes the recorder.
-    pub fn into_trace(self) -> Vec<TracePoint> {
-        self.trace
-    }
 }
 
 #[cfg(test)]

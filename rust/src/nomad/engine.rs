@@ -15,7 +15,7 @@
 //!    tokens themselves (not the eventually-consistent mirror).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -30,6 +30,7 @@ use crate::data::{Csc, Dataset, Task};
 use crate::fm::{loss, FmHyper, FmModel};
 use crate::metrics::{evaluate, TracePoint, TrainOutput};
 use crate::optim::LrSchedule;
+use crate::train::TrainObserver;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -90,6 +91,23 @@ struct Shared<'a> {
     coordinate_updates: AtomicU64,
     holdback_peak: AtomicUsize,
     busy_secs: Mutex<Vec<f64>>,
+    /// The iteration at which tokens are collected instead of processed;
+    /// `u32::MAX` until the observer requests an early stop. The driver
+    /// sets `aggregated_iter + 4` after completing iteration
+    /// `aggregated_iter` (pipeline bound of 2 beyond the already-published
+    /// count, plus one phase of token lead): combined with the
+    /// `driver_iters` gate below, no worker can process that iteration's
+    /// update phase, so every token is still collected at one single
+    /// iteration with exact finalization (invariant 4).
+    stop_at: AtomicU32,
+    /// Iterations the driver has fully aggregated — published *before* the
+    /// driver's own snapshot/eval/observer work, so that work never sits
+    /// on the workers' critical path. Workers never enter the update phase
+    /// of iteration `j` until `j <= driver_iters + 2` — a
+    /// bounded-pipelining rule that (a) costs nothing in normal operation
+    /// (aggregation is trivially fast) and (b) bounds how far training can
+    /// overrun an observer's stop request.
+    driver_iters: AtomicU32,
 }
 
 /// Per-worker engine state.
@@ -142,6 +160,13 @@ impl<'a> Worker<'a> {
         (self.seq / 2) as u32
     }
 
+    /// The iteration at which this run ends: `t_max`, or the agreed early
+    /// stop when the observer asked to stop.
+    fn stop_iter(&self) -> u32 {
+        self.t_max
+            .min(self.shared.stop_at.load(Ordering::Relaxed))
+    }
+
     fn run(&mut self) {
         loop {
             if self.shared.done.load(Ordering::Relaxed) {
@@ -183,9 +208,10 @@ impl<'a> Worker<'a> {
     }
 
     fn handle(&mut self, mut tok: Token) {
-        // Terminal state: training iterations exhausted — collect.
-        if self.cur_iter() >= self.t_max {
-            debug_assert_eq!(tok.iter, self.t_max);
+        // Terminal state: training iterations exhausted (or early stop
+        // agreed) — collect.
+        if self.cur_iter() >= self.stop_iter() {
+            debug_assert_eq!(tok.iter, self.stop_iter());
             self.shared.collector.lock().unwrap().push(tok);
             self.shared.collected.fetch_add(1, Ordering::SeqCst);
             return;
@@ -377,6 +403,24 @@ impl<'a> Worker<'a> {
         }
         self.seq += 1;
         self.seen = 0;
+        // Bounded pipelining: never enter an iteration's update phase more
+        // than two iterations ahead of the driver's aggregation (see
+        // `Shared::driver_iters`). The `Acquire` load pairs with the
+        // driver's `Release` publish, so once the gate opens this worker
+        // also sees any `stop_at` the driver set beforehand.
+        if self.seq % 2 == 0 {
+            let iter = (self.seq / 2) as u32;
+            loop {
+                let published = self.shared.driver_iters.load(Ordering::Acquire);
+                if iter <= published.saturating_add(2)
+                    || iter >= self.stop_iter()
+                    || self.shared.done.load(Ordering::Relaxed)
+                {
+                    break;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
     }
 
     /// End of a recompute pass: rebuild G and A from the partial sums,
@@ -410,13 +454,18 @@ impl<'a> Worker<'a> {
 }
 
 /// Runs DS-FACTO over an arbitrary transport. Returns the trained model,
-/// trace and engine counters.
+/// trace and engine counters. Every completed outer iteration is reported
+/// to `obs`; a [`ControlFlow::Stop`](crate::train::ControlFlow) request is
+/// honored within at most three further outer iterations (the in-flight
+/// pipeline depth of the decentralized protocol) while preserving exact
+/// token finalization. `obs.on_done` is left to the caller.
 pub fn train_with_transport(
     train: &Dataset,
     test: Option<&Dataset>,
     fm: &FmHyper,
     cfg: &NomadConfig,
     transport: &dyn Transport,
+    obs: &mut dyn TrainObserver,
 ) -> Result<(TrainOutput, EngineStats)> {
     ensure!(train.n() > 0, "empty training set");
     ensure!(train.d() > 0, "zero-dimensional training set");
@@ -457,7 +506,31 @@ pub fn train_with_transport(
         coordinate_updates: AtomicU64::new(0),
         holdback_peak: AtomicUsize::new(0),
         busy_secs: Mutex::new(vec![0.0; p]),
+        stop_at: AtomicU32::new(u32::MAX),
+        driver_iters: AtomicU32::new(0),
     };
+
+    // ---- Initial point (iter 0 = before training), computed exactly and
+    // reported before any token moves so a Stop costs nothing.
+    let mut trace: Vec<TracePoint> = Vec::with_capacity(cfg.outer_iters + 1);
+    {
+        let pt0 = crate::train::trace_point(train, test, fm.lambda_w, fm.lambda_v, 0, 0.0, &init);
+        let flow = obs.on_iter(&pt0, Some(&init));
+        trace.push(pt0);
+        if flow.is_stop() {
+            return Ok((
+                TrainOutput {
+                    model: init,
+                    trace,
+                    wall_secs: 0.0,
+                },
+                EngineStats {
+                    worker_busy_secs: vec![0.0; p],
+                    ..EngineStats::default()
+                },
+            ));
+        }
+    }
 
     // ---- Seed the ring: deal tokens across workers (Algorithm 1 l.5-8).
     {
@@ -489,14 +562,6 @@ pub fn train_with_transport(
     }
 
     let sw = Stopwatch::start();
-    let mut trace: Vec<TracePoint> = Vec::with_capacity(cfg.outer_iters + 1);
-    // Initial point (iter 0 = before training), computed exactly.
-    {
-        let mut rec =
-            crate::metrics::TraceRecorder::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
-        rec.record(0, 0.0, &init);
-        trace.extend(rec.into_trace());
-    }
 
     let stats = std::thread::scope(|scope| -> Result<EngineStats> {
         let shared_ref = &shared;
@@ -556,10 +621,12 @@ pub fn train_with_transport(
         }
         drop(post_tx);
 
-        // ---- Driver: aggregate finalize posts into the trace.
+        // ---- Driver: aggregate finalize posts into the trace and report
+        // each completed iteration to the observer.
         let mut pending: HashMap<u32, (usize, f64, f64, f64)> = HashMap::new();
         let mut iters_done = 0u32;
-        while iters_done < t_max {
+        let mut stopping = false;
+        while iters_done < t_max.min(shared.stop_at.load(Ordering::Acquire)) {
             match post_rx.recv_timeout(Duration::from_millis(200)) {
                 Ok(post) => {
                     let e = pending.entry(post.iter).or_insert((0, 0.0, 0.0, 0.0));
@@ -575,20 +642,47 @@ pub fn train_with_transport(
                             + 0.5 * fm.lambda_w as f64 * reg_w
                             + 0.5 * fm.lambda_v as f64 * reg_v;
                         let iter1 = post.iter as usize + 1;
-                        let test_metrics = match test {
-                            Some(ts) if iter1 % cfg.eval_every.max(1) == 0 => {
-                                Some(evaluate(&mirror.snapshot(), ts))
-                            }
+                        iters_done += 1;
+                        // Publish progress BEFORE the (possibly slow)
+                        // snapshot/eval/observer work below, so worker
+                        // pipelining is gated on aggregation only, never on
+                        // single-threaded evaluation. Any stop decided below
+                        // is stored before the driver aggregates the next
+                        // iteration — i.e. before the gate can open further —
+                        // so workers that pass the gate still see it.
+                        shared.driver_iters.store(iters_done, Ordering::Release);
+                        let eval_due = test.is_some() && iter1 % cfg.eval_every.max(1) == 0;
+                        // Mirror snapshots cost O(D*K): only materialize one
+                        // when this iteration evaluates or an observer asks.
+                        let snapshot = (eval_due || obs.wants_model(iter1))
+                            .then(|| mirror.snapshot());
+                        let test_metrics = match (test, &snapshot) {
+                            (Some(ts), Some(m)) if eval_due => Some(evaluate(m, ts)),
                             _ => None,
                         };
-                        trace.push(TracePoint {
+                        let pt = TracePoint {
                             iter: iter1,
                             secs: sw.secs(),
                             objective,
                             train_loss,
                             test: test_metrics,
-                        });
-                        iters_done += 1;
+                        };
+                        // Observers see every recorded point, including the
+                        // <=3 drain-window points after a Stop (whose return
+                        // values are ignored), so streamed artifacts always
+                        // match the returned trace.
+                        let flow = obs.on_iter(&pt, snapshot.as_ref());
+                        if !stopping && flow.is_stop() {
+                            stopping = true;
+                            // Tokens are provably at most at iteration
+                            // post.iter + 4's update phase (pipeline bound
+                            // of 2 past the just-published count, + one
+                            // phase of token lead): collect there.
+                            shared
+                                .stop_at
+                                .fetch_min(post.iter.saturating_add(4), Ordering::SeqCst);
+                        }
+                        trace.push(pt);
                     }
                 }
                 Err(RecvTimeoutError::Timeout) => continue,
@@ -625,7 +719,10 @@ pub fn train_with_transport(
 
     let wall = sw.secs();
 
-    // ---- Exact final model from the collected tokens (invariant 4).
+    // ---- Exact final model from the collected tokens (invariant 4). An
+    // early-stopped run finalizes at the agreed stop iteration instead of
+    // t_max; either way every token carries the same iteration.
+    let stopped_at = t_max.min(shared.stop_at.load(Ordering::Acquire));
     let tokens = shared.collector.into_inner().unwrap();
     ensure!(
         tokens.len() == ntok,
@@ -636,7 +733,11 @@ pub fn train_with_transport(
     let mut seen_bias = false;
     let mut seen_blocks = vec![false; nblocks];
     for tok in tokens {
-        ensure!(tok.iter == t_max, "token finished at iter {}", tok.iter);
+        ensure!(
+            tok.iter == stopped_at,
+            "token finished at iter {}, want {stopped_at}",
+            tok.iter
+        );
         if tok.is_bias() {
             ensure!(!seen_bias, "duplicate bias token");
             seen_bias = true;
@@ -681,7 +782,8 @@ pub(super) fn run(
     fm: &FmHyper,
     cfg: &NomadConfig,
     transport: &dyn Transport,
+    obs: &mut dyn TrainObserver,
 ) -> Result<(TrainOutput, EngineStats)> {
-    train_with_transport(train, test, fm, cfg, transport)
+    train_with_transport(train, test, fm, cfg, transport, obs)
         .context("DS-FACTO engine run failed")
 }

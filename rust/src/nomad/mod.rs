@@ -12,7 +12,8 @@
 //!   iteration (*incremental synchronization*, §4.2), instead of a bulk
 //!   synchronization barrier.
 //!
-//! See [`engine`] for the protocol invariants.
+//! See [`engine`] for the protocol invariants. The session-facing entry
+//! point is [`crate::train::NomadTrainer`].
 
 pub mod engine;
 pub mod mirror;
@@ -20,11 +21,16 @@ pub mod token;
 
 pub use engine::{train_with_transport, EngineStats};
 
+use std::time::Duration;
+
+use anyhow::{bail, Context};
+
 use crate::cluster::{LocalTransport, NetModel, SimNetTransport, Transport};
 use crate::data::Dataset;
 use crate::fm::FmHyper;
 use crate::metrics::TrainOutput;
 use crate::optim::LrSchedule;
+use crate::train::TrainObserver;
 
 /// Which medium tokens move through (the Fig. 6 comparison axis).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -35,6 +41,85 @@ pub enum TransportKind {
     SimNet(NetModel),
     /// Real TCP loopback sockets.
     Tcp,
+}
+
+impl TransportKind {
+    /// Parses the config spelling: `local`, `tcp`, `simnet` (default
+    /// model), or `simnet:LATENCY,BANDWIDTH,WORKERS_PER_MACHINE` — e.g.
+    /// `simnet:50us,1e9,2` (latency takes a `us`/`ms`/`s` suffix, bare
+    /// numbers are microseconds; bandwidth is bytes/second).
+    pub fn parse(s: &str) -> crate::Result<TransportKind> {
+        if let Some(rest) = s.strip_prefix("simnet:") {
+            let parts: Vec<&str> = rest.split(',').map(str::trim).collect();
+            let [lat, bw, wpm] = parts.as_slice() else {
+                bail!("simnet spec {s:?}: want simnet:LATENCY,BANDWIDTH,WORKERS_PER_MACHINE");
+            };
+            let bandwidth_bps: f64 = bw
+                .parse()
+                .with_context(|| format!("simnet bandwidth {bw:?}"))?;
+            anyhow::ensure!(
+                bandwidth_bps.is_finite() && bandwidth_bps > 0.0,
+                "simnet bandwidth must be a positive finite bytes/sec value, got {bw:?}"
+            );
+            return Ok(TransportKind::SimNet(NetModel {
+                latency: parse_latency(lat)?,
+                bandwidth_bps,
+                workers_per_machine: wpm
+                    .parse::<usize>()
+                    .with_context(|| format!("simnet workers-per-machine {wpm:?}"))?,
+            }));
+        }
+        Ok(match s {
+            "local" => TransportKind::Local,
+            "tcp" => TransportKind::Tcp,
+            "simnet" => TransportKind::SimNet(NetModel::default()),
+            other => bail!("unknown transport {other:?} (local|simnet[:…]|tcp)"),
+        })
+    }
+
+    /// The config spelling; round-trips through [`TransportKind::parse`]
+    /// exactly (the latency is emitted in the coarsest unit that loses
+    /// nothing, down to nanoseconds).
+    pub fn spec(&self) -> String {
+        match self {
+            TransportKind::Local => "local".to_string(),
+            TransportKind::Tcp => "tcp".to_string(),
+            TransportKind::SimNet(m) => {
+                let ns = m.latency.as_nanos();
+                let lat = if ns % 1_000_000_000 == 0 {
+                    format!("{}s", ns / 1_000_000_000)
+                } else if ns % 1_000_000 == 0 {
+                    format!("{}ms", ns / 1_000_000)
+                } else if ns % 1_000 == 0 {
+                    format!("{}us", ns / 1_000)
+                } else {
+                    format!("{ns}ns")
+                };
+                format!("simnet:{lat},{},{}", m.bandwidth_bps, m.workers_per_machine)
+            }
+        }
+    }
+}
+
+/// Parses a latency like `50us`, `2ms`, `0.1s`, `500ns`; bare numbers are
+/// microseconds.
+fn parse_latency(s: &str) -> crate::Result<Duration> {
+    let (num, scale_ns) = if let Some(x) = s.strip_suffix("us") {
+        (x, 1e3)
+    } else if let Some(x) = s.strip_suffix("ms") {
+        (x, 1e6)
+    } else if let Some(x) = s.strip_suffix("ns") {
+        (x, 1.0)
+    } else if let Some(x) = s.strip_suffix('s') {
+        (x, 1e9)
+    } else {
+        (s, 1e3)
+    };
+    let v: f64 = num
+        .parse()
+        .with_context(|| format!("latency {s:?}"))?;
+    anyhow::ensure!(v >= 0.0 && v.is_finite(), "latency {s:?} out of range");
+    Ok(Duration::from_nanos((v * scale_ns).round() as u64))
 }
 
 /// How an update-phase token visit applies eqs. 12-13 (both use the frozen
@@ -53,6 +138,35 @@ pub enum UpdateMode {
         /// Stochastic updates applied per token visit.
         samples: usize,
     },
+}
+
+impl UpdateMode {
+    /// Parses the config spelling: `mean` (or `mean-gradient`), or
+    /// `stochastic[:SAMPLES]` (default 1 sample per visit).
+    pub fn parse(s: &str) -> crate::Result<UpdateMode> {
+        if let Some(n) = s.strip_prefix("stochastic:") {
+            return Ok(UpdateMode::Stochastic {
+                samples: n
+                    .trim()
+                    .parse::<usize>()
+                    .with_context(|| format!("stochastic samples {n:?}"))?
+                    .max(1),
+            });
+        }
+        Ok(match s {
+            "mean" | "mean-gradient" => UpdateMode::MeanGradient,
+            "stochastic" => UpdateMode::Stochastic { samples: 1 },
+            other => bail!("unknown update mode {other:?} (mean|stochastic[:N])"),
+        })
+    }
+
+    /// The config spelling; round-trips through [`UpdateMode::parse`].
+    pub fn spec(&self) -> String {
+        match self {
+            UpdateMode::MeanGradient => "mean".to_string(),
+            UpdateMode::Stochastic { samples } => format!("stochastic:{samples}"),
+        }
+    }
 }
 
 /// DS-FACTO engine configuration.
@@ -114,20 +228,33 @@ pub fn train_with_stats(
     fm: &FmHyper,
     cfg: &NomadConfig,
 ) -> crate::Result<(TrainOutput, EngineStats)> {
+    train_with_observer(train_ds, test, fm, cfg, &mut ())
+}
+
+/// Like [`train_with_stats`], reporting every outer iteration to `obs`
+/// (see the observer contract in [`crate::train`]). This is what
+/// [`crate::train::NomadTrainer`] calls.
+pub fn train_with_observer(
+    train_ds: &Dataset,
+    test: Option<&Dataset>,
+    fm: &FmHyper,
+    cfg: &NomadConfig,
+    obs: &mut dyn TrainObserver,
+) -> crate::Result<(TrainOutput, EngineStats)> {
     match cfg.transport {
         TransportKind::Local => {
             let t = LocalTransport::new(cfg.workers.max(1));
-            engine::run(train_ds, test, fm, cfg, &t)
+            engine::run(train_ds, test, fm, cfg, &t, obs)
         }
         TransportKind::SimNet(model) => {
             let t = SimNetTransport::new(cfg.workers.max(1), model);
-            let out = engine::run(train_ds, test, fm, cfg, &*t);
+            let out = engine::run(train_ds, test, fm, cfg, &*t, obs);
             t.shutdown();
             out
         }
         TransportKind::Tcp => {
             let t = crate::cluster::tcp::TcpTransport::new(cfg.workers.max(1))?;
-            let out = engine::run(train_ds, test, fm, cfg, &*t);
+            let out = engine::run(train_ds, test, fm, cfg, &*t, obs);
             t.shutdown();
             out
         }
@@ -187,7 +314,7 @@ mod tests {
             eta: LrSchedule::Constant(0.02),
             ..Default::default()
         };
-        let lout = libfm_train(&train_ds, Some(&test_ds), &fm, &lcfg);
+        let lout = libfm_train(&train_ds, Some(&test_ds), &fm, &lcfg, &mut ());
         let libfm_acc = evaluate(&lout.model, &test_ds).accuracy;
         // Paper Fig. 5: DS-FACTO reaches the same quality as libFM.
         assert!(
@@ -356,5 +483,116 @@ mod tests {
         let a = train(&ds, None, &fm, &cfg).unwrap();
         let b = train(&ds, None, &fm, &cfg).unwrap();
         assert_eq!(a.model, b.model);
+    }
+
+    #[test]
+    fn transport_spec_round_trips() {
+        for spec in [
+            "local",
+            "tcp",
+            "simnet:50us,1000000000,2",
+            "simnet:0.5us,1e9,1", // sub-microsecond: re-emitted as 500ns
+            "simnet:2s,1e6,4",
+        ] {
+            let t = TransportKind::parse(spec).unwrap();
+            assert_eq!(TransportKind::parse(&t.spec()).unwrap(), t, "{spec}");
+        }
+        match TransportKind::parse("simnet:0.5us,1e9,1").unwrap() {
+            TransportKind::SimNet(m) => {
+                assert_eq!(m.latency, Duration::from_nanos(500));
+            }
+            other => panic!("{other:?}"),
+        }
+        let t = TransportKind::parse("simnet:2ms,1.25e9,4").unwrap();
+        match t {
+            TransportKind::SimNet(m) => {
+                assert_eq!(m.latency, Duration::from_millis(2));
+                assert_eq!(m.bandwidth_bps, 1.25e9);
+                assert_eq!(m.workers_per_machine, 4);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            TransportKind::parse("simnet").unwrap(),
+            TransportKind::SimNet(NetModel::default())
+        );
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+        assert!(TransportKind::parse("simnet:1us").is_err());
+        // Bandwidth must be positive and finite — a zero/NaN value would
+        // panic inside the transport's Duration arithmetic mid-run.
+        assert!(TransportKind::parse("simnet:1us,0,1").is_err());
+        assert!(TransportKind::parse("simnet:1us,-1e9,1").is_err());
+        assert!(TransportKind::parse("simnet:1us,NaN,1").is_err());
+    }
+
+    #[test]
+    fn update_mode_spec_round_trips() {
+        for spec in ["mean", "stochastic:4"] {
+            let m = UpdateMode::parse(spec).unwrap();
+            assert_eq!(UpdateMode::parse(&m.spec()).unwrap(), m, "{spec}");
+        }
+        assert_eq!(
+            UpdateMode::parse("stochastic").unwrap(),
+            UpdateMode::Stochastic { samples: 1 }
+        );
+        assert_eq!(UpdateMode::parse("mean-gradient").unwrap(), UpdateMode::MeanGradient);
+        assert!(UpdateMode::parse("adam").is_err());
+    }
+
+    #[test]
+    fn observer_stop_is_honored_within_pipeline_depth() {
+        struct StopAt(usize);
+        impl TrainObserver for StopAt {
+            fn on_iter(
+                &mut self,
+                pt: &crate::metrics::TracePoint,
+                _m: Option<&crate::fm::FmModel>,
+            ) -> crate::train::ControlFlow {
+                if pt.iter >= self.0 {
+                    crate::train::ControlFlow::Stop
+                } else {
+                    crate::train::ControlFlow::Continue
+                }
+            }
+        }
+        let ds = housing();
+        let fm = FmHyper::default();
+        let cfg = NomadConfig {
+            workers: 3,
+            outer_iters: 40,
+            ..Default::default()
+        };
+        let (out, _) = train_with_observer(&ds, None, &fm, &cfg, &mut StopAt(5)).unwrap();
+        let last = out.trace.last().unwrap().iter;
+        assert!(last >= 5, "stopped too early: {last}");
+        assert!(last <= 8, "stop not honored within pipeline depth: {last}");
+        // The trace stays complete and ordered up to the stop.
+        for (i, pt) in out.trace.iter().enumerate() {
+            assert_eq!(pt.iter, i);
+        }
+    }
+
+    #[test]
+    fn observer_stop_at_iter_zero_skips_training() {
+        struct StopNow;
+        impl TrainObserver for StopNow {
+            fn on_iter(
+                &mut self,
+                _pt: &crate::metrics::TracePoint,
+                _m: Option<&crate::fm::FmModel>,
+            ) -> crate::train::ControlFlow {
+                crate::train::ControlFlow::Stop
+            }
+        }
+        let ds = housing();
+        let fm = FmHyper::default();
+        let cfg = NomadConfig {
+            workers: 2,
+            outer_iters: 10,
+            ..Default::default()
+        };
+        let (out, stats) = train_with_observer(&ds, None, &fm, &cfg, &mut StopNow).unwrap();
+        assert_eq!(out.trace.len(), 1);
+        assert_eq!(stats.messages, 0);
     }
 }

@@ -1,0 +1,371 @@
+//! Unified training and serving API: the [`Trainer`] trait every engine
+//! implements, the [`TrainObserver`] callback interface that training
+//! sessions report through, and the [`Predictor`] trait both scoring
+//! backends (native Rust and the AOT XLA artifact) expose.
+//!
+//! Before this module existed, the crate shipped five trainers with five
+//! incompatible signatures, and every caller (CLI, coordinator, examples,
+//! benches) re-plumbed dispatch by hand. Now:
+//!
+//! * **Dispatch** goes through [`TrainerKind::build`], which turns an
+//!   [`ExperimentConfig`] into a `Box<dyn Trainer>`. Adding a new model
+//!   variant (e.g. a rank-aware or binarized FM) means implementing one
+//!   trait, not touching six call sites.
+//! * **Cross-cutting training concerns** — trace capture, eval cadence,
+//!   early stopping, periodic checkpoints, CSV streaming — live in
+//!   composable [`TrainObserver`]s (see [`observers`]), not inside the
+//!   trainer loops.
+//! * **Serving** goes through [`Predictor`] (see [`predict`]), so the
+//!   request path has one interface regardless of backend.
+//!
+//! # The observer contract
+//!
+//! Implementations of [`Trainer::fit`] must:
+//!
+//! 1. Call [`TrainObserver::on_iter`] exactly once per recorded
+//!    [`TracePoint`], **in iteration order**, starting with the pre-training
+//!    point at `iter == 0` and including a point for every completed outer
+//!    iteration. The `TracePoint` carries held-out metrics only on the
+//!    trainer's eval cadence (`eval_every`).
+//! 2. Pass `Some(model)` whenever a model snapshot is cheaply available.
+//!    Trainers for which snapshots are expensive (the distributed NOMAD
+//!    engine must materialize its eventually-consistent mirror) may consult
+//!    [`TrainObserver::wants_model`] first and pass `None` when no observer
+//!    asked for the iteration; `model` is guaranteed to be `Some` whenever
+//!    `wants_model(iter)` returned `true`.
+//! 3. Honor [`ControlFlow::Stop`] by ending training *promptly*: the
+//!    sequential trainers record no further points after a Stop; the
+//!    asynchronous NOMAD engine stops within a bounded number of outer
+//!    iterations (its in-flight pipeline depth, at most three) while
+//!    preserving exact token finalization. The drain-window iterations it
+//!    completes are still recorded — and still delivered through
+//!    `on_iter` (return values ignored once stopping) — so an observer's
+//!    view always equals the returned trace.
+//! 4. Call [`TrainObserver::on_done`] once with the final [`TrainOutput`]
+//!    before returning.
+//!
+//! Observers must tolerate `fit` being invoked multiple times on the same
+//! trainer only if they are freshly constructed per run; the built-in
+//! observers are single-run objects.
+//!
+//! ```no_run
+//! use dsfacto::prelude::*;
+//! use dsfacto::train::observers::{EarlyStop, Observers, TraceRecorder};
+//!
+//! let cfg = ExperimentConfig::default(); // diabetes twin, DS-FACTO engine
+//! let ds = cfg.dataset.load(cfg.seed).unwrap();
+//! let (train, test) = ds.split(0.8, 7);
+//!
+//! let trainer = cfg.trainer.build(&cfg);
+//! let mut rec = TraceRecorder::default();
+//! let mut stop = EarlyStop::new(5, 1e-6);
+//! let mut obs = Observers::new();
+//! obs.push(&mut rec);
+//! obs.push(&mut stop);
+//! let out = trainer.fit(&train, Some(&test), &mut obs).unwrap();
+//! println!("{}: final objective {}", trainer.name(),
+//!          out.trace.last().unwrap().objective);
+//! ```
+
+pub mod observers;
+pub mod predict;
+pub mod trainers;
+
+pub use observers::{Checkpointer, CsvStreamer, EarlyStop, Observers, TraceRecorder};
+pub use predict::{Predictor, XlaPredictor};
+pub use trainers::{
+    BulkSyncTrainer, DsgdTrainer, LibfmTrainer, NomadTrainer, XlaDenseTrainer,
+};
+
+use crate::config::{ExperimentConfig, TrainerKind};
+use crate::data::Dataset;
+use crate::fm::{loss, FmModel};
+use crate::metrics::{evaluate, TracePoint, TrainOutput};
+use crate::nomad::EngineStats;
+
+/// What an observer tells the training session to do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ControlFlow {
+    /// Keep training.
+    #[default]
+    Continue,
+    /// End training promptly (see the module docs for trainer-specific
+    /// latitude) and return the model as of the last completed iteration.
+    Stop,
+}
+
+impl ControlFlow {
+    /// True for [`ControlFlow::Stop`].
+    #[inline]
+    pub fn is_stop(self) -> bool {
+        self == ControlFlow::Stop
+    }
+
+    /// Combines two decisions: `Stop` wins.
+    #[inline]
+    pub fn join(self, other: ControlFlow) -> ControlFlow {
+        if self.is_stop() || other.is_stop() {
+            ControlFlow::Stop
+        } else {
+            ControlFlow::Continue
+        }
+    }
+}
+
+/// Callback interface every training session reports through.
+///
+/// See the module docs for the full contract between trainers and
+/// observers. The unit type `()` implements this as the null observer, so
+/// `&mut ()` is the idiomatic "just train" argument to [`Trainer::fit`].
+pub trait TrainObserver {
+    /// Return true when [`on_iter`](Self::on_iter) needs the model for
+    /// `iter`. Trainers with expensive snapshots only materialize one when
+    /// some observer asks.
+    fn wants_model(&self, _iter: usize) -> bool {
+        false
+    }
+
+    /// Called once per recorded trace point, in iteration order. `model`
+    /// follows the snapshot rules in the module docs.
+    fn on_iter(&mut self, pt: &TracePoint, model: Option<&FmModel>) -> ControlFlow;
+
+    /// Called once with the final output before `fit` returns.
+    fn on_done(&mut self, _out: &TrainOutput) {}
+}
+
+/// The null observer: observes nothing, never stops training.
+impl TrainObserver for () {
+    fn on_iter(&mut self, _pt: &TracePoint, _model: Option<&FmModel>) -> ControlFlow {
+        ControlFlow::Continue
+    }
+}
+
+/// A training engine behind the uniform session API.
+///
+/// Build one from an [`ExperimentConfig`] via [`TrainerKind::build`], or
+/// construct the concrete trainers in [`trainers`] directly when you need
+/// engine-specific knobs.
+pub trait Trainer {
+    /// Canonical trainer name (matches [`TrainerKind::name`]).
+    fn name(&self) -> &'static str;
+
+    /// Runs one training session and returns the trained model, the
+    /// convergence trace and the wall-clock training time.
+    fn fit(
+        &self,
+        train: &Dataset,
+        test: Option<&Dataset>,
+        observer: &mut dyn TrainObserver,
+    ) -> crate::Result<TrainOutput>;
+
+    /// Engine counters from the most recent [`fit`](Self::fit), when the
+    /// engine collects them (the DS-FACTO engine does; the sequential
+    /// baselines return `None`).
+    fn stats(&self) -> Option<EngineStats> {
+        None
+    }
+}
+
+impl TrainerKind {
+    /// Builds the trainer this kind names, configured from `cfg`.
+    ///
+    /// This is the only dispatch point in the crate: the coordinator, the
+    /// CLI, the examples and the benches all obtain trainers here.
+    pub fn build(self, cfg: &ExperimentConfig) -> Box<dyn Trainer> {
+        match self {
+            TrainerKind::Nomad => Box::new(NomadTrainer::new(
+                cfg.fm,
+                crate::nomad::NomadConfig {
+                    workers: cfg.workers,
+                    outer_iters: cfg.outer_iters,
+                    eta: cfg.eta,
+                    seed: cfg.seed,
+                    eval_every: cfg.eval_every,
+                    transport: cfg.transport,
+                    update_mode: cfg.update_mode,
+                    cols_per_token: cfg.cols_per_token,
+                },
+            )),
+            TrainerKind::Libfm => Box::new(LibfmTrainer::new(
+                cfg.fm,
+                crate::baseline::LibfmConfig {
+                    epochs: cfg.outer_iters,
+                    eta: cfg.eta,
+                    seed: cfg.seed,
+                    eval_every: cfg.eval_every,
+                    shuffle: true,
+                },
+            )),
+            TrainerKind::Dsgd => Box::new(DsgdTrainer::new(
+                cfg.fm,
+                crate::baseline::DsgdConfig {
+                    epochs: cfg.outer_iters,
+                    eta: cfg.eta,
+                    workers: cfg.workers,
+                    seed: cfg.seed,
+                    eval_every: cfg.eval_every,
+                },
+            )),
+            TrainerKind::BulkSync => Box::new(BulkSyncTrainer::new(
+                cfg.fm,
+                crate::baseline::BulkSyncConfig {
+                    iters: cfg.outer_iters,
+                    eta: cfg.eta,
+                    workers: cfg.workers,
+                    seed: cfg.seed,
+                    eval_every: cfg.eval_every,
+                },
+            )),
+            TrainerKind::XlaDense => Box::new(XlaDenseTrainer::new(
+                cfg.fm,
+                trainers::XlaDenseConfig {
+                    artifacts_dir: cfg.artifacts_dir.clone(),
+                    epochs: cfg.outer_iters,
+                    eta: cfg.eta,
+                    seed: cfg.seed,
+                    eval_every: cfg.eval_every,
+                },
+            )),
+        }
+    }
+}
+
+/// Computes one convergence-trace point: the regularized training objective
+/// (paper eq. 5), the mean training loss, and — when `test` is given —
+/// held-out metrics. Cadence gating is the caller's job: pass
+/// `test.filter(|_| iter % eval_every == 0)`.
+pub fn trace_point(
+    train: &Dataset,
+    test: Option<&Dataset>,
+    lambda_w: f32,
+    lambda_v: f32,
+    iter: usize,
+    secs: f64,
+    model: &FmModel,
+) -> TracePoint {
+    let mut data_loss = 0f64;
+    for i in 0..train.n() {
+        let (idx, val) = train.rows.row(i);
+        data_loss +=
+            loss::loss(model.score_sparse(idx, val), train.labels[i], train.task) as f64;
+    }
+    data_loss /= train.n().max(1) as f64;
+    let rw: f64 = model.w.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let rv: f64 = model.v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let objective = data_loss + 0.5 * lambda_w as f64 * rw + 0.5 * lambda_v as f64 * rv;
+    TracePoint {
+        iter,
+        secs,
+        objective,
+        train_loss: data_loss,
+        test: test.map(|ts| evaluate(model, ts)),
+    }
+}
+
+/// Shared per-session recording helper used by the trainer loops: computes
+/// each [`TracePoint`] (objective, train loss, cadenced test metrics),
+/// accumulates the trace for [`TrainOutput`], and dispatches every point to
+/// the session's observer. Trainer loops reduce to
+/// `if probe.record(iter, clock, &model, obs).is_stop() { break }`.
+pub struct Probe<'a> {
+    train: &'a Dataset,
+    test: Option<&'a Dataset>,
+    lambda_w: f32,
+    lambda_v: f32,
+    eval_every: usize,
+    trace: Vec<TracePoint>,
+}
+
+impl<'a> Probe<'a> {
+    /// New probe; `eval_every` controls how often test metrics are run.
+    pub fn new(
+        train: &'a Dataset,
+        test: Option<&'a Dataset>,
+        lambda_w: f32,
+        lambda_v: f32,
+        eval_every: usize,
+    ) -> Self {
+        Probe {
+            train,
+            test,
+            lambda_w,
+            lambda_v,
+            eval_every: eval_every.max(1),
+            trace: Vec::new(),
+        }
+    }
+
+    /// Records a point at outer iteration `iter` with training clock `secs`
+    /// and reports it to `obs`. Returns the observer's decision.
+    pub fn record(
+        &mut self,
+        iter: usize,
+        secs: f64,
+        model: &FmModel,
+        obs: &mut dyn TrainObserver,
+    ) -> ControlFlow {
+        let test = self.test.filter(|_| iter % self.eval_every == 0);
+        let pt = trace_point(self.train, test, self.lambda_w, self.lambda_v, iter, secs, model);
+        let flow = obs.on_iter(&pt, Some(model));
+        self.trace.push(pt);
+        flow
+    }
+
+    /// Consumes the probe, yielding the accumulated trace.
+    pub fn into_trace(self) -> Vec<TracePoint> {
+        self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn control_flow_join_prefers_stop() {
+        use ControlFlow::*;
+        assert_eq!(Continue.join(Continue), Continue);
+        assert_eq!(Continue.join(Stop), Stop);
+        assert_eq!(Stop.join(Continue), Stop);
+        assert!(Stop.is_stop());
+        assert!(!Continue.is_stop());
+    }
+
+    #[test]
+    fn trace_point_matches_objective() {
+        let ds = synth::table2_dataset("housing", 3).unwrap();
+        let mut rng = Pcg64::seeded(4);
+        let model = FmModel::init(ds.d(), 4, 0.1, &mut rng);
+        let pt = trace_point(&ds, None, 1e-2, 1e-3, 5, 1.25, &model);
+        assert_eq!(pt.iter, 5);
+        assert!((pt.objective - model.objective(&ds, 1e-2, 1e-3)).abs() < 1e-9);
+        assert!(pt.test.is_none());
+    }
+
+    #[test]
+    fn probe_gates_eval_cadence() {
+        let ds = synth::table2_dataset("housing", 5).unwrap();
+        let (train, test) = ds.split(0.8, 6);
+        let mut rng = Pcg64::seeded(7);
+        let model = FmModel::init(train.d(), 4, 0.1, &mut rng);
+        let mut probe = Probe::new(&train, Some(&test), 0.0, 0.0, 2);
+        for i in 0..5 {
+            assert_eq!(probe.record(i, i as f64, &model, &mut ()), ControlFlow::Continue);
+        }
+        let trace = probe.into_trace();
+        assert_eq!(trace.len(), 5);
+        for pt in &trace {
+            assert_eq!(pt.test.is_some(), pt.iter % 2 == 0, "iter {}", pt.iter);
+        }
+    }
+
+    #[test]
+    fn build_names_match_kinds() {
+        let cfg = ExperimentConfig::default();
+        for kind in TrainerKind::all() {
+            assert_eq!(kind.build(&cfg).name(), kind.name());
+        }
+    }
+}

@@ -1,0 +1,328 @@
+//! Composable [`TrainObserver`]s: trace capture, early stopping, periodic
+//! model checkpointing and CSV streaming — the cross-cutting session logic
+//! the trainer loops no longer carry.
+
+use std::path::{Path, PathBuf};
+
+use crate::fm::FmModel;
+use crate::metrics::{TracePoint, TrainOutput};
+use crate::util::csv::CsvWriter;
+
+use super::{ControlFlow, TrainObserver};
+
+/// Fans one session out to several observers. Every observer sees every
+/// point; the session stops as soon as *any* observer asks to.
+#[derive(Default)]
+pub struct Observers<'a> {
+    list: Vec<&'a mut dyn TrainObserver>,
+}
+
+impl<'a> Observers<'a> {
+    /// An empty composite (equivalent to the null observer).
+    pub fn new() -> Self {
+        Observers { list: Vec::new() }
+    }
+
+    /// Adds an observer to the fan-out.
+    pub fn push(&mut self, obs: &'a mut dyn TrainObserver) {
+        self.list.push(obs);
+    }
+}
+
+impl TrainObserver for Observers<'_> {
+    fn wants_model(&self, iter: usize) -> bool {
+        self.list.iter().any(|o| o.wants_model(iter))
+    }
+
+    fn on_iter(&mut self, pt: &TracePoint, model: Option<&FmModel>) -> ControlFlow {
+        let mut flow = ControlFlow::Continue;
+        for o in self.list.iter_mut() {
+            flow = flow.join(o.on_iter(pt, model));
+        }
+        flow
+    }
+
+    fn on_done(&mut self, out: &TrainOutput) {
+        for o in self.list.iter_mut() {
+            o.on_done(out);
+        }
+    }
+}
+
+/// Captures every [`TracePoint`] the session emits. Useful when driving a
+/// trainer through the trait without keeping the whole [`TrainOutput`], and
+/// in tests that assert on observer-visible state.
+#[derive(Default)]
+pub struct TraceRecorder {
+    /// The points seen so far, in iteration order.
+    pub trace: Vec<TracePoint>,
+}
+
+impl TrainObserver for TraceRecorder {
+    fn on_iter(&mut self, pt: &TracePoint, _model: Option<&FmModel>) -> ControlFlow {
+        self.trace.push(pt.clone());
+        ControlFlow::Continue
+    }
+}
+
+/// Stops training when the objective has not improved by at least
+/// `min_delta` for `patience` consecutive recorded points.
+pub struct EarlyStop {
+    patience: usize,
+    min_delta: f64,
+    best: f64,
+    bad: usize,
+    /// The iteration at which the stop was requested, once triggered.
+    pub stopped_at: Option<usize>,
+}
+
+impl EarlyStop {
+    /// `patience` = how many non-improving points to tolerate;
+    /// `min_delta` = the smallest objective decrease that counts.
+    pub fn new(patience: usize, min_delta: f64) -> Self {
+        EarlyStop {
+            patience: patience.max(1),
+            min_delta,
+            best: f64::INFINITY,
+            bad: 0,
+            stopped_at: None,
+        }
+    }
+}
+
+impl TrainObserver for EarlyStop {
+    fn on_iter(&mut self, pt: &TracePoint, _model: Option<&FmModel>) -> ControlFlow {
+        if pt.objective + self.min_delta < self.best {
+            self.best = pt.objective;
+            self.bad = 0;
+            return ControlFlow::Continue;
+        }
+        self.bad += 1;
+        if self.bad >= self.patience {
+            self.stopped_at = Some(pt.iter);
+            return ControlFlow::Stop;
+        }
+        ControlFlow::Continue
+    }
+}
+
+/// Saves the model every `every` iterations (`ckpt-00010.dsfm` style) and
+/// once more as `final.dsfm` when the session completes.
+pub struct Checkpointer {
+    dir: PathBuf,
+    every: usize,
+    /// Checkpoints written so far (in order).
+    pub saved: Vec<PathBuf>,
+    /// The first I/O error hit, if any (checkpointing never aborts a run).
+    pub error: Option<anyhow::Error>,
+}
+
+impl Checkpointer {
+    /// Checkpoints into `dir` every `every` iterations.
+    pub fn new<P: AsRef<Path>>(dir: P, every: usize) -> Self {
+        Checkpointer {
+            dir: dir.as_ref().to_path_buf(),
+            every: every.max(1),
+            saved: Vec::new(),
+            error: None,
+        }
+    }
+
+    fn save(&mut self, model: &FmModel, filename: String) {
+        let path = self.dir.join(filename);
+        match crate::fm::io::save(model, &path) {
+            Ok(()) => self.saved.push(path),
+            Err(e) => {
+                if self.error.is_none() {
+                    self.error = Some(e);
+                }
+            }
+        }
+    }
+}
+
+impl TrainObserver for Checkpointer {
+    fn wants_model(&self, iter: usize) -> bool {
+        iter > 0 && iter % self.every == 0
+    }
+
+    fn on_iter(&mut self, pt: &TracePoint, model: Option<&FmModel>) -> ControlFlow {
+        if pt.iter > 0 && pt.iter % self.every == 0 {
+            if let Some(m) = model {
+                self.save(m, format!("ckpt-{:05}.dsfm", pt.iter));
+            }
+        }
+        ControlFlow::Continue
+    }
+
+    fn on_done(&mut self, out: &TrainOutput) {
+        self.save(&out.model, "final.dsfm".to_string());
+    }
+}
+
+/// The CSV column set every trace series uses (the Fig 4/5 format).
+pub const TRACE_COLUMNS: [&str; 6] =
+    ["iter", "secs", "objective", "train_loss", "test_loss", "test_metric"];
+
+/// Formats one trace point as a [`TRACE_COLUMNS`] row.
+pub fn trace_row(pt: &TracePoint) -> Vec<String> {
+    let (tl, tm) = match &pt.test {
+        Some(m) => (
+            format!("{}", m.loss),
+            format!("{}", if m.rmse.is_nan() { m.accuracy } else { m.rmse }),
+        ),
+        None => (String::new(), String::new()),
+    };
+    vec![
+        pt.iter.to_string(),
+        format!("{:.6}", pt.secs),
+        format!("{}", pt.objective),
+        format!("{}", pt.train_loss),
+        tl,
+        tm,
+    ]
+}
+
+/// Streams the convergence trace to a CSV file as training runs, one row
+/// per recorded point, flushed eagerly so partial runs leave usable series.
+pub struct CsvStreamer {
+    writer: CsvWriter,
+    error: Option<anyhow::Error>,
+}
+
+impl CsvStreamer {
+    /// Creates the file (and parent dirs) and writes the header.
+    pub fn create<P: AsRef<Path>>(path: P) -> crate::Result<Self> {
+        Ok(CsvStreamer {
+            writer: CsvWriter::create(path, &TRACE_COLUMNS)?,
+            error: None,
+        })
+    }
+
+    /// Surfaces the first write error, if any, after the session.
+    pub fn finish(self) -> crate::Result<()> {
+        match self.error {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl TrainObserver for CsvStreamer {
+    fn on_iter(&mut self, pt: &TracePoint, _model: Option<&FmModel>) -> ControlFlow {
+        let write = self
+            .writer
+            .row(&trace_row(pt))
+            .and_then(|()| self.writer.flush());
+        if let Err(e) = write {
+            if self.error.is_none() {
+                self.error = Some(e);
+            }
+        }
+        ControlFlow::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EvalMetrics;
+
+    fn pt(iter: usize, objective: f64) -> TracePoint {
+        TracePoint {
+            iter,
+            secs: iter as f64,
+            objective,
+            train_loss: objective,
+            test: None,
+        }
+    }
+
+    fn model() -> FmModel {
+        FmModel::zeros(3, 2)
+    }
+
+    #[test]
+    fn early_stop_triggers_after_patience() {
+        let mut es = EarlyStop::new(2, 1e-9);
+        assert_eq!(es.on_iter(&pt(0, 1.0), None), ControlFlow::Continue);
+        assert_eq!(es.on_iter(&pt(1, 0.5), None), ControlFlow::Continue); // improves
+        assert_eq!(es.on_iter(&pt(2, 0.5), None), ControlFlow::Continue); // bad 1
+        assert_eq!(es.on_iter(&pt(3, 0.51), None), ControlFlow::Stop); // bad 2
+        assert_eq!(es.stopped_at, Some(3));
+    }
+
+    #[test]
+    fn early_stop_resets_on_improvement() {
+        let mut es = EarlyStop::new(2, 1e-9);
+        es.on_iter(&pt(0, 1.0), None);
+        es.on_iter(&pt(1, 1.0), None); // bad 1
+        es.on_iter(&pt(2, 0.5), None); // improvement resets
+        assert_eq!(es.on_iter(&pt(3, 0.5), None), ControlFlow::Continue); // bad 1 again
+        assert!(es.stopped_at.is_none());
+    }
+
+    #[test]
+    fn checkpointer_saves_on_cadence_and_done() {
+        let dir = std::env::temp_dir().join("dsfacto_ckpt_obs_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut ck = Checkpointer::new(&dir, 2);
+        let m = model();
+        assert!(!ck.wants_model(1));
+        assert!(ck.wants_model(2));
+        for i in 0..=4 {
+            ck.on_iter(&pt(i, 1.0), Some(&m));
+        }
+        ck.on_done(&TrainOutput {
+            model: m.clone(),
+            trace: vec![],
+            wall_secs: 0.0,
+        });
+        assert!(ck.error.is_none(), "{:?}", ck.error);
+        assert_eq!(ck.saved.len(), 3); // iters 2, 4 + final
+        assert!(ck.saved[0].ends_with("ckpt-00002.dsfm"));
+        assert!(ck.saved[2].ends_with("final.dsfm"));
+        let back = crate::fm::io::load(&ck.saved[2]).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn observers_fan_out_and_stop_wins() {
+        let mut rec = TraceRecorder::default();
+        let mut es = EarlyStop::new(1, 1e-9);
+        let mut obs = Observers::new();
+        obs.push(&mut rec);
+        obs.push(&mut es);
+        assert_eq!(obs.on_iter(&pt(0, 1.0), None), ControlFlow::Continue);
+        // No improvement: EarlyStop(patience=1) stops; recorder still sees it.
+        assert_eq!(obs.on_iter(&pt(1, 1.0), None), ControlFlow::Stop);
+        drop(obs);
+        assert_eq!(rec.trace.len(), 2);
+        assert_eq!(es.stopped_at, Some(1));
+    }
+
+    #[test]
+    fn csv_streamer_writes_trace_rows() {
+        let dir = std::env::temp_dir().join("dsfacto_csv_obs_test");
+        let path = dir.join("trace.csv");
+        let mut csv = CsvStreamer::create(&path).unwrap();
+        let mut with_test = pt(0, 2.0);
+        with_test.test = Some(EvalMetrics {
+            loss: 0.5,
+            rmse: 1.5,
+            accuracy: f64::NAN,
+            auc: f64::NAN,
+        });
+        csv.on_iter(&with_test, None);
+        csv.on_iter(&pt(1, 1.0), None);
+        csv.finish().unwrap();
+        let (hdr, rows) = crate::util::csv::read_csv(&path).unwrap();
+        assert_eq!(hdr, TRACE_COLUMNS.to_vec());
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0][0], "0");
+        assert_eq!(rows[0][5], "1.5"); // rmse is the headline column
+        assert_eq!(rows[1][4], ""); // no test metrics on row 1
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

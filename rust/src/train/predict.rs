@@ -1,0 +1,207 @@
+//! The serving-side [`Predictor`] trait: one scoring interface over both
+//! backends — the native Rust scorer ([`FmModel`]) and the AOT XLA `score`
+//! artifact ([`XlaPredictor`]). Integration tests assert the two agree on
+//! the Table-2 datasets.
+
+use anyhow::ensure;
+
+use crate::data::{Csr, Dataset};
+use crate::fm::FmModel;
+use crate::runtime::{artifact_name_for, FmExecutable, Runtime};
+
+/// Scores examples; the request-path abstraction.
+pub trait Predictor {
+    /// Backend name (for logs).
+    fn name(&self) -> &'static str;
+
+    /// Scores one sparse example.
+    fn predict_one(&self, idx: &[u32], val: &[f32]) -> crate::Result<f32>;
+
+    /// Scores every row of a sparse block into `out`
+    /// (`out.len() == rows.n_rows()`).
+    fn predict_batch(&self, rows: &Csr, out: &mut [f32]) -> crate::Result<()>;
+
+    /// Convenience: scores a whole dataset.
+    fn predict_dataset(&self, ds: &Dataset) -> crate::Result<Vec<f32>> {
+        let mut out = vec![0f32; ds.n()];
+        self.predict_batch(&ds.rows, &mut out)?;
+        Ok(out)
+    }
+}
+
+/// The native scorer: paper eq. 4's O(K nnz) rewrite, no batching, no
+/// shape specialization.
+impl Predictor for FmModel {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn predict_one(&self, idx: &[u32], val: &[f32]) -> crate::Result<f32> {
+        ensure!(idx.len() == val.len(), "index/value length mismatch");
+        ensure!(
+            idx.iter().all(|&j| (j as usize) < self.d),
+            "feature index out of range for d={}",
+            self.d
+        );
+        Ok(self.score_sparse(idx, val))
+    }
+
+    fn predict_batch(&self, rows: &Csr, out: &mut [f32]) -> crate::Result<()> {
+        ensure!(
+            out.len() == rows.n_rows(),
+            "output buffer {} != rows {}",
+            out.len(),
+            rows.n_rows()
+        );
+        ensure!(
+            rows.n_cols() <= self.d,
+            "block width {} exceeds model d={}",
+            rows.n_cols(),
+            self.d
+        );
+        for (i, o) in out.iter_mut().enumerate() {
+            let (idx, val) = rows.row(i);
+            *o = self.score_sparse(idx, val);
+        }
+        Ok(())
+    }
+}
+
+/// The XLA-artifact scorer: densifies rows into the artifact's fixed
+/// (B, D) batch shape and executes the AOT-compiled `score` entry point
+/// (the Pallas-kernel request path).
+pub struct XlaPredictor {
+    exec: FmExecutable,
+    model: FmModel,
+}
+
+impl XlaPredictor {
+    /// Wraps a loaded `score` executable around a model; the shapes must
+    /// match the artifact's specialization.
+    pub fn new(exec: FmExecutable, model: FmModel) -> crate::Result<Self> {
+        ensure!(exec.spec.entry == "score", "not a score artifact");
+        ensure!(
+            exec.spec.d == model.d && exec.spec.k == model.k,
+            "artifact (d={}, k={}) != model (d={}, k={})",
+            exec.spec.d,
+            exec.spec.k,
+            model.d,
+            model.k
+        );
+        Ok(XlaPredictor { exec, model })
+    }
+
+    /// Loads the score artifact matching the dataset's shape and binds it
+    /// to `model`.
+    pub fn for_dataset(artifacts_dir: &str, ds: &Dataset, model: FmModel) -> crate::Result<Self> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let exec = rt.load(&artifact_name_for(ds), "score")?;
+        ensure!(
+            exec.spec.d == ds.d(),
+            "artifact d={} != dataset d={}",
+            exec.spec.d,
+            ds.d()
+        );
+        Self::new(exec, model)
+    }
+
+    /// The model this predictor serves.
+    pub fn model(&self) -> &FmModel {
+        &self.model
+    }
+
+    fn densify_rows(&self, rows: &Csr, start: usize, xbuf: &mut [f32]) -> usize {
+        let d = self.exec.spec.d;
+        xbuf.fill(0.0);
+        let real = self.exec.batch().min(rows.n_rows() - start);
+        for r in 0..real {
+            let (idx, val) = rows.row(start + r);
+            let row = &mut xbuf[r * d..(r + 1) * d];
+            for (j, v) in idx.iter().zip(val) {
+                row[*j as usize] = *v;
+            }
+        }
+        real
+    }
+}
+
+impl Predictor for XlaPredictor {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn predict_one(&self, idx: &[u32], val: &[f32]) -> crate::Result<f32> {
+        let (b, d) = (self.exec.batch(), self.exec.spec.d);
+        ensure!(idx.len() == val.len(), "index/value length mismatch");
+        ensure!(
+            idx.iter().all(|&j| (j as usize) < d),
+            "feature index out of range for d={d}"
+        );
+        let mut xbuf = vec![0f32; b * d];
+        for (j, v) in idx.iter().zip(val) {
+            xbuf[*j as usize] = *v;
+        }
+        Ok(self.exec.score_batch(&self.model, &xbuf)?[0])
+    }
+
+    fn predict_batch(&self, rows: &Csr, out: &mut [f32]) -> crate::Result<()> {
+        let (b, d) = (self.exec.batch(), self.exec.spec.d);
+        ensure!(
+            out.len() == rows.n_rows(),
+            "output buffer {} != rows {}",
+            out.len(),
+            rows.n_rows()
+        );
+        ensure!(
+            rows.n_cols() <= d,
+            "block width {} exceeds artifact d={d}",
+            rows.n_cols()
+        );
+        let mut xbuf = vec![0f32; b * d];
+        let mut start = 0;
+        while start < rows.n_rows() {
+            let real = self.densify_rows(rows, start, &mut xbuf);
+            let scores = self.exec.score_batch(&self.model, &xbuf)?;
+            out[start..start + real].copy_from_slice(&scores[..real]);
+            start += real;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::rng::Pcg64;
+
+    // XLA-backed predictor tests live in rust/tests/runtime_integration.rs
+    // (they need built artifacts); the native path is covered here.
+
+    #[test]
+    fn native_predictor_matches_scorer() {
+        let ds = synth::table2_dataset("housing", 9).unwrap();
+        let mut rng = Pcg64::seeded(10);
+        let model = FmModel::init(ds.d(), 4, 0.1, &mut rng);
+        let p: &dyn Predictor = &model;
+        let scores = p.predict_dataset(&ds).unwrap();
+        assert_eq!(scores.len(), ds.n());
+        for i in (0..ds.n()).step_by(37) {
+            let (idx, val) = ds.rows.row(i);
+            assert_eq!(scores[i], model.score_sparse(idx, val));
+            assert_eq!(p.predict_one(idx, val).unwrap(), scores[i]);
+        }
+    }
+
+    #[test]
+    fn native_predictor_validates_shapes() {
+        let model = FmModel::zeros(4, 2);
+        assert!(model.predict_one(&[5], &[1.0]).is_err()); // index out of range
+        assert!(model.predict_one(&[0, 1], &[1.0]).is_err()); // arity mismatch
+        let rows = Csr::from_triplets(2, 3, &[(0, 0, 1.0), (1, 2, 2.0)]);
+        let mut out = vec![0f32; 1];
+        assert!(model.predict_batch(&rows, &mut out).is_err()); // wrong buffer
+        let mut out = vec![0f32; 2];
+        model.predict_batch(&rows, &mut out).unwrap(); // width 3 <= d 4
+    }
+}

@@ -1,0 +1,263 @@
+//! The five [`Trainer`] implementations: DS-FACTO (NOMAD), the libFM /
+//! DSGD / bulk-synchronous baselines, and the dense-minibatch trainer that
+//! runs the update inside the AOT XLA `step` artifact.
+//!
+//! Each trainer owns a proper config struct; [`TrainerKind::build`]
+//! (`crate::config::TrainerKind`) constructs them from an
+//! [`ExperimentConfig`](crate::config::ExperimentConfig).
+
+use std::cell::RefCell;
+
+use crate::baseline::{
+    bulksync_train, dsgd_train, libfm_train, BulkSyncConfig, DsgdConfig, LibfmConfig,
+};
+use crate::data::Dataset;
+use crate::fm::{FmHyper, FmModel};
+use crate::metrics::TrainOutput;
+use crate::nomad::{self, EngineStats, NomadConfig};
+use crate::optim::LrSchedule;
+use crate::runtime::{artifact_name_for, Runtime};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+use super::{Probe, TrainObserver, Trainer};
+
+/// DS-FACTO: the paper's hybrid-parallel NOMAD engine behind the session
+/// API. Keeps the engine counters of the most recent run for
+/// [`Trainer::stats`].
+pub struct NomadTrainer {
+    fm: FmHyper,
+    cfg: NomadConfig,
+    stats: RefCell<Option<EngineStats>>,
+}
+
+impl NomadTrainer {
+    /// A trainer for the given hyper-parameters and engine config.
+    pub fn new(fm: FmHyper, cfg: NomadConfig) -> Self {
+        NomadTrainer {
+            fm,
+            cfg,
+            stats: RefCell::new(None),
+        }
+    }
+}
+
+impl Trainer for NomadTrainer {
+    fn name(&self) -> &'static str {
+        "nomad"
+    }
+
+    fn fit(
+        &self,
+        train: &Dataset,
+        test: Option<&Dataset>,
+        observer: &mut dyn TrainObserver,
+    ) -> crate::Result<TrainOutput> {
+        let (out, stats) = nomad::train_with_observer(train, test, &self.fm, &self.cfg, observer)?;
+        *self.stats.borrow_mut() = Some(stats);
+        observer.on_done(&out);
+        Ok(out)
+    }
+
+    fn stats(&self) -> Option<EngineStats> {
+        self.stats.borrow().clone()
+    }
+}
+
+/// libFM-style single-machine SGD behind the session API.
+pub struct LibfmTrainer {
+    fm: FmHyper,
+    cfg: LibfmConfig,
+}
+
+impl LibfmTrainer {
+    /// A trainer for the given hyper-parameters and baseline config.
+    pub fn new(fm: FmHyper, cfg: LibfmConfig) -> Self {
+        LibfmTrainer { fm, cfg }
+    }
+}
+
+impl Trainer for LibfmTrainer {
+    fn name(&self) -> &'static str {
+        "libfm"
+    }
+
+    fn fit(
+        &self,
+        train: &Dataset,
+        test: Option<&Dataset>,
+        observer: &mut dyn TrainObserver,
+    ) -> crate::Result<TrainOutput> {
+        let out = libfm_train(train, test, &self.fm, &self.cfg, observer);
+        observer.on_done(&out);
+        Ok(out)
+    }
+}
+
+/// Synchronous block-cyclic DSGD behind the session API.
+pub struct DsgdTrainer {
+    fm: FmHyper,
+    cfg: DsgdConfig,
+}
+
+impl DsgdTrainer {
+    /// A trainer for the given hyper-parameters and baseline config.
+    pub fn new(fm: FmHyper, cfg: DsgdConfig) -> Self {
+        DsgdTrainer { fm, cfg }
+    }
+}
+
+impl Trainer for DsgdTrainer {
+    fn name(&self) -> &'static str {
+        "dsgd"
+    }
+
+    fn fit(
+        &self,
+        train: &Dataset,
+        test: Option<&Dataset>,
+        observer: &mut dyn TrainObserver,
+    ) -> crate::Result<TrainOutput> {
+        let out = dsgd_train(train, test, &self.fm, &self.cfg, observer);
+        observer.on_done(&out);
+        Ok(out)
+    }
+}
+
+/// Bulk-synchronous full-gradient descent behind the session API.
+pub struct BulkSyncTrainer {
+    fm: FmHyper,
+    cfg: BulkSyncConfig,
+}
+
+impl BulkSyncTrainer {
+    /// A trainer for the given hyper-parameters and baseline config.
+    pub fn new(fm: FmHyper, cfg: BulkSyncConfig) -> Self {
+        BulkSyncTrainer { fm, cfg }
+    }
+}
+
+impl Trainer for BulkSyncTrainer {
+    fn name(&self) -> &'static str {
+        "bulksync"
+    }
+
+    fn fit(
+        &self,
+        train: &Dataset,
+        test: Option<&Dataset>,
+        observer: &mut dyn TrainObserver,
+    ) -> crate::Result<TrainOutput> {
+        let out = bulksync_train(train, test, &self.fm, &self.cfg, observer);
+        observer.on_done(&out);
+        Ok(out)
+    }
+}
+
+/// Configuration of the dense-minibatch XLA trainer.
+#[derive(Debug, Clone)]
+pub struct XlaDenseConfig {
+    /// Directory holding the AOT artifacts (`manifest.txt`).
+    pub artifacts_dir: String,
+    /// Epochs (outer iterations).
+    pub epochs: usize,
+    /// Learning-rate schedule.
+    pub eta: LrSchedule,
+    /// RNG seed (model init).
+    pub seed: u64,
+    /// Evaluate held-out metrics every this many epochs.
+    pub eval_every: usize,
+}
+
+impl Default for XlaDenseConfig {
+    fn default() -> Self {
+        XlaDenseConfig {
+            artifacts_dir: "artifacts".into(),
+            epochs: 50,
+            eta: LrSchedule::default(),
+            seed: 42,
+            eval_every: 1,
+        }
+    }
+}
+
+/// Dense-minibatch SGD through the AOT `step` artifact: the trainer variant
+/// that runs the paper's update entirely inside XLA (demonstrates the
+/// L3->L2->L1 training path).
+pub struct XlaDenseTrainer {
+    fm: FmHyper,
+    cfg: XlaDenseConfig,
+}
+
+impl XlaDenseTrainer {
+    /// A trainer for the given hyper-parameters and artifact config.
+    pub fn new(fm: FmHyper, cfg: XlaDenseConfig) -> Self {
+        XlaDenseTrainer { fm, cfg }
+    }
+}
+
+impl Trainer for XlaDenseTrainer {
+    fn name(&self) -> &'static str {
+        "xla-dense"
+    }
+
+    fn fit(
+        &self,
+        train: &Dataset,
+        test: Option<&Dataset>,
+        observer: &mut dyn TrainObserver,
+    ) -> crate::Result<TrainOutput> {
+        let fm = &self.fm;
+        let cfg = &self.cfg;
+        let rt = Runtime::new(&cfg.artifacts_dir)?;
+        let name = artifact_name_for(train);
+        let step = rt.load(&name, "step")?;
+        anyhow::ensure!(step.spec.d == train.d(), "artifact/dataset shape mismatch");
+        let (b, k) = (step.spec.b, step.spec.k);
+        anyhow::ensure!(
+            k == fm.k,
+            "artifact k={k} != config k={} (dense XLA trainer is shape-specialized)",
+            fm.k
+        );
+
+        let mut rng = Pcg64::new(cfg.seed, 0x71a);
+        let mut model = FmModel::init(train.d(), k, fm.init_std, &mut rng);
+        let mut probe = Probe::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
+
+        let mut xbuf = vec![0f32; b * train.d()];
+        let mut ybuf = vec![0f32; b];
+        let mut sw = Stopwatch::start();
+        let mut clock = 0f64;
+        let mut stopped = probe.record(0, 0.0, &model, observer).is_stop();
+        sw.lap();
+
+        let n_batches = train.n().div_ceil(b);
+        for epoch in 0..cfg.epochs {
+            if stopped {
+                break;
+            }
+            let eta = cfg.eta.at(epoch);
+            for bi in 0..n_batches {
+                let start = bi * b;
+                let real = train.densify_batch(start, b, &mut xbuf);
+                train.labels_batch(start, b, &mut ybuf);
+                // Padding rows have x=0, y=0: their squared-loss gradient
+                // contribution is w0-only; rescale eta by real/b to keep the
+                // batch-mean semantics approximately right on the tail batch.
+                let eff_eta = eta * (real as f32 / b as f32);
+                step.step_batch(&mut model, &xbuf, &ybuf, eff_eta, fm.lambda_w, fm.lambda_v)?;
+            }
+            clock += sw.lap();
+            stopped = probe.record(epoch + 1, clock, &model, observer).is_stop();
+            sw.lap();
+        }
+
+        let out = TrainOutput {
+            model,
+            trace: probe.into_trace(),
+            wall_secs: clock,
+        };
+        observer.on_done(&out);
+        Ok(out)
+    }
+}

@@ -224,10 +224,69 @@ fn xla_dense_trainer_converges_on_tiny() {
     cfg.outer_iters = 30;
     cfg.eta = dsfacto::optim::LrSchedule::Constant(0.05);
     cfg.fm.k = 4;
-    let out = dsfacto::coordinator::xla_dense_train(&cfg, &train, &test).unwrap();
+    // Through the uniform Trainer API, like every other engine.
+    let trainer = cfg.trainer.build(&cfg);
+    assert_eq!(trainer.name(), "xla-dense");
+    let out = trainer.fit(&train, Some(&test), &mut ()).unwrap();
+    assert_eq!(out.trace.len(), 31);
     let first = out.trace.first().unwrap().objective;
     let last = out.trace.last().unwrap().objective;
     assert!(last < 0.6 * first, "XLA dense trainer: {first} -> {last}");
+}
+
+#[test]
+fn predictor_trait_native_and_xla_agree() {
+    // The acceptance check for the serving API: both scorer backends are
+    // reachable through `Predictor`, and batch predictions agree within
+    // tolerance on a Table-2 dataset.
+    use dsfacto::train::{Predictor, XlaPredictor};
+    let dir = require_artifacts!();
+    let ds = synth::table2_dataset("diabetes", 7).unwrap();
+    let model = random_model(ds.d(), 4, 21);
+
+    let native: &dyn Predictor = &model;
+    let native_scores = native.predict_dataset(&ds).unwrap();
+
+    let xla = XlaPredictor::for_dataset(&dir, &ds, model.clone()).unwrap();
+    let xla_pred: &dyn Predictor = &xla;
+    let mut xla_scores = vec![0f32; ds.n()];
+    xla_pred.predict_batch(&ds.rows, &mut xla_scores).unwrap();
+
+    assert_eq!(native_scores.len(), xla_scores.len());
+    for (i, (a, b)) in native_scores.iter().zip(&xla_scores).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+            "row {i}: native {a} vs xla {b}"
+        );
+    }
+
+    // Single-example entry point agrees too.
+    let (idx, val) = ds.rows.row(0);
+    let one_native = native.predict_one(idx, val).unwrap();
+    let one_xla = xla_pred.predict_one(idx, val).unwrap();
+    assert!(
+        (one_native - one_xla).abs() < 1e-3 * (1.0 + one_native.abs()),
+        "{one_native} vs {one_xla}"
+    );
+}
+
+#[test]
+fn evaluator_into_predictor_serves_the_trained_model() {
+    let dir = require_artifacts!();
+    let ds = synth::table2_dataset("housing", 23).unwrap();
+    let model = random_model(ds.d(), 4, 24);
+    let pred = dsfacto::coordinator::Evaluator::for_dataset(&dir, &ds)
+        .unwrap()
+        .into_predictor(model.clone())
+        .unwrap();
+    let scores = dsfacto::train::Predictor::predict_dataset(&pred, &ds).unwrap();
+    let (idx, val) = ds.rows.row(0);
+    let want = model.score_sparse(idx, val);
+    assert!(
+        (scores[0] - want).abs() < 1e-3 * (1.0 + want.abs()),
+        "{} vs {want}",
+        scores[0]
+    );
 }
 
 #[test]

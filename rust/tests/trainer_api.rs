@@ -1,0 +1,169 @@
+//! Trainer/observer API conformance: one parameterized suite that drives
+//! every `TrainerKind` through the `Trainer` trait and asserts the session
+//! contract — trace completeness, monotone clocks, objective descent,
+//! observer delivery, seed determinism — plus unit coverage for the
+//! `EarlyStop` and `Checkpointer` observers against a live trainer.
+
+use dsfacto::config::{DatasetSpec, ExperimentConfig, TrainerKind};
+use dsfacto::optim::LrSchedule;
+use dsfacto::train::{Checkpointer, EarlyStop, Observers, TraceRecorder};
+
+/// The trainers that run without AOT artifacts. XlaDense conformance is in
+/// rust/tests/runtime_integration.rs (it needs `make artifacts`).
+const CPU_KINDS: [TrainerKind; 4] = [
+    TrainerKind::Nomad,
+    TrainerKind::Libfm,
+    TrainerKind::Dsgd,
+    TrainerKind::BulkSync,
+];
+
+fn housing_cfg(kind: TrainerKind, iters: usize, workers: usize) -> ExperimentConfig {
+    // Distributed engines take batch-GD-scale steps; libFM takes
+    // per-example SGD steps.
+    let eta = match kind {
+        TrainerKind::Libfm => 0.02,
+        _ => 0.5,
+    };
+    ExperimentConfig {
+        dataset: DatasetSpec::Table2("housing".into()),
+        trainer: kind,
+        outer_iters: iters,
+        workers,
+        eta: LrSchedule::Constant(eta),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_kind_satisfies_the_session_contract() {
+    for kind in CPU_KINDS {
+        let cfg = housing_cfg(kind, 8, 2);
+        let ds = cfg.dataset.load(cfg.seed).unwrap();
+        let (train, test) = ds.split(0.8, 9);
+
+        let trainer = cfg.trainer.build(&cfg);
+        assert_eq!(trainer.name(), kind.name());
+
+        let mut rec = TraceRecorder::default();
+        let out = trainer.fit(&train, Some(&test), &mut rec).unwrap();
+
+        // Trace covers iteration 0 plus every outer iteration, in order.
+        assert_eq!(out.trace.len(), 9, "{kind:?}");
+        for (i, pt) in out.trace.iter().enumerate() {
+            assert_eq!(pt.iter, i, "{kind:?}");
+        }
+        // Timestamps are monotone.
+        assert!(
+            out.trace.windows(2).all(|w| w[0].secs <= w[1].secs),
+            "{kind:?}: non-monotone clock"
+        );
+        // The objective descends.
+        let (first, last) = (out.trace[0].objective, out.trace[8].objective);
+        assert!(last < first, "{kind:?}: objective {first} -> {last}");
+        // The eval cadence produced held-out metrics on every point
+        // (eval_every = 1 by default).
+        assert!(out.trace.iter().all(|p| p.test.is_some()), "{kind:?}");
+        // The observer saw exactly the recorded trace. (Field-wise check:
+        // regression EvalMetrics carry NaN accuracy, so `==` on whole
+        // points would be vacuously false.)
+        assert_eq!(rec.trace.len(), out.trace.len(), "{kind:?}");
+        for (a, b) in rec.trace.iter().zip(&out.trace) {
+            assert_eq!(a.iter, b.iter, "{kind:?}");
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{kind:?}");
+            assert_eq!(a.secs.to_bits(), b.secs.to_bits(), "{kind:?}");
+        }
+    }
+}
+
+#[test]
+fn every_kind_is_seed_deterministic() {
+    for kind in CPU_KINDS {
+        // P=1 makes even the asynchronous engine deterministic; the
+        // synchronous trainers are deterministic at any worker count.
+        let workers = match kind {
+            TrainerKind::Nomad => 1,
+            _ => 2,
+        };
+        let cfg = housing_cfg(kind, 4, workers);
+        let ds = cfg.dataset.load(cfg.seed).unwrap();
+        let a = cfg.trainer.build(&cfg).fit(&ds, None, &mut ()).unwrap();
+        let b = cfg.trainer.build(&cfg).fit(&ds, None, &mut ()).unwrap();
+        assert_eq!(a.model, b.model, "{kind:?}: same seed, different model");
+    }
+}
+
+#[test]
+fn early_stop_observer_ends_sessions_early() {
+    // eta = 0 trains in place: the objective never improves, so EarlyStop
+    // fires after exactly `patience` non-improving points (iters 1..=3).
+    let mut cfg = housing_cfg(TrainerKind::Libfm, 30, 1);
+    cfg.eta = LrSchedule::Constant(0.0);
+    let ds = cfg.dataset.load(cfg.seed).unwrap();
+    let mut stop = EarlyStop::new(3, 1e-12);
+    let out = cfg.trainer.build(&cfg).fit(&ds, None, &mut stop).unwrap();
+    assert_eq!(stop.stopped_at, Some(3));
+    assert_eq!(out.trace.len(), 4, "stopped after iters 0..=3");
+}
+
+#[test]
+fn checkpointer_observer_saves_on_cadence() {
+    let dir = std::env::temp_dir().join("dsfacto_trainer_api_ckpt");
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = housing_cfg(TrainerKind::Libfm, 5, 1);
+    let ds = cfg.dataset.load(cfg.seed).unwrap();
+    let mut ck = Checkpointer::new(&dir, 2);
+    let out = cfg.trainer.build(&cfg).fit(&ds, None, &mut ck).unwrap();
+    assert!(ck.error.is_none(), "{:?}", ck.error);
+    // iters 2 and 4, plus the final model on completion.
+    assert_eq!(ck.saved.len(), 3, "{:?}", ck.saved);
+    assert!(ck.saved[0].ends_with("ckpt-00002.dsfm"));
+    assert!(ck.saved[1].ends_with("ckpt-00004.dsfm"));
+    assert!(ck.saved[2].ends_with("final.dsfm"));
+    let last = dsfacto::fm::io::load(&ck.saved[2]).unwrap();
+    assert_eq!(last, out.model, "final checkpoint is the returned model");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn composed_observers_all_see_the_session() {
+    let cfg = housing_cfg(TrainerKind::Dsgd, 6, 2);
+    let ds = cfg.dataset.load(cfg.seed).unwrap();
+    let mut rec = TraceRecorder::default();
+    let mut stop = EarlyStop::new(50, 1e-12); // never fires in 6 iters
+    let out = {
+        let mut obs = Observers::new();
+        obs.push(&mut rec);
+        obs.push(&mut stop);
+        cfg.trainer.build(&cfg).fit(&ds, None, &mut obs).unwrap()
+    };
+    assert_eq!(rec.trace.len(), out.trace.len());
+    assert!(stop.stopped_at.is_none());
+}
+
+#[test]
+fn observer_stop_bounds_the_async_engine_overrun() {
+    // The decentralized engine may overrun a Stop by its pipeline depth
+    // (at most three outer iterations), never more.
+    struct StopAt(usize);
+    impl dsfacto::train::TrainObserver for StopAt {
+        fn on_iter(
+            &mut self,
+            pt: &dsfacto::metrics::TracePoint,
+            _m: Option<&dsfacto::fm::FmModel>,
+        ) -> dsfacto::train::ControlFlow {
+            if pt.iter >= self.0 {
+                dsfacto::train::ControlFlow::Stop
+            } else {
+                dsfacto::train::ControlFlow::Continue
+            }
+        }
+    }
+    let cfg = housing_cfg(TrainerKind::Nomad, 30, 3);
+    let ds = cfg.dataset.load(cfg.seed).unwrap();
+    let out = cfg.trainer.build(&cfg).fit(&ds, None, &mut StopAt(4)).unwrap();
+    let last = out.trace.last().unwrap().iter;
+    assert!((4..=7).contains(&last), "stop at 4 ended at {last}");
+    for (i, pt) in out.trace.iter().enumerate() {
+        assert_eq!(pt.iter, i);
+    }
+}

@@ -1,12 +1,12 @@
 //! Cross-trainer parity (the Fig. 4/5 qualitative claims): DS-FACTO reaches
 //! the same solution quality as the libFM baseline and the synchronous
-//! variants on every Table-2 twin that fits in test time.
+//! variants on every Table-2 twin that fits in test time. All trainers run
+//! through `TrainerKind::build` — the uniform session API.
 
-use dsfacto::baseline::{bulksync_train, dsgd_train, libfm_train, DsgdConfig, LibfmConfig};
+use dsfacto::config::{DatasetSpec, ExperimentConfig, TrainerKind};
 use dsfacto::data::{synth, Task};
 use dsfacto::fm::FmHyper;
 use dsfacto::metrics::evaluate;
-use dsfacto::nomad::{train as nomad_train, NomadConfig};
 use dsfacto::optim::LrSchedule;
 
 struct Quality {
@@ -14,57 +14,48 @@ struct Quality {
     headline: f64,
 }
 
+/// Per-trainer budget: (iterations, step size) at parity quality.
+fn budget(kind: TrainerKind) -> (usize, f32) {
+    match kind {
+        TrainerKind::Nomad => (60, 0.5),
+        TrainerKind::Libfm => (40, 0.02),
+        TrainerKind::Dsgd => (60, 0.5),
+        TrainerKind::BulkSync => (60, 0.5),
+        TrainerKind::XlaDense => unreachable!("needs artifacts; not in this sweep"),
+    }
+}
+
 fn run_all(dataset: &str, seed: u64) -> (Task, Vec<Quality>) {
     let ds = synth::table2_dataset(dataset, seed).unwrap();
     let (train, test) = ds.split(0.8, seed + 1);
     let task = train.task;
-    let fm = FmHyper {
-        k: 4,
-        ..Default::default()
-    };
     let mut out = Vec::new();
-
-    let ncfg = NomadConfig {
-        workers: 4,
-        outer_iters: 60,
-        eta: LrSchedule::Constant(0.5),
-        ..Default::default()
-    };
-    let nomad = nomad_train(&train, None, &fm, &ncfg).unwrap();
-    out.push(Quality {
-        name: "ds-facto",
-        headline: evaluate(&nomad.model, &test).headline(task),
-    });
-
-    let lcfg = LibfmConfig {
-        epochs: 40,
-        eta: LrSchedule::Constant(0.02),
-        ..Default::default()
-    };
-    let libfm = libfm_train(&train, None, &fm, &lcfg);
-    out.push(Quality {
-        name: "libfm",
-        headline: evaluate(&libfm.model, &test).headline(task),
-    });
-
-    let dcfg = DsgdConfig {
-        epochs: 60,
-        eta: LrSchedule::Constant(0.5),
-        workers: 4,
-        ..Default::default()
-    };
-    let dsgd = dsgd_train(&train, None, &fm, &dcfg);
-    out.push(Quality {
-        name: "dsgd",
-        headline: evaluate(&dsgd.model, &test).headline(task),
-    });
-
-    let bulk = bulksync_train(&train, None, &fm, 60, LrSchedule::Constant(0.5), 4, seed);
-    out.push(Quality {
-        name: "bulksync",
-        headline: evaluate(&bulk.model, &test).headline(task),
-    });
-
+    // Every kind except XlaDense, which needs AOT artifacts.
+    for kind in TrainerKind::all()
+        .into_iter()
+        .filter(|&k| k != TrainerKind::XlaDense)
+    {
+        let (iters, eta) = budget(kind);
+        let cfg = ExperimentConfig {
+            dataset: DatasetSpec::Table2(dataset.into()),
+            trainer: kind,
+            fm: FmHyper {
+                k: 4,
+                ..Default::default()
+            },
+            workers: 4,
+            outer_iters: iters,
+            eta: LrSchedule::Constant(eta),
+            seed,
+            ..Default::default()
+        };
+        let trainer = cfg.trainer.build(&cfg);
+        let fitted = trainer.fit(&train, None, &mut ()).unwrap();
+        out.push(Quality {
+            name: kind.name(),
+            headline: evaluate(&fitted.model, &test).headline(task),
+        });
+    }
     (task, out)
 }
 
@@ -118,26 +109,25 @@ fn parity_on_ijcnn1_twin() {
     // ijcnn1 is 50k examples; keep budgets moderate.
     let ds = synth::table2_dataset("ijcnn1", 23).unwrap();
     let (train, test) = ds.split(0.8, 24);
-    let fm = FmHyper {
-        k: 4,
-        ..Default::default()
-    };
-    let ncfg = NomadConfig {
+    let mk_cfg = |kind, iters, eta| ExperimentConfig {
+        dataset: DatasetSpec::Table2("ijcnn1".into()),
+        trainer: kind,
+        fm: FmHyper {
+            k: 4,
+            ..Default::default()
+        },
         workers: 4,
-        outer_iters: 30,
-        eta: LrSchedule::Constant(1.0),
+        outer_iters: iters,
+        eta: LrSchedule::Constant(eta),
         eval_every: usize::MAX,
         ..Default::default()
     };
-    let nomad = nomad_train(&train, None, &fm, &ncfg).unwrap();
+    let ncfg = mk_cfg(TrainerKind::Nomad, 30, 1.0);
+    let nomad = ncfg.trainer.build(&ncfg).fit(&train, None, &mut ()).unwrap();
     let nomad_acc = evaluate(&nomad.model, &test).accuracy;
 
-    let lcfg = LibfmConfig {
-        epochs: 5,
-        eta: LrSchedule::Constant(0.01),
-        ..Default::default()
-    };
-    let libfm = libfm_train(&train, None, &fm, &lcfg);
+    let lcfg = mk_cfg(TrainerKind::Libfm, 5, 0.01);
+    let libfm = lcfg.trainer.build(&lcfg).fit(&train, None, &mut ()).unwrap();
     let libfm_acc = evaluate(&libfm.model, &test).accuracy;
     eprintln!("ijcnn1: nomad={nomad_acc:.4} libfm={libfm_acc:.4}");
     assert!(
