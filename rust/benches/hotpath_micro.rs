@@ -1,21 +1,40 @@
 //! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the building blocks
-//! whose cost bounds every trainer — FM scoring, the per-example SGD
-//! update, the engine's column visits, the token codec, and transports.
+//! whose cost bounds every trainer — FM scoring (scalar and fused
+//! lane-blocked kernel), the per-example update (scalar reference vs the
+//! fused `score_grad_step`), the engine's column visits, the token codec,
+//! and transports.
 //!
 //! Run: `cargo bench --bench hotpath_micro`.
+//!
+//! Besides the table on stdout, the run writes the machine-readable
+//! `BENCH_hotpath.json` (override the path with `BENCH_JSON`) so the perf
+//! trajectory has commit-comparable points; `BENCH_SAMPLES` and
+//! `BENCH_MIN_MS` shorten CI smoke runs.
 
 use dsfacto::cluster::{codec, LocalTransport, Transport};
 use dsfacto::data::synth;
 use dsfacto::fm::FmModel;
+use dsfacto::kernel::{FmKernel, Scratch};
 use dsfacto::nomad::token::{Phase, Token};
 use dsfacto::optim::sgd_update_example;
-use dsfacto::util::bench::{bench_ns_per_op, section};
+use dsfacto::util::bench::{bench_summary, ratio_str, section, BenchReport};
 use dsfacto::util::rng::Pcg64;
 
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
 fn main() -> anyhow::Result<()> {
+    let samples = env_usize("BENCH_SAMPLES", 20);
+    let json_path =
+        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    let mut report = BenchReport::new("hotpath_micro");
     let mut rng = Pcg64::seeded(1);
 
-    section("FM scoring (eq. 4 rewrite)");
+    section("FM scoring (eq. 4 rewrite): scalar vs fused kernel");
     // Dense ijcnn1-like: D=22, K=4.
     let ds = synth::table2_dataset("ijcnn1", 7)?;
     let model = {
@@ -25,14 +44,32 @@ fn main() -> anyhow::Result<()> {
         }
         m
     };
+    let kern = FmKernel::from_model(&model);
+    let mut scratch = Scratch::for_k(4);
     let n = ds.n();
     let mut i = 0usize;
-    bench_ns_per_op("score_sparse dense d=22 k=4 (per example)", 20, || {
+    let s = bench_summary("score_sparse dense d=22 k=4 (per example)", samples, || {
         let (idx, val) = ds.rows.row(i % n);
         i += 1;
         std::hint::black_box(model.score_sparse(idx, val));
         1
     });
+    report.record("score_sparse dense d=22 k=4", &s);
+    let mut ik = 0usize;
+    let s = bench_summary("kernel score dense d=22 k=4 (per example)", samples, || {
+        let (idx, val) = ds.rows.row(ik % n);
+        ik += 1;
+        std::hint::black_box(kern.score(idx, val, &mut scratch));
+        1
+    });
+    report.record("kernel_score dense d=22 k=4", &s);
+    println!(
+        "  fused vs scalar (dense): {}",
+        ratio_str(
+            report.get("kernel_score dense d=22 k=4").unwrap(),
+            report.get("score_sparse dense d=22 k=4").unwrap()
+        )
+    );
 
     // Sparse realsim-like row: ~52 nnz, K=16.
     let spec = synth::SynthSpec {
@@ -41,13 +78,14 @@ fn main() -> anyhow::Result<()> {
     };
     let sparse = synth::generate(&spec, 8).dataset;
     let smodel = FmModel::init(sparse.d(), 16, 0.05, &mut rng);
+    let skern = FmKernel::from_model(&smodel);
+    let mut sscratch = Scratch::for_k(16);
     let sn = sparse.n();
+    let avg_nnz = sparse.nnz() as f64 / sn as f64;
     let mut si = 0usize;
-    let nnz_total: usize = sparse.nnz();
-    let avg_nnz = nnz_total as f64 / sn as f64;
-    bench_ns_per_op(
+    let s = bench_summary(
         &format!("score_sparse sparse nnz~{avg_nnz:.0} k=16 (per example)"),
-        20,
+        samples,
         || {
             let (idx, val) = sparse.rows.row(si % sn);
             si += 1;
@@ -55,27 +93,81 @@ fn main() -> anyhow::Result<()> {
             1
         },
     );
+    report.record("score_sparse sparse k=16", &s);
+    let mut ski = 0usize;
+    let s = bench_summary(
+        &format!("kernel score sparse nnz~{avg_nnz:.0} k=16 (per example)"),
+        samples,
+        || {
+            let (idx, val) = sparse.rows.row(ski % sn);
+            ski += 1;
+            std::hint::black_box(skern.score(idx, val, &mut sscratch));
+            1
+        },
+    );
+    report.record("kernel_score sparse k=16", &s);
+    println!(
+        "  fused vs scalar (sparse): {}",
+        ratio_str(
+            report.get("kernel_score sparse k=16").unwrap(),
+            report.get("score_sparse sparse k=16").unwrap()
+        )
+    );
 
-    section("per-example SGD update (eqs. 11-13)");
+    section("per-example update (eqs. 11-13): scalar reference vs fused");
     let mut m2 = model.clone();
     let mut a = vec![0f32; 4];
+    let mut s2 = vec![0f32; 4];
     let mut j = 0usize;
-    bench_ns_per_op("sgd_update_example d=22 k=4 (per example)", 20, || {
-        let (idx, val) = ds.rows.row(j % n);
+    let s = bench_summary("sgd_update_example d=22 k=4 (per example)", samples, || {
+        let r = j % n;
         j += 1;
+        let (idx, val) = ds.rows.row(r);
         std::hint::black_box(sgd_update_example(
             &mut m2,
             idx,
             val,
-            ds.labels[j % n],
+            ds.labels[r],
             ds.task,
             1e-4,
             1e-4,
             1e-4,
             &mut a,
+            &mut s2,
         ));
         1
     });
+    report.record("sgd_update_example d=22 k=4", &s);
+    let mut k2 = FmKernel::from_model(&model);
+    let mut jk = 0usize;
+    let s = bench_summary(
+        "kernel score_grad_step d=22 k=4 (per example)",
+        samples,
+        || {
+            let r = jk % n;
+            jk += 1;
+            let (idx, val) = ds.rows.row(r);
+            std::hint::black_box(k2.score_grad_step(
+                idx,
+                val,
+                ds.labels[r],
+                ds.task,
+                1e-4,
+                1e-4,
+                1e-4,
+                &mut scratch,
+            ));
+            1
+        },
+    );
+    report.record("kernel_score_grad_step d=22 k=4", &s);
+    println!(
+        "  fused vs scalar (update): {}",
+        ratio_str(
+            report.get("kernel_score_grad_step d=22 k=4").unwrap(),
+            report.get("sgd_update_example d=22 k=4").unwrap()
+        )
+    );
 
     section("token codec (wire format)");
     let tok = Token {
@@ -87,16 +179,18 @@ fn main() -> anyhow::Result<()> {
         v: (0..16).map(|x| x as f32).collect(),
     };
     let mut buf = Vec::new();
-    bench_ns_per_op("encode_token k=16", 20, || {
+    let s = bench_summary("encode_token k=16", samples, || {
         codec::encode_token(&tok, &mut buf);
         std::hint::black_box(buf.len());
         1
     });
+    report.record("encode_token k=16", &s);
     codec::encode_token(&tok, &mut buf);
-    bench_ns_per_op("decode_token k=16", 20, || {
+    let s = bench_summary("decode_token k=16", samples, || {
         std::hint::black_box(codec::decode_token(&buf).unwrap());
         1
     });
+    report.record("decode_token k=16", &s);
 
     section("transport (token hops)");
     let t = LocalTransport::new(2);
@@ -109,7 +203,7 @@ fn main() -> anyhow::Result<()> {
         v: vec![0f32; 16].into_boxed_slice(),
     };
     let mut tok_cycle = Some(mk());
-    bench_ns_per_op("local transport send+recv (per hop)", 20, || {
+    let s = bench_summary("local transport send+recv (per hop)", samples, || {
         let tk = tok_cycle.take().unwrap();
         t.send(0, tk);
         tok_cycle = Some(
@@ -118,6 +212,7 @@ fn main() -> anyhow::Result<()> {
         );
         1
     });
+    report.record("local transport send+recv", &s);
 
     section("engine end-to-end (ijcnn1 twin, P=4, 2 iters)");
     let cfg = dsfacto::config::ExperimentConfig {
@@ -137,14 +232,22 @@ fn main() -> anyhow::Result<()> {
     trainer.fit(&ds, None, &mut ())?;
     let secs = sw.secs();
     let stats = trainer.stats().expect("engine counters");
+    let ns_per_hop = secs * 1e9 / stats.messages.max(1) as f64;
+    let ns_per_coord =
+        stats.total_busy_secs() * 1e9 / stats.coordinate_updates.max(1) as f64;
     println!(
         "engine: {} hops in {:.3}s = {:.0} ns/hop; {} coord updates = {:.0} ns/coord; busy makespan {:.3}s",
         stats.messages,
         secs,
-        secs * 1e9 / stats.messages as f64,
+        ns_per_hop,
         stats.coordinate_updates,
-        stats.total_busy_secs() * 1e9 / stats.coordinate_updates.max(1) as f64,
+        ns_per_coord,
         stats.makespan_secs(),
     );
+    report.record_value("engine ns_per_hop (ijcnn1 P=4)", ns_per_hop);
+    report.record_value("engine ns_per_coord (ijcnn1 P=4)", ns_per_coord);
+
+    report.write(&json_path)?;
+    println!("\nwrote {json_path} ({} entries)", report.entries.len());
     Ok(())
 }

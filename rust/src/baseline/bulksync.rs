@@ -10,6 +10,7 @@
 
 use crate::data::Dataset;
 use crate::fm::{loss, FmHyper, FmModel};
+use crate::kernel::{FmKernel, Scratch};
 use crate::metrics::TrainOutput;
 use crate::optim::LrSchedule;
 use crate::train::{Probe, TrainObserver};
@@ -76,14 +77,17 @@ impl GradBuf {
     }
 }
 
-/// Accumulates the exact batch gradient of the rows in `[start, end)`.
-fn partial_gradient(model: &FmModel, ds: &Dataset, start: usize, end: usize) -> GradBuf {
-    let k = model.k;
-    let mut buf = GradBuf::zeros(model.d, k);
+/// Accumulates the exact batch gradient of the rows in `[start, end)`,
+/// scoring through the shared lane-blocked kernel view (per-worker
+/// scratch; the only per-call allocations are this worker's own buffers).
+fn partial_gradient(kern: &FmKernel, ds: &Dataset, start: usize, end: usize) -> GradBuf {
+    let k = kern.k();
+    let mut buf = GradBuf::zeros(kern.d(), k);
+    let mut scratch = Scratch::for_k(k);
     let mut a = vec![0f32; k];
     for i in start..end {
         let (idx, val) = ds.rows.row(i);
-        let f = model.score_with_sums(idx, val, &mut a);
+        let f = kern.score_with_sums(idx, val, &mut a, &mut scratch);
         let g = loss::multiplier(f, ds.labels[i], ds.task) as f64;
         buf.loss += loss::loss(f, ds.labels[i], ds.task) as f64;
         buf.g0 += g;
@@ -92,8 +96,9 @@ fn partial_gradient(model: &FmModel, ds: &Dataset, start: usize, end: usize) -> 
             let x = *x as f64;
             buf.gw[j] += g * x;
             let x2 = x * x;
+            let vj = kern.vrow(j);
             for kk in 0..k {
-                let vjk = model.v[j * k + kk] as f64;
+                let vjk = vj[kk] as f64;
                 buf.gv[j * k + kk] += g * (x * a[kk] as f64 - vjk * x2);
             }
         }
@@ -126,18 +131,20 @@ pub fn bulksync_train(
         if stopped {
             break;
         }
-        // Map: per-worker partial gradients on disjoint row blocks.
+        // Map: per-worker partial gradients on disjoint row blocks, all
+        // scoring through one shared kernel view of this iterate.
+        let kern = FmKernel::from_model(&model);
         let total = std::thread::scope(|scope| {
-            let model_ref = &model;
+            let kern_ref = &kern;
             let handles: Vec<_> = (0..workers)
                 .map(|p| {
                     let start = p * chunk;
                     let end = ((p + 1) * chunk).min(n);
-                    scope.spawn(move || partial_gradient(model_ref, train, start, end))
+                    scope.spawn(move || partial_gradient(kern_ref, train, start, end))
                 })
                 .collect();
             // Reduce: merge in worker order (deterministic).
-            let mut total = GradBuf::zeros(model_ref.d, model_ref.k);
+            let mut total = GradBuf::zeros(kern_ref.d(), kern_ref.k());
             for h in handles {
                 total.merge(&h.join().expect("bulksync worker panicked"));
             }
@@ -227,11 +234,12 @@ mod tests {
         let ds = synth::table2_dataset("housing", 4).unwrap();
         let mut rng = Pcg64::seeded(1);
         let model = FmModel::init(ds.d(), 4, 0.1, &mut rng);
-        let full = partial_gradient(&model, &ds, 0, ds.n());
+        let kern = FmKernel::from_model(&model);
+        let full = partial_gradient(&kern, &ds, 0, ds.n());
         let mut merged = GradBuf::zeros(model.d, model.k);
         let mid = ds.n() / 3;
-        merged.merge(&partial_gradient(&model, &ds, 0, mid));
-        merged.merge(&partial_gradient(&model, &ds, mid, ds.n()));
+        merged.merge(&partial_gradient(&kern, &ds, 0, mid));
+        merged.merge(&partial_gradient(&kern, &ds, mid, ds.n()));
         assert!((full.g0 - merged.g0).abs() < 1e-9);
         for (a, b) in full.gw.iter().zip(&merged.gw) {
             assert!((a - b).abs() < 1e-9);

@@ -13,6 +13,7 @@
 
 use crate::data::{Csc, Dataset};
 use crate::fm::{loss, FmHyper, FmModel};
+use crate::kernel::{FmKernel, Scratch};
 use crate::metrics::TrainOutput;
 use crate::optim::LrSchedule;
 use crate::train::{Probe, TrainObserver};
@@ -167,13 +168,18 @@ pub fn dsgd_train(
 }
 
 /// Exact G (multipliers) and A (factor sums) for all rows, in parallel.
+/// Each barrier builds the lane-blocked kernel view once (O(D K) copy)
+/// and the workers score through per-thread scratch arenas — zero
+/// per-example allocation.
 fn compute_aux(model: &FmModel, ds: &Dataset, p: usize) -> (Vec<f32>, Vec<f32>) {
     let n = ds.n();
     let k = model.k;
     let chunk = n.div_ceil(p);
     let mut g = vec![0f32; n];
     let mut a = vec![0f32; n * k];
+    let kern = FmKernel::from_model(model);
     std::thread::scope(|scope| {
+        let kern_ref = &kern;
         let mut g_rest: &mut [f32] = &mut g;
         let mut a_rest: &mut [f32] = &mut a;
         for b in 0..p {
@@ -185,9 +191,15 @@ fn compute_aux(model: &FmModel, ds: &Dataset, p: usize) -> (Vec<f32>, Vec<f32>) 
             g_rest = g_next;
             a_rest = a_next;
             scope.spawn(move || {
+                let mut scratch = Scratch::for_k(k);
                 for (r, i) in (start..end).enumerate() {
                     let (idx, val) = ds.rows.row(i);
-                    let f = model.score_with_sums(idx, val, &mut a_blk[r * k..(r + 1) * k]);
+                    let f = kern_ref.score_with_sums(
+                        idx,
+                        val,
+                        &mut a_blk[r * k..(r + 1) * k],
+                        &mut scratch,
+                    );
                     g_blk[r] = loss::multiplier(f, ds.labels[i], ds.task);
                 }
             });
@@ -285,9 +297,10 @@ mod tests {
         let m = FmModel::init(ds.d(), 4, 0.1, &mut rng);
         let (g, a) = compute_aux(&m, &ds, 3);
         let mut ak = vec![0f32; 4];
+        let mut s2 = vec![0f32; 4];
         for i in 0..ds.n() {
             let (idx, val) = ds.rows.row(i);
-            let f = m.score_with_sums(idx, val, &mut ak);
+            let f = m.score_with_sums(idx, val, &mut ak, &mut s2);
             assert!((g[i] - loss::multiplier(f, ds.labels[i], ds.task)).abs() < 1e-6);
             for kk in 0..4 {
                 assert!((a[i * 4 + kk] - ak[kk]).abs() < 1e-6);

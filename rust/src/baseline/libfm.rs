@@ -12,8 +12,9 @@
 
 use crate::data::Dataset;
 use crate::fm::{FmHyper, FmModel};
+use crate::kernel::{FmKernel, Scratch};
 use crate::metrics::TrainOutput;
-use crate::optim::{sgd_update_example, LrSchedule};
+use crate::optim::LrSchedule;
 use crate::train::{Probe, TrainObserver};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -47,6 +48,10 @@ impl Default for LibfmConfig {
 
 /// Trains an FM with single-machine SGD; returns the model and trace.
 /// Each recorded iteration is reported to `obs`, which may stop the run.
+///
+/// The per-example update runs through the fused lane-blocked kernel
+/// ([`FmKernel::score_grad_step`]): the epoch loop touches the heap only
+/// for the per-epoch model write-back the observer sees.
 pub fn libfm_train(
     train: &Dataset,
     test: Option<&Dataset>,
@@ -56,9 +61,10 @@ pub fn libfm_train(
 ) -> TrainOutput {
     let mut rng = Pcg64::new(cfg.seed, 0x11bf);
     let mut model = FmModel::init(train.d(), fm.k, fm.init_std, &mut rng);
+    let mut kern = FmKernel::from_model(&model);
+    let mut scratch = Scratch::for_k(fm.k);
     let mut probe = Probe::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
     let mut order: Vec<usize> = (0..train.n()).collect();
-    let mut a = vec![0f32; fm.k];
 
     let mut sw = Stopwatch::start();
     let mut train_clock = 0f64;
@@ -75,8 +81,7 @@ pub fn libfm_train(
         }
         for &i in &order {
             let (idx, val) = train.rows.row(i);
-            sgd_update_example(
-                &mut model,
+            kern.score_grad_step(
                 idx,
                 val,
                 train.labels[i],
@@ -84,10 +89,13 @@ pub fn libfm_train(
                 eta,
                 fm.lambda_w,
                 fm.lambda_v,
-                &mut a,
+                &mut scratch,
             );
         }
         train_clock += sw.lap();
+        // The write-back (and the evaluation it feeds) stays off the
+        // training clock.
+        kern.write_model(&mut model);
         stopped = probe.record(epoch + 1, train_clock, &model, obs).is_stop();
         sw.lap(); // evaluation excluded from the training clock
     }

@@ -137,20 +137,10 @@ impl Dataset {
 
     /// Densifies rows `start..start+b` into a row-major `b x d` buffer,
     /// zero-padding past the end (the runtime's fixed-batch artifacts).
-    /// Returns the number of real (non-padding) rows.
+    /// Returns the number of real (non-padding) rows. Delegates to the
+    /// shared [`Csr::densify_rows`] batch path.
     pub fn densify_batch(&self, start: usize, b: usize, out: &mut [f32]) -> usize {
-        let d = self.d();
-        assert_eq!(out.len(), b * d, "densify buffer size");
-        out.fill(0.0);
-        let real = b.min(self.n().saturating_sub(start));
-        for r in 0..real {
-            let (idx, val) = self.rows.row(start + r);
-            let row = &mut out[r * d..(r + 1) * d];
-            for (j, v) in idx.iter().zip(val) {
-                row[*j as usize] = *v;
-            }
-        }
-        real
+        self.rows.densify_rows(start, b, self.d(), out)
     }
 
     /// Labels for the batch starting at `start`, zero-padded to length `b`.

@@ -178,6 +178,31 @@ impl Csr {
         }
     }
 
+    /// Densifies rows `start..start+b` into a row-major `b x width`
+    /// buffer (`width >= n_cols`), zero-filling both the tail past the
+    /// last row and the columns past `n_cols`; returns the number of real
+    /// (non-padding) rows. This is the one batch-densify path shared by
+    /// `Dataset::densify_batch` and the XLA predictor's fixed-shape
+    /// batches.
+    pub fn densify_rows(&self, start: usize, b: usize, width: usize, out: &mut [f32]) -> usize {
+        assert!(
+            width >= self.n_cols,
+            "densify width {width} < n_cols {}",
+            self.n_cols
+        );
+        assert_eq!(out.len(), b * width, "densify buffer size");
+        out.fill(0.0);
+        let real = b.min(self.n_rows.saturating_sub(start));
+        for r in 0..real {
+            let (idx, val) = self.row(start + r);
+            let row = &mut out[r * width..(r + 1) * width];
+            for (j, v) in idx.iter().zip(val) {
+                row[*j as usize] = *v;
+            }
+        }
+        real
+    }
+
     /// Dense row-major copy (tests / tiny data only).
     pub fn to_dense(&self) -> Vec<f32> {
         let mut out = vec![0f32; self.n_rows * self.n_cols];

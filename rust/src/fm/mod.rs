@@ -126,9 +126,13 @@ impl FmModel {
     }
 
     /// Score plus the factor sums `a` (callers that need eq. 10's cache).
-    pub fn score_with_sums(&self, idx: &[u32], val: &[f32], a: &mut [f32]) -> f32 {
-        let mut s2 = vec![0f32; self.k];
-        self.factor_sums(idx, val, a, &mut s2);
+    ///
+    /// Both `a` and `s2` (length K each) are caller-provided scratch so
+    /// the hot loop stays allocation-free; hot paths should prefer the
+    /// fused [`crate::kernel::FmKernel::score_with_sums`], which also
+    /// single-passes the non-zeros.
+    pub fn score_with_sums(&self, idx: &[u32], val: &[f32], a: &mut [f32], s2: &mut [f32]) -> f32 {
+        self.factor_sums(idx, val, a, s2);
         let mut linear = self.w0;
         for (j, x) in idx.iter().zip(val) {
             linear += self.w[*j as usize] * x;
@@ -156,18 +160,13 @@ impl FmModel {
         f
     }
 
-    /// The regularized objective (paper eq. 5) over a dataset.
+    /// The regularized objective (paper eq. 5) over a dataset, computed
+    /// through the fused lane-blocked kernel (one layout conversion per
+    /// call, amortized over the whole dataset).
     pub fn objective(&self, ds: &crate::data::Dataset, lambda_w: f32, lambda_v: f32) -> f64 {
-        let mut total = 0f64;
-        for i in 0..ds.n() {
-            let (idx, val) = ds.rows.row(i);
-            let f = self.score_sparse(idx, val);
-            total += loss::loss(f, ds.labels[i], ds.task) as f64;
-        }
-        let data = total / ds.n().max(1) as f64;
-        let rw: f64 = self.w.iter().map(|&x| (x as f64) * (x as f64)).sum();
-        let rv: f64 = self.v.iter().map(|&x| (x as f64) * (x as f64)).sum();
-        data + 0.5 * lambda_w as f64 * rw + 0.5 * lambda_v as f64 * rv
+        let kern = crate::kernel::FmKernel::from_model(self);
+        let mut scratch = crate::kernel::Scratch::for_k(self.k);
+        kern.objective(ds, lambda_w, lambda_v, &mut scratch)
     }
 
     /// Total parameter count (for logs).
@@ -245,7 +244,8 @@ mod tests {
         let idx = [1u32, 4];
         let val = [2.0f32, -0.5];
         let mut a = vec![0f32; 3];
-        let f = m.score_with_sums(&idx, &val, &mut a);
+        let mut s2 = vec![0f32; 3];
+        let f = m.score_with_sums(&idx, &val, &mut a, &mut s2);
         assert!((f - m.score_sparse(&idx, &val)).abs() < 1e-6);
         for k in 0..3 {
             let want = m.vrow(1)[k] * 2.0 + m.vrow(4)[k] * -0.5;

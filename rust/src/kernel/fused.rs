@@ -1,0 +1,504 @@
+//! The fused lane-blocked FM kernels.
+//!
+//! [`FmKernel`] holds the model parameters with `V` in an AoSoA
+//! ("array-of-structures-of-arrays") layout: each feature's factor row is
+//! padded to a multiple of [`LANES`] (8) f32 values, so every inner loop
+//! runs over fixed-width 8-lane blocks with no remainder — the shape LLVM
+//! auto-vectorizes into full-width SIMD on every x86-64/aarch64 target.
+//! Padding lanes are identically zero and stay zero under every update
+//! (their gradients vanish because `v = 0` and `a = 0` there), so the
+//! kernels never mask.
+//!
+//! The three fused entry points replace the crate's former multi-pass
+//! scalar hot path:
+//!
+//! * [`FmKernel::score`] — linear term, factor sums `a` and squared sums
+//!   `s2` (paper eq. 4 / eq. 10) accumulated in **one pass** over the
+//!   non-zeros (the scalar path made two).
+//! * [`FmKernel::score_grad_step`] — score + loss multiplier + the full
+//!   eq. 11-13 SGD update in two passes total (score pass + update pass);
+//!   the scalar `sgd_update_example` needed three. An AdaGrad variant
+//!   ([`FmKernel::score_grad_step_adagrad`]) keeps its accumulators in the
+//!   same lane-blocked layout.
+//! * [`FmKernel::score_batch`] — scores every row of a CSR block; backs
+//!   [`Predictor::predict_batch`](crate::train::Predictor::predict_batch)
+//!   and [`FmModel::objective`](crate::fm::FmModel::objective).
+//!
+//! All of them take a per-thread [`Scratch`] arena, so the steady state
+//! allocates nothing. `FmModel::score_naive` (paper eq. 2) remains the
+//! independent test oracle; `rust/tests/kernel_properties.rs` holds the
+//! parity suite.
+
+use crate::data::{Csr, Dataset, Task};
+use crate::fm::{loss, FmModel};
+
+use super::scratch::Scratch;
+
+/// f32 lanes per block: 8 matches one AVX2 register (and two NEON ones).
+pub const LANES: usize = 8;
+
+/// The padded factor width for `k` factors (smallest lane multiple >= k).
+#[inline]
+pub fn padded_k(k: usize) -> usize {
+    k.div_ceil(LANES) * LANES
+}
+
+/// FM parameters with `V` lane-blocked: row `j` occupies
+/// `v[j*kp .. (j+1)*kp]` where `kp = padded_k(k)`; entries past `k` are
+/// zero padding. Build one from an [`FmModel`] with
+/// [`from_model`](FmKernel::from_model), train through the fused kernels,
+/// and copy back with [`write_model`](FmKernel::write_model).
+#[derive(Debug, Clone)]
+pub struct FmKernel {
+    d: usize,
+    k: usize,
+    /// Padded factor width (`padded_k(k)`).
+    kp: usize,
+    /// Global bias `w0`.
+    pub w0: f32,
+    /// Linear weights (length D).
+    pub w: Vec<f32>,
+    /// Lane-blocked factors, `D x kp` row-major (padding lanes zero).
+    v: Vec<f32>,
+}
+
+impl FmKernel {
+    /// Builds the lane-blocked view of a model (copies the parameters).
+    pub fn from_model(m: &FmModel) -> Self {
+        let kp = padded_k(m.k);
+        let mut v = vec![0f32; m.d * kp];
+        for j in 0..m.d {
+            v[j * kp..j * kp + m.k].copy_from_slice(&m.v[j * m.k..(j + 1) * m.k]);
+        }
+        FmKernel {
+            d: m.d,
+            k: m.k,
+            kp,
+            w0: m.w0,
+            w: m.w.clone(),
+            v,
+        }
+    }
+
+    /// Copies the parameters back into a same-shape model (strips padding).
+    pub fn write_model(&self, m: &mut FmModel) {
+        assert_eq!(
+            (m.d, m.k),
+            (self.d, self.k),
+            "kernel/model shape mismatch: kernel ({}, {}) vs model ({}, {})",
+            self.d,
+            self.k,
+            m.d,
+            m.k
+        );
+        m.w0 = self.w0;
+        m.w.copy_from_slice(&self.w);
+        for j in 0..self.d {
+            m.v[j * self.k..(j + 1) * self.k]
+                .copy_from_slice(&self.v[j * self.kp..j * self.kp + self.k]);
+        }
+    }
+
+    /// The parameters as a fresh [`FmModel`].
+    pub fn to_model(&self) -> FmModel {
+        let mut m = FmModel::zeros(self.d, self.k);
+        self.write_model(&mut m);
+        m
+    }
+
+    /// Number of features D.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of factors K.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The padded factor width (`padded_k(k)`).
+    #[inline]
+    pub fn padded(&self) -> usize {
+        self.kp
+    }
+
+    /// Factor row `v_j` (length K; the padding lanes are not exposed).
+    #[inline]
+    pub fn vrow(&self, j: usize) -> &[f32] {
+        &self.v[j * self.kp..j * self.kp + self.k]
+    }
+
+    /// Mutable factor row `v_j` (length K; padding stays private so it
+    /// cannot be un-zeroed).
+    #[inline]
+    pub fn vrow_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.v[j * self.kp..j * self.kp + self.k]
+    }
+
+    /// The fused accumulation pass: linear term plus lane-blocked factor
+    /// sums `a` and squared sums `s2`, one sweep over the non-zeros.
+    /// Returns the linear term `w0 + sum_j w_j x_j`.
+    #[inline]
+    fn accumulate(&self, idx: &[u32], val: &[f32], a: &mut [f32], s2: &mut [f32]) -> f32 {
+        debug_assert_eq!(a.len(), self.kp);
+        debug_assert_eq!(s2.len(), self.kp);
+        a.fill(0.0);
+        s2.fill(0.0);
+        let mut linear = self.w0;
+        for (j, &x) in idx.iter().zip(val) {
+            let j = *j as usize;
+            linear += self.w[j] * x;
+            let vj = &self.v[j * self.kp..(j + 1) * self.kp];
+            for ((ab, sb), vb) in a
+                .chunks_exact_mut(LANES)
+                .zip(s2.chunks_exact_mut(LANES))
+                .zip(vj.chunks_exact(LANES))
+            {
+                for l in 0..LANES {
+                    let vx = vb[l] * x;
+                    ab[l] += vx;
+                    sb[l] += vx * vx;
+                }
+            }
+        }
+        linear
+    }
+
+    /// The pairwise term `0.5 * sum_k (a_k^2 - s2_k)` over padded lanes
+    /// (padding contributes exactly zero).
+    #[inline]
+    fn pair_term(a: &[f32], s2: &[f32]) -> f32 {
+        let mut pair = 0f32;
+        for (ab, sb) in a.chunks_exact(LANES).zip(s2.chunks_exact(LANES)) {
+            for l in 0..LANES {
+                pair += ab[l] * ab[l] - sb[l];
+            }
+        }
+        0.5 * pair
+    }
+
+    /// FM score of one sparse example (paper eq. 4) in a single fused
+    /// pass. The factor sums remain readable via
+    /// [`Scratch::factor_sums`] until the arena's next scoring call.
+    #[inline]
+    pub fn score(&self, idx: &[u32], val: &[f32], scratch: &mut Scratch) -> f32 {
+        let (a, s2) = scratch.sums(self.kp);
+        let linear = self.accumulate(idx, val, a, s2);
+        linear + Self::pair_term(a, s2)
+    }
+
+    /// Score plus an explicit copy of the factor sums `a` (eq. 10) into
+    /// `a_out` (length K) — the form the G/A synchronization paths need.
+    pub fn score_with_sums(
+        &self,
+        idx: &[u32],
+        val: &[f32],
+        a_out: &mut [f32],
+        scratch: &mut Scratch,
+    ) -> f32 {
+        debug_assert_eq!(a_out.len(), self.k);
+        let f = self.score(idx, val, scratch);
+        a_out.copy_from_slice(scratch.factor_sums(self.k));
+        f
+    }
+
+    /// Scores every row of a sparse block into `out`
+    /// (`out.len() == rows.n_rows()`).
+    pub fn score_batch(&self, rows: &Csr, out: &mut [f32], scratch: &mut Scratch) {
+        assert_eq!(
+            out.len(),
+            rows.n_rows(),
+            "output buffer {} != rows {}",
+            out.len(),
+            rows.n_rows()
+        );
+        for (i, o) in out.iter_mut().enumerate() {
+            let (idx, val) = rows.row(i);
+            *o = self.score(idx, val, scratch);
+        }
+    }
+
+    /// Mean data loss over a dataset (no regularizer).
+    pub fn data_loss(&self, ds: &Dataset, scratch: &mut Scratch) -> f64 {
+        let mut total = 0f64;
+        for i in 0..ds.n() {
+            let (idx, val) = ds.rows.row(i);
+            total += loss::loss(self.score(idx, val, scratch), ds.labels[i], ds.task) as f64;
+        }
+        total / ds.n().max(1) as f64
+    }
+
+    /// The regularized objective (paper eq. 5) over a dataset. Padding
+    /// lanes are zero, so summing the padded `v` is exact.
+    pub fn objective(
+        &self,
+        ds: &Dataset,
+        lambda_w: f32,
+        lambda_v: f32,
+        scratch: &mut Scratch,
+    ) -> f64 {
+        let data = self.data_loss(ds, scratch);
+        let rw: f64 = self.w.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let rv: f64 = self.v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        data + 0.5 * lambda_w as f64 * rw + 0.5 * lambda_v as f64 * rv
+    }
+
+    /// Fused score + gradient + SGD update (paper eqs. 11-13) for one
+    /// example; returns the example's pre-update loss. Two sweeps over the
+    /// non-zeros total (the scalar `sgd_update_example` made three), zero
+    /// allocation, and the eq. 13 update uses the pre-update factor sums —
+    /// the exact semantics of the scalar reference it replaces.
+    #[allow(clippy::too_many_arguments)]
+    pub fn score_grad_step(
+        &mut self,
+        idx: &[u32],
+        val: &[f32],
+        y: f32,
+        task: Task,
+        eta: f32,
+        lambda_w: f32,
+        lambda_v: f32,
+        scratch: &mut Scratch,
+    ) -> f32 {
+        let kp = self.kp;
+        let (a, s2) = scratch.sums(kp);
+        let linear = self.accumulate(idx, val, a, s2);
+        let f = linear + Self::pair_term(a, s2);
+        let g = loss::multiplier(f, y, task);
+        let l = loss::loss(f, y, task);
+
+        // eq. 11 (stochastic form).
+        self.w0 -= eta * g;
+        for (j, &x) in idx.iter().zip(val) {
+            let j = *j as usize;
+            // eq. 12.
+            let wj = &mut self.w[j];
+            *wj -= eta * (g * x + lambda_w * *wj);
+            // eq. 13, lane-blocked; padding lanes have v = a = 0 and thus a
+            // zero update, so they remain zero.
+            let x2 = x * x;
+            let vj = &mut self.v[j * kp..(j + 1) * kp];
+            for (vb, ab) in vj.chunks_exact_mut(LANES).zip(a.chunks_exact(LANES)) {
+                for l in 0..LANES {
+                    let vl = vb[l];
+                    vb[l] = vl - eta * (g * (x * ab[l] - vl * x2) + lambda_v * vl);
+                }
+            }
+        }
+        l
+    }
+
+    /// AdaGrad variant of [`score_grad_step`](FmKernel::score_grad_step)
+    /// with lane-blocked accumulators; returns the example's loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn score_grad_step_adagrad(
+        &mut self,
+        idx: &[u32],
+        val: &[f32],
+        y: f32,
+        task: Task,
+        eta: f32,
+        lambda_w: f32,
+        lambda_v: f32,
+        state: &mut AdaGradLanes,
+        scratch: &mut Scratch,
+    ) -> f32 {
+        assert_eq!(
+            (state.gw2.len(), state.kp),
+            (self.d, self.kp),
+            "AdaGrad state shape mismatch"
+        );
+        let kp = self.kp;
+        let (a, s2) = scratch.sums(kp);
+        let linear = self.accumulate(idx, val, a, s2);
+        let f = linear + Self::pair_term(a, s2);
+        let g = loss::multiplier(f, y, task);
+        let l = loss::loss(f, y, task);
+
+        state.g02 += g * g;
+        self.w0 -= eta * g / (state.g02.sqrt() + state.eps);
+        for (j, &x) in idx.iter().zip(val) {
+            let j = *j as usize;
+            let gw = g * x + lambda_w * self.w[j];
+            state.gw2[j] += gw * gw;
+            self.w[j] -= eta * gw / (state.gw2[j].sqrt() + state.eps);
+
+            let x2 = x * x;
+            let vj = &mut self.v[j * kp..(j + 1) * kp];
+            let gj = &mut state.gv2[j * kp..(j + 1) * kp];
+            for ((vb, gb), ab) in vj
+                .chunks_exact_mut(LANES)
+                .zip(gj.chunks_exact_mut(LANES))
+                .zip(a.chunks_exact(LANES))
+            {
+                for l in 0..LANES {
+                    let vl = vb[l];
+                    let gv = g * (x * ab[l] - vl * x2) + lambda_v * vl;
+                    gb[l] += gv * gv;
+                    vb[l] = vl - eta * gv / (gb[l].sqrt() + state.eps);
+                }
+            }
+        }
+        l
+    }
+}
+
+/// Per-coordinate AdaGrad accumulators in the kernel's lane-blocked
+/// layout (the DiFacto-style adaptivity of
+/// [`crate::optim::AdaGradState`], fused).
+#[derive(Debug, Clone)]
+pub struct AdaGradLanes {
+    /// Accumulated squared gradients for w (length D).
+    pub gw2: Vec<f32>,
+    /// Accumulated squared gradients for V (length `D * padded_k(K)`).
+    pub gv2: Vec<f32>,
+    /// Accumulated squared gradient for w0.
+    pub g02: f32,
+    /// Numerical floor.
+    pub eps: f32,
+    kp: usize,
+}
+
+impl AdaGradLanes {
+    /// Fresh state for a `d x k` kernel.
+    pub fn new(d: usize, k: usize) -> Self {
+        let kp = padded_k(k);
+        AdaGradLanes {
+            gw2: vec![0.0; d],
+            gv2: vec![0.0; d * kp],
+            g02: 0.0,
+            eps: 1e-8,
+            kp,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_model(d: usize, k: usize, seed: u64) -> FmModel {
+        let mut rng = Pcg64::seeded(seed);
+        let mut m = FmModel::init(d, k, 0.3, &mut rng);
+        for x in m.w.iter_mut() {
+            *x = rng.normal32(0.0, 0.5);
+        }
+        m.w0 = 0.4;
+        m
+    }
+
+    #[test]
+    fn padding_rounds_up_to_lanes() {
+        assert_eq!(padded_k(1), LANES);
+        assert_eq!(padded_k(8), 8);
+        assert_eq!(padded_k(9), 16);
+        assert_eq!(padded_k(0), 0);
+    }
+
+    #[test]
+    fn model_roundtrip_is_exact() {
+        for k in [1, 3, 8, 11, 33] {
+            let m = random_model(7, k, k as u64);
+            let kern = FmKernel::from_model(&m);
+            assert_eq!(kern.to_model(), m, "k={k}");
+            assert_eq!(kern.vrow(3), m.vrow(3));
+        }
+    }
+
+    #[test]
+    fn fused_score_matches_scalar() {
+        for k in [1, 4, 7, 16, 40] {
+            let m = random_model(12, k, 100 + k as u64);
+            let kern = FmKernel::from_model(&m);
+            let mut scratch = Scratch::for_k(k);
+            let idx = [0u32, 3, 5, 11];
+            let val = [0.5f32, -1.5, 2.0, 0.25];
+            let fused = kern.score(&idx, &val, &mut scratch);
+            let scalar = m.score_sparse(&idx, &val);
+            assert!(
+                (fused - scalar).abs() < 1e-5 * (1.0 + scalar.abs()),
+                "k={k}: {fused} vs {scalar}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_row_scores_bias() {
+        let m = random_model(4, 6, 2);
+        let kern = FmKernel::from_model(&m);
+        let mut scratch = Scratch::new();
+        assert_eq!(kern.score(&[], &[], &mut scratch), m.w0);
+    }
+
+    #[test]
+    fn score_with_sums_exposes_eq10() {
+        let m = random_model(6, 3, 3);
+        let kern = FmKernel::from_model(&m);
+        let mut scratch = Scratch::for_k(3);
+        let idx = [1u32, 4];
+        let val = [2.0f32, -0.5];
+        let mut a = vec![0f32; 3];
+        let f = kern.score_with_sums(&idx, &val, &mut a, &mut scratch);
+        assert!((f - m.score_sparse(&idx, &val)).abs() < 1e-6);
+        for kk in 0..3 {
+            let want = m.vrow(1)[kk] * 2.0 + m.vrow(4)[kk] * -0.5;
+            assert!((a[kk] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn step_keeps_padding_zero() {
+        // After many fused steps, converting back and forth must be
+        // loss-free — i.e. nothing leaked into the padding lanes.
+        let m = random_model(8, 5, 4);
+        let mut kern = FmKernel::from_model(&m);
+        let mut scratch = Scratch::for_k(5);
+        let idx = [0u32, 2, 7];
+        let val = [1.0f32, -2.0, 0.5];
+        for step in 0..50 {
+            kern.score_grad_step(
+                &idx,
+                &val,
+                if step % 2 == 0 { 1.0 } else { -1.0 },
+                Task::Classification,
+                0.05,
+                1e-3,
+                1e-3,
+                &mut scratch,
+            );
+        }
+        let back = kern.to_model();
+        let rebuilt = FmKernel::from_model(&back);
+        assert_eq!(rebuilt.v, kern.v, "padding lanes drifted away from zero");
+    }
+
+    #[test]
+    fn batch_matches_single_scores() {
+        let ds = crate::data::synth::table2_dataset("housing", 8).unwrap();
+        let m = random_model(ds.d(), 4, 9);
+        let kern = FmKernel::from_model(&m);
+        let mut scratch = Scratch::for_k(4);
+        let mut out = vec![0f32; ds.n()];
+        kern.score_batch(&ds.rows, &mut out, &mut scratch);
+        for i in (0..ds.n()).step_by(41) {
+            let (idx, val) = ds.rows.row(i);
+            assert_eq!(out[i], kern.score(idx, val, &mut scratch));
+        }
+    }
+
+    #[test]
+    fn objective_matches_model_objective_shape() {
+        let ds = crate::data::synth::table2_dataset("housing", 10).unwrap();
+        let m = random_model(ds.d(), 4, 11);
+        let kern = FmKernel::from_model(&m);
+        let mut scratch = Scratch::for_k(4);
+        let o0 = kern.objective(&ds, 0.0, 0.0, &mut scratch);
+        let o1 = kern.objective(&ds, 1.0, 1.0, &mut scratch);
+        let rw: f64 = m.w.iter().map(|&x| (x as f64).powi(2)).sum();
+        let rv: f64 = m.v.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!((o1 - o0 - 0.5 * (rw + rv)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,31 @@
+//! Fused lane-blocked FM kernels — the per-example hot path every trainer
+//! executes millions of times.
+//!
+//! DS-FACTO's premise is that the per-example FM work (the eq. 4 rewrite
+//! and the eq. 10-13 updates) is the unit of work whose constant factor
+//! bounds cluster throughput. This module is that unit, tuned:
+//!
+//! * **Layout** ([`FmKernel`]) — the factor matrix `V` is stored AoSoA:
+//!   each feature row padded to a multiple of [`LANES`] (8) f32 values, so
+//!   the inner loops are fixed-width 8-lane blocks LLVM turns into full
+//!   SIMD registers. Padding lanes are invariantly zero.
+//! * **Fusion** — scoring computes the linear term, the factor sums `a`
+//!   and the squared sums `s2` in one sweep over the non-zeros;
+//!   [`FmKernel::score_grad_step`] fuses score, loss multiplier and the
+//!   eq. 11-13 update into two sweeps total (the scalar path made three).
+//! * **Zero allocation** ([`Scratch`]) — every kernel call borrows a
+//!   per-thread arena; nothing on the steady-state path touches the heap.
+//!
+//! The scalar implementations (`FmModel::score_sparse`,
+//! `optim::sgd_update_example`) remain in-tree as the semantic reference
+//! and the benchmark baseline; `FmModel::score_naive` (paper eq. 2, the
+//! O(K nnz^2) double sum) is the independent oracle the property suite in
+//! `rust/tests/kernel_properties.rs` checks both against. The measured
+//! fused-vs-scalar gap lands in `BENCH_hotpath.json` (see EXPERIMENTS.md
+//! §Perf) via `cargo bench --bench hotpath_micro`.
+
+mod fused;
+mod scratch;
+
+pub use fused::{padded_k, AdaGradLanes, FmKernel, LANES};
+pub use scratch::Scratch;

@@ -1,0 +1,112 @@
+//! The per-thread scratch arena behind the fused kernels.
+//!
+//! Every fused kernel entry point ([`FmKernel::score`],
+//! [`FmKernel::score_grad_step`], …) takes a `&mut Scratch` instead of
+//! allocating: the arena owns the lane-padded accumulator buffers (factor
+//! sums `a`, squared sums `s2`, and a generic per-column gradient buffer
+//! `gv`) and grows them on first use, so the steady state performs **zero
+//! heap allocation** per example.
+//!
+//! ## Contract
+//!
+//! * One `Scratch` per thread. The arena is plain data (no interior
+//!   mutability); sharing one across threads is prevented by `&mut`.
+//! * A `Scratch` is not tied to one model: [`Scratch::ensure`] grows the
+//!   buffers monotonically, so the same arena can serve models of
+//!   different K (capacity never shrinks).
+//! * After a scoring call, [`Scratch::factor_sums`] exposes the factor
+//!   sums `a_k` (paper eq. 10) of the **most recent** example scored with
+//!   this arena — the cache the per-example update (eq. 13) needs.
+//!
+//! [`FmKernel::score`]: super::FmKernel::score
+//! [`FmKernel::score_grad_step`]: super::FmKernel::score_grad_step
+
+use super::fused::padded_k;
+
+/// Reusable lane-padded accumulator buffers for the fused kernels.
+#[derive(Debug, Clone, Default)]
+pub struct Scratch {
+    /// Factor sums `a_k` (padded to a lane multiple).
+    pub(super) a: Vec<f32>,
+    /// Squared factor sums `s2_k` (padded to a lane multiple).
+    pub(super) s2: Vec<f32>,
+    /// Generic per-column gradient buffer (padded); used by the engine's
+    /// column-visit updates so they need no per-visit allocation.
+    pub gv: Vec<f32>,
+}
+
+impl Scratch {
+    /// An empty arena; buffers grow on first use.
+    pub fn new() -> Self {
+        Scratch::default()
+    }
+
+    /// An arena pre-sized for models with up to `k` factors.
+    pub fn for_k(k: usize) -> Self {
+        let mut s = Scratch::default();
+        s.ensure(padded_k(k));
+        s
+    }
+
+    /// Grows the buffers to at least `kp` floats (`kp` must be the padded
+    /// factor width). Monotone: never shrinks, so reuse across models of
+    /// different K is allocation-free once the largest has been seen.
+    #[inline]
+    pub fn ensure(&mut self, kp: usize) {
+        if self.a.len() < kp {
+            self.a.resize(kp, 0.0);
+            self.s2.resize(kp, 0.0);
+            self.gv.resize(kp, 0.0);
+        }
+    }
+
+    /// The `(a, s2)` accumulator pair, sized to `kp` floats.
+    #[inline]
+    pub(super) fn sums(&mut self, kp: usize) -> (&mut [f32], &mut [f32]) {
+        self.ensure(kp);
+        (&mut self.a[..kp], &mut self.s2[..kp])
+    }
+
+    /// Factor sums `a_k` of the most recent example scored through this
+    /// arena (first `k` entries; the padding lanes beyond are zero).
+    #[inline]
+    pub fn factor_sums(&self, k: usize) -> &[f32] {
+        &self.a[..k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_monotonically() {
+        let mut s = Scratch::new();
+        s.ensure(8);
+        assert_eq!(s.a.len(), 8);
+        s.ensure(4); // no shrink
+        assert_eq!(s.a.len(), 8);
+        s.ensure(24);
+        assert_eq!(s.a.len(), 24);
+        assert_eq!(s.s2.len(), 24);
+        assert_eq!(s.gv.len(), 24);
+    }
+
+    #[test]
+    fn for_k_pads_to_lane_multiple() {
+        let s = Scratch::for_k(5);
+        assert_eq!(s.a.len(), super::super::LANES);
+        let s = Scratch::for_k(9);
+        assert_eq!(s.a.len(), 2 * super::super::LANES);
+    }
+
+    #[test]
+    fn sums_are_distinct_buffers() {
+        let mut s = Scratch::for_k(3);
+        let (a, s2) = s.sums(8);
+        a[0] = 1.0;
+        s2[0] = 2.0;
+        assert_eq!(s.a[0], 1.0);
+        assert_eq!(s.s2[0], 2.0);
+    }
+}

@@ -13,6 +13,12 @@
 //!   engine ([`nomad`]), single-machine and synchronous baselines
 //!   ([`baseline`]), the uniform trainer/predictor session API ([`train`]),
 //!   data substrates ([`data`]), metrics, config, CLI.
+//! * **Hot path ([`kernel`])** — the fused lane-blocked (AoSoA, 8-wide
+//!   f32) per-example FM kernels all trainers and the serving path run
+//!   on: one-pass scoring, a fused score+gradient+update step, and batch
+//!   scoring, driven through a per-thread [`kernel::Scratch`] arena so
+//!   the steady state performs zero heap allocation (EXPERIMENTS.md
+//!   §Perf documents the layout and the `BENCH_hotpath.json` trajectory).
 //! * **Layer 2/1 (build time, `python/compile/`)** — the FM compute graphs
 //!   (JAX) built on Pallas kernels, AOT-lowered to HLO text artifacts that
 //!   the [`runtime`] module loads and executes through the PJRT CPU client
@@ -59,6 +65,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod fm;
+pub mod kernel;
 pub mod metrics;
 pub mod nomad;
 pub mod optim;
@@ -71,6 +78,7 @@ pub mod prelude {
     pub use crate::config::{DatasetSpec, ExperimentConfig, TrainerKind};
     pub use crate::data::{Dataset, Task};
     pub use crate::fm::{FmHyper, FmModel};
+    pub use crate::kernel::{FmKernel, Scratch};
     pub use crate::metrics::{EvalMetrics, TracePoint, TrainOutput};
     pub use crate::nomad::NomadConfig;
     pub use crate::train::{

@@ -47,12 +47,10 @@ impl EvalMetrics {
 /// The `coordinator::Evaluator` offers the same computation through the
 /// AOT XLA artifact; integration tests assert they agree.
 pub fn evaluate(model: &FmModel, ds: &Dataset) -> EvalMetrics {
-    let scores: Vec<f32> = (0..ds.n())
-        .map(|i| {
-            let (idx, val) = ds.rows.row(i);
-            model.score_sparse(idx, val)
-        })
-        .collect();
+    let kern = crate::kernel::FmKernel::from_model(model);
+    let mut scratch = crate::kernel::Scratch::for_k(model.k);
+    let mut scores = vec![0f32; ds.n()];
+    kern.score_batch(&ds.rows, &mut scores, &mut scratch);
     evaluate_scores(&scores, &ds.labels, ds.task)
 }
 

@@ -28,6 +28,7 @@ use super::NomadConfig;
 use crate::cluster::Transport;
 use crate::data::{Csc, Dataset, Task};
 use crate::fm::{loss, FmHyper, FmModel};
+use crate::kernel::{FmKernel, Scratch};
 use crate::metrics::{evaluate, TracePoint, TrainOutput};
 use crate::optim::LrSchedule;
 use crate::train::TrainObserver;
@@ -153,6 +154,9 @@ struct Worker<'a> {
     coords_applied: u64,
     update_mode: super::UpdateMode,
     rng: Pcg64,
+    /// Per-worker kernel scratch arena: the column-visit gradient buffer
+    /// lives here, so update visits allocate nothing at any K.
+    scratch: Scratch,
 }
 
 impl<'a> Worker<'a> {
@@ -293,23 +297,17 @@ impl<'a> Worker<'a> {
         let (lo, hi) = self.block_range(tok.j);
         let k = self.k;
         let reg_split = 1.0 / self.p as f32;
-        let mut gv_buf = [0f32; 64];
-        let mut gv_heap = Vec::new();
         for (bi, j) in (lo..hi).enumerate() {
             let (rows, xs) = self.cols.col(j);
             self.coords_applied += rows.len() as u64;
             let vj = &mut tok.v[bi * k..(bi + 1) * k];
             // Accumulate the local partial gradient (eqs. 7-8 restricted
             // to this worker's rows), with v_j fixed at its entry value.
+            // The gradient buffer comes from the worker's scratch arena
+            // (sized at construction), so no visit allocates at any K.
             let mut gw = 0f32;
-            let gv: &mut [f32] = if k <= 64 {
-                gv_buf[..k].fill(0.0);
-                &mut gv_buf[..k]
-            } else {
-                gv_heap.clear();
-                gv_heap.resize(k, 0.0);
-                &mut gv_heap
-            };
+            let gv = &mut self.scratch.gv[..k];
+            gv.fill(0.0);
             for (r, x) in rows.iter().zip(xs) {
                 let r = *r as usize;
                 let gi = self.g[r];
@@ -488,6 +486,8 @@ pub fn train_with_transport(
     let mut rng = Pcg64::new(cfg.seed, 0x0ad);
     let init = FmModel::init(d, k, fm.init_std, &mut rng);
     let mirror = ParamMirror::new(&init);
+    // Lane-blocked view shared by every worker's initial G/A pass.
+    let init_kernel = FmKernel::from_model(&init);
 
     // Row blocks.
     let chunk = n.div_ceil(p);
@@ -569,17 +569,25 @@ pub fn train_with_transport(
         for (id, &(start, end)) in bounds.iter().enumerate() {
             let post_tx = post_tx.clone();
             let init_ref = &init;
+            let init_kern = &init_kernel;
             let train_ref = train;
             handles.push(scope.spawn(move || {
                 let nloc = end - start;
                 let block = train_ref.rows.slice_rows(start, end);
                 let cols = block.to_csc();
-                // Exact initial G/A from the init model.
+                // Exact initial G/A from the init model, scored through the
+                // shared fused kernel with this worker's scratch arena.
+                let mut scratch = Scratch::for_k(k);
                 let mut g = vec![0f32; nloc];
                 let mut aa = vec![0f32; nloc * k];
                 for r in 0..nloc {
                     let (idx, val) = block.row(r);
-                    let f = init_ref.score_with_sums(idx, val, &mut aa[r * k..(r + 1) * k]);
+                    let f = init_kern.score_with_sums(
+                        idx,
+                        val,
+                        &mut aa[r * k..(r + 1) * k],
+                        &mut scratch,
+                    );
                     g[r] = loss::multiplier(f, train_ref.labels[start + r], train_ref.task);
                 }
                 let mut w = Worker {
@@ -615,6 +623,7 @@ pub fn train_with_transport(
                     coords_applied: 0,
                     update_mode: cfg.update_mode,
                     rng: Pcg64::new(cfg.seed, 0x3a17 + id as u64),
+                    scratch,
                 };
                 w.run();
             }));

@@ -13,9 +13,16 @@ use crate::fm::{loss, FmModel};
 /// Applies eqs. 11-13 for one example over all its non-zeros; returns the
 /// example's (pre-update) loss.
 ///
-/// Buffer `a` (length K) is caller-provided scratch for the factor sums so
-/// the hot loop stays allocation-free.
+/// Buffers `a` and `s2` (length K each) are caller-provided scratch for
+/// the factor sums so the loop stays allocation-free.
+///
+/// This is the *scalar reference* implementation of the update: trainers
+/// run the fused lane-blocked
+/// [`FmKernel::score_grad_step`](crate::kernel::FmKernel::score_grad_step)
+/// instead, and the property suite in `rust/tests/kernel_properties.rs`
+/// holds the two to parity.
 #[inline]
+#[allow(clippy::too_many_arguments)]
 pub fn sgd_update_example(
     model: &mut FmModel,
     idx: &[u32],
@@ -26,9 +33,10 @@ pub fn sgd_update_example(
     lambda_w: f32,
     lambda_v: f32,
     a: &mut [f32],
+    s2: &mut [f32],
 ) -> f32 {
     debug_assert_eq!(a.len(), model.k);
-    let f = model.score_with_sums(idx, val, a);
+    let f = model.score_with_sums(idx, val, a, s2);
     let g = loss::multiplier(f, y, task);
     let l = loss::loss(f, y, task);
 
@@ -63,6 +71,10 @@ pub struct AdaGradState {
     pub g02: f32,
     /// Numerical floor.
     pub eps: f32,
+    /// Internal scratch for the squared factor sums (keeps
+    /// [`update_example`](AdaGradState::update_example) allocation-free
+    /// without widening its signature).
+    s2: Vec<f32>,
 }
 
 impl AdaGradState {
@@ -73,6 +85,7 @@ impl AdaGradState {
             gv2: vec![0.0; d * k],
             g02: 0.0,
             eps: 1e-8,
+            s2: vec![0.0; k],
         }
     }
 
@@ -90,7 +103,8 @@ impl AdaGradState {
         lambda_v: f32,
         a: &mut [f32],
     ) -> f32 {
-        let f = model.score_with_sums(idx, val, a);
+        debug_assert_eq!(self.s2.len(), model.k);
+        let f = model.score_with_sums(idx, val, a, &mut self.s2);
         let g = loss::multiplier(f, y, task);
         let l = loss::loss(f, y, task);
 
@@ -145,7 +159,8 @@ mod tests {
         // delta = -(grad), so grad = old - new.
         let mut m2 = m.clone();
         let mut a = vec![0f32; k];
-        sgd_update_example(&mut m2, &idx, &val, y, task, 1.0, 0.0, 0.0, &mut a);
+        let mut s2 = vec![0f32; k];
+        sgd_update_example(&mut m2, &idx, &val, y, task, 1.0, 0.0, 0.0, &mut a, &mut s2);
         // NOTE: eq. 13 uses a_ik computed *before* the update, and w updates
         // before v — the per-coordinate updates are simultaneous in the
         // analytic gradient, matching this implementation.
@@ -206,8 +221,10 @@ mod tests {
                 let task = Task::Classification;
                 let mut m2 = m.clone();
                 let mut a = vec![0f32; m.k];
-                let before =
-                    sgd_update_example(&mut m2, idx, val, *y, task, 1e-3, 0.0, 0.0, &mut a);
+                let mut s2 = vec![0f32; m.k];
+                let before = sgd_update_example(
+                    &mut m2, idx, val, *y, task, 1e-3, 0.0, 0.0, &mut a, &mut s2,
+                );
                 let after = loss::loss(m2.score_sparse(idx, val), *y, task);
                 // Small-eta descent on a smooth loss must not increase it
                 // (allow fp slack for near-zero gradients).
@@ -228,10 +245,13 @@ mod tests {
         let (lw, lv) = (1e-4, 1e-4);
         let before = m.objective(&ds, lw, lv);
         let mut a = vec![0f32; 4];
+        let mut s2 = vec![0f32; 4];
         for _epoch in 0..5 {
             for i in 0..ds.n() {
                 let (idx, val) = ds.rows.row(i);
-                sgd_update_example(&mut m, idx, val, ds.labels[i], ds.task, 0.01, lw, lv, &mut a);
+                sgd_update_example(
+                    &mut m, idx, val, ds.labels[i], ds.task, 0.01, lw, lv, &mut a, &mut s2,
+                );
             }
         }
         let after = m.objective(&ds, lw, lv);
@@ -269,8 +289,11 @@ mod tests {
         let idx = [0u32, 1, 2, 3];
         let val = [0.0f32; 4]; // zero features: only the regularizer acts on w/V
         let mut a = vec![0f32; 2];
+        let mut s2 = vec![0f32; 2];
         let w_norm0: f32 = m.w.iter().map(|x| x * x).sum();
-        sgd_update_example(&mut m, &idx, &val, 0.0, Task::Regression, 0.1, 0.5, 0.5, &mut a);
+        sgd_update_example(
+            &mut m, &idx, &val, 0.0, Task::Regression, 0.1, 0.5, 0.5, &mut a, &mut s2,
+        );
         let w_norm1: f32 = m.w.iter().map(|x| x * x).sum();
         assert!(w_norm1 < w_norm0);
     }

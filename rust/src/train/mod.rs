@@ -79,7 +79,7 @@ pub use trainers::{
 
 use crate::config::{ExperimentConfig, TrainerKind};
 use crate::data::Dataset;
-use crate::fm::{loss, FmModel};
+use crate::fm::FmModel;
 use crate::metrics::{evaluate, TracePoint, TrainOutput};
 use crate::nomad::EngineStats;
 
@@ -233,7 +233,9 @@ impl TrainerKind {
 /// Computes one convergence-trace point: the regularized training objective
 /// (paper eq. 5), the mean training loss, and — when `test` is given —
 /// held-out metrics. Cadence gating is the caller's job: pass
-/// `test.filter(|_| iter % eval_every == 0)`.
+/// `test.filter(|_| iter % eval_every == 0)`. Scoring runs through the
+/// fused lane-blocked kernel (one layout conversion, amortized over the
+/// dataset sweep).
 pub fn trace_point(
     train: &Dataset,
     test: Option<&Dataset>,
@@ -243,13 +245,9 @@ pub fn trace_point(
     secs: f64,
     model: &FmModel,
 ) -> TracePoint {
-    let mut data_loss = 0f64;
-    for i in 0..train.n() {
-        let (idx, val) = train.rows.row(i);
-        data_loss +=
-            loss::loss(model.score_sparse(idx, val), train.labels[i], train.task) as f64;
-    }
-    data_loss /= train.n().max(1) as f64;
+    let kern = crate::kernel::FmKernel::from_model(model);
+    let mut scratch = crate::kernel::Scratch::for_k(model.k);
+    let data_loss = kern.data_loss(train, &mut scratch);
     let rw: f64 = model.w.iter().map(|&x| (x as f64) * (x as f64)).sum();
     let rv: f64 = model.v.iter().map(|&x| (x as f64) * (x as f64)).sum();
     let objective = data_loss + 0.5 * lambda_w as f64 * rw + 0.5 * lambda_v as f64 * rv;

@@ -29,8 +29,9 @@ pub trait Predictor {
     }
 }
 
-/// The native scorer: paper eq. 4's O(K nnz) rewrite, no batching, no
-/// shape specialization.
+/// The native scorer: paper eq. 4's O(K nnz) rewrite. Single examples go
+/// through the scalar `score_sparse`; batches build the fused lane-blocked
+/// [`crate::kernel::FmKernel`] view once and amortize it over the block.
 impl Predictor for FmModel {
     fn name(&self) -> &'static str {
         "native"
@@ -59,10 +60,9 @@ impl Predictor for FmModel {
             rows.n_cols(),
             self.d
         );
-        for (i, o) in out.iter_mut().enumerate() {
-            let (idx, val) = rows.row(i);
-            *o = self.score_sparse(idx, val);
-        }
+        let kern = crate::kernel::FmKernel::from_model(self);
+        let mut scratch = crate::kernel::Scratch::for_k(self.k);
+        kern.score_batch(rows, out, &mut scratch);
         Ok(())
     }
 }
@@ -111,17 +111,8 @@ impl XlaPredictor {
     }
 
     fn densify_rows(&self, rows: &Csr, start: usize, xbuf: &mut [f32]) -> usize {
-        let d = self.exec.spec.d;
-        xbuf.fill(0.0);
-        let real = self.exec.batch().min(rows.n_rows() - start);
-        for r in 0..real {
-            let (idx, val) = rows.row(start + r);
-            let row = &mut xbuf[r * d..(r + 1) * d];
-            for (j, v) in idx.iter().zip(val) {
-                row[*j as usize] = *v;
-            }
-        }
-        real
+        // The shared batch-densify path (also behind Dataset::densify_batch).
+        rows.densify_rows(start, self.exec.batch(), self.exec.spec.d, xbuf)
     }
 }
 
@@ -188,8 +179,15 @@ mod tests {
         assert_eq!(scores.len(), ds.n());
         for i in (0..ds.n()).step_by(37) {
             let (idx, val) = ds.rows.row(i);
-            assert_eq!(scores[i], model.score_sparse(idx, val));
-            assert_eq!(p.predict_one(idx, val).unwrap(), scores[i]);
+            // The batch path runs the fused lane-blocked kernel; it must
+            // agree with the scalar scorer to float accumulation noise.
+            let want = model.score_sparse(idx, val);
+            assert!(
+                (scores[i] - want).abs() < 1e-5 * (1.0 + want.abs()),
+                "row {i}: batch {} vs scalar {want}",
+                scores[i]
+            );
+            assert_eq!(p.predict_one(idx, val).unwrap(), want);
         }
     }
 

@@ -1,6 +1,13 @@
 //! Bench-harness support (the offline crate set has no criterion): timing
-//! loops with warmup, ns/op reporting, and table printing shared by the
-//! `rust/benches/*` targets.
+//! loops with warmup, ns/op reporting, table printing, and the
+//! machine-readable [`BenchReport`] JSON emitter (`BENCH_*.json`) shared
+//! by the `rust/benches/*` targets.
+//!
+//! Knobs (all env vars, so CI smoke runs stay short without code changes):
+//! * `BENCH_SAMPLES` — samples per benchmark (benches read it themselves).
+//! * `BENCH_MIN_MS` — per-sample calibration floor in milliseconds
+//!   (default 10).
+//! * `BENCH_JSON` — output path for the report (benches pick the default).
 
 use crate::util::stats::Summary;
 use crate::util::timer::Stopwatch;
@@ -20,10 +27,21 @@ pub fn time_iters(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> 
     samples
 }
 
+/// Per-sample calibration floor in seconds (`BENCH_MIN_MS`, default 10ms).
+fn min_sample_secs() -> f64 {
+    std::env::var("BENCH_MIN_MS")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(|ms| (ms / 1e3).max(1e-5))
+        .unwrap_or(0.01)
+}
+
 /// Runs a micro-benchmark: repeatedly calls `f` in batches sized so each
-/// sample takes >= `min_batch_secs`, reporting ns/op.
-pub fn bench_ns_per_op(name: &str, samples: usize, mut f: impl FnMut() -> u64) -> f64 {
+/// sample takes at least the calibration floor; returns the full ns/op
+/// sample summary (and prints the usual table line).
+pub fn bench_summary(name: &str, samples: usize, mut f: impl FnMut() -> u64) -> Summary {
     // Calibrate batch size.
+    let floor = min_sample_secs();
     let mut batch = 1u64;
     loop {
         let sw = Stopwatch::start();
@@ -32,7 +50,7 @@ pub fn bench_ns_per_op(name: &str, samples: usize, mut f: impl FnMut() -> u64) -
             ops += f();
         }
         let secs = sw.secs();
-        if secs >= 0.01 || batch >= 1 << 24 {
+        if secs >= floor || batch >= 1 << 24 {
             let _ = ops;
             break;
         }
@@ -48,8 +66,130 @@ pub fn bench_ns_per_op(name: &str, samples: usize, mut f: impl FnMut() -> u64) -
         per_op.push(sw.secs() * 1e9 / ops.max(1) as f64);
     }
     let s = Summary::of(&per_op);
-    println!("{name:<44} {:>10.1} ns/op  (p50 {:>9.1}, p95 {:>9.1}, n={})", s.mean, s.p50, s.p95, s.n);
-    s.p50
+    println!(
+        "{name:<44} {:>10.1} ns/op  (p50 {:>9.1}, p95 {:>9.1}, n={})",
+        s.mean, s.p50, s.p95, s.n
+    );
+    s
+}
+
+/// One recorded micro-benchmark result (a row of a `BENCH_*.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchEntry {
+    /// Benchmark name (stable across runs; the perf-trajectory key).
+    pub name: String,
+    /// Headline nanoseconds per operation (p50 across samples).
+    pub ns_per_op: f64,
+    /// Mean ns/op across samples.
+    pub mean: f64,
+    /// p95 ns/op across samples.
+    pub p95: f64,
+    /// Number of samples.
+    pub samples: usize,
+}
+
+/// Collects benchmark entries and writes the machine-readable
+/// `BENCH_*.json` report (schema documented in EXPERIMENTS.md §Perf) that
+/// gives the perf trajectory comparable points across commits.
+#[derive(Debug, Clone, Default)]
+pub struct BenchReport {
+    /// Report name (e.g. `hotpath_micro`).
+    pub bench: String,
+    /// Recorded entries, in run order.
+    pub entries: Vec<BenchEntry>,
+}
+
+impl BenchReport {
+    /// An empty report for the named bench target.
+    pub fn new(bench: &str) -> Self {
+        BenchReport {
+            bench: bench.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Records a sampled summary under `name`.
+    pub fn record(&mut self, name: &str, s: &Summary) {
+        self.entries.push(BenchEntry {
+            name: name.to_string(),
+            ns_per_op: s.p50,
+            mean: s.mean,
+            p95: s.p95,
+            samples: s.n,
+        });
+    }
+
+    /// Records a single derived measurement (no sample distribution).
+    pub fn record_value(&mut self, name: &str, ns_per_op: f64) {
+        self.entries.push(BenchEntry {
+            name: name.to_string(),
+            ns_per_op,
+            mean: ns_per_op,
+            p95: ns_per_op,
+            samples: 1,
+        });
+    }
+
+    /// The recorded ns/op for `name`, if present.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .map(|e| e.ns_per_op)
+    }
+
+    /// Serializes the report (hand-rolled: the offline crate set has no
+    /// serde). Non-finite values are emitted as `null` to keep the
+    /// document valid JSON.
+    pub fn to_json(&self) -> String {
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v:.4}")
+            } else {
+                "null".to_string()
+            }
+        }
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", escape_json(&self.bench)));
+        out.push_str("  \"schema\": 1,\n");
+        out.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"ns_per_op\": {}, \"mean\": {}, \"p95\": {}, \"samples\": {}}}{}\n",
+                escape_json(&e.name),
+                num(e.ns_per_op),
+                num(e.mean),
+                num(e.p95),
+                e.samples,
+                if i + 1 < self.entries.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Writes the JSON report to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control bytes).
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Prints a bench section header.
@@ -83,5 +223,36 @@ mod tests {
     fn ratio_formatting() {
         assert!(ratio_str(1.0, 2.0).contains("faster"));
         assert!(ratio_str(2.0, 1.0).contains("slower"));
+    }
+
+    #[test]
+    fn report_collects_and_serializes() {
+        let mut r = BenchReport::new("unit_test");
+        r.record("op_a", &Summary::of(&[10.0, 12.0, 14.0]));
+        r.record_value("derived", 7.5);
+        assert_eq!(r.get("op_a"), Some(12.0));
+        assert_eq!(r.get("derived"), Some(7.5));
+        assert_eq!(r.get("missing"), None);
+        let json = r.to_json();
+        assert!(json.contains("\"bench\": \"unit_test\""));
+        assert!(json.contains("\"name\": \"op_a\""));
+        assert!(json.contains("\"ns_per_op\": 12.0000"));
+        assert!(json.contains("\"samples\": 3"));
+        // Braces/brackets balance (cheap well-formedness check).
+        assert_eq!(
+            json.matches('{').count(),
+            json.matches('}').count(),
+            "{json}"
+        );
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn json_escaping_handles_specials() {
+        assert_eq!(escape_json("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(escape_json("line\nbreak"), "line\\nbreak");
+        let mut r = BenchReport::new("x");
+        r.record_value("nan_case", f64::NAN);
+        assert!(r.to_json().contains("\"ns_per_op\": null"));
     }
 }

@@ -4,7 +4,12 @@
 //! `forall` runs a property over generated cases; on failure it reports the
 //! case index and the seed that reproduces it, so failures are replayable
 //! with `PROP_SEED=<seed> cargo test <name>`.
+//!
+//! The shared generators ([`sparse_row`], [`random_csr`]) keep the
+//! kernel/data/codec property suites (`rust/tests/*_properties.rs`)
+//! drawing from one distribution instead of re-rolling ad-hoc ones.
 
+use crate::data::Csr;
 use crate::util::rng::Pcg64;
 
 /// Number of cases per property (overridable via `PROP_CASES`).
@@ -67,6 +72,39 @@ pub fn forall_res<T: std::fmt::Debug>(
     }
 }
 
+/// A sorted, duplicate-free sparse row over `d` columns with `nnz`
+/// non-zeros (`nnz <= d`; `nnz == 0` yields the empty row), values drawn
+/// standard normal. The canonical generator for per-example kernel
+/// properties.
+pub fn sparse_row(rng: &mut Pcg64, d: usize, nnz: usize) -> (Vec<u32>, Vec<f32>) {
+    let mut idx: Vec<u32> = rng
+        .sample_indices(d, nnz)
+        .into_iter()
+        .map(|c| c as u32)
+        .collect();
+    idx.sort_unstable();
+    let val: Vec<f32> = idx.iter().map(|_| rng.normal32(0.0, 1.0)).collect();
+    (idx, val)
+}
+
+/// A random CSR of up to `max_rows x max_cols` built from random triplets
+/// (duplicates summed by construction), for data-invariant properties.
+pub fn random_csr(rng: &mut Pcg64, max_rows: usize, max_cols: usize) -> Csr {
+    let n = 1 + rng.below_usize(max_rows);
+    let d = 1 + rng.below_usize(max_cols);
+    let nnz = rng.below_usize(n * d);
+    let triplets: Vec<(usize, usize, f32)> = (0..nnz)
+        .map(|_| {
+            (
+                rng.below_usize(n),
+                rng.below_usize(d),
+                rng.normal32(0.0, 1.0),
+            )
+        })
+        .collect();
+    Csr::from_triplets(n, d, &triplets)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,5 +145,27 @@ mod tests {
         });
         let msg = *r.unwrap_err().downcast::<String>().unwrap();
         assert!(msg.contains("custom context"));
+    }
+
+    #[test]
+    fn sparse_row_is_sorted_and_distinct() {
+        let mut rng = Pcg64::seeded(11);
+        for _ in 0..50 {
+            let d = 1 + rng.below_usize(30);
+            let nnz = rng.below_usize(d + 1);
+            let (idx, val) = sparse_row(&mut rng, d, nnz);
+            assert_eq!(idx.len(), nnz);
+            assert_eq!(val.len(), nnz);
+            assert!(idx.windows(2).all(|w| w[0] < w[1]), "{idx:?}");
+            assert!(idx.iter().all(|&j| (j as usize) < d));
+        }
+    }
+
+    #[test]
+    fn random_csr_validates() {
+        let mut rng = Pcg64::seeded(12);
+        for _ in 0..30 {
+            random_csr(&mut rng, 12, 12).validate().unwrap();
+        }
     }
 }

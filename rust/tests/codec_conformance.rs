@@ -1,0 +1,137 @@
+//! Conformance oracle for the token wire codec (`cluster::codec`): every
+//! token the engine can circulate — column blocks of any width/K, the
+//! bias token, both phases — must round-trip bit-exactly, report its
+//! exact wire size, and be rejected under truncation, extension, or
+//! header corruption. This is the contract the TCP transport's framing
+//! relies on.
+
+use dsfacto::cluster::codec::{decode_token, encode_token, token_wire_size};
+use dsfacto::nomad::token::{Phase, Token, BIAS};
+use dsfacto::util::prop::forall_res;
+use dsfacto::util::rng::Pcg64;
+
+fn random_token(rng: &mut Pcg64) -> Token {
+    if rng.chance(0.2) {
+        // Bias token: w = [w0], no factors.
+        Token {
+            j: BIAS,
+            iter: rng.next_u32() % 1000,
+            phase: if rng.chance(0.5) {
+                Phase::Update
+            } else {
+                Phase::Recompute
+            },
+            visits: (rng.next_u32() % 64) as u16,
+            w: Box::from([rng.normal32(0.0, 10.0)]),
+            v: Box::from([]),
+        }
+    } else {
+        let ncols = 1 + rng.below_usize(8);
+        let k = rng.below_usize(17); // k = 0 included
+        Token {
+            j: rng.next_u32() % (1 << 24),
+            iter: rng.next_u32() % 1000,
+            phase: if rng.chance(0.5) {
+                Phase::Update
+            } else {
+                Phase::Recompute
+            },
+            visits: (rng.next_u32() % 64) as u16,
+            w: (0..ncols).map(|_| rng.normal32(0.0, 10.0)).collect(),
+            v: (0..ncols * k).map(|_| rng.normal32(0.0, 1.0)).collect(),
+        }
+    }
+}
+
+/// Round-trip + exact wire-size accounting for arbitrary tokens
+/// (including bias tokens and k = 0 blocks).
+#[test]
+fn prop_roundtrip_and_wire_size() {
+    forall_res(
+        "token codec roundtrip with exact size accounting",
+        128,
+        random_token,
+        |tok| {
+            let mut buf = Vec::new();
+            encode_token(tok, &mut buf);
+            if buf.len() != token_wire_size(tok) {
+                return Err(format!(
+                    "encoded {} bytes, token_wire_size says {}",
+                    buf.len(),
+                    token_wire_size(tok)
+                ));
+            }
+            let back = decode_token(&buf).map_err(|e| format!("{e:#}"))?;
+            if back == *tok {
+                Ok(())
+            } else {
+                Err(format!("{back:?} != {tok:?}"))
+            }
+        },
+    );
+}
+
+/// Both `Phase` variants survive the wire explicitly (not just by chance
+/// of the random generator).
+#[test]
+fn all_phase_variants_roundtrip() {
+    for phase in [Phase::Update, Phase::Recompute] {
+        for (j, w_len, v_len) in [(BIAS, 1usize, 0usize), (0, 3, 12), (77, 1, 4)] {
+            let tok = Token {
+                j,
+                iter: 41,
+                phase,
+                visits: 7,
+                w: (0..w_len).map(|i| i as f32 - 0.5).collect(),
+                v: (0..v_len).map(|i| -(i as f32) * 0.25).collect(),
+            };
+            let mut buf = Vec::new();
+            encode_token(&tok, &mut buf);
+            let back = decode_token(&buf).unwrap();
+            assert_eq!(back, tok, "phase {phase:?}, j {j}");
+        }
+    }
+}
+
+/// Every strict prefix of a valid frame is rejected, as is any extension:
+/// the framing layer can trust the codec to catch torn reads.
+#[test]
+fn prop_truncation_and_extension_rejected() {
+    forall_res(
+        "truncated/extended frames rejected",
+        32,
+        random_token,
+        |tok| {
+            let mut buf = Vec::new();
+            encode_token(tok, &mut buf);
+            for cut in 0..buf.len() {
+                if decode_token(&buf[..cut]).is_ok() {
+                    return Err(format!("prefix of {cut}/{} bytes accepted", buf.len()));
+                }
+            }
+            let mut extended = buf.clone();
+            extended.push(0);
+            if decode_token(&extended).is_ok() {
+                return Err("frame with trailing garbage accepted".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Header corruption (magic, phase byte) is rejected.
+#[test]
+fn corrupted_header_rejected() {
+    let mut rng = Pcg64::seeded(5);
+    let tok = random_token(&mut rng);
+    let mut buf = Vec::new();
+    encode_token(&tok, &mut buf);
+
+    let mut bad_magic = buf.clone();
+    bad_magic[0] ^= 0xff;
+    assert!(decode_token(&bad_magic).is_err(), "bad magic accepted");
+
+    let mut bad_phase = buf.clone();
+    bad_phase[10] = 9;
+    assert!(decode_token(&bad_phase).is_err(), "bad phase byte accepted");
+}

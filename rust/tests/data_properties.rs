@@ -1,0 +1,188 @@
+//! Property tests for the data-substrate invariants: CSR <-> CSC <-> dense
+//! round-trips, structure-preserving transforms (`select_rows`,
+//! `slice_rows`, `scale_columns`), and the shared batch-densify path
+//! (`densify_batch` / `Csr::densify_rows`) against the `Csr::row` oracle.
+
+use dsfacto::data::{Csr, Dataset, Task};
+use dsfacto::util::prop::{forall_res, random_csr};
+
+/// Rebuilds a CSR from a CSC column view (duplicate-free by construction).
+fn csc_to_csr(m: &Csr) -> Csr {
+    let t = m.to_csc();
+    let mut triplets = Vec::with_capacity(t.nnz());
+    for j in 0..t.n_cols() {
+        let (rows, vals) = t.col(j);
+        for (r, v) in rows.iter().zip(vals) {
+            triplets.push((*r as usize, j, *v));
+        }
+    }
+    Csr::from_triplets(m.n_rows(), m.n_cols(), &triplets)
+}
+
+/// CSR -> CSC -> CSR is the identity (both are canonical forms).
+#[test]
+fn prop_csr_csc_roundtrip() {
+    forall_res(
+        "csr -> csc -> csr identity",
+        64,
+        |rng| random_csr(rng, 12, 12),
+        |m| {
+            let back = csc_to_csr(m);
+            back.validate().map_err(|e| format!("{e:#}"))?;
+            if back == *m {
+                Ok(())
+            } else {
+                Err("roundtrip changed the matrix".to_string())
+            }
+        },
+    );
+}
+
+/// CSR -> dense -> CSR preserves the dense image exactly.
+#[test]
+fn prop_dense_roundtrip() {
+    forall_res(
+        "csr -> dense -> csr preserves the dense image",
+        48,
+        |rng| random_csr(rng, 10, 10),
+        |m| {
+            let dense = m.to_dense();
+            let (n, d) = (m.n_rows(), m.n_cols());
+            let mut triplets = Vec::new();
+            for i in 0..n {
+                for j in 0..d {
+                    let v = dense[i * d + j];
+                    if v != 0.0 {
+                        triplets.push((i, j, v));
+                    }
+                }
+            }
+            let back = Csr::from_triplets(n, d, &triplets);
+            if back.to_dense() == dense {
+                Ok(())
+            } else {
+                Err("dense image changed".to_string())
+            }
+        },
+    );
+}
+
+/// `select_rows` / `slice_rows` / `scale_columns` all preserve
+/// `validate()`, and scaling acts column-wise on the dense image.
+#[test]
+fn prop_transforms_preserve_invariants() {
+    forall_res(
+        "select/slice/scale preserve CSR invariants",
+        48,
+        |rng| {
+            let m = random_csr(rng, 10, 10);
+            let n = m.n_rows();
+            // Selection with repetition allowed, arbitrary order.
+            let sel: Vec<usize> = (0..rng.below_usize(2 * n + 1))
+                .map(|_| rng.below_usize(n))
+                .collect();
+            let a = rng.below_usize(n + 1);
+            let b = a + rng.below_usize(n - a + 1);
+            let scale: Vec<f32> = (0..m.n_cols())
+                .map(|_| rng.normal32(0.0, 2.0))
+                .collect();
+            (m, sel, a, b, scale)
+        },
+        |(m, sel, a, b, scale)| {
+            let selected = m.select_rows(sel);
+            selected.validate().map_err(|e| format!("select: {e:#}"))?;
+            if selected.n_rows() != sel.len() {
+                return Err("select_rows row count".into());
+            }
+            for (out_r, &src_r) in sel.iter().enumerate() {
+                if selected.row(out_r) != m.row(src_r) {
+                    return Err(format!("select_rows row {out_r} != source {src_r}"));
+                }
+            }
+
+            let sliced = m.slice_rows(*a, *b);
+            sliced.validate().map_err(|e| format!("slice: {e:#}"))?;
+            let range: Vec<usize> = (*a..*b).collect();
+            if sliced != m.select_rows(&range) {
+                return Err("slice_rows != select_rows on the same range".into());
+            }
+
+            let mut scaled = m.clone();
+            scaled.scale_columns(scale);
+            scaled.validate().map_err(|e| format!("scale: {e:#}"))?;
+            let dense = m.to_dense();
+            let scaled_dense = scaled.to_dense();
+            let d = m.n_cols();
+            for (p, (&orig, &got)) in dense.iter().zip(&scaled_dense).enumerate() {
+                let want = orig * scale[p % d];
+                if (got - want).abs() > 1e-6 * (1.0 + want.abs()) {
+                    return Err(format!("scale_columns at flat index {p}: {got} vs {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `densify_batch` agrees with the `Csr::row` oracle entry-by-entry and
+/// zero-fills the padding tail.
+#[test]
+fn prop_densify_batch_agrees_with_rows() {
+    forall_res(
+        "densify_batch equals row-wise densification",
+        64,
+        |rng| {
+            let rows = random_csr(rng, 10, 8);
+            let n = rows.n_rows();
+            let labels = (0..n).map(|i| i as f32).collect();
+            let ds = Dataset {
+                name: "prop".into(),
+                task: Task::Regression,
+                rows,
+                labels,
+            };
+            let start = rng.below_usize(n + 2); // may start past the end
+            let b = 1 + rng.below_usize(n + 2);
+            (ds, start, b)
+        },
+        |(ds, start, b)| {
+            let d = ds.d();
+            let mut buf = vec![f32::NAN; b * d];
+            let real = ds.densify_batch(*start, *b, &mut buf);
+            let want_real = (*b).min(ds.n().saturating_sub(*start));
+            if real != want_real {
+                return Err(format!("real {real} != {want_real}"));
+            }
+            for r in 0..*b {
+                let row = &buf[r * d..(r + 1) * d];
+                if r < real {
+                    let (idx, val) = ds.rows.row(start + r);
+                    let mut expect = vec![0f32; d];
+                    for (j, v) in idx.iter().zip(val) {
+                        expect[*j as usize] = *v;
+                    }
+                    if row != expect.as_slice() {
+                        return Err(format!("row {r} mismatch"));
+                    }
+                } else if row.iter().any(|&x| x != 0.0) {
+                    return Err(format!("padding row {r} not zero-filled"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The `Csr::densify_rows` width parameter (the XLA fixed-shape path)
+/// zero-fills the columns past `n_cols`.
+#[test]
+fn densify_rows_wider_than_matrix() {
+    let m = Csr::from_triplets(2, 3, &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0)]);
+    let width = 5;
+    let mut buf = vec![f32::NAN; 4 * width];
+    let real = m.densify_rows(0, 4, width, &mut buf);
+    assert_eq!(real, 2);
+    assert_eq!(&buf[..width], &[1.0, 0.0, 2.0, 0.0, 0.0]);
+    assert_eq!(&buf[width..2 * width], &[0.0, 0.0, 0.0, 3.0, 0.0][..]);
+    assert!(buf[2 * width..].iter().all(|&x| x == 0.0));
+}

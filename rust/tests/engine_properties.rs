@@ -184,6 +184,50 @@ fn prop_transports_are_equivalent() {
     assert!((a - c).abs() < 0.3 * a.max(0.05), "local {a} vs tcp {c}");
 }
 
+/// Kernel-era regression: the engine's fused-kernel G/A initialization and
+/// scratch-arena column visits must hold across the K = 32 boundary that
+/// separates the scalar scorer's stack and heap paths (wide factor models
+/// exercise the grown-scratch path end to end).
+#[test]
+fn prop_engine_handles_wide_factor_models() {
+    for k in [1usize, 8, 33, 48] {
+        let spec = synth::SynthSpec {
+            name: "widek".into(),
+            task: Task::Regression,
+            n: 30,
+            d: 10,
+            k: 4,
+            density: 1.0,
+            factor_scale: 0.2,
+            noise: 0.2,
+            skew: 0.0,
+        };
+        let ds = synth::generate(&spec, 1000 + k as u64).dataset;
+        let fm = FmHyper {
+            k,
+            init_std: 0.05,
+            ..Default::default()
+        };
+        let cfg = NomadConfig {
+            workers: 3,
+            outer_iters: 3,
+            eta: LrSchedule::Constant(0.1),
+            eval_every: usize::MAX,
+            ..Default::default()
+        };
+        let (out, stats) = train_with_stats(&ds, None, &fm, &cfg).unwrap();
+        assert_eq!(out.trace.len(), 4, "k={k}");
+        assert_eq!(out.model.k, k, "k={k}");
+        assert!(
+            out.model.w0.is_finite()
+                && out.model.w.iter().all(|x| x.is_finite())
+                && out.model.v.iter().all(|x| x.is_finite()),
+            "k={k}: non-finite parameters"
+        );
+        assert!(stats.coordinate_updates > 0, "k={k}");
+    }
+}
+
 /// Degenerate shapes must not wedge the engine.
 #[test]
 fn prop_degenerate_shapes() {

@@ -1,0 +1,332 @@
+//! Oracle-backed property suite for the fused lane-blocked kernel
+//! (`dsfacto::kernel`): scoring parity against the paper-literal eq. 2
+//! double sum (`FmModel::score_naive`), update parity against the scalar
+//! reference (`optim::sgd_update_example`), finite-difference gradient
+//! checks, and scratch-arena reuse — across random K in 1..=64 (covering
+//! both the scalar scorer's stack path, K <= 32, and its heap path),
+//! random nnz including empty rows, and permuted index orders.
+
+use dsfacto::data::Task;
+use dsfacto::fm::{loss, FmModel};
+use dsfacto::kernel::{padded_k, AdaGradLanes, FmKernel, Scratch, LANES};
+use dsfacto::optim::{sgd_update_example, AdaGradState};
+use dsfacto::util::prop::{forall_res, sparse_row};
+use dsfacto::util::rng::Pcg64;
+
+fn random_model(rng: &mut Pcg64, d: usize, k: usize) -> FmModel {
+    let mut m = FmModel::init(d, k, 0.3, rng);
+    for x in m.w.iter_mut() {
+        *x = rng.normal32(0.0, 0.5);
+    }
+    m.w0 = rng.normal32(0.0, 0.5);
+    m
+}
+
+/// Max relative parameter discrepancy between two same-shape models.
+fn model_distance(a: &FmModel, b: &FmModel) -> f32 {
+    let mut worst = (a.w0 - b.w0).abs() / (1.0 + b.w0.abs());
+    for (x, y) in a.w.iter().zip(&b.w) {
+        worst = worst.max((x - y).abs() / (1.0 + y.abs()));
+    }
+    for (x, y) in a.v.iter().zip(&b.v) {
+        worst = worst.max((x - y).abs() / (1.0 + y.abs()));
+    }
+    worst
+}
+
+/// Acceptance criterion: fused scores match the eq. 2 oracle within 1e-4
+/// relative error for K across 1..=64 (stack and heap scalar paths alike),
+/// arbitrary nnz (including empty rows), duplicate-free sorted indices.
+#[test]
+fn prop_kernel_score_matches_naive_all_k() {
+    forall_res(
+        "fused kernel score equals naive pairwise oracle",
+        96,
+        |rng| {
+            let d = 2 + rng.below_usize(22);
+            let k = 1 + rng.below_usize(64);
+            let m = random_model(rng, d, k);
+            let nnz = rng.below_usize(d + 1); // 0 included: empty rows
+            let (idx, val) = sparse_row(rng, d, nnz);
+            (m, idx, val)
+        },
+        |(m, idx, val)| {
+            let kern = FmKernel::from_model(m);
+            let mut scratch = Scratch::for_k(m.k);
+            let fused = kern.score(idx, val, &mut scratch);
+            let naive = m.score_naive(idx, val);
+            let scalar = m.score_sparse(idx, val);
+            let tol = 1e-4 * (1.0 + naive.abs());
+            if (fused - naive).abs() >= tol {
+                return Err(format!("k={}: fused {fused} vs naive {naive}", m.k));
+            }
+            if (fused - scalar).abs() >= tol {
+                return Err(format!("k={}: fused {fused} vs scalar {scalar}", m.k));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The score is invariant (to accumulation noise) under joint permutation
+/// of the (index, value) pairs — the kernel must not rely on sortedness.
+#[test]
+fn prop_kernel_score_permutation_invariant() {
+    forall_res(
+        "kernel score invariant under index permutation",
+        64,
+        |rng| {
+            let d = 2 + rng.below_usize(16);
+            let k = 1 + rng.below_usize(24);
+            let m = random_model(rng, d, k);
+            let nnz = 1 + rng.below_usize(d);
+            let (idx, val) = sparse_row(rng, d, nnz);
+            // A joint shuffle of the pairs.
+            let mut pairs: Vec<(u32, f32)> = idx.iter().cloned().zip(val.iter().cloned()).collect();
+            rng.shuffle(&mut pairs);
+            let (pidx, pval): (Vec<u32>, Vec<f32>) = pairs.into_iter().unzip();
+            (m, idx, val, pidx, pval)
+        },
+        |(m, idx, val, pidx, pval)| {
+            let kern = FmKernel::from_model(m);
+            let mut scratch = Scratch::for_k(m.k);
+            let sorted = kern.score(idx, val, &mut scratch);
+            let shuffled = kern.score(pidx, pval, &mut scratch);
+            let tol = 1e-4 * (1.0 + sorted.abs());
+            if (sorted - shuffled).abs() < tol {
+                Ok(())
+            } else {
+                Err(format!("sorted {sorted} vs shuffled {shuffled}"))
+            }
+        },
+    );
+}
+
+/// The fused score+gradient+update step lands on the same parameters (and
+/// loss) as the scalar three-pass reference, for random shapes, tasks,
+/// step sizes and regularization.
+#[test]
+fn prop_fused_step_matches_scalar_update() {
+    forall_res(
+        "fused score_grad_step equals scalar sgd_update_example",
+        96,
+        |rng| {
+            let d = 2 + rng.below_usize(16);
+            let k = 1 + rng.below_usize(64);
+            let m = random_model(rng, d, k);
+            let nnz = 1 + rng.below_usize(d);
+            let (idx, val) = sparse_row(rng, d, nnz);
+            let y = if rng.chance(0.5) { 1.0 } else { -1.0 };
+            let task = if rng.chance(0.5) {
+                Task::Classification
+            } else {
+                Task::Regression
+            };
+            let eta = 10f32.powf(-1.0 - 2.0 * rng.f32());
+            let lw = if rng.chance(0.5) { 0.0 } else { 1e-3 };
+            let lv = if rng.chance(0.5) { 0.0 } else { 1e-3 };
+            (m, idx, val, y, task, eta, lw, lv)
+        },
+        |(m, idx, val, y, task, eta, lw, lv)| {
+            let mut scalar = m.clone();
+            let mut a = vec![0f32; m.k];
+            let mut s2 = vec![0f32; m.k];
+            let scalar_loss = sgd_update_example(
+                &mut scalar, idx, val, *y, *task, *eta, *lw, *lv, &mut a, &mut s2,
+            );
+
+            let mut kern = FmKernel::from_model(m);
+            let mut scratch = Scratch::for_k(m.k);
+            let fused_loss =
+                kern.score_grad_step(idx, val, *y, *task, *eta, *lw, *lv, &mut scratch);
+            let fused = kern.to_model();
+
+            if (fused_loss - scalar_loss).abs() >= 1e-4 * (1.0 + scalar_loss.abs()) {
+                return Err(format!("loss {fused_loss} vs {scalar_loss}"));
+            }
+            let dist = model_distance(&fused, &scalar);
+            if dist < 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("post-update parameter distance {dist}"))
+            }
+        },
+    );
+}
+
+/// Finite-difference check of the fused step's implied gradient: with
+/// eta = 1 and no regularizer, `old - new` is the stochastic gradient.
+#[test]
+fn prop_fused_step_matches_finite_differences() {
+    forall_res(
+        "fused step direction matches central differences",
+        48,
+        |rng| {
+            let d = 2 + rng.below_usize(8);
+            let k = 1 + rng.below_usize(8);
+            let m = random_model(rng, d, k);
+            let nnz = 1 + rng.below_usize(d);
+            let (idx, val) = sparse_row(rng, d, nnz);
+            let y = if rng.chance(0.5) { 1.0 } else { -1.0 };
+            // Probe one w coordinate and one v coordinate on the support.
+            let probe = idx[rng.below_usize(idx.len())] as usize;
+            let kk = rng.below_usize(k);
+            (m, idx, val, y, probe, kk)
+        },
+        |(m, idx, val, y, probe, kk)| {
+            let task = Task::Classification;
+            let mut kern = FmKernel::from_model(m);
+            let mut scratch = Scratch::for_k(m.k);
+            kern.score_grad_step(idx, val, *y, task, 1.0, 0.0, 0.0, &mut scratch);
+            let stepped = kern.to_model();
+
+            let eps = 1e-3f32;
+            let loss_of = |mm: &FmModel| loss::loss(mm.score_sparse(idx, val), *y, task);
+            let check = |ana: f32, bump: &dyn Fn(&mut FmModel, f32), what: &str| {
+                let mut mp = m.clone();
+                bump(&mut mp, eps);
+                let mut mn = m.clone();
+                bump(&mut mn, -eps);
+                let num = (loss_of(&mp) - loss_of(&mn)) / (2.0 * eps);
+                if (num - ana).abs() < 5e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("{what}: numeric {num} vs analytic {ana}"))
+                }
+            };
+            let j = *probe;
+            let p = j * m.k + *kk;
+            check(m.w0 - stepped.w0, &|mm, e| mm.w0 += e, "w0")?;
+            check(m.w[j] - stepped.w[j], &move |mm, e| mm.w[j] += e, "w")?;
+            check(m.v[p] - stepped.v[p], &move |mm, e| mm.v[p] += e, "v")?;
+            Ok(())
+        },
+    );
+}
+
+/// The lane-blocked AdaGrad variant matches the scalar AdaGrad state over
+/// a multi-step trajectory.
+#[test]
+fn prop_adagrad_lanes_match_scalar_state() {
+    forall_res(
+        "fused AdaGrad equals scalar AdaGradState",
+        32,
+        |rng| {
+            let d = 2 + rng.below_usize(10);
+            let k = 1 + rng.below_usize(24);
+            let m = random_model(rng, d, k);
+            let steps: Vec<(Vec<u32>, Vec<f32>, f32)> = (0..5)
+                .map(|_| {
+                    let nnz = 1 + rng.below_usize(d);
+                    let (idx, val) = sparse_row(rng, d, nnz);
+                    let y = if rng.chance(0.5) { 1.0 } else { -1.0 };
+                    (idx, val, y)
+                })
+                .collect();
+            (m, steps)
+        },
+        |(m, steps)| {
+            let task = Task::Classification;
+            let mut scalar = m.clone();
+            let mut st = AdaGradState::new(m.d, m.k);
+            let mut a = vec![0f32; m.k];
+
+            let mut kern = FmKernel::from_model(m);
+            let mut lanes = AdaGradLanes::new(m.d, m.k);
+            let mut scratch = Scratch::for_k(m.k);
+
+            for (idx, val, y) in steps {
+                st.update_example(&mut scalar, idx, val, *y, task, 0.1, 1e-3, 1e-3, &mut a);
+                kern.score_grad_step_adagrad(
+                    idx,
+                    val,
+                    *y,
+                    task,
+                    0.1,
+                    1e-3,
+                    1e-3,
+                    &mut lanes,
+                    &mut scratch,
+                );
+            }
+            let fused = kern.to_model();
+            let dist = model_distance(&fused, &scalar);
+            if dist < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("AdaGrad trajectories diverged: distance {dist}"))
+            }
+        },
+    );
+}
+
+/// One scratch arena serves models of different K (grow-only reuse), and
+/// padding stays exact across the K = 32 stack/heap boundary.
+#[test]
+fn scratch_reuse_across_k_and_lane_boundaries() {
+    let mut rng = Pcg64::seeded(77);
+    let mut scratch = Scratch::new();
+    for &k in &[3, 40, 7, 64, 1, LANES, LANES + 1, 33] {
+        let d = 10;
+        let m = random_model(&mut rng, d, k);
+        let kern = FmKernel::from_model(&m);
+        assert_eq!(kern.padded(), padded_k(k));
+        for nnz in [0, 1, d / 2, d] {
+            let (idx, val) = sparse_row(&mut rng, d, nnz);
+            let fused = kern.score(&idx, &val, &mut scratch);
+            let naive = m.score_naive(&idx, &val);
+            assert!(
+                (fused - naive).abs() < 1e-4 * (1.0 + naive.abs()),
+                "k={k} nnz={nnz}: {fused} vs {naive}"
+            );
+        }
+    }
+}
+
+/// Long fused-SGD trajectories keep the kernel and the scalar reference in
+/// the same place (error accumulates but stays bounded), and the model
+/// round-trip after training is exact.
+#[test]
+fn fused_training_trajectory_tracks_scalar() {
+    let mut rng = Pcg64::seeded(99);
+    let d = 12;
+    let k = 6;
+    let m = random_model(&mut rng, d, k);
+    let mut scalar = m.clone();
+    let mut kern = FmKernel::from_model(&m);
+    let mut scratch = Scratch::for_k(k);
+    let mut a = vec![0f32; k];
+    let mut s2 = vec![0f32; k];
+    for step in 0..200 {
+        let nnz = 1 + rng.below_usize(d);
+        let (idx, val) = sparse_row(&mut rng, d, nnz);
+        let y = if step % 3 == 0 { 1.0 } else { -1.0 };
+        sgd_update_example(
+            &mut scalar,
+            &idx,
+            &val,
+            y,
+            Task::Classification,
+            0.05,
+            1e-4,
+            1e-4,
+            &mut a,
+            &mut s2,
+        );
+        kern.score_grad_step(
+            &idx,
+            &val,
+            y,
+            Task::Classification,
+            0.05,
+            1e-4,
+            1e-4,
+            &mut scratch,
+        );
+    }
+    let fused = kern.to_model();
+    let dist = model_distance(&fused, &scalar);
+    assert!(dist < 1e-3, "200-step trajectory distance {dist}");
+    // Round-trip stays loss-free after training.
+    assert_eq!(FmKernel::from_model(&fused).to_model(), fused);
+}
