@@ -14,10 +14,12 @@
 use dsfacto::cluster::{codec, LocalTransport, Transport};
 use dsfacto::data::synth;
 use dsfacto::fm::FmModel;
-use dsfacto::kernel::{FmKernel, Scratch};
+use dsfacto::kernel::visit::{self, VisitHyper};
+use dsfacto::kernel::{padded_k, FmKernel, Scratch};
 use dsfacto::nomad::token::{Phase, Token};
 use dsfacto::optim::sgd_update_example;
 use dsfacto::util::bench::{bench_summary, ratio_str, section, BenchReport};
+use dsfacto::util::prop::pad_rows;
 use dsfacto::util::rng::Pcg64;
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -166,6 +168,181 @@ fn main() -> anyhow::Result<()> {
         ratio_str(
             report.get("kernel_score_grad_step d=22 k=4").unwrap(),
             report.get("sgd_update_example d=22 k=4").unwrap()
+        )
+    );
+
+    section("engine column visits (Alg. 1 hot path): scalar vs lane-blocked");
+    // Column-major twin of the sparse workload above: the engine's unit of
+    // work is one parameter column applied to a worker's CSC column.
+    let vk = 16usize;
+    let vkp = padded_k(vk);
+    let csc = sparse.rows.to_csc();
+    let ncols_data = sparse.d();
+    let nloc = sparse.n();
+    let mut vrng = Pcg64::seeded(21);
+    let vg: Vec<f32> = (0..nloc).map(|_| vrng.normal32(0.0, 1.0)).collect();
+    let aa_s: Vec<f32> = (0..nloc * vk).map(|_| vrng.normal32(0.0, 0.5)).collect();
+    let aa_l = pad_rows(&aa_s, nloc, vk, vkp);
+    let w_cols: Vec<f32> = (0..ncols_data).map(|_| vrng.normal32(0.0, 0.3)).collect();
+    let v_cols: Vec<f32> = (0..ncols_data * vk).map(|_| vrng.normal32(0.0, 0.3)).collect();
+    let v_cols_l = pad_rows(&v_cols, ncols_data, vk, vkp);
+    let h = VisitHyper {
+        eta: 0.05,
+        inv_n: 1.0 / nloc as f32,
+        lambda_w: 1e-4,
+        lambda_v: 1e-4,
+        reg_split: 1.0,
+    };
+
+    // Update visit. Both sides reset the column from the pristine copy
+    // each call (same copy cost on each side) so values stay bounded.
+    let mut wcol = 0f32;
+    let mut vcol_s = vec![0f32; vk];
+    let mut gv = vec![0f32; vk];
+    let mut ci = 0usize;
+    let s = bench_summary(
+        &format!("engine_visit update scalar k={vk} (per column)"),
+        samples,
+        || {
+            let j = ci % ncols_data;
+            ci += 1;
+            let (rows, xs) = csc.col(j);
+            wcol = w_cols[j];
+            vcol_s.copy_from_slice(&v_cols[j * vk..(j + 1) * vk]);
+            visit::scalar::col_update(rows, xs, &vg, &aa_s, vk, &mut wcol, &mut vcol_s, h, &mut gv);
+            std::hint::black_box(wcol);
+            1
+        },
+    );
+    report.record(&format!("engine_visit_update scalar k={vk}"), &s);
+    let mut vcol_l = vec![0f32; vkp];
+    let mut vscratch = Scratch::for_k(vk);
+    let mut cj = 0usize;
+    let s = bench_summary(
+        &format!("engine_visit update lanes k={vk} (per column)"),
+        samples,
+        || {
+            let j = cj % ncols_data;
+            cj += 1;
+            let (rows, xs) = csc.col(j);
+            wcol = w_cols[j];
+            vcol_l.copy_from_slice(&v_cols_l[j * vkp..(j + 1) * vkp]);
+            visit::col_update(rows, xs, &vg, &aa_l, vkp, &mut wcol, &mut vcol_l, h, &mut vscratch);
+            std::hint::black_box(wcol);
+            1
+        },
+    );
+    report.record(&format!("engine_visit_update lanes k={vk}"), &s);
+    println!(
+        "  lanes vs scalar (update visit): {}",
+        ratio_str(
+            report.get(&format!("engine_visit_update lanes k={vk}")).unwrap(),
+            report.get(&format!("engine_visit_update scalar k={vk}")).unwrap()
+        )
+    );
+
+    // Recompute visit (fold into the G/A partial sums).
+    let mut xw_s = vec![0f32; nloc];
+    let mut acc_a_s = vec![0f32; nloc * vk];
+    let mut acc_s2_s = vec![0f32; nloc * vk];
+    let mut ri = 0usize;
+    let s = bench_summary(
+        &format!("engine_visit recompute scalar k={vk} (per column)"),
+        samples,
+        || {
+            let j = ri % ncols_data;
+            ri += 1;
+            let (rows, xs) = csc.col(j);
+            visit::scalar::col_recompute(
+                rows,
+                xs,
+                w_cols[j],
+                &v_cols[j * vk..(j + 1) * vk],
+                vk,
+                &mut xw_s,
+                &mut acc_a_s,
+                &mut acc_s2_s,
+            );
+            1
+        },
+    );
+    report.record(&format!("engine_visit_recompute scalar k={vk}"), &s);
+    let mut xw_l = vec![0f32; nloc];
+    let mut acc_a_l = vec![0f32; nloc * vkp];
+    let mut acc_s2_l = vec![0f32; nloc * vkp];
+    let mut rj = 0usize;
+    let s = bench_summary(
+        &format!("engine_visit recompute lanes k={vk} (per column)"),
+        samples,
+        || {
+            let j = rj % ncols_data;
+            rj += 1;
+            let (rows, xs) = csc.col(j);
+            visit::col_recompute(
+                rows,
+                xs,
+                w_cols[j],
+                &v_cols_l[j * vkp..(j + 1) * vkp],
+                vkp,
+                &mut xw_l,
+                &mut acc_a_l,
+                &mut acc_s2_l,
+            );
+            1
+        },
+    );
+    report.record(&format!("engine_visit_recompute lanes k={vk}"), &s);
+    println!(
+        "  lanes vs scalar (recompute visit): {}",
+        ratio_str(
+            report.get(&format!("engine_visit_recompute lanes k={vk}")).unwrap(),
+            report.get(&format!("engine_visit_recompute scalar k={vk}")).unwrap()
+        )
+    );
+
+    // Finalize (pairwise reduction + loss multiplier per local row).
+    let mut gbuf = vec![0f32; nloc];
+    let s = bench_summary(
+        &format!("engine_visit finalize scalar k={vk} (per row)"),
+        samples,
+        || {
+            std::hint::black_box(visit::scalar::finalize_rows(
+                0.1,
+                &xw_s,
+                &acc_a_s,
+                &acc_s2_s,
+                vk,
+                &sparse.labels,
+                sparse.task,
+                &mut gbuf,
+            ));
+            nloc as u64
+        },
+    );
+    report.record(&format!("engine_visit_finalize scalar k={vk}"), &s);
+    let s = bench_summary(
+        &format!("engine_visit finalize lanes k={vk} (per row)"),
+        samples,
+        || {
+            std::hint::black_box(visit::finalize_rows(
+                0.1,
+                &xw_l,
+                &acc_a_l,
+                &acc_s2_l,
+                vkp,
+                &sparse.labels,
+                sparse.task,
+                &mut gbuf,
+            ));
+            nloc as u64
+        },
+    );
+    report.record(&format!("engine_visit_finalize lanes k={vk}"), &s);
+    println!(
+        "  lanes vs scalar (finalize): {}",
+        ratio_str(
+            report.get(&format!("engine_visit_finalize lanes k={vk}")).unwrap(),
+            report.get(&format!("engine_visit_finalize scalar k={vk}")).unwrap()
         )
     );
 

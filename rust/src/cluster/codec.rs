@@ -1,20 +1,39 @@
 //! Wire codec for parameter tokens.
 //!
 //! Layout (little-endian):
-//! `magic u16 | j u32 | iter u32 | phase u8 | visits u16 | k u16 | w f32 | v[k] f32`
+//! `magic u16 | j u32 | iter u32 | phase u8 | visits u16 | nw u32 | nv u32
+//! | w[nw] f32 | v[nv] f32`
 //!
 //! Used by the simulated-network transport (to account bytes) and the TCP
 //! transport (framed with a u32 length prefix).
+//!
+//! ## Padded in-memory layout vs the K-strided wire form
+//!
+//! The engine circulates tokens whose factor payload is **lane-padded**:
+//! `v` is `ncols x kp` row-major with `kp = padded_k(k)` and zero padding
+//! lanes (EXPERIMENTS.md §Perf). The wire format is deliberately
+//! *unchanged* from the unpadded era: [`encode_token_padded`] strips each
+//! row back to its K real entries (producing byte-identical frames to
+//! [`encode_token`] on a K-strided token), and [`decode_token_padded`]
+//! re-deals the wire rows into the padded layout (`k` is recovered as
+//! `nv / nw`). [`encode_token`] / [`decode_token`] stay layout-agnostic:
+//! they move `v` verbatim, which is also correct whenever `k` is already
+//! a lane multiple.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
+use crate::kernel::padded_k;
 use crate::nomad::token::{Phase, Token};
 
 const MAGIC: u16 = 0xD5FA;
 
+/// Fixed header size: magic u16 | j u32 | iter u32 | phase u8 |
+/// visits u16 | nw u32 | nv u32.
+const WIRE_HDR: usize = 2 + 4 + 4 + 1 + 2 + 4 + 4;
+
 /// Serialized size of a token in bytes.
 pub fn token_wire_size(tok: &Token) -> usize {
-    2 + 4 + 4 + 1 + 2 + 4 + 4 + 4 * tok.w.len() + 4 * tok.v.len()
+    WIRE_HDR + 4 * tok.w.len() + 4 * tok.v.len()
 }
 
 /// Serializes a token into `out` (cleared first).
@@ -41,7 +60,7 @@ pub fn encode_token(tok: &Token, out: &mut Vec<u8>) {
 
 /// Deserializes a token.
 pub fn decode_token(buf: &[u8]) -> Result<Token> {
-    const HDR: usize = 21;
+    const HDR: usize = WIRE_HDR;
     if buf.len() < HDR {
         bail!("token frame too short: {} bytes", buf.len());
     }
@@ -84,6 +103,89 @@ pub fn decode_token(buf: &[u8]) -> Result<Token> {
     })
 }
 
+/// Wire size of a lane-padded in-memory token (`v` is `ncols x
+/// padded_k(k)`): the K-strided frame it serializes to, identical to
+/// [`token_wire_size`] of the unpadded twin.
+pub fn padded_token_wire_size(tok: &Token, k: usize) -> usize {
+    let kp = padded_k(k);
+    let stripped = if kp == 0 { 0 } else { (tok.v.len() / kp) * k };
+    WIRE_HDR + 4 * tok.w.len() + 4 * stripped
+}
+
+/// Serializes a lane-padded in-memory token (factor payload `ncols x
+/// padded_k(k)`, zero padding) into the **K-strided** wire form: each
+/// factor row is stripped to its `k` real entries, so the frame is
+/// byte-identical to [`encode_token`] applied to the unpadded twin — the
+/// wire format does not change with the in-memory layout.
+pub fn encode_token_padded(tok: &Token, k: usize, out: &mut Vec<u8>) {
+    let kp = padded_k(k);
+    debug_assert_eq!(
+        tok.v.len(),
+        tok.ncols() * kp,
+        "token payload is not {kp}-padded"
+    );
+    if kp == k || tok.v.is_empty() {
+        // Already K-strided (k a lane multiple) or no factor payload
+        // (bias token): the plain encoder is exact.
+        encode_token(tok, out);
+        return;
+    }
+    let ncols = tok.ncols();
+    out.clear();
+    out.reserve(padded_token_wire_size(tok, k));
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&tok.j.to_le_bytes());
+    out.extend_from_slice(&tok.iter.to_le_bytes());
+    out.push(match tok.phase {
+        Phase::Update => 0,
+        Phase::Recompute => 1,
+    });
+    out.extend_from_slice(&tok.visits.to_le_bytes());
+    out.extend_from_slice(&(tok.w.len() as u32).to_le_bytes());
+    out.extend_from_slice(&((ncols * k) as u32).to_le_bytes());
+    for &x in tok.w.iter() {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for bi in 0..ncols {
+        for &x in &tok.vrow(bi, kp)[..k] {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Deserializes a K-strided wire frame into the engine's lane-padded
+/// in-memory layout: `k` is recovered from the frame (`nv / nw`), and the
+/// factor rows are re-dealt into `ncols x padded_k(k)` with zero padding.
+/// Inverse of [`encode_token_padded`] (lossless round-trip, padding
+/// included).
+///
+/// Deliberately composed over [`decode_token`] — the payload is copied a
+/// second time into the padded buffer, but the frame validation lives in
+/// exactly one place; the TCP receive path this serves is dominated by
+/// socket I/O, not the extra `ncols x k` copy.
+pub fn decode_token_padded(buf: &[u8]) -> Result<Token> {
+    let tok = decode_token(buf)?;
+    if tok.v.is_empty() {
+        return Ok(tok);
+    }
+    let ncols = tok.w.len();
+    ensure!(
+        ncols > 0 && tok.v.len() % ncols == 0,
+        "cannot infer factor width: nv={} nw={ncols}",
+        tok.v.len()
+    );
+    let k = tok.v.len() / ncols;
+    let kp = padded_k(k);
+    if kp == k {
+        return Ok(tok);
+    }
+    let mut v = vec![0f32; ncols * kp].into_boxed_slice();
+    for bi in 0..ncols {
+        v[bi * kp..bi * kp + k].copy_from_slice(&tok.v[bi * k..(bi + 1) * k]);
+    }
+    Ok(Token { v, ..tok })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,6 +225,63 @@ mod tests {
         encode_token(&tok, &mut buf2);
         buf2[10] = 9; // bad phase
         assert!(decode_token(&buf2).is_err());
+    }
+
+    #[test]
+    fn padded_encode_is_byte_identical_to_stripped_plain_encode() {
+        for k in [1usize, 3, 7, 8, 9, 16] {
+            let kp = padded_k(k);
+            let ncols = 3;
+            let mut v_pad = vec![0f32; ncols * kp];
+            let mut v_flat = vec![0f32; ncols * k];
+            for bi in 0..ncols {
+                for kk in 0..k {
+                    let x = (bi * 31 + kk) as f32 * 0.25 - 1.0;
+                    v_pad[bi * kp + kk] = x;
+                    v_flat[bi * k + kk] = x;
+                }
+            }
+            let padded = Token {
+                j: 7,
+                iter: 2,
+                phase: Phase::Update,
+                visits: 1,
+                w: Box::from([0.5f32, -1.0, 2.0]),
+                v: v_pad.into_boxed_slice(),
+            };
+            let stripped = Token {
+                v: v_flat.into_boxed_slice(),
+                ..padded.clone()
+            };
+            let mut a = Vec::new();
+            encode_token_padded(&padded, k, &mut a);
+            let mut b = Vec::new();
+            encode_token(&stripped, &mut b);
+            assert_eq!(a, b, "k={k}: wire bytes changed");
+            assert_eq!(a.len(), padded_token_wire_size(&padded, k), "k={k}");
+            assert_eq!(a.len(), token_wire_size(&stripped), "k={k}");
+            // Lossless both ways.
+            assert_eq!(decode_token_padded(&a).unwrap(), padded, "k={k}");
+            assert_eq!(decode_token(&a).unwrap(), stripped, "k={k}");
+        }
+    }
+
+    #[test]
+    fn padded_codec_passes_bias_tokens_through() {
+        let bias = Token {
+            j: crate::nomad::token::BIAS,
+            iter: 5,
+            phase: Phase::Recompute,
+            visits: 2,
+            w: Box::from([0.75f32]),
+            v: Box::from([]),
+        };
+        let mut a = Vec::new();
+        encode_token_padded(&bias, 7, &mut a);
+        let mut b = Vec::new();
+        encode_token(&bias, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(decode_token_padded(&a).unwrap(), bias);
     }
 
     #[test]

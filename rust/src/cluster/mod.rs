@@ -159,6 +159,10 @@ struct SimState {
 pub struct SimNetTransport {
     inner: LocalTransport,
     model: NetModel,
+    /// `Some(k)` when the engine circulates lane-padded token payloads:
+    /// byte accounting then uses the K-strided wire size (the padding
+    /// never crosses the wire). `None` = payloads are already K-strided.
+    wire_k: Option<usize>,
     state: Arc<(Mutex<SimState>, Condvar)>,
     pump: Mutex<Option<std::thread::JoinHandle<()>>>,
     messages: AtomicU64,
@@ -168,7 +172,10 @@ pub struct SimNetTransport {
 
 impl SimNetTransport {
     /// Builds the transport and starts its delivery pump thread.
-    pub fn new(p: usize, model: NetModel) -> Arc<Self> {
+    /// `wire_k` declares the circulating tokens' payload layout:
+    /// `Some(k)` for the engine's lane-padded payloads (wire bytes are
+    /// accounted in the K-strided form), `None` for K-strided payloads.
+    pub fn new(p: usize, model: NetModel, wire_k: Option<usize>) -> Arc<Self> {
         let now = Instant::now();
         let state = Arc::new((
             Mutex::new(SimState {
@@ -182,6 +189,7 @@ impl SimNetTransport {
         let t = Arc::new(SimNetTransport {
             inner: LocalTransport::new(p),
             model,
+            wire_k,
             state,
             pump: Mutex::new(None),
             messages: AtomicU64::new(0),
@@ -238,7 +246,10 @@ impl Transport for SimNetTransport {
             self.inner.send(dst, tok);
             return;
         }
-        let size = codec::token_wire_size(&tok);
+        let size = match self.wire_k {
+            Some(k) => codec::padded_token_wire_size(&tok, k),
+            None => codec::token_wire_size(&tok),
+        };
         self.bytes.fetch_add(size as u64, Ordering::Relaxed);
         let (lock, cvar) = &*self.state;
         let mut st = lock.lock().unwrap();
@@ -322,7 +333,7 @@ mod tests {
             bandwidth_bps: 1e9,
             workers_per_machine: 1,
         };
-        let t = SimNetTransport::new(2, model);
+        let t = SimNetTransport::new(2, model, None);
         let start = Instant::now();
         t.send(1, tok(7));
         let got = t.recv_timeout(1, Duration::from_secs(2)).expect("delivery");
@@ -340,7 +351,7 @@ mod tests {
             bandwidth_bps: 1e9,
             workers_per_machine: 2,          // workers 0,1 share a machine
         };
-        let t = SimNetTransport::new(2, model);
+        let t = SimNetTransport::new(2, model, None);
         t.send(1, tok(3)); // src 0 -> dst 1: same machine
         let got = t.recv_timeout(1, Duration::from_millis(100)).expect("fast path");
         assert_eq!(got.j, 3);
@@ -356,7 +367,7 @@ mod tests {
             bandwidth_bps: 1e6,
             workers_per_machine: 1,
         };
-        let t = SimNetTransport::new(3, model);
+        let t = SimNetTransport::new(3, model, None);
         t.send(1, tok(1));
         t.send(1, tok(2));
         assert_eq!(t.recv_timeout(1, Duration::from_secs(2)).unwrap().j, 1);
@@ -366,8 +377,42 @@ mod tests {
 
     #[test]
     fn shutdown_is_idempotent() {
-        let t = SimNetTransport::new(1, NetModel::default());
+        let t = SimNetTransport::new(1, NetModel::default(), None);
         t.shutdown();
+        t.shutdown();
+    }
+
+    #[test]
+    fn simnet_accounts_stripped_bytes_for_padded_payloads() {
+        // k = 3 pads to 8 lanes in memory; the modeled wire must charge
+        // for the 3 real entries only (Fig. 6 byte counts are unchanged
+        // by the in-memory layout).
+        let k = 3usize;
+        let kp = crate::kernel::padded_k(k);
+        let mut v = vec![0f32; kp];
+        v[..k].copy_from_slice(&[0.1, 0.2, 0.3]);
+        let padded = Token {
+            j: 0,
+            iter: 0,
+            phase: Phase::Update,
+            visits: 0,
+            w: Box::from([1.0f32]),
+            v: v.into_boxed_slice(),
+        };
+        let model = NetModel {
+            latency: Duration::from_micros(1),
+            bandwidth_bps: 1e9,
+            workers_per_machine: 1,
+        };
+        let t = SimNetTransport::new(2, model, Some(k));
+        t.send(1, padded.clone());
+        let got = t.recv_timeout(1, Duration::from_secs(2)).expect("delivery");
+        assert_eq!(got, padded, "local delivery must preserve the payload");
+        assert_eq!(
+            t.stats().bytes,
+            codec::padded_token_wire_size(&padded, k) as u64
+        );
+        assert!(t.stats().bytes < codec::token_wire_size(&padded) as u64);
         t.shutdown();
     }
 }

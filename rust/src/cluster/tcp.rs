@@ -26,6 +26,11 @@ pub struct TcpTransport {
     inbox: LocalTransport,
     addrs: Vec<SocketAddr>,
     conns: Vec<Mutex<Option<TcpStream>>>,
+    /// `Some(k)` when the engine circulates lane-padded token payloads:
+    /// frames are stripped to the K-strided wire form on send and
+    /// re-padded on receive, so the bytes on the socket are identical to
+    /// the unpadded era. `None` = payloads are already K-strided.
+    wire_k: Option<usize>,
     bytes: AtomicU64,
     messages: AtomicU64,
     down: Arc<AtomicBool>,
@@ -34,8 +39,9 @@ pub struct TcpTransport {
 
 impl TcpTransport {
     /// Binds `p` listeners on ephemeral loopback ports and starts acceptor
-    /// threads that feed each worker's inbox.
-    pub fn new(p: usize) -> Result<Arc<Self>> {
+    /// threads that feed each worker's inbox. `wire_k` declares the
+    /// circulating tokens' payload layout (see the field docs).
+    pub fn new(p: usize, wire_k: Option<usize>) -> Result<Arc<Self>> {
         let mut listeners = Vec::with_capacity(p);
         let mut addrs = Vec::with_capacity(p);
         for _ in 0..p {
@@ -47,6 +53,7 @@ impl TcpTransport {
             inbox: LocalTransport::new(p),
             addrs,
             conns: (0..p).map(|_| Mutex::new(None)).collect(),
+            wire_k,
             bytes: AtomicU64::new(0),
             messages: AtomicU64::new(0),
             down: Arc::new(AtomicBool::new(false)),
@@ -108,7 +115,12 @@ impl TcpTransport {
             if read_fully(&mut stream, &mut frame, &down).is_err() {
                 return;
             }
-            match codec::decode_token(&frame) {
+            let decoded = if self.wire_k.is_some() {
+                codec::decode_token_padded(&frame)
+            } else {
+                codec::decode_token(&frame)
+            };
+            match decoded {
                 Ok(tok) => self.inbox.send(worker, tok),
                 Err(_) => return,
             }
@@ -147,7 +159,10 @@ fn read_fully(stream: &mut TcpStream, buf: &mut [u8], down: &AtomicBool) -> std:
 impl Transport for TcpTransport {
     fn send(&self, dst: usize, tok: Token) {
         let mut frame = Vec::new();
-        codec::encode_token(&tok, &mut frame);
+        match self.wire_k {
+            Some(k) => codec::encode_token_padded(&tok, k, &mut frame),
+            None => codec::encode_token(&tok, &mut frame),
+        }
         let mut msg = Vec::with_capacity(frame.len() + 4);
         msg.extend_from_slice(&(frame.len() as u32).to_le_bytes());
         msg.extend_from_slice(&frame);
@@ -215,7 +230,7 @@ mod tests {
 
     #[test]
     fn tcp_roundtrip_between_workers() {
-        let t = TcpTransport::new(2).unwrap();
+        let t = TcpTransport::new(2, None).unwrap();
         t.send(1, tok(42, 4));
         let got = t
             .recv_timeout(1, Duration::from_secs(5))
@@ -228,7 +243,7 @@ mod tests {
 
     #[test]
     fn tcp_many_messages_in_order() {
-        let t = TcpTransport::new(3).unwrap();
+        let t = TcpTransport::new(3, None).unwrap();
         for j in 0..100 {
             t.send(2, tok(j, 8));
         }
@@ -236,6 +251,41 @@ mod tests {
             let got = t.recv_timeout(2, Duration::from_secs(5)).expect("msg");
             assert_eq!(got.j, j);
         }
+        t.shutdown();
+    }
+
+    #[test]
+    fn tcp_padded_layout_survives_the_k_strided_wire() {
+        let k = 5usize;
+        let kp = crate::kernel::padded_k(k);
+        let ncols = 2usize;
+        let mut v = vec![0f32; ncols * kp];
+        for bi in 0..ncols {
+            for kk in 0..k {
+                v[bi * kp + kk] = (bi * 10 + kk) as f32 + 0.5;
+            }
+        }
+        let padded = Token {
+            j: 3,
+            iter: 1,
+            phase: Phase::Update,
+            visits: 0,
+            w: Box::from([0.5f32, -1.0]),
+            v: v.into_boxed_slice(),
+        };
+        let t = TcpTransport::new(2, Some(k)).unwrap();
+        t.send(1, padded.clone());
+        let got = t
+            .recv_timeout(1, Duration::from_secs(5))
+            .expect("tcp delivery");
+        // Lossless round-trip including the zero padding lanes.
+        assert_eq!(got, padded);
+        // The socket carried the K-strided frame (+ 4-byte length prefix),
+        // not the padded in-memory payload.
+        assert_eq!(
+            t.stats().bytes,
+            (codec::padded_token_wire_size(&padded, k) + 4) as u64
+        );
         t.shutdown();
     }
 }

@@ -110,10 +110,33 @@ impl Csr {
 
     /// Selects rows by index (with repetition allowed), preserving order.
     pub fn select_rows(&self, idx: &[usize]) -> Csr {
-        let mut indptr = Vec::with_capacity(idx.len() + 1);
         let nnz: usize = idx.iter().map(|&i| self.row_nnz(i)).sum();
+        let mut indptr = Vec::with_capacity(idx.len() + 1);
         let mut indices = Vec::with_capacity(nnz);
         let mut values = Vec::with_capacity(nnz);
+        self.gather_rows_into(idx, &mut indptr, &mut indices, &mut values);
+        Csr::new(idx.len(), self.n_cols, indptr, indices, values)
+    }
+
+    /// Gathers the given rows' CSR arrays into caller-owned staging
+    /// buffers (cleared first; capacity is reused across calls, so a loop
+    /// that gathers fixed-size row blocks allocates only on its first
+    /// iteration). Row `b` of the gather is
+    /// `indices[indptr[b]..indptr[b+1]]` / `values[..]`. This is the
+    /// allocation-free core of [`Csr::select_rows`] and the staging path
+    /// the libFM epoch loop uses to densify each shuffled row block into
+    /// contiguous memory before updating (ROADMAP perf trajectory).
+    pub fn gather_rows_into(
+        &self,
+        idx: &[usize],
+        indptr: &mut Vec<usize>,
+        indices: &mut Vec<u32>,
+        values: &mut Vec<f32>,
+    ) {
+        indptr.clear();
+        indices.clear();
+        values.clear();
+        indptr.reserve(idx.len() + 1);
         indptr.push(0);
         for &i in idx {
             let (ci, cv) = self.row(i);
@@ -121,7 +144,6 @@ impl Csr {
             values.extend_from_slice(cv);
             indptr.push(indices.len());
         }
-        Csr::new(idx.len(), self.n_cols, indptr, indices, values)
     }
 
     /// A contiguous row-range slice.
@@ -337,6 +359,26 @@ mod tests {
         let sel = m.select_rows(&[2, 0]);
         assert_eq!(sel.row(0), m.row(2));
         assert_eq!(sel.row(1), m.row(0));
+    }
+
+    #[test]
+    fn gather_rows_matches_select_and_reuses_buffers() {
+        let m = example();
+        let mut indptr = Vec::new();
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for pick in [vec![2usize, 0], vec![1], vec![0, 1, 2, 1]] {
+            m.gather_rows_into(&pick, &mut indptr, &mut indices, &mut values);
+            let sel = m.select_rows(&pick);
+            assert_eq!(indptr.len(), pick.len() + 1);
+            for (b, &i) in pick.iter().enumerate() {
+                let (a, e) = (indptr[b], indptr[b + 1]);
+                assert_eq!((&indices[a..e], &values[a..e]), m.row(i), "row {i}");
+                assert_eq!((&indices[a..e], &values[a..e]), sel.row(b));
+            }
+        }
+        // Buffers were cleared between gathers: last pick has 4 rows.
+        assert_eq!(indptr.len(), 5);
     }
 
     #[test]

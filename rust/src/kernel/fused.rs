@@ -137,6 +137,15 @@ impl FmKernel {
         &mut self.v[j * self.kp..j * self.kp + self.k]
     }
 
+    /// The lane-padded factor rows `[lo, hi)` as one contiguous
+    /// `(hi - lo) x padded_k(k)` slice, padding lanes (invariantly zero)
+    /// included. This read-only view is what the NOMAD engine deals its
+    /// lane-blocked token payloads from.
+    #[inline]
+    pub fn vrows_padded(&self, lo: usize, hi: usize) -> &[f32] {
+        &self.v[lo * self.kp..hi * self.kp]
+    }
+
     /// The fused accumulation pass: linear term plus lane-blocked factor
     /// sums `a` and squared sums `s2`, one sweep over the non-zeros.
     /// Returns the linear term `w0 + sum_j w_j x_j`.

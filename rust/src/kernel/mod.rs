@@ -16,16 +16,29 @@
 //! * **Zero allocation** ([`Scratch`]) — every kernel call borrows a
 //!   per-thread arena; nothing on the steady-state path touches the heap.
 //!
+//! Alongside the per-example (row-major) kernels, [`visit`] holds the
+//! **column-visit kernels** the NOMAD engine drives: the eq. 12-13
+//! update-phase step, the Algorithm 1 recompute fold and the per-row
+//! finalize reduction, all over the same `kp = padded_k(k)`-strided
+//! lane-blocked buffers (token payloads, worker `aa`/`acc_a`/`acc_s2`
+//! arenas) with the identical zero-padding invariant.
+//!
 //! The scalar implementations (`FmModel::score_sparse`,
-//! `optim::sgd_update_example`) remain in-tree as the semantic reference
+//! `optim::sgd_update_example`, and the K-strided column loops in
+//! [`visit::scalar`]) remain in-tree as the semantic reference
 //! and the benchmark baseline; `FmModel::score_naive` (paper eq. 2, the
 //! O(K nnz^2) double sum) is the independent oracle the property suite in
 //! `rust/tests/kernel_properties.rs` checks both against. The measured
 //! fused-vs-scalar gap lands in `BENCH_hotpath.json` (see EXPERIMENTS.md
 //! §Perf) via `cargo bench --bench hotpath_micro`.
 
+// Hot-path module: lint-clean regardless of the workflow-level gate (CI
+// additionally runs a clippy pass scoped to kernel + nomad).
+#![deny(clippy::all)]
+
 mod fused;
 mod scratch;
+pub mod visit;
 
 pub use fused::{padded_k, AdaGradLanes, FmKernel, LANES};
 pub use scratch::Scratch;

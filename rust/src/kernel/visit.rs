@@ -1,0 +1,485 @@
+//! Column-visit kernels — the DS-FACTO engine's per-visit hot path,
+//! lane-blocked.
+//!
+//! Where the fused kernels in [`super::fused`] cover the *row-major*
+//! per-example work every single-machine trainer executes, these cover
+//! the *column-major* unit of the decentralized engine (paper Algorithm
+//! 1): one circulating parameter column applied to, or folded over, a
+//! worker's local CSC column. Four entry points mirror the engine's four
+//! inner loops:
+//!
+//! * [`col_update`] — the eq. 12/13 mean-gradient step of one update-phase
+//!   visit (Algorithm 1 lines 12-17, 1/N-normalized with the L2 term split
+//!   across the P visits);
+//! * [`col_update_stochastic`] — the paper-literal line 14 variant:
+//!   sampled per-example eq. 12/13 updates with frozen multipliers;
+//! * [`col_recompute`] — one recompute-phase visit (lines 18-21): fold the
+//!   column into the partial sums for G and A;
+//! * [`finalize_rows`] — end of a recompute pass: the pairwise-term
+//!   reduction, loss and fresh loss multiplier G for every local row.
+//!
+//! All four operate on `kp = padded_k(k)`-strided buffers sharing the
+//! [`FmKernel`](super::FmKernel) zero-padding invariant: entries past `k`
+//! in every row of `aa` / `acc_a` / `acc_s2` and in every `v_j` are
+//! identically zero, their gradients and factor sums vanish, and the inner
+//! loops run over fixed-width [`LANES`]-wide blocks with no remainder or
+//! masking. [`col_update`] draws its gradient buffer from the caller's
+//! [`Scratch`] arena, so no visit allocates at any K.
+//!
+//! Every kernel applies its floating-point operations in the exact
+//! per-coordinate order of the scalar loops it replaced — padding lanes
+//! only ever contribute exact `+0.0` terms — so a lane-blocked engine run
+//! is **bitwise identical** to a scalar one (asserted end-to-end by
+//! `rust/tests/engine_properties.rs`). The pre-lane-blocking scalar loops
+//! live on, K-strided, in [`scalar`]: the oracle for the parity suite in
+//! `rust/tests/kernel_properties.rs` and the baseline side of the
+//! `engine_visit_*` entries in `BENCH_hotpath.json`.
+
+use crate::data::Task;
+use crate::fm::loss;
+use crate::util::rng::Pcg64;
+
+use super::fused::LANES;
+use super::scratch::Scratch;
+
+/// Hyper-parameters of one mean-gradient update-phase column visit.
+#[derive(Debug, Clone, Copy)]
+pub struct VisitHyper {
+    /// Step size for this outer iteration.
+    pub eta: f32,
+    /// `1/N` normalization of the mean-gradient fold (N = total examples).
+    pub inv_n: f32,
+    /// L2 penalty on the linear weight.
+    pub lambda_w: f32,
+    /// L2 penalty on the factor row.
+    pub lambda_v: f32,
+    /// The L2 term's share per visit (`1/P`): the penalty is split across
+    /// the P visits of an outer iteration.
+    pub reg_split: f32,
+}
+
+/// One update-phase visit of a parameter column (paper eqs. 12-13 as the
+/// engine's incremental mean-gradient step): accumulate the local partial
+/// gradient over the CSC column `(rows, xs)` against the frozen
+/// multipliers `g` and the lane-blocked factor-sum cache `aa`
+/// (`nloc x kp` row-major), then step `w_j` and the `kp`-strided factor
+/// row `v_j`. The gradient buffer comes from `scratch`, so the visit
+/// allocates nothing. Padding lanes of `v_j` stay exactly zero.
+#[allow(clippy::too_many_arguments)]
+pub fn col_update(
+    rows: &[u32],
+    xs: &[f32],
+    g: &[f32],
+    aa: &[f32],
+    kp: usize,
+    wj: &mut f32,
+    vj: &mut [f32],
+    h: VisitHyper,
+    scratch: &mut Scratch,
+) {
+    debug_assert_eq!(vj.len(), kp);
+    debug_assert_eq!(kp % LANES, 0);
+    scratch.ensure(kp);
+    let gv = &mut scratch.gv[..kp];
+    gv.fill(0.0);
+    let mut gw = 0f32;
+    for (r, x) in rows.iter().zip(xs) {
+        let r = *r as usize;
+        let gi = g[r];
+        let x = *x;
+        gw += gi * x;
+        let x2 = x * x;
+        let ai = &aa[r * kp..(r + 1) * kp];
+        for ((gb, ab), vb) in gv
+            .chunks_exact_mut(LANES)
+            .zip(ai.chunks_exact(LANES))
+            .zip(vj.chunks_exact(LANES))
+        {
+            for l in 0..LANES {
+                gb[l] += gi * (x * ab[l] - vb[l] * x2);
+            }
+        }
+    }
+    *wj -= h.eta * (gw * h.inv_n + h.lambda_w * h.reg_split * *wj);
+    for (vb, gb) in vj.chunks_exact_mut(LANES).zip(gv.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            let vl = vb[l];
+            vb[l] = vl - h.eta * (gb[l] * h.inv_n + h.lambda_v * h.reg_split * vl);
+        }
+    }
+}
+
+/// One paper-literal stochastic update visit (Algorithm 1 line 14):
+/// sample `samples` local examples from the column and apply the
+/// per-example eq. 12/13 updates with the frozen multipliers. Returns the
+/// number of coordinate updates applied (0 for an empty column, which
+/// draws nothing from `rng`).
+#[allow(clippy::too_many_arguments)]
+pub fn col_update_stochastic(
+    rows: &[u32],
+    xs: &[f32],
+    g: &[f32],
+    aa: &[f32],
+    kp: usize,
+    wj: &mut f32,
+    vj: &mut [f32],
+    eta: f32,
+    lambda_w: f32,
+    lambda_v: f32,
+    samples: usize,
+    rng: &mut Pcg64,
+) -> u64 {
+    debug_assert_eq!(vj.len(), kp);
+    if rows.is_empty() {
+        return 0;
+    }
+    for _ in 0..samples {
+        let t = rng.below_usize(rows.len());
+        let r = rows[t] as usize;
+        let x = xs[t];
+        let gi = g[r];
+        // eq. 12
+        *wj -= eta * (gi * x + lambda_w * *wj);
+        // eq. 13 with the cached a_ik, lane-blocked.
+        let x2 = x * x;
+        let ai = &aa[r * kp..(r + 1) * kp];
+        for (vb, ab) in vj.chunks_exact_mut(LANES).zip(ai.chunks_exact(LANES)) {
+            for l in 0..LANES {
+                let vl = vb[l];
+                vb[l] = vl - eta * (gi * (x * ab[l] - vl * x2) + lambda_v * vl);
+            }
+        }
+    }
+    samples as u64
+}
+
+/// One recompute-phase visit (Algorithm 1 lines 18-21): fold the column's
+/// fresh `(w_j, v_j)` into the lane-blocked partial sums `acc_a` /
+/// `acc_s2` (`nloc x kp` row-major) and the linear partial sums `acc_xw`.
+#[allow(clippy::too_many_arguments)]
+pub fn col_recompute(
+    rows: &[u32],
+    xs: &[f32],
+    wj: f32,
+    vj: &[f32],
+    kp: usize,
+    acc_xw: &mut [f32],
+    acc_a: &mut [f32],
+    acc_s2: &mut [f32],
+) {
+    debug_assert_eq!(vj.len(), kp);
+    for (r, x) in rows.iter().zip(xs) {
+        let r = *r as usize;
+        let x = *x;
+        acc_xw[r] += wj * x;
+        let ar = &mut acc_a[r * kp..(r + 1) * kp];
+        let sr = &mut acc_s2[r * kp..(r + 1) * kp];
+        for ((ab, sb), vb) in ar
+            .chunks_exact_mut(LANES)
+            .zip(sr.chunks_exact_mut(LANES))
+            .zip(vj.chunks_exact(LANES))
+        {
+            for l in 0..LANES {
+                let vx = vb[l] * x;
+                ab[l] += vx;
+                sb[l] += vx * vx;
+            }
+        }
+    }
+}
+
+/// End of a recompute pass: for every local row, reduce the lane-blocked
+/// partial sums into the pairwise term (padding contributes exactly
+/// `+0.0`), score `f = w0 + <x, w> + 0.5 * sum_k (a_k^2 - s2_k)`, refresh
+/// the loss multiplier into `g` and return the summed loss. `g.len()`
+/// determines the row count.
+#[allow(clippy::too_many_arguments)]
+pub fn finalize_rows(
+    w0: f32,
+    acc_xw: &[f32],
+    acc_a: &[f32],
+    acc_s2: &[f32],
+    kp: usize,
+    labels: &[f32],
+    task: Task,
+    g: &mut [f32],
+) -> f64 {
+    let nloc = g.len();
+    debug_assert_eq!(labels.len(), nloc);
+    debug_assert_eq!(acc_xw.len(), nloc);
+    let mut loss_sum = 0f64;
+    for r in 0..nloc {
+        let ar = &acc_a[r * kp..(r + 1) * kp];
+        let sr = &acc_s2[r * kp..(r + 1) * kp];
+        let mut pair = 0f32;
+        for (ab, sb) in ar.chunks_exact(LANES).zip(sr.chunks_exact(LANES)) {
+            for l in 0..LANES {
+                pair += ab[l] * ab[l] - sb[l];
+            }
+        }
+        let f = w0 + acc_xw[r] + 0.5 * pair;
+        g[r] = loss::multiplier(f, labels[r], task);
+        loss_sum += loss::loss(f, labels[r], task) as f64;
+    }
+    loss_sum
+}
+
+/// Scalar K-strided reference implementations of the column-visit kernels
+/// — byte-for-byte the loops `nomad::engine` ran before lane-blocking.
+/// They stay in-tree as the oracle the parity suite
+/// (`rust/tests/kernel_properties.rs`) holds the lane-blocked kernels to,
+/// and as the baseline side of the `engine_visit_*` benchmark pairs in
+/// `BENCH_hotpath.json`. Buffers here are unpadded: `aa`/`acc_a`/`acc_s2`
+/// are `nloc x k` and `v_j` has length `k`.
+pub mod scalar {
+    use super::{loss, Pcg64, Task, VisitHyper};
+
+    /// Scalar reference of [`super::col_update`] (`gv` is the caller's
+    /// K-length gradient buffer).
+    #[allow(clippy::too_many_arguments)]
+    pub fn col_update(
+        rows: &[u32],
+        xs: &[f32],
+        g: &[f32],
+        aa: &[f32],
+        k: usize,
+        wj: &mut f32,
+        vj: &mut [f32],
+        h: VisitHyper,
+        gv: &mut [f32],
+    ) {
+        debug_assert_eq!(vj.len(), k);
+        let gv = &mut gv[..k];
+        gv.fill(0.0);
+        let mut gw = 0f32;
+        for (r, x) in rows.iter().zip(xs) {
+            let r = *r as usize;
+            let gi = g[r];
+            let x = *x;
+            gw += gi * x;
+            let x2 = x * x;
+            let ai = &aa[r * k..(r + 1) * k];
+            for kk in 0..k {
+                gv[kk] += gi * (x * ai[kk] - vj[kk] * x2);
+            }
+        }
+        *wj -= h.eta * (gw * h.inv_n + h.lambda_w * h.reg_split * *wj);
+        for kk in 0..k {
+            vj[kk] -= h.eta * (gv[kk] * h.inv_n + h.lambda_v * h.reg_split * vj[kk]);
+        }
+    }
+
+    /// Scalar reference of [`super::col_update_stochastic`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn col_update_stochastic(
+        rows: &[u32],
+        xs: &[f32],
+        g: &[f32],
+        aa: &[f32],
+        k: usize,
+        wj: &mut f32,
+        vj: &mut [f32],
+        eta: f32,
+        lambda_w: f32,
+        lambda_v: f32,
+        samples: usize,
+        rng: &mut Pcg64,
+    ) -> u64 {
+        debug_assert_eq!(vj.len(), k);
+        if rows.is_empty() {
+            return 0;
+        }
+        for _ in 0..samples {
+            let t = rng.below_usize(rows.len());
+            let r = rows[t] as usize;
+            let x = xs[t];
+            let gi = g[r];
+            *wj -= eta * (gi * x + lambda_w * *wj);
+            let x2 = x * x;
+            let ai = &aa[r * k..(r + 1) * k];
+            for kk in 0..k {
+                let vjk = vj[kk];
+                vj[kk] = vjk - eta * (gi * (x * ai[kk] - vjk * x2) + lambda_v * vjk);
+            }
+        }
+        samples as u64
+    }
+
+    /// Scalar reference of [`super::col_recompute`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn col_recompute(
+        rows: &[u32],
+        xs: &[f32],
+        wj: f32,
+        vj: &[f32],
+        k: usize,
+        acc_xw: &mut [f32],
+        acc_a: &mut [f32],
+        acc_s2: &mut [f32],
+    ) {
+        debug_assert_eq!(vj.len(), k);
+        for (r, x) in rows.iter().zip(xs) {
+            let r = *r as usize;
+            let x = *x;
+            acc_xw[r] += wj * x;
+            let ar = &mut acc_a[r * k..(r + 1) * k];
+            let sr = &mut acc_s2[r * k..(r + 1) * k];
+            for kk in 0..k {
+                let vx = vj[kk] * x;
+                ar[kk] += vx;
+                sr[kk] += vx * vx;
+            }
+        }
+    }
+
+    /// Scalar reference of [`super::finalize_rows`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn finalize_rows(
+        w0: f32,
+        acc_xw: &[f32],
+        acc_a: &[f32],
+        acc_s2: &[f32],
+        k: usize,
+        labels: &[f32],
+        task: Task,
+        g: &mut [f32],
+    ) -> f64 {
+        let nloc = g.len();
+        debug_assert_eq!(labels.len(), nloc);
+        let mut loss_sum = 0f64;
+        for r in 0..nloc {
+            let mut pair = 0f32;
+            for kk in 0..k {
+                let a = acc_a[r * k + kk];
+                pair += a * a - acc_s2[r * k + kk];
+            }
+            let f = w0 + acc_xw[r] + 0.5 * pair;
+            g[r] = loss::multiplier(f, labels[r], task);
+            loss_sum += loss::loss(f, labels[r], task) as f64;
+        }
+        loss_sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fused::padded_k;
+    use super::*;
+    use crate::util::prop::pad_rows;
+
+    #[test]
+    fn update_matches_scalar_bitwise_small() {
+        let k = 3;
+        let kp = padded_k(k);
+        let rows = [0u32, 2];
+        let xs = [1.5f32, -0.5];
+        let g = [0.2f32, -0.1, 0.7];
+        let aa = [0.1f32, 0.2, 0.3, 0.0, -0.4, 0.5, 0.6, 0.7, -0.8];
+        let aa_p = pad_rows(&aa, 3, k, kp);
+        let h = VisitHyper {
+            eta: 0.3,
+            inv_n: 0.25,
+            lambda_w: 1e-3,
+            lambda_v: 1e-3,
+            reg_split: 0.5,
+        };
+        let mut w_s = 0.4f32;
+        let mut v_s = vec![0.3f32, -0.2, 0.1];
+        let mut gv = vec![0f32; k];
+        scalar::col_update(&rows, &xs, &g, &aa, k, &mut w_s, &mut v_s, h, &mut gv);
+
+        let mut w_l = 0.4f32;
+        let mut v_l = vec![0f32; kp];
+        v_l[..k].copy_from_slice(&[0.3, -0.2, 0.1]);
+        let mut scratch = Scratch::new();
+        col_update(&rows, &xs, &g, &aa_p, kp, &mut w_l, &mut v_l, h, &mut scratch);
+
+        assert_eq!(w_l.to_bits(), w_s.to_bits());
+        for kk in 0..k {
+            assert_eq!(v_l[kk].to_bits(), v_s[kk].to_bits(), "kk={kk}");
+        }
+        assert!(v_l[k..].iter().all(|&x| x == 0.0), "padding drifted");
+    }
+
+    #[test]
+    fn empty_column_is_regularizer_only() {
+        let k = 2;
+        let kp = padded_k(k);
+        let h = VisitHyper {
+            eta: 0.1,
+            inv_n: 1.0,
+            lambda_w: 0.5,
+            lambda_v: 0.5,
+            reg_split: 1.0,
+        };
+        let mut w = 1.0f32;
+        let mut v = vec![0f32; kp];
+        v[0] = 2.0;
+        let mut scratch = Scratch::new();
+        col_update(&[], &[], &[], &[], kp, &mut w, &mut v, h, &mut scratch);
+        assert_eq!(w, 1.0 - 0.1 * 0.5);
+        assert_eq!(v[0], 2.0 - 0.1 * 0.5 * 2.0);
+    }
+
+    #[test]
+    fn finalize_reduces_pairwise_term() {
+        let k = 2;
+        let kp = padded_k(k);
+        // One row: a = (1, 2), s2 = (0.5, 1), xw = 0.25, w0 = 0.1.
+        let mut acc_a = vec![0f32; kp];
+        acc_a[0] = 1.0;
+        acc_a[1] = 2.0;
+        let mut acc_s2 = vec![0f32; kp];
+        acc_s2[0] = 0.5;
+        acc_s2[1] = 1.0;
+        let acc_xw = [0.25f32];
+        let labels = [2.0f32];
+        let mut g = [0f32];
+        let loss_sum = finalize_rows(
+            0.1,
+            &acc_xw,
+            &acc_a,
+            &acc_s2,
+            kp,
+            &labels,
+            Task::Regression,
+            &mut g,
+        );
+        let f = 0.1 + 0.25 + 0.5 * ((1.0 - 0.5) + (4.0 - 1.0));
+        assert!((g[0] - loss::multiplier(f, 2.0, Task::Regression)).abs() < 1e-7);
+        assert!((loss_sum - loss::loss(f, 2.0, Task::Regression) as f64).abs() < 1e-7);
+    }
+
+    #[test]
+    fn stochastic_matches_scalar_bitwise() {
+        let k = 5;
+        let kp = padded_k(k);
+        let rows = [0u32, 1, 2, 3];
+        let xs = [1.0f32, -2.0, 0.5, 0.25];
+        let g = [0.3f32, -0.2, 0.9, 0.0];
+        let aa: Vec<f32> = (0..4 * k).map(|i| (i as f32) * 0.1 - 1.0).collect();
+        let aa_p = pad_rows(&aa, 4, k, kp);
+
+        let init_v: Vec<f32> = (0..k).map(|i| 0.1 * i as f32).collect();
+        let mut w_s = -0.2f32;
+        let mut v_s = init_v.clone();
+        let mut rng_s = Pcg64::seeded(9);
+        let n_s = scalar::col_update_stochastic(
+            &rows, &xs, &g, &aa, k, &mut w_s, &mut v_s, 0.05, 1e-3, 1e-3, 3, &mut rng_s,
+        );
+
+        let mut w_l = -0.2f32;
+        let mut v_l = vec![0f32; kp];
+        v_l[..k].copy_from_slice(&init_v);
+        let mut rng_l = Pcg64::seeded(9);
+        let n_l = col_update_stochastic(
+            &rows, &xs, &g, &aa_p, kp, &mut w_l, &mut v_l, 0.05, 1e-3, 1e-3, 3, &mut rng_l,
+        );
+        assert_eq!(n_s, n_l);
+        assert_eq!(w_l.to_bits(), w_s.to_bits());
+        for kk in 0..k {
+            assert_eq!(v_l[kk].to_bits(), v_s[kk].to_bits(), "kk={kk}");
+        }
+        assert!(v_l[k..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -13,6 +13,19 @@
 //!    is collected exactly once at the end; no token is lost or duplicated.
 //! 4. **Exact finalization** — the returned model is assembled from the
 //!    tokens themselves (not the eventually-consistent mirror).
+//!
+//! ## Memory layout (lane-blocked hot path)
+//!
+//! Every per-visit inner loop runs through the column-visit kernels in
+//! [`crate::kernel::visit`] over `kp = padded_k(k)`-strided buffers:
+//! token factor payloads are dealt lane-padded from the init
+//! [`FmKernel`], and the worker arenas `aa` / `acc_a` / `acc_s2` are
+//! `nloc x kp` with invariantly-zero padding lanes. Padding is stripped
+//! only at the edges — the wire codec (the TCP/simnet byte format is the
+//! K-strided one, unchanged), the mirror publish, and the final model
+//! assembly. The kernels apply identical per-coordinate operation order
+//! to the scalar loops they replaced, so results are bitwise unchanged
+//! (`rust/tests/engine_properties.rs` asserts this end to end).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
@@ -28,7 +41,7 @@ use super::NomadConfig;
 use crate::cluster::Transport;
 use crate::data::{Csc, Dataset, Task};
 use crate::fm::{loss, FmHyper, FmModel};
-use crate::kernel::{FmKernel, Scratch};
+use crate::kernel::{padded_k, visit, FmKernel, Scratch};
 use crate::metrics::{evaluate, TracePoint, TrainOutput};
 use crate::optim::LrSchedule;
 use crate::train::TrainObserver;
@@ -119,6 +132,9 @@ struct Worker<'a> {
     n_total: usize,
     t_max: u32,
     k: usize,
+    /// Padded factor stride (`padded_k(k)`): the row stride of `aa`,
+    /// `acc_a`, `acc_s2` and of every token's factor payload.
+    kp: usize,
     /// Columns per token (block size C).
     block_cols: usize,
     /// Model width D.
@@ -131,10 +147,12 @@ struct Worker<'a> {
     labels: &'a [f32],
     cols: Csc,
     nloc: usize,
-    /// Auxiliary variables (paper's G and A) for the local rows.
+    /// Auxiliary variables (paper's G and A) for the local rows; `aa` is
+    /// `nloc x kp` lane-blocked (padding lanes zero).
     g: Vec<f32>,
     aa: Vec<f32>,
-    /// Recompute-phase partial-sum accumulators.
+    /// Recompute-phase partial-sum accumulators (`acc_a`/`acc_s2` are
+    /// `nloc x kp` lane-blocked).
     acc_xw: Vec<f32>,
     acc_a: Vec<f32>,
     acc_s2: Vec<f32>,
@@ -226,10 +244,11 @@ impl<'a> Worker<'a> {
             // Invariant 2: ahead by exactly one phase.
             debug_assert!(ts == cur + 1, "token seq {ts} vs worker {cur}");
             self.holdback.push(tok);
-            let peak = self.holdback.len();
-            if peak > self.shared.holdback_peak.load(Ordering::Relaxed) {
-                self.shared.holdback_peak.store(peak, Ordering::Relaxed);
-            }
+            // fetch_max: a load-then-store here would let concurrent
+            // workers overwrite a larger peak with a smaller one.
+            self.shared
+                .holdback_peak
+                .fetch_max(self.holdback.len(), Ordering::Relaxed);
             return;
         }
         debug_assert!(ts == cur, "token behind worker: {ts} < {cur}");
@@ -247,15 +266,17 @@ impl<'a> Worker<'a> {
                     self.shared.mirror.publish_bias(tok.w[0]);
                 } else {
                     let (lo, _hi) = self.block_range(tok.j);
-                    let k = self.k;
+                    let (k, kp) = (self.k, self.kp);
                     for (bi, &wj) in tok.w.iter().enumerate() {
-                        self.shared.mirror.publish_column(
-                            lo + bi,
-                            wj,
-                            &tok.v[bi * k..(bi + 1) * k],
-                        );
+                        // The mirror holds K-strided rows: publish the K
+                        // real lanes, stripping the padding at this edge.
+                        self.shared
+                            .mirror
+                            .publish_column(lo + bi, wj, &tok.vrow(bi, kp)[..k]);
                         self.reg_w += (wj as f64) * (wj as f64);
                     }
+                    // Padding lanes are identically zero, so summing the
+                    // padded payload is the exact ||v_j||^2 sum.
                     self.reg_v += tok.v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
                 }
             }
@@ -295,36 +316,31 @@ impl<'a> Worker<'a> {
             return self.update_visit_stochastic(tok, eta, samples);
         }
         let (lo, hi) = self.block_range(tok.j);
-        let k = self.k;
-        let reg_split = 1.0 / self.p as f32;
+        let kp = self.kp;
+        let h = visit::VisitHyper {
+            eta,
+            inv_n,
+            lambda_w: self.lambda_w,
+            lambda_v: self.lambda_v,
+            reg_split: 1.0 / self.p as f32,
+        };
         for (bi, j) in (lo..hi).enumerate() {
             let (rows, xs) = self.cols.col(j);
             self.coords_applied += rows.len() as u64;
-            let vj = &mut tok.v[bi * k..(bi + 1) * k];
-            // Accumulate the local partial gradient (eqs. 7-8 restricted
-            // to this worker's rows), with v_j fixed at its entry value.
-            // The gradient buffer comes from the worker's scratch arena
-            // (sized at construction), so no visit allocates at any K.
-            let mut gw = 0f32;
-            let gv = &mut self.scratch.gv[..k];
-            gv.fill(0.0);
-            for (r, x) in rows.iter().zip(xs) {
-                let r = *r as usize;
-                let gi = self.g[r];
-                let x = *x;
-                gw += gi * x;
-                let x2 = x * x;
-                let ai = &self.aa[r * k..(r + 1) * k];
-                for kk in 0..k {
-                    gv[kk] += gi * (x * ai[kk] - vj[kk] * x2);
-                }
-            }
-            // eq. 12 / eq. 13, 1/N-normalized, L2 split across the P visits.
-            let wj = &mut tok.w[bi];
-            *wj -= eta * (gw * inv_n + self.lambda_w * reg_split * *wj);
-            for kk in 0..k {
-                vj[kk] -= eta * (gv[kk] * inv_n + self.lambda_v * reg_split * vj[kk]);
-            }
+            // eq. 12 / eq. 13 over the lane-blocked column, 1/N-normalized,
+            // L2 split across the P visits; the gradient buffer lives in
+            // the worker's scratch arena, so no visit allocates at any K.
+            visit::col_update(
+                rows,
+                xs,
+                &self.g,
+                &self.aa,
+                kp,
+                &mut tok.w[bi],
+                &mut tok.v[bi * kp..(bi + 1) * kp],
+                h,
+                &mut self.scratch,
+            );
         }
     }
 
@@ -340,30 +356,25 @@ impl<'a> Worker<'a> {
     /// with the frozen multipliers.
     fn update_visit_stochastic(&mut self, tok: &mut Token, eta: f32, samples: usize) {
         let (lo, hi) = self.block_range(tok.j);
-        let k = self.k;
+        let kp = self.kp;
         for (bi, j) in (lo..hi).enumerate() {
             let (rows, xs) = self.cols.col(j);
-            if rows.is_empty() {
-                continue;
-            }
-            let vj = &mut tok.v[bi * k..(bi + 1) * k];
-            for _ in 0..samples {
-                let t = self.rng.below_usize(rows.len());
-                let r = rows[t] as usize;
-                let x = xs[t];
-                let gi = self.g[r];
-                // eq. 12
-                let wj = &mut tok.w[bi];
-                *wj -= eta * (gi * x + self.lambda_w * *wj);
-                // eq. 13 with the cached a_ik
-                let x2 = x * x;
-                let ai = &self.aa[r * k..(r + 1) * k];
-                for kk in 0..k {
-                    let vjk = vj[kk];
-                    vj[kk] = vjk - eta * (gi * (x * ai[kk] - vjk * x2) + self.lambda_v * vjk);
-                }
-                self.coords_applied += 1;
-            }
+            // Empty columns apply nothing and draw nothing from the RNG.
+            let applied = visit::col_update_stochastic(
+                rows,
+                xs,
+                &self.g,
+                &self.aa,
+                kp,
+                &mut tok.w[bi],
+                &mut tok.v[bi * kp..(bi + 1) * kp],
+                eta,
+                self.lambda_w,
+                self.lambda_v,
+                samples,
+                &mut self.rng,
+            );
+            self.coords_applied += applied;
         }
     }
 
@@ -375,23 +386,19 @@ impl<'a> Worker<'a> {
             return;
         }
         let (lo, hi) = self.block_range(tok.j);
-        let k = self.k;
+        let kp = self.kp;
         for (bi, j) in (lo..hi).enumerate() {
             let (rows, xs) = self.cols.col(j);
-            let wj = tok.w[bi];
-            let vj = &tok.v[bi * k..(bi + 1) * k];
-            for (r, x) in rows.iter().zip(xs) {
-                let r = *r as usize;
-                let x = *x;
-                self.acc_xw[r] += wj * x;
-                let acc_a = &mut self.acc_a[r * k..(r + 1) * k];
-                let acc_s2 = &mut self.acc_s2[r * k..(r + 1) * k];
-                for kk in 0..k {
-                    let vx = vj[kk] * x;
-                    acc_a[kk] += vx;
-                    acc_s2[kk] += vx * vx;
-                }
-            }
+            visit::col_recompute(
+                rows,
+                xs,
+                tok.w[bi],
+                tok.vrow(bi, kp),
+                kp,
+                &mut self.acc_xw,
+                &mut self.acc_a,
+                &mut self.acc_s2,
+            );
         }
     }
 
@@ -425,18 +432,16 @@ impl<'a> Worker<'a> {
     /// report the local loss + regularizer contributions.
     fn finalize(&mut self) {
         let iter = (self.seq / 2) as u32;
-        let k = self.k;
-        let mut loss_sum = 0f64;
-        for r in 0..self.nloc {
-            let mut pair = 0f32;
-            for kk in 0..k {
-                let a = self.acc_a[r * k + kk];
-                pair += a * a - self.acc_s2[r * k + kk];
-            }
-            let f = self.w0 + self.acc_xw[r] + 0.5 * pair;
-            self.g[r] = loss::multiplier(f, self.labels[r], self.task);
-            loss_sum += loss::loss(f, self.labels[r], self.task) as f64;
-        }
+        let loss_sum = visit::finalize_rows(
+            self.w0,
+            &self.acc_xw,
+            &self.acc_a,
+            &self.acc_s2,
+            self.kp,
+            self.labels,
+            self.task,
+            &mut self.g,
+        );
         self.aa.copy_from_slice(&self.acc_a);
         self.acc_xw.fill(0.0);
         self.acc_a.fill(0.0);
@@ -470,6 +475,7 @@ pub fn train_with_transport(
     let p = cfg.workers.max(1);
     let d = train.d();
     let k = fm.k;
+    let kp = padded_k(k);
     let n = train.n();
     // Column-block size: the granularity optimization (EXPERIMENTS.md
     // §Perf). 0 = auto heuristic.
@@ -533,6 +539,9 @@ pub fn train_with_transport(
     }
 
     // ---- Seed the ring: deal tokens across workers (Algorithm 1 l.5-8).
+    // Factor payloads are dealt lane-padded (`ncols x kp`) straight from
+    // the kernel's AoSoA view; the wire codec strips the padding back to
+    // the K-strided frame at serialization boundaries.
     {
         let mut deal_rng = Pcg64::new(cfg.seed, 0xdea1);
         for b in 0..ntok {
@@ -554,7 +563,7 @@ pub fn train_with_transport(
                     phase: Phase::Update,
                     visits: 0,
                     w: Box::from(&init.w[lo..hi]),
-                    v: Box::from(&init.v[lo * k..hi * k]),
+                    v: Box::from(init_kernel.vrows_padded(lo, hi)),
                 }
             };
             transport.send(deal_rng.below_usize(p), tok);
@@ -576,16 +585,18 @@ pub fn train_with_transport(
                 let block = train_ref.rows.slice_rows(start, end);
                 let cols = block.to_csc();
                 // Exact initial G/A from the init model, scored through the
-                // shared fused kernel with this worker's scratch arena.
+                // shared fused kernel with this worker's scratch arena. The
+                // `aa` arena is `nloc x kp` lane-blocked: the kernel fills
+                // the K real lanes, the padding stays zero from init.
                 let mut scratch = Scratch::for_k(k);
                 let mut g = vec![0f32; nloc];
-                let mut aa = vec![0f32; nloc * k];
+                let mut aa = vec![0f32; nloc * kp];
                 for r in 0..nloc {
                     let (idx, val) = block.row(r);
                     let f = init_kern.score_with_sums(
                         idx,
                         val,
-                        &mut aa[r * k..(r + 1) * k],
+                        &mut aa[r * kp..r * kp + k],
                         &mut scratch,
                     );
                     g[r] = loss::multiplier(f, train_ref.labels[start + r], train_ref.task);
@@ -597,6 +608,7 @@ pub fn train_with_transport(
                     n_total: n,
                     t_max,
                     k,
+                    kp,
                     block_cols: c,
                     d,
                     task: train_ref.task,
@@ -609,8 +621,8 @@ pub fn train_with_transport(
                     g,
                     aa,
                     acc_xw: vec![0f32; nloc],
-                    acc_a: vec![0f32; nloc * k],
-                    acc_s2: vec![0f32; nloc * k],
+                    acc_a: vec![0f32; nloc * kp],
+                    acc_s2: vec![0f32; nloc * kp],
                     w0: init_ref.w0,
                     seq: 0,
                     seen: 0,
@@ -758,8 +770,17 @@ pub fn train_with_transport(
             let lo = b * c;
             let hi = (lo + c).min(d);
             ensure!(tok.w.len() == hi - lo, "block {b} width mismatch");
+            ensure!(
+                tok.v.len() == (hi - lo) * kp,
+                "block {b} padded payload mismatch: {} vs {}",
+                tok.v.len(),
+                (hi - lo) * kp
+            );
             model.w[lo..hi].copy_from_slice(&tok.w);
-            model.v[lo * k..hi * k].copy_from_slice(&tok.v);
+            // Strip the padding lanes: the model is K-strided.
+            for (bi, j) in (lo..hi).enumerate() {
+                model.v[j * k..(j + 1) * k].copy_from_slice(&tok.vrow(bi, kp)[..k]);
+            }
         }
     }
     ensure!(seen_bias, "bias token missing");

@@ -47,7 +47,9 @@ impl ParamMirror {
         }
     }
 
-    /// Publishes column `j`.
+    /// Publishes column `j`. `v` is the K-strided factor row: the engine
+    /// strips its lane-padded token payloads to the K real lanes at this
+    /// edge (the mirror, like `FmModel`, never stores padding).
     pub fn publish_column(&self, j: usize, w: f32, v: &[f32]) {
         debug_assert_eq!(v.len(), self.k);
         store(&self.w[j], w);

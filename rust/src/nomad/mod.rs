@@ -12,8 +12,13 @@
 //!   iteration (*incremental synchronization*, §4.2), instead of a bulk
 //!   synchronization barrier.
 //!
-//! See [`engine`] for the protocol invariants. The session-facing entry
-//! point is [`crate::train::NomadTrainer`].
+//! See [`engine`] for the protocol invariants (including the lane-padded
+//! token payload layout). The session-facing entry point is
+//! [`crate::train::NomadTrainer`].
+
+// Hot-path module: lint-clean regardless of the workflow-level gate (CI
+// additionally runs a clippy pass scoped to kernel + nomad).
+#![deny(clippy::all)]
 
 pub mod engine;
 pub mod mirror;
@@ -241,19 +246,23 @@ pub fn train_with_observer(
     cfg: &NomadConfig,
     obs: &mut dyn TrainObserver,
 ) -> crate::Result<(TrainOutput, EngineStats)> {
+    // Serializing transports are told the factor width K so they can
+    // strip the engine's lane-padded payloads to the K-strided wire form
+    // (and re-pad on receive): the byte format on the wire is unchanged
+    // by the in-memory layout.
     match cfg.transport {
         TransportKind::Local => {
             let t = LocalTransport::new(cfg.workers.max(1));
             engine::run(train_ds, test, fm, cfg, &t, obs)
         }
         TransportKind::SimNet(model) => {
-            let t = SimNetTransport::new(cfg.workers.max(1), model);
+            let t = SimNetTransport::new(cfg.workers.max(1), model, Some(fm.k));
             let out = engine::run(train_ds, test, fm, cfg, &*t, obs);
             t.shutdown();
             out
         }
         TransportKind::Tcp => {
-            let t = crate::cluster::tcp::TcpTransport::new(cfg.workers.max(1))?;
+            let t = crate::cluster::tcp::TcpTransport::new(cfg.workers.max(1), Some(fm.k))?;
             let out = engine::run(train_ds, test, fm, cfg, &*t, obs);
             t.shutdown();
             out

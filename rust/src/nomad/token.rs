@@ -18,6 +18,18 @@
 //!
 //! After `P` visits in a phase the last visitor flips the token to the next
 //! phase (Update -> Recompute -> next iteration's Update).
+//!
+//! ## Factor payload layout
+//!
+//! `Token` itself is stride-agnostic: `v` is `ncols x stride` row-major
+//! for whatever stride the producer chose. The engine circulates tokens
+//! **lane-padded** (`stride = padded_k(k)`, padding lanes invariantly
+//! zero) so every visit runs the lane-blocked kernels in
+//! [`crate::kernel::visit`] directly on the payload; the wire codec
+//! (`cluster::codec::{encode_token_padded, decode_token_padded}`) strips
+//! to / re-pads from the K-strided wire form, which is byte-identical to
+//! the unpadded era. Hand-built K-strided tokens (tests, oracles) remain
+//! valid with `stride = k`.
 
 /// Block id of the bias token (carries `w0`).
 pub const BIAS: u32 = u32::MAX;
@@ -46,7 +58,9 @@ pub struct Token {
     /// Linear weights `w_j` for the block's columns (length = #cols;
     /// length 1 holding `w0` for the bias token).
     pub w: Box<[f32]>,
-    /// Factor rows `v_j`, row-major `#cols x K` (empty for bias).
+    /// Factor rows `v_j`, row-major `#cols x stride` (empty for bias).
+    /// The engine uses `stride = padded_k(K)` (lane-padded, zero padding);
+    /// the wire form uses `stride = K`. See the module docs.
     pub v: Box<[f32]>,
 }
 
@@ -65,6 +79,16 @@ impl Token {
         } else {
             self.w.len()
         }
+    }
+
+    /// Factor row `bi` of the payload at the given row stride (the
+    /// engine passes `padded_k(k)`; K-strided producers pass `k`). The
+    /// update-phase kernels slice `v` directly instead, because they need
+    /// `&mut v[..]` and `&mut w[bi]` simultaneously (disjoint field
+    /// borrows a `&mut self` method cannot express).
+    #[inline]
+    pub fn vrow(&self, bi: usize, stride: usize) -> &[f32] {
+        &self.v[bi * stride..(bi + 1) * stride]
     }
 
     /// Total phase sequence number: tokens and workers advance through
@@ -144,6 +168,14 @@ mod tests {
         t.visits = 7;
         assert!(!t.flip());
         assert_eq!(t.visits, 0);
+    }
+
+    #[test]
+    fn vrow_slices_by_stride() {
+        let mut t = tok(); // 4 cols, v.len() == 8 -> stride 2
+        t.v[2] = 7.0;
+        assert_eq!(t.vrow(1, 2), &[7.0, 0.0]);
+        assert_eq!(t.vrow(3, 2), &[0.0, 0.0]);
     }
 
     #[test]

@@ -87,6 +87,20 @@ pub fn sparse_row(rng: &mut Pcg64, d: usize, nnz: usize) -> (Vec<u32>, Vec<f32>)
     (idx, val)
 }
 
+/// Pads a `n x k` row-major matrix to `n x kp` stride (`kp >= k`),
+/// zero-filling the trailing lanes — the lane-padding convention of
+/// `kernel::FmKernel` and the column-visit kernels. Shared by the parity
+/// suites and benches so every oracle pads one way.
+pub fn pad_rows(src: &[f32], n: usize, k: usize, kp: usize) -> Vec<f32> {
+    assert!(kp >= k, "padded stride {kp} < row width {k}");
+    assert_eq!(src.len(), n * k, "source is not n x k");
+    let mut out = vec![0f32; n * kp];
+    for r in 0..n {
+        out[r * kp..r * kp + k].copy_from_slice(&src[r * k..(r + 1) * k]);
+    }
+    out
+}
+
 /// A random CSR of up to `max_rows x max_cols` built from random triplets
 /// (duplicates summed by construction), for data-invariant properties.
 pub fn random_csr(rng: &mut Pcg64, max_rows: usize, max_cols: usize) -> Csr {

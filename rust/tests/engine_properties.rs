@@ -3,10 +3,12 @@
 //! convergence sanity across worker counts / transports / shapes.
 
 use dsfacto::data::{synth, Dataset, Task};
-use dsfacto::fm::FmHyper;
+use dsfacto::fm::{loss, FmHyper, FmModel};
+use dsfacto::kernel::{visit, FmKernel, Scratch};
 use dsfacto::nomad::{train_with_stats, NomadConfig, TransportKind};
 use dsfacto::optim::LrSchedule;
 use dsfacto::util::prop::{default_cases, forall_res};
+use dsfacto::util::rng::Pcg64;
 
 fn small_dataset(rng: &mut dsfacto::util::rng::Pcg64) -> Dataset {
     let task = if rng.chance(0.5) {
@@ -225,6 +227,137 @@ fn prop_engine_handles_wide_factor_models() {
             "k={k}: non-finite parameters"
         );
         assert!(stats.coordinate_updates > 0, "k={k}");
+    }
+}
+
+/// A step-by-step scalar replay of the P = 1 engine schedule using the
+/// K-strided `visit::scalar` oracles: with one worker the protocol is
+/// fully deterministic (tokens are processed in deal order — all column
+/// blocks, then the bias — once per phase), so the engine's lane-blocked,
+/// padded-token run must reproduce it **bit for bit**.
+fn scalar_reference_run(ds: &Dataset, fm: &FmHyper, cfg: &NomadConfig) -> FmModel {
+    assert_eq!(cfg.workers, 1, "the scalar replay models the P=1 schedule");
+    let (d, k, n) = (ds.d(), fm.k, ds.n());
+    let c = cfg.cols_per_token;
+    assert!(c > 0, "replay needs an explicit block size");
+    let nblocks = d.div_ceil(c);
+
+    // Same init stream as the engine.
+    let mut rng = Pcg64::new(cfg.seed, 0x0ad);
+    let init = FmModel::init(d, k, fm.init_std, &mut rng);
+    // Initial G/A exactly as the worker computes them (through the fused
+    // kernel), but stored K-strided.
+    let kern0 = FmKernel::from_model(&init);
+    let mut scratch = Scratch::for_k(k);
+    let mut g = vec![0f32; n];
+    let mut aa = vec![0f32; n * k];
+    for r in 0..n {
+        let (idx, val) = ds.rows.row(r);
+        let f = kern0.score_with_sums(idx, val, &mut aa[r * k..(r + 1) * k], &mut scratch);
+        g[r] = loss::multiplier(f, ds.labels[r], ds.task);
+    }
+    let cols = ds.rows.to_csc();
+
+    let mut w0 = init.w0;
+    let mut w = init.w.clone();
+    let mut v = init.v.clone();
+    let mut acc_xw = vec![0f32; n];
+    let mut acc_a = vec![0f32; n * k];
+    let mut acc_s2 = vec![0f32; n * k];
+    let mut gv = vec![0f32; k];
+    let inv_n = 1.0 / n.max(1) as f32;
+    for iter in 0..cfg.outer_iters {
+        let eta = cfg.eta.at(iter);
+        let h = visit::VisitHyper {
+            eta,
+            inv_n,
+            lambda_w: fm.lambda_w,
+            lambda_v: fm.lambda_v,
+            reg_split: 1.0, // P = 1
+        };
+        // Update pass: column blocks in deal order, bias token last.
+        for b in 0..nblocks {
+            let (lo, hi) = (b * c, (b * c + c).min(d));
+            for j in lo..hi {
+                let (rows, xs) = cols.col(j);
+                visit::scalar::col_update(
+                    rows,
+                    xs,
+                    &g,
+                    &aa,
+                    k,
+                    &mut w[j],
+                    &mut v[j * k..(j + 1) * k],
+                    h,
+                    &mut gv,
+                );
+            }
+        }
+        let gsum: f32 = g.iter().sum();
+        w0 -= eta * gsum * inv_n;
+        // Recompute pass in the same order (the bias visit only refreshes
+        // the worker's local w0 copy, which this replay holds directly).
+        for b in 0..nblocks {
+            let (lo, hi) = (b * c, (b * c + c).min(d));
+            for j in lo..hi {
+                let (rows, xs) = cols.col(j);
+                visit::scalar::col_recompute(
+                    rows,
+                    xs,
+                    w[j],
+                    &v[j * k..(j + 1) * k],
+                    k,
+                    &mut acc_xw,
+                    &mut acc_a,
+                    &mut acc_s2,
+                );
+            }
+        }
+        // End of the recompute pass: finalize.
+        visit::scalar::finalize_rows(w0, &acc_xw, &acc_a, &acc_s2, k, &ds.labels, ds.task, &mut g);
+        aa.copy_from_slice(&acc_a);
+        acc_xw.fill(0.0);
+        acc_a.fill(0.0);
+        acc_s2.fill(0.0);
+    }
+    FmModel { d, k, w0, w, v }
+}
+
+/// The tentpole acceptance property: a padded-token, lane-blocked engine
+/// run is **bitwise identical** to the scalar K-strided reference at a
+/// fixed seed — the AoSoA layout changes how the arithmetic is laid out,
+/// never what is computed. Covers K on both sides of a lane boundary and
+/// a ragged final column block, with the bias token in the ring.
+#[test]
+fn padded_engine_matches_scalar_reference_bitwise() {
+    let ds = synth::table2_dataset("housing", 21).unwrap(); // d = 13
+    for &(k, c) in &[(4usize, 5usize), (7, 3), (8, 13)] {
+        let fm = FmHyper {
+            k,
+            ..Default::default()
+        };
+        let cfg = NomadConfig {
+            workers: 1,
+            outer_iters: 5,
+            eta: LrSchedule::Constant(0.5),
+            seed: 77,
+            eval_every: usize::MAX,
+            cols_per_token: c,
+            ..Default::default()
+        };
+        let (out, _) = train_with_stats(&ds, None, &fm, &cfg).unwrap();
+        let reference = scalar_reference_run(&ds, &fm, &cfg);
+        assert_eq!(
+            out.model.w0.to_bits(),
+            reference.w0.to_bits(),
+            "k={k} c={c}: w0"
+        );
+        for (j, (a, b)) in out.model.w.iter().zip(&reference.w).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "k={k} c={c}: w[{j}]");
+        }
+        for (p, (a, b)) in out.model.v.iter().zip(&reference.v).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "k={k} c={c}: v[{p}]");
+        }
     }
 }
 

@@ -5,13 +5,22 @@
 //! checks, and scratch-arena reuse — across random K in 1..=64 (covering
 //! both the scalar scorer's stack path, K <= 32, and its heap path),
 //! random nnz including empty rows, and permuted index orders.
+//!
+//! Also holds the engine's column-visit kernels (`kernel::visit`) to the
+//! scalar K-strided oracles in `kernel::visit::scalar` **bit for bit**
+//! across the lane-boundary K grid, empty columns included.
 
 use dsfacto::data::Task;
 use dsfacto::fm::{loss, FmModel};
+use dsfacto::kernel::visit::{self, VisitHyper};
 use dsfacto::kernel::{padded_k, AdaGradLanes, FmKernel, Scratch, LANES};
 use dsfacto::optim::{sgd_update_example, AdaGradState};
-use dsfacto::util::prop::{forall_res, sparse_row};
+use dsfacto::util::prop::{forall_res, pad_rows, sparse_row};
 use dsfacto::util::rng::Pcg64;
+
+/// The K grid the engine visit-kernel parity suite sweeps: both sides of
+/// every lane boundary that matters (1, 7 | 8 | 9, 31 | 32, 64).
+const VISIT_KS: [usize; 7] = [1, 7, 8, 9, 31, 32, 64];
 
 fn random_model(rng: &mut Pcg64, d: usize, k: usize) -> FmModel {
     let mut m = FmModel::init(d, k, 0.3, rng);
@@ -258,6 +267,139 @@ fn prop_adagrad_lanes_match_scalar_state() {
             }
         },
     );
+}
+
+/// Engine visit-kernel parity: the lane-blocked column kernels
+/// (`visit::col_update` / `col_recompute` / `finalize_rows`) must be
+/// **bitwise identical** to the scalar K-strided loops the engine ran
+/// before lane-blocking (kept as oracles in `visit::scalar`), across the
+/// full K grid, empty columns included, with the padding lanes pinned at
+/// exactly zero throughout. (Bias tokens carry no factor payload — their
+/// path is covered by the engine-level bitwise test in
+/// `engine_properties.rs` and the padded-token codec suite.)
+#[test]
+fn visit_kernels_match_scalar_oracles_bitwise() {
+    for &k in &VISIT_KS {
+        let kp = padded_k(k);
+        let mut rng = Pcg64::seeded(0x71f + k as u64);
+        let nloc = 11;
+        for nnz in [0usize, 1, 4, nloc] {
+            // One CSC column over `nloc` local rows (empty at nnz = 0),
+            // plus the frozen multipliers G and factor-sum cache A.
+            let (rows, xs) = sparse_row(&mut rng, nloc, nnz);
+            let g: Vec<f32> = (0..nloc).map(|_| rng.normal32(0.0, 1.0)).collect();
+            let aa: Vec<f32> = (0..nloc * k).map(|_| rng.normal32(0.0, 0.7)).collect();
+            let aa_p = pad_rows(&aa, nloc, k, kp);
+            let w0col = rng.normal32(0.0, 0.5);
+            let vcol: Vec<f32> = (0..k).map(|_| rng.normal32(0.0, 0.5)).collect();
+            let h = VisitHyper {
+                eta: 0.3,
+                inv_n: 1.0 / 17.0,
+                lambda_w: 1e-3,
+                lambda_v: 1e-3,
+                reg_split: 0.25,
+            };
+
+            // -- col_update parity.
+            let mut w_s = w0col;
+            let mut v_s = vcol.clone();
+            let mut gv = vec![0f32; k];
+            visit::scalar::col_update(&rows, &xs, &g, &aa, k, &mut w_s, &mut v_s, h, &mut gv);
+            let mut w_l = w0col;
+            let mut v_l = pad_rows(&vcol, 1, k, kp);
+            let mut scratch = Scratch::new();
+            visit::col_update(&rows, &xs, &g, &aa_p, kp, &mut w_l, &mut v_l, h, &mut scratch);
+            assert_eq!(w_l.to_bits(), w_s.to_bits(), "k={k} nnz={nnz}: w");
+            for kk in 0..k {
+                assert_eq!(
+                    v_l[kk].to_bits(),
+                    v_s[kk].to_bits(),
+                    "k={k} nnz={nnz}: v[{kk}]"
+                );
+            }
+            assert!(
+                v_l[k..].iter().all(|&x| x.to_bits() == 0),
+                "k={k} nnz={nnz}: update un-zeroed the padding"
+            );
+
+            // -- col_update_stochastic parity (identical RNG streams).
+            let mut w_ss = w0col;
+            let mut v_ss = vcol.clone();
+            let mut rng_s = Pcg64::seeded(900 + k as u64);
+            let n_s = visit::scalar::col_update_stochastic(
+                &rows, &xs, &g, &aa, k, &mut w_ss, &mut v_ss, 0.02, 1e-3, 1e-3, 3, &mut rng_s,
+            );
+            let mut w_sl = w0col;
+            let mut v_sl = pad_rows(&vcol, 1, k, kp);
+            let mut rng_l = Pcg64::seeded(900 + k as u64);
+            let n_l = visit::col_update_stochastic(
+                &rows, &xs, &g, &aa_p, kp, &mut w_sl, &mut v_sl, 0.02, 1e-3, 1e-3, 3, &mut rng_l,
+            );
+            assert_eq!(n_s, n_l, "k={k} nnz={nnz}: stochastic coord counts");
+            assert_eq!(w_sl.to_bits(), w_ss.to_bits(), "k={k} nnz={nnz}: stoch w");
+            for kk in 0..k {
+                assert_eq!(
+                    v_sl[kk].to_bits(),
+                    v_ss[kk].to_bits(),
+                    "k={k} nnz={nnz}: stoch v[{kk}]"
+                );
+            }
+            assert!(v_sl[k..].iter().all(|&x| x.to_bits() == 0));
+
+            // -- col_recompute parity (fold the updated column).
+            let mut xw_s = vec![0f32; nloc];
+            let mut a_s = vec![0f32; nloc * k];
+            let mut s2_s = vec![0f32; nloc * k];
+            visit::scalar::col_recompute(&rows, &xs, w_s, &v_s, k, &mut xw_s, &mut a_s, &mut s2_s);
+            let mut xw_l = vec![0f32; nloc];
+            let mut a_l = vec![0f32; nloc * kp];
+            let mut s2_l = vec![0f32; nloc * kp];
+            visit::col_recompute(&rows, &xs, w_l, &v_l, kp, &mut xw_l, &mut a_l, &mut s2_l);
+            assert_eq!(xw_l, xw_s, "k={k} nnz={nnz}: acc_xw");
+            for r in 0..nloc {
+                for kk in 0..k {
+                    assert_eq!(
+                        a_l[r * kp + kk].to_bits(),
+                        a_s[r * k + kk].to_bits(),
+                        "k={k} nnz={nnz}: acc_a[{r},{kk}]"
+                    );
+                    assert_eq!(
+                        s2_l[r * kp + kk].to_bits(),
+                        s2_s[r * k + kk].to_bits(),
+                        "k={k} nnz={nnz}: acc_s2[{r},{kk}]"
+                    );
+                }
+                assert!(a_l[r * kp + k..(r + 1) * kp].iter().all(|&x| x.to_bits() == 0));
+                assert!(s2_l[r * kp + k..(r + 1) * kp].iter().all(|&x| x.to_bits() == 0));
+            }
+
+            // -- finalize_rows parity: same loss sum, same refreshed G.
+            for task in [Task::Regression, Task::Classification] {
+                let labels: Vec<f32> = (0..nloc)
+                    .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 })
+                    .collect();
+                let mut g_s = vec![0f32; nloc];
+                let loss_s = visit::scalar::finalize_rows(
+                    0.2, &xw_s, &a_s, &s2_s, k, &labels, task, &mut g_s,
+                );
+                let mut g_l = vec![0f32; nloc];
+                let loss_l =
+                    visit::finalize_rows(0.2, &xw_l, &a_l, &s2_l, kp, &labels, task, &mut g_l);
+                assert_eq!(
+                    loss_l.to_bits(),
+                    loss_s.to_bits(),
+                    "k={k} nnz={nnz} {task:?}: loss sum"
+                );
+                for r in 0..nloc {
+                    assert_eq!(
+                        g_l[r].to_bits(),
+                        g_s[r].to_bits(),
+                        "k={k} nnz={nnz} {task:?}: g[{r}]"
+                    );
+                }
+            }
+        }
+    }
 }
 
 /// One scratch arena serves models of different K (grow-only reuse), and

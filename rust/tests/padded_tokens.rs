@@ -1,0 +1,157 @@
+//! Conformance for the lane-padded in-memory token layout: the engine
+//! circulates `ncols x padded_k(k)` factor payloads, but the **wire format
+//! is the K-strided one and is unchanged** — `encode_token_padded` must
+//! produce byte-identical frames to the plain codec on the unpadded twin,
+//! and `decode_token_padded` must reconstruct the padded payload
+//! losslessly (zero padding lanes included). `codec_conformance.rs`
+//! continues to pin the plain K-strided codec itself, untouched.
+
+use dsfacto::cluster::codec::{
+    decode_token, decode_token_padded, encode_token, encode_token_padded,
+    padded_token_wire_size, token_wire_size,
+};
+use dsfacto::kernel::{padded_k, LANES};
+use dsfacto::nomad::token::{Phase, Token, BIAS};
+use dsfacto::util::prop::forall_res;
+use dsfacto::util::rng::Pcg64;
+
+/// A random engine-style token in both layouts: lane-padded (as the
+/// engine circulates it) and K-strided (its wire twin). Bias tokens are
+/// identical in both layouts.
+fn random_token_pair(rng: &mut Pcg64) -> (Token, Token, usize) {
+    if rng.chance(0.2) {
+        let bias = Token {
+            j: BIAS,
+            iter: rng.next_u32() % 1000,
+            phase: if rng.chance(0.5) {
+                Phase::Update
+            } else {
+                Phase::Recompute
+            },
+            visits: (rng.next_u32() % 64) as u16,
+            w: Box::from([rng.normal32(0.0, 10.0)]),
+            v: Box::from([]),
+        };
+        let k = 1 + rng.below_usize(16);
+        return (bias.clone(), bias, k);
+    }
+    let ncols = 1 + rng.below_usize(8);
+    let k = 1 + rng.below_usize(16);
+    let kp = padded_k(k);
+    let mut v_pad = vec![0f32; ncols * kp];
+    let mut v_flat = vec![0f32; ncols * k];
+    for bi in 0..ncols {
+        for kk in 0..k {
+            let x = rng.normal32(0.0, 1.0);
+            v_pad[bi * kp + kk] = x;
+            v_flat[bi * k + kk] = x;
+        }
+    }
+    let padded = Token {
+        j: rng.next_u32() % (1 << 24),
+        iter: rng.next_u32() % 1000,
+        phase: if rng.chance(0.5) {
+            Phase::Update
+        } else {
+            Phase::Recompute
+        },
+        visits: (rng.next_u32() % 64) as u16,
+        w: (0..ncols).map(|_| rng.normal32(0.0, 10.0)).collect(),
+        v: v_pad.into_boxed_slice(),
+    };
+    let stripped = Token {
+        v: v_flat.into_boxed_slice(),
+        ..padded.clone()
+    };
+    (padded, stripped, k)
+}
+
+/// Acceptance criterion: padded in-memory tokens encode/decode through
+/// the K-strided wire form losslessly, and that wire form is
+/// byte-identical to the pre-padding codec on the stripped twin.
+#[test]
+fn prop_padded_tokens_roundtrip_through_k_strided_wire() {
+    forall_res(
+        "padded token wire roundtrip",
+        128,
+        random_token_pair,
+        |(padded, stripped, k)| {
+            let mut wire = Vec::new();
+            encode_token_padded(padded, *k, &mut wire);
+            // 1. The wire format is unchanged: identical bytes to the
+            //    plain codec on the K-strided twin.
+            let mut plain = Vec::new();
+            encode_token(stripped, &mut plain);
+            if wire != plain {
+                return Err("padded encode changed the wire bytes".to_string());
+            }
+            if wire.len() != padded_token_wire_size(padded, *k) {
+                return Err(format!(
+                    "wire {} bytes, padded_token_wire_size says {}",
+                    wire.len(),
+                    padded_token_wire_size(padded, *k)
+                ));
+            }
+            if wire.len() != token_wire_size(stripped) {
+                return Err("padded wire size disagrees with the plain size".to_string());
+            }
+            // 2. Lossless round-trip back into the padded layout.
+            let back = decode_token_padded(&wire).map_err(|e| format!("{e:#}"))?;
+            if back != *padded {
+                return Err(format!("padded roundtrip lost data: {back:?} != {padded:?}"));
+            }
+            // 3. The plain decoder still sees the K-strided token.
+            let flat = decode_token(&wire).map_err(|e| format!("{e:#}"))?;
+            if flat != *stripped {
+                return Err("plain decode no longer matches the stripped twin".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// When K is already a lane multiple the two layouts coincide and the
+/// padded entry points must behave exactly like the plain codec.
+#[test]
+fn lane_multiple_k_is_identity() {
+    for k in [LANES, 2 * LANES] {
+        let tok = Token {
+            j: 5,
+            iter: 3,
+            phase: Phase::Recompute,
+            visits: 1,
+            w: Box::from([1.0f32, -2.0]),
+            v: (0..2 * k).map(|i| i as f32 * 0.5).collect(),
+        };
+        let mut a = Vec::new();
+        encode_token_padded(&tok, k, &mut a);
+        let mut b = Vec::new();
+        encode_token(&tok, &mut b);
+        assert_eq!(a, b, "k={k}");
+        assert_eq!(decode_token_padded(&a).unwrap(), tok, "k={k}");
+    }
+}
+
+/// Decoded padding lanes are exactly zero — the invariant every
+/// lane-blocked kernel relies on survives a wire hop.
+#[test]
+fn decoded_padding_lanes_are_exactly_zero() {
+    let mut rng = Pcg64::seeded(31);
+    for _ in 0..50 {
+        let (padded, _, k) = random_token_pair(&mut rng);
+        if padded.is_bias() {
+            continue;
+        }
+        let kp = padded_k(k);
+        let mut wire = Vec::new();
+        encode_token_padded(&padded, k, &mut wire);
+        let back = decode_token_padded(&wire).unwrap();
+        for bi in 0..back.ncols() {
+            let row = back.vrow(bi, kp);
+            assert!(
+                row[k..].iter().all(|&x| x.to_bits() == 0),
+                "non-zero padding after decode (k={k})"
+            );
+        }
+    }
+}
