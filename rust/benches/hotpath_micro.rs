@@ -424,6 +424,45 @@ fn main() -> anyhow::Result<()> {
     report.record_value("engine ns_per_hop (ijcnn1 P=4)", ns_per_hop);
     report.record_value("engine ns_per_coord (ijcnn1 P=4)", ns_per_coord);
 
+    section("partition plans: contiguous vs nnz-balanced (realsim twin, P=8, 2 iters)");
+    // Same Zipf-skewed realsim twin as the sparse-scoring section above.
+    // Derived values (EXPERIMENTS.md §Partitioning): makespan is seconds,
+    // imbalance is the max/mean shard-nnz ratio — both land in the JSON's
+    // value slot like the other derived entries.
+    for plan in ["contiguous", "balanced"] {
+        let mut cfg = dsfacto::config::ExperimentConfig {
+            trainer: dsfacto::config::TrainerKind::Nomad,
+            fm: dsfacto::fm::FmHyper {
+                k: 16,
+                init_std: 0.05,
+                ..Default::default()
+            },
+            workers: 8,
+            outer_iters: 2,
+            eta: dsfacto::optim::LrSchedule::Constant(0.5),
+            eval_every: usize::MAX,
+            ..Default::default()
+        };
+        cfg.set("row_partition", plan)?;
+        let trainer = cfg.trainer.build(&cfg);
+        trainer.fit(&sparse, None, &mut ())?;
+        let stats = trainer.stats().expect("engine counters");
+        let ps = &stats.partition;
+        let mk = stats.makespan_secs();
+        println!(
+            "  {plan:>12}: busy makespan {:.3}s, shard imbalance {:.3} (shard nnz {}..{})",
+            mk,
+            ps.imbalance,
+            ps.shard_nnz.iter().min().copied().unwrap_or(0),
+            ps.shard_nnz.iter().max().copied().unwrap_or(0),
+        );
+        report.record_value(&format!("engine makespan_secs {plan} (realsim-2k P=8)"), mk);
+        report.record_value(
+            &format!("partition imbalance {plan} (realsim-2k P=8)"),
+            ps.imbalance,
+        );
+    }
+
     report.write(&json_path)?;
     println!("\nwrote {json_path} ({} entries)", report.entries.len());
     Ok(())

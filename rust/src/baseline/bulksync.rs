@@ -3,16 +3,28 @@
 //! The strawman of paper §4.2: compute the synchronization terms G and A
 //! exactly at every iteration with a barrier (an all-reduce over workers —
 //! here the reduction is performed over per-worker partial gradients
-//! computed on row blocks by scoped threads), then take one deterministic
+//! computed on row shards by scoped threads), then take one deterministic
 //! gradient step (eqs. 6-8).
+//!
+//! Row shards come from [`crate::partition`] ([`RowPartition`] +
+//! [`build_shards`]) — which also fixes the old hand-rolled chunking's
+//! unclamped `start = p * chunk` (an inverted range whenever `workers`
+//! did not divide `n`). The per-shard gradient is computed column-major
+//! through the lane-blocked [`visit::col_grad`] fold over the shard's
+//! CSC: for a fixed column both orders add the same f64 terms in the same
+//! (ascending-row) sequence, so [`partial_gradient`] is **bitwise
+//! identical** to the row-major scalar reference it replaced — which
+//! lives on as [`partial_gradient_rows`], the oracle
+//! `rust/tests/partition_properties.rs` holds it to.
 //!
 //! The session-facing entry point is [`crate::train::BulkSyncTrainer`].
 
 use crate::data::Dataset;
 use crate::fm::{loss, FmHyper, FmModel};
-use crate::kernel::{FmKernel, Scratch};
+use crate::kernel::{visit, FmKernel, Scratch};
 use crate::metrics::TrainOutput;
 use crate::optim::LrSchedule;
+use crate::partition::{build_shards, PartitionStats, RowPartition, RowStrategy, Shard};
 use crate::train::{Probe, TrainObserver};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -31,6 +43,8 @@ pub struct BulkSyncConfig {
     pub seed: u64,
     /// Evaluate held-out metrics every this many iterations.
     pub eval_every: usize,
+    /// Row-shard strategy (contiguous = legacy default).
+    pub row_partition: RowStrategy,
 }
 
 impl Default for BulkSyncConfig {
@@ -41,21 +55,27 @@ impl Default for BulkSyncConfig {
             workers: 4,
             seed: 42,
             eval_every: 1,
+            row_partition: RowStrategy::Contiguous,
         }
     }
 }
 
 /// Dense gradient buffers (the "reduce" payload).
 #[derive(Debug, Clone)]
-struct GradBuf {
-    g0: f64,
-    gw: Vec<f64>,
-    gv: Vec<f64>,
-    loss: f64,
+pub struct GradBuf {
+    /// Bias gradient partial sum.
+    pub g0: f64,
+    /// Linear-weight gradient partial sums (length D).
+    pub gw: Vec<f64>,
+    /// Factor gradient partial sums (length D*K, K-strided).
+    pub gv: Vec<f64>,
+    /// Summed (unnormalized) loss of the covered rows.
+    pub loss: f64,
 }
 
 impl GradBuf {
-    fn zeros(d: usize, k: usize) -> Self {
+    /// Zeroed buffers for a `d x k` model.
+    pub fn zeros(d: usize, k: usize) -> Self {
         GradBuf {
             g0: 0.0,
             gw: vec![0.0; d],
@@ -65,7 +85,7 @@ impl GradBuf {
     }
 
     /// The all-reduce merge.
-    fn merge(&mut self, other: &GradBuf) {
+    pub fn merge(&mut self, other: &GradBuf) {
         self.g0 += other.g0;
         for (a, b) in self.gw.iter_mut().zip(&other.gw) {
             *a += b;
@@ -77,10 +97,65 @@ impl GradBuf {
     }
 }
 
-/// Accumulates the exact batch gradient of the rows in `[start, end)`,
-/// scoring through the shared lane-blocked kernel view (per-worker
-/// scratch; the only per-call allocations are this worker's own buffers).
-fn partial_gradient(kern: &FmKernel, ds: &Dataset, start: usize, end: usize) -> GradBuf {
+/// Accumulates the exact batch gradient of one row shard, column-major:
+/// a single row sweep scores every local example through the shared
+/// lane-blocked kernel (G, the `nloc x kp` factor-sum cache A, loss and
+/// the bias partial sum), then the shard's CSC columns fold into the f64
+/// eq. 7/8 partial sums via [`visit::col_grad`]. Bitwise identical to the
+/// row-major [`partial_gradient_rows`] reference (see the module docs).
+pub fn partial_gradient(kern: &FmKernel, shard: &Shard) -> GradBuf {
+    partial_gradient_into(kern, shard, &mut Vec::new(), &mut Vec::new())
+}
+
+/// [`partial_gradient`] with caller-owned `g` / lane-blocked `aa` scratch
+/// (grown on first use, reused across iterations — the training loop
+/// keeps one pair per worker, so the O(nloc x kp) auxiliary buffers are
+/// not re-allocated per iteration; what remains per call is the
+/// `GradBuf` reduce payload plus small O(kp) kernel scratch). `aa`'s
+/// padding lanes are zeroed on growth and never written afterwards,
+/// preserving the kernel zero-padding invariant across reuse.
+fn partial_gradient_into(
+    kern: &FmKernel,
+    shard: &Shard,
+    g: &mut Vec<f32>,
+    aa: &mut Vec<f32>,
+) -> GradBuf {
+    let k = kern.k();
+    let kp = kern.padded();
+    let d = kern.d();
+    let mut buf = GradBuf::zeros(d, k);
+    let mut scratch = Scratch::for_k(k);
+    let nloc = shard.nloc();
+    g.resize(nloc, 0.0);
+    aa.resize(nloc * kp, 0.0);
+    for r in 0..nloc {
+        let (idx, val) = shard.rows.row(r);
+        let f = kern.score_with_sums(idx, val, &mut aa[r * kp..r * kp + k], &mut scratch);
+        let gi = loss::multiplier(f, shard.labels[r], shard.task);
+        buf.loss += loss::loss(f, shard.labels[r], shard.task) as f64;
+        buf.g0 += gi as f64;
+        g[r] = gi;
+    }
+    let mut gv = vec![0f64; kp];
+    for j in 0..d {
+        let (rows, xs) = shard.cols.col(j);
+        if rows.is_empty() {
+            continue;
+        }
+        let gw = visit::col_grad(rows, xs, g, aa, kp, kern.vrows_padded(j, j + 1), &mut gv);
+        buf.gw[j] += gw;
+        for kk in 0..k {
+            buf.gv[j * k + kk] += gv[kk];
+        }
+    }
+    buf
+}
+
+/// The pre-refactor row-major scalar fold over global rows
+/// `[start, end)`, kept as the oracle for [`partial_gradient`] (the
+/// partition property suite asserts bitwise agreement) and as the
+/// baseline side of any future bench pair.
+pub fn partial_gradient_rows(kern: &FmKernel, ds: &Dataset, start: usize, end: usize) -> GradBuf {
     let k = kern.k();
     let mut buf = GradBuf::zeros(kern.d(), k);
     let mut scratch = Scratch::for_k(k);
@@ -115,10 +190,30 @@ pub fn bulksync_train(
     cfg: &BulkSyncConfig,
     obs: &mut dyn TrainObserver,
 ) -> TrainOutput {
+    bulksync_train_with_stats(train, test, fm, cfg, obs).0
+}
+
+/// Like [`bulksync_train`], also returning the row-shard load summary.
+pub fn bulksync_train_with_stats(
+    train: &Dataset,
+    test: Option<&Dataset>,
+    fm: &FmHyper,
+    cfg: &BulkSyncConfig,
+    obs: &mut dyn TrainObserver,
+) -> (TrainOutput, PartitionStats) {
     let workers = cfg.workers.max(1).min(train.n().max(1));
     let mut rng = Pcg64::new(cfg.seed, 0xb51c);
     let mut model = FmModel::init(train.d(), fm.k, fm.init_std, &mut rng);
     let mut probe = Probe::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
+
+    // Row shards, built once (CSR slice + CSC per worker).
+    let row_plan = RowPartition::new(cfg.row_partition, &train.rows, workers);
+    let pstats = PartitionStats::from_plan(&row_plan, &train.rows);
+    let shards = build_shards(train, &row_plan);
+    // Per-worker G / lane-blocked A scratch, grown on the first iteration
+    // and reused for the rest of the run.
+    let mut aux: Vec<(Vec<f32>, Vec<f32>)> =
+        shards.iter().map(|_| (Vec::new(), Vec::new())).collect();
 
     let mut sw = Stopwatch::start();
     let mut clock = 0f64;
@@ -126,24 +221,23 @@ pub fn bulksync_train(
     sw.lap();
 
     let n = train.n();
-    let chunk = n.div_ceil(workers);
     for t in 0..cfg.iters {
         if stopped {
             break;
         }
-        // Map: per-worker partial gradients on disjoint row blocks, all
-        // scoring through one shared kernel view of this iterate.
+        // Map: per-shard partial gradients, all scoring through one shared
+        // kernel view of this iterate.
         let kern = FmKernel::from_model(&model);
         let total = std::thread::scope(|scope| {
             let kern_ref = &kern;
-            let handles: Vec<_> = (0..workers)
-                .map(|p| {
-                    let start = p * chunk;
-                    let end = ((p + 1) * chunk).min(n);
-                    scope.spawn(move || partial_gradient(kern_ref, train, start, end))
+            let handles: Vec<_> = shards
+                .iter()
+                .zip(aux.iter_mut())
+                .map(|(shard, (g, aa))| {
+                    scope.spawn(move || partial_gradient_into(kern_ref, shard, g, aa))
                 })
                 .collect();
-            // Reduce: merge in worker order (deterministic).
+            // Reduce: merge in shard order (deterministic).
             let mut total = GradBuf::zeros(kern_ref.d(), kern_ref.k());
             for h in handles {
                 total.merge(&h.join().expect("bulksync worker panicked"));
@@ -169,11 +263,14 @@ pub fn bulksync_train(
         sw.lap();
     }
 
-    TrainOutput {
-        model,
-        trace: probe.into_trace(),
-        wall_secs: clock,
-    }
+    (
+        TrainOutput {
+            model,
+            trace: probe.into_trace(),
+            wall_secs: clock,
+        },
+        pstats,
+    )
 }
 
 #[cfg(test)]
@@ -226,7 +323,11 @@ mod tests {
         for (a, b) in one.model.w.iter().zip(&four.model.w) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
-        assert!((one.trace.last().unwrap().objective - four.trace.last().unwrap().objective).abs() < 1e-6);
+        let (o1, o4) = (
+            one.trace.last().unwrap().objective,
+            four.trace.last().unwrap().objective,
+        );
+        assert!((o1 - o4).abs() < 1e-6);
     }
 
     #[test]
@@ -235,14 +336,68 @@ mod tests {
         let mut rng = Pcg64::seeded(1);
         let model = FmModel::init(ds.d(), 4, 0.1, &mut rng);
         let kern = FmKernel::from_model(&model);
-        let full = partial_gradient(&kern, &ds, 0, ds.n());
+        let whole = build_shards(&ds, &RowPartition::contiguous(ds.n(), 1));
+        let full = partial_gradient(&kern, &whole[0]);
+        let parts = build_shards(&ds, &RowPartition::contiguous(ds.n(), 3));
         let mut merged = GradBuf::zeros(model.d, model.k);
-        let mid = ds.n() / 3;
-        merged.merge(&partial_gradient(&kern, &ds, 0, mid));
-        merged.merge(&partial_gradient(&kern, &ds, mid, ds.n()));
+        for shard in &parts {
+            merged.merge(&partial_gradient(&kern, shard));
+        }
         assert!((full.g0 - merged.g0).abs() < 1e-9);
         for (a, b) in full.gw.iter().zip(&merged.gw) {
             assert!((a - b).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn column_fold_matches_rowmajor_oracle_bitwise() {
+        // The lane-blocked column-major shard gradient is bit-for-bit the
+        // legacy row-major fold: same f64 terms, same order per column.
+        let ds = synth::table2_dataset("housing", 9).unwrap();
+        let mut rng = Pcg64::seeded(5);
+        for k in [1usize, 4, 7, 9] {
+            let model = FmModel::init(ds.d(), k, 0.1, &mut rng);
+            let kern = FmKernel::from_model(&model);
+            let shards = build_shards(&ds, &RowPartition::contiguous(ds.n(), 3));
+            for shard in &shards {
+                let col = partial_gradient(&kern, shard);
+                let row = partial_gradient_rows(&kern, &ds, shard.start, shard.end);
+                assert_eq!(col.g0.to_bits(), row.g0.to_bits(), "k={k}");
+                assert_eq!(col.loss.to_bits(), row.loss.to_bits(), "k={k}");
+                for (j, (a, b)) in col.gw.iter().zip(&row.gw).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "k={k} gw[{j}]");
+                }
+                for (q, (a, b)) in col.gv.iter().zip(&row.gv).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "k={k} gv[{q}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_blocks_clamped_when_workers_do_not_divide_n() {
+        // Regression for the old unclamped `start = p * chunk`: at n = 5,
+        // workers = 4 the legacy math produced an inverted 6..5 range.
+        // The shared RowPartition clamps; training must tile all 5 rows
+        // and still descend.
+        let ds = synth::table2_dataset("housing", 11).unwrap();
+        let five = ds.subset(&[0, 1, 2, 3, 4], "five");
+        let fm = FmHyper {
+            k: 2,
+            ..Default::default()
+        };
+        let cfg = BulkSyncConfig {
+            iters: 8,
+            eta: LrSchedule::Constant(0.05),
+            workers: 4,
+            seed: 3,
+            ..Default::default()
+        };
+        let (out, stats) = bulksync_train_with_stats(&five, None, &fm, &cfg, &mut ());
+        assert_eq!(stats.shard_nnz.len(), 4);
+        assert_eq!(stats.shard_nnz.iter().sum::<usize>(), five.nnz());
+        assert_eq!(out.trace.len(), 9);
+        let (first, last) = (out.trace[0].objective, out.trace.last().unwrap().objective);
+        assert!(last.is_finite() && last < first, "{first} -> {last}");
     }
 }

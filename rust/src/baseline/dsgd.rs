@@ -1,21 +1,36 @@
 //! Synchronous DSGD-style hybrid-parallel baseline.
 //!
 //! The bulk-synchronous counterpart to DS-FACTO (paper §4.2, "DSGD style
-//! communication (synchronous)"): workers own disjoint row blocks; the
+//! communication (synchronous)"): workers own disjoint row shards; the
 //! parameter columns are split into P blocks; an epoch is P sub-epochs.
 //! In sub-epoch s, worker p updates column block (p + s) mod P against its
-//! row block — a block-diagonal schedule, so no two workers touch the same
-//! parameters. The synchronization terms G and A are recomputed exactly at
-//! a **barrier before every sub-epoch** (this is precisely the bulk
-//! synchronization whose cost DS-FACTO's incremental scheme removes).
+//! row shard — the block-diagonal stratum schedule of
+//! [`GridPlan`](crate::partition::GridPlan) — so no two workers touch the
+//! same parameters. The synchronization terms G and A are recomputed
+//! exactly at a **barrier before every sub-epoch** (this is precisely the
+//! bulk synchronization whose cost DS-FACTO's incremental scheme removes).
+//!
+//! The (row x column) grid comes from [`crate::partition`]: row shards
+//! through [`RowPartition`] (contiguous by default; nnz-balanced via
+//! [`DsgdConfig::row_partition`]) materialized by [`build_shards`], column
+//! blocks through [`ColPartition`]. The per-column update runs on the
+//! lane-blocked [`kernel::visit::col_update`](crate::kernel::visit::col_update)
+//! kernel over a `kp`-strided auxiliary cache — the same hot path as the
+//! NOMAD engine's update visits, with identical per-coordinate operation
+//! order to the scalar loop it replaced (so contiguous-default runs are
+//! bitwise unchanged; `rust/tests/partition_properties.rs` pins this
+//! against a pre-refactor reference).
 //!
 //! The session-facing entry point is [`crate::train::DsgdTrainer`].
 
-use crate::data::{Csc, Dataset};
+use crate::data::Dataset;
 use crate::fm::{loss, FmHyper, FmModel};
-use crate::kernel::{FmKernel, Scratch};
+use crate::kernel::{padded_k, visit, FmKernel, Scratch};
 use crate::metrics::TrainOutput;
 use crate::optim::LrSchedule;
+use crate::partition::{
+    build_shards, ColPartition, GridPlan, PartitionStats, RowPartition, RowStrategy, Shard,
+};
 use crate::train::{Probe, TrainObserver};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -28,6 +43,8 @@ pub struct DsgdConfig {
     pub workers: usize,
     pub seed: u64,
     pub eval_every: usize,
+    /// Row-shard strategy (contiguous = legacy default).
+    pub row_partition: RowStrategy,
 }
 
 impl Default for DsgdConfig {
@@ -40,15 +57,27 @@ impl Default for DsgdConfig {
             workers: 4,
             seed: 42,
             eval_every: 1,
+            row_partition: RowStrategy::Contiguous,
         }
     }
 }
 
-/// Per-worker view: row range plus the CSC of that row block.
-struct RowBlock {
-    start: usize,
-    end: usize,
-    cols: Csc,
+/// The per-sub-epoch scalars a block update needs (bundled so the worker
+/// call stays readable).
+#[derive(Clone, Copy)]
+struct BlockArgs {
+    /// Padded factor stride of the barrier's A cache.
+    kp: usize,
+    /// The column-block grid.
+    col_plan: ColPartition,
+    /// Column block this worker updates this sub-epoch.
+    col_block: usize,
+    /// Step size for this epoch.
+    eta: f32,
+    /// Total example count N (the 1/N normalization).
+    n_total: usize,
+    /// Sub-epochs per epoch P (the L2 split).
+    p_total: usize,
 }
 
 /// A worker's updates to one column block (applied after the join).
@@ -57,17 +86,11 @@ struct ColumnDelta {
     block: usize,
     /// New values for w in the block (block-local order).
     w: Vec<f32>,
-    /// New values for v rows in the block.
+    /// New values for v rows in the block (block-local, K-strided).
     v: Vec<f32>,
     /// Sum of G_i over the worker's rows (for the shared w0 step).
     g_sum: f64,
     n_rows: usize,
-}
-
-/// Column-block boundaries: block b covers `[bounds[b], bounds[b+1])`.
-fn column_bounds(d: usize, p: usize) -> Vec<usize> {
-    let chunk = d.div_ceil(p);
-    (0..=p).map(|b| (b * chunk).min(d)).collect()
 }
 
 /// Trains with synchronous block-cyclic DSGD, reporting each epoch to
@@ -79,28 +102,32 @@ pub fn dsgd_train(
     cfg: &DsgdConfig,
     obs: &mut dyn TrainObserver,
 ) -> TrainOutput {
+    dsgd_train_with_stats(train, test, fm, cfg, obs).0
+}
+
+/// Like [`dsgd_train`], also returning the row-shard load summary.
+pub fn dsgd_train_with_stats(
+    train: &Dataset,
+    test: Option<&Dataset>,
+    fm: &FmHyper,
+    cfg: &DsgdConfig,
+    obs: &mut dyn TrainObserver,
+) -> (TrainOutput, PartitionStats) {
     let p = cfg.workers.max(1).min(train.d().max(1));
     let n = train.n();
     let d = train.d();
     let k = fm.k;
+    let kp = padded_k(k);
     let mut rng = Pcg64::new(cfg.seed, 0xd5fd);
     let mut model = FmModel::init(d, k, fm.init_std, &mut rng);
     let mut probe = Probe::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
 
-    // Row blocks + per-block column views (built once).
-    let row_chunk = n.div_ceil(p);
-    let blocks: Vec<RowBlock> = (0..p)
-        .map(|b| {
-            let start = (b * row_chunk).min(n);
-            let end = ((b + 1) * row_chunk).min(n);
-            RowBlock {
-                start,
-                end,
-                cols: train.rows.slice_rows(start, end).to_csc(),
-            }
-        })
-        .collect();
-    let bounds = column_bounds(d, p);
+    // The (row-shard x column-block) grid, built once.
+    let row_plan = RowPartition::new(cfg.row_partition, &train.rows, p);
+    let pstats = PartitionStats::from_plan(&row_plan, &train.rows);
+    let shards = build_shards(train, &row_plan);
+    let col_plan = ColPartition::with_n_blocks(d, p);
+    let plan = GridPlan::new(p, col_plan.n_blocks());
 
     let mut sw = Stopwatch::start();
     let mut clock = 0f64;
@@ -112,26 +139,28 @@ pub fn dsgd_train(
             break;
         }
         let eta = cfg.eta.at(epoch);
-        for sub in 0..p {
+        for sub in 0..plan.n_subepochs() {
             // --- Barrier: recompute G and A exactly (the bulk sync step).
-            let (g_all, a_all) = compute_aux(&model, train, p);
+            let (g_all, a_all) = compute_aux(&model, &shards, n, kp);
 
             // --- Parallel block-diagonal updates.
             let deltas = std::thread::scope(|scope| {
                 let model_ref = &model;
                 let g_ref = &g_all;
                 let a_ref = &a_all;
-                let bounds_ref = &bounds;
-                let handles: Vec<_> = blocks
+                let handles: Vec<_> = shards
                     .iter()
-                    .enumerate()
-                    .map(|(wid, rb)| {
-                        let col_block = (wid + sub) % p;
-                        scope.spawn(move || {
-                            update_block(
-                                model_ref, rb, g_ref, a_ref, bounds_ref, col_block, eta, fm, n, p,
-                            )
-                        })
+                    .map(|shard| {
+                        let col_block = plan.block_for(shard.id, sub);
+                        let args = BlockArgs {
+                            kp,
+                            col_plan,
+                            col_block,
+                            eta,
+                            n_total: n,
+                            p_total: p,
+                        };
+                        scope.spawn(move || update_block(model_ref, shard, g_ref, a_ref, fm, args))
                     })
                     .collect();
                 handles
@@ -144,7 +173,7 @@ pub fn dsgd_train(
             let mut g_total = 0f64;
             let mut rows_total = 0usize;
             for delta in deltas {
-                let (lo, hi) = (bounds[delta.block], bounds[delta.block + 1]);
+                let (lo, hi) = col_plan.block_range(delta.block);
                 model.w[lo..hi].copy_from_slice(&delta.w);
                 model.v[lo * k..hi * k].copy_from_slice(&delta.v);
                 g_total += delta.g_sum;
@@ -160,47 +189,46 @@ pub fn dsgd_train(
         sw.lap();
     }
 
-    TrainOutput {
-        model,
-        trace: probe.into_trace(),
-        wall_secs: clock,
-    }
+    (
+        TrainOutput {
+            model,
+            trace: probe.into_trace(),
+            wall_secs: clock,
+        },
+        pstats,
+    )
 }
 
-/// Exact G (multipliers) and A (factor sums) for all rows, in parallel.
-/// Each barrier builds the lane-blocked kernel view once (O(D K) copy)
-/// and the workers score through per-thread scratch arenas — zero
-/// per-example allocation.
-fn compute_aux(model: &FmModel, ds: &Dataset, p: usize) -> (Vec<f32>, Vec<f32>) {
-    let n = ds.n();
+/// Exact G (multipliers) and lane-blocked A (factor sums, `n x kp` with
+/// zero padding) for all rows, in parallel over the shards. Each barrier
+/// builds the lane-blocked kernel view once (O(D K) copy) and the workers
+/// score through per-thread scratch arenas — zero per-example allocation.
+fn compute_aux(model: &FmModel, shards: &[Shard], n: usize, kp: usize) -> (Vec<f32>, Vec<f32>) {
     let k = model.k;
-    let chunk = n.div_ceil(p);
     let mut g = vec![0f32; n];
-    let mut a = vec![0f32; n * k];
+    let mut a = vec![0f32; n * kp];
     let kern = FmKernel::from_model(model);
     std::thread::scope(|scope| {
         let kern_ref = &kern;
         let mut g_rest: &mut [f32] = &mut g;
         let mut a_rest: &mut [f32] = &mut a;
-        for b in 0..p {
-            let start = (b * chunk).min(n);
-            let end = ((b + 1) * chunk).min(n);
-            let take = end - start;
+        for shard in shards {
+            let take = shard.nloc();
             let (g_blk, g_next) = g_rest.split_at_mut(take);
-            let (a_blk, a_next) = a_rest.split_at_mut(take * k);
+            let (a_blk, a_next) = a_rest.split_at_mut(take * kp);
             g_rest = g_next;
             a_rest = a_next;
             scope.spawn(move || {
                 let mut scratch = Scratch::for_k(k);
-                for (r, i) in (start..end).enumerate() {
-                    let (idx, val) = ds.rows.row(i);
+                for r in 0..take {
+                    let (idx, val) = shard.rows.row(r);
                     let f = kern_ref.score_with_sums(
                         idx,
                         val,
-                        &mut a_blk[r * k..(r + 1) * k],
+                        &mut a_blk[r * kp..r * kp + k],
                         &mut scratch,
                     );
-                    g_blk[r] = loss::multiplier(f, ds.labels[i], ds.task);
+                    g_blk[r] = loss::multiplier(f, shard.labels[r], shard.task);
                 }
             });
         }
@@ -209,66 +237,82 @@ fn compute_aux(model: &FmModel, ds: &Dataset, p: usize) -> (Vec<f32>, Vec<f32>) 
 }
 
 /// One worker's sub-epoch: updates of column block `col_block` against its
-/// row block, with the (stale within the sub-epoch) G/A.
-#[allow(clippy::too_many_arguments)]
+/// row shard, with the (stale within the sub-epoch) G/A, through the
+/// lane-blocked column-update kernel.
+///
+/// Column-batch semantics matching the NOMAD engine (see
+/// `nomad::engine::Worker::update_visit`): with G frozen for the
+/// sub-epoch, per-nonzero application of eqs. 12-13 compounds into an
+/// unnormalized batch step; instead each sub-epoch applies the 1/N-scaled
+/// local partial gradient with the L2 term split across the P sub-epochs
+/// that touch a column per epoch.
 fn update_block(
     model: &FmModel,
-    rb: &RowBlock,
+    shard: &Shard,
     g_all: &[f32],
     a_all: &[f32],
-    bounds: &[usize],
-    col_block: usize,
-    eta: f32,
     fm: &FmHyper,
-    n_total: usize,
-    p_total: usize,
+    args: BlockArgs,
 ) -> ColumnDelta {
+    let BlockArgs {
+        kp,
+        col_plan,
+        col_block,
+        eta,
+        n_total,
+        p_total,
+    } = args;
     let k = model.k;
-    let (lo, hi) = (bounds[col_block], bounds[col_block + 1]);
+    let (lo, hi) = col_plan.block_range(col_block);
+    let nb = hi - lo;
     let mut w = model.w[lo..hi].to_vec();
-    let mut v = model.v[lo * k..hi * k].to_vec();
-    let mut g_sum = 0f64;
-
-    // Column-batch semantics matching the NOMAD engine (see
-    // `nomad::engine::Worker::update_visit`): with G frozen for the
-    // sub-epoch, per-nonzero application of eqs. 12-13 compounds into an
-    // unnormalized batch step; instead each sub-epoch applies the
-    // 1/N-scaled local partial gradient with the L2 term split across the
-    // P sub-epochs that touch a column per epoch.
-    let inv_n = 1.0 / n_total.max(1) as f32;
-    let reg_split = 1.0 / p_total.max(1) as f32;
-    let mut gv = vec![0f32; k];
-    for j in lo..hi {
-        let (rows, xs) = rb.cols.col(j);
-        let jl = j - lo;
-        let mut gw = 0f32;
-        gv.fill(0.0);
-        let vj = &mut v[jl * k..(jl + 1) * k];
-        for (r, x) in rows.iter().zip(xs) {
-            let i = rb.start + *r as usize; // global row
-            let g = g_all[i];
-            let x = *x;
-            gw += g * x; // eq. 7 partial sum
-            let x2 = x * x;
-            let a_i = &a_all[i * k..(i + 1) * k];
-            for kk in 0..k {
-                gv[kk] += g * (x * a_i[kk] - vj[kk] * x2); // eq. 8 partial sum
-            }
-        }
-        w[jl] -= eta * (gw * inv_n + fm.lambda_w * reg_split * w[jl]);
-        for kk in 0..k {
-            vj[kk] -= eta * (gv[kk] * inv_n + fm.lambda_v * reg_split * vj[kk]);
-        }
+    // Lane-pad the block's factor rows (padding lanes stay exactly zero
+    // under the kernel's update, so stripping them back below is lossless).
+    let mut v = vec![0f32; nb * kp];
+    for (bi, j) in (lo..hi).enumerate() {
+        v[bi * kp..bi * kp + k].copy_from_slice(&model.v[j * k..(j + 1) * k]);
     }
-    for i in rb.start..rb.end {
-        g_sum += g_all[i] as f64;
+    // Shard-local views of the global auxiliary arrays: the CSC carries
+    // local row indices.
+    let g = &g_all[shard.start..shard.end];
+    let aa = &a_all[shard.start * kp..shard.end * kp];
+    let h = visit::VisitHyper {
+        eta,
+        inv_n: 1.0 / n_total.max(1) as f32,
+        lambda_w: fm.lambda_w,
+        lambda_v: fm.lambda_v,
+        reg_split: 1.0 / p_total.max(1) as f32,
+    };
+    let mut scratch = Scratch::for_k(k);
+    for (bi, j) in (lo..hi).enumerate() {
+        let (rows, xs) = shard.cols.col(j);
+        visit::col_update(
+            rows,
+            xs,
+            g,
+            aa,
+            kp,
+            &mut w[bi],
+            &mut v[bi * kp..(bi + 1) * kp],
+            h,
+            &mut scratch,
+        );
+    }
+    let mut g_sum = 0f64;
+    for &gi in g {
+        g_sum += gi as f64;
+    }
+    // Strip the padding back to the K-strided model layout.
+    let mut v_out = vec![0f32; nb * k];
+    for bi in 0..nb {
+        v_out[bi * k..(bi + 1) * k].copy_from_slice(&v[bi * kp..bi * kp + k]);
     }
     ColumnDelta {
         block: col_block,
         w,
-        v,
+        v: v_out,
         g_sum,
-        n_rows: rb.end - rb.start,
+        n_rows: shard.nloc(),
     }
 }
 
@@ -278,24 +322,14 @@ mod tests {
     use crate::data::synth;
 
     #[test]
-    fn column_bounds_tile_dimensions() {
-        for (d, p) in [(10, 3), (8, 4), (7, 7), (5, 8), (1, 2)] {
-            let b = column_bounds(d, p);
-            assert_eq!(b.len(), p + 1);
-            assert_eq!(b[0], 0);
-            assert_eq!(*b.last().unwrap(), d);
-            for w in b.windows(2) {
-                assert!(w[0] <= w[1]);
-            }
-        }
-    }
-
-    #[test]
     fn aux_matches_sequential() {
         let ds = synth::table2_dataset("housing", 1).unwrap();
         let mut rng = Pcg64::seeded(2);
         let m = FmModel::init(ds.d(), 4, 0.1, &mut rng);
-        let (g, a) = compute_aux(&m, &ds, 3);
+        let kp = padded_k(4);
+        let part = RowPartition::contiguous(ds.n(), 3);
+        let shards = build_shards(&ds, &part);
+        let (g, a) = compute_aux(&m, &shards, ds.n(), kp);
         let mut ak = vec![0f32; 4];
         let mut s2 = vec![0f32; 4];
         for i in 0..ds.n() {
@@ -303,7 +337,11 @@ mod tests {
             let f = m.score_with_sums(idx, val, &mut ak, &mut s2);
             assert!((g[i] - loss::multiplier(f, ds.labels[i], ds.task)).abs() < 1e-6);
             for kk in 0..4 {
-                assert!((a[i * 4 + kk] - ak[kk]).abs() < 1e-6);
+                assert!((a[i * kp + kk] - ak[kk]).abs() < 1e-6);
+            }
+            // Padding lanes stay zero.
+            for kk in 4..kp {
+                assert_eq!(a[i * kp + kk], 0.0);
             }
         }
     }
@@ -358,5 +396,23 @@ mod tests {
         };
         let out = dsgd_train(&ds, None, &fm, &cfg, &mut ());
         assert!(out.trace.last().unwrap().objective < 0.7 * out.trace[0].objective);
+    }
+
+    #[test]
+    fn stats_report_shard_load() {
+        let ds = synth::table2_dataset("housing", 6).unwrap();
+        let fm = FmHyper {
+            k: 4,
+            ..Default::default()
+        };
+        let cfg = DsgdConfig {
+            epochs: 2,
+            workers: 4,
+            ..Default::default()
+        };
+        let (_, stats) = dsgd_train_with_stats(&ds, None, &fm, &cfg, &mut ());
+        assert_eq!(stats.shard_nnz.len(), 4);
+        assert_eq!(stats.shard_nnz.iter().sum::<usize>(), ds.nnz());
+        assert!(stats.imbalance >= 1.0 - 1e-12);
     }
 }

@@ -18,6 +18,6 @@ pub mod bulksync;
 pub mod dsgd;
 pub mod libfm;
 
-pub use bulksync::{bulksync_train, BulkSyncConfig};
-pub use dsgd::{dsgd_train, DsgdConfig};
+pub use bulksync::{bulksync_train, bulksync_train_with_stats, BulkSyncConfig};
+pub use dsgd::{dsgd_train, dsgd_train_with_stats, DsgdConfig};
 pub use libfm::{libfm_train, LibfmConfig};

@@ -32,6 +32,7 @@ use crate::data::Task;
 use crate::fm::FmHyper;
 use crate::nomad::{TransportKind, UpdateMode};
 use crate::optim::LrSchedule;
+use crate::partition::RowStrategy;
 
 /// Which training engine to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -163,6 +164,10 @@ pub struct ExperimentConfig {
     pub update_mode: UpdateMode,
     /// Columns per circulating token for the DS-FACTO engine (0 = auto).
     pub cols_per_token: usize,
+    /// Row-shard strategy for the distributed trainers (nomad, dsgd,
+    /// bulksync): `contiguous` (equal row counts; the default) or
+    /// `balanced` (equal per-shard nnz on row-skewed data).
+    pub row_partition: RowStrategy,
 }
 
 impl Default for ExperimentConfig {
@@ -183,6 +188,7 @@ impl Default for ExperimentConfig {
             transport: TransportKind::Local,
             update_mode: UpdateMode::MeanGradient,
             cols_per_token: 0,
+            row_partition: RowStrategy::Contiguous,
         }
     }
 }
@@ -228,6 +234,7 @@ impl ExperimentConfig {
             "cols_per_token" => {
                 self.cols_per_token = value.parse().context("cols_per_token")?
             }
+            "row_partition" => self.row_partition = RowStrategy::parse(value)?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -287,6 +294,7 @@ impl ExperimentConfig {
         kv.insert("transport", self.transport.spec());
         kv.insert("update_mode", self.update_mode.spec());
         kv.insert("cols_per_token", self.cols_per_token.to_string());
+        kv.insert("row_partition", self.row_partition.spec().to_string());
         kv.into_iter()
             .map(|(k, v)| format!("{k} = {v}"))
             .collect::<Vec<_>>()
@@ -372,10 +380,14 @@ mod tests {
         cfg.set("transport", "simnet:50us,1e9,2").unwrap();
         cfg.set("update_mode", "stochastic:4").unwrap();
         cfg.set("cols_per_token", "40").unwrap();
+        cfg.set("row_partition", "balanced").unwrap();
         let back = ExperimentConfig::parse_str(&cfg.dump()).unwrap();
         assert_eq!(back.transport, cfg.transport);
         assert_eq!(back.update_mode, cfg.update_mode);
         assert_eq!(back.cols_per_token, 40);
+        assert_eq!(back.row_partition, RowStrategy::NnzBalanced);
+        assert!(ExperimentConfig::default().dump().contains("row_partition = contiguous"));
+        assert!(ExperimentConfig::parse_str("row_partition = random\n").is_err());
         match back.transport {
             TransportKind::SimNet(m) => {
                 assert_eq!(m.latency, std::time::Duration::from_micros(50));

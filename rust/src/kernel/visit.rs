@@ -5,14 +5,16 @@
 //! per-example work every single-machine trainer executes, these cover
 //! the *column-major* unit of the decentralized engine (paper Algorithm
 //! 1): one circulating parameter column applied to, or folded over, a
-//! worker's local CSC column. Four entry points mirror the engine's four
-//! inner loops:
+//! worker's local CSC column. The entry points mirror the trainers'
+//! column-major inner loops:
 //!
 //! * [`col_update`] — the eq. 12/13 mean-gradient step of one update-phase
 //!   visit (Algorithm 1 lines 12-17, 1/N-normalized with the L2 term split
-//!   across the P visits);
+//!   across the P visits); DSGD's block updates run on it too;
 //! * [`col_update_stochastic`] — the paper-literal line 14 variant:
 //!   sampled per-example eq. 12/13 updates with frozen multipliers;
+//! * [`col_grad`] — the fold without the step: one column's eq. 7/8
+//!   partial gradient in f64, the bulk-sync all-reduce payload;
 //! * [`col_recompute`] — one recompute-phase visit (lines 18-21): fold the
 //!   column into the partial sums for G and A;
 //! * [`finalize_rows`] — end of a recompute pass: the pairwise-term
@@ -151,6 +153,52 @@ pub fn col_update_stochastic(
         }
     }
     samples as u64
+}
+
+/// Mean-gradient fold of one column *without* the parameter step: the
+/// eq. 7/8 partial sums `(gw, gv)` of the bulk-sync all-reduce payload,
+/// accumulated in **f64** over the lane-blocked `kp`-strided inputs.
+/// `gv` must be at least `kp` long; it is zeroed here, and its first K
+/// entries hold the factor gradient on return (padding lanes accumulate
+/// exact zeros). Returns `gw`.
+///
+/// For a fixed column, the row-major per-example fold it replaces adds
+/// exactly these terms in increasing row order — the order a CSC column
+/// stores its rows — with the same f64 casts, so a column-major shard
+/// sweep through this kernel reproduces the legacy row-major partial
+/// gradient **bitwise** (asserted by `rust/tests/partition_properties.rs`).
+pub fn col_grad(
+    rows: &[u32],
+    xs: &[f32],
+    g: &[f32],
+    aa: &[f32],
+    kp: usize,
+    vj: &[f32],
+    gv: &mut [f64],
+) -> f64 {
+    debug_assert_eq!(vj.len(), kp);
+    debug_assert!(gv.len() >= kp);
+    let gv = &mut gv[..kp];
+    gv.fill(0.0);
+    let mut gw = 0f64;
+    for (r, x) in rows.iter().zip(xs) {
+        let r = *r as usize;
+        let gi = g[r] as f64;
+        let x = *x as f64;
+        gw += gi * x;
+        let x2 = x * x;
+        let ai = &aa[r * kp..(r + 1) * kp];
+        for ((gb, ab), vb) in gv
+            .chunks_exact_mut(LANES)
+            .zip(ai.chunks_exact(LANES))
+            .zip(vj.chunks_exact(LANES))
+        {
+            for l in 0..LANES {
+                gb[l] += gi * (x * ab[l] as f64 - vb[l] as f64 * x2);
+            }
+        }
+    }
+    gw
 }
 
 /// One recompute-phase visit (Algorithm 1 lines 18-21): fold the column's
@@ -305,6 +353,35 @@ pub mod scalar {
         samples as u64
     }
 
+    /// Scalar reference of [`super::col_grad`] (K-strided inputs).
+    #[allow(clippy::too_many_arguments)]
+    pub fn col_grad(
+        rows: &[u32],
+        xs: &[f32],
+        g: &[f32],
+        aa: &[f32],
+        k: usize,
+        vj: &[f32],
+        gv: &mut [f64],
+    ) -> f64 {
+        debug_assert_eq!(vj.len(), k);
+        let gv = &mut gv[..k];
+        gv.fill(0.0);
+        let mut gw = 0f64;
+        for (r, x) in rows.iter().zip(xs) {
+            let r = *r as usize;
+            let gi = g[r] as f64;
+            let x = *x as f64;
+            gw += gi * x;
+            let x2 = x * x;
+            let ai = &aa[r * k..(r + 1) * k];
+            for kk in 0..k {
+                gv[kk] += gi * (x * ai[kk] as f64 - vj[kk] as f64 * x2);
+            }
+        }
+        gw
+    }
+
     /// Scalar reference of [`super::col_recompute`].
     #[allow(clippy::too_many_arguments)]
     pub fn col_recompute(
@@ -448,6 +525,35 @@ mod tests {
         let f = 0.1 + 0.25 + 0.5 * ((1.0 - 0.5) + (4.0 - 1.0));
         assert!((g[0] - loss::multiplier(f, 2.0, Task::Regression)).abs() < 1e-7);
         assert!((loss_sum - loss::loss(f, 2.0, Task::Regression) as f64).abs() < 1e-7);
+    }
+
+    #[test]
+    fn grad_matches_scalar_bitwise() {
+        let k = 5;
+        let kp = padded_k(k);
+        let rows = [0u32, 1, 3];
+        let xs = [1.25f32, -0.75, 2.0];
+        let g = [0.4f32, -0.3, 0.0, 0.8];
+        let aa: Vec<f32> = (0..4 * k).map(|i| (i as f32) * 0.07 - 0.5).collect();
+        let aa_p = pad_rows(&aa, 4, k, kp);
+        let vj: Vec<f32> = (0..k).map(|i| 0.2 - 0.1 * i as f32).collect();
+        let vj_p = pad_rows(&vj, 1, k, kp);
+
+        let mut gv_s = vec![0f64; k];
+        let gw_s = scalar::col_grad(&rows, &xs, &g, &aa, k, &vj, &mut gv_s);
+        let mut gv_l = vec![0f64; kp];
+        let gw_l = col_grad(&rows, &xs, &g, &aa_p, kp, &vj_p, &mut gv_l);
+
+        assert_eq!(gw_l.to_bits(), gw_s.to_bits());
+        for kk in 0..k {
+            assert_eq!(gv_l[kk].to_bits(), gv_s[kk].to_bits(), "kk={kk}");
+        }
+        assert!(gv_l[k..].iter().all(|&x| x == 0.0), "padding drifted");
+        // Empty column: zero gradient, gv cleared.
+        let mut gv_e = vec![9f64; kp];
+        let gw_e = col_grad(&[], &[], &g, &aa_p, kp, &vj_p, &mut gv_e);
+        assert_eq!(gw_e, 0.0);
+        assert!(gv_e.iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //!
 //! * **Layer 3 (this crate)** — the coordinator: the NOMAD-style token
 //!   engine ([`nomad`]), single-machine and synchronous baselines
-//!   ([`baseline`]), the uniform trainer/predictor session API ([`train`]),
-//!   data substrates ([`data`]), metrics, config, CLI.
+//!   ([`baseline`]), the doubly-separable partition plans all distributed
+//!   trainers shard through ([`partition`]), the uniform trainer/predictor
+//!   session API ([`train`]), data substrates ([`data`]), metrics, config,
+//!   CLI.
 //! * **Hot path ([`kernel`])** — the fused lane-blocked (AoSoA, 8-wide
 //!   f32) per-example FM kernels all trainers and the serving path run
 //!   on: one-pass scoring, a fused score+gradient+update step, and batch
@@ -69,6 +71,7 @@ pub mod kernel;
 pub mod metrics;
 pub mod nomad;
 pub mod optim;
+pub mod partition;
 pub mod runtime;
 pub mod train;
 pub mod util;

@@ -69,6 +69,7 @@ USAGE:
                      [--lambda-w L] [--lambda-v L] [--seed S] [--eval-every E]
                      [--transport local|tcp|simnet[:LAT,BW,WPM]]
                      [--update-mode mean|stochastic[:N]] [--cols-per-token C]
+                     [--row-partition contiguous|balanced]
                      [--trace FILE] [--save-model FILE]
                      [--xla-eval] [--artifacts DIR] [--quiet]
   dsfacto evaluate   --model FILE --dataset NAME|FILE [--xla] [--artifacts DIR]
@@ -82,6 +83,8 @@ SPECS:
              (latency[us|ms|s], bandwidth bytes/s, workers per machine;
               applies to the nomad trainer)
   update-mode  mean | stochastic:4   (nomad update-visit semantics)
+  row-partition  contiguous | balanced   (row shards by count or by nnz;
+             applies to the nomad, dsgd and bulksync trainers)
 
 Config files use the same keys with underscores (transport, update_mode,
 cols_per_token, ...); `--config` values are overridden by explicit flags.
@@ -106,6 +109,7 @@ fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &mut Args) -> Result<()
         ("transport", "transport"),
         ("update-mode", "update_mode"),
         ("cols-per-token", "cols_per_token"),
+        ("row-partition", "row_partition"),
     ] {
         if let Some(v) = args.get(flag) {
             cfg.set(key, &v).with_context(|| format!("--{flag}"))?;
@@ -179,9 +183,9 @@ fn cmd_train(mut args: Args) -> Result<()> {
     }
     if let Some(stats) = &summary.stats {
         println!(
-            "engine: {} messages, {} bytes, {} update visits, {} coordinate updates, holdback peak {}",
+            "engine: {} messages, {} bytes, {} update visits, {} coordinate updates, holdback peak {}, shard imbalance {:.3}",
             stats.messages, stats.bytes, stats.update_visits, stats.coordinate_updates,
-            stats.holdback_peak
+            stats.holdback_peak, stats.partition.imbalance
         );
     }
     if let Some(path) = save_model {

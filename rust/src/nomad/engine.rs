@@ -2,6 +2,12 @@
 //! parameter tokens, and the two-pass (update / recompute) protocol of
 //! paper Algorithm 1 with incremental synchronization of G and A.
 //!
+//! The (row-shard x column-block) grid comes from [`crate::partition`]:
+//! rows through a [`RowPartition`] (contiguous by default, nnz-balanced
+//! via `NomadConfig::row_partition`) materialized by
+//! [`partition::build_shards`], columns through the [`ColPartition`]
+//! tokens are cut from.
+//!
 //! ## Protocol invariants (tested in `nomad::tests` and `rust/tests/`)
 //!
 //! 1. **Single ownership** — a token is held by exactly one worker at a
@@ -44,6 +50,7 @@ use crate::fm::{loss, FmHyper, FmModel};
 use crate::kernel::{padded_k, visit, FmKernel, Scratch};
 use crate::metrics::{evaluate, TracePoint, TrainOutput};
 use crate::optim::LrSchedule;
+use crate::partition::{self, ColPartition, PartitionStats, RowPartition};
 use crate::train::TrainObserver;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -69,6 +76,9 @@ pub struct EngineStats {
     /// `max_p busy_p` — the quantity the Fig. 6 reproduction reports
     /// (EXPERIMENTS.md documents this substitution).
     pub worker_busy_secs: Vec<f64>,
+    /// The row-shard load summary of this run (per-shard nnz and the
+    /// max/mean imbalance ratio) — EXPERIMENTS.md §Partitioning.
+    pub partition: PartitionStats,
 }
 
 impl EngineStats {
@@ -135,16 +145,15 @@ struct Worker<'a> {
     /// Padded factor stride (`padded_k(k)`): the row stride of `aa`,
     /// `acc_a`, `acc_s2` and of every token's factor payload.
     kp: usize,
-    /// Columns per token (block size C).
-    block_cols: usize,
-    /// Model width D.
-    d: usize,
+    /// The column-block grid tokens are cut from (block size C over D).
+    col_plan: ColPartition,
     task: Task,
     eta: LrSchedule,
     lambda_w: f32,
     lambda_v: f32,
-    /// Local row block: global rows `[row_start, row_start + nloc)`.
-    labels: &'a [f32],
+    /// Labels of the local row shard (moved out of the
+    /// [`partition::Shard`] this worker was built from).
+    labels: Vec<f32>,
     cols: Csc,
     nloc: usize,
     /// Auxiliary variables (paper's G and A) for the local rows; `aa` is
@@ -344,11 +353,10 @@ impl<'a> Worker<'a> {
         }
     }
 
-    /// Columns `[lo, hi)` of block `b`.
+    /// Columns `[lo, hi)` of block `b` (delegates to the shared grid).
     #[inline]
     fn block_range(&self, b: u32) -> (usize, usize) {
-        let lo = b as usize * self.block_cols;
-        (lo, (lo + self.block_cols).min(self.d))
+        self.col_plan.block_range(b as usize)
     }
 
     /// Paper-literal Algorithm 1 line 14 (`UpdateMode::Stochastic`):
@@ -438,7 +446,7 @@ impl<'a> Worker<'a> {
             &self.acc_a,
             &self.acc_s2,
             self.kp,
-            self.labels,
+            &self.labels,
             self.task,
             &mut self.g,
         );
@@ -477,16 +485,21 @@ pub fn train_with_transport(
     let k = fm.k;
     let kp = padded_k(k);
     let n = train.n();
-    // Column-block size: the granularity optimization (EXPERIMENTS.md
+    // Column-block grid: the granularity optimization (EXPERIMENTS.md
     // §Perf). 0 = auto heuristic.
-    let c = if cfg.cols_per_token == 0 {
-        super::token::auto_block_cols(d, p)
+    let col_plan = if cfg.cols_per_token == 0 {
+        ColPartition::auto(d, p)
     } else {
-        cfg.cols_per_token
+        ColPartition::with_block_size(d, cfg.cols_per_token)
     };
-    let nblocks = d.div_ceil(c);
+    let nblocks = col_plan.n_blocks();
     let ntok = nblocks + 1; // + bias token
     let t_max = cfg.outer_iters as u32;
+
+    // Row-shard plan (contiguous by default — identical to the legacy
+    // chunking; `balanced` equalizes per-shard nnz on row-skewed data).
+    let row_plan = RowPartition::new(cfg.row_partition, &train.rows, p);
+    let pstats = PartitionStats::from_plan(&row_plan, &train.rows);
 
     // ---- Initial model and auxiliary variables (exact, pre-launch).
     let mut rng = Pcg64::new(cfg.seed, 0x0ad);
@@ -494,12 +507,6 @@ pub fn train_with_transport(
     let mirror = ParamMirror::new(&init);
     // Lane-blocked view shared by every worker's initial G/A pass.
     let init_kernel = FmKernel::from_model(&init);
-
-    // Row blocks.
-    let chunk = n.div_ceil(p);
-    let bounds: Vec<(usize, usize)> = (0..p)
-        .map(|b| ((b * chunk).min(n), ((b + 1) * chunk).min(n)))
-        .collect();
 
     let (post_tx, post_rx) = channel::<FinalizePost>();
     let shared = Shared {
@@ -532,11 +539,16 @@ pub fn train_with_transport(
                 },
                 EngineStats {
                     worker_busy_secs: vec![0.0; p],
+                    partition: pstats,
                     ..EngineStats::default()
                 },
             ));
         }
     }
+
+    // Materialize the per-worker shards (local CSR + CSC + labels)
+    // through the one shared parallel build path.
+    let shards = partition::build_shards(train, &row_plan);
 
     // ---- Seed the ring: deal tokens across workers (Algorithm 1 l.5-8).
     // Factor payloads are dealt lane-padded (`ncols x kp`) straight from
@@ -555,8 +567,7 @@ pub fn train_with_transport(
                     v: Box::from([]),
                 }
             } else {
-                let lo = b * c;
-                let hi = (lo + c).min(d);
+                let (lo, hi) = col_plan.block_range(b);
                 Token {
                     j: b as u32,
                     iter: 0,
@@ -575,32 +586,35 @@ pub fn train_with_transport(
     let stats = std::thread::scope(|scope| -> Result<EngineStats> {
         let shared_ref = &shared;
         let mut handles = Vec::with_capacity(p);
-        for (id, &(start, end)) in bounds.iter().enumerate() {
+        for shard in shards {
             let post_tx = post_tx.clone();
             let init_ref = &init;
             let init_kern = &init_kernel;
-            let train_ref = train;
             handles.push(scope.spawn(move || {
-                let nloc = end - start;
-                let block = train_ref.rows.slice_rows(start, end);
-                let cols = block.to_csc();
+                let nloc = shard.nloc();
                 // Exact initial G/A from the init model, scored through the
                 // shared fused kernel with this worker's scratch arena. The
                 // `aa` arena is `nloc x kp` lane-blocked: the kernel fills
                 // the K real lanes, the padding stays zero from init.
                 let mut scratch = Scratch::for_k(k);
-                let mut g = vec![0f32; nloc];
-                let mut aa = vec![0f32; nloc * kp];
+                let mut arenas = shard.arenas(k);
                 for r in 0..nloc {
-                    let (idx, val) = block.row(r);
+                    let (idx, val) = shard.rows.row(r);
                     let f = init_kern.score_with_sums(
                         idx,
                         val,
-                        &mut aa[r * kp..r * kp + k],
+                        &mut arenas.aa[r * kp..r * kp + k],
                         &mut scratch,
                     );
-                    g[r] = loss::multiplier(f, train_ref.labels[start + r], train_ref.task);
+                    arenas.g[r] = loss::multiplier(f, shard.labels[r], shard.task);
                 }
+                let partition::Shard {
+                    id,
+                    task,
+                    cols,
+                    labels,
+                    ..
+                } = shard;
                 let mut w = Worker {
                     id,
                     p,
@@ -609,20 +623,19 @@ pub fn train_with_transport(
                     t_max,
                     k,
                     kp,
-                    block_cols: c,
-                    d,
-                    task: train_ref.task,
+                    col_plan,
+                    task,
                     eta: cfg.eta,
                     lambda_w: fm.lambda_w,
                     lambda_v: fm.lambda_v,
-                    labels: &train_ref.labels[start..end],
+                    labels,
                     cols,
                     nloc,
-                    g,
-                    aa,
-                    acc_xw: vec![0f32; nloc],
-                    acc_a: vec![0f32; nloc * kp],
-                    acc_s2: vec![0f32; nloc * kp],
+                    g: arenas.g,
+                    aa: arenas.aa,
+                    acc_xw: arenas.acc_xw,
+                    acc_a: arenas.acc_a,
+                    acc_s2: arenas.acc_s2,
                     w0: init_ref.w0,
                     seq: 0,
                     seen: 0,
@@ -735,6 +748,7 @@ pub fn train_with_transport(
             coordinate_updates: shared.coordinate_updates.load(Ordering::Relaxed),
             holdback_peak: shared.holdback_peak.load(Ordering::Relaxed),
             worker_busy_secs: shared.busy_secs.lock().unwrap().clone(),
+            partition: pstats.clone(),
         })
     })?;
 
@@ -767,8 +781,7 @@ pub fn train_with_transport(
             let b = tok.j as usize;
             ensure!(!seen_blocks[b], "duplicate token for block {b}");
             seen_blocks[b] = true;
-            let lo = b * c;
-            let hi = (lo + c).min(d);
+            let (lo, hi) = col_plan.block_range(b);
             ensure!(tok.w.len() == hi - lo, "block {b} width mismatch");
             ensure!(
                 tok.v.len() == (hi - lo) * kp,

@@ -2,7 +2,10 @@
 //! training engine (paper §4, Algorithm 1).
 //!
 //! * Data is partitioned by **rows** across workers (each worker owns a
-//!   contiguous example block and its column-sliced CSC view).
+//!   contiguous example shard and its column-sliced CSC view, built by
+//!   [`crate::partition::build_shards`]; the shard boundaries come from a
+//!   [`crate::partition::RowPartition`] — equal row counts by default, or
+//!   nnz-balanced via [`NomadConfig::row_partition`]).
 //! * The model is partitioned by **columns**: each parameter column
 //!   `{w_j, v_j}` circulates as a [`token::Token`] through per-worker
 //!   queues in a ring — no parameter server (peer-only topology).
@@ -192,10 +195,14 @@ pub struct NomadConfig {
     /// Update-visit semantics.
     pub update_mode: UpdateMode,
     /// Columns carried per token (block granularity). 0 = auto heuristic
-    /// (`token::auto_block_cols`): wide models circulate column blocks so
-    /// per-visit dispatch overhead amortizes — the §Perf optimization that
-    /// makes realsim-scale models scale (EXPERIMENTS.md §Perf).
+    /// (`partition::auto_block_cols`): wide models circulate column blocks
+    /// so per-visit dispatch overhead amortizes — the §Perf optimization
+    /// that makes realsim-scale models scale (EXPERIMENTS.md §Perf).
     pub cols_per_token: usize,
+    /// How rows are sharded across workers: `Contiguous` (equal row
+    /// counts; the default, bitwise identical to the legacy chunking) or
+    /// `NnzBalanced` (equal per-shard nnz on row-skewed data).
+    pub row_partition: crate::partition::RowStrategy,
 }
 
 impl Default for NomadConfig {
@@ -212,6 +219,7 @@ impl Default for NomadConfig {
             transport: TransportKind::Local,
             update_mode: UpdateMode::MeanGradient,
             cols_per_token: 0,
+            row_partition: crate::partition::RowStrategy::Contiguous,
         }
     }
 }

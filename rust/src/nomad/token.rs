@@ -119,12 +119,13 @@ impl Token {
     }
 }
 
-/// Block size heuristic: keep ~`TOKENS_PER_WORKER` tokens in flight per
-/// worker so the ring stays busy while per-visit dispatch overhead
-/// amortizes over many columns.
+/// Block size heuristic: keep ~64 tokens in flight per worker so the
+/// ring stays busy while per-visit dispatch overhead amortizes over many
+/// columns. The implementation lives with the partition plans
+/// ([`crate::partition::auto_block_cols`]); this re-export keeps the
+/// token-facing spelling.
 pub fn auto_block_cols(d: usize, p: usize) -> usize {
-    const TOKENS_PER_WORKER: usize = 64;
-    (d / (p.max(1) * TOKENS_PER_WORKER)).max(1)
+    crate::partition::auto_block_cols(d, p)
 }
 
 /// Number of circulating tokens (column blocks + bias) for a model with

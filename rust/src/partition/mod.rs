@@ -1,0 +1,37 @@
+//! First-class doubly-separable partition plans.
+//!
+//! Double separability — partitioning the data *and* the model at the
+//! same time — is the structural idea of DS-FACTO (paper §4, Algorithm
+//! 1). Before this module, the (row-shard x column-block) grid existed
+//! only as three ad-hoc reimplementations inside the NOMAD engine, DSGD
+//! and bulk-sync. Here it is a value:
+//!
+//! * [`RowPartition`] — which rows belong to which worker, with two
+//!   strategies: [`RowStrategy::Contiguous`] (equal row counts, the
+//!   legacy default — bitwise identical to the old hand-rolled chunking)
+//!   and [`RowStrategy::NnzBalanced`] (greedy prefix split equalizing
+//!   per-shard nnz on row-skewed data, never worse than contiguous).
+//! * [`ColPartition`] — the column-block side: one `block_range`
+//!   implementation behind the engine's token blocks and DSGD's column
+//!   bounds, plus the [`auto_block_cols`] granularity heuristic.
+//! * [`GridPlan`] — the composed grid and DSGD's block-diagonal stratum
+//!   schedule `(shard + sub) % blocks`.
+//! * [`Shard`] / [`build_shards`] — the materialized per-worker view
+//!   (local CSR + CSC + labels + lane-blocked arenas), built through one
+//!   shared parallel path instead of three inline `slice_rows(..).to_csc()`
+//!   copies.
+//! * [`PartitionStats`] — per-shard nnz and the max/mean imbalance ratio,
+//!   surfaced through `EngineStats` and `Trainer::partition_stats`.
+//!
+//! The strategy is a config key (`row_partition = contiguous|balanced`)
+//! wired through `ExperimentConfig` and `TrainerKind::build`.
+
+// Hot-path-adjacent module: lint-clean regardless of the workflow-level
+// gate (CI's hotpath-lint clippy job covers the whole library).
+#![deny(clippy::all)]
+
+mod plan;
+mod shard;
+
+pub use plan::{auto_block_cols, ColPartition, GridPlan, PartitionStats, RowPartition, RowStrategy};
+pub use shard::{build_shards, Shard, ShardArenas};

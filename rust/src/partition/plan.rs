@@ -1,0 +1,491 @@
+//! Partition plans: how rows and parameter columns are split across
+//! workers.
+//!
+//! [`RowPartition`] assigns every example row to exactly one shard as a
+//! contiguous range (so a shard is always a [`Csr::slice_rows`] view).
+//! Two strategies exist:
+//!
+//! * [`RowStrategy::Contiguous`] — equal *row counts* (`n.div_ceil(p)`
+//!   chunks, clamped to `n`). This is byte-for-byte the chunking every
+//!   trainer hand-rolled before this module existed, and stays the
+//!   default so existing runs are bitwise unchanged.
+//! * [`RowStrategy::NnzBalanced`] — equal *work*: a greedy prefix split
+//!   on cumulative row nnz, placing each boundary at the prefix point
+//!   nearest the ideal `total_nnz * b / p`. On row-skewed data this
+//!   equalizes per-worker nnz (the quantity every column sweep is linear
+//!   in); it is guaranteed never to produce a larger max-nnz shard than
+//!   the contiguous split (it falls back to the contiguous bounds in the
+//!   rare case the greedy cuts would lose).
+//!
+//! [`ColPartition`] is the column-block side of the grid: one bounds /
+//! [`block_range`](ColPartition::block_range) implementation that absorbs
+//! the NOMAD engine's token-block math and DSGD's `column_bounds`.
+//! [`GridPlan`] composes the two into the (shard x column-block) grid and
+//! provides DSGD's block-diagonal stratum schedule.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::data::Csr;
+
+/// How rows are assigned to shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RowStrategy {
+    /// Equal row counts (legacy behavior; the default).
+    #[default]
+    Contiguous,
+    /// Greedy prefix split equalizing per-shard nnz.
+    NnzBalanced,
+}
+
+impl RowStrategy {
+    /// Parses the config spelling: `contiguous` or `balanced`
+    /// (`nnz-balanced` is accepted as an alias).
+    pub fn parse(s: &str) -> Result<RowStrategy> {
+        Ok(match s {
+            "contiguous" => RowStrategy::Contiguous,
+            "balanced" | "nnz-balanced" => RowStrategy::NnzBalanced,
+            other => bail!("unknown row partition {other:?} (contiguous|balanced)"),
+        })
+    }
+
+    /// The config spelling; round-trips through [`RowStrategy::parse`].
+    pub fn spec(&self) -> &'static str {
+        match self {
+            RowStrategy::Contiguous => "contiguous",
+            RowStrategy::NnzBalanced => "balanced",
+        }
+    }
+}
+
+/// An assignment of `n` rows to `p` shards as contiguous, ordered,
+/// non-overlapping ranges that jointly cover `0..n` (shards may be empty).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowPartition {
+    n: usize,
+    strategy: RowStrategy,
+    /// Per-shard `[start, end)` ranges, in shard order; `bounds[b].1 ==
+    /// bounds[b+1].0` and the last end is `n`.
+    bounds: Vec<(usize, usize)>,
+}
+
+impl RowPartition {
+    /// Builds a partition of `rows` into `p` shards with the given
+    /// strategy (the one dispatch point trainers call).
+    pub fn new(strategy: RowStrategy, rows: &Csr, p: usize) -> RowPartition {
+        match strategy {
+            RowStrategy::Contiguous => Self::contiguous(rows.n_rows(), p),
+            RowStrategy::NnzBalanced => Self::nnz_balanced(rows, p),
+        }
+    }
+
+    /// Equal-row-count chunks: shard `b` covers
+    /// `[(b*chunk).min(n), ((b+1)*chunk).min(n))` with
+    /// `chunk = n.div_ceil(p)` — exactly the legacy chunking of the NOMAD
+    /// engine and DSGD, with the clamp bulk-sync's hand-rolled copy was
+    /// missing (its `start = p * chunk` could exceed `n`).
+    pub fn contiguous(n: usize, p: usize) -> RowPartition {
+        let p = p.max(1);
+        let chunk = n.div_ceil(p);
+        let bounds = (0..p)
+            .map(|b| ((b * chunk).min(n), ((b + 1) * chunk).min(n)))
+            .collect();
+        RowPartition {
+            n,
+            strategy: RowStrategy::Contiguous,
+            bounds,
+        }
+    }
+
+    /// Greedy prefix split on cumulative row nnz: boundary `b` lands on
+    /// the prefix point nearest the ideal `total_nnz * b / p`. Falls back
+    /// to the contiguous bounds whenever the greedy cuts would yield a
+    /// *larger* max-nnz shard, so `max shard nnz <= contiguous max shard
+    /// nnz` holds unconditionally.
+    pub fn nnz_balanced(rows: &Csr, p: usize) -> RowPartition {
+        let p = p.max(1);
+        let n = rows.n_rows();
+        let total = rows.nnz();
+        let contiguous = Self::contiguous(n, p);
+        if total == 0 || p == 1 {
+            return RowPartition {
+                strategy: RowStrategy::NnzBalanced,
+                ..contiguous
+            };
+        }
+        // prefix[i] = nnz of rows 0..i (non-decreasing).
+        let mut prefix = Vec::with_capacity(n + 1);
+        prefix.push(0usize);
+        for i in 0..n {
+            prefix.push(prefix[i] + rows.row_nnz(i));
+        }
+        let mut cuts = vec![0usize; p + 1];
+        cuts[p] = n;
+        for b in 1..p {
+            let target = total as f64 * b as f64 / p as f64;
+            // First prefix point >= target, then pick the nearer of it
+            // and its predecessor (ties to the left keeps cuts small).
+            let hi = prefix.partition_point(|&x| (x as f64) < target);
+            let pick = if hi > n {
+                n
+            } else if hi == 0 {
+                0
+            } else {
+                let d_hi = prefix[hi] as f64 - target;
+                let d_lo = target - prefix[hi - 1] as f64;
+                if d_lo <= d_hi {
+                    hi - 1
+                } else {
+                    hi
+                }
+            };
+            cuts[b] = pick.clamp(cuts[b - 1], n);
+        }
+        let bounds: Vec<(usize, usize)> = (0..p).map(|b| (cuts[b], cuts[b + 1])).collect();
+        let max_nnz = |bs: &[(usize, usize)]| {
+            bs.iter()
+                .map(|&(s, e)| prefix[e] - prefix[s])
+                .max()
+                .unwrap_or(0)
+        };
+        if max_nnz(&bounds) <= max_nnz(&contiguous.bounds) {
+            RowPartition {
+                n,
+                strategy: RowStrategy::NnzBalanced,
+                bounds,
+            }
+        } else {
+            RowPartition {
+                strategy: RowStrategy::NnzBalanced,
+                ..contiguous
+            }
+        }
+    }
+
+    /// Number of shards (always the `p` the partition was built with).
+    pub fn n_shards(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// Number of rows covered.
+    pub fn n_rows(&self) -> usize {
+        self.n
+    }
+
+    /// The strategy this partition was built with.
+    pub fn strategy(&self) -> RowStrategy {
+        self.strategy
+    }
+
+    /// Per-shard `[start, end)` ranges, in shard order.
+    pub fn bounds(&self) -> &[(usize, usize)] {
+        &self.bounds
+    }
+
+    /// Shard `b`'s row range.
+    pub fn range(&self, b: usize) -> (usize, usize) {
+        self.bounds[b]
+    }
+
+    /// Per-shard nnz under this partition.
+    pub fn shard_nnz(&self, rows: &Csr) -> Vec<usize> {
+        assert_eq!(rows.n_rows(), self.n, "partition built for another matrix");
+        self.bounds
+            .iter()
+            .map(|&(s, e)| (s..e).map(|i| rows.row_nnz(i)).sum())
+            .collect()
+    }
+
+    /// Structural invariants: ranges are ordered, contiguous and cover
+    /// `0..n` exactly (every row in exactly one shard).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.bounds.is_empty(), "partition has no shards");
+        ensure!(self.bounds[0].0 == 0, "first shard does not start at 0");
+        ensure!(
+            self.bounds.last().unwrap().1 == self.n,
+            "last shard ends at {} != n {}",
+            self.bounds.last().unwrap().1,
+            self.n
+        );
+        for (b, &(s, e)) in self.bounds.iter().enumerate() {
+            ensure!(s <= e, "shard {b}: inverted range {s}..{e}");
+            ensure!(e <= self.n, "shard {b}: end {e} > n {}", self.n);
+        }
+        for w in self.bounds.windows(2) {
+            ensure!(
+                w[0].1 == w[1].0,
+                "gap/overlap between shards: {}..{} then {}..{}",
+                w[0].0,
+                w[0].1,
+                w[1].0,
+                w[1].1
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Block size heuristic for column-block tokens: keep ~64 tokens in
+/// flight per worker so the ring stays busy while per-visit dispatch
+/// overhead amortizes over many columns. (Moved here from `nomad::token`;
+/// the partition layer owns all grid math.)
+pub fn auto_block_cols(d: usize, p: usize) -> usize {
+    const TOKENS_PER_WORKER: usize = 64;
+    (d / (p.max(1) * TOKENS_PER_WORKER)).max(1)
+}
+
+/// An even split of `d` parameter columns into fixed-size blocks: block
+/// `b` covers `[(b*c).min(d), (b*c + c).min(d))`. One implementation
+/// behind both the NOMAD engine's token blocks (sized by columns per
+/// token) and DSGD's per-worker column blocks (sized by block count;
+/// trailing blocks may be empty when `d` is small).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ColPartition {
+    d: usize,
+    block: usize,
+    nb: usize,
+}
+
+impl ColPartition {
+    /// Blocks of (at most) `c` columns each — the NOMAD token grid.
+    pub fn with_block_size(d: usize, c: usize) -> ColPartition {
+        let block = c.max(1);
+        ColPartition {
+            d,
+            block,
+            nb: d.div_ceil(block),
+        }
+    }
+
+    /// Exactly `nb` blocks of `d.div_ceil(nb)` columns each (trailing
+    /// blocks empty when `d < nb`) — DSGD's `column_bounds`.
+    pub fn with_n_blocks(d: usize, nb: usize) -> ColPartition {
+        let nb = nb.max(1);
+        ColPartition {
+            d,
+            block: d.div_ceil(nb).max(1),
+            nb,
+        }
+    }
+
+    /// The auto-granularity grid ([`auto_block_cols`] heuristic).
+    pub fn auto(d: usize, p: usize) -> ColPartition {
+        Self::with_block_size(d, auto_block_cols(d, p))
+    }
+
+    /// Total columns D.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.nb
+    }
+
+    /// Columns per (non-ragged) block.
+    pub fn block_size(&self) -> usize {
+        self.block
+    }
+
+    /// Columns `[lo, hi)` of block `b`.
+    #[inline]
+    pub fn block_range(&self, b: usize) -> (usize, usize) {
+        let lo = (b * self.block).min(self.d);
+        (lo, (lo + self.block).min(self.d))
+    }
+
+    /// The `nb + 1` block boundaries (block `b` covers
+    /// `[bounds[b], bounds[b+1])`) — DSGD's legacy `column_bounds` shape.
+    pub fn bounds(&self) -> Vec<usize> {
+        (0..=self.nb).map(|b| (b * self.block).min(self.d)).collect()
+    }
+}
+
+/// The (row-shard x column-block) grid and its block-diagonal stratum
+/// schedule: in sub-epoch `s`, shard `w` works column block
+/// `(w + s) % n_blocks` — no two shards touch the same block, and over
+/// `n_subepochs()` sub-epochs every (shard, block) cell is visited
+/// exactly once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GridPlan {
+    shards: usize,
+    blocks: usize,
+}
+
+impl GridPlan {
+    /// A grid of `shards` row shards by `blocks` column blocks.
+    pub fn new(shards: usize, blocks: usize) -> GridPlan {
+        GridPlan {
+            shards: shards.max(1),
+            blocks: blocks.max(1),
+        }
+    }
+
+    /// Number of row shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Number of column blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks
+    }
+
+    /// Sub-epochs per epoch (= number of column blocks: after that many,
+    /// each shard has visited every block exactly once).
+    pub fn n_subepochs(&self) -> usize {
+        self.blocks
+    }
+
+    /// The column block shard `shard` works in sub-epoch `sub`.
+    #[inline]
+    pub fn block_for(&self, shard: usize, sub: usize) -> usize {
+        (shard + sub) % self.blocks
+    }
+}
+
+/// Per-shard load summary surfaced in engine / trainer stats.
+#[derive(Debug, Clone, Default)]
+pub struct PartitionStats {
+    /// Stored non-zeros per shard, in shard order.
+    pub shard_nnz: Vec<usize>,
+    /// Max shard nnz over mean shard nnz: 1.0 is perfectly balanced,
+    /// `p` is one shard holding everything. 1.0 when there are no
+    /// non-zeros at all (0.0 only in the unmeasured `Default`).
+    pub imbalance: f64,
+}
+
+impl PartitionStats {
+    /// Measures a plan against the matrix it partitions.
+    pub fn from_plan(plan: &RowPartition, rows: &Csr) -> PartitionStats {
+        let shard_nnz = plan.shard_nnz(rows);
+        let total: usize = shard_nnz.iter().sum();
+        let imbalance = if total == 0 {
+            1.0
+        } else {
+            let mean = total as f64 / shard_nnz.len().max(1) as f64;
+            shard_nnz.iter().copied().max().unwrap_or(0) as f64 / mean
+        };
+        PartitionStats {
+            shard_nnz,
+            imbalance,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_spec_round_trips() {
+        for s in [RowStrategy::Contiguous, RowStrategy::NnzBalanced] {
+            assert_eq!(RowStrategy::parse(s.spec()).unwrap(), s);
+        }
+        assert_eq!(
+            RowStrategy::parse("nnz-balanced").unwrap(),
+            RowStrategy::NnzBalanced
+        );
+        assert!(RowStrategy::parse("random").is_err());
+    }
+
+    #[test]
+    fn contiguous_matches_legacy_chunking() {
+        for (n, p) in [(10usize, 3usize), (8, 4), (7, 7), (5, 4), (1, 2), (0, 3), (6, 8)] {
+            let part = RowPartition::contiguous(n, p);
+            part.validate().unwrap();
+            let chunk = n.div_ceil(p.max(1));
+            for (b, &(s, e)) in part.bounds().iter().enumerate() {
+                assert_eq!(s, (b * chunk).min(n), "n={n} p={p} b={b}");
+                assert_eq!(e, ((b + 1) * chunk).min(n), "n={n} p={p} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn bulksync_clamp_regression_n5_p4() {
+        // The exact shape that tripped bulk-sync's hand-rolled chunking:
+        // chunk = 2, so the unclamped start of shard 3 was 6 > n = 5.
+        let part = RowPartition::contiguous(5, 4);
+        part.validate().unwrap();
+        assert_eq!(part.bounds(), &[(0, 2), (2, 4), (4, 5), (5, 5)]);
+    }
+
+    #[test]
+    fn balanced_fixes_front_loaded_skew() {
+        // 8 heavy rows (32 nnz) then 56 single-nnz rows: the contiguous
+        // quarter split gives shard 0 most of the work.
+        let mut triplets = Vec::new();
+        for r in 0..8 {
+            for c in 0..32 {
+                triplets.push((r, c, 1.0f32));
+            }
+        }
+        for r in 8..64 {
+            triplets.push((r, r % 32, 1.0f32));
+        }
+        let m = Csr::from_triplets(64, 32, &triplets);
+        let cont = RowPartition::contiguous(64, 4);
+        let bal = RowPartition::nnz_balanced(&m, 4);
+        bal.validate().unwrap();
+        let max = |p: &RowPartition| p.shard_nnz(&m).into_iter().max().unwrap();
+        assert_eq!(max(&cont), 8 * 32 + 8);
+        assert!(
+            max(&bal) < max(&cont) / 2,
+            "balanced {} vs contiguous {}",
+            max(&bal),
+            max(&cont)
+        );
+        let sc = PartitionStats::from_plan(&cont, &m);
+        let sb = PartitionStats::from_plan(&bal, &m);
+        assert!(sb.imbalance < sc.imbalance);
+        assert!(sb.imbalance >= 1.0 - 1e-12);
+    }
+
+    #[test]
+    fn balanced_degenerates_gracefully() {
+        // No non-zeros / one shard: fall back to the contiguous bounds.
+        let empty = Csr::empty(6, 4);
+        let part = RowPartition::nnz_balanced(&empty, 3);
+        part.validate().unwrap();
+        assert_eq!(part.bounds(), RowPartition::contiguous(6, 3).bounds());
+        assert_eq!(part.strategy(), RowStrategy::NnzBalanced);
+        let m = Csr::from_triplets(3, 2, &[(0, 0, 1.0), (2, 1, 1.0)]);
+        let one = RowPartition::nnz_balanced(&m, 1);
+        assert_eq!(one.bounds(), &[(0, 3)]);
+        assert!((PartitionStats::from_plan(&one, &m).imbalance - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn col_partition_absorbs_legacy_bounds() {
+        // DSGD's column_bounds shape: exactly p blocks, clamped.
+        for (d, p) in [(10usize, 3usize), (8, 4), (7, 7), (5, 8), (1, 2)] {
+            let part = ColPartition::with_n_blocks(d, p);
+            let b = part.bounds();
+            assert_eq!(b.len(), p + 1);
+            assert_eq!(b[0], 0);
+            assert_eq!(*b.last().unwrap(), d);
+            for w in b.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+            let chunk = d.div_ceil(p);
+            for (i, &x) in b.iter().enumerate() {
+                assert_eq!(x, (i * chunk).min(d), "d={d} p={p}");
+            }
+        }
+        // The engine's token-block shape: block size c, d.div_ceil(c)
+        // blocks, ragged tail.
+        let part = ColPartition::with_block_size(13, 5);
+        assert_eq!(part.n_blocks(), 3);
+        assert_eq!(part.block_range(0), (0, 5));
+        assert_eq!(part.block_range(2), (10, 13));
+    }
+
+    #[test]
+    fn auto_heuristic_unchanged() {
+        assert_eq!(auto_block_cols(22, 4), 1);
+        assert_eq!(auto_block_cols(20_958, 8), 40);
+        assert!(auto_block_cols(1, 32) >= 1);
+        assert_eq!(ColPartition::auto(20_958, 8).block_size(), 40);
+    }
+}

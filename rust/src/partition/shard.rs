@@ -1,0 +1,177 @@
+//! Materialized per-worker shard views.
+//!
+//! A [`Shard`] is what a distributed worker actually touches: the local
+//! row-block CSR (a [`Csr::slice_rows`] of the training set), its CSC
+//! transpose (the doubly-separable column access path of paper Figs.
+//! 1-2), the matching label slice and the task. [`build_shards`] is the
+//! one shared construction path — one scoped thread per shard, exactly
+//! the parallelism each trainer used to hand-roll inline — so the NOMAD
+//! engine, DSGD and bulk-sync all consume identical views.
+
+use crate::data::{Csc, Csr, Dataset, Task};
+use crate::kernel::padded_k;
+
+use super::plan::RowPartition;
+
+/// One worker's materialized view of its row shard.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    /// Shard id (= worker id; position in the partition).
+    pub id: usize,
+    /// Global row range `[start, end)` this shard covers.
+    pub start: usize,
+    /// Exclusive end of the global row range.
+    pub end: usize,
+    /// The shard's rows as a local CSR (row `r` = global row `start + r`).
+    pub rows: Csr,
+    /// Column view of `rows` (local row indices).
+    pub cols: Csc,
+    /// Labels for the shard's rows.
+    pub labels: Vec<f32>,
+    /// Task (selects the loss), copied from the dataset.
+    pub task: Task,
+}
+
+impl Shard {
+    /// Number of local rows.
+    #[inline]
+    pub fn nloc(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Fresh lane-blocked per-worker accumulator arenas for a model with
+    /// `k` factors: `g`/`acc_xw` are per-row, `aa`/`acc_a`/`acc_s2` are
+    /// `nloc x padded_k(k)` with the zero-padding invariant of
+    /// [`crate::kernel`].
+    pub fn arenas(&self, k: usize) -> ShardArenas {
+        let nloc = self.nloc();
+        let kp = padded_k(k);
+        ShardArenas {
+            g: vec![0f32; nloc],
+            aa: vec![0f32; nloc * kp],
+            acc_xw: vec![0f32; nloc],
+            acc_a: vec![0f32; nloc * kp],
+            acc_s2: vec![0f32; nloc * kp],
+        }
+    }
+}
+
+/// The per-worker auxiliary-variable arenas (paper's G and A plus the
+/// recompute-pass partial sums), lane-blocked.
+#[derive(Debug, Clone)]
+pub struct ShardArenas {
+    /// Loss multipliers G for the local rows.
+    pub g: Vec<f32>,
+    /// Factor-sum cache A, `nloc x kp` (padding lanes zero).
+    pub aa: Vec<f32>,
+    /// Linear partial sums (recompute pass).
+    pub acc_xw: Vec<f32>,
+    /// Factor partial sums, `nloc x kp`.
+    pub acc_a: Vec<f32>,
+    /// Squared factor partial sums, `nloc x kp`.
+    pub acc_s2: Vec<f32>,
+}
+
+/// Materializes every shard of `part` over `ds`, in parallel (one scoped
+/// thread per shard — the same build parallelism the trainers previously
+/// ran inline in their worker threads). Shards come back in shard order.
+pub fn build_shards(ds: &Dataset, part: &RowPartition) -> Vec<Shard> {
+    assert_eq!(
+        part.n_rows(),
+        ds.n(),
+        "partition covers {} rows, dataset has {}",
+        part.n_rows(),
+        ds.n()
+    );
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = part
+            .bounds()
+            .iter()
+            .enumerate()
+            .map(|(id, &(start, end))| {
+                scope.spawn(move || {
+                    let rows = ds.rows.slice_rows(start, end);
+                    let cols = rows.to_csc();
+                    Shard {
+                        id,
+                        start,
+                        end,
+                        rows,
+                        cols,
+                        labels: ds.labels[start..end].to_vec(),
+                        task: ds.task,
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("shard build panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::partition::RowStrategy;
+
+    #[test]
+    fn shards_tile_the_dataset() {
+        let ds = synth::table2_dataset("housing", 3).unwrap();
+        for strat in [RowStrategy::Contiguous, RowStrategy::NnzBalanced] {
+            let part = RowPartition::new(strat, &ds.rows, 4);
+            let shards = build_shards(&ds, &part);
+            assert_eq!(shards.len(), 4);
+            let mut total_rows = 0;
+            let mut total_nnz = 0;
+            for (b, sh) in shards.iter().enumerate() {
+                assert_eq!(sh.id, b);
+                assert_eq!((sh.start, sh.end), part.range(b));
+                assert_eq!(sh.rows.n_rows(), sh.nloc());
+                assert_eq!(sh.rows.n_cols(), ds.d());
+                assert_eq!(sh.cols.n_cols(), ds.d());
+                assert_eq!(sh.labels.len(), sh.nloc());
+                assert_eq!(sh.task, ds.task);
+                for r in 0..sh.nloc() {
+                    assert_eq!(sh.rows.row(r), ds.rows.row(sh.start + r));
+                    assert_eq!(sh.labels[r], ds.labels[sh.start + r]);
+                }
+                total_rows += sh.nloc();
+                total_nnz += sh.rows.nnz();
+            }
+            assert_eq!(total_rows, ds.n());
+            assert_eq!(total_nnz, ds.nnz());
+        }
+    }
+
+    #[test]
+    fn arenas_are_lane_blocked() {
+        let ds = synth::table2_dataset("housing", 4).unwrap();
+        let part = RowPartition::contiguous(ds.n(), 3);
+        let shards = build_shards(&ds, &part);
+        let a = shards[0].arenas(5); // kp = 8
+        let nloc = shards[0].nloc();
+        assert_eq!(a.g.len(), nloc);
+        assert_eq!(a.acc_xw.len(), nloc);
+        assert_eq!(a.aa.len(), nloc * 8);
+        assert_eq!(a.acc_a.len(), nloc * 8);
+        assert_eq!(a.acc_s2.len(), nloc * 8);
+        assert!(a.aa.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn empty_shards_are_fine() {
+        // More shards than rows: trailing shards are empty but valid.
+        let ds = synth::table2_dataset("housing", 5).unwrap();
+        let sub = ds.subset(&[0, 1, 2], "tiny");
+        let part = RowPartition::contiguous(3, 5);
+        let shards = build_shards(&sub, &part);
+        assert_eq!(shards.len(), 5);
+        assert_eq!(shards[4].nloc(), 0);
+        assert_eq!(shards[4].rows.nnz(), 0);
+        let a = shards[4].arenas(4);
+        assert!(a.g.is_empty() && a.aa.is_empty());
+    }
+}

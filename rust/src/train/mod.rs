@@ -82,6 +82,7 @@ use crate::data::Dataset;
 use crate::fm::FmModel;
 use crate::metrics::{evaluate, TracePoint, TrainOutput};
 use crate::nomad::EngineStats;
+use crate::partition::PartitionStats;
 
 /// What an observer tells the training session to do next.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -164,6 +165,13 @@ pub trait Trainer {
     fn stats(&self) -> Option<EngineStats> {
         None
     }
+
+    /// Row-shard load summary (per-shard nnz + imbalance ratio) of the
+    /// most recent [`fit`](Self::fit), for the trainers that shard rows
+    /// (nomad, dsgd, bulksync); `None` for the single-machine trainers.
+    fn partition_stats(&self) -> Option<PartitionStats> {
+        None
+    }
 }
 
 impl TrainerKind {
@@ -184,6 +192,7 @@ impl TrainerKind {
                     transport: cfg.transport,
                     update_mode: cfg.update_mode,
                     cols_per_token: cfg.cols_per_token,
+                    row_partition: cfg.row_partition,
                 },
             )),
             TrainerKind::Libfm => Box::new(LibfmTrainer::new(
@@ -204,6 +213,7 @@ impl TrainerKind {
                     workers: cfg.workers,
                     seed: cfg.seed,
                     eval_every: cfg.eval_every,
+                    row_partition: cfg.row_partition,
                 },
             )),
             TrainerKind::BulkSync => Box::new(BulkSyncTrainer::new(
@@ -214,6 +224,7 @@ impl TrainerKind {
                     workers: cfg.workers,
                     seed: cfg.seed,
                     eval_every: cfg.eval_every,
+                    row_partition: cfg.row_partition,
                 },
             )),
             TrainerKind::XlaDense => Box::new(XlaDenseTrainer::new(

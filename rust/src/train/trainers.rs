@@ -9,13 +9,15 @@
 use std::cell::RefCell;
 
 use crate::baseline::{
-    bulksync_train, dsgd_train, libfm_train, BulkSyncConfig, DsgdConfig, LibfmConfig,
+    bulksync_train_with_stats, dsgd_train_with_stats, libfm_train, BulkSyncConfig, DsgdConfig,
+    LibfmConfig,
 };
 use crate::data::Dataset;
 use crate::fm::{FmHyper, FmModel};
 use crate::metrics::TrainOutput;
 use crate::nomad::{self, EngineStats, NomadConfig};
 use crate::optim::LrSchedule;
+use crate::partition::PartitionStats;
 use crate::runtime::{artifact_name_for, Runtime};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -62,6 +64,10 @@ impl Trainer for NomadTrainer {
     fn stats(&self) -> Option<EngineStats> {
         self.stats.borrow().clone()
     }
+
+    fn partition_stats(&self) -> Option<PartitionStats> {
+        self.stats.borrow().as_ref().map(|s| s.partition.clone())
+    }
 }
 
 /// libFM-style single-machine SGD behind the session API.
@@ -94,16 +100,23 @@ impl Trainer for LibfmTrainer {
     }
 }
 
-/// Synchronous block-cyclic DSGD behind the session API.
+/// Synchronous block-cyclic DSGD behind the session API. Keeps the
+/// row-shard load summary of the most recent run for
+/// [`Trainer::partition_stats`].
 pub struct DsgdTrainer {
     fm: FmHyper,
     cfg: DsgdConfig,
+    partition: RefCell<Option<PartitionStats>>,
 }
 
 impl DsgdTrainer {
     /// A trainer for the given hyper-parameters and baseline config.
     pub fn new(fm: FmHyper, cfg: DsgdConfig) -> Self {
-        DsgdTrainer { fm, cfg }
+        DsgdTrainer {
+            fm,
+            cfg,
+            partition: RefCell::new(None),
+        }
     }
 }
 
@@ -118,22 +131,34 @@ impl Trainer for DsgdTrainer {
         test: Option<&Dataset>,
         observer: &mut dyn TrainObserver,
     ) -> crate::Result<TrainOutput> {
-        let out = dsgd_train(train, test, &self.fm, &self.cfg, observer);
+        let (out, pstats) = dsgd_train_with_stats(train, test, &self.fm, &self.cfg, observer);
+        *self.partition.borrow_mut() = Some(pstats);
         observer.on_done(&out);
         Ok(out)
     }
+
+    fn partition_stats(&self) -> Option<PartitionStats> {
+        self.partition.borrow().clone()
+    }
 }
 
-/// Bulk-synchronous full-gradient descent behind the session API.
+/// Bulk-synchronous full-gradient descent behind the session API. Keeps
+/// the row-shard load summary of the most recent run for
+/// [`Trainer::partition_stats`].
 pub struct BulkSyncTrainer {
     fm: FmHyper,
     cfg: BulkSyncConfig,
+    partition: RefCell<Option<PartitionStats>>,
 }
 
 impl BulkSyncTrainer {
     /// A trainer for the given hyper-parameters and baseline config.
     pub fn new(fm: FmHyper, cfg: BulkSyncConfig) -> Self {
-        BulkSyncTrainer { fm, cfg }
+        BulkSyncTrainer {
+            fm,
+            cfg,
+            partition: RefCell::new(None),
+        }
     }
 }
 
@@ -148,9 +173,14 @@ impl Trainer for BulkSyncTrainer {
         test: Option<&Dataset>,
         observer: &mut dyn TrainObserver,
     ) -> crate::Result<TrainOutput> {
-        let out = bulksync_train(train, test, &self.fm, &self.cfg, observer);
+        let (out, pstats) = bulksync_train_with_stats(train, test, &self.fm, &self.cfg, observer);
+        *self.partition.borrow_mut() = Some(pstats);
         observer.on_done(&out);
         Ok(out)
+    }
+
+    fn partition_stats(&self) -> Option<PartitionStats> {
+        self.partition.borrow().clone()
     }
 }
 

@@ -58,6 +58,7 @@ fn prop_token_conservation_and_accounting() {
                 transport: TransportKind::Local,
                 update_mode: dsfacto::nomad::UpdateMode::MeanGradient,
                 cols_per_token: 1,
+                ..Default::default()
             };
             let (out, stats) =
                 train_with_stats(ds, None, &fm, &cfg).map_err(|e| format!("{e:#}"))?;

@@ -1,0 +1,555 @@
+//! Property tests on the partition subsystem (`dsfacto::partition`) and
+//! its contract with the three distributed trainers:
+//!
+//! * structural invariants — every row / column covered exactly once
+//!   under both strategies, the nnz-balance bound, the `GridPlan`
+//!   stratum schedule;
+//! * **contiguous-default bitwise parity** — with
+//!   `row_partition = contiguous` DSGD and bulk-sync reproduce
+//!   pre-refactor reference implementations bit for bit (the NOMAD
+//!   engine's parity is pinned by
+//!   `engine_properties::padded_engine_matches_scalar_reference_bitwise`,
+//!   which replays the P = 1 schedule independently of the partition
+//!   layer; here we additionally pin that P = 1 balanced degenerates to
+//!   the identical single-shard run);
+//! * `row_partition = balanced` — convergence-quality properties on
+//!   nnz-skewed data, including the realsim synthetic twin.
+
+use dsfacto::baseline::bulksync::{partial_gradient_rows, GradBuf};
+use dsfacto::baseline::{
+    bulksync_train_with_stats, dsgd_train_with_stats, BulkSyncConfig, DsgdConfig,
+};
+use dsfacto::config::{DatasetSpec, ExperimentConfig, TrainerKind};
+use dsfacto::data::{synth, Dataset};
+use dsfacto::fm::{loss, FmHyper, FmModel};
+use dsfacto::kernel::{visit, FmKernel, Scratch};
+use dsfacto::nomad::{train_with_stats, NomadConfig};
+use dsfacto::optim::LrSchedule;
+use dsfacto::partition::{ColPartition, GridPlan, PartitionStats, RowPartition, RowStrategy};
+use dsfacto::train::Trainer;
+use dsfacto::util::prop::{forall_res, random_csr};
+use dsfacto::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------
+// Structural invariants.
+
+#[test]
+fn prop_every_row_in_exactly_one_shard() {
+    forall_res(
+        "both strategies tile the rows",
+        48,
+        |rng| {
+            let m = random_csr(rng, 48, 12);
+            let p = 1 + rng.below_usize(8);
+            (m, p)
+        },
+        |(m, p)| {
+            for strat in [RowStrategy::Contiguous, RowStrategy::NnzBalanced] {
+                let part = RowPartition::new(strat, m, *p);
+                part.validate().map_err(|e| format!("{strat:?}: {e:#}"))?;
+                let mut covered = 0usize;
+                for (b, &(s, e)) in part.bounds().iter().enumerate() {
+                    if b > 0 && part.bounds()[b - 1].1 != s {
+                        return Err(format!("{strat:?}: shard {b} not contiguous"));
+                    }
+                    covered += e - s;
+                }
+                if covered != m.n_rows() {
+                    return Err(format!("{strat:?}: covered {covered} of {}", m.n_rows()));
+                }
+                let nnz: usize = part.shard_nnz(m).iter().sum();
+                if nnz != m.nnz() {
+                    return Err(format!("{strat:?}: shard nnz sums to {nnz} != {}", m.nnz()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_balanced_max_shard_nnz_bounded_by_contiguous() {
+    forall_res(
+        "balanced max shard nnz <= contiguous max",
+        48,
+        |rng| {
+            let m = random_csr(rng, 48, 12);
+            let p = 1 + rng.below_usize(8);
+            (m, p)
+        },
+        |(m, p)| {
+            let max = |part: &RowPartition| part.shard_nnz(m).into_iter().max().unwrap_or(0);
+            let mc = max(&RowPartition::contiguous(m.n_rows(), *p));
+            let mb = max(&RowPartition::nnz_balanced(m, *p));
+            if mb > mc {
+                return Err(format!("balanced {mb} > contiguous {mc}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn grid_plan_covers_every_cell_once_per_epoch() {
+    // DSGD's grid (shards == blocks) plus ragged grids.
+    for (shards, blocks) in [(4usize, 4usize), (3, 3), (2, 5), (5, 2), (1, 1)] {
+        let plan = GridPlan::new(shards, blocks);
+        assert_eq!(plan.n_subepochs(), blocks);
+        let mut hits = vec![vec![0u32; blocks]; shards];
+        for sub in 0..plan.n_subepochs() {
+            let mut in_flight = vec![false; blocks];
+            for w in 0..shards {
+                let b = plan.block_for(w, sub);
+                hits[w][b] += 1;
+                // Block-diagonal within a sub-epoch (no two shards on the
+                // same block) whenever shards <= blocks — DSGD's case.
+                if shards <= blocks {
+                    assert!(!in_flight[b], "collision at sub {sub} block {b}");
+                    in_flight[b] = true;
+                }
+            }
+        }
+        for row in &hits {
+            assert!(row.iter().all(|&c| c == 1), "{shards}x{blocks}: {hits:?}");
+        }
+    }
+    // The column side tiles D exactly (absorbs dsgd's column_bounds and
+    // the engine's token blocks).
+    for (d, nb) in [(13usize, 4usize), (5, 8), (1, 1)] {
+        let cp = ColPartition::with_n_blocks(d, nb);
+        let mut covered = vec![0u32; d];
+        for b in 0..cp.n_blocks() {
+            let (lo, hi) = cp.block_range(b);
+            for cnt in &mut covered[lo..hi] {
+                *cnt += 1;
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1), "d={d} nb={nb}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Contiguous-default bitwise parity: pre-refactor references.
+
+/// The pre-refactor DSGD loop, replayed sequentially: contiguous row
+/// chunks, `column_bounds` blocks, exact G/A barrier per sub-epoch
+/// through the fused kernel (K-strided), per-column updates through the
+/// K-strided scalar oracle `visit::scalar::col_update` — byte-for-byte
+/// the operations `baseline::dsgd` ran before the partition layer.
+fn dsgd_reference(train: &Dataset, fm: &FmHyper, cfg: &DsgdConfig) -> FmModel {
+    let p = cfg.workers.max(1).min(train.d().max(1));
+    let n = train.n();
+    let d = train.d();
+    let k = fm.k;
+    let mut rng = Pcg64::new(cfg.seed, 0xd5fd);
+    let mut model = FmModel::init(d, k, fm.init_std, &mut rng);
+
+    let row_chunk = n.div_ceil(p);
+    let blocks: Vec<(usize, usize, dsfacto::data::Csc)> = (0..p)
+        .map(|b| {
+            let start = (b * row_chunk).min(n);
+            let end = ((b + 1) * row_chunk).min(n);
+            (start, end, train.rows.slice_rows(start, end).to_csc())
+        })
+        .collect();
+    let col_chunk = d.div_ceil(p);
+    let bounds: Vec<usize> = (0..=p).map(|b| (b * col_chunk).min(d)).collect();
+
+    for epoch in 0..cfg.epochs {
+        let eta = cfg.eta.at(epoch);
+        for sub in 0..p {
+            // Barrier: exact multipliers + factor sums of this iterate.
+            let kern = FmKernel::from_model(&model);
+            let mut scratch = Scratch::for_k(k);
+            let mut g_all = vec![0f32; n];
+            let mut a_all = vec![0f32; n * k];
+            for i in 0..n {
+                let (idx, val) = train.rows.row(i);
+                let ai = &mut a_all[i * k..(i + 1) * k];
+                let f = kern.score_with_sums(idx, val, ai, &mut scratch);
+                g_all[i] = loss::multiplier(f, train.labels[i], train.task);
+            }
+            // Block-diagonal updates against the frozen G/A.
+            let mut deltas = Vec::with_capacity(p);
+            let mut gv = vec![0f32; k];
+            for (wid, (start, end, cols)) in blocks.iter().enumerate() {
+                let cb = (wid + sub) % p;
+                let (lo, hi) = (bounds[cb], bounds[cb + 1]);
+                let mut w = model.w[lo..hi].to_vec();
+                let mut v = model.v[lo * k..hi * k].to_vec();
+                let h = visit::VisitHyper {
+                    eta,
+                    inv_n: 1.0 / n.max(1) as f32,
+                    lambda_w: fm.lambda_w,
+                    lambda_v: fm.lambda_v,
+                    reg_split: 1.0 / p.max(1) as f32,
+                };
+                for j in lo..hi {
+                    let (rows, xs) = cols.col(j);
+                    visit::scalar::col_update(
+                        rows,
+                        xs,
+                        &g_all[*start..*end],
+                        &a_all[start * k..end * k],
+                        k,
+                        &mut w[j - lo],
+                        &mut v[(j - lo) * k..(j - lo + 1) * k],
+                        h,
+                        &mut gv,
+                    );
+                }
+                let mut g_sum = 0f64;
+                for &gi in &g_all[*start..*end] {
+                    g_sum += gi as f64;
+                }
+                deltas.push((cb, w, v, g_sum, end - start));
+            }
+            let mut g_total = 0f64;
+            let mut rows_total = 0usize;
+            for (cb, w, v, g_sum, nr) in deltas {
+                let (lo, hi) = (bounds[cb], bounds[cb + 1]);
+                model.w[lo..hi].copy_from_slice(&w);
+                model.v[lo * k..hi * k].copy_from_slice(&v);
+                g_total += g_sum;
+                rows_total += nr;
+            }
+            if rows_total > 0 {
+                model.w0 -= eta * (g_total / rows_total as f64) as f32;
+            }
+        }
+    }
+    model
+}
+
+fn assert_models_bitwise(a: &FmModel, b: &FmModel, what: &str) {
+    assert_eq!(a.w0.to_bits(), b.w0.to_bits(), "{what}: w0");
+    for (j, (x, y)) in a.w.iter().zip(&b.w).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: w[{j}]");
+    }
+    for (q, (x, y)) in a.v.iter().zip(&b.v).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: v[{q}]");
+    }
+}
+
+#[test]
+fn dsgd_contiguous_matches_prerefactor_reference_bitwise() {
+    let ds = synth::table2_dataset("housing", 21).unwrap(); // d = 13
+    for &(k, workers) in &[(4usize, 3usize), (5, 4), (8, 1)] {
+        let fm = FmHyper {
+            k,
+            ..Default::default()
+        };
+        let cfg = DsgdConfig {
+            epochs: 4,
+            eta: LrSchedule::Constant(0.5),
+            workers,
+            seed: 77,
+            eval_every: usize::MAX,
+            row_partition: RowStrategy::Contiguous,
+        };
+        let (out, stats) = dsgd_train_with_stats(&ds, None, &fm, &cfg, &mut ());
+        let reference = dsgd_reference(&ds, &fm, &cfg);
+        assert_models_bitwise(&out.model, &reference, &format!("dsgd k={k} p={workers}"));
+        assert_eq!(stats.shard_nnz.iter().sum::<usize>(), ds.nnz());
+    }
+}
+
+/// The pre-refactor bulk-sync loop: row-major per-worker partial
+/// gradients over `n.div_ceil(workers)` chunks (the oracle
+/// `partial_gradient_rows`), merged in worker order, one deterministic
+/// step per iteration.
+fn bulksync_reference(train: &Dataset, fm: &FmHyper, cfg: &BulkSyncConfig) -> FmModel {
+    let workers = cfg.workers.max(1).min(train.n().max(1));
+    let mut rng = Pcg64::new(cfg.seed, 0xb51c);
+    let mut model = FmModel::init(train.d(), fm.k, fm.init_std, &mut rng);
+    let n = train.n();
+    let chunk = n.div_ceil(workers);
+    for t in 0..cfg.iters {
+        let kern = FmKernel::from_model(&model);
+        let mut total = GradBuf::zeros(model.d, model.k);
+        for p in 0..workers {
+            let start = (p * chunk).min(n);
+            let end = ((p + 1) * chunk).min(n);
+            total.merge(&partial_gradient_rows(&kern, train, start, end));
+        }
+        let lr = cfg.eta.at(t);
+        let inv_n = 1.0 / n as f64;
+        model.w0 -= lr * (total.g0 * inv_n) as f32;
+        for j in 0..model.d {
+            let g = (total.gw[j] * inv_n) as f32 + fm.lambda_w * model.w[j];
+            model.w[j] -= lr * g;
+        }
+        for q in 0..model.v.len() {
+            let g = (total.gv[q] * inv_n) as f32 + fm.lambda_v * model.v[q];
+            model.v[q] -= lr * g;
+        }
+    }
+    model
+}
+
+#[test]
+fn bulksync_contiguous_matches_prerefactor_reference_bitwise() {
+    let ds = synth::table2_dataset("housing", 31).unwrap();
+    for &(k, workers) in &[(4usize, 4usize), (7, 3), (2, 1)] {
+        let fm = FmHyper {
+            k,
+            ..Default::default()
+        };
+        let cfg = BulkSyncConfig {
+            iters: 5,
+            eta: LrSchedule::Constant(0.05),
+            workers,
+            seed: 13,
+            eval_every: usize::MAX,
+            row_partition: RowStrategy::Contiguous,
+        };
+        let (out, _) = bulksync_train_with_stats(&ds, None, &fm, &cfg, &mut ());
+        let reference = bulksync_reference(&ds, &fm, &cfg);
+        assert_models_bitwise(&out.model, &reference, &format!("bulksync k={k} p={workers}"));
+    }
+}
+
+#[test]
+fn nomad_single_worker_balanced_degenerates_to_contiguous_bitwise() {
+    // With P = 1 every strategy yields the same single shard, so the
+    // (deterministic) engine run must be bit-identical across strategies.
+    let ds = synth::table2_dataset("housing", 41).unwrap();
+    let fm = FmHyper {
+        k: 4,
+        ..Default::default()
+    };
+    let run = |strat| {
+        let cfg = NomadConfig {
+            workers: 1,
+            outer_iters: 4,
+            eta: LrSchedule::Constant(0.5),
+            seed: 7,
+            eval_every: usize::MAX,
+            cols_per_token: 3,
+            row_partition: strat,
+            ..Default::default()
+        };
+        train_with_stats(&ds, None, &fm, &cfg).unwrap().0.model
+    };
+    let cont = run(RowStrategy::Contiguous);
+    let bal = run(RowStrategy::NnzBalanced);
+    assert_models_bitwise(&cont, &bal, "nomad P=1");
+}
+
+// ---------------------------------------------------------------------
+// Balanced mode: quality properties on nnz-skewed data.
+
+/// Rows reordered by descending nnz: a front-loaded dataset on which the
+/// contiguous split is maximally imbalanced while the greedy prefix
+/// split equalizes.
+fn front_loaded(ds: &Dataset) -> Dataset {
+    let mut idx: Vec<usize> = (0..ds.n()).collect();
+    idx.sort_by_key(|&i| std::cmp::Reverse(ds.rows.row_nnz(i)));
+    ds.subset(&idx, "skewed")
+}
+
+fn mini_skewed() -> Dataset {
+    let spec = synth::SynthSpec {
+        name: "realsim-mini".into(),
+        task: dsfacto::data::Task::Classification,
+        n: 400,
+        d: 600,
+        k: 4,
+        density: 0.03,
+        factor_scale: 0.2,
+        noise: 0.4,
+        skew: 1.1,
+    };
+    front_loaded(&synth::generate(&spec, 4242).dataset)
+}
+
+#[test]
+fn balanced_reduces_imbalance_on_skewed_rows() {
+    let ds = mini_skewed();
+    let cont = PartitionStats::from_plan(&RowPartition::contiguous(ds.n(), 4), &ds.rows);
+    let bal = PartitionStats::from_plan(&RowPartition::nnz_balanced(&ds.rows, 4), &ds.rows);
+    assert!(bal.imbalance >= 1.0 - 1e-12);
+    assert!(
+        bal.imbalance <= cont.imbalance + 1e-12,
+        "balanced {} vs contiguous {}",
+        bal.imbalance,
+        cont.imbalance
+    );
+    // Front-loaded rows: contiguous must be measurably imbalanced and
+    // the greedy split must actually help (unless already perfect).
+    assert!(
+        bal.imbalance < cont.imbalance || (cont.imbalance - 1.0).abs() < 1e-6,
+        "balanced {} did not improve on contiguous {}",
+        bal.imbalance,
+        cont.imbalance
+    );
+}
+
+#[test]
+fn balanced_dsgd_reaches_contiguous_quality_on_skewed_rows() {
+    let ds = mini_skewed();
+    let fm = FmHyper {
+        k: 4,
+        ..Default::default()
+    };
+    let run = |strat| {
+        let cfg = DsgdConfig {
+            epochs: 15,
+            eta: LrSchedule::Constant(0.5),
+            workers: 4,
+            seed: 5,
+            eval_every: usize::MAX,
+            row_partition: strat,
+        };
+        dsgd_train_with_stats(&ds, None, &fm, &cfg, &mut ()).0
+    };
+    let cont = run(RowStrategy::Contiguous);
+    let bal = run(RowStrategy::NnzBalanced);
+    let (c0, c1) = (cont.trace[0].objective, cont.trace.last().unwrap().objective);
+    let (b0, b1) = (bal.trace[0].objective, bal.trace.last().unwrap().objective);
+    assert!(b1.is_finite() && b1 < 0.95 * b0, "balanced dsgd: {b0} -> {b1}");
+    assert!(c1 < 0.95 * c0, "contiguous dsgd: {c0} -> {c1}");
+    // Different stratum boundaries, same optimization problem: final
+    // quality must land in the same basin.
+    assert!(
+        (b1 - c1).abs() < 0.35 * c1.max(0.05),
+        "balanced {b1} vs contiguous {c1}"
+    );
+}
+
+#[test]
+fn balanced_bulksync_matches_contiguous_gradient() {
+    // Bulk-sync computes the exact batch gradient; the partition only
+    // changes f64 merge grouping, so results must agree very tightly.
+    let ds = mini_skewed();
+    let fm = FmHyper {
+        k: 4,
+        ..Default::default()
+    };
+    let run = |strat| {
+        let cfg = BulkSyncConfig {
+            iters: 10,
+            eta: LrSchedule::Constant(0.1),
+            workers: 4,
+            seed: 6,
+            eval_every: usize::MAX,
+            row_partition: strat,
+        };
+        bulksync_train_with_stats(&ds, None, &fm, &cfg, &mut ()).0
+    };
+    let cont = run(RowStrategy::Contiguous);
+    let bal = run(RowStrategy::NnzBalanced);
+    let (c, b) = (
+        cont.trace.last().unwrap().objective,
+        bal.trace.last().unwrap().objective,
+    );
+    assert!(c.is_finite() && b.is_finite());
+    assert!((c - b).abs() < 1e-4 * (1.0 + c.abs()), "{c} vs {b}");
+}
+
+#[test]
+fn balanced_nomad_reaches_contiguous_quality_on_skewed_rows() {
+    let ds = mini_skewed();
+    let fm = FmHyper {
+        k: 4,
+        ..Default::default()
+    };
+    let run = |strat| {
+        let cfg = NomadConfig {
+            workers: 4,
+            outer_iters: 15,
+            eta: LrSchedule::Constant(0.5),
+            seed: 9,
+            eval_every: usize::MAX,
+            row_partition: strat,
+            ..Default::default()
+        };
+        train_with_stats(&ds, None, &fm, &cfg).unwrap()
+    };
+    let (cont, cstats) = run(RowStrategy::Contiguous);
+    let (bal, bstats) = run(RowStrategy::NnzBalanced);
+    assert!(bstats.partition.imbalance <= cstats.partition.imbalance + 1e-12);
+    assert_eq!(bstats.partition.shard_nnz.iter().sum::<usize>(), ds.nnz());
+    let (c0, c1) = (cont.trace[0].objective, cont.trace.last().unwrap().objective);
+    let (b0, b1) = (bal.trace[0].objective, bal.trace.last().unwrap().objective);
+    assert!(c1 < 0.9 * c0, "contiguous nomad: {c0} -> {c1}");
+    assert!(b1.is_finite() && b1 < 0.9 * b0, "balanced nomad: {b0} -> {b1}");
+    assert!(
+        (b1 - c1).abs() < 0.35 * c1.max(0.05),
+        "balanced {b1} vs contiguous {c1}"
+    );
+}
+
+#[test]
+fn balanced_nomad_runs_on_realsim_twin() {
+    // The acceptance target: the skewed realsim synthetic twin (Zipf-1.1
+    // feature popularity, D = 20,958), shrunk to a testable row count.
+    let spec = synth::SynthSpec {
+        n: 1200,
+        ..synth::SynthSpec::table2("realsim").unwrap()
+    };
+    let ds = synth::generate(&spec, 99).dataset;
+    let fm = FmHyper {
+        k: 16,
+        init_std: 0.05,
+        ..Default::default()
+    };
+    let cfg = NomadConfig {
+        workers: 4,
+        outer_iters: 2,
+        eta: LrSchedule::Constant(0.5),
+        seed: 3,
+        eval_every: usize::MAX,
+        row_partition: RowStrategy::NnzBalanced,
+        ..Default::default()
+    };
+    let (out, stats) = train_with_stats(&ds, None, &fm, &cfg).unwrap();
+    assert_eq!(out.trace.len(), 3);
+    assert!(out.model.w0.is_finite());
+    assert!(out.model.v.iter().all(|x| x.is_finite()));
+    assert_eq!(stats.partition.shard_nnz.len(), 4);
+    assert_eq!(stats.partition.shard_nnz.iter().sum::<usize>(), ds.nnz());
+    assert!(stats.partition.imbalance >= 1.0 - 1e-12);
+    let cont = PartitionStats::from_plan(&RowPartition::contiguous(ds.n(), 4), &ds.rows);
+    assert!(stats.partition.imbalance <= cont.imbalance + 1e-12);
+}
+
+// ---------------------------------------------------------------------
+// Config / session-API wiring.
+
+#[test]
+fn row_partition_key_reaches_trainers() {
+    let ds = mini_skewed();
+    let mut cfg = ExperimentConfig {
+        dataset: DatasetSpec::Table2("housing".into()),
+        trainer: TrainerKind::Dsgd,
+        fm: FmHyper {
+            k: 4,
+            ..Default::default()
+        },
+        workers: 4,
+        outer_iters: 2,
+        eval_every: usize::MAX,
+        ..Default::default()
+    };
+    cfg.set("row_partition", "balanced").unwrap();
+    let back = ExperimentConfig::parse_str(&cfg.dump()).unwrap();
+    assert_eq!(back.row_partition, RowStrategy::NnzBalanced);
+
+    let expected = RowPartition::nnz_balanced(&ds.rows, 4).shard_nnz(&ds.rows);
+    for kind in [TrainerKind::Dsgd, TrainerKind::BulkSync, TrainerKind::Nomad] {
+        cfg.trainer = kind;
+        let trainer = cfg.trainer.build(&cfg);
+        assert!(trainer.partition_stats().is_none(), "{kind:?} before fit");
+        trainer.fit(&ds, None, &mut ()).unwrap();
+        let pstats = trainer
+            .partition_stats()
+            .unwrap_or_else(|| panic!("{kind:?} reports no partition stats"));
+        assert_eq!(pstats.shard_nnz, expected, "{kind:?}");
+    }
+    // Single-machine trainers have no row shards.
+    cfg.trainer = TrainerKind::Libfm;
+    let libfm = cfg.trainer.build(&cfg);
+    libfm.fit(&ds, None, &mut ()).unwrap();
+    assert!(libfm.partition_stats().is_none());
+}
