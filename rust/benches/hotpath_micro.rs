@@ -463,6 +463,66 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    section("out-of-core data layer: ingest throughput + resident shard bytes");
+    // Same Zipf-skewed realsim twin, written once as LIBSVM text; the two
+    // ingest paths read identical bytes. `memory` = the full in-RAM parse
+    // (libsvm::parse), `stream` = the bounded-memory shard-cache ingester
+    // (EXPERIMENTS.md §Data). Derived values: rows/sec in the value slot.
+    let tmp = std::env::temp_dir().join("dsfacto_bench_ingest");
+    std::fs::create_dir_all(&tmp)?;
+    let svm_path = tmp.join("realsim-2k.svm");
+    dsfacto::data::libsvm::save(&sparse, &svm_path)?;
+    let text = std::fs::read_to_string(&svm_path)?;
+    let sw = dsfacto::util::timer::Stopwatch::start();
+    let parsed = dsfacto::data::libsvm::parse(
+        &text,
+        "realsim-2k",
+        sparse.task,
+        Some(sparse.d()),
+    )?;
+    let mem_secs = sw.secs();
+    let mem_rows_per_sec = parsed.n() as f64 / mem_secs.max(1e-9);
+    drop(text);
+    let cache_dir = tmp.join("cache");
+    std::fs::remove_dir_all(&cache_dir).ok();
+    let ingest_opts = dsfacto::data::libsvm::IngestOptions {
+        task: sparse.task,
+        n_features: Some(sparse.d()),
+        strategy: dsfacto::partition::RowStrategy::Contiguous,
+        shards: 8,
+        chunk_rows: 512,
+    };
+    let sw = dsfacto::util::timer::Stopwatch::start();
+    let ingest = dsfacto::data::libsvm::stream_ingest(
+        &svm_path,
+        "realsim-2k",
+        &ingest_opts,
+        &cache_dir,
+    )?;
+    let stream_secs = sw.secs();
+    let stream_rows_per_sec = ingest.n as f64 / stream_secs.max(1e-9);
+    // Resident bytes: the full CSR + labels every trainer used to hold,
+    // vs the largest transient the cache path ever holds (one shard).
+    let full_bytes = 8 * (parsed.n() + 1) + 8 * parsed.nnz() + 4 * parsed.n();
+    println!(
+        "  ingest: memory {mem_rows_per_sec:.0} rows/s, stream {stream_rows_per_sec:.0} rows/s \
+         ({} chunks); resident full {full_bytes} B vs cache peak {} B ({:.1}x smaller)",
+        ingest.chunks_flushed,
+        ingest.peak_resident_bytes,
+        full_bytes as f64 / ingest.peak_resident_bytes.max(1) as f64,
+    );
+    report.record_value("ingest rows_per_sec memory (realsim-2k)", mem_rows_per_sec);
+    report.record_value(
+        "ingest rows_per_sec stream (realsim-2k P=8)",
+        stream_rows_per_sec,
+    );
+    report.record_value("resident shard_bytes full (realsim-2k)", full_bytes as f64);
+    report.record_value(
+        "resident shard_bytes cache (realsim-2k P=8)",
+        ingest.peak_resident_bytes as f64,
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+
     report.write(&json_path)?;
     println!("\nwrote {json_path} ({} entries)", report.entries.len());
     Ok(())

@@ -6,10 +6,13 @@
 //! computed on row shards by scoped threads), then take one deterministic
 //! gradient step (eqs. 6-8).
 //!
-//! Row shards come from [`crate::partition`] ([`RowPartition`] +
-//! [`build_shards`]) — which also fixes the old hand-rolled chunking's
-//! unclamped `start = p * chunk` (an inverted range whenever `workers`
-//! did not divide `n`). The per-shard gradient is computed column-major
+//! Row shards come from [`crate::partition`]
+//! ([`crate::partition::RowPartition`] planned and materialized through
+//! the [`crate::data::DataSource`] seam — in-memory slices by default,
+//! per-worker shard-cache files under `data_cache = <dir>`) — which also
+//! fixes the old hand-rolled chunking's unclamped `start = p * chunk` (an
+//! inverted range whenever `workers` did not divide `n`). The per-shard
+//! gradient is computed column-major
 //! through the lane-blocked [`visit::col_grad`] fold over the shard's
 //! CSC: for a fixed column both orders add the same f64 terms in the same
 //! (ascending-row) sequence, so [`partial_gradient`] is **bitwise
@@ -19,12 +22,12 @@
 //!
 //! The session-facing entry point is [`crate::train::BulkSyncTrainer`].
 
-use crate::data::Dataset;
+use crate::data::{Dataset, ShardSource};
 use crate::fm::{loss, FmHyper, FmModel};
 use crate::kernel::{visit, FmKernel, Scratch};
 use crate::metrics::TrainOutput;
 use crate::optim::LrSchedule;
-use crate::partition::{build_shards, PartitionStats, RowPartition, RowStrategy, Shard};
+use crate::partition::{build_shards_from_source, PartitionStats, RowStrategy, Shard};
 use crate::train::{Probe, TrainObserver};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -45,6 +48,9 @@ pub struct BulkSyncConfig {
     pub eval_every: usize,
     /// Row-shard strategy (contiguous = legacy default).
     pub row_partition: RowStrategy,
+    /// Where workers pull their row shards from (in-memory slices by
+    /// default; a shard cache under `data_cache = <dir>`).
+    pub source: ShardSource,
 }
 
 impl Default for BulkSyncConfig {
@@ -56,6 +62,7 @@ impl Default for BulkSyncConfig {
             seed: 42,
             eval_every: 1,
             row_partition: RowStrategy::Contiguous,
+            source: ShardSource::InMemory,
         }
     }
 }
@@ -189,8 +196,8 @@ pub fn bulksync_train(
     fm: &FmHyper,
     cfg: &BulkSyncConfig,
     obs: &mut dyn TrainObserver,
-) -> TrainOutput {
-    bulksync_train_with_stats(train, test, fm, cfg, obs).0
+) -> crate::Result<TrainOutput> {
+    Ok(bulksync_train_with_stats(train, test, fm, cfg, obs)?.0)
 }
 
 /// Like [`bulksync_train`], also returning the row-shard load summary.
@@ -200,16 +207,20 @@ pub fn bulksync_train_with_stats(
     fm: &FmHyper,
     cfg: &BulkSyncConfig,
     obs: &mut dyn TrainObserver,
-) -> (TrainOutput, PartitionStats) {
+) -> crate::Result<(TrainOutput, PartitionStats)> {
     let workers = cfg.workers.max(1).min(train.n().max(1));
     let mut rng = Pcg64::new(cfg.seed, 0xb51c);
     let mut model = FmModel::init(train.d(), fm.k, fm.init_std, &mut rng);
     let mut probe = Probe::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
 
-    // Row shards, built once (CSR slice + CSC per worker).
-    let row_plan = RowPartition::new(cfg.row_partition, &train.rows, workers);
+    // Row shards, built once (CSR slice + CSC per worker), pulled through
+    // the data seam (in-memory by default — bit-identical to the legacy
+    // slice build; shard-cache files when configured).
+    let resolved = cfg.source.resolve(train)?;
+    let source = resolved.as_dyn();
+    let row_plan = source.plan(cfg.row_partition, workers)?;
     let pstats = PartitionStats::from_plan(&row_plan, &train.rows);
-    let shards = build_shards(train, &row_plan);
+    let shards = build_shards_from_source(source, &row_plan)?;
     // Per-worker G / lane-blocked A scratch, grown on the first iteration
     // and reused for the rest of the run.
     let mut aux: Vec<(Vec<f32>, Vec<f32>)> =
@@ -263,20 +274,21 @@ pub fn bulksync_train_with_stats(
         sw.lap();
     }
 
-    (
+    Ok((
         TrainOutput {
             model,
             trace: probe.into_trace(),
             wall_secs: clock,
         },
         pstats,
-    )
+    ))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth;
+    use crate::partition::{build_shards, RowPartition};
 
     #[test]
     fn full_gradient_descends_monotonically() {
@@ -294,7 +306,7 @@ mod tests {
             seed: 2,
             ..Default::default()
         };
-        let out = bulksync_train(&ds, None, &fm, &cfg, &mut ());
+        let out = bulksync_train(&ds, None, &fm, &cfg, &mut ()).unwrap();
         let objs: Vec<f64> = out.trace.iter().map(|p| p.objective).collect();
         for w in objs.windows(2) {
             assert!(
@@ -316,8 +328,8 @@ mod tests {
             seed: 7,
             ..Default::default()
         };
-        let one = bulksync_train(&ds, None, &fm, &cfg(1), &mut ());
-        let four = bulksync_train(&ds, None, &fm, &cfg(4), &mut ());
+        let one = bulksync_train(&ds, None, &fm, &cfg(1), &mut ()).unwrap();
+        let four = bulksync_train(&ds, None, &fm, &cfg(4), &mut ()).unwrap();
         // The reduce is order-deterministic but f64 summation differs by
         // block boundaries; results must agree to tight tolerance.
         for (a, b) in one.model.w.iter().zip(&four.model.w) {
@@ -393,7 +405,7 @@ mod tests {
             seed: 3,
             ..Default::default()
         };
-        let (out, stats) = bulksync_train_with_stats(&five, None, &fm, &cfg, &mut ());
+        let (out, stats) = bulksync_train_with_stats(&five, None, &fm, &cfg, &mut ()).unwrap();
         assert_eq!(stats.shard_nnz.len(), 4);
         assert_eq!(stats.shard_nnz.iter().sum::<usize>(), five.nnz());
         assert_eq!(out.trace.len(), 9);

@@ -11,9 +11,13 @@
 //! bulk synchronization whose cost DS-FACTO's incremental scheme removes).
 //!
 //! The (row x column) grid comes from [`crate::partition`]: row shards
-//! through [`RowPartition`] (contiguous by default; nnz-balanced via
-//! [`DsgdConfig::row_partition`]) materialized by [`build_shards`], column
-//! blocks through [`ColPartition`]. The per-column update runs on the
+//! through a [`crate::partition::RowPartition`] (contiguous by default;
+//! nnz-balanced via
+//! [`DsgdConfig::row_partition`]) materialized through the
+//! [`crate::data::DataSource`] seam ([`DsgdConfig::source`]; in-memory
+//! slices by default, per-worker shard-cache files under
+//! `data_cache = <dir>`), column blocks through [`ColPartition`]. The
+//! per-column update runs on the
 //! lane-blocked [`kernel::visit::col_update`](crate::kernel::visit::col_update)
 //! kernel over a `kp`-strided auxiliary cache — the same hot path as the
 //! NOMAD engine's update visits, with identical per-coordinate operation
@@ -23,13 +27,13 @@
 //!
 //! The session-facing entry point is [`crate::train::DsgdTrainer`].
 
-use crate::data::Dataset;
+use crate::data::{Dataset, ShardSource};
 use crate::fm::{loss, FmHyper, FmModel};
 use crate::kernel::{padded_k, visit, FmKernel, Scratch};
 use crate::metrics::TrainOutput;
 use crate::optim::LrSchedule;
 use crate::partition::{
-    build_shards, ColPartition, GridPlan, PartitionStats, RowPartition, RowStrategy, Shard,
+    build_shards_from_source, ColPartition, GridPlan, PartitionStats, RowStrategy, Shard,
 };
 use crate::train::{Probe, TrainObserver};
 use crate::util::rng::Pcg64;
@@ -45,6 +49,9 @@ pub struct DsgdConfig {
     pub eval_every: usize,
     /// Row-shard strategy (contiguous = legacy default).
     pub row_partition: RowStrategy,
+    /// Where workers pull their row shards from (in-memory slices by
+    /// default; a shard cache under `data_cache = <dir>`).
+    pub source: ShardSource,
 }
 
 impl Default for DsgdConfig {
@@ -58,6 +65,7 @@ impl Default for DsgdConfig {
             seed: 42,
             eval_every: 1,
             row_partition: RowStrategy::Contiguous,
+            source: ShardSource::InMemory,
         }
     }
 }
@@ -101,8 +109,8 @@ pub fn dsgd_train(
     fm: &FmHyper,
     cfg: &DsgdConfig,
     obs: &mut dyn TrainObserver,
-) -> TrainOutput {
-    dsgd_train_with_stats(train, test, fm, cfg, obs).0
+) -> crate::Result<TrainOutput> {
+    Ok(dsgd_train_with_stats(train, test, fm, cfg, obs)?.0)
 }
 
 /// Like [`dsgd_train`], also returning the row-shard load summary.
@@ -112,7 +120,7 @@ pub fn dsgd_train_with_stats(
     fm: &FmHyper,
     cfg: &DsgdConfig,
     obs: &mut dyn TrainObserver,
-) -> (TrainOutput, PartitionStats) {
+) -> crate::Result<(TrainOutput, PartitionStats)> {
     let p = cfg.workers.max(1).min(train.d().max(1));
     let n = train.n();
     let d = train.d();
@@ -122,10 +130,14 @@ pub fn dsgd_train_with_stats(
     let mut model = FmModel::init(d, k, fm.init_std, &mut rng);
     let mut probe = Probe::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
 
-    // The (row-shard x column-block) grid, built once.
-    let row_plan = RowPartition::new(cfg.row_partition, &train.rows, p);
+    // The (row-shard x column-block) grid, built once, with the shards
+    // pulled through the data seam (in-memory by default — bit-identical
+    // to the legacy slice build; shard-cache files when configured).
+    let resolved = cfg.source.resolve(train)?;
+    let source = resolved.as_dyn();
+    let row_plan = source.plan(cfg.row_partition, p)?;
     let pstats = PartitionStats::from_plan(&row_plan, &train.rows);
-    let shards = build_shards(train, &row_plan);
+    let shards = build_shards_from_source(source, &row_plan)?;
     let col_plan = ColPartition::with_n_blocks(d, p);
     let plan = GridPlan::new(p, col_plan.n_blocks());
 
@@ -189,14 +201,14 @@ pub fn dsgd_train_with_stats(
         sw.lap();
     }
 
-    (
+    Ok((
         TrainOutput {
             model,
             trace: probe.into_trace(),
             wall_secs: clock,
         },
         pstats,
-    )
+    ))
 }
 
 /// Exact G (multipliers) and lane-blocked A (factor sums, `n x kp` with
@@ -320,6 +332,7 @@ fn update_block(
 mod tests {
     use super::*;
     use crate::data::synth;
+    use crate::partition::{build_shards, RowPartition};
 
     #[test]
     fn aux_matches_sequential() {
@@ -359,7 +372,7 @@ mod tests {
             workers: 4,
             ..Default::default()
         };
-        let out = dsgd_train(&ds, None, &fm, &cfg, &mut ());
+        let out = dsgd_train(&ds, None, &fm, &cfg, &mut ()).unwrap();
         let first = out.trace.first().unwrap().objective;
         let last = out.trace.last().unwrap().objective;
         assert!(last < 0.5 * first, "{first} -> {last}");
@@ -379,7 +392,7 @@ mod tests {
             workers: 4,
             ..Default::default()
         };
-        let out = dsgd_train(&train, Some(&test), &fm, &cfg, &mut ());
+        let out = dsgd_train(&train, Some(&test), &fm, &cfg, &mut ()).unwrap();
         let acc = out.trace.last().unwrap().test.unwrap().accuracy;
         assert!(acc > 0.6, "accuracy {acc}");
     }
@@ -394,7 +407,7 @@ mod tests {
             eta: LrSchedule::Constant(0.5),
             ..Default::default()
         };
-        let out = dsgd_train(&ds, None, &fm, &cfg, &mut ());
+        let out = dsgd_train(&ds, None, &fm, &cfg, &mut ()).unwrap();
         assert!(out.trace.last().unwrap().objective < 0.7 * out.trace[0].objective);
     }
 
@@ -410,7 +423,7 @@ mod tests {
             workers: 4,
             ..Default::default()
         };
-        let (_, stats) = dsgd_train_with_stats(&ds, None, &fm, &cfg, &mut ());
+        let (_, stats) = dsgd_train_with_stats(&ds, None, &fm, &cfg, &mut ()).unwrap();
         assert_eq!(stats.shard_nnz.len(), 4);
         assert_eq!(stats.shard_nnz.iter().sum::<usize>(), ds.nnz());
         assert!(stats.imbalance >= 1.0 - 1e-12);

@@ -96,13 +96,20 @@ pub enum DatasetSpec {
         task: Task,
         n_features: Option<usize>,
     },
+    /// A binary shard-cache directory written by `dsfacto ingest`
+    /// ([`crate::data::libsvm::stream_ingest`]); config spelling
+    /// `cache:<dir>`. Shape, task and name come from the manifest.
+    Cache {
+        dir: String,
+    },
 }
 
 impl DatasetSpec {
     /// Loads / generates the dataset. File datasets are named by the file
     /// *stem* (not the full path), so `runtime::artifact_name_for` — and
     /// anything else keyed on the dataset name — stays stable no matter
-    /// which directory the file lives in.
+    /// which directory the file lives in. Cache datasets materialize from
+    /// the shard files and carry the name recorded at ingest.
     pub fn load(&self, seed: u64) -> Result<crate::data::Dataset> {
         match self {
             DatasetSpec::Table2(name) => crate::data::synth::table2_dataset(name, seed),
@@ -117,16 +124,30 @@ impl DatasetSpec {
                     .unwrap_or(path.as_str());
                 crate::data::libsvm::load(path, name, *task, *n_features)
             }
+            DatasetSpec::Cache { dir } => {
+                use crate::data::DataSource;
+                crate::data::ShardCacheSource::open(dir)?.materialize()
+            }
         }
     }
 
-    /// The dataset's display name: the Table-2 name, or a file dataset's
-    /// config spelling (the path, so [`ExperimentConfig::dump`]
-    /// round-trips).
+    /// The dataset's display name: the Table-2 name, or a file/cache
+    /// dataset's path.
     pub fn name(&self) -> &str {
         match self {
             DatasetSpec::Table2(name) => name,
             DatasetSpec::File { path, .. } => path,
+            DatasetSpec::Cache { dir } => dir,
+        }
+    }
+
+    /// The config spelling (the `dataset =` value), so
+    /// [`ExperimentConfig::dump`] round-trips every variant.
+    pub fn spec(&self) -> String {
+        match self {
+            DatasetSpec::Table2(name) => name.clone(),
+            DatasetSpec::File { path, .. } => path.clone(),
+            DatasetSpec::Cache { dir } => format!("cache:{dir}"),
         }
     }
 }
@@ -168,6 +189,12 @@ pub struct ExperimentConfig {
     /// bulksync): `contiguous` (equal row counts; the default) or
     /// `balanced` (equal per-shard nnz on row-skewed data).
     pub row_partition: RowStrategy,
+    /// Shard-cache directory for the distributed trainers: when set, each
+    /// worker loads its row shard from the cache's per-shard files (the
+    /// out-of-core path) instead of slicing the in-memory training set.
+    /// The cache must have been ingested for exactly the training rows
+    /// and the same `row_partition`/`workers` plan.
+    pub data_cache: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -189,6 +216,7 @@ impl Default for ExperimentConfig {
             update_mode: UpdateMode::MeanGradient,
             cols_per_token: 0,
             row_partition: RowStrategy::Contiguous,
+            data_cache: None,
         }
     }
 }
@@ -198,7 +226,11 @@ impl ExperimentConfig {
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
             "dataset" => {
-                self.dataset = if value.contains('/') || value.ends_with(".svm") {
+                self.dataset = if let Some(dir) = value.strip_prefix("cache:") {
+                    DatasetSpec::Cache {
+                        dir: dir.to_string(),
+                    }
+                } else if value.contains('/') || value.ends_with(".svm") {
                     DatasetSpec::File {
                         path: value.to_string(),
                         task: Task::Classification,
@@ -235,6 +267,7 @@ impl ExperimentConfig {
                 self.cols_per_token = value.parse().context("cols_per_token")?
             }
             "row_partition" => self.row_partition = RowStrategy::parse(value)?,
+            "data_cache" => self.data_cache = Some(value.to_string()),
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -267,7 +300,7 @@ impl ExperimentConfig {
     /// Key=value dump (round-trips through [`parse_str`](Self::parse_str)).
     pub fn dump(&self) -> String {
         let mut kv: BTreeMap<&str, String> = BTreeMap::new();
-        kv.insert("dataset", self.dataset.name().to_string());
+        kv.insert("dataset", self.dataset.spec());
         if let DatasetSpec::File { task, .. } = &self.dataset {
             kv.insert("dataset_task", task.name().to_string());
         }
@@ -295,6 +328,9 @@ impl ExperimentConfig {
         kv.insert("update_mode", self.update_mode.spec());
         kv.insert("cols_per_token", self.cols_per_token.to_string());
         kv.insert("row_partition", self.row_partition.spec().to_string());
+        if let Some(dir) = &self.data_cache {
+            kv.insert("data_cache", dir.clone());
+        }
         kv.into_iter()
             .map(|(k, v)| format!("{k} = {v}"))
             .collect::<Vec<_>>()
@@ -405,6 +441,41 @@ mod tests {
         cfg.set("dataset_task", "regression").unwrap();
         let back = ExperimentConfig::parse_str(&cfg.dump()).unwrap();
         assert_eq!(back.dataset, cfg.dataset);
+    }
+
+    #[test]
+    fn dump_roundtrips_cache_dataset_and_data_cache_key() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("dataset", "cache:/tmp/crit/train").unwrap();
+        cfg.set("data_cache", "/tmp/crit/train").unwrap();
+        match &cfg.dataset {
+            DatasetSpec::Cache { dir } => assert_eq!(dir, "/tmp/crit/train"),
+            other => panic!("{other:?}"),
+        }
+        let back = ExperimentConfig::parse_str(&cfg.dump()).unwrap();
+        assert_eq!(back.dataset, cfg.dataset);
+        assert_eq!(back.data_cache.as_deref(), Some("/tmp/crit/train"));
+        // Absent by default, and absent from the default dump.
+        assert_eq!(ExperimentConfig::default().data_cache, None);
+        assert!(!ExperimentConfig::default().dump().contains("data_cache"));
+        // dataset_task applies to file datasets only; a cache carries its
+        // task in the manifest.
+        assert!(cfg.set("dataset_task", "regression").is_err());
+    }
+
+    #[test]
+    fn cache_dataset_spec_loads_from_manifest() {
+        let dir = std::env::temp_dir().join("dsfacto_cfg_cache_test");
+        let ds = crate::data::synth::table2_dataset("housing", 23).unwrap();
+        crate::data::cache::write_cache(&ds, RowStrategy::Contiguous, 2, &dir).unwrap();
+        let spec = DatasetSpec::Cache {
+            dir: dir.to_str().unwrap().to_string(),
+        };
+        let loaded = spec.load(1).unwrap();
+        assert_eq!(loaded.name, "housing");
+        assert_eq!(loaded.rows, ds.rows);
+        assert_eq!(loaded.labels, ds.labels);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -32,9 +32,21 @@ pub struct RunSummary {
 }
 
 /// Runs one experiment end to end.
+///
+/// `train_frac >= 1` keeps the whole dataset as the training set **in its
+/// original row order** (empty test set) instead of taking a shuffled
+/// full-size split. This is what a shard cache requires: cached shard
+/// files were cut on the ingested row order, so a permuted training set
+/// would silently train on different shards than the probe evaluates —
+/// the pre-split + `train_frac = 1` flow keeps both views identical.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunSummary> {
     let ds = cfg.dataset.load(cfg.seed).context("load dataset")?;
-    let (train, test) = ds.split(cfg.train_frac, cfg.seed.wrapping_add(1));
+    let (train, test) = if cfg.train_frac >= 1.0 {
+        let test = ds.subset(&[], "test");
+        (ds, test)
+    } else {
+        ds.split(cfg.train_frac, cfg.seed.wrapping_add(1))
+    };
     run_on(cfg, train, test)
 }
 

@@ -1,0 +1,758 @@
+//! The versioned binary shard cache: the on-disk format behind
+//! [`ShardCacheSource`].
+//!
+//! A cache is a directory written by
+//! [`crate::data::libsvm::stream_ingest`] (or [`write_cache`] from an
+//! in-memory dataset):
+//!
+//! ```text
+//! <dir>/manifest.dsfc     header + dataset shape + row partition + per-shard records
+//! <dir>/shard_00000.dsfs  shard 0: labels + local CSR segments
+//! <dir>/shard_00001.dsfs  ...one file per shard of the cached RowPartition
+//! ```
+//!
+//! All integers and floats are **little-endian**; floats are stored as
+//! their IEEE-754 bit patterns, so a cache round-trip is bit-exact.
+//! Layouts (EXPERIMENTS.md §Data documents the same tables):
+//!
+//! * **Manifest**: magic `"DSFC"`, version `u32`, `n`/`d`/`nnz` as `u64`,
+//!   task `u8` (0 = regression, 1 = classification), row strategy `u8`
+//!   (0 = contiguous, 1 = balanced), shard count `p` as `u64`, dataset
+//!   name (`u32` length + UTF-8 bytes), then `p` shard records of
+//!   `start`/`end`/`nnz`/`file hash` (each `u64`), and a trailing `u64`
+//!   FNV-1a hash over every preceding manifest byte. Truncation, trailing
+//!   bytes, bit flips and version skew are all rejected at
+//!   [`ShardCacheSource::open`].
+//! * **Shard file**: magic `"DSFS"`, version `u32`, `id`/`start`/`end`/
+//!   `d`/`nnz` as `u64`, task `u8`, then the segments: labels
+//!   (`nloc x f32`), local `indptr` (`(nloc+1) x u64`, `indptr[0] = 0`),
+//!   column indices (`nnz x u32`), values (`nnz x f32`). The manifest
+//!   records each file's FNV-1a hash, so shard corruption is caught at
+//!   load time even when the header still parses.
+//!
+//! The reader holds at most **one shard file** in memory at a time
+//! (`materialize` streams shard by shard); nothing in this module ever
+//! allocates the full-dataset CSR while serving shards — that is the
+//! out-of-core contract the `DataSource` seam exists for.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::partition::{RowPartition, RowStrategy, Shard};
+
+use super::source::DataSource;
+use super::{Csr, Dataset, Task};
+
+/// On-disk format version (bump on any layout change).
+pub const CACHE_VERSION: u32 = 1;
+/// Manifest file name inside a cache directory.
+pub const MANIFEST_FILE: &str = "manifest.dsfc";
+
+const MANIFEST_MAGIC: [u8; 4] = *b"DSFC";
+const SHARD_MAGIC: [u8; 4] = *b"DSFS";
+
+/// Shard `id`'s file name inside a cache directory.
+pub fn shard_file_name(id: usize) -> String {
+    format!("shard_{id:05}.dsfs")
+}
+
+/// FNV-1a 64-bit hash (the cache's corruption check; no crates, `std`
+/// only, deterministic across platforms).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn task_byte(task: Task) -> u8 {
+    match task {
+        Task::Regression => 0,
+        Task::Classification => 1,
+    }
+}
+
+fn task_from_byte(b: u8) -> Result<Task> {
+    match b {
+        0 => Ok(Task::Regression),
+        1 => Ok(Task::Classification),
+        other => bail!("unknown task byte {other}"),
+    }
+}
+
+fn strategy_byte(s: RowStrategy) -> u8 {
+    match s {
+        RowStrategy::Contiguous => 0,
+        RowStrategy::NnzBalanced => 1,
+    }
+}
+
+fn strategy_from_byte(b: u8) -> Result<RowStrategy> {
+    match b {
+        0 => Ok(RowStrategy::Contiguous),
+        1 => Ok(RowStrategy::NnzBalanced),
+        other => bail!("unknown row-strategy byte {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Little-endian slice reader (exact-length, no std::io churn).
+
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Rd { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.buf.len(),
+            "truncated: need {} bytes at offset {}, file has {}",
+            n,
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize64(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).context("64-bit count overflows usize")
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "{} trailing bytes after the last segment",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32(out: &mut Vec<u8>, v: f32) {
+    push_u32(out, v.to_bits());
+}
+
+// ---------------------------------------------------------------------
+// Writer.
+
+/// One shard's data, ready to serialize (borrowed from the ingester's
+/// per-shard assembly buffers or from an in-memory dataset slice).
+pub struct ShardPayload<'a> {
+    /// Shard id (position in the partition).
+    pub id: usize,
+    /// Global row range `[start, end)`.
+    pub start: usize,
+    /// Exclusive end of the global row range.
+    pub end: usize,
+    /// Total feature count D.
+    pub d: usize,
+    /// Task (copied into every shard header for self-description).
+    pub task: Task,
+    /// Labels, length `end - start`.
+    pub labels: &'a [f32],
+    /// Local CSR row pointers, length `end - start + 1`, `indptr[0] = 0`.
+    pub indptr: &'a [usize],
+    /// Column indices, length `indptr[last]`.
+    pub indices: &'a [u32],
+    /// Values, same length as `indices`.
+    pub values: &'a [f32],
+}
+
+impl ShardPayload<'_> {
+    /// Serialized size in bytes (header + segments).
+    pub fn byte_len(&self) -> usize {
+        4 + 4 + 5 * 8 + 1 + 4 * self.labels.len() + 8 * self.indptr.len() + 8 * self.indices.len()
+    }
+}
+
+/// Writes one shard file; returns the file's FNV-1a hash (recorded in the
+/// manifest). The file bytes are assembled in one shard-sized buffer —
+/// the only allocation is proportional to this shard, never the dataset.
+pub fn write_shard(dir: &Path, payload: &ShardPayload<'_>) -> Result<u64> {
+    let nloc = payload.end - payload.start;
+    ensure!(payload.labels.len() == nloc, "shard labels length mismatch");
+    ensure!(payload.indptr.len() == nloc + 1, "shard indptr length mismatch");
+    ensure!(
+        payload.indices.len() == payload.values.len()
+            && payload.indices.len() == *payload.indptr.last().unwrap_or(&0),
+        "shard indices/values/indptr mismatch"
+    );
+    let mut out = Vec::with_capacity(payload.byte_len());
+    out.extend_from_slice(&SHARD_MAGIC);
+    push_u32(&mut out, CACHE_VERSION);
+    push_u64(&mut out, payload.id as u64);
+    push_u64(&mut out, payload.start as u64);
+    push_u64(&mut out, payload.end as u64);
+    push_u64(&mut out, payload.d as u64);
+    push_u64(&mut out, payload.indices.len() as u64);
+    out.push(task_byte(payload.task));
+    for &y in payload.labels {
+        push_f32(&mut out, y);
+    }
+    for &p in payload.indptr {
+        push_u64(&mut out, p as u64);
+    }
+    for &j in payload.indices {
+        push_u32(&mut out, j);
+    }
+    for &x in payload.values {
+        push_f32(&mut out, x);
+    }
+    let hash = fnv1a(&out);
+    let path = dir.join(shard_file_name(payload.id));
+    std::fs::write(&path, &out).with_context(|| format!("write {}", path.display()))?;
+    Ok(hash)
+}
+
+/// Per-shard manifest record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardRecord {
+    /// Global row range start.
+    pub start: usize,
+    /// Global row range end (exclusive).
+    pub end: usize,
+    /// Stored non-zeros in the shard.
+    pub nnz: usize,
+    /// FNV-1a hash of the shard file's bytes.
+    pub hash: u64,
+}
+
+/// The decoded manifest: dataset shape + the row partition the shards
+/// were cut on.
+#[derive(Debug, Clone)]
+pub struct CacheManifest {
+    /// Number of examples.
+    pub n: usize,
+    /// Number of features.
+    pub d: usize,
+    /// Total stored non-zeros.
+    pub nnz: usize,
+    /// Prediction task.
+    pub task: Task,
+    /// Dataset name (traces, artifact lookup).
+    pub name: String,
+    /// The partition the shard files were cut on.
+    pub partition: RowPartition,
+    /// Per-shard records, in shard order.
+    pub shards: Vec<ShardRecord>,
+}
+
+/// Writes the manifest for a fully written cache. Call this **last**: a
+/// directory without a (valid) manifest is not a cache, so an interrupted
+/// ingest can never be opened as one.
+pub fn write_manifest(
+    dir: &Path,
+    name: &str,
+    d: usize,
+    task: Task,
+    partition: &RowPartition,
+    shards: &[ShardRecord],
+) -> Result<()> {
+    ensure!(
+        shards.len() == partition.n_shards(),
+        "manifest has {} shard records for {} shards",
+        shards.len(),
+        partition.n_shards()
+    );
+    let nnz: usize = shards.iter().map(|s| s.nnz).sum();
+    let mut out = Vec::new();
+    out.extend_from_slice(&MANIFEST_MAGIC);
+    push_u32(&mut out, CACHE_VERSION);
+    push_u64(&mut out, partition.n_rows() as u64);
+    push_u64(&mut out, d as u64);
+    push_u64(&mut out, nnz as u64);
+    out.push(task_byte(task));
+    out.push(strategy_byte(partition.strategy()));
+    push_u64(&mut out, partition.n_shards() as u64);
+    push_u32(&mut out, name.len() as u32);
+    out.extend_from_slice(name.as_bytes());
+    for rec in shards {
+        push_u64(&mut out, rec.start as u64);
+        push_u64(&mut out, rec.end as u64);
+        push_u64(&mut out, rec.nnz as u64);
+        push_u64(&mut out, rec.hash);
+    }
+    let footer = fnv1a(&out);
+    push_u64(&mut out, footer);
+    let path = dir.join(MANIFEST_FILE);
+    std::fs::write(&path, &out).with_context(|| format!("write {}", path.display()))?;
+    Ok(())
+}
+
+/// Writes a complete cache from an in-memory dataset (tests, and the
+/// `dsfacto ingest` path for data already loaded). The streaming ingester
+/// ([`crate::data::libsvm::stream_ingest`]) produces byte-identical
+/// caches without ever holding the full CSR; this helper is the
+/// small-data convenience over the same [`write_shard`]/
+/// [`write_manifest`] primitives.
+pub fn write_cache(ds: &Dataset, strategy: RowStrategy, shards: usize, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+    // Remove any stale manifest first so a half-rewritten directory can
+    // never be opened against old shard files.
+    let _ = std::fs::remove_file(dir.join(MANIFEST_FILE));
+    let part = RowPartition::new(strategy, &ds.rows, shards);
+    let mut records = Vec::with_capacity(part.n_shards());
+    for (id, &(start, end)) in part.bounds().iter().enumerate() {
+        let local = ds.rows.slice_rows(start, end);
+        let (indptr, indices, values) = local.raw_parts();
+        let payload = ShardPayload {
+            id,
+            start,
+            end,
+            d: ds.d(),
+            task: ds.task,
+            labels: &ds.labels[start..end],
+            indptr,
+            indices,
+            values,
+        };
+        let hash = write_shard(dir, &payload)?;
+        records.push(ShardRecord {
+            start,
+            end,
+            nnz: indices.len(),
+            hash,
+        });
+    }
+    write_manifest(dir, &ds.name, ds.d(), ds.task, &part, &records)
+}
+
+// ---------------------------------------------------------------------
+// Reader.
+
+/// One shard's decoded segments (no CSC yet).
+struct RawShard {
+    start: usize,
+    end: usize,
+    labels: Vec<f32>,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+/// A [`DataSource`] over a shard-cache directory. Opening reads and
+/// verifies the manifest only; each [`DataSource::shard`] call reads
+/// exactly one shard file (hash-checked against the manifest), so peak
+/// resident data per worker is one shard — never the full CSR.
+#[derive(Debug)]
+pub struct ShardCacheSource {
+    dir: PathBuf,
+    manifest: CacheManifest,
+    /// Largest single shard-file read so far, in bytes (the bounded-memory
+    /// instrumentation the ingest tests assert on).
+    peak_load_bytes: AtomicU64,
+}
+
+impl ShardCacheSource {
+    /// Opens a cache directory, reading and verifying the manifest
+    /// (magic, version, footer hash, partition invariants).
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<ShardCacheSource> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join(MANIFEST_FILE);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("open shard cache manifest {}", path.display()))?;
+        let manifest = decode_manifest(&bytes)
+            .with_context(|| format!("decode shard cache manifest {}", path.display()))?;
+        Ok(ShardCacheSource {
+            dir,
+            manifest,
+            peak_load_bytes: AtomicU64::new(0),
+        })
+    }
+
+    /// The decoded manifest.
+    pub fn manifest(&self) -> &CacheManifest {
+        &self.manifest
+    }
+
+    /// Largest single shard file read through this source so far, in
+    /// bytes (0 until the first load). Because shards are read one file
+    /// at a time, this is also the peak resident *cache* memory of any
+    /// shard load.
+    pub fn peak_load_bytes(&self) -> u64 {
+        self.peak_load_bytes.load(Ordering::Relaxed)
+    }
+
+    /// The serialized size of the largest shard, from the manifest alone
+    /// (what a worker will transiently hold; compare against the full
+    /// CSR's footprint for the out-of-core win).
+    pub fn max_shard_file_bytes(&self) -> usize {
+        self.manifest
+            .shards
+            .iter()
+            .map(|r| shard_file_len(r.end - r.start, r.nnz))
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn load_shard_raw(&self, id: usize) -> Result<RawShard> {
+        let rec = self
+            .manifest
+            .shards
+            .get(id)
+            .with_context(|| format!("shard {id} out of range ({} shards)", self.manifest.shards.len()))?;
+        let path = self.dir.join(shard_file_name(id));
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("read shard file {}", path.display()))?;
+        self.peak_load_bytes
+            .fetch_max(bytes.len() as u64, Ordering::Relaxed);
+        decode_shard(&bytes, id, rec, self.manifest.d, self.manifest.task)
+            .with_context(|| format!("decode shard file {}", path.display()))
+    }
+}
+
+/// Exact byte length of a shard file with `nloc` rows and `nnz` stored
+/// entries.
+fn shard_file_len(nloc: usize, nnz: usize) -> usize {
+    4 + 4 + 5 * 8 + 1 + 4 * nloc + 8 * (nloc + 1) + 8 * nnz
+}
+
+fn decode_manifest(bytes: &[u8]) -> Result<CacheManifest> {
+    ensure!(bytes.len() >= 8 + 8, "manifest shorter than its footer");
+    let (body, footer) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(footer.try_into().unwrap());
+    ensure!(
+        fnv1a(body) == want,
+        "manifest hash mismatch (corrupt or torn write)"
+    );
+    let mut rd = Rd::new(body);
+    let magic = rd.take(4)?;
+    ensure!(magic == &MANIFEST_MAGIC[..], "bad manifest magic {magic:02x?}");
+    let version = rd.u32()?;
+    ensure!(
+        version == CACHE_VERSION,
+        "cache version {version}, this build reads version {CACHE_VERSION} — re-ingest"
+    );
+    let n = rd.usize64()?;
+    let d = rd.usize64()?;
+    let nnz = rd.usize64()?;
+    let task = task_from_byte(rd.u8()?)?;
+    let strategy = strategy_from_byte(rd.u8()?)?;
+    let p = rd.usize64()?;
+    let name_len = rd.u32()? as usize;
+    let name = std::str::from_utf8(rd.take(name_len)?)
+        .context("dataset name is not UTF-8")?
+        .to_string();
+    // Bound the record count by the bytes actually present before
+    // allocating: FNV is not cryptographic, so a crafted count with a
+    // recomputed footer must still fail as an *error*, not an
+    // allocation abort.
+    ensure!(
+        p <= rd.remaining() / 32,
+        "manifest claims {p} shards but only {} bytes of records follow",
+        rd.remaining()
+    );
+    let mut bounds = Vec::with_capacity(p);
+    let mut shards = Vec::with_capacity(p);
+    for _ in 0..p {
+        let start = rd.usize64()?;
+        let end = rd.usize64()?;
+        let snnz = rd.usize64()?;
+        let hash = rd.u64()?;
+        bounds.push((start, end));
+        shards.push(ShardRecord {
+            start,
+            end,
+            nnz: snnz,
+            hash,
+        });
+    }
+    rd.done()?;
+    let partition = RowPartition::from_bounds(strategy, n, bounds)?;
+    let total: usize = shards.iter().map(|s| s.nnz).sum();
+    ensure!(
+        total == nnz,
+        "manifest nnz {nnz} != sum of shard nnz {total}"
+    );
+    Ok(CacheManifest {
+        n,
+        d,
+        nnz,
+        task,
+        name,
+        partition,
+        shards,
+    })
+}
+
+fn decode_shard(bytes: &[u8], id: usize, rec: &ShardRecord, d: usize, task: Task) -> Result<RawShard> {
+    let nloc = rec.end - rec.start;
+    ensure!(
+        bytes.len() == shard_file_len(nloc, rec.nnz),
+        "shard file is {} bytes, manifest implies {}",
+        bytes.len(),
+        shard_file_len(nloc, rec.nnz)
+    );
+    ensure!(
+        fnv1a(bytes) == rec.hash,
+        "shard file hash mismatch (corrupt or stale shard)"
+    );
+    let mut rd = Rd::new(bytes);
+    let magic = rd.take(4)?;
+    ensure!(magic == &SHARD_MAGIC[..], "bad shard magic {magic:02x?}");
+    let version = rd.u32()?;
+    ensure!(
+        version == CACHE_VERSION,
+        "shard version {version}, this build reads version {CACHE_VERSION}"
+    );
+    let hdr_id = rd.usize64()?;
+    let start = rd.usize64()?;
+    let end = rd.usize64()?;
+    let hdr_d = rd.usize64()?;
+    let nnz = rd.usize64()?;
+    let hdr_task = task_from_byte(rd.u8()?)?;
+    ensure!(hdr_id == id, "shard header id {hdr_id}, expected {id}");
+    ensure!(
+        (start, end) == (rec.start, rec.end),
+        "shard header range {start}..{end}, manifest says {}..{}",
+        rec.start,
+        rec.end
+    );
+    ensure!(hdr_d == d, "shard header d {hdr_d}, manifest says {d}");
+    ensure!(nnz == rec.nnz, "shard header nnz {nnz}, manifest says {}", rec.nnz);
+    ensure!(hdr_task == task, "shard header task differs from manifest");
+    // Bulk segment decode: the exact-length check above already bounds
+    // every segment (so `nloc`/`nnz`-sized reserves are backed by real
+    // file bytes), and chunked conversion avoids a bounds check + error
+    // path per element on the per-worker load hot path.
+    let mut labels = Vec::with_capacity(nloc);
+    for ch in rd.take(4 * nloc)?.chunks_exact(4) {
+        labels.push(f32::from_le_bytes(ch.try_into().unwrap()));
+    }
+    let mut indptr = Vec::with_capacity(nloc + 1);
+    for ch in rd.take(8 * (nloc + 1))?.chunks_exact(8) {
+        let q = u64::from_le_bytes(ch.try_into().unwrap());
+        indptr.push(usize::try_from(q).context("indptr entry overflows usize")?);
+    }
+    let mut indices = Vec::with_capacity(nnz);
+    for ch in rd.take(4 * nnz)?.chunks_exact(4) {
+        indices.push(u32::from_le_bytes(ch.try_into().unwrap()));
+    }
+    let mut values = Vec::with_capacity(nnz);
+    for ch in rd.take(4 * nnz)?.chunks_exact(4) {
+        values.push(f32::from_le_bytes(ch.try_into().unwrap()));
+    }
+    rd.done()?;
+    Ok(RawShard {
+        start,
+        end,
+        labels,
+        indptr,
+        indices,
+        values,
+    })
+}
+
+impl DataSource for ShardCacheSource {
+    fn name(&self) -> &str {
+        &self.manifest.name
+    }
+
+    fn n(&self) -> usize {
+        self.manifest.n
+    }
+
+    fn d(&self) -> usize {
+        self.manifest.d
+    }
+
+    fn nnz(&self) -> usize {
+        self.manifest.nnz
+    }
+
+    fn task(&self) -> Task {
+        self.manifest.task
+    }
+
+    fn plan(&self, strategy: RowStrategy, p: usize) -> Result<RowPartition> {
+        ensure!(
+            strategy == self.manifest.partition.strategy()
+                && p == self.manifest.partition.n_shards(),
+            "shard cache at {} was ingested as row_partition = {} with {} shards; \
+             this run asked for {} with {p} — re-ingest with the matching plan",
+            self.dir.display(),
+            self.manifest.partition.strategy().spec(),
+            self.manifest.partition.n_shards(),
+            strategy.spec()
+        );
+        Ok(self.manifest.partition.clone())
+    }
+
+    fn shard(&self, part: &RowPartition, id: usize) -> Result<Shard> {
+        ensure!(
+            *part == self.manifest.partition,
+            "requested partition differs from the cached one (plan through this source)"
+        );
+        let raw = self.load_shard_raw(id)?;
+        let nloc = raw.end - raw.start;
+        let rows = Csr::try_new(nloc, self.manifest.d, raw.indptr, raw.indices, raw.values)?;
+        let cols = rows.to_csc();
+        Ok(Shard {
+            id,
+            start: raw.start,
+            end: raw.end,
+            rows,
+            cols,
+            labels: raw.labels,
+            task: self.manifest.task,
+        })
+    }
+
+    fn materialize(&self) -> Result<Dataset> {
+        // Deliberately no manifest-sized pre-allocation: n/nnz come from
+        // the (forgeable-footer) manifest, and reserving from them before
+        // any shard file has corroborated the sizes would turn a crafted
+        // manifest into an allocation abort instead of a load error. The
+        // vectors grow amortized as verified shard bytes arrive.
+        let mut labels = Vec::new();
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for id in 0..self.manifest.shards.len() {
+            let raw = self.load_shard_raw(id)?;
+            ensure!(
+                raw.start == labels.len(),
+                "shard {id} starts at {} after {} concatenated rows",
+                raw.start,
+                labels.len()
+            );
+            let base = values.len();
+            // Local indptr is 0-based; re-base onto the concatenation.
+            indptr.extend(raw.indptr[1..].iter().map(|&q| base + q));
+            indices.extend_from_slice(&raw.indices);
+            values.extend_from_slice(&raw.values);
+            labels.extend_from_slice(&raw.labels);
+        }
+        let rows = Csr::try_new(self.manifest.n, self.manifest.d, indptr, indices, values)?;
+        let ds = Dataset {
+            name: self.manifest.name.clone(),
+            task: self.manifest.task,
+            rows,
+            labels,
+        };
+        ds.validate()?;
+        Ok(ds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::source::InMemorySource;
+    use crate::data::synth;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dsfacto_cache_unit_{tag}"))
+    }
+
+    #[test]
+    fn cache_roundtrips_dataset_and_shards_bitwise() {
+        let ds = synth::table2_dataset("housing", 11).unwrap();
+        for strat in [RowStrategy::Contiguous, RowStrategy::NnzBalanced] {
+            let dir = tmp(&format!("rt_{}", strat.spec()));
+            write_cache(&ds, strat, 3, &dir).unwrap();
+            let src = ShardCacheSource::open(&dir).unwrap();
+            assert_eq!(src.n(), ds.n());
+            assert_eq!(src.d(), ds.d());
+            assert_eq!(src.nnz(), ds.nnz());
+            assert_eq!(src.task(), ds.task);
+            assert_eq!(src.name(), ds.name);
+            let part = src.plan(strat, 3).unwrap();
+            let mem = InMemorySource::new(&ds);
+            assert_eq!(part, mem.plan(strat, 3).unwrap());
+            for id in 0..3 {
+                let got = src.shard(&part, id).unwrap();
+                let want = mem.shard(&part, id).unwrap();
+                assert_eq!(got.rows, want.rows, "{strat:?} shard {id}");
+                assert_eq!(got.cols, want.cols);
+                assert_eq!(got.labels, want.labels);
+                assert_eq!((got.start, got.end, got.task), (want.start, want.end, want.task));
+            }
+            let back = src.materialize().unwrap();
+            assert_eq!(back.rows, ds.rows);
+            assert_eq!(back.labels, ds.labels);
+            assert_eq!(back.name, ds.name);
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn plan_mismatch_is_rejected() {
+        let ds = synth::table2_dataset("housing", 12).unwrap();
+        let dir = tmp("plan");
+        write_cache(&ds, RowStrategy::Contiguous, 4, &dir).unwrap();
+        let src = ShardCacheSource::open(&dir).unwrap();
+        assert!(src.plan(RowStrategy::Contiguous, 4).is_ok());
+        assert!(src.plan(RowStrategy::Contiguous, 3).is_err());
+        assert!(src.plan(RowStrategy::NnzBalanced, 4).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_dataset_caches_cleanly() {
+        let ds = Dataset {
+            name: "empty".into(),
+            task: Task::Regression,
+            rows: Csr::empty(0, 0),
+            labels: Vec::new(),
+        };
+        let dir = tmp("empty");
+        write_cache(&ds, RowStrategy::Contiguous, 3, &dir).unwrap();
+        let src = ShardCacheSource::open(&dir).unwrap();
+        assert_eq!(src.n(), 0);
+        assert_eq!(src.nnz(), 0);
+        let back = src.materialize().unwrap();
+        assert_eq!(back.n(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn peak_load_tracks_largest_shard_file() {
+        let ds = synth::table2_dataset("housing", 13).unwrap();
+        let dir = tmp("peak");
+        write_cache(&ds, RowStrategy::Contiguous, 4, &dir).unwrap();
+        let src = ShardCacheSource::open(&dir).unwrap();
+        assert_eq!(src.peak_load_bytes(), 0);
+        let part = src.plan(RowStrategy::Contiguous, 4).unwrap();
+        for id in 0..4 {
+            src.shard(&part, id).unwrap();
+        }
+        assert_eq!(src.peak_load_bytes() as usize, src.max_shard_file_bytes());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,17 +1,121 @@
-//! LIBSVM / SVMlight format reader and writer.
+//! LIBSVM / SVMlight format reader, writer, and the streaming out-of-core
+//! ingester.
 //!
 //! Format: one example per line, `label idx:val idx:val ...` with 1-based
 //! (conventional) or 0-based indices — auto-detected. Lines starting with
-//! `#` and blank lines are skipped. This is the loader that accepts the
-//! paper's real datasets (diabetes, housing, ijcnn1, realsim) when the user
-//! has the files; the synthetic twins are used otherwise.
+//! `#` and blank lines are skipped. [`parse`]/[`load`] materialize a full
+//! in-memory [`Dataset`]; [`stream_ingest`] converts the same format into
+//! a binary shard cache ([`crate::data::cache`]) in one bounded-memory
+//! pass, so criteo-scale files never need to fit in RAM. Both paths share
+//! one line parser ([`parse_example`] internally) and one
+//! index-convention resolver, so a streamed cache is **bit-identical** to
+//! the parsed dataset.
+//!
+//! ## The bounded-memory ingest contract
+//!
+//! `stream_ingest` holds, at any instant, at most:
+//!
+//! 1. one parse chunk (`IngestOptions::chunk_rows` rows of labels +
+//!    indices + values) while scanning the text,
+//! 2. the cumulative row-nnz prefix (`8 * (n + 1)` bytes — the only O(n)
+//!    structure, and the input to the shared nnz-balanced planner), and
+//! 3. one shard's assembly buffers (+ its serialized image) while writing
+//!    shard files — i.e. `max_shard`, the paper's per-worker budget.
+//!
+//! It never builds the full CSR. The text is read **once**; parsed rows
+//! go to a temporary binary row log (deleted on success) that is then
+//! split into shard files along the plan computed from the nnz prefix.
+//! [`IngestReport`] carries the instrumentation (`chunks_flushed`,
+//! `peak_chunk_bytes`, `peak_shard_bytes`, `peak_resident_bytes`) the
+//! out-of-core tests and the `hotpath_micro` bench assert on.
 
-use std::io::{BufReader, BufWriter, Write};
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use crate::partition::{RowPartition, RowStrategy};
+
+use super::cache::{self, ShardPayload, ShardRecord};
 use super::{Csr, Dataset, Task};
+
+/// Parses one LIBSVM line into `idx`/`val` (cleared first). Returns
+/// `Ok(None)` for blank and comment lines, else the label. Indices are
+/// the raw file indices, strictly increasing within the row — the caller
+/// applies the 1-based shift once the whole input's index range is known.
+/// This is the one line parser behind both [`parse`] and
+/// [`stream_ingest`], so the two paths accept and reject identical
+/// inputs and produce identical f32 bits.
+fn parse_example(
+    line: &str,
+    lineno: usize,
+    idx: &mut Vec<u32>,
+    val: &mut Vec<f32>,
+) -> Result<Option<f32>> {
+    idx.clear();
+    val.clear();
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let label_tok = parts.next().unwrap();
+    let label: f32 = label_tok
+        .parse()
+        .with_context(|| format!("line {}: bad label {label_tok:?}", lineno + 1))?;
+    let mut last_idx: i64 = -1;
+    for tok in parts {
+        if tok.starts_with('#') {
+            break; // trailing comment
+        }
+        let (i_str, v_str) = tok
+            .split_once(':')
+            .with_context(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
+        let index: i64 = i_str
+            .parse()
+            .with_context(|| format!("line {}: bad index {i_str:?}", lineno + 1))?;
+        let value: f32 = v_str
+            .parse()
+            .with_context(|| format!("line {}: bad value {v_str:?}", lineno + 1))?;
+        if index < 0 {
+            bail!("line {}: negative feature index {index}", lineno + 1);
+        }
+        if index > u32::MAX as i64 {
+            // The CSR stores u32 columns; silently wrapping would alias a
+            // low feature while max_idx (i64) blows up the inferred d.
+            bail!("line {}: feature index {index} exceeds u32::MAX", lineno + 1);
+        }
+        if index <= last_idx {
+            bail!("line {}: indices not strictly increasing", lineno + 1);
+        }
+        last_idx = index;
+        idx.push(index as u32);
+        val.push(value);
+    }
+    Ok(Some(label))
+}
+
+/// Resolves the 1-based-vs-0-based convention and the dimensionality from
+/// the global raw-index range (shared by [`parse`] and [`stream_ingest`]
+/// so both decide identically). Returns `(one_based, d)`.
+fn resolve_dims(min_idx: i64, max_idx: i64, n_features: Option<usize>) -> Result<(bool, usize)> {
+    // 1-based (LIBSVM convention) vs 0-based: if no zero index ever
+    // appears, assume 1-based and shift down.
+    let one_based = min_idx >= 1 && max_idx >= 1;
+    let max_idx = if one_based { max_idx - 1 } else { max_idx };
+    let inferred_d = (max_idx + 1).max(0) as usize;
+    let d = match n_features {
+        Some(d) => {
+            if d < inferred_d {
+                bail!("n_features {d} < max feature index {inferred_d}");
+            }
+            d
+        }
+        None => inferred_d,
+    };
+    Ok((one_based, d))
+}
 
 /// Parses LIBSVM text into a [`Dataset`].
 ///
@@ -24,67 +128,29 @@ pub fn parse(text: &str, name: &str, task: Task, n_features: Option<usize>) -> R
     let mut values: Vec<f32> = Vec::new();
     let mut max_idx: i64 = -1;
     let mut min_idx: i64 = i64::MAX;
+    let mut row_idx: Vec<u32> = Vec::new();
+    let mut row_val: Vec<f32> = Vec::new();
 
     for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        let Some(label) = parse_example(line, lineno, &mut row_idx, &mut row_val)? else {
             continue;
-        }
-        let mut parts = line.split_whitespace();
-        let label_tok = parts.next().unwrap();
-        let label: f32 = label_tok
-            .parse()
-            .with_context(|| format!("line {}: bad label {label_tok:?}", lineno + 1))?;
+        };
         labels.push(label);
-
-        let mut last_idx: i64 = -1;
-        for tok in parts {
-            if tok.starts_with('#') {
-                break; // trailing comment
-            }
-            let (i_str, v_str) = tok
-                .split_once(':')
-                .with_context(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
-            let idx: i64 = i_str
-                .parse()
-                .with_context(|| format!("line {}: bad index {i_str:?}", lineno + 1))?;
-            let val: f32 = v_str
-                .parse()
-                .with_context(|| format!("line {}: bad value {v_str:?}", lineno + 1))?;
-            if idx < 0 {
-                bail!("line {}: negative feature index {idx}", lineno + 1);
-            }
-            if idx <= last_idx {
-                bail!("line {}: indices not strictly increasing", lineno + 1);
-            }
-            last_idx = idx;
-            max_idx = max_idx.max(idx);
-            min_idx = min_idx.min(idx);
-            indices.push(idx as u32);
-            values.push(val);
+        for &j in row_idx.iter() {
+            max_idx = max_idx.max(j as i64);
+            min_idx = min_idx.min(j as i64);
         }
+        indices.extend_from_slice(&row_idx);
+        values.extend_from_slice(&row_val);
         indptr.push(indices.len());
     }
 
-    // 1-based (LIBSVM convention) vs 0-based: if no zero index ever appears,
-    // assume 1-based and shift down.
-    let one_based = min_idx >= 1 && max_idx >= 1;
+    let (one_based, d) = resolve_dims(min_idx, max_idx, n_features)?;
     if one_based {
         for i in indices.iter_mut() {
             *i -= 1;
         }
-        max_idx -= 1;
     }
-    let inferred_d = (max_idx + 1).max(0) as usize;
-    let d = match n_features {
-        Some(d) => {
-            if d < inferred_d {
-                bail!("n_features {d} < max feature index {inferred_d}");
-            }
-            d
-        }
-        None => inferred_d,
-    };
 
     let n = labels.len();
     let ds = Dataset {
@@ -97,7 +163,8 @@ pub fn parse(text: &str, name: &str, task: Task, n_features: Option<usize>) -> R
     Ok(ds)
 }
 
-/// Loads a LIBSVM file from disk.
+/// Loads a LIBSVM file from disk (fully in memory; for data that does not
+/// fit, see [`stream_ingest`]).
 pub fn load<P: AsRef<Path>>(
     path: P,
     name: &str,
@@ -110,8 +177,6 @@ pub fn load<P: AsRef<Path>>(
     BufReader::new(file).read_to_string(&mut text)?;
     parse(&text, name, task, n_features)
 }
-
-use std::io::Read;
 
 /// Writes a dataset in LIBSVM format (1-based indices).
 pub fn save<P: AsRef<Path>>(ds: &Dataset, path: P) -> Result<()> {
@@ -131,9 +196,315 @@ pub fn save<P: AsRef<Path>>(ds: &Dataset, path: P) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// Streaming ingest.
+
+/// Options for [`stream_ingest`].
+#[derive(Debug, Clone)]
+pub struct IngestOptions {
+    /// Prediction task (classification labels are validated to +/-1
+    /// during the parse pass, like [`Dataset::validate`]).
+    pub task: Task,
+    /// Forced dimensionality (`None` infers it from the max index).
+    pub n_features: Option<usize>,
+    /// Row-shard strategy baked into the cache (contiguous or
+    /// nnz-balanced; bit-identical to the in-memory planners).
+    pub strategy: RowStrategy,
+    /// Shard count P (= worker count the cache will serve).
+    pub shards: usize,
+    /// Rows parsed per in-memory chunk before flushing to the row log
+    /// (the pass-A memory bound).
+    pub chunk_rows: usize,
+}
+
+impl Default for IngestOptions {
+    fn default() -> Self {
+        IngestOptions {
+            task: Task::Classification,
+            n_features: None,
+            strategy: RowStrategy::Contiguous,
+            shards: 4,
+            chunk_rows: 4096,
+        }
+    }
+}
+
+/// What one [`stream_ingest`] run did: the resolved dataset shape plus
+/// the bounded-memory instrumentation (peaks of every transient buffer
+/// the ingester holds), so tests and benches can assert the full CSR was
+/// never resident.
+#[derive(Debug, Clone, Default)]
+pub struct IngestReport {
+    /// Examples ingested.
+    pub n: usize,
+    /// Resolved dimensionality.
+    pub d: usize,
+    /// Total stored non-zeros.
+    pub nnz: usize,
+    /// Whether the file used 1-based indices.
+    pub one_based: bool,
+    /// Parse chunks flushed to the row log (>= 2 proves streaming).
+    pub chunks_flushed: usize,
+    /// Largest chunk, in rows.
+    pub peak_chunk_rows: usize,
+    /// Largest chunk, in buffer bytes (labels + indptr + indices + values).
+    pub peak_chunk_bytes: usize,
+    /// Largest shard assembled while writing the cache, in serialized
+    /// bytes (header + labels + CSR segments) — the `max_shard` budget.
+    pub peak_shard_bytes: usize,
+    /// Bytes of the cumulative row-nnz prefix (`8 * (n + 1)`), the one
+    /// O(n) structure.
+    pub prefix_bytes: usize,
+    /// Peak transient memory bound: `prefix + max(chunk, 2 * shard)` —
+    /// pass A holds one chunk; pass B holds one shard's assembly buffers
+    /// *plus* its serialized image (~`peak_shard_bytes` each) while
+    /// [`crate::data::cache::write_shard`] runs; never both passes at
+    /// once.
+    pub peak_resident_bytes: usize,
+}
+
+/// Streams a LIBSVM file into a binary shard cache at `cache_dir` (see
+/// the module docs for the memory contract and
+/// [`crate::data::ShardCacheSource`] for the reader). The cache is
+/// bit-identical to `parse` + [`crate::data::cache::write_cache`] on the
+/// same file.
+pub fn stream_ingest<P: AsRef<Path>, Q: AsRef<Path>>(
+    path: P,
+    name: &str,
+    opts: &IngestOptions,
+    cache_dir: Q,
+) -> Result<IngestReport> {
+    let file = File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    stream_ingest_from(BufReader::new(file), name, opts, cache_dir)
+}
+
+/// [`stream_ingest`] over any buffered reader (tests feed strings through
+/// `std::io::Cursor`).
+pub fn stream_ingest_from<R: BufRead, Q: AsRef<Path>>(
+    mut reader: R,
+    name: &str,
+    opts: &IngestOptions,
+    cache_dir: Q,
+) -> Result<IngestReport> {
+    let dir = cache_dir.as_ref();
+    std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+    // A stale manifest must never pair with fresh shard files: remove it
+    // first, write the new one last.
+    let _ = std::fs::remove_file(dir.join(cache::MANIFEST_FILE));
+    let rowlog_path = dir.join("rowlog.tmp");
+    // The row log can be as large as the dataset; make sure it goes away
+    // on *every* exit path, including parse errors deep into pass A.
+    struct RemoveOnDrop(std::path::PathBuf);
+    impl Drop for RemoveOnDrop {
+        fn drop(&mut self) {
+            std::fs::remove_file(&self.0).ok();
+        }
+    }
+    let _rowlog_guard = RemoveOnDrop(rowlog_path.clone());
+
+    let mut report = IngestReport::default();
+    let chunk_rows = opts.chunk_rows.max(1);
+    // prefix[i] = nnz of rows 0..i — the input to the shared balanced
+    // planner and the shard-size oracle for pass B.
+    let mut prefix: Vec<usize> = vec![0];
+    let mut min_idx: i64 = i64::MAX;
+    let mut max_idx: i64 = -1;
+
+    // ---- Pass A: chunked line parse -> row log + nnz prefix scan.
+    {
+        let mut log = BufWriter::new(
+            File::create(&rowlog_path)
+                .with_context(|| format!("create row log {}", rowlog_path.display()))?,
+        );
+        let mut chunk_labels: Vec<f32> = Vec::new();
+        let mut chunk_ptr: Vec<usize> = vec![0];
+        let mut chunk_idx: Vec<u32> = Vec::new();
+        let mut chunk_val: Vec<f32> = Vec::new();
+        let mut row_idx: Vec<u32> = Vec::new();
+        let mut row_val: Vec<f32> = Vec::new();
+        let mut line = String::new();
+        let mut lineno = 0usize;
+        loop {
+            line.clear();
+            let eof = reader
+                .read_line(&mut line)
+                .with_context(|| format!("read line {}", lineno + 1))?
+                == 0;
+            if !eof {
+                if let Some(label) = parse_example(&line, lineno, &mut row_idx, &mut row_val)? {
+                    if opts.task == Task::Classification && label != 1.0 && label != -1.0 {
+                        bail!(
+                            "line {}: classification label is {label}, want +/-1",
+                            lineno + 1
+                        );
+                    }
+                    for &j in row_idx.iter() {
+                        max_idx = max_idx.max(j as i64);
+                        min_idx = min_idx.min(j as i64);
+                    }
+                    chunk_labels.push(label);
+                    chunk_idx.extend_from_slice(&row_idx);
+                    chunk_val.extend_from_slice(&row_val);
+                    chunk_ptr.push(chunk_idx.len());
+                    let total = *prefix.last().unwrap();
+                    prefix.push(total + row_idx.len());
+                }
+                lineno += 1;
+            }
+            let full = chunk_labels.len() >= chunk_rows;
+            if full || (eof && !chunk_labels.is_empty()) {
+                flush_chunk(&mut log, &chunk_labels, &chunk_ptr, &chunk_idx, &chunk_val)?;
+                report.chunks_flushed += 1;
+                report.peak_chunk_rows = report.peak_chunk_rows.max(chunk_labels.len());
+                let bytes =
+                    4 * chunk_labels.len() + 8 * chunk_ptr.len() + 8 * chunk_idx.len();
+                report.peak_chunk_bytes = report.peak_chunk_bytes.max(bytes);
+                chunk_labels.clear();
+                chunk_idx.clear();
+                chunk_val.clear();
+                chunk_ptr.clear();
+                chunk_ptr.push(0);
+            }
+            if eof {
+                break;
+            }
+        }
+        log.flush().context("flush row log")?;
+    }
+
+    let n = prefix.len() - 1;
+    let nnz = prefix[n];
+    let (one_based, d) = resolve_dims(min_idx, max_idx, opts.n_features)?;
+    report.n = n;
+    report.d = d;
+    report.nnz = nnz;
+    report.one_based = one_based;
+    report.prefix_bytes = 8 * prefix.len();
+
+    // ---- Plan: the same boundary math as the in-memory planners, off
+    // the prefix instead of a CSR.
+    let p = opts.shards.max(1);
+    let part = match opts.strategy {
+        RowStrategy::Contiguous => RowPartition::contiguous(n, p),
+        RowStrategy::NnzBalanced => RowPartition::nnz_balanced_from_prefix(&prefix, p),
+    };
+
+    // ---- Pass B: split the row log into shard files, one shard resident
+    // at a time (shards are contiguous ordered row ranges, so this is a
+    // single sequential read of the log).
+    let shift: u32 = if one_based { 1 } else { 0 };
+    let mut records = Vec::with_capacity(p);
+    {
+        let mut log = BufReader::new(
+            File::open(&rowlog_path)
+                .with_context(|| format!("reopen row log {}", rowlog_path.display()))?,
+        );
+        let mut rowbuf: Vec<u8> = Vec::new();
+        for (id, &(start, end)) in part.bounds().iter().enumerate() {
+            let nloc = end - start;
+            let snnz = prefix[end] - prefix[start];
+            let mut labels: Vec<f32> = Vec::with_capacity(nloc);
+            let mut indptr: Vec<usize> = Vec::with_capacity(nloc + 1);
+            indptr.push(0);
+            let mut indices: Vec<u32> = Vec::with_capacity(snnz);
+            let mut values: Vec<f32> = Vec::with_capacity(snnz);
+            for _ in 0..nloc {
+                read_log_row(&mut log, &mut rowbuf, &mut labels, &mut indices, &mut values)?;
+                indptr.push(indices.len());
+            }
+            ensure!(
+                indices.len() == snnz,
+                "row log shard {id} carries {} nnz, prefix says {snnz}",
+                indices.len()
+            );
+            for j in indices.iter_mut() {
+                *j -= shift;
+                ensure!((*j as usize) < d, "feature index {j} >= d {d} in shard {id}");
+            }
+            let payload = ShardPayload {
+                id,
+                start,
+                end,
+                d,
+                task: opts.task,
+                labels: &labels,
+                indptr: &indptr,
+                indices: &indices,
+                values: &values,
+            };
+            report.peak_shard_bytes = report.peak_shard_bytes.max(payload.byte_len());
+            let hash = cache::write_shard(dir, &payload)?;
+            records.push(ShardRecord {
+                start,
+                end,
+                nnz: snnz,
+                hash,
+            });
+        }
+    }
+    cache::write_manifest(dir, name, d, opts.task, &part, &records)?;
+
+    // Pass B transiently holds a shard twice: assembly buffers + the
+    // serialized image write_shard builds (each ~peak_shard_bytes).
+    report.peak_resident_bytes =
+        report.prefix_bytes + report.peak_chunk_bytes.max(2 * report.peak_shard_bytes);
+    Ok(report)
+}
+
+/// Appends one chunk's rows to the row log. Record format (LE): label
+/// `f32`, nnz `u32`, then the row's raw indices (`u32` each) followed by
+/// its values (`f32` bits each).
+fn flush_chunk(
+    log: &mut impl Write,
+    labels: &[f32],
+    ptr: &[usize],
+    idx: &[u32],
+    val: &[f32],
+) -> Result<()> {
+    for (r, &label) in labels.iter().enumerate() {
+        let (a, b) = (ptr[r], ptr[r + 1]);
+        log.write_all(&label.to_bits().to_le_bytes())?;
+        log.write_all(&((b - a) as u32).to_le_bytes())?;
+        for &j in &idx[a..b] {
+            log.write_all(&j.to_le_bytes())?;
+        }
+        for &x in &val[a..b] {
+            log.write_all(&x.to_bits().to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Reads one row-log record, appending to the shard assembly buffers.
+fn read_log_row(
+    log: &mut impl Read,
+    rowbuf: &mut Vec<u8>,
+    labels: &mut Vec<f32>,
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f32>,
+) -> Result<()> {
+    let mut hdr = [0u8; 8];
+    log.read_exact(&mut hdr).context("row log truncated")?;
+    labels.push(f32::from_le_bytes(hdr[0..4].try_into().unwrap()));
+    let nnz = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    rowbuf.resize(8 * nnz, 0);
+    log.read_exact(rowbuf).context("row log truncated")?;
+    let (ib, vb) = rowbuf.split_at(4 * nnz);
+    for ch in ib.chunks_exact(4) {
+        indices.push(u32::from_le_bytes(ch.try_into().unwrap()));
+    }
+    for ch in vb.chunks_exact(4) {
+        values.push(f32::from_le_bytes(ch.try_into().unwrap()));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::cache::ShardCacheSource;
+    use crate::data::source::DataSource;
 
     #[test]
     fn parses_one_based() {
@@ -189,5 +560,85 @@ mod tests {
         let ds = parse("", "t", Task::Regression, None).unwrap();
         assert_eq!(ds.n(), 0);
         assert_eq!(ds.d(), 0);
+    }
+
+    #[test]
+    fn stream_ingest_matches_parse_on_text() {
+        let text = "# twin\n1 1:0.5 3:2\n-1 2:1.25\n\n1 1:4 2:-0.5 3:0.125\n-1 3:9\n";
+        let parsed = parse(text, "mini", Task::Classification, None).unwrap();
+        let dir = std::env::temp_dir().join("dsfacto_libsvm_stream_unit");
+        std::fs::remove_dir_all(&dir).ok();
+        let opts = IngestOptions {
+            shards: 2,
+            chunk_rows: 1, // force a flush per row
+            ..Default::default()
+        };
+        let report =
+            stream_ingest_from(std::io::Cursor::new(text), "mini", &opts, &dir).unwrap();
+        assert_eq!((report.n, report.d, report.nnz), (4, 3, 7));
+        assert!(report.one_based);
+        assert_eq!(report.chunks_flushed, 4);
+        assert_eq!(report.peak_chunk_rows, 1);
+        let src = ShardCacheSource::open(&dir).unwrap();
+        let back = src.materialize().unwrap();
+        assert_eq!(back.rows, parsed.rows);
+        assert_eq!(back.labels, parsed.labels);
+        assert_eq!(back.task, parsed.task);
+        assert!(!dir.join("rowlog.tmp").exists(), "row log must be cleaned up");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stream_ingest_rejects_what_parse_rejects() {
+        let dir = std::env::temp_dir().join("dsfacto_libsvm_stream_rej");
+        std::fs::remove_dir_all(&dir).ok();
+        let opts = IngestOptions::default();
+        for bad in [
+            "abc 1:1\n",
+            "1 x:1\n",
+            "1 2:1 1:1\n",
+            "1 1:y\n",
+            "1 4294967297:1\n", // u32 overflow would alias feature 1
+        ] {
+            assert!(parse(bad, "t", Task::Classification, None).is_err(), "{bad:?}");
+            assert!(
+                stream_ingest_from(std::io::Cursor::new(bad), "t", &opts, &dir).is_err(),
+                "{bad:?}"
+            );
+            // The row log is cleaned up on the error path too.
+            assert!(!dir.join("rowlog.tmp").exists(), "{bad:?}");
+        }
+        // Classification labels validated during the streaming pass too.
+        assert!(
+            stream_ingest_from(std::io::Cursor::new("0.5 1:1\n"), "t", &opts, &dir).is_err()
+        );
+        // Forced dimensionality below the max index.
+        let opts_forced = IngestOptions {
+            n_features: Some(2),
+            ..Default::default()
+        };
+        assert!(
+            stream_ingest_from(std::io::Cursor::new("1 5:1\n"), "t", &opts_forced, &dir)
+                .is_err()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stream_ingest_empty_input() {
+        let dir = std::env::temp_dir().join("dsfacto_libsvm_stream_empty");
+        std::fs::remove_dir_all(&dir).ok();
+        let report = stream_ingest_from(
+            std::io::Cursor::new(""),
+            "empty",
+            &IngestOptions::default(),
+            &dir,
+        )
+        .unwrap();
+        assert_eq!((report.n, report.d, report.nnz), (0, 0, 0));
+        assert_eq!(report.chunks_flushed, 0);
+        let src = ShardCacheSource::open(&dir).unwrap();
+        assert_eq!(src.n(), 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

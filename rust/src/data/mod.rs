@@ -1,16 +1,30 @@
-//! Data substrates: sparse matrices, LIBSVM parsing, synthetic Table-2
-//! dataset twins, splitting and feature scaling.
+//! Data substrates: sparse matrices, LIBSVM parsing (in-memory and
+//! streaming out-of-core ingest), the binary shard cache, the
+//! [`DataSource`] seam distributed trainers pull shards through,
+//! synthetic Table-2 dataset twins, splitting and feature scaling.
 //!
 //! The container has no network access, so the paper's UCI/LIBSVM datasets
 //! (diabetes, housing, ijcnn1, realsim) are reproduced as *synthetic twins*
 //! with identical (N, D, K), task type and sparsity, drawn from a planted
 //! ground-truth FM model ([`synth`]). The [`libsvm`] parser loads the real
-//! files unchanged if the user supplies them (DESIGN.md §2).
+//! files unchanged if the user supplies them (DESIGN.md §2); for data that
+//! does not fit RAM, [`libsvm::stream_ingest`] converts the same files
+//! into a per-worker shard cache ([`cache`]) in one bounded-memory pass,
+//! and [`ShardCacheSource`] serves worker shards from it file by file.
 
+// Hot-path-adjacent module (every trainer's bytes flow through here):
+// lint-clean regardless of the workflow-level gate (CI's hotpath-lint
+// clippy job covers the whole library).
+#![deny(clippy::all)]
+
+pub mod cache;
 pub mod libsvm;
+pub mod source;
 pub mod sparse;
 pub mod synth;
 
+pub use cache::ShardCacheSource;
+pub use source::{DataSource, InMemorySource, ResolvedSource, ShardSource};
 pub use sparse::{Csc, Csr};
 
 use crate::util::rng::Pcg64;
@@ -103,13 +117,16 @@ impl Dataset {
         }
     }
 
-    /// Standardizes every column to zero mean / unit variance **computed on
-    /// this dataset**, returning the per-column (mean, std) so the same
-    /// transform can be applied to a held-out set. Stored zeros are treated
-    /// as zeros (sparse semantics: only stored entries are shifted is wrong —
-    /// instead we only *scale*, preserving sparsity, and center dense
-    /// columns). Scaling keeps zero entries zero, which is what LIBSVM-style
-    /// pipelines do for sparse data.
+    /// Max-abs scales every column **computed on this dataset**: column
+    /// `j` is multiplied by `1 / max_i |x_ij|` (columns with no stored
+    /// entries are left untouched, scale 1), and the per-column scale
+    /// vector is returned so the same transform can be applied to a
+    /// held-out set via [`Dataset::apply_scale`]. This is deliberately
+    /// *not* zero-mean/unit-variance standardization: centering would
+    /// densify sparse columns, so — as LIBSVM-style pipelines do — we only
+    /// scale, which keeps every stored zero a zero and preserves the
+    /// sparsity pattern exactly. Post-scale invariant: every stored value
+    /// satisfies `|v| <= 1`.
     pub fn scale_columns(&mut self) -> Vec<f32> {
         let d = self.d();
         let mut max_abs = vec![0f32; d];

@@ -1,0 +1,288 @@
+//! The data-access seam every distributed trainer pulls its shards
+//! through.
+//!
+//! DS-FACTO's premise is that neither the data nor the model fits one
+//! machine, so a worker must only ever hold **its own row shard** — peak
+//! data memory per worker is `max_shard`, not `n x d`. [`DataSource`] is
+//! that boundary: it answers the whole-dataset questions partition
+//! planning needs (`n`, `d`, `nnz`, `task`), plans a [`RowPartition`],
+//! and materializes individual [`Shard`]s on demand. Two implementations
+//! exist:
+//!
+//! * [`InMemorySource`] — wraps a borrowed [`Dataset`] and reproduces the
+//!   legacy `slice_rows + to_csc` shard build **bit for bit** (this is
+//!   what every trainer uses by default, so existing runs are unchanged).
+//! * [`crate::data::cache::ShardCacheSource`] — reads per-worker shard
+//!   files from a versioned binary cache written by
+//!   [`crate::data::libsvm::stream_ingest`], so no step of shard
+//!   construction ever materializes the full CSR.
+//!
+//! Trainer configs carry a [`ShardSource`] (default: in-memory), resolved
+//! against the training set at `fit` time; the `data_cache = <dir>`
+//! config key routes all three distributed trainers through the cache.
+
+use std::fmt::Debug;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::partition::{RowPartition, RowStrategy, Shard};
+
+use super::{Dataset, Task};
+
+/// A provider of dataset shape, partition plans, and materialized row
+/// shards. The contract every implementation must honor:
+///
+/// * `plan(strategy, p)` returns a partition of exactly `n()` rows into
+///   `p` shards, computed by (or bit-identical to) the shared
+///   [`RowPartition`] planners — sources backed by a fixed on-disk layout
+///   return an error for plans they cannot serve rather than
+///   approximating.
+/// * `shard(part, id)` materializes shard `id` exactly as
+///   [`InMemorySource`] would from the equivalent in-memory dataset:
+///   identical local CSR, CSC, labels and task, so training results are
+///   independent of which source fed the workers.
+/// * `materialize()` reconstructs the full [`Dataset`] (the single-machine
+///   trainers, the train/test split and the convergence probe still need
+///   whole-dataset access).
+pub trait DataSource: Send + Sync + Debug {
+    /// Human-readable dataset name (traces, artifact lookup).
+    fn name(&self) -> &str;
+
+    /// Number of examples.
+    fn n(&self) -> usize;
+
+    /// Number of features.
+    fn d(&self) -> usize;
+
+    /// Total stored non-zeros.
+    fn nnz(&self) -> usize;
+
+    /// Prediction task (selects the loss).
+    fn task(&self) -> Task;
+
+    /// Plans a row partition of the source's `n()` rows into `p` shards.
+    fn plan(&self, strategy: RowStrategy, p: usize) -> Result<RowPartition>;
+
+    /// Materializes one shard of `part`.
+    fn shard(&self, part: &RowPartition, id: usize) -> Result<Shard>;
+
+    /// Materializes the whole dataset.
+    fn materialize(&self) -> Result<Dataset>;
+}
+
+/// The in-memory source: a view over a borrowed [`Dataset`]. Its
+/// [`DataSource::shard`] is byte-for-byte the shard build the trainers
+/// ran before the seam existed (`slice_rows`, `to_csc`, label copy).
+#[derive(Debug, Clone, Copy)]
+pub struct InMemorySource<'a> {
+    ds: &'a Dataset,
+}
+
+impl<'a> InMemorySource<'a> {
+    /// A source over `ds`.
+    pub fn new(ds: &'a Dataset) -> Self {
+        InMemorySource { ds }
+    }
+}
+
+impl DataSource for InMemorySource<'_> {
+    fn name(&self) -> &str {
+        &self.ds.name
+    }
+
+    fn n(&self) -> usize {
+        self.ds.n()
+    }
+
+    fn d(&self) -> usize {
+        self.ds.d()
+    }
+
+    fn nnz(&self) -> usize {
+        self.ds.nnz()
+    }
+
+    fn task(&self) -> Task {
+        self.ds.task
+    }
+
+    fn plan(&self, strategy: RowStrategy, p: usize) -> Result<RowPartition> {
+        Ok(RowPartition::new(strategy, &self.ds.rows, p))
+    }
+
+    fn shard(&self, part: &RowPartition, id: usize) -> Result<Shard> {
+        anyhow::ensure!(
+            part.n_rows() == self.ds.n(),
+            "partition covers {} rows, dataset has {}",
+            part.n_rows(),
+            self.ds.n()
+        );
+        let (start, end) = part.range(id);
+        let rows = self.ds.rows.slice_rows(start, end);
+        let cols = rows.to_csc();
+        Ok(Shard {
+            id,
+            start,
+            end,
+            rows,
+            cols,
+            labels: self.ds.labels[start..end].to_vec(),
+            task: self.ds.task,
+        })
+    }
+
+    fn materialize(&self) -> Result<Dataset> {
+        Ok(self.ds.clone())
+    }
+}
+
+/// Errors unless `src`'s **shape** — `(n, d, nnz, task)` — matches `ds`.
+/// Shard sources replace the *slicing* of the training set, not the
+/// training set itself, so a mismatch means workers would train on
+/// different rows than the probe evaluates. This is a shape check only:
+/// a same-shape dataset with permuted or edited rows passes (verifying
+/// content would mean re-serializing the training set), which is why the
+/// supported flow ingests the exact pre-split training file and trains
+/// with `train_frac = 1` (run_experiment keeps row order there).
+pub fn ensure_matches(src: &dyn DataSource, ds: &Dataset) -> Result<()> {
+    anyhow::ensure!(
+        src.n() == ds.n()
+            && src.d() == ds.d()
+            && src.nnz() == ds.nnz()
+            && src.task() == ds.task,
+        "shard source {:?} (n={} d={} nnz={} task={}) does not describe the training set \
+         (n={} d={} nnz={} task={}); a cache must cover exactly the training rows \
+         (ingest the pre-split training file, or train with train_frac = 1)",
+        src.name(),
+        src.n(),
+        src.d(),
+        src.nnz(),
+        src.task().name(),
+        ds.n(),
+        ds.d(),
+        ds.nnz(),
+        ds.task.name()
+    );
+    Ok(())
+}
+
+/// Where a distributed trainer's workers pull their row shards from.
+/// Carried by `NomadConfig` / `DsgdConfig` / `BulkSyncConfig` and
+/// resolved against the training set at `fit` time.
+#[derive(Debug, Clone, Default)]
+pub enum ShardSource {
+    /// Slice the in-memory training `Dataset` (the legacy path, bit for
+    /// bit; the default).
+    #[default]
+    InMemory,
+    /// Load each worker's shard from a binary shard-cache directory
+    /// written by [`crate::data::libsvm::stream_ingest`] (the
+    /// `data_cache = <dir>` config key).
+    Cache(String),
+    /// A caller-provided source (embedding, tests).
+    Custom(Arc<dyn DataSource>),
+}
+
+impl ShardSource {
+    /// Resolves against the in-memory training set, validating that the
+    /// source's shape matches it. Only `train` is borrowed by the result
+    /// (the cache and custom variants resolve to owned/shared sources),
+    /// so a temporary `ShardSource` works fine here.
+    pub fn resolve<'a>(&self, train: &'a Dataset) -> Result<ResolvedSource<'a>> {
+        match self {
+            ShardSource::InMemory => Ok(ResolvedSource::Borrowed(InMemorySource::new(train))),
+            ShardSource::Cache(dir) => {
+                let src = super::cache::ShardCacheSource::open(dir)?;
+                ensure_matches(&src, train)?;
+                Ok(ResolvedSource::Owned(Box::new(src)))
+            }
+            ShardSource::Custom(src) => {
+                ensure_matches(src.as_ref(), train)?;
+                Ok(ResolvedSource::Shared(src.clone()))
+            }
+        }
+    }
+}
+
+/// A [`ShardSource`] resolved for one training session (borrowed
+/// in-memory view, freshly opened cache, or shared custom source).
+#[derive(Debug)]
+pub enum ResolvedSource<'a> {
+    /// The in-memory view over the training set.
+    Borrowed(InMemorySource<'a>),
+    /// An owned source (a cache opened for this session).
+    Owned(Box<dyn DataSource>),
+    /// A shared caller-provided source.
+    Shared(Arc<dyn DataSource>),
+}
+
+impl ResolvedSource<'_> {
+    /// The seam as a trait object.
+    pub fn as_dyn(&self) -> &dyn DataSource {
+        match self {
+            ResolvedSource::Borrowed(s) => s,
+            ResolvedSource::Owned(s) => s.as_ref(),
+            ResolvedSource::Shared(s) => s.as_ref(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::partition::build_shards;
+
+    #[test]
+    fn in_memory_source_reports_dataset_shape() {
+        let ds = synth::table2_dataset("housing", 3).unwrap();
+        let src = InMemorySource::new(&ds);
+        assert_eq!(src.n(), ds.n());
+        assert_eq!(src.d(), ds.d());
+        assert_eq!(src.nnz(), ds.nnz());
+        assert_eq!(src.task(), ds.task);
+        assert_eq!(src.name(), ds.name);
+        let back = src.materialize().unwrap();
+        assert_eq!(back.rows, ds.rows);
+        assert_eq!(back.labels, ds.labels);
+    }
+
+    #[test]
+    fn in_memory_shards_match_build_shards_bitwise() {
+        let ds = synth::table2_dataset("housing", 5).unwrap();
+        let src = InMemorySource::new(&ds);
+        for strat in [RowStrategy::Contiguous, RowStrategy::NnzBalanced] {
+            let part = src.plan(strat, 4).unwrap();
+            assert_eq!(part, RowPartition::new(strat, &ds.rows, 4));
+            let legacy = build_shards(&ds, &part);
+            for (id, want) in legacy.iter().enumerate() {
+                let got = src.shard(&part, id).unwrap();
+                assert_eq!(got.rows, want.rows, "{strat:?} shard {id}");
+                assert_eq!(got.cols, want.cols, "{strat:?} shard {id}");
+                assert_eq!((got.start, got.end), (want.start, want.end));
+                assert_eq!(got.task, want.task);
+                let a: Vec<u32> = got.labels.iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u32> = want.labels.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b, "{strat:?} shard {id} labels");
+            }
+        }
+    }
+
+    #[test]
+    fn ensure_matches_rejects_mismatched_shapes() {
+        let ds = synth::table2_dataset("housing", 7).unwrap();
+        let sub = ds.subset(&(0..ds.n() - 1).collect::<Vec<_>>(), "sub");
+        let src = InMemorySource::new(&ds);
+        assert!(ensure_matches(&src, &ds).is_ok());
+        let err = ensure_matches(&src, &sub).unwrap_err();
+        assert!(format!("{err:#}").contains("does not describe"), "{err:#}");
+    }
+
+    #[test]
+    fn default_shard_source_resolves_to_in_memory() {
+        let ds = synth::table2_dataset("housing", 9).unwrap();
+        let resolved = ShardSource::default().resolve(&ds).unwrap();
+        assert_eq!(resolved.as_dyn().n(), ds.n());
+    }
+}

@@ -37,6 +37,27 @@ impl Csr {
         m
     }
 
+    /// Builds from raw CSR arrays, validating instead of asserting — the
+    /// constructor for untrusted bytes (the shard-cache reader), where a
+    /// malformed matrix must surface as an error, not a debug panic.
+    pub fn try_new(
+        n_rows: usize,
+        n_cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<Self> {
+        let m = Csr {
+            n_rows,
+            n_cols,
+            indptr,
+            indices,
+            values,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
     /// Builds from (row, col, value) triplets (any order; duplicates summed).
     pub fn from_triplets(n_rows: usize, n_cols: usize, triplets: &[(usize, usize, f32)]) -> Self {
         let mut per_row: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n_rows];
@@ -223,6 +244,12 @@ impl Csr {
             }
         }
         real
+    }
+
+    /// The raw CSR arrays `(indptr, indices, values)` — the serialization
+    /// view the shard-cache writer streams to disk.
+    pub fn raw_parts(&self) -> (&[usize], &[u32], &[f32]) {
+        (&self.indptr, &self.indices, &self.values)
     }
 
     /// Dense row-major copy (tests / tiny data only).

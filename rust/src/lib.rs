@@ -13,8 +13,10 @@
 //!   engine ([`nomad`]), single-machine and synchronous baselines
 //!   ([`baseline`]), the doubly-separable partition plans all distributed
 //!   trainers shard through ([`partition`]), the uniform trainer/predictor
-//!   session API ([`train`]), data substrates ([`data`]), metrics, config,
-//!   CLI.
+//!   session API ([`train`]), data substrates ([`data`]) including the
+//!   out-of-core layer (streaming LIBSVM ingest into a binary shard
+//!   cache, served to workers through the [`data::DataSource`] seam),
+//!   metrics, config, CLI.
 //! * **Hot path ([`kernel`])** — the fused lane-blocked (AoSoA, 8-wide
 //!   f32) per-example FM kernels all trainers and the serving path run
 //!   on: one-pass scoring, a fused score+gradient+update step, and batch

@@ -41,6 +41,7 @@ fn real_main() -> Result<()> {
         .unwrap_or_else(|| "help".to_string());
     match cmd.as_str() {
         "train" => cmd_train(args),
+        "ingest" => cmd_ingest(args),
         "evaluate" => cmd_evaluate(args),
         "inspect" => cmd_inspect(args),
         "datasets" => cmd_datasets(args),
@@ -67,11 +68,16 @@ USAGE:
                      [--trainer nomad|libfm|dsgd|bulksync|xla]
                      [--workers P] [--outer-iters T] [--eta SPEC] [--k K]
                      [--lambda-w L] [--lambda-v L] [--seed S] [--eval-every E]
+                     [--train-frac F]
                      [--transport local|tcp|simnet[:LAT,BW,WPM]]
                      [--update-mode mean|stochastic[:N]] [--cols-per-token C]
                      [--row-partition contiguous|balanced]
+                     [--data-cache DIR]
                      [--trace FILE] [--save-model FILE]
                      [--xla-eval] [--artifacts DIR] [--quiet]
+  dsfacto ingest     --dataset FILE --data-cache DIR [--shards P]
+                     [--row-partition contiguous|balanced]
+                     [--dataset-task TASK] [--n-features D] [--chunk-rows N]
   dsfacto evaluate   --model FILE --dataset NAME|FILE [--xla] [--artifacts DIR]
   dsfacto inspect    --model FILE
   dsfacto datasets                      # list Table-2 synthetic twins
@@ -86,8 +92,19 @@ SPECS:
   row-partition  contiguous | balanced   (row shards by count or by nnz;
              applies to the nomad, dsgd and bulksync trainers)
 
+OUT-OF-CORE DATA:
+  `dsfacto ingest` streams a LIBSVM file into a binary shard cache in one
+  bounded-memory pass (never holding the full matrix). Training with
+  `--data-cache DIR` (config key `data_cache`) makes every distributed
+  worker load only its own shard file; a cached dataset can also be
+  trained directly via `--dataset cache:DIR`. The cache bakes in its
+  row-partition plan and shard count, so ingest with the `--shards` /
+  `--row-partition` you will train with (and train with train_frac = 1 or
+  a pre-split file, so the cache covers exactly the training rows).
+
 Config files use the same keys with underscores (transport, update_mode,
-cols_per_token, ...); `--config` values are overridden by explicit flags.
+cols_per_token, data_cache, ...); `--config` values are overridden by
+explicit flags.
 ";
 
 fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &mut Args) -> Result<()> {
@@ -103,6 +120,7 @@ fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &mut Args) -> Result<()
         ("lambda-w", "lambda_w"),
         ("lambda-v", "lambda_v"),
         ("seed", "seed"),
+        ("train-frac", "train_frac"),
         ("eval-every", "eval_every"),
         ("trace", "trace"),
         ("artifacts", "artifacts"),
@@ -110,6 +128,7 @@ fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &mut Args) -> Result<()
         ("update-mode", "update_mode"),
         ("cols-per-token", "cols_per_token"),
         ("row-partition", "row_partition"),
+        ("data-cache", "data_cache"),
     ] {
         if let Some(v) = args.get(flag) {
             cfg.set(key, &v).with_context(|| format!("--{flag}"))?;
@@ -192,6 +211,66 @@ fn cmd_train(mut args: Args) -> Result<()> {
         fm::io::save(&out.model, &path)?;
         println!("model saved to {path}");
     }
+    Ok(())
+}
+
+fn cmd_ingest(mut args: Args) -> Result<()> {
+    use dsfacto::data::libsvm::{stream_ingest, IngestOptions};
+    use dsfacto::partition::RowStrategy;
+
+    let input: String = args.require("dataset")?;
+    let out_dir: String = args.require("data-cache")?;
+    let task = match args.get("dataset-task") {
+        Some(t) => Task::parse(&t)?,
+        None => Task::Classification,
+    };
+    let strategy = match args.get("row-partition") {
+        Some(s) => RowStrategy::parse(&s)?,
+        None => RowStrategy::Contiguous,
+    };
+    let shards: usize = args.get_or("shards", 4)?;
+    let chunk_rows: usize = args.get_or("chunk-rows", 4096)?;
+    let n_features = match args.get("n-features") {
+        Some(v) => Some(v.parse::<usize>().context("--n-features")?),
+        None => None,
+    };
+    args.finish()?;
+
+    let name = std::path::Path::new(&input)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or(input.as_str())
+        .to_string();
+    let opts = IngestOptions {
+        task,
+        n_features,
+        strategy,
+        shards,
+        chunk_rows,
+    };
+    let report = stream_ingest(&input, &name, &opts, &out_dir)?;
+    println!(
+        "ingested {input} -> {out_dir}: {} rows, {} features, {} nnz ({} indices)",
+        report.n,
+        report.d,
+        report.nnz,
+        if report.one_based { "1-based" } else { "0-based" }
+    );
+    println!(
+        "  plan: {} x {shards} shards; {} chunks flushed (peak {} rows / {} bytes); \
+         peak shard {} bytes; peak resident {} bytes",
+        strategy.spec(),
+        report.chunks_flushed,
+        report.peak_chunk_rows,
+        report.peak_chunk_bytes,
+        report.peak_shard_bytes,
+        report.peak_resident_bytes,
+    );
+    println!(
+        "  train with: dsfacto train --dataset cache:{out_dir} --data-cache {out_dir} \
+         --workers {shards} --row-partition {} --train-frac 1",
+        strategy.spec()
+    );
     Ok(())
 }
 

@@ -3,10 +3,12 @@
 //! paper Algorithm 1 with incremental synchronization of G and A.
 //!
 //! The (row-shard x column-block) grid comes from [`crate::partition`]:
-//! rows through a [`RowPartition`] (contiguous by default, nnz-balanced
-//! via `NomadConfig::row_partition`) materialized by
-//! [`partition::build_shards`], columns through the [`ColPartition`]
-//! tokens are cut from.
+//! rows through a [`crate::partition::RowPartition`] (contiguous by
+//! default, nnz-balanced via `NomadConfig::row_partition`) materialized
+//! through the [`crate::data::DataSource`] seam by
+//! [`partition::build_shards_from_source`] (in-memory slices by default;
+//! per-worker shard-cache files under `NomadConfig::source`), columns
+//! through the [`ColPartition`] tokens are cut from.
 //!
 //! ## Protocol invariants (tested in `nomad::tests` and `rust/tests/`)
 //!
@@ -50,7 +52,7 @@ use crate::fm::{loss, FmHyper, FmModel};
 use crate::kernel::{padded_k, visit, FmKernel, Scratch};
 use crate::metrics::{evaluate, TracePoint, TrainOutput};
 use crate::optim::LrSchedule;
-use crate::partition::{self, ColPartition, PartitionStats, RowPartition};
+use crate::partition::{self, ColPartition, PartitionStats};
 use crate::train::TrainObserver;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -497,8 +499,13 @@ pub fn train_with_transport(
     let t_max = cfg.outer_iters as u32;
 
     // Row-shard plan (contiguous by default — identical to the legacy
-    // chunking; `balanced` equalizes per-shard nnz on row-skewed data).
-    let row_plan = RowPartition::new(cfg.row_partition, &train.rows, p);
+    // chunking; `balanced` equalizes per-shard nnz on row-skewed data),
+    // computed through the data seam: the in-memory source plans off the
+    // training CSR exactly as before, a shard cache returns the plan its
+    // files were cut on.
+    let resolved = cfg.source.resolve(train)?;
+    let source = resolved.as_dyn();
+    let row_plan = source.plan(cfg.row_partition, p)?;
     let pstats = PartitionStats::from_plan(&row_plan, &train.rows);
 
     // ---- Initial model and auxiliary variables (exact, pre-launch).
@@ -547,8 +554,10 @@ pub fn train_with_transport(
     }
 
     // Materialize the per-worker shards (local CSR + CSC + labels)
-    // through the one shared parallel build path.
-    let shards = partition::build_shards(train, &row_plan);
+    // through the one shared parallel build path — a pool capped at
+    // `available_parallelism`; with a cache source each load reads only
+    // that worker's shard file.
+    let shards = partition::build_shards_from_source(source, &row_plan)?;
 
     // ---- Seed the ring: deal tokens across workers (Algorithm 1 l.5-8).
     // Factor payloads are dealt lane-padded (`ncols x kp`) straight from

@@ -203,6 +203,11 @@ pub struct NomadConfig {
     /// counts; the default, bitwise identical to the legacy chunking) or
     /// `NnzBalanced` (equal per-shard nnz on row-skewed data).
     pub row_partition: crate::partition::RowStrategy,
+    /// Where workers pull their row shards from: in-memory slices of the
+    /// training set (the default — bit-identical to the legacy build), or
+    /// per-worker shard-cache files (`data_cache = <dir>`), so each
+    /// worker thread loads only its own shard and never the full CSR.
+    pub source: crate::data::ShardSource,
 }
 
 impl Default for NomadConfig {
@@ -220,6 +225,7 @@ impl Default for NomadConfig {
             update_mode: UpdateMode::MeanGradient,
             cols_per_token: 0,
             row_partition: crate::partition::RowStrategy::Contiguous,
+            source: crate::data::ShardSource::InMemory,
         }
     }
 }

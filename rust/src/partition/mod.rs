@@ -16,10 +16,14 @@
 //!   bounds, plus the [`auto_block_cols`] granularity heuristic.
 //! * [`GridPlan`] — the composed grid and DSGD's block-diagonal stratum
 //!   schedule `(shard + sub) % blocks`.
-//! * [`Shard`] / [`build_shards`] — the materialized per-worker view
-//!   (local CSR + CSC + labels + lane-blocked arenas), built through one
-//!   shared parallel path instead of three inline `slice_rows(..).to_csc()`
-//!   copies.
+//! * [`Shard`] / [`build_shards_from_source`] — the materialized
+//!   per-worker view (local CSR + CSC + labels + lane-blocked arenas),
+//!   built through the [`crate::data::DataSource`] seam by a worker pool
+//!   capped at `available_parallelism`: the in-memory source reproduces
+//!   the legacy `slice_rows(..).to_csc()` build bit for bit
+//!   ([`build_shards`] is that convenience), while a
+//!   [`crate::data::ShardCacheSource`] reads each worker's shard file
+//!   from disk so no step materializes the full CSR.
 //! * [`PartitionStats`] — per-shard nnz and the max/mean imbalance ratio,
 //!   surfaced through `EngineStats` and `Trainer::partition_stats`.
 //!
@@ -34,4 +38,4 @@ mod plan;
 mod shard;
 
 pub use plan::{auto_block_cols, ColPartition, GridPlan, PartitionStats, RowPartition, RowStrategy};
-pub use shard::{build_shards, Shard, ShardArenas};
+pub use shard::{build_shards, build_shards_from_source, Shard, ShardArenas};

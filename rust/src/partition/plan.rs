@@ -96,27 +96,58 @@ impl RowPartition {
         }
     }
 
+    /// Rebuilds a partition from stored bounds (the shard-cache manifest
+    /// path), validating the structural invariants instead of trusting the
+    /// bytes.
+    pub fn from_bounds(
+        strategy: RowStrategy,
+        n: usize,
+        bounds: Vec<(usize, usize)>,
+    ) -> Result<RowPartition> {
+        let part = RowPartition {
+            n,
+            strategy,
+            bounds,
+        };
+        part.validate()?;
+        Ok(part)
+    }
+
     /// Greedy prefix split on cumulative row nnz: boundary `b` lands on
     /// the prefix point nearest the ideal `total_nnz * b / p`. Falls back
     /// to the contiguous bounds whenever the greedy cuts would yield a
     /// *larger* max-nnz shard, so `max shard nnz <= contiguous max shard
     /// nnz` holds unconditionally.
     pub fn nnz_balanced(rows: &Csr, p: usize) -> RowPartition {
-        let p = p.max(1);
         let n = rows.n_rows();
-        let total = rows.nnz();
+        // prefix[i] = nnz of rows 0..i (non-decreasing).
+        let mut prefix = Vec::with_capacity(n + 1);
+        prefix.push(0usize);
+        for i in 0..n {
+            prefix.push(prefix[i] + rows.row_nnz(i));
+        }
+        Self::nnz_balanced_from_prefix(&prefix, p)
+    }
+
+    /// [`RowPartition::nnz_balanced`] computed from a cumulative row-nnz
+    /// prefix array (`prefix[i]` = nnz of rows `0..i`, `prefix[0] = 0`) —
+    /// the entry point for planners that never materialize a CSR. The
+    /// streaming LIBSVM ingester builds this prefix during its single
+    /// parse pass and plans through here, so cache-resident partitions are
+    /// **bit-identical** to the ones [`RowPartition::new`] computes from
+    /// the equivalent in-memory matrix (the boundary math below is shared,
+    /// not duplicated).
+    pub fn nnz_balanced_from_prefix(prefix: &[usize], p: usize) -> RowPartition {
+        assert!(!prefix.is_empty() && prefix[0] == 0, "prefix must start at 0");
+        let p = p.max(1);
+        let n = prefix.len() - 1;
+        let total = prefix[n];
         let contiguous = Self::contiguous(n, p);
         if total == 0 || p == 1 {
             return RowPartition {
                 strategy: RowStrategy::NnzBalanced,
                 ..contiguous
             };
-        }
-        // prefix[i] = nnz of rows 0..i (non-decreasing).
-        let mut prefix = Vec::with_capacity(n + 1);
-        prefix.push(0usize);
-        for i in 0..n {
-            prefix.push(prefix[i] + rows.row_nnz(i));
         }
         let mut cuts = vec![0usize; p + 1];
         cuts[p] = n;
@@ -479,6 +510,47 @@ mod tests {
         assert_eq!(part.n_blocks(), 3);
         assert_eq!(part.block_range(0), (0, 5));
         assert_eq!(part.block_range(2), (10, 13));
+    }
+
+    #[test]
+    fn balanced_from_prefix_matches_csr_path() {
+        // The ingester plans from a prefix array it builds while parsing;
+        // the two entry points must agree exactly (shared boundary math).
+        let mut triplets = Vec::new();
+        for r in 0..40 {
+            for c in 0..(1 + (r * 7) % 13) {
+                triplets.push((r, c, 1.0f32));
+            }
+        }
+        let m = Csr::from_triplets(40, 13, &triplets);
+        let mut prefix = vec![0usize];
+        for i in 0..40 {
+            prefix.push(prefix[i] + m.row_nnz(i));
+        }
+        for p in [1usize, 2, 3, 5, 8, 40, 64] {
+            assert_eq!(
+                RowPartition::nnz_balanced(&m, p),
+                RowPartition::nnz_balanced_from_prefix(&prefix, p),
+                "p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn from_bounds_validates_stored_partitions() {
+        let good = RowPartition::contiguous(10, 3);
+        let back =
+            RowPartition::from_bounds(RowStrategy::Contiguous, 10, good.bounds().to_vec())
+                .unwrap();
+        assert_eq!(back, good);
+        // Gap, overlap, wrong n: all rejected.
+        assert!(RowPartition::from_bounds(RowStrategy::Contiguous, 10, vec![(0, 4), (5, 10)])
+            .is_err());
+        assert!(RowPartition::from_bounds(RowStrategy::Contiguous, 10, vec![(0, 6), (5, 10)])
+            .is_err());
+        assert!(RowPartition::from_bounds(RowStrategy::Contiguous, 9, vec![(0, 5), (5, 10)])
+            .is_err());
+        assert!(RowPartition::from_bounds(RowStrategy::Contiguous, 10, vec![]).is_err());
     }
 
     #[test]

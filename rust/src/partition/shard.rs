@@ -1,13 +1,24 @@
 //! Materialized per-worker shard views.
 //!
 //! A [`Shard`] is what a distributed worker actually touches: the local
-//! row-block CSR (a [`Csr::slice_rows`] of the training set), its CSC
-//! transpose (the doubly-separable column access path of paper Figs.
-//! 1-2), the matching label slice and the task. [`build_shards`] is the
-//! one shared construction path — one scoped thread per shard, exactly
-//! the parallelism each trainer used to hand-roll inline — so the NOMAD
-//! engine, DSGD and bulk-sync all consume identical views.
+//! row-block CSR (a [`Csr::slice_rows`] of the training set — or the
+//! equivalent slice read from a shard-cache file), its CSC transpose (the
+//! doubly-separable column access path of paper Figs. 1-2), the matching
+//! label slice and the task. Construction goes through the
+//! [`DataSource`] seam: [`Shard::from_source`] materializes one shard,
+//! and [`build_shards_from_source`] is the one shared parallel build path
+//! — a worker pool capped at [`std::thread::available_parallelism`] (not
+//! one unbounded thread per shard, which was pathological at large P) —
+//! so the NOMAD engine, DSGD and bulk-sync all consume identical views
+//! regardless of whether the bytes came from RAM or from per-shard cache
+//! files. [`build_shards`] is the in-memory convenience over the same
+//! path.
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use anyhow::Result;
+
+use crate::data::source::{DataSource, InMemorySource};
 use crate::data::{Csc, Csr, Dataset, Task};
 use crate::kernel::padded_k;
 
@@ -33,6 +44,13 @@ pub struct Shard {
 }
 
 impl Shard {
+    /// Materializes shard `id` of `part` through the data seam — the
+    /// unit every worker loads for itself (only its own rows; an
+    /// out-of-core source reads one shard file, never the full CSR).
+    pub fn from_source(src: &dyn DataSource, part: &RowPartition, id: usize) -> Result<Shard> {
+        src.shard(part, id)
+    }
+
     /// Number of local rows.
     #[inline]
     pub fn nloc(&self) -> usize {
@@ -72,43 +90,75 @@ pub struct ShardArenas {
     pub acc_s2: Vec<f32>,
 }
 
-/// Materializes every shard of `part` over `ds`, in parallel (one scoped
-/// thread per shard — the same build parallelism the trainers previously
-/// ran inline in their worker threads). Shards come back in shard order.
+/// Materializes every shard of `part` over an in-memory dataset. A thin
+/// wrapper over [`build_shards_from_source`] with an [`InMemorySource`]
+/// view — the shards are bit-for-bit the `slice_rows + to_csc` builds the
+/// trainers previously ran inline.
 pub fn build_shards(ds: &Dataset, part: &RowPartition) -> Vec<Shard> {
-    assert_eq!(
+    build_shards_from_source(&InMemorySource::new(ds), part)
+        .expect("in-memory shard builds cannot fail")
+}
+
+/// Materializes every shard of `part` through the [`DataSource`] seam, in
+/// parallel. The worker pool is capped at
+/// [`std::thread::available_parallelism`] (and at the shard count):
+/// previously P shards spawned P scoped threads, which at large P both
+/// oversubscribed the host and — for an out-of-core source — held P shard
+/// files in flight at once. Shards come back in shard order; the first
+/// shard-load error aborts the build.
+pub fn build_shards_from_source(
+    src: &dyn DataSource,
+    part: &RowPartition,
+) -> Result<Vec<Shard>> {
+    anyhow::ensure!(
+        part.n_rows() == src.n(),
+        "partition covers {} rows, source has {}",
         part.n_rows(),
-        ds.n(),
-        "partition covers {} rows, dataset has {}",
-        part.n_rows(),
-        ds.n()
+        src.n()
     );
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = part
-            .bounds()
-            .iter()
-            .enumerate()
-            .map(|(id, &(start, end))| {
+    let p = part.n_shards();
+    let threads = std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(1)
+        .clamp(1, p.max(1));
+    let next = AtomicUsize::new(0);
+    // Raised on the first load error so the pool stops claiming new
+    // shards instead of reading (and hash-checking) the rest of a cache
+    // that is already known bad.
+    let failed = AtomicBool::new(false);
+    let mut built: Vec<(usize, Result<Shard>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let next = &next;
+                let failed = &failed;
                 scope.spawn(move || {
-                    let rows = ds.rows.slice_rows(start, end);
-                    let cols = rows.to_csc();
-                    Shard {
-                        id,
-                        start,
-                        end,
-                        rows,
-                        cols,
-                        labels: ds.labels[start..end].to_vec(),
-                        task: ds.task,
+                    let mut mine: Vec<(usize, Result<Shard>)> = Vec::new();
+                    loop {
+                        if failed.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let id = next.fetch_add(1, Ordering::Relaxed);
+                        if id >= p {
+                            break;
+                        }
+                        let res = Shard::from_source(src, part, id);
+                        if res.is_err() {
+                            failed.store(true, Ordering::Relaxed);
+                        }
+                        mine.push((id, res));
                     }
+                    mine
                 })
             })
             .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("shard build panicked"))
-            .collect()
-    })
+        let mut all = Vec::with_capacity(p);
+        for h in handles {
+            all.extend(h.join().expect("shard build panicked"));
+        }
+        all
+    });
+    built.sort_by_key(|(id, _)| *id);
+    built.into_iter().map(|(_, r)| r).collect()
 }
 
 #[cfg(test)]
@@ -159,6 +209,29 @@ mod tests {
         assert_eq!(a.acc_a.len(), nloc * 8);
         assert_eq!(a.acc_s2.len(), nloc * 8);
         assert!(a.aa.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn capped_pool_builds_many_shards_in_order() {
+        // 64 shards on a small host: the pool (capped at
+        // available_parallelism) must still build every shard, in order —
+        // the old path spawned 64 threads for this.
+        let ds = synth::table2_dataset("housing", 8).unwrap();
+        let part = RowPartition::contiguous(ds.n(), 64);
+        let src = crate::data::source::InMemorySource::new(&ds);
+        let shards = super::build_shards_from_source(&src, &part).unwrap();
+        assert_eq!(shards.len(), 64);
+        for (b, sh) in shards.iter().enumerate() {
+            assert_eq!(sh.id, b);
+            assert_eq!((sh.start, sh.end), part.range(b));
+        }
+        assert_eq!(shards.iter().map(|s| s.nloc()).sum::<usize>(), ds.n());
+        // And the wrapper agrees bit for bit.
+        let legacy = build_shards(&ds, &part);
+        for (a, b) in shards.iter().zip(&legacy) {
+            assert_eq!(a.rows, b.rows);
+            assert_eq!(a.labels, b.labels);
+        }
     }
 
     #[test]

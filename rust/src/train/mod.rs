@@ -180,6 +180,14 @@ impl TrainerKind {
     /// This is the only dispatch point in the crate: the coordinator, the
     /// CLI, the examples and the benches all obtain trainers here.
     pub fn build(self, cfg: &ExperimentConfig) -> Box<dyn Trainer> {
+        // The data seam for the distributed trainers: a configured
+        // `data_cache` routes worker shard loads through the binary shard
+        // cache (opened lazily at fit time, where errors can surface);
+        // otherwise workers slice the in-memory training set as always.
+        let shard_source = match &cfg.data_cache {
+            Some(dir) => crate::data::ShardSource::Cache(dir.clone()),
+            None => crate::data::ShardSource::InMemory,
+        };
         match self {
             TrainerKind::Nomad => Box::new(NomadTrainer::new(
                 cfg.fm,
@@ -193,6 +201,7 @@ impl TrainerKind {
                     update_mode: cfg.update_mode,
                     cols_per_token: cfg.cols_per_token,
                     row_partition: cfg.row_partition,
+                    source: shard_source,
                 },
             )),
             TrainerKind::Libfm => Box::new(LibfmTrainer::new(
@@ -214,6 +223,7 @@ impl TrainerKind {
                     seed: cfg.seed,
                     eval_every: cfg.eval_every,
                     row_partition: cfg.row_partition,
+                    source: shard_source,
                 },
             )),
             TrainerKind::BulkSync => Box::new(BulkSyncTrainer::new(
@@ -225,6 +235,7 @@ impl TrainerKind {
                     seed: cfg.seed,
                     eval_every: cfg.eval_every,
                     row_partition: cfg.row_partition,
+                    source: shard_source,
                 },
             )),
             TrainerKind::XlaDense => Box::new(XlaDenseTrainer::new(

@@ -131,7 +131,7 @@ impl Trainer for DsgdTrainer {
         test: Option<&Dataset>,
         observer: &mut dyn TrainObserver,
     ) -> crate::Result<TrainOutput> {
-        let (out, pstats) = dsgd_train_with_stats(train, test, &self.fm, &self.cfg, observer);
+        let (out, pstats) = dsgd_train_with_stats(train, test, &self.fm, &self.cfg, observer)?;
         *self.partition.borrow_mut() = Some(pstats);
         observer.on_done(&out);
         Ok(out)
@@ -173,7 +173,8 @@ impl Trainer for BulkSyncTrainer {
         test: Option<&Dataset>,
         observer: &mut dyn TrainObserver,
     ) -> crate::Result<TrainOutput> {
-        let (out, pstats) = bulksync_train_with_stats(train, test, &self.fm, &self.cfg, observer);
+        let (out, pstats) =
+            bulksync_train_with_stats(train, test, &self.fm, &self.cfg, observer)?;
         *self.partition.borrow_mut() = Some(pstats);
         observer.on_done(&out);
         Ok(out)

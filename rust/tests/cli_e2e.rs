@@ -156,6 +156,63 @@ fn train_on_libsvm_file_dataset() {
 }
 
 #[test]
+fn ingest_then_train_from_cache() {
+    // The out-of-core user flow: stream a LIBSVM file into a shard cache,
+    // then train with every distributed worker loading only its own shard
+    // file (--data-cache), on the cache-materialized dataset
+    // (--dataset cache:DIR, --train-frac 1 keeps the cached row order).
+    let dir = std::env::temp_dir().join("dsfacto_cli_ingest");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("housing.svm");
+    let ds = dsfacto::data::synth::table2_dataset("housing", 19).unwrap();
+    dsfacto::data::libsvm::save(&ds, &path).unwrap();
+    let cache = dir.join("cache");
+    let cache_s = cache.to_str().unwrap();
+
+    let (ok, text) = run(&[
+        "ingest",
+        "--dataset",
+        path.to_str().unwrap(),
+        "--data-cache",
+        cache_s,
+        "--dataset-task",
+        "regression",
+        "--shards",
+        "2",
+        "--chunk-rows",
+        "64",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("ingested"), "{text}");
+    assert!(cache.join("manifest.dsfc").exists());
+    assert!(cache.join("shard_00000.dsfs").exists());
+
+    let dataset_arg = format!("cache:{cache_s}");
+    let (ok, text) = run(&[
+        "train",
+        "--dataset",
+        &dataset_arg,
+        "--data-cache",
+        cache_s,
+        "--train-frac",
+        "1",
+        "--trainer",
+        "dsgd",
+        "--workers",
+        "2",
+        "--outer-iters",
+        "5",
+        "--eta",
+        "constant:0.5",
+        "--quiet",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("trained dsgd"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn tcp_transport_from_cli() {
     let (ok, text) = run(&[
         "train",

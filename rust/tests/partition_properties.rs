@@ -246,8 +246,9 @@ fn dsgd_contiguous_matches_prerefactor_reference_bitwise() {
             seed: 77,
             eval_every: usize::MAX,
             row_partition: RowStrategy::Contiguous,
+            ..Default::default()
         };
-        let (out, stats) = dsgd_train_with_stats(&ds, None, &fm, &cfg, &mut ());
+        let (out, stats) = dsgd_train_with_stats(&ds, None, &fm, &cfg, &mut ()).unwrap();
         let reference = dsgd_reference(&ds, &fm, &cfg);
         assert_models_bitwise(&out.model, &reference, &format!("dsgd k={k} p={workers}"));
         assert_eq!(stats.shard_nnz.iter().sum::<usize>(), ds.nnz());
@@ -302,8 +303,9 @@ fn bulksync_contiguous_matches_prerefactor_reference_bitwise() {
             seed: 13,
             eval_every: usize::MAX,
             row_partition: RowStrategy::Contiguous,
+            ..Default::default()
         };
-        let (out, _) = bulksync_train_with_stats(&ds, None, &fm, &cfg, &mut ());
+        let (out, _) = bulksync_train_with_stats(&ds, None, &fm, &cfg, &mut ()).unwrap();
         let reference = bulksync_reference(&ds, &fm, &cfg);
         assert_models_bitwise(&out.model, &reference, &format!("bulksync k={k} p={workers}"));
     }
@@ -400,8 +402,9 @@ fn balanced_dsgd_reaches_contiguous_quality_on_skewed_rows() {
             seed: 5,
             eval_every: usize::MAX,
             row_partition: strat,
+            ..Default::default()
         };
-        dsgd_train_with_stats(&ds, None, &fm, &cfg, &mut ()).0
+        dsgd_train_with_stats(&ds, None, &fm, &cfg, &mut ()).unwrap().0
     };
     let cont = run(RowStrategy::Contiguous);
     let bal = run(RowStrategy::NnzBalanced);
@@ -434,8 +437,9 @@ fn balanced_bulksync_matches_contiguous_gradient() {
             seed: 6,
             eval_every: usize::MAX,
             row_partition: strat,
+            ..Default::default()
         };
-        bulksync_train_with_stats(&ds, None, &fm, &cfg, &mut ()).0
+        bulksync_train_with_stats(&ds, None, &fm, &cfg, &mut ()).unwrap().0
     };
     let cont = run(RowStrategy::Contiguous);
     let bal = run(RowStrategy::NnzBalanced);
