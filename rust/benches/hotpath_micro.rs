@@ -523,7 +523,152 @@ fn main() -> anyhow::Result<()> {
     );
     std::fs::remove_dir_all(&tmp).ok();
 
+    section("cluster: per-epoch wall clock, in-process vs multi-process (housing, P=2, 3 iters)");
+    // Same experiment twice: once as threads in this process, once as a
+    // real `dsfacto driver` + 2 `dsfacto worker` subprocess ring over the
+    // same shard cache. The gap is the cross-process tax (TCP hops,
+    // control-plane epochs, process startup amortized over 3 iterations).
+    let ctmp = std::env::temp_dir().join("dsfacto_bench_cluster");
+    std::fs::remove_dir_all(&ctmp).ok();
+    std::fs::create_dir_all(&ctmp)?;
+    let cds = synth::table2_dataset("housing", 5)?;
+    let ccache = ctmp.join("cache");
+    dsfacto::data::cache::write_cache(
+        &cds,
+        dsfacto::partition::RowStrategy::Contiguous,
+        2,
+        &ccache,
+    )?;
+    let citers = 3usize;
+    let mut ccfg = dsfacto::config::ExperimentConfig {
+        trainer: dsfacto::config::TrainerKind::Nomad,
+        workers: 2,
+        outer_iters: citers,
+        eta: dsfacto::optim::LrSchedule::Constant(0.5),
+        eval_every: usize::MAX,
+        ..Default::default()
+    };
+    ccfg.set("dataset", &format!("cache:{}", ccache.display()))?;
+    ccfg.set("data_cache", &ccache.display().to_string())?;
+    ccfg.set("cols_per_token", "5")?;
+    let ctrainer = ccfg.trainer.build(&ccfg);
+    let sw = dsfacto::util::timer::Stopwatch::start();
+    ctrainer.fit(&cds, None, &mut ())?;
+    let inproc_epoch = sw.secs() / citers as f64;
+    println!("  in-process:    {:.1} ms/epoch", inproc_epoch * 1e3);
+    report.record_value("cluster epoch_secs inprocess (housing P=2)", inproc_epoch);
+    match cluster_driver_secs(&ccache, citers) {
+        Ok(total) => {
+            let mp_epoch = total / citers as f64;
+            println!(
+                "  multi-process: {:.1} ms/epoch ({:.1}x in-process)",
+                mp_epoch * 1e3,
+                mp_epoch / inproc_epoch.max(1e-12)
+            );
+            report.record_value("cluster epoch_secs multiprocess (housing P=2)", mp_epoch);
+        }
+        // Sandboxed environments without loopback sockets still get the
+        // rest of the report.
+        Err(e) => eprintln!("  skipping the multi-process cluster bench: {e:#}"),
+    }
+    std::fs::remove_dir_all(&ctmp).ok();
+
     report.write(&json_path)?;
     println!("\nwrote {json_path} ({} entries)", report.entries.len());
     Ok(())
+}
+
+/// Runs one driver + 2 worker subprocess ring over `cache` and returns
+/// the driver's wall time from worker launch to exit.
+fn cluster_driver_secs(cache: &std::path::Path, iters: usize) -> anyhow::Result<f64> {
+    use std::io::BufRead;
+    use std::process::{Command, Stdio};
+    use std::time::{Duration, Instant};
+
+    let bin = env!("CARGO_BIN_EXE_dsfacto");
+    let dataset = format!("cache:{}", cache.display());
+    let mut driver = Command::new(bin)
+        .args([
+            "driver",
+            "--dataset",
+            &dataset,
+            "--workers",
+            "2",
+            "--outer-iters",
+            &iters.to_string(),
+            "--eta",
+            "constant:0.5",
+            "--seed",
+            "5",
+            "--cols-per-token",
+            "5",
+            "--addr",
+            "127.0.0.1:0",
+            "--quiet",
+        ])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .spawn()?;
+    let stdout = driver.stdout.take().expect("driver stdout piped");
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut addr = None;
+    let mut line = String::new();
+    while reader.read_line(&mut line)? > 0 {
+        if let Some(rest) = line.split("control on ").nth(1) {
+            addr = Some(rest.trim().to_string());
+            break;
+        }
+        line.clear();
+    }
+    let Some(addr) = addr else {
+        let _ = driver.kill();
+        let _ = driver.wait();
+        anyhow::bail!("driver never printed its control address");
+    };
+
+    let sw = Instant::now();
+    let mut workers = Vec::new();
+    for _ in 0..2 {
+        match Command::new(bin)
+            .args(["worker", "--driver", &addr])
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .spawn()
+        {
+            Ok(w) => workers.push(w),
+            Err(e) => {
+                let _ = driver.kill();
+                for mut w in workers {
+                    let _ = w.kill();
+                }
+                return Err(e.into());
+            }
+        }
+    }
+    // Keep draining the pipe so the driver's final summary can't block it.
+    let drain = std::thread::spawn(move || {
+        let mut sink = String::new();
+        while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+            sink.clear();
+        }
+    });
+    let deadline = Instant::now() + Duration::from_secs(180);
+    let ok = loop {
+        match driver.try_wait()? {
+            Some(status) => break status.success(),
+            None if Instant::now() >= deadline => {
+                let _ = driver.kill();
+                break false;
+            }
+            None => std::thread::sleep(Duration::from_millis(50)),
+        }
+    };
+    let secs = sw.elapsed().as_secs_f64();
+    let _ = drain.join();
+    for mut w in workers {
+        let _ = w.kill();
+        let _ = w.wait();
+    }
+    anyhow::ensure!(ok, "cluster driver exited unsuccessfully");
+    Ok(secs)
 }

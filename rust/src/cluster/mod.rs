@@ -11,8 +11,12 @@
 //!   explicit, configurable network model.
 //! * [`tcp`] — a real TCP loopback transport over the same codec (used by
 //!   the multi-process integration test and available to the CLI).
+//! * [`runtime`] — the multi-process cluster runtime: a driver control
+//!   plane (membership, epoch bookkeeping, checkpoint-restart) plus the
+//!   worker process that hosts one engine worker over a remote TCP ring.
 
 pub mod codec;
+pub mod runtime;
 pub mod tcp;
 
 use std::collections::BinaryHeap;

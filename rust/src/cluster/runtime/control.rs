@@ -1,0 +1,459 @@
+//! Control-plane wire protocol between the cluster driver and its
+//! workers.
+//!
+//! Same framing discipline as the token codec ([`crate::cluster::codec`]):
+//! every frame travels as `len u32 (LE) | body`, and every body starts
+//! `magic u16 | kind u8` followed by kind-specific fields (all
+//! little-endian; strings and byte blobs are u32-length-prefixed). The
+//! magic (`0xD5FB`) is distinct from the token codec's (`0xD5FA`) so a
+//! crossed wire fails loudly instead of decoding garbage.
+//!
+//! Frame vocabulary (driver ⇄ worker):
+//!
+//! | frame        | direction | meaning                                     |
+//! |--------------|-----------|---------------------------------------------|
+//! | `Join`       | w → d     | membership: here is my token-ring address   |
+//! | `Assign`     | d → w     | rank + peer ring addresses + config + start |
+//! | `Ready`      | w → d     | shard loaded, ring listener live            |
+//! | `Start`      | d → w     | barrier release: deal tokens and run        |
+//! | `Epoch`      | w → d     | one worker's finalize report for an iter    |
+//! | `Progress`   | d → w     | iterations fully aggregated (pipeline gate) |
+//! | `Stop`       | d → w     | collect tokens at this iteration            |
+//! | `Heartbeat`  | w → d     | liveness (driver tracks last-heard times)   |
+//! | `Abort`      | d → w     | generation failed: tear down and re-`Join`  |
+//! | `FinalBlock` | w → d     | one collected token (K-strided wire bytes)  |
+//! | `Done`       | w → d     | all collected tokens sent + transport stats |
+//! | `Shutdown`   | d → w     | run complete: exit cleanly                  |
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure, Context, Result};
+
+const MAGIC: u16 = 0xD5FB;
+
+/// Upper bound on a control frame body. `FinalBlock` carries one token's
+/// wire frame, bounded by the token codec's own size caps.
+const MAX_FRAME: usize = 1 << 26;
+
+/// A control-plane message (see the module table for direction/meaning).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Worker announces itself; `ring_addr` is where its token-ring
+    /// listener accepts peer connections.
+    Join { ring_addr: String },
+    /// Driver assigns a rank, the full ring (rank-ordered peer addresses),
+    /// the experiment config (its `dump()` text), and the iteration to
+    /// start or resume from.
+    Assign {
+        rank: u32,
+        p: u32,
+        start_iter: u32,
+        peers: Vec<String>,
+        config: String,
+    },
+    /// Worker finished loading its shard and seeding its arenas.
+    Ready,
+    /// Barrier release: every worker is `Ready`, start the ring.
+    Start,
+    /// One worker's end-of-recompute report for iteration `iter`.
+    Epoch {
+        rank: u32,
+        iter: u32,
+        loss_sum: f64,
+        reg_w: f64,
+        reg_v: f64,
+    },
+    /// Absolute count of iterations the driver has fully aggregated
+    /// (feeds the engine's bounded-pipelining gate).
+    Progress { iters_done: u32 },
+    /// Collect tokens at iteration `at` (monotone: workers `fetch_min`).
+    Stop { at: u32 },
+    /// Worker liveness signal.
+    Heartbeat,
+    /// Generation failed (a worker died): tear down the ring, re-`Join`.
+    Abort,
+    /// One collected token, already in the K-strided wire form of
+    /// [`crate::cluster::codec::encode_token_padded`].
+    FinalBlock { frame: Vec<u8> },
+    /// All of this worker's collected tokens were sent; transport totals.
+    Done { messages: u64, bytes: u64 },
+    /// Run complete; worker exits.
+    Shutdown,
+}
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
+    put_u32(out, bytes.len() as u32);
+    out.extend_from_slice(bytes);
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_bytes(out, s.as_bytes());
+}
+
+/// Bounds-checked cursor over a frame body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.buf.len(),
+            "control frame truncated at byte {}",
+            self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        ensure!(n <= MAX_FRAME, "embedded blob too large: {n} bytes");
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?).context("control frame string is not UTF-8")
+    }
+
+    fn finish(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "control frame has {} trailing bytes",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+/// Serializes a frame body (no length prefix — the stream writer adds it).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    match frame {
+        Frame::Join { ring_addr } => {
+            out.push(1);
+            put_str(&mut out, ring_addr);
+        }
+        Frame::Assign {
+            rank,
+            p,
+            start_iter,
+            peers,
+            config,
+        } => {
+            out.push(2);
+            put_u32(&mut out, *rank);
+            put_u32(&mut out, *p);
+            put_u32(&mut out, *start_iter);
+            put_u32(&mut out, peers.len() as u32);
+            for peer in peers {
+                put_str(&mut out, peer);
+            }
+            put_str(&mut out, config);
+        }
+        Frame::Ready => out.push(3),
+        Frame::Start => out.push(4),
+        Frame::Epoch {
+            rank,
+            iter,
+            loss_sum,
+            reg_w,
+            reg_v,
+        } => {
+            out.push(5);
+            put_u32(&mut out, *rank);
+            put_u32(&mut out, *iter);
+            put_f64(&mut out, *loss_sum);
+            put_f64(&mut out, *reg_w);
+            put_f64(&mut out, *reg_v);
+        }
+        Frame::Progress { iters_done } => {
+            out.push(6);
+            put_u32(&mut out, *iters_done);
+        }
+        Frame::Stop { at } => {
+            out.push(7);
+            put_u32(&mut out, *at);
+        }
+        Frame::Heartbeat => out.push(8),
+        Frame::Abort => out.push(9),
+        Frame::FinalBlock { frame } => {
+            out.push(10);
+            put_bytes(&mut out, frame);
+        }
+        Frame::Done { messages, bytes } => {
+            out.push(11);
+            put_u64(&mut out, *messages);
+            put_u64(&mut out, *bytes);
+        }
+        Frame::Shutdown => out.push(12),
+    }
+    out
+}
+
+/// Deserializes a frame body.
+pub fn decode(buf: &[u8]) -> Result<Frame> {
+    let mut r = Reader { buf, pos: 0 };
+    let magic = r.u16()?;
+    ensure!(magic == MAGIC, "bad control magic {magic:#06x}");
+    let frame = match r.u8()? {
+        1 => Frame::Join {
+            ring_addr: r.string()?,
+        },
+        2 => {
+            let rank = r.u32()?;
+            let p = r.u32()?;
+            let start_iter = r.u32()?;
+            let npeers = r.u32()? as usize;
+            ensure!(npeers <= 4096, "implausible peer count {npeers}");
+            let mut peers = Vec::with_capacity(npeers);
+            for _ in 0..npeers {
+                peers.push(r.string()?);
+            }
+            Frame::Assign {
+                rank,
+                p,
+                start_iter,
+                peers,
+                config: r.string()?,
+            }
+        }
+        3 => Frame::Ready,
+        4 => Frame::Start,
+        5 => Frame::Epoch {
+            rank: r.u32()?,
+            iter: r.u32()?,
+            loss_sum: r.f64()?,
+            reg_w: r.f64()?,
+            reg_v: r.f64()?,
+        },
+        6 => Frame::Progress {
+            iters_done: r.u32()?,
+        },
+        7 => Frame::Stop { at: r.u32()? },
+        8 => Frame::Heartbeat,
+        9 => Frame::Abort,
+        10 => Frame::FinalBlock { frame: r.bytes()? },
+        11 => Frame::Done {
+            messages: r.u64()?,
+            bytes: r.u64()?,
+        },
+        12 => Frame::Shutdown,
+        other => bail!("unknown control frame kind {other}"),
+    };
+    r.finish()?;
+    Ok(frame)
+}
+
+/// Writes one length-prefixed frame. The stream handle is shared behind a
+/// mutex because heartbeats, epoch reports and final blocks come from
+/// different threads of a worker process.
+pub fn send_frame(stream: &Mutex<TcpStream>, frame: &Frame) -> Result<()> {
+    use std::io::Write;
+    let body = encode(frame);
+    let mut msg = Vec::with_capacity(body.len() + 4);
+    msg.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    msg.extend_from_slice(&body);
+    let mut s = stream.lock().unwrap();
+    s.write_all(&msg).context("control write")?;
+    s.flush().context("control flush")
+}
+
+/// Reads one length-prefixed frame from a stream that has a read timeout
+/// set. Returns `Ok(None)` if the timeout elapsed *between* frames (the
+/// caller loops and re-checks its flags); a timeout mid-frame keeps
+/// reading. Errors on EOF, shutdown (`down`), or a malformed frame.
+pub fn recv_frame(stream: &mut TcpStream, down: &AtomicBool) -> Result<Option<Frame>> {
+    let mut len4 = [0u8; 4];
+    let mut off = 0usize;
+    while off < 4 {
+        if down.load(Ordering::Relaxed) {
+            bail!("control channel shut down");
+        }
+        match stream.read(&mut len4[off..]) {
+            Ok(0) => bail!("control connection closed"),
+            Ok(n) => off += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if off == 0 {
+                    return Ok(None);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("control read"),
+        }
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    ensure!(len <= MAX_FRAME, "control frame too large: {len} bytes");
+    let mut body = vec![0u8; len];
+    let mut off = 0usize;
+    while off < len {
+        if down.load(Ordering::Relaxed) {
+            bail!("control channel shut down");
+        }
+        match stream.read(&mut body[off..]) {
+            Ok(0) => bail!("control connection closed mid-frame"),
+            Ok(n) => off += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e).context("control read body"),
+        }
+    }
+    decode(&body).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_frames() -> Vec<Frame> {
+        vec![
+            Frame::Join {
+                ring_addr: "127.0.0.1:4001".into(),
+            },
+            Frame::Assign {
+                rank: 1,
+                p: 3,
+                start_iter: 7,
+                peers: vec!["127.0.0.1:4000".into(), "127.0.0.1:4001".into()],
+                config: "dataset = housing\nworkers = 3\n".into(),
+            },
+            Frame::Ready,
+            Frame::Start,
+            Frame::Epoch {
+                rank: 2,
+                iter: 41,
+                loss_sum: 123.456,
+                reg_w: 0.25,
+                reg_v: -1.5e-9,
+            },
+            Frame::Progress { iters_done: 40 },
+            Frame::Stop { at: 50 },
+            Frame::Heartbeat,
+            Frame::Abort,
+            Frame::FinalBlock {
+                frame: vec![0xD5, 0xFA, 1, 2, 3],
+            },
+            Frame::Done {
+                messages: 9_999,
+                bytes: u64::MAX / 3,
+            },
+            Frame::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn every_frame_round_trips() {
+        for f in all_frames() {
+            let buf = encode(&f);
+            let back = decode(&buf).unwrap_or_else(|e| panic!("{f:?}: {e}"));
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[0xFA, 0xD5, 1]).is_err()); // token magic, not control
+        let mut buf = encode(&Frame::Heartbeat);
+        buf[2] = 200; // unknown kind
+        assert!(decode(&buf).is_err());
+        let mut buf = encode(&Frame::Join {
+            ring_addr: "x".into(),
+        });
+        buf.truncate(buf.len() - 1); // truncated string
+        assert!(decode(&buf).is_err());
+        let mut buf = encode(&Frame::Stop { at: 3 });
+        buf.push(0); // trailing byte
+        assert!(decode(&buf).is_err());
+    }
+
+    #[test]
+    fn frames_survive_a_tcp_stream() {
+        use std::net::TcpListener;
+        use std::sync::atomic::AtomicBool;
+        use std::time::Duration;
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = Mutex::new(TcpStream::connect(addr).unwrap());
+        let (mut server, _) = listener.accept().unwrap();
+        server
+            .set_read_timeout(Some(Duration::from_millis(50)))
+            .unwrap();
+        let down = AtomicBool::new(false);
+
+        // Timeout between frames surfaces as None, not an error.
+        assert!(recv_frame(&mut server, &down).unwrap().is_none());
+
+        for f in all_frames() {
+            send_frame(&client, &f).unwrap();
+        }
+        for f in all_frames() {
+            let got = loop {
+                if let Some(g) = recv_frame(&mut server, &down).unwrap() {
+                    break g;
+                }
+            };
+            assert_eq!(got, f);
+        }
+
+        // A dropped peer surfaces as an error.
+        drop(client);
+        let mut saw_err = false;
+        for _ in 0..100 {
+            if recv_frame(&mut server, &down).is_err() {
+                saw_err = true;
+                break;
+            }
+        }
+        assert!(saw_err, "EOF did not surface as an error");
+    }
+}

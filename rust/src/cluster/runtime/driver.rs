@@ -1,0 +1,687 @@
+//! The cluster control plane.
+//!
+//! `run_driver` owns everything the paper's decentralized design leaves
+//! *outside* the token ring: membership (wait for the expected P workers
+//! to `Join`), rank/shard assignment off the shared
+//! [`crate::partition::RowPartition`] plan, the per-epoch objective fold,
+//! heartbeat-based failure detection, and the final exact model assembly
+//! from collected tokens. Parameters never pass through the driver while
+//! training runs — workers exchange tokens peer-to-peer.
+//!
+//! ## Generations
+//!
+//! A *generation* is one attempt at running the ring to completion. When
+//! a worker dies (its control connection drops, or it goes silent past
+//! the heartbeat timeout), the driver broadcasts [`Frame::Abort`],
+//! survivors tear down their ring and re-`Join`, and the next generation
+//! restarts every worker from the newest complete block checkpoint (the
+//! largest epoch tag for which all P per-rank files exist — see
+//! [`crate::train::Checkpointer::latest_block_epoch`]). Survivors keep
+//! their ranks across generations; freed ranks go to fresh joiners in
+//! join order, so a replacement process slots into the dead worker's
+//! shard.
+
+use std::collections::BTreeMap;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::control::{self, Frame};
+use super::{col_plan_for, ClusterSpec};
+use crate::cluster::codec;
+use crate::config::{DatasetSpec, ExperimentConfig};
+use crate::data::cache::ShardCacheSource;
+use crate::data::DataSource;
+use crate::fm::FmModel;
+use crate::metrics::TracePoint;
+use crate::nomad::engine::assemble_model;
+use crate::nomad::token::Token;
+use crate::train::Checkpointer;
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// Everything `dsfacto driver` needs to run one cluster training job.
+pub struct DriverOptions {
+    /// The experiment; `cfg.cluster` must be `ClusterSpec::Driver`, and
+    /// the dataset must resolve to a shard cache directory every worker
+    /// can open.
+    pub cfg: ExperimentConfig,
+    /// Directory for per-epoch block checkpoints; `None` disables
+    /// checkpoint-restart (a failed generation then restarts from iter 0).
+    pub ckpt_dir: Option<PathBuf>,
+    /// Checkpoint every this many completed outer iterations.
+    pub ckpt_every: u32,
+    /// How long to wait for the expected P workers to join (and later to
+    /// report `Ready`) before giving up on a generation.
+    pub join_timeout: Duration,
+    /// A running worker silent for longer than this is presumed dead.
+    pub heartbeat_timeout: Duration,
+    /// Upper bound on generations (1 = no fault tolerance).
+    pub max_generations: u32,
+    /// Suppress per-iteration progress lines.
+    pub quiet: bool,
+}
+
+/// What a completed cluster run produced.
+pub struct DriverReport {
+    /// The final model, assembled exactly from the collected tokens
+    /// (engine invariant 4).
+    pub model: FmModel,
+    /// Convergence trace: iter 0 plus one point per aggregated iteration.
+    pub trace: Vec<TracePoint>,
+    /// Generations used (1 = no failures).
+    pub generations: u32,
+    /// Sum of the workers' transport message counts.
+    pub messages: u64,
+    /// Sum of the workers' transport byte counts.
+    pub bytes: u64,
+    /// Wall-clock seconds from listener-up to model assembly.
+    pub wall_secs: f64,
+}
+
+/// One control connection as the driver sees it.
+struct Conn {
+    writer: Arc<Mutex<TcpStream>>,
+    alive: bool,
+    last_heard: Instant,
+    ring_addr: Option<String>,
+    rank: Option<usize>,
+    /// The generation this connection's latest `Join` belongs to —
+    /// distinguishes a current-membership worker from stale frames of an
+    /// aborted generation still draining out of the socket.
+    joined_gen: Option<u32>,
+}
+
+/// Reader-thread events funneled into the driver's single event loop.
+enum Ev {
+    /// A new control connection was accepted.
+    Accepted(TcpStream),
+    /// A frame arrived on connection `idx`.
+    Frame(usize, Frame),
+    /// Connection `idx` closed or errored.
+    Dead(usize),
+}
+
+/// How one generation ended.
+enum GenOutcome {
+    /// Training ran to `t_max`: the full token set plus summed transport
+    /// stats from every worker's `Done`.
+    Finished {
+        tokens: Vec<Token>,
+        messages: u64,
+        bytes: u64,
+    },
+    /// A worker died; survivors were told to abort and re-join.
+    Aborted,
+}
+
+/// Sends a frame to connection `i`; on failure the connection is marked
+/// dead (its rank freed) and `false` is returned.
+fn send_to(conns: &mut [Conn], i: usize, frame: &Frame) -> bool {
+    if control::send_frame(&conns[i].writer, frame).is_ok() {
+        true
+    } else {
+        conns[i].alive = false;
+        conns[i].rank = None;
+        conns[i].joined_gen = None;
+        false
+    }
+}
+
+/// Broadcasts to every ranked member of generation `gen`; returns whether
+/// all sends landed.
+fn broadcast(conns: &mut [Conn], gen: u32, frame: &Frame) -> bool {
+    let mut ok = true;
+    for i in 0..conns.len() {
+        if conns[i].alive && conns[i].joined_gen == Some(gen) && conns[i].rank.is_some() {
+            ok &= send_to(conns, i, frame);
+        }
+    }
+    ok
+}
+
+/// Tells every live connection (ranked or not) the generation failed.
+fn abort_all(conns: &mut [Conn]) {
+    for i in 0..conns.len() {
+        if conns[i].alive {
+            // Best-effort: a failed send already marks the conn dead.
+            send_to(conns, i, &Frame::Abort);
+        }
+    }
+}
+
+/// Registers a freshly accepted control connection and spawns its reader
+/// thread (frames and death notices flow into the shared event channel).
+fn register_conn(
+    conns: &mut Vec<Conn>,
+    stream: TcpStream,
+    ev_tx: &Sender<Ev>,
+    down: &Arc<AtomicBool>,
+) {
+    let idx = conns.len();
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let reader = match stream.try_clone() {
+        Ok(r) => r,
+        Err(_) => return, // stillborn connection; nothing to track
+    };
+    let _ = reader.set_read_timeout(Some(Duration::from_millis(250)));
+    let tx = ev_tx.clone();
+    let down = Arc::clone(down);
+    let spawned = std::thread::Builder::new()
+        .name(format!("ctrl-read-{idx}"))
+        .spawn(move || {
+            let mut reader = reader;
+            loop {
+                match control::recv_frame(&mut reader, &down) {
+                    Ok(Some(f)) => {
+                        if tx.send(Ev::Frame(idx, f)).is_err() {
+                            return;
+                        }
+                    }
+                    Ok(None) => {
+                        if down.load(Ordering::Relaxed) {
+                            return;
+                        }
+                    }
+                    Err(_) => {
+                        let _ = tx.send(Ev::Dead(idx));
+                        return;
+                    }
+                }
+            }
+        });
+    if spawned.is_err() {
+        return;
+    }
+    conns.push(Conn {
+        writer: Arc::new(Mutex::new(stream)),
+        alive: true,
+        last_heard: Instant::now(),
+        ring_addr: None,
+        rank: None,
+        joined_gen: None,
+    });
+}
+
+/// Marks connection `i` dead and frees its rank.
+fn mark_dead(conns: &mut [Conn], i: usize) {
+    conns[i].alive = false;
+    conns[i].rank = None;
+    conns[i].joined_gen = None;
+}
+
+/// Runs the cluster control plane to completion and returns the final
+/// model (bitwise the in-process engine's under `update_mode =
+/// mean_gradient` at a matched schedule) plus the convergence trace.
+pub fn run_driver(opts: &DriverOptions) -> Result<DriverReport> {
+    let cfg = &opts.cfg;
+    let Some(ClusterSpec::Driver { addr, p }) = cfg.cluster.clone() else {
+        bail!("run_driver needs `cluster = driver:<addr>,p=<P>` in the config");
+    };
+    ensure!(opts.max_generations >= 1, "max_generations must be >= 1");
+
+    // The dataset must live in a shard cache both the driver (for the
+    // streaming probe) and every worker (for its shard) can open.
+    let cache_dir = match (&cfg.dataset, &cfg.data_cache) {
+        (DatasetSpec::Cache { dir }, _) => dir.clone(),
+        (_, Some(dir)) => dir.clone(),
+        _ => bail!(
+            "cluster driver needs `dataset = cache:<dir>` (or `data_cache = <dir>`): \
+             workers resolve their shards from the shared ingest cache"
+        ),
+    };
+    let src = ShardCacheSource::open(&cache_dir)
+        .with_context(|| format!("opening shard cache {cache_dir:?}"))?;
+    let n = src.n();
+    let d = src.d();
+    let k = cfg.fm.k;
+    ensure!(n > 0 && d > 0, "empty dataset in shard cache {cache_dir:?}");
+    let row_plan = src.plan(cfg.row_partition, p)?;
+    let col_plan = col_plan_for(cfg.cols_per_token, d, p);
+    let ntok = col_plan.n_blocks() + 1;
+    let t_max = cfg.outer_iters as u32;
+
+    // What ships to workers: the same experiment pinned to this ring
+    // width, with the dataset pointing at the cache. The cluster key is
+    // stripped — each worker's role comes from its own command line.
+    let ship_cfg = {
+        let mut ship = cfg.clone();
+        ship.workers = p;
+        ship.dataset = DatasetSpec::Cache {
+            dir: cache_dir.clone(),
+        };
+        ship.data_cache = None;
+        ship.cluster = None;
+        ship.dump()
+    };
+
+    // Iter-0 probe: the exact initial objective, folded shard-by-shard so
+    // the driver never materializes the full matrix.
+    let init = {
+        let mut rng = Pcg64::new(cfg.seed, 0x0ad);
+        FmModel::init(d, k, cfg.fm.init_std, &mut rng)
+    };
+    let (objective, train_loss) = crate::train::streaming_objective(
+        &src,
+        &row_plan,
+        &init,
+        cfg.fm.lambda_w,
+        cfg.fm.lambda_v,
+    )?;
+    let mut trace = vec![TracePoint {
+        iter: 0,
+        secs: 0.0,
+        objective,
+        train_loss,
+        test: None,
+    }];
+    if !opts.quiet {
+        print_point(&trace[0]);
+    }
+
+    // Control listener. The `control on <addr>` line is parsed by tests
+    // and scripts that bind port 0 — keep its shape stable.
+    let listener = TcpListener::bind(&addr).with_context(|| format!("binding driver on {addr}"))?;
+    let local = listener.local_addr()?;
+    println!("dsfacto driver: control on {local}");
+    {
+        use std::io::Write;
+        let _ = std::io::stdout().flush();
+    }
+    listener.set_nonblocking(true)?;
+
+    let (ev_tx, ev_rx) = channel::<Ev>();
+    let down = Arc::new(AtomicBool::new(false));
+    let acceptor = {
+        let tx = ev_tx.clone();
+        let down = Arc::clone(&down);
+        std::thread::Builder::new()
+            .name("ctrl-accept".into())
+            .spawn(move || loop {
+                if down.load(Ordering::Relaxed) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((s, _)) => {
+                        if tx.send(Ev::Accepted(s)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(20)),
+                }
+            })
+            .context("spawning acceptor")?
+    };
+
+    let sw = Stopwatch::start();
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut generations = 0u32;
+
+    let run = (|| -> Result<(Vec<Token>, u64, u64)> {
+        for gen in 0..opts.max_generations {
+            generations = gen + 1;
+            let start_iter = match &opts.ckpt_dir {
+                Some(dir) => Checkpointer::latest_block_epoch(dir, p)?.unwrap_or(0).min(t_max),
+                None => 0,
+            };
+            if gen > 0 {
+                // Drop trace points the aborted generation recorded past
+                // the restart iteration — they'll be re-aggregated.
+                trace.retain(|pt| pt.iter <= start_iter as usize);
+                if !opts.quiet {
+                    println!(
+                        "dsfacto driver: generation {} restarting from iteration {start_iter}",
+                        gen + 1
+                    );
+                }
+            }
+            match run_generation(
+                opts,
+                &ev_rx,
+                &ev_tx,
+                &down,
+                &mut conns,
+                gen,
+                p,
+                start_iter,
+                t_max,
+                n,
+                ntok,
+                &ship_cfg,
+                &sw,
+                &mut trace,
+            )? {
+                GenOutcome::Finished {
+                    tokens,
+                    messages,
+                    bytes,
+                } => return Ok((tokens, messages, bytes)),
+                GenOutcome::Aborted => continue,
+            }
+        }
+        bail!(
+            "cluster run failed: {} generation(s) exhausted without completing",
+            opts.max_generations
+        )
+    })();
+
+    down.store(true, Ordering::SeqCst);
+    drop(ev_tx);
+    let _ = acceptor.join();
+
+    let (tokens, messages, bytes) = run?;
+    let model = assemble_model(tokens, &col_plan, d, k, t_max)?;
+    Ok(DriverReport {
+        model,
+        trace,
+        generations,
+        messages,
+        bytes,
+        wall_secs: sw.secs(),
+    })
+}
+
+fn print_point(pt: &TracePoint) {
+    println!(
+        "iter {:>4} t={:>8.3}s objective={:.6} train_loss={:.6}",
+        pt.iter, pt.secs, pt.objective, pt.train_loss
+    );
+}
+
+/// One generation: membership, assignment, barrier, epoch aggregation,
+/// token drain. Returns `Aborted` (after telling everyone) on any worker
+/// failure; hard errors (join timeout, malformed state) bubble up.
+#[allow(clippy::too_many_arguments)]
+fn run_generation(
+    opts: &DriverOptions,
+    ev_rx: &Receiver<Ev>,
+    ev_tx: &Sender<Ev>,
+    down: &Arc<AtomicBool>,
+    conns: &mut Vec<Conn>,
+    gen: u32,
+    p: usize,
+    start_iter: u32,
+    t_max: u32,
+    n: usize,
+    ntok: usize,
+    ship_cfg: &str,
+    sw: &Stopwatch,
+    trace: &mut Vec<TracePoint>,
+) -> Result<GenOutcome> {
+    let cfg = &opts.cfg;
+
+    // ---- Membership: wait for P live `Join`s tagged with this generation.
+    let deadline = Instant::now() + opts.join_timeout;
+    loop {
+        let joined = conns
+            .iter()
+            .filter(|c| c.alive && c.joined_gen == Some(gen))
+            .count();
+        if joined >= p {
+            break;
+        }
+        ensure!(
+            Instant::now() < deadline,
+            "only {joined}/{p} workers joined within {:?}",
+            opts.join_timeout
+        );
+        match ev_rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(Ev::Accepted(s)) => register_conn(conns, s, ev_tx, down),
+            Ok(Ev::Frame(i, f)) => {
+                conns[i].last_heard = Instant::now();
+                if let Frame::Join { ring_addr } = f {
+                    // A conn marked dead by a missed heartbeat can come
+                    // back here; it lost its rank, not its socket.
+                    conns[i].alive = true;
+                    conns[i].ring_addr = Some(ring_addr);
+                    conns[i].joined_gen = Some(gen);
+                }
+                // Anything else is a stale frame from an aborted
+                // generation still draining: ignore it.
+            }
+            Ok(Ev::Dead(i)) => mark_dead(conns, i),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => bail!("driver event channel closed"),
+        }
+    }
+
+    // ---- Rank assignment: survivors keep their ranks, freed ranks go to
+    // fresh joiners in join (= accept) order.
+    let members: Vec<usize> = conns
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.alive && c.joined_gen == Some(gen))
+        .map(|(i, _)| i)
+        .take(p)
+        .collect();
+    let mut used = vec![false; p];
+    for &i in &members {
+        match conns[i].rank {
+            Some(r) if r < p && !used[r] => used[r] = true,
+            _ => conns[i].rank = None,
+        }
+    }
+    let mut free: Vec<usize> = (0..p).rev().filter(|&r| !used[r]).collect();
+    for &i in &members {
+        if conns[i].rank.is_none() {
+            conns[i].rank = free.pop();
+        }
+    }
+    let mut peers = vec![String::new(); p];
+    for &i in &members {
+        let (Some(r), Some(a)) = (conns[i].rank, conns[i].ring_addr.clone()) else {
+            bail!("membership bookkeeping lost a rank or ring address");
+        };
+        peers[r] = a;
+    }
+    ensure!(
+        peers.iter().all(|a| !a.is_empty()),
+        "ring address table has holes"
+    );
+
+    for &i in &members {
+        let assign = Frame::Assign {
+            rank: conns[i].rank.unwrap() as u32,
+            p: p as u32,
+            start_iter,
+            peers: peers.clone(),
+            config: ship_cfg.to_string(),
+        };
+        if !send_to(conns, i, &assign) {
+            abort_all(conns);
+            return Ok(GenOutcome::Aborted);
+        }
+    }
+
+    // ---- Barrier: every worker loads its shard and reports Ready.
+    let deadline = Instant::now() + opts.join_timeout;
+    let mut ready = 0usize;
+    while ready < p {
+        ensure!(
+            Instant::now() < deadline,
+            "only {ready}/{p} workers became ready within {:?}",
+            opts.join_timeout
+        );
+        match ev_rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(Ev::Accepted(s)) => register_conn(conns, s, ev_tx, down),
+            Ok(Ev::Frame(i, f)) => {
+                conns[i].last_heard = Instant::now();
+                if matches!(f, Frame::Ready)
+                    && conns[i].joined_gen == Some(gen)
+                    && conns[i].rank.is_some()
+                {
+                    ready += 1;
+                }
+            }
+            Ok(Ev::Dead(i)) => {
+                let ranked = conns[i].rank.is_some() && conns[i].joined_gen == Some(gen);
+                mark_dead(conns, i);
+                if ranked {
+                    abort_all(conns);
+                    return Ok(GenOutcome::Aborted);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => bail!("driver event channel closed"),
+        }
+    }
+
+    if !broadcast(conns, gen, &Frame::Start) {
+        abort_all(conns);
+        return Ok(GenOutcome::Aborted);
+    }
+
+    // ---- Epoch aggregation + token drain. Per-connection frame order
+    // means a worker's FinalBlocks can arrive while a slower peer's Epoch
+    // reports are still pending, so both phases share one event loop.
+    let target = t_max - start_iter;
+    let mut completions = 0u32;
+    let mut slots: BTreeMap<u32, Vec<Option<(f64, f64, f64)>>> = BTreeMap::new();
+    let mut final_frames: Vec<Vec<u8>> = Vec::with_capacity(ntok);
+    let mut dones = 0usize;
+    let mut messages = 0u64;
+    let mut bytes = 0u64;
+    // Once aggregation is done the remaining drain is bounded work; give
+    // it its own generous deadline instead of the heartbeat cadence.
+    let mut drain_deadline: Option<Instant> = None;
+
+    loop {
+        if completions >= target && final_frames.len() == ntok && dones == p {
+            break;
+        }
+        let now = Instant::now();
+        if completions >= target && drain_deadline.is_none() {
+            drain_deadline = Some(now + Duration::from_secs(120));
+        }
+        if let Some(dl) = drain_deadline {
+            ensure!(
+                now < dl,
+                "token drain timed out: {}/{ntok} blocks, {dones}/{p} done frames",
+                final_frames.len()
+            );
+        }
+        // Failure detection: a ranked worker silent past the heartbeat
+        // timeout is presumed dead.
+        for i in 0..conns.len() {
+            if conns[i].alive
+                && conns[i].joined_gen == Some(gen)
+                && conns[i].rank.is_some()
+                && now.duration_since(conns[i].last_heard) > opts.heartbeat_timeout
+            {
+                mark_dead(conns, i);
+                abort_all(conns);
+                return Ok(GenOutcome::Aborted);
+            }
+        }
+        match ev_rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(Ev::Accepted(s)) => register_conn(conns, s, ev_tx, down),
+            Ok(Ev::Frame(i, f)) => {
+                conns[i].last_heard = Instant::now();
+                if conns[i].joined_gen != Some(gen) || conns[i].rank.is_none() {
+                    continue; // stale traffic from an aborted generation
+                }
+                match f {
+                    Frame::Epoch {
+                        rank,
+                        iter,
+                        loss_sum,
+                        reg_w,
+                        reg_v,
+                    } => {
+                        ensure!((rank as usize) < p, "epoch report from rank {rank} >= {p}");
+                        let slot = slots.entry(iter).or_insert_with(|| vec![None; p]);
+                        slot[rank as usize] = Some((loss_sum, reg_w, reg_v));
+                        if slot.iter().all(|s| s.is_some()) {
+                            let vals = slots.remove(&iter).unwrap();
+                            // Rank-ordered fold: deterministic across
+                            // arrival orders (the in-process driver folds
+                            // in arrival order, which can differ in final
+                            // ULPs of the *trace* — the model equality
+                            // guarantee is unaffected).
+                            let (mut ls, mut rw, mut rv) = (0.0f64, 0.0f64, 0.0f64);
+                            for v in vals {
+                                let (l, w, vv) = v.unwrap();
+                                ls += l;
+                                rw += w;
+                                rv += vv;
+                            }
+                            let train_loss = ls / n as f64;
+                            let objective = train_loss
+                                + 0.5 * cfg.fm.lambda_w as f64 * rw
+                                + 0.5 * cfg.fm.lambda_v as f64 * rv;
+                            completions += 1;
+                            // Publish progress before anything slow: the
+                            // workers' pipelining gate rides on this.
+                            if !broadcast(
+                                conns,
+                                gen,
+                                &Frame::Progress {
+                                    iters_done: start_iter + completions,
+                                },
+                            ) {
+                                abort_all(conns);
+                                return Ok(GenOutcome::Aborted);
+                            }
+                            let pt = TracePoint {
+                                iter: iter as usize + 1,
+                                secs: sw.secs(),
+                                objective,
+                                train_loss,
+                                test: None,
+                            };
+                            if !opts.quiet {
+                                print_point(&pt);
+                            }
+                            trace.push(pt);
+                        }
+                    }
+                    Frame::FinalBlock { frame } => {
+                        ensure!(
+                            final_frames.len() < ntok,
+                            "more than {ntok} final blocks arrived"
+                        );
+                        final_frames.push(frame);
+                    }
+                    Frame::Done {
+                        messages: m,
+                        bytes: b,
+                    } => {
+                        dones += 1;
+                        messages += m;
+                        bytes += b;
+                    }
+                    // Heartbeats already refreshed last_heard; a stray
+                    // Join here belongs to the next generation's loop.
+                    _ => {}
+                }
+            }
+            Ok(Ev::Dead(i)) => {
+                let ranked = conns[i].rank.is_some() && conns[i].joined_gen == Some(gen);
+                mark_dead(conns, i);
+                if ranked {
+                    abort_all(conns);
+                    return Ok(GenOutcome::Aborted);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => bail!("driver event channel closed"),
+        }
+    }
+
+    let mut tokens = Vec::with_capacity(ntok);
+    for frame in &final_frames {
+        tokens.push(codec::decode_token_padded(frame).context("decoding a final block")?);
+    }
+    broadcast(conns, gen, &Frame::Shutdown);
+    Ok(GenOutcome::Finished {
+        tokens,
+        messages,
+        bytes,
+    })
+}

@@ -1,0 +1,163 @@
+//! The multi-process cluster runtime: `dsfacto driver` + P x `dsfacto
+//! worker` running the NOMAD token ring across OS processes.
+//!
+//! The division of labor mirrors the paper's no-parameter-server design
+//! (Figs. 1-2, Algorithm 2): the driver is a *control plane only* —
+//! membership, rank assignment, epoch bookkeeping, the convergence probe,
+//! and final model assembly from collected tokens. Parameters never pass
+//! through it during training; they circulate worker-to-worker on a
+//! cross-process [`crate::cluster::TcpTransport`] ring, exactly the
+//! in-process engine's data path over a different medium.
+//!
+//! * [`control`] — the length-prefixed control-frame codec (join/assign/
+//!   barrier/epoch/stop frames) and its blocking stream IO.
+//! * [`driver`] — the control plane: expected-P membership with a join
+//!   timeout, rank/shard assignment from the shared
+//!   [`crate::partition::RowPartition`] plan, per-epoch objective
+//!   aggregation, heartbeat-based failure detection, and
+//!   checkpoint-restart generations.
+//! * [`worker`] — one engine [`crate::nomad`] worker hosted in its own
+//!   process: resolves its shard from a `cache:<dir>` via
+//!   [`crate::data::cache::ShardCacheSource`], reproduces the token deal
+//!   from `(seed, p)`, and streams per-epoch block checkpoints through
+//!   [`crate::train::Checkpointer`].
+//!
+//! Determinism: with the engine's deferred-sorted recompute fold, a
+//! MeanGradient ring is bitwise deterministic at any P given identical
+//! shards, seed, and column plan — so a P-process ring reproduces the
+//! in-process P-worker model exactly (pinned by `rust/tests/
+//! cluster_e2e.rs`). `update_mode = stochastic` remains timing-sensitive
+//! (its RNG draw order depends on token arrival order) and carries no
+//! cross-process equality guarantee.
+
+pub mod control;
+pub mod driver;
+pub mod worker;
+
+pub use driver::{run_driver, DriverOptions, DriverReport};
+pub use worker::{run_worker, WorkerOptions};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::partition::ColPartition;
+
+/// The `cluster = ...` config key: which role this process plays in a
+/// multi-process run. `None` (the default) runs everything in-process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClusterSpec {
+    /// `driver:<addr>,p=<P>` — bind the control plane on `addr` and wait
+    /// for `p` workers to join.
+    Driver {
+        /// Control-plane bind address (`host:port`; port 0 = ephemeral).
+        addr: String,
+        /// Expected worker count.
+        p: usize,
+    },
+    /// `worker:<addr>` — join the driver listening on `addr`.
+    Worker {
+        /// The driver's control-plane address.
+        driver: String,
+    },
+}
+
+impl ClusterSpec {
+    /// Parses `driver:<addr>,p=<P>` / `worker:<addr>`.
+    pub fn parse(s: &str) -> Result<ClusterSpec> {
+        let s = s.trim();
+        if let Some(rest) = s.strip_prefix("driver:") {
+            let Some((addr, p)) = rest.rsplit_once(",p=") else {
+                bail!("cluster driver spec needs `,p=<P>`: {s:?} (want driver:<addr>,p=<P>)");
+            };
+            ensure!(!addr.is_empty(), "cluster driver spec has empty address: {s:?}");
+            let p: usize = p
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad worker count in cluster spec {s:?}"))?;
+            ensure!(p >= 1, "cluster driver needs p >= 1: {s:?}");
+            Ok(ClusterSpec::Driver {
+                addr: addr.to_string(),
+                p,
+            })
+        } else if let Some(addr) = s.strip_prefix("worker:") {
+            ensure!(!addr.is_empty(), "cluster worker spec has empty address: {s:?}");
+            Ok(ClusterSpec::Worker {
+                driver: addr.to_string(),
+            })
+        } else {
+            bail!("unknown cluster role in {s:?} (want driver:<addr>,p=<P> or worker:<addr>)")
+        }
+    }
+
+    /// Canonical spec string (round-trips through [`ClusterSpec::parse`]).
+    pub fn spec(&self) -> String {
+        match self {
+            ClusterSpec::Driver { addr, p } => format!("driver:{addr},p={p}"),
+            ClusterSpec::Worker { driver } => format!("worker:{driver}"),
+        }
+    }
+}
+
+/// The column-block grid for a run, from the config knob: `0` = the auto
+/// heuristic, otherwise a fixed block size. Driver and workers must agree
+/// on this (both derive it from the same shipped config), and it must
+/// match what the in-process engine would pick for the equality guarantee
+/// to hold.
+pub(crate) fn col_plan_for(cols_per_token: usize, d: usize, p: usize) -> ColPartition {
+    if cols_per_token == 0 {
+        ColPartition::auto(d, p)
+    } else {
+        ColPartition::with_block_size(d, cols_per_token)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_spec_parses_and_round_trips() {
+        let d = ClusterSpec::parse("driver:0.0.0.0:4700,p=8").unwrap();
+        assert_eq!(
+            d,
+            ClusterSpec::Driver {
+                addr: "0.0.0.0:4700".into(),
+                p: 8
+            }
+        );
+        assert_eq!(ClusterSpec::parse(&d.spec()).unwrap(), d);
+        let w = ClusterSpec::parse("worker:10.1.2.3:4700").unwrap();
+        assert_eq!(
+            w,
+            ClusterSpec::Worker {
+                driver: "10.1.2.3:4700".into()
+            }
+        );
+        assert_eq!(ClusterSpec::parse(&w.spec()).unwrap(), w);
+    }
+
+    #[test]
+    fn cluster_spec_rejects_malformed_input() {
+        for bad in [
+            "",
+            "driver:",
+            "driver:127.0.0.1:4700",      // missing ,p=
+            "driver:,p=2",                // empty address
+            "driver:127.0.0.1:4700,p=0",  // zero workers
+            "driver:127.0.0.1:4700,p=xy", // non-numeric count
+            "worker:",
+            "peer:127.0.0.1:4700", // unknown role
+        ] {
+            assert!(ClusterSpec::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn col_plan_matches_engine_choice() {
+        // 0 = auto heuristic (what the in-process engine picks); nonzero
+        // pins the block size exactly.
+        let auto = col_plan_for(0, 13, 2);
+        assert_eq!(auto.d(), 13);
+        let fixed = col_plan_for(5, 13, 2);
+        assert_eq!(fixed.block_size(), 5);
+        assert_eq!(fixed.n_blocks(), 3); // 5 + 5 + 3
+    }
+}

@@ -1,0 +1,597 @@
+//! One engine worker hosted in its own OS process.
+//!
+//! `run_worker` is the body of `dsfacto worker`: connect to the driver's
+//! control plane (with retry — workers may start before the driver),
+//! `Join` with a freshly bound token-ring listener, and on `Assign`
+//! resolve the assigned shard from the shared cache, rebuild the token
+//! deal from `(seed, p)`, and run one [`crate::nomad::engine::Worker`]
+//! over a cross-process [`TcpTransport`] ring.
+//!
+//! While the engine thread runs, a relay loop on the main thread:
+//!
+//! * forwards the engine's finalize reports to the driver as
+//!   [`Frame::Epoch`],
+//! * persists the per-epoch block checkpoint stream through
+//!   [`Checkpointer::save_blocks`],
+//! * applies `Progress` / `Stop` frames to the engine's pipelining gate,
+//! * heartbeats, and
+//! * detects completion: the engine has finalized its last iteration
+//!   *and* all of this rank's dealt tokens returned (a token always
+//!   drains back to its deal rank — each phase is exactly P hops around
+//!   the ring, so a token ends every phase where it started it). The
+//!   explicit finalize condition matters for ranks dealt zero tokens:
+//!   their collector count is trivially complete from the start, but the
+//!   process must keep forwarding ring traffic until the run ends.
+//!
+//! On `Abort` the worker tears the ring down and re-`Join`s with a fresh
+//! listener; the driver's next `Assign` carries the restart iteration,
+//! and the worker reloads the model from all P per-rank checkpoint files
+//! (every worker reassembles the same global model, then keeps only its
+//! own dealt tokens and its own shard's arenas).
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::col_plan_for;
+use super::control::{self, Frame};
+use crate::cluster::codec;
+use crate::cluster::tcp::TcpTransport;
+use crate::cluster::Transport;
+use crate::config::{DatasetSpec, ExperimentConfig};
+use crate::data::cache::ShardCacheSource;
+use crate::data::DataSource;
+use crate::fm::FmModel;
+use crate::kernel::{padded_k, FmKernel};
+use crate::nomad::engine::{
+    assemble_model, deal_ranks, deal_tokens, seed_arenas, CkptHook, CkptMsg, FinalizePost, Shared,
+    Worker,
+};
+use crate::nomad::token::Token;
+use crate::partition;
+use crate::train::Checkpointer;
+use crate::util::rng::Pcg64;
+
+/// Everything `dsfacto worker` needs to serve one cluster.
+pub struct WorkerOptions {
+    /// The driver's control-plane address.
+    pub driver_addr: String,
+    /// Shard cache override; by default the worker uses the cache
+    /// directory named in the driver-shipped config.
+    pub data_cache: Option<String>,
+    /// Where to write per-epoch block checkpoints (and read them back on
+    /// a restart `Assign`). `None` disables checkpointing.
+    pub ckpt_dir: Option<PathBuf>,
+    /// Checkpoint every this many completed outer iterations.
+    pub ckpt_every: u32,
+    /// How long to keep retrying the initial control connection.
+    pub connect_timeout: Duration,
+}
+
+/// Control-channel events funneled from the reader thread.
+enum CtrlEv {
+    Frame(Frame),
+    Dead,
+}
+
+/// Why the relay loop stopped.
+enum RelayEnd {
+    /// Training finished; tokens are in the collector.
+    Completed,
+    /// Driver aborted the generation: tear down and re-join.
+    Aborted,
+    /// The control connection died: nothing left to coordinate with.
+    ControlLost,
+}
+
+/// Connects with bounded-backoff retry until `timeout` elapses.
+fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    let mut backoff = Duration::from_millis(50);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() + backoff >= deadline {
+                    return Err(e).with_context(|| {
+                        format!("connecting to driver {addr} (gave up after {timeout:?})")
+                    });
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
+/// Sends a heartbeat if the cadence interval elapsed.
+fn maybe_heartbeat(ctrl: &Mutex<TcpStream>, last: &mut Instant) -> Result<()> {
+    if last.elapsed() >= Duration::from_millis(500) {
+        control::send_frame(ctrl, &Frame::Heartbeat).context("heartbeat")?;
+        *last = Instant::now();
+    }
+    Ok(())
+}
+
+/// Persists one completed checkpoint epoch (best-effort: a failed write
+/// costs restart depth, not the run).
+fn save_epoch(
+    ckpt_dir: &Option<PathBuf>,
+    rank: usize,
+    tag: u32,
+    pending: &mut HashMap<u32, Vec<Token>>,
+    k: usize,
+) {
+    let blocks = pending.remove(&tag).unwrap_or_default();
+    if let Some(dir) = ckpt_dir {
+        if let Err(e) = Checkpointer::save_blocks(dir, rank, tag, &blocks, k) {
+            eprintln!("dsfacto worker: checkpoint write failed at epoch {tag}: {e:#}");
+        }
+    }
+}
+
+/// Runs the worker process until the driver shuts the cluster down (or
+/// the control channel is lost / a generation cannot be served).
+pub fn run_worker(opts: &WorkerOptions) -> Result<()> {
+    let ctrl_raw = connect_with_retry(&opts.driver_addr, opts.connect_timeout)?;
+    let _ = ctrl_raw.set_nodelay(true);
+    let _ = ctrl_raw.set_write_timeout(Some(Duration::from_secs(10)));
+    // The IP the driver (and thus the other workers) can reach us on is
+    // whatever interface this control connection went out of.
+    let local_ip = ctrl_raw.local_addr()?.ip();
+
+    let (ctrl_tx, ctrl_rx) = channel::<CtrlEv>();
+    let ctrl_down = Arc::new(AtomicBool::new(false));
+    {
+        let mut reader = ctrl_raw.try_clone().context("cloning control stream")?;
+        reader.set_read_timeout(Some(Duration::from_millis(250)))?;
+        let tx = ctrl_tx.clone();
+        let down = Arc::clone(&ctrl_down);
+        std::thread::Builder::new()
+            .name("ctrl-read".into())
+            .spawn(move || loop {
+                match control::recv_frame(&mut reader, &down) {
+                    Ok(Some(f)) => {
+                        if tx.send(CtrlEv::Frame(f)).is_err() {
+                            return;
+                        }
+                    }
+                    Ok(None) => {
+                        if down.load(Ordering::Relaxed) {
+                            return;
+                        }
+                    }
+                    Err(_) => {
+                        let _ = tx.send(CtrlEv::Dead);
+                        return;
+                    }
+                }
+            })
+            .context("spawning control reader")?;
+    }
+    let ctrl = Mutex::new(ctrl_raw);
+
+    let result = worker_loop(opts, &ctrl, &ctrl_rx, local_ip);
+    ctrl_down.store(true, Ordering::SeqCst);
+    result
+}
+
+/// The generation loop: join, serve, and either exit on `Shutdown` or
+/// re-join after `Abort`.
+fn worker_loop(
+    opts: &WorkerOptions,
+    ctrl: &Mutex<TcpStream>,
+    ctrl_rx: &Receiver<CtrlEv>,
+    local_ip: std::net::IpAddr,
+) -> Result<()> {
+    loop {
+        // Fresh ring listener per generation: the old ring's peers may
+        // still be flushing frames at the old port.
+        let ring_listener = TcpListener::bind((local_ip, 0))
+            .or_else(|_| TcpListener::bind("0.0.0.0:0"))
+            .context("binding ring listener")?;
+        let ring_addr = format!("{}:{}", local_ip, ring_listener.local_addr()?.port());
+        control::send_frame(
+            ctrl,
+            &Frame::Join {
+                ring_addr: ring_addr.clone(),
+            },
+        )
+        .context("sending Join")?;
+
+        // ---- Await Assign (tolerating one full generation of delay: a
+        // replacement worker can join while the old generation is mid-run).
+        // The Join is re-sent every couple of seconds: a Join that lands
+        // while the driver's *previous* generation is still aborting gets
+        // discarded as stale traffic, so keep knocking until a membership
+        // round actually hears us (the driver handles repeats
+        // idempotently).
+        let assign_deadline = Instant::now() + opts.connect_timeout + Duration::from_secs(60);
+        let mut last_hb = Instant::now();
+        let mut last_join = Instant::now();
+        let (rank, p, start_iter, peers, config) = loop {
+            ensure!(
+                Instant::now() < assign_deadline,
+                "no assignment from driver within the join window"
+            );
+            maybe_heartbeat(ctrl, &mut last_hb)?;
+            if last_join.elapsed() >= Duration::from_secs(2) {
+                control::send_frame(
+                    ctrl,
+                    &Frame::Join {
+                        ring_addr: ring_addr.clone(),
+                    },
+                )
+                .context("re-sending Join")?;
+                last_join = Instant::now();
+            }
+            match ctrl_rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(CtrlEv::Frame(Frame::Assign {
+                    rank,
+                    p,
+                    start_iter,
+                    peers,
+                    config,
+                })) => break (rank as usize, p as usize, start_iter, peers, config),
+                Ok(CtrlEv::Frame(Frame::Shutdown)) => return Ok(()),
+                Ok(CtrlEv::Frame(_)) | Err(RecvTimeoutError::Timeout) => {}
+                Ok(CtrlEv::Dead) | Err(RecvTimeoutError::Disconnected) => {
+                    bail!("control connection lost while awaiting assignment")
+                }
+            }
+        };
+        ensure!(rank < p && p >= 1, "bad assignment: rank {rank} of {p}");
+        ensure!(peers.len() == p, "assignment names {} peers, want {p}", peers.len());
+
+        // ---- Resolve the experiment and this rank's shard.
+        let cfg = ExperimentConfig::parse_str(&config).context("parsing shipped config")?;
+        let cache_dir = opts
+            .data_cache
+            .clone()
+            .or_else(|| cfg.data_cache.clone())
+            .or_else(|| match &cfg.dataset {
+                DatasetSpec::Cache { dir } => Some(dir.clone()),
+                _ => None,
+            })
+            .context("no shard cache: pass --data-cache or ship dataset = cache:<dir>")?;
+        let src = ShardCacheSource::open(&cache_dir)
+            .with_context(|| format!("opening shard cache {cache_dir:?}"))?;
+        let n = src.n();
+        let d = src.d();
+        let k = cfg.fm.k;
+        let kp = padded_k(k);
+        let row_plan = src.plan(cfg.row_partition, p)?;
+        let shard = src.shard(&row_plan, rank)?;
+        let col_plan = col_plan_for(cfg.cols_per_token, d, p);
+        let ntok = col_plan.n_blocks() + 1;
+        let t_max = cfg.outer_iters as u32;
+        ensure!(start_iter <= t_max, "assigned start {start_iter} > t_max {t_max}");
+
+        // ---- Reproduce the deal; restore or initialize the model.
+        let ranks = deal_ranks(ntok, cfg.seed, p);
+        let expected_local = ranks.iter().filter(|&&r| r == rank).count();
+        let (model, my_tokens) = if start_iter == 0 {
+            let mut rng = Pcg64::new(cfg.seed, 0x0ad);
+            let init = FmModel::init(d, k, cfg.fm.init_std, &mut rng);
+            let kern = FmKernel::from_model(&init);
+            let mine: Vec<Token> = deal_tokens(&init, &kern, &col_plan, 0)
+                .into_iter()
+                .zip(&ranks)
+                .filter(|&(_, &r)| r == rank)
+                .map(|(t, _)| t)
+                .collect();
+            (init, mine)
+        } else {
+            let dir = opts
+                .ckpt_dir
+                .as_ref()
+                .context("driver assigned a checkpoint restart but --ckpt-dir is not set")?;
+            let mut all: Vec<Token> = Vec::with_capacity(ntok);
+            for r in 0..p {
+                let path = dir.join(Checkpointer::block_file_name(r, start_iter));
+                let (_, iter, toks) = Checkpointer::load_blocks(&path)
+                    .with_context(|| format!("loading checkpoint {path:?}"))?;
+                ensure!(iter == start_iter, "checkpoint {path:?} is for epoch {iter}");
+                all.extend(toks);
+            }
+            let mine: Vec<Token> = all
+                .iter()
+                .filter(|t| {
+                    let idx = if t.is_bias() { ntok - 1 } else { t.j as usize };
+                    ranks[idx] == rank
+                })
+                .cloned()
+                .collect();
+            let model = assemble_model(all, &col_plan, d, k, start_iter)?;
+            (model, mine)
+        };
+
+        // ---- Ring transport over the assigned peer table.
+        let mut peer_addrs = Vec::with_capacity(p);
+        for peer in &peers {
+            let addr = peer
+                .to_socket_addrs()
+                .with_context(|| format!("resolving ring peer {peer}"))?
+                .next()
+                .with_context(|| format!("ring peer {peer} resolved to nothing"))?;
+            peer_addrs.push(addr);
+        }
+        let transport = TcpTransport::remote(
+            rank,
+            ring_listener,
+            peer_addrs,
+            Some(k),
+            Duration::from_secs(30),
+        )?;
+
+        // ---- Arenas seeded from the (initial or restored) model.
+        let kern = FmKernel::from_model(&model);
+        let (arenas, scratch) = seed_arenas(&shard, &kern, k);
+        let partition::Shard { task, cols, labels, .. } = shard;
+
+        let (post_tx, post_rx) = channel::<FinalizePost>();
+        let (ckpt_tx, ckpt_rx) = channel::<CkptMsg>();
+        let shared = Shared {
+            transport: &*transport,
+            mirror: None,
+            collector: Mutex::new(Vec::with_capacity(ntok)),
+            collected: AtomicUsize::new(0),
+            done: AtomicBool::new(false),
+            update_visits: AtomicU64::new(0),
+            coordinate_updates: AtomicU64::new(0),
+            holdback_peak: AtomicUsize::new(0),
+            busy_secs: Mutex::new(vec![0.0; p]),
+            stop_at: AtomicU32::new(u32::MAX),
+            driver_iters: AtomicU32::new(start_iter),
+        };
+        let mut engine = Worker {
+            id: rank,
+            p,
+            ntok,
+            n_total: n,
+            t_max,
+            k,
+            kp,
+            col_plan,
+            task,
+            eta: cfg.eta,
+            lambda_w: cfg.fm.lambda_w,
+            lambda_v: cfg.fm.lambda_v,
+            labels,
+            cols,
+            nloc: arenas.g.len(),
+            g: arenas.g,
+            aa: arenas.aa,
+            acc_xw: arenas.acc_xw,
+            acc_a: arenas.acc_a,
+            acc_s2: arenas.acc_s2,
+            w0: model.w0,
+            seq: 2 * start_iter as u64,
+            seen: 0,
+            holdback: Vec::new(),
+            reg_w: 0.0,
+            reg_v: 0.0,
+            post_tx,
+            shared: &shared,
+            visits_processed: 0,
+            coords_applied: 0,
+            update_mode: cfg.update_mode,
+            rng: Pcg64::new(cfg.seed, 0x3a17 + rank as u64),
+            scratch,
+            def_idx: Vec::new(),
+            def_w: Vec::new(),
+            def_v: Vec::new(),
+            ckpt: opts.ckpt_dir.is_some().then(|| CkptHook {
+                every: opts.ckpt_every.max(1),
+                tx: ckpt_tx.clone(),
+            }),
+        };
+        drop(ckpt_tx);
+
+        control::send_frame(ctrl, &Frame::Ready).context("sending Ready")?;
+
+        // ---- Await the Start barrier.
+        let start_deadline = Instant::now() + opts.connect_timeout + Duration::from_secs(60);
+        let mut rejoin = false;
+        loop {
+            ensure!(
+                Instant::now() < start_deadline,
+                "driver never released the Start barrier"
+            );
+            maybe_heartbeat(ctrl, &mut last_hb)?;
+            match ctrl_rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(CtrlEv::Frame(Frame::Start)) => break,
+                Ok(CtrlEv::Frame(Frame::Abort)) => {
+                    rejoin = true;
+                    break;
+                }
+                Ok(CtrlEv::Frame(Frame::Shutdown)) => {
+                    transport.shutdown();
+                    return Ok(());
+                }
+                Ok(CtrlEv::Frame(_)) | Err(RecvTimeoutError::Timeout) => {}
+                Ok(CtrlEv::Dead) | Err(RecvTimeoutError::Disconnected) => {
+                    bail!("control connection lost at the start barrier")
+                }
+            }
+        }
+        if rejoin {
+            transport.shutdown();
+            continue;
+        }
+
+        // ---- Deal this rank's tokens into its own inbox and run.
+        for tok in my_tokens {
+            transport.send(rank, tok);
+        }
+        let mut pending: HashMap<u32, Vec<Token>> = HashMap::new();
+        let end = std::thread::scope(|scope| {
+            let eng = scope.spawn(move || engine.run());
+            let end = relay_loop(
+                ctrl,
+                ctrl_rx,
+                &post_rx,
+                &ckpt_rx,
+                &shared,
+                opts,
+                rank,
+                k,
+                t_max,
+                start_iter,
+                expected_local,
+                &mut pending,
+                &mut last_hb,
+            );
+            // The engine thread must exit before the scope can close,
+            // whatever the relay decided (including errors).
+            shared.done.store(true, Ordering::SeqCst);
+            let _ = eng.join();
+            end
+        })?;
+
+        match end {
+            RelayEnd::Completed => {
+                // The engine is quiesced: flush any checkpoint epochs that
+                // completed in its final moments, then hand every
+                // collected token to the driver.
+                while let Ok(msg) = ckpt_rx.try_recv() {
+                    match msg {
+                        CkptMsg::Block(tok) => pending.entry(tok.iter).or_default().push(tok),
+                        CkptMsg::EpochDone(tag) => {
+                            save_epoch(&opts.ckpt_dir, rank, tag, &mut pending, k)
+                        }
+                    }
+                }
+                let tokens = std::mem::take(&mut *shared.collector.lock().unwrap());
+                let mut buf = Vec::new();
+                for tok in &tokens {
+                    codec::encode_token_padded(tok, k, &mut buf);
+                    control::send_frame(ctrl, &Frame::FinalBlock { frame: buf.clone() })
+                        .context("sending a final block")?;
+                }
+                let stats = transport.stats();
+                control::send_frame(
+                    ctrl,
+                    &Frame::Done {
+                        messages: stats.messages,
+                        bytes: stats.bytes,
+                    },
+                )
+                .context("sending Done")?;
+
+                // Keep the ring alive until the driver confirms: peers may
+                // still be pulling their last tokens through us.
+                let bye_deadline = Instant::now() + Duration::from_secs(120);
+                loop {
+                    ensure!(
+                        Instant::now() < bye_deadline,
+                        "driver never acknowledged completion"
+                    );
+                    maybe_heartbeat(ctrl, &mut last_hb)?;
+                    match ctrl_rx.recv_timeout(Duration::from_millis(100)) {
+                        Ok(CtrlEv::Frame(Frame::Shutdown)) => {
+                            transport.shutdown();
+                            return Ok(());
+                        }
+                        Ok(CtrlEv::Frame(Frame::Abort)) => {
+                            transport.shutdown();
+                            break; // re-join: a peer died during its drain
+                        }
+                        Ok(CtrlEv::Frame(_)) | Err(RecvTimeoutError::Timeout) => {}
+                        Ok(CtrlEv::Dead) | Err(RecvTimeoutError::Disconnected) => {
+                            bail!("control connection lost awaiting shutdown")
+                        }
+                    }
+                }
+            }
+            RelayEnd::Aborted => {
+                transport.shutdown();
+            }
+            RelayEnd::ControlLost => {
+                transport.shutdown();
+                bail!("control connection to the driver was lost mid-run");
+            }
+        }
+    }
+}
+
+/// The mid-training relay between engine, checkpoint stream and driver.
+#[allow(clippy::too_many_arguments)]
+fn relay_loop(
+    ctrl: &Mutex<TcpStream>,
+    ctrl_rx: &Receiver<CtrlEv>,
+    post_rx: &Receiver<FinalizePost>,
+    ckpt_rx: &Receiver<CkptMsg>,
+    shared: &Shared<'_>,
+    opts: &WorkerOptions,
+    rank: usize,
+    k: usize,
+    t_max: u32,
+    start_iter: u32,
+    expected_local: usize,
+    pending: &mut HashMap<u32, Vec<Token>>,
+    last_hb: &mut Instant,
+) -> Result<RelayEnd> {
+    // Iterations this engine worker has fully finalized (posts arrive in
+    // increasing order).
+    let mut finished_iters = start_iter;
+    loop {
+        // (An Err here is a timeout, or the engine thread quiescing.)
+        if let Ok(post) = post_rx.recv_timeout(Duration::from_millis(5)) {
+            finished_iters = post.iter + 1;
+            if control::send_frame(
+                ctrl,
+                &Frame::Epoch {
+                    rank: rank as u32,
+                    iter: post.iter,
+                    loss_sum: post.loss_sum,
+                    reg_w: post.reg_w,
+                    reg_v: post.reg_v,
+                },
+            )
+            .is_err()
+            {
+                return Ok(RelayEnd::ControlLost);
+            }
+        }
+        while let Ok(msg) = ckpt_rx.try_recv() {
+            match msg {
+                CkptMsg::Block(tok) => pending.entry(tok.iter).or_default().push(tok),
+                CkptMsg::EpochDone(tag) => save_epoch(&opts.ckpt_dir, rank, tag, pending, k),
+            }
+        }
+        loop {
+            match ctrl_rx.try_recv() {
+                Ok(CtrlEv::Frame(Frame::Progress { iters_done })) => {
+                    shared.driver_iters.fetch_max(iters_done, Ordering::Release);
+                }
+                Ok(CtrlEv::Frame(Frame::Stop { at })) => {
+                    shared.stop_at.fetch_min(at, Ordering::SeqCst);
+                }
+                Ok(CtrlEv::Frame(Frame::Abort)) => return Ok(RelayEnd::Aborted),
+                Ok(CtrlEv::Frame(Frame::Shutdown)) => return Ok(RelayEnd::ControlLost),
+                Ok(CtrlEv::Frame(_)) => {}
+                Ok(CtrlEv::Dead) | Err(TryRecvError::Disconnected) => {
+                    return Ok(RelayEnd::ControlLost)
+                }
+                Err(TryRecvError::Empty) => break,
+            }
+        }
+        if maybe_heartbeat(ctrl, last_hb).is_err() {
+            return Ok(RelayEnd::ControlLost);
+        }
+        // Completion: this engine finalized its last iteration AND every
+        // token this rank dealt came home (tokens return to their deal
+        // rank; `expected_local` can be 0, hence the finalize condition).
+        let stop = t_max.min(shared.stop_at.load(Ordering::SeqCst));
+        if finished_iters >= stop && shared.collected.load(Ordering::SeqCst) >= expected_local {
+            return Ok(RelayEnd::Completed);
+        }
+    }
+}

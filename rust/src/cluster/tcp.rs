@@ -14,7 +14,7 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -26,6 +26,13 @@ pub struct TcpTransport {
     inbox: LocalTransport,
     addrs: Vec<SocketAddr>,
     conns: Vec<Mutex<Option<TcpStream>>>,
+    /// In multi-process mode ([`TcpTransport::remote`]), the one rank this
+    /// process hosts: sends to it short-circuit the socket, and every
+    /// inbound connection feeds its inbox. `None` = all ranks in-process.
+    rank: Option<usize>,
+    /// How long `connect` keeps retrying a peer whose listener isn't up
+    /// yet (cluster workers start in arbitrary order).
+    connect_deadline: Duration,
     /// `Some(k)` when the engine circulates lane-padded token payloads:
     /// frames are stripped to the K-strided wire form on send and
     /// re-padded on receive, so the bytes on the socket are identical to
@@ -33,6 +40,9 @@ pub struct TcpTransport {
     wire_k: Option<usize>,
     bytes: AtomicU64,
     messages: AtomicU64,
+    /// Sends dropped because a peer never became reachable (or its
+    /// connection broke mid-write). Zero in any healthy run.
+    send_failures: AtomicU64,
     down: Arc<AtomicBool>,
     accept_threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
@@ -53,9 +63,12 @@ impl TcpTransport {
             inbox: LocalTransport::new(p),
             addrs,
             conns: (0..p).map(|_| Mutex::new(None)).collect(),
+            rank: None,
+            connect_deadline: Duration::from_secs(5),
             wire_k,
             bytes: AtomicU64::new(0),
             messages: AtomicU64::new(0),
+            send_failures: AtomicU64::new(0),
             down: Arc::new(AtomicBool::new(false)),
             accept_threads: Mutex::new(Vec::new()),
         });
@@ -127,10 +140,92 @@ impl TcpTransport {
         }
     }
 
+    /// Builds the transport for **one rank of a multi-process ring**: the
+    /// passed listener (bound by the caller, so its address could be
+    /// announced before the peer table existed) accepts all inbound token
+    /// traffic into `rank`'s inbox; `peers[d]` is where sends to rank `d`
+    /// connect. Sends to `rank` itself never touch a socket.
+    pub fn remote(
+        rank: usize,
+        listener: TcpListener,
+        peers: Vec<SocketAddr>,
+        wire_k: Option<usize>,
+        connect_deadline: Duration,
+    ) -> Result<Arc<Self>> {
+        let p = peers.len();
+        anyhow::ensure!(rank < p, "rank {rank} out of range for {p} peers");
+        let t = Arc::new(TcpTransport {
+            inbox: LocalTransport::new(p),
+            addrs: peers,
+            conns: (0..p).map(|_| Mutex::new(None)).collect(),
+            rank: Some(rank),
+            connect_deadline,
+            wire_k,
+            bytes: AtomicU64::new(0),
+            messages: AtomicU64::new(0),
+            send_failures: AtomicU64::new(0),
+            down: Arc::new(AtomicBool::new(false)),
+            accept_threads: Mutex::new(Vec::new()),
+        });
+        listener.set_nonblocking(true)?;
+        let tt = Arc::clone(&t);
+        let down = Arc::clone(&t.down);
+        let h = std::thread::Builder::new()
+            .name(format!("tcp-accept-r{rank}"))
+            .spawn(move || {
+                while !down.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            stream.set_nodelay(true).ok();
+                            let tt2 = Arc::clone(&tt);
+                            let down2 = Arc::clone(&down);
+                            std::thread::Builder::new()
+                                .name(format!("tcp-read-r{rank}"))
+                                .spawn(move || tt2.read_loop(rank, stream, down2))
+                                .expect("spawn reader");
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .context("spawn remote acceptor")?;
+        t.accept_threads.lock().unwrap().push(h);
+        Ok(t)
+    }
+
+    /// Sends dropped on the floor because a peer was unreachable past the
+    /// connect deadline or a connection broke mid-write.
+    pub fn send_failures(&self) -> u64 {
+        self.send_failures.load(Ordering::Relaxed)
+    }
+
+    /// Connects to `dst` with bounded-backoff retry: cluster workers come
+    /// up in arbitrary order, so the first sends of a run can race the
+    /// destination's listener.
     fn connect(&self, dst: usize) -> Result<TcpStream> {
-        let s = TcpStream::connect(self.addrs[dst]).context("connect")?;
-        s.set_nodelay(true).ok();
-        Ok(s)
+        let deadline = Instant::now() + self.connect_deadline;
+        let mut backoff = Duration::from_millis(10);
+        loop {
+            if self.down.load(Ordering::Relaxed) {
+                anyhow::bail!("transport shut down");
+            }
+            match TcpStream::connect(self.addrs[dst]) {
+                Ok(s) => {
+                    s.set_nodelay(true).ok();
+                    return Ok(s);
+                }
+                Err(e) => {
+                    if Instant::now() + backoff >= deadline {
+                        return Err(e).context("connect");
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(200));
+                }
+            }
+        }
     }
 }
 
@@ -158,6 +253,14 @@ fn read_fully(stream: &mut TcpStream, buf: &mut [u8], down: &AtomicBool) -> std:
 
 impl Transport for TcpTransport {
     fn send(&self, dst: usize, tok: Token) {
+        // Multi-process mode: this process's own rank never crosses a
+        // socket — tokens land in the inbox by pointer (the token deal
+        // and the ring's self-adjacent hops at P = 1 both hit this).
+        if self.rank == Some(dst) {
+            self.messages.fetch_add(1, Ordering::Relaxed);
+            self.inbox.send(dst, tok);
+            return;
+        }
         let mut frame = Vec::new();
         match self.wire_k {
             Some(k) => codec::encode_token_padded(&tok, k, &mut frame),
@@ -173,12 +276,18 @@ impl Transport for TcpTransport {
         if guard.is_none() {
             match self.connect(dst) {
                 Ok(s) => *guard = Some(s),
-                Err(_) => return, // shutdown race: drop silently
+                Err(_) => {
+                    // Shutdown race, or a peer that never came up within
+                    // the connect deadline.
+                    self.send_failures.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
             }
         }
         if let Some(stream) = guard.as_mut() {
             if stream.write_all(&msg).is_err() {
                 *guard = None;
+                self.send_failures.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -286,6 +395,75 @@ mod tests {
             t.stats().bytes,
             (codec::padded_token_wire_size(&padded, k) + 4) as u64
         );
+        t.shutdown();
+    }
+
+    #[test]
+    fn remote_send_retries_until_listener_appears() {
+        // Rank 0 sends to rank 1 before rank 1's listener exists: the
+        // bounded-backoff connect must hold the token until it appears.
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a0 = l0.local_addr().unwrap();
+        let a1 = {
+            let placeholder = TcpListener::bind("127.0.0.1:0").unwrap();
+            placeholder.local_addr().unwrap()
+            // dropped: the port is free (but could in principle be raced
+            // away by another process — see the rebind fallback below).
+        };
+        let t0 =
+            TcpTransport::remote(0, l0, vec![a0, a1], None, Duration::from_secs(10)).unwrap();
+        let sender = std::thread::spawn(move || {
+            t0.send(1, tok(9, 4));
+            t0
+        });
+        std::thread::sleep(Duration::from_millis(300));
+        let l1 = match TcpListener::bind(a1) {
+            Ok(l) => l,
+            Err(_) => {
+                eprintln!("skipping: ephemeral port {a1} was rebound by another process");
+                let t0 = sender.join().unwrap();
+                t0.shutdown();
+                return;
+            }
+        };
+        let t1 =
+            TcpTransport::remote(1, l1, vec![a0, a1], None, Duration::from_secs(10)).unwrap();
+        let got = t1
+            .recv_timeout(1, Duration::from_secs(10))
+            .expect("late-bound peer must still receive the token");
+        assert_eq!(got.j, 9);
+        let t0 = sender.join().unwrap();
+        assert_eq!(t0.send_failures(), 0);
+
+        // Self-sends short-circuit the socket entirely.
+        let bytes_before = t1.stats().bytes;
+        t1.send(1, tok(5, 2));
+        assert_eq!(t1.recv_timeout(1, Duration::from_secs(5)).unwrap().j, 5);
+        assert_eq!(t1.stats().bytes, bytes_before, "self-send must not serialize");
+
+        t0.shutdown();
+        t1.shutdown();
+    }
+
+    #[test]
+    fn remote_connect_gives_up_after_deadline() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = l.local_addr().unwrap();
+        let dead = {
+            let tmp = TcpListener::bind("127.0.0.1:0").unwrap();
+            let d = tmp.local_addr().unwrap();
+            drop(tmp);
+            d
+        };
+        let t =
+            TcpTransport::remote(0, l, vec![a, dead], None, Duration::from_millis(120)).unwrap();
+        let start = Instant::now();
+        t.send(1, tok(1, 2));
+        assert!(
+            start.elapsed() < Duration::from_secs(3),
+            "send must give up once the connect deadline passes"
+        );
+        assert_eq!(t.send_failures(), 1);
         t.shutdown();
     }
 }

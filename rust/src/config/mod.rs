@@ -195,6 +195,9 @@ pub struct ExperimentConfig {
     /// The cache must have been ingested for exactly the training rows
     /// and the same `row_partition`/`workers` plan.
     pub data_cache: Option<String>,
+    /// Multi-process cluster role for `dsfacto driver` / `dsfacto worker`
+    /// (`driver:<addr>,p=<P>` or `worker:<addr>`); `None` runs in-process.
+    pub cluster: Option<crate::cluster::runtime::ClusterSpec>,
 }
 
 impl Default for ExperimentConfig {
@@ -217,6 +220,7 @@ impl Default for ExperimentConfig {
             cols_per_token: 0,
             row_partition: RowStrategy::Contiguous,
             data_cache: None,
+            cluster: None,
         }
     }
 }
@@ -268,6 +272,9 @@ impl ExperimentConfig {
             }
             "row_partition" => self.row_partition = RowStrategy::parse(value)?,
             "data_cache" => self.data_cache = Some(value.to_string()),
+            "cluster" => {
+                self.cluster = Some(crate::cluster::runtime::ClusterSpec::parse(value)?)
+            }
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -330,6 +337,9 @@ impl ExperimentConfig {
         kv.insert("row_partition", self.row_partition.spec().to_string());
         if let Some(dir) = &self.data_cache {
             kv.insert("data_cache", dir.clone());
+        }
+        if let Some(cluster) = &self.cluster {
+            kv.insert("cluster", cluster.spec());
         }
         kv.into_iter()
             .map(|(k, v)| format!("{k} = {v}"))
@@ -461,6 +471,40 @@ mod tests {
         // dataset_task applies to file datasets only; a cache carries its
         // task in the manifest.
         assert!(cfg.set("dataset_task", "regression").is_err());
+    }
+
+    #[test]
+    fn dump_roundtrips_cluster_key() {
+        use crate::cluster::runtime::ClusterSpec;
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("cluster", "driver:127.0.0.1:4700,p=3").unwrap();
+        assert_eq!(
+            cfg.cluster,
+            Some(ClusterSpec::Driver {
+                addr: "127.0.0.1:4700".into(),
+                p: 3
+            })
+        );
+        let back = ExperimentConfig::parse_str(&cfg.dump()).unwrap();
+        assert_eq!(back.cluster, cfg.cluster);
+
+        cfg.set("cluster", "worker:10.0.0.5:4700").unwrap();
+        assert_eq!(
+            cfg.cluster,
+            Some(ClusterSpec::Worker {
+                driver: "10.0.0.5:4700".into()
+            })
+        );
+        let back = ExperimentConfig::parse_str(&cfg.dump()).unwrap();
+        assert_eq!(back.cluster, cfg.cluster);
+
+        // Absent by default, and absent from the default dump.
+        assert_eq!(ExperimentConfig::default().cluster, None);
+        assert!(!ExperimentConfig::default().dump().contains("cluster"));
+        // Malformed specs fail loudly.
+        assert!(ExperimentConfig::parse_str("cluster = driver:\n").is_err());
+        assert!(ExperimentConfig::parse_str("cluster = driver:x:1\n").is_err());
+        assert!(ExperimentConfig::parse_str("cluster = peer:x:1\n").is_err());
     }
 
     #[test]

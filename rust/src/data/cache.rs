@@ -200,10 +200,11 @@ impl ShardPayload<'_> {
     }
 }
 
-/// Writes one shard file; returns the file's FNV-1a hash (recorded in the
-/// manifest). The file bytes are assembled in one shard-sized buffer —
-/// the only allocation is proportional to this shard, never the dataset.
-pub fn write_shard(dir: &Path, payload: &ShardPayload<'_>) -> Result<u64> {
+/// Serializes one shard's file bytes (header + segments) without touching
+/// disk — the shared assembly behind [`write_shard`] and the row-content
+/// fingerprint check ([`ShardCacheSource::verify_content`]), which hashes
+/// exactly these bytes against the manifest's recorded shard hash.
+pub fn shard_bytes(payload: &ShardPayload<'_>) -> Result<Vec<u8>> {
     let nloc = payload.end - payload.start;
     ensure!(payload.labels.len() == nloc, "shard labels length mismatch");
     ensure!(payload.indptr.len() == nloc + 1, "shard indptr length mismatch");
@@ -233,6 +234,14 @@ pub fn write_shard(dir: &Path, payload: &ShardPayload<'_>) -> Result<u64> {
     for &x in payload.values {
         push_f32(&mut out, x);
     }
+    Ok(out)
+}
+
+/// Writes one shard file; returns the file's FNV-1a hash (recorded in the
+/// manifest). The file bytes are assembled in one shard-sized buffer —
+/// the only allocation is proportional to this shard, never the dataset.
+pub fn write_shard(dir: &Path, payload: &ShardPayload<'_>) -> Result<u64> {
+    let out = shard_bytes(payload)?;
     let hash = fnv1a(&out);
     let path = dir.join(shard_file_name(payload.id));
     std::fs::write(&path, &out).with_context(|| format!("write {}", path.display()))?;
@@ -418,6 +427,60 @@ impl ShardCacheSource {
             .map(|r| shard_file_len(r.end - r.start, r.nnz))
             .max()
             .unwrap_or(0)
+    }
+
+    /// Errors unless `ds`'s row **content** matches the cached shards —
+    /// not just its shape. Re-serializes the first and last shards of the
+    /// cached partition from `ds` and compares their FNV-1a fingerprints
+    /// against the manifest's recorded shard hashes. The hash covers
+    /// labels, row pointers, column indices and values byte-for-byte, so
+    /// a same-shape dataset with permuted or edited rows is rejected
+    /// (the case the shape-only `ensure_matches` check cannot see).
+    /// Cost: two shard serializations, no file I/O, peak memory one
+    /// shard's bytes.
+    pub fn verify_content(&self, ds: &Dataset) -> Result<()> {
+        ensure!(
+            self.manifest.n == ds.n() && self.manifest.d == ds.d(),
+            "content check on a shape-mismatched dataset (cache n={} d={}, dataset n={} d={})",
+            self.manifest.n,
+            self.manifest.d,
+            ds.n(),
+            ds.d()
+        );
+        let p = self.manifest.shards.len();
+        if p == 0 {
+            return Ok(());
+        }
+        let mut ids = vec![0];
+        if p > 1 {
+            ids.push(p - 1);
+        }
+        for id in ids {
+            let rec = &self.manifest.shards[id];
+            let local = ds.rows.slice_rows(rec.start, rec.end);
+            let (indptr, indices, values) = local.raw_parts();
+            let payload = ShardPayload {
+                id,
+                start: rec.start,
+                end: rec.end,
+                d: ds.d(),
+                task: ds.task,
+                labels: &ds.labels[rec.start..rec.end],
+                indptr,
+                indices,
+                values,
+            };
+            let got = fnv1a(&shard_bytes(&payload)?);
+            ensure!(
+                got == rec.hash,
+                "shard {id} content fingerprint mismatch: the cache at {} was ingested \
+                 from different rows than this training set (same shape, different \
+                 content — e.g. permuted or edited rows); re-ingest the exact \
+                 pre-split training file",
+                self.dir.display()
+            );
+        }
+        Ok(())
     }
 
     fn load_shard_raw(&self, id: usize) -> Result<RawShard> {
@@ -738,6 +801,29 @@ mod tests {
         assert_eq!(src.nnz(), 0);
         let back = src.materialize().unwrap();
         assert_eq!(back.n(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn content_fingerprint_rejects_permuted_rows() {
+        let ds = synth::table2_dataset("housing", 21).unwrap();
+        let dir = tmp("fp");
+        write_cache(&ds, RowStrategy::Contiguous, 3, &dir).unwrap();
+        let src = ShardCacheSource::open(&dir).unwrap();
+        assert!(src.verify_content(&ds).is_ok());
+        // Same shape (n, d, nnz, task all unchanged), different content:
+        // swap the first two rows. The shape-only check cannot see this;
+        // the fingerprint must.
+        let mut order: Vec<usize> = (0..ds.n()).collect();
+        order.swap(0, 1);
+        let permuted = ds.subset(&order, "housing");
+        assert_eq!((permuted.n(), permuted.d(), permuted.nnz()), (ds.n(), ds.d(), ds.nnz()));
+        let err = src.verify_content(&permuted).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+        // End to end through the resolve seam distributed trainers use.
+        let seam = crate::data::ShardSource::Cache(dir.to_string_lossy().into_owned());
+        assert!(seam.resolve(&ds).is_ok());
+        assert!(seam.resolve(&permuted).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

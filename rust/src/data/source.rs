@@ -140,11 +140,14 @@ impl DataSource for InMemorySource<'_> {
 /// Errors unless `src`'s **shape** — `(n, d, nnz, task)` — matches `ds`.
 /// Shard sources replace the *slicing* of the training set, not the
 /// training set itself, so a mismatch means workers would train on
-/// different rows than the probe evaluates. This is a shape check only:
-/// a same-shape dataset with permuted or edited rows passes (verifying
-/// content would mean re-serializing the training set), which is why the
-/// supported flow ingests the exact pre-split training file and trains
-/// with `train_frac = 1` (run_experiment keeps row order there).
+/// different rows than the probe evaluates. This is a shape check only —
+/// a same-shape dataset with permuted or edited rows passes. The cache
+/// resolve path closes that hole with a row-content fingerprint
+/// ([`crate::data::cache::ShardCacheSource::verify_content`]): it
+/// re-serializes the first and last shards from `ds` and compares their
+/// FNV-1a hashes against the manifest's recorded shard hashes. The
+/// supported flow remains ingesting the exact pre-split training file and
+/// training with `train_frac = 1` (run_experiment keeps row order there).
 pub fn ensure_matches(src: &dyn DataSource, ds: &Dataset) -> Result<()> {
     anyhow::ensure!(
         src.n() == ds.n()
@@ -195,6 +198,7 @@ impl ShardSource {
             ShardSource::Cache(dir) => {
                 let src = super::cache::ShardCacheSource::open(dir)?;
                 ensure_matches(&src, train)?;
+                src.verify_content(train)?;
                 Ok(ResolvedSource::Owned(Box::new(src)))
             }
             ShardSource::Custom(src) => {

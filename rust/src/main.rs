@@ -41,6 +41,8 @@ fn real_main() -> Result<()> {
         .unwrap_or_else(|| "help".to_string());
     match cmd.as_str() {
         "train" => cmd_train(args),
+        "driver" => cmd_driver(args),
+        "worker" => cmd_worker(args),
         "ingest" => cmd_ingest(args),
         "evaluate" => cmd_evaluate(args),
         "inspect" => cmd_inspect(args),
@@ -75,6 +77,12 @@ USAGE:
                      [--data-cache DIR]
                      [--trace FILE] [--save-model FILE]
                      [--xla-eval] [--artifacts DIR] [--quiet]
+  dsfacto driver     [--config FILE] [--addr HOST:PORT] [--workers P]
+                     [--ckpt-dir DIR] [--ckpt-every E] [--max-restarts R]
+                     [--join-timeout SECS] [--heartbeat-timeout SECS]
+                     [--save-model FILE] [--quiet] [train flags...]
+  dsfacto worker     --driver HOST:PORT [--data-cache DIR]
+                     [--ckpt-dir DIR] [--ckpt-every E] [--connect-timeout SECS]
   dsfacto ingest     --dataset FILE --data-cache DIR [--shards P]
                      [--row-partition contiguous|balanced]
                      [--dataset-task TASK] [--n-features D] [--chunk-rows N]
@@ -102,9 +110,25 @@ OUT-OF-CORE DATA:
   `--row-partition` you will train with (and train with train_frac = 1 or
   a pre-split file, so the cache covers exactly the training rows).
 
+CLUSTER (multi-process DS-FACTO):
+  `dsfacto driver` + P x `dsfacto worker` run the NOMAD token ring across
+  OS processes: the driver owns membership, rank/shard assignment, epoch
+  aggregation and the convergence trace; each worker loads only its own
+  shard from the shared cache (`--dataset cache:DIR`, so every process
+  must see the same directory) and trades parameter tokens with its ring
+  neighbors over TCP. `--addr HOST:PORT` (port 0 picks a free port — the
+  bound address is printed as `dsfacto driver: control on ADDR`) is
+  shorthand for the config key `cluster = driver:HOST:PORT,p=<workers>`.
+  With `--ckpt-dir`, workers write per-epoch block checkpoints and the
+  driver restarts a generation from the newest complete epoch when a
+  worker dies (detected by heartbeat silence); up to `--max-restarts`
+  restarts. With `update-mode mean` (the default) the assembled model is
+  bitwise identical to a single-process `dsfacto train` run at the same
+  config.
+
 Config files use the same keys with underscores (transport, update_mode,
-cols_per_token, data_cache, ...); `--config` values are overridden by
-explicit flags.
+cols_per_token, data_cache, cluster, ...); `--config` values are
+overridden by explicit flags.
 ";
 
 fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &mut Args) -> Result<()> {
@@ -129,6 +153,7 @@ fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &mut Args) -> Result<()
         ("cols-per-token", "cols_per_token"),
         ("row-partition", "row_partition"),
         ("data-cache", "data_cache"),
+        ("cluster", "cluster"),
     ] {
         if let Some(v) = args.get(flag) {
             cfg.set(key, &v).with_context(|| format!("--{flag}"))?;
@@ -212,6 +237,80 @@ fn cmd_train(mut args: Args) -> Result<()> {
         println!("model saved to {path}");
     }
     Ok(())
+}
+
+fn cmd_driver(mut args: Args) -> Result<()> {
+    use dsfacto::cluster::runtime::{run_driver, ClusterSpec, DriverOptions};
+    use std::time::Duration;
+
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(&path)?,
+        None => ExperimentConfig::default(),
+    };
+    apply_cli_overrides(&mut cfg, &mut args)?;
+    // `--addr HOST:PORT` is the short form of `--cluster driver:HOST:PORT,p=<workers>`.
+    if let Some(addr) = args.get("addr") {
+        cfg.cluster = Some(ClusterSpec::Driver {
+            addr,
+            p: cfg.workers.max(1),
+        });
+    }
+    let quiet = args.has("quiet");
+    let save_model = args.get("save-model");
+    let ckpt_dir = args.get("ckpt-dir").map(std::path::PathBuf::from);
+    let ckpt_every: u32 = args.get_or("ckpt-every", 1)?;
+    let join_timeout: u64 = args.get_or("join-timeout", 30)?;
+    let heartbeat_timeout: u64 = args.get_or("heartbeat-timeout", 10)?;
+    let max_restarts: u32 = args.get_or("max-restarts", 3)?;
+    args.finish()?;
+
+    if !quiet {
+        println!("== dsfacto driver ==");
+        println!("{}", cfg.dump());
+    }
+    let report = run_driver(&DriverOptions {
+        cfg,
+        ckpt_dir,
+        ckpt_every,
+        join_timeout: Duration::from_secs(join_timeout),
+        heartbeat_timeout: Duration::from_secs(heartbeat_timeout),
+        max_generations: max_restarts.saturating_add(1),
+        quiet,
+    })?;
+    println!(
+        "cluster run done in {}: {} iterations, {} generation(s), {} messages, {} bytes — final objective {:.6}",
+        human_secs(report.wall_secs),
+        report.trace.last().map(|p| p.iter).unwrap_or(0),
+        report.generations,
+        report.messages,
+        report.bytes,
+        report.trace.last().map(|p| p.objective).unwrap_or(f64::NAN),
+    );
+    if let Some(path) = save_model {
+        fm::io::save(&report.model, &path)?;
+        println!("model saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_worker(mut args: Args) -> Result<()> {
+    use dsfacto::cluster::runtime::{run_worker, WorkerOptions};
+    use std::time::Duration;
+
+    let driver_addr: String = args.require("driver")?;
+    let data_cache = args.get("data-cache");
+    let ckpt_dir = args.get("ckpt-dir").map(std::path::PathBuf::from);
+    let ckpt_every: u32 = args.get_or("ckpt-every", 1)?;
+    let connect_timeout: u64 = args.get_or("connect-timeout", 30)?;
+    args.finish()?;
+
+    run_worker(&WorkerOptions {
+        driver_addr,
+        data_cache,
+        ckpt_dir,
+        ckpt_every,
+        connect_timeout: Duration::from_secs(connect_timeout),
+    })
 }
 
 fn cmd_ingest(mut args: Args) -> Result<()> {

@@ -96,27 +96,57 @@ impl EngineStats {
 }
 
 /// A worker's end-of-recompute report (drives the convergence trace).
-struct FinalizePost {
-    iter: u32,
-    loss_sum: f64,
-    n_local: usize,
+/// `pub(crate)` because the multi-process runtime
+/// ([`crate::cluster::runtime`]) forwards these to the driver as control
+/// frames instead of aggregating them in-process.
+pub(crate) struct FinalizePost {
+    pub(crate) iter: u32,
+    pub(crate) loss_sum: f64,
+    pub(crate) n_local: usize,
     /// Sum of w_j^2 over tokens this worker flipped this iteration.
-    reg_w: f64,
+    pub(crate) reg_w: f64,
     /// Sum of ||v_j||^2 over tokens this worker flipped this iteration.
-    reg_v: f64,
+    pub(crate) reg_v: f64,
 }
 
-/// Shared engine context (borrowed by every worker).
-struct Shared<'a> {
-    transport: &'a dyn Transport,
-    mirror: &'a ParamMirror,
-    collector: Mutex<Vec<Token>>,
-    collected: AtomicUsize,
-    done: AtomicBool,
-    update_visits: AtomicU64,
-    coordinate_updates: AtomicU64,
-    holdback_peak: AtomicUsize,
-    busy_secs: Mutex<Vec<f64>>,
+/// A checkpoint-stream message: the engine emits the post-flip clone of
+/// every token a worker flips at a checkpointed epoch boundary, then one
+/// `EpochDone` marker once that worker's recompute pass finalizes. The
+/// receiving thread persists each completed set via
+/// [`crate::train::Checkpointer::save_blocks`].
+pub(crate) enum CkptMsg {
+    /// A token flipped into the update phase of the tagged iteration —
+    /// exactly the state it must be re-dealt with on restart.
+    Block(Token),
+    /// All blocks this worker flips for the tagged iteration were sent.
+    EpochDone(u32),
+}
+
+/// Per-epoch checkpoint hook carried by a worker (multi-process runtime
+/// only; the in-process engine leaves it `None`).
+pub(crate) struct CkptHook {
+    /// Checkpoint every this many completed outer iterations.
+    pub(crate) every: u32,
+    /// Where the block stream goes.
+    pub(crate) tx: Sender<CkptMsg>,
+}
+
+/// Shared engine context (borrowed by every worker). `pub(crate)` so the
+/// multi-process runtime can host a single [`Worker`] over a remote
+/// transport with driver-fed `stop_at` / `driver_iters` values.
+pub(crate) struct Shared<'a> {
+    pub(crate) transport: &'a dyn Transport,
+    /// Eventually-consistent parameter mirror for snapshots/eval. `None`
+    /// in a multi-process worker, which never snapshots (the driver
+    /// assembles the final model from collected tokens).
+    pub(crate) mirror: Option<&'a ParamMirror>,
+    pub(crate) collector: Mutex<Vec<Token>>,
+    pub(crate) collected: AtomicUsize,
+    pub(crate) done: AtomicBool,
+    pub(crate) update_visits: AtomicU64,
+    pub(crate) coordinate_updates: AtomicU64,
+    pub(crate) holdback_peak: AtomicUsize,
+    pub(crate) busy_secs: Mutex<Vec<f64>>,
     /// The iteration at which tokens are collected instead of processed;
     /// `u32::MAX` until the observer requests an early stop. The driver
     /// sets `aggregated_iter + 4` after completing iteration
@@ -125,7 +155,7 @@ struct Shared<'a> {
     /// `driver_iters` gate below, no worker can process that iteration's
     /// update phase, so every token is still collected at one single
     /// iteration with exact finalization (invariant 4).
-    stop_at: AtomicU32,
+    pub(crate) stop_at: AtomicU32,
     /// Iterations the driver has fully aggregated — published *before* the
     /// driver's own snapshot/eval/observer work, so that work never sits
     /// on the workers' critical path. Workers never enter the update phase
@@ -133,59 +163,72 @@ struct Shared<'a> {
     /// bounded-pipelining rule that (a) costs nothing in normal operation
     /// (aggregation is trivially fast) and (b) bounds how far training can
     /// overrun an observer's stop request.
-    driver_iters: AtomicU32,
+    pub(crate) driver_iters: AtomicU32,
 }
 
-/// Per-worker engine state.
-struct Worker<'a> {
-    id: usize,
-    p: usize,
-    ntok: usize,
-    n_total: usize,
-    t_max: u32,
-    k: usize,
+/// Per-worker engine state. `pub(crate)` (with `pub(crate)` fields)
+/// because the multi-process runtime constructs one `Worker` per OS
+/// process over a remote transport; the in-process engine builds P of
+/// them over threads. A restarted worker initializes `seq` to
+/// `2 * start_iter` so tokens reloaded from a checkpoint (which carry
+/// their true global iteration) pass the phase gate unchanged.
+pub(crate) struct Worker<'a> {
+    pub(crate) id: usize,
+    pub(crate) p: usize,
+    pub(crate) ntok: usize,
+    pub(crate) n_total: usize,
+    pub(crate) t_max: u32,
+    pub(crate) k: usize,
     /// Padded factor stride (`padded_k(k)`): the row stride of `aa`,
     /// `acc_a`, `acc_s2` and of every token's factor payload.
-    kp: usize,
+    pub(crate) kp: usize,
     /// The column-block grid tokens are cut from (block size C over D).
-    col_plan: ColPartition,
-    task: Task,
-    eta: LrSchedule,
-    lambda_w: f32,
-    lambda_v: f32,
+    pub(crate) col_plan: ColPartition,
+    pub(crate) task: Task,
+    pub(crate) eta: LrSchedule,
+    pub(crate) lambda_w: f32,
+    pub(crate) lambda_v: f32,
     /// Labels of the local row shard (moved out of the
     /// [`partition::Shard`] this worker was built from).
-    labels: Vec<f32>,
-    cols: Csc,
-    nloc: usize,
+    pub(crate) labels: Vec<f32>,
+    pub(crate) cols: Csc,
+    pub(crate) nloc: usize,
     /// Auxiliary variables (paper's G and A) for the local rows; `aa` is
     /// `nloc x kp` lane-blocked (padding lanes zero).
-    g: Vec<f32>,
-    aa: Vec<f32>,
+    pub(crate) g: Vec<f32>,
+    pub(crate) aa: Vec<f32>,
     /// Recompute-phase partial-sum accumulators (`acc_a`/`acc_s2` are
     /// `nloc x kp` lane-blocked).
-    acc_xw: Vec<f32>,
-    acc_a: Vec<f32>,
-    acc_s2: Vec<f32>,
+    pub(crate) acc_xw: Vec<f32>,
+    pub(crate) acc_a: Vec<f32>,
+    pub(crate) acc_s2: Vec<f32>,
     /// Local copy of the bias (refreshed whenever the bias token passes).
-    w0: f32,
+    pub(crate) w0: f32,
     /// Phase gating.
-    seq: u64,
-    seen: usize,
-    holdback: Vec<Token>,
+    pub(crate) seq: u64,
+    pub(crate) seen: usize,
+    pub(crate) holdback: Vec<Token>,
     /// Per-iteration regularizer contributions of tokens this worker flips.
-    reg_w: f64,
-    reg_v: f64,
+    pub(crate) reg_w: f64,
+    pub(crate) reg_v: f64,
     /// Local loss of the last finalize.
-    post_tx: Sender<FinalizePost>,
-    shared: &'a Shared<'a>,
-    visits_processed: u64,
-    coords_applied: u64,
-    update_mode: super::UpdateMode,
-    rng: Pcg64,
+    pub(crate) post_tx: Sender<FinalizePost>,
+    pub(crate) shared: &'a Shared<'a>,
+    pub(crate) visits_processed: u64,
+    pub(crate) coords_applied: u64,
+    pub(crate) update_mode: super::UpdateMode,
+    pub(crate) rng: Pcg64,
     /// Per-worker kernel scratch arena: the column-visit gradient buffer
     /// lives here, so update visits allocate nothing at any K.
-    scratch: Scratch,
+    pub(crate) scratch: Scratch,
+    /// Deferred recompute payloads: `(block j, offset into def_w, ncols)`
+    /// per buffered token, folded into the accumulators in block order at
+    /// the end of the phase (see [`Worker::recompute_visit`]).
+    pub(crate) def_idx: Vec<(u32, usize, usize)>,
+    pub(crate) def_w: Vec<f32>,
+    pub(crate) def_v: Vec<f32>,
+    /// Per-epoch block checkpoint stream (multi-process runtime only).
+    pub(crate) ckpt: Option<CkptHook>,
 }
 
 impl<'a> Worker<'a> {
@@ -200,7 +243,7 @@ impl<'a> Worker<'a> {
             .min(self.shared.stop_at.load(Ordering::Relaxed))
     }
 
-    fn run(&mut self) {
+    pub(crate) fn run(&mut self) {
         loop {
             if self.shared.done.load(Ordering::Relaxed) {
                 self.flush_stats();
@@ -274,16 +317,18 @@ impl<'a> Worker<'a> {
             // Last visitor: publish (recompute pass only) and flip.
             if tok.phase == Phase::Recompute {
                 if tok.is_bias() {
-                    self.shared.mirror.publish_bias(tok.w[0]);
+                    if let Some(m) = self.shared.mirror {
+                        m.publish_bias(tok.w[0]);
+                    }
                 } else {
                     let (lo, _hi) = self.block_range(tok.j);
                     let (k, kp) = (self.k, self.kp);
                     for (bi, &wj) in tok.w.iter().enumerate() {
                         // The mirror holds K-strided rows: publish the K
                         // real lanes, stripping the padding at this edge.
-                        self.shared
-                            .mirror
-                            .publish_column(lo + bi, wj, &tok.vrow(bi, kp)[..k]);
+                        if let Some(m) = self.shared.mirror {
+                            m.publish_column(lo + bi, wj, &tok.vrow(bi, kp)[..k]);
+                        }
                         self.reg_w += (wj as f64) * (wj as f64);
                     }
                     // Padding lanes are identically zero, so summing the
@@ -291,7 +336,17 @@ impl<'a> Worker<'a> {
                     self.reg_v += tok.v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
                 }
             }
-            tok.flip();
+            let crossed_epoch = tok.flip();
+            // Block-granular checkpointing: the post-flip token *is* the
+            // restart state for the epoch boundary just crossed (iteration
+            // `tok.iter` not yet run, phase Update, zero visits).
+            if crossed_epoch {
+                if let Some(h) = &self.ckpt {
+                    if tok.iter % h.every.max(1) == 0 {
+                        let _ = h.tx.send(CkptMsg::Block(tok.clone()));
+                    }
+                }
+            }
         }
         self.shared.transport.send((self.id + 1) % self.p, tok);
 
@@ -390,30 +445,60 @@ impl<'a> Worker<'a> {
 
     /// Algorithm 1 lines 18-21: fold the token into the partial sums for
     /// G and A (incremental synchronization).
+    ///
+    /// The fold is *deferred*: the payload is buffered here and applied in
+    /// block order at the end of the phase ([`Self::apply_deferred`]).
+    /// Token arrival order within a phase depends on thread/network timing
+    /// once P > 1, and f32 accumulation into `acc_*` does not commute —
+    /// deferring and sorting makes the recompute pass (and with it the
+    /// whole MeanGradient run) bitwise deterministic at any P, which is
+    /// what lets the multi-process ring reproduce the in-process model
+    /// exactly. At P = 1 tokens already arrive in block order, so the
+    /// sorted fold is the same fold as the old eager one.
     fn recompute_visit(&mut self, tok: &Token) {
         if tok.is_bias() {
+            // Order-independent (plain overwrite): keep it eager.
             self.w0 = tok.w[0];
             return;
         }
-        let (lo, hi) = self.block_range(tok.j);
+        let off = self.def_w.len();
+        self.def_idx.push((tok.j, off, tok.ncols()));
+        self.def_w.extend_from_slice(&tok.w);
+        self.def_v.extend_from_slice(&tok.v);
+    }
+
+    /// Folds the buffered recompute payloads into `acc_*` in ascending
+    /// block order (every block is buffered exactly once per phase).
+    fn apply_deferred(&mut self) {
+        let mut idx = std::mem::take(&mut self.def_idx);
+        idx.sort_unstable_by_key(|&(j, _, _)| j);
         let kp = self.kp;
-        for (bi, j) in (lo..hi).enumerate() {
-            let (rows, xs) = self.cols.col(j);
-            visit::col_recompute(
-                rows,
-                xs,
-                tok.w[bi],
-                tok.vrow(bi, kp),
-                kp,
-                &mut self.acc_xw,
-                &mut self.acc_a,
-                &mut self.acc_s2,
-            );
+        for &(j, off, ncols) in &idx {
+            let (lo, hi) = self.block_range(j);
+            debug_assert_eq!(hi - lo, ncols);
+            for (bi, col) in (lo..hi).enumerate() {
+                let (rows, xs) = self.cols.col(col);
+                visit::col_recompute(
+                    rows,
+                    xs,
+                    self.def_w[off + bi],
+                    &self.def_v[(off + bi) * kp..(off + bi + 1) * kp],
+                    kp,
+                    &mut self.acc_xw,
+                    &mut self.acc_a,
+                    &mut self.acc_s2,
+                );
+            }
         }
+        idx.clear();
+        self.def_idx = idx;
+        self.def_w.clear();
+        self.def_v.clear();
     }
 
     fn advance_phase(&mut self) {
         if self.seq % 2 == 1 {
+            self.apply_deferred();
             self.finalize();
         }
         self.seq += 1;
@@ -463,7 +548,138 @@ impl<'a> Worker<'a> {
             reg_w: std::mem::take(&mut self.reg_w),
             reg_v: std::mem::take(&mut self.reg_v),
         });
+        // Every block this worker flipped at this epoch boundary was sent
+        // before its forwarding `send` — and forwarding precedes the
+        // `seen == ntok` phase advance that runs this finalize — so the
+        // marker strictly follows all of its blocks in the channel.
+        if let Some(h) = &self.ckpt {
+            let next = iter + 1;
+            if next % h.every.max(1) == 0 {
+                let _ = h.tx.send(CkptMsg::EpochDone(next));
+            }
+        }
     }
+}
+
+/// The deal: token -> initial owner rank, reproduced identically by every
+/// process from `(seed, p)` alone (Algorithm 1 l.5-8). Entry `b` is the
+/// owner of block `b`; the last entry owns the bias token.
+pub(crate) fn deal_ranks(ntok: usize, seed: u64, p: usize) -> Vec<usize> {
+    let mut deal_rng = Pcg64::new(seed, 0xdea1);
+    (0..ntok).map(|_| deal_rng.below_usize(p)).collect()
+}
+
+/// Cuts a model into ring tokens (blocks in ascending order, bias last),
+/// with lane-padded factor payloads from the kernel's AoSoA view. Tokens
+/// carry `start_iter` so a checkpoint-restarted ring resumes the learning
+/// rate schedule at the true global iteration.
+pub(crate) fn deal_tokens(
+    init: &FmModel,
+    init_kernel: &FmKernel,
+    col_plan: &ColPartition,
+    start_iter: u32,
+) -> Vec<Token> {
+    let nblocks = col_plan.n_blocks();
+    let mut toks = Vec::with_capacity(nblocks + 1);
+    for b in 0..nblocks {
+        let (lo, hi) = col_plan.block_range(b);
+        toks.push(Token {
+            j: b as u32,
+            iter: start_iter,
+            phase: Phase::Update,
+            visits: 0,
+            w: Box::from(&init.w[lo..hi]),
+            v: Box::from(init_kernel.vrows_padded(lo, hi)),
+        });
+    }
+    toks.push(Token {
+        j: BIAS,
+        iter: start_iter,
+        phase: Phase::Update,
+        visits: 0,
+        w: Box::from([init.w0]),
+        v: Box::from([]),
+    });
+    toks
+}
+
+/// Exact initial G/A for one shard, scored through the fused kernel from
+/// `kern` (the model the ring starts or restarts from). The `aa` arena is
+/// `nloc x kp` lane-blocked; padding lanes stay zero from init.
+pub(crate) fn seed_arenas(
+    shard: &partition::Shard,
+    kern: &FmKernel,
+    k: usize,
+) -> (partition::ShardArenas, Scratch) {
+    let kp = padded_k(k);
+    let mut scratch = Scratch::for_k(k);
+    let mut arenas = shard.arenas(k);
+    for r in 0..shard.nloc() {
+        let (idx, val) = shard.rows.row(r);
+        let f = kern.score_with_sums(idx, val, &mut arenas.aa[r * kp..r * kp + k], &mut scratch);
+        arenas.g[r] = loss::multiplier(f, shard.labels[r], shard.task);
+    }
+    (arenas, scratch)
+}
+
+/// Exact model assembly from one full set of tokens (invariant 4): every
+/// block exactly once, every token at `expect_iter`, padding stripped back
+/// to the K-strided model. Shared by the in-process engine, the cluster
+/// driver's final assembly, and checkpoint restore.
+pub(crate) fn assemble_model(
+    tokens: Vec<Token>,
+    col_plan: &ColPartition,
+    d: usize,
+    k: usize,
+    expect_iter: u32,
+) -> Result<FmModel> {
+    let kp = padded_k(k);
+    let nblocks = col_plan.n_blocks();
+    let ntok = nblocks + 1;
+    ensure!(
+        tokens.len() == ntok,
+        "collector has {} tokens, want {ntok}",
+        tokens.len()
+    );
+    let mut model = FmModel::zeros(d, k);
+    let mut seen_bias = false;
+    let mut seen_blocks = vec![false; nblocks];
+    for tok in tokens {
+        ensure!(
+            tok.iter == expect_iter,
+            "token finished at iter {}, want {expect_iter}",
+            tok.iter
+        );
+        if tok.is_bias() {
+            ensure!(!seen_bias, "duplicate bias token");
+            seen_bias = true;
+            model.w0 = tok.w[0];
+        } else {
+            let b = tok.j as usize;
+            ensure!(b < nblocks, "token block {b} out of range");
+            ensure!(!seen_blocks[b], "duplicate token for block {b}");
+            seen_blocks[b] = true;
+            let (lo, hi) = col_plan.block_range(b);
+            ensure!(tok.w.len() == hi - lo, "block {b} width mismatch");
+            ensure!(
+                tok.v.len() == (hi - lo) * kp,
+                "block {b} padded payload mismatch: {} vs {}",
+                tok.v.len(),
+                (hi - lo) * kp
+            );
+            model.w[lo..hi].copy_from_slice(&tok.w);
+            // Strip the padding lanes: the model is K-strided.
+            for (bi, j) in (lo..hi).enumerate() {
+                model.v[j * k..(j + 1) * k].copy_from_slice(&tok.vrow(bi, kp)[..k]);
+            }
+        }
+    }
+    ensure!(seen_bias, "bias token missing");
+    ensure!(
+        seen_blocks.iter().all(|&s| s),
+        "missing column-block tokens after drain"
+    );
+    Ok(model)
 }
 
 /// Runs DS-FACTO over an arbitrary transport. Returns the trained model,
@@ -518,7 +734,7 @@ pub fn train_with_transport(
     let (post_tx, post_rx) = channel::<FinalizePost>();
     let shared = Shared {
         transport,
-        mirror: &mirror,
+        mirror: Some(&mirror),
         collector: Mutex::new(Vec::with_capacity(ntok)),
         collected: AtomicUsize::new(0),
         done: AtomicBool::new(false),
@@ -564,29 +780,12 @@ pub fn train_with_transport(
     // the kernel's AoSoA view; the wire codec strips the padding back to
     // the K-strided frame at serialization boundaries.
     {
-        let mut deal_rng = Pcg64::new(cfg.seed, 0xdea1);
-        for b in 0..ntok {
-            let tok = if b == nblocks {
-                Token {
-                    j: BIAS,
-                    iter: 0,
-                    phase: Phase::Update,
-                    visits: 0,
-                    w: Box::from([init.w0]),
-                    v: Box::from([]),
-                }
-            } else {
-                let (lo, hi) = col_plan.block_range(b);
-                Token {
-                    j: b as u32,
-                    iter: 0,
-                    phase: Phase::Update,
-                    visits: 0,
-                    w: Box::from(&init.w[lo..hi]),
-                    v: Box::from(init_kernel.vrows_padded(lo, hi)),
-                }
-            };
-            transport.send(deal_rng.below_usize(p), tok);
+        let ranks = deal_ranks(ntok, cfg.seed, p);
+        for (tok, &dst) in deal_tokens(&init, &init_kernel, &col_plan, 0)
+            .into_iter()
+            .zip(&ranks)
+        {
+            transport.send(dst, tok);
         }
     }
 
@@ -602,21 +801,8 @@ pub fn train_with_transport(
             handles.push(scope.spawn(move || {
                 let nloc = shard.nloc();
                 // Exact initial G/A from the init model, scored through the
-                // shared fused kernel with this worker's scratch arena. The
-                // `aa` arena is `nloc x kp` lane-blocked: the kernel fills
-                // the K real lanes, the padding stays zero from init.
-                let mut scratch = Scratch::for_k(k);
-                let mut arenas = shard.arenas(k);
-                for r in 0..nloc {
-                    let (idx, val) = shard.rows.row(r);
-                    let f = init_kern.score_with_sums(
-                        idx,
-                        val,
-                        &mut arenas.aa[r * kp..r * kp + k],
-                        &mut scratch,
-                    );
-                    arenas.g[r] = loss::multiplier(f, shard.labels[r], shard.task);
-                }
+                // shared fused kernel with this worker's scratch arena.
+                let (arenas, scratch) = seed_arenas(&shard, init_kern, k);
                 let partition::Shard {
                     id,
                     task,
@@ -658,6 +844,10 @@ pub fn train_with_transport(
                     update_mode: cfg.update_mode,
                     rng: Pcg64::new(cfg.seed, 0x3a17 + id as u64),
                     scratch,
+                    def_idx: Vec::new(),
+                    def_w: Vec::new(),
+                    def_v: Vec::new(),
+                    ckpt: None,
                 };
                 w.run();
             }));
@@ -768,48 +958,7 @@ pub fn train_with_transport(
     // t_max; either way every token carries the same iteration.
     let stopped_at = t_max.min(shared.stop_at.load(Ordering::Acquire));
     let tokens = shared.collector.into_inner().unwrap();
-    ensure!(
-        tokens.len() == ntok,
-        "collector has {} tokens, want {ntok}",
-        tokens.len()
-    );
-    let mut model = FmModel::zeros(d, k);
-    let mut seen_bias = false;
-    let mut seen_blocks = vec![false; nblocks];
-    for tok in tokens {
-        ensure!(
-            tok.iter == stopped_at,
-            "token finished at iter {}, want {stopped_at}",
-            tok.iter
-        );
-        if tok.is_bias() {
-            ensure!(!seen_bias, "duplicate bias token");
-            seen_bias = true;
-            model.w0 = tok.w[0];
-        } else {
-            let b = tok.j as usize;
-            ensure!(!seen_blocks[b], "duplicate token for block {b}");
-            seen_blocks[b] = true;
-            let (lo, hi) = col_plan.block_range(b);
-            ensure!(tok.w.len() == hi - lo, "block {b} width mismatch");
-            ensure!(
-                tok.v.len() == (hi - lo) * kp,
-                "block {b} padded payload mismatch: {} vs {}",
-                tok.v.len(),
-                (hi - lo) * kp
-            );
-            model.w[lo..hi].copy_from_slice(&tok.w);
-            // Strip the padding lanes: the model is K-strided.
-            for (bi, j) in (lo..hi).enumerate() {
-                model.v[j * k..(j + 1) * k].copy_from_slice(&tok.vrow(bi, kp)[..k]);
-            }
-        }
-    }
-    ensure!(seen_bias, "bias token missing");
-    ensure!(
-        seen_blocks.iter().all(|&s| s),
-        "missing column-block tokens after drain"
-    );
+    let model = assemble_model(tokens, &col_plan, d, k, stopped_at)?;
 
     let tstats = transport.stats();
     let mut stats = stats;

@@ -509,6 +509,26 @@ mod tests {
     }
 
     #[test]
+    fn deterministic_final_model_multi_worker() {
+        // Mean-gradient updates fold deferred recompute payloads in a
+        // canonical (sorted) order before finalizing, so the final model
+        // is bitwise reproducible even with P>1 racing workers — the
+        // invariant the multi-process cluster's bitwise-equality e2e
+        // tests build on.
+        let ds = housing();
+        let fm = FmHyper::default();
+        let cfg = NomadConfig {
+            workers: 3,
+            outer_iters: 4,
+            cols_per_token: 5,
+            ..Default::default()
+        };
+        let a = train(&ds, None, &fm, &cfg).unwrap();
+        let b = train(&ds, None, &fm, &cfg).unwrap();
+        assert_eq!(a.model, b.model);
+    }
+
+    #[test]
     fn transport_spec_round_trips() {
         for spec in [
             "local",

@@ -282,6 +282,43 @@ pub fn trace_point(
     }
 }
 
+/// Streaming counterpart of [`trace_point`]'s objective for callers that
+/// never hold the full matrix: one `f64` fold over the shards of `src`
+/// visited in partition order, peak memory one shard. The cluster driver
+/// uses this to report the pre-training (iter 0) objective straight off the
+/// shard cache.
+///
+/// Returns `(objective, train_loss)`. For a contiguous partition the shard
+/// sweep visits rows in exactly the global order [`FmKernel::data_loss`]
+/// uses, so the fold is bitwise-identical to the in-memory path — the same
+/// accumulator, the same addition order.
+///
+/// [`FmKernel::data_loss`]: crate::kernel::FmKernel::data_loss
+pub fn streaming_objective(
+    src: &dyn crate::data::DataSource,
+    part: &crate::partition::RowPartition,
+    model: &FmModel,
+    lambda_w: f32,
+    lambda_v: f32,
+) -> crate::Result<(f64, f64)> {
+    let kern = crate::kernel::FmKernel::from_model(model);
+    let mut scratch = crate::kernel::Scratch::for_k(model.k);
+    let mut total = 0f64;
+    for id in 0..part.n_shards() {
+        let shard = src.shard(part, id)?;
+        for r in 0..shard.nloc() {
+            let (idx, val) = shard.rows.row(r);
+            let f = kern.score(idx, val, &mut scratch);
+            total += crate::fm::loss::loss(f, shard.labels[r], shard.task) as f64;
+        }
+    }
+    let train_loss = total / src.n().max(1) as f64;
+    let rw: f64 = model.w.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let rv: f64 = model.v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let objective = train_loss + 0.5 * lambda_w as f64 * rw + 0.5 * lambda_v as f64 * rv;
+    Ok((objective, train_loss))
+}
+
 /// Shared per-session recording helper used by the trainer loops: computes
 /// each [`TracePoint`] (objective, train loss, cadenced test metrics),
 /// accumulates the trace for [`TrainOutput`], and dispatches every point to
@@ -379,6 +416,25 @@ mod tests {
         for pt in &trace {
             assert_eq!(pt.test.is_some(), pt.iter % 2 == 0, "iter {}", pt.iter);
         }
+    }
+
+    #[test]
+    fn streaming_objective_is_bitwise_trace_point() {
+        use crate::data::{cache::ShardCacheSource, DataSource};
+        use crate::partition::RowStrategy;
+        let ds = synth::table2_dataset("housing", 11).unwrap();
+        let mut rng = Pcg64::seeded(13);
+        let model = FmModel::init(ds.d(), 4, 0.1, &mut rng);
+        let dir = std::env::temp_dir().join("dsfacto_stream_obj_test");
+        std::fs::remove_dir_all(&dir).ok();
+        crate::data::cache::write_cache(&ds, RowStrategy::Contiguous, 3, &dir).unwrap();
+        let src = ShardCacheSource::open(&dir).unwrap();
+        let part = src.plan(RowStrategy::Contiguous, 3).unwrap();
+        let (obj, loss) = streaming_objective(&src, &part, &model, 1e-2, 1e-3).unwrap();
+        let pt = trace_point(&ds, None, 1e-2, 1e-3, 0, 0.0, &model);
+        assert_eq!(obj.to_bits(), pt.objective.to_bits());
+        assert_eq!(loss.to_bits(), pt.train_loss.to_bits());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -4,6 +4,8 @@
 
 use std::path::{Path, PathBuf};
 
+use anyhow::Context;
+
 use crate::fm::FmModel;
 use crate::metrics::{TracePoint, TrainOutput};
 use crate::util::csv::CsvWriter;
@@ -138,6 +140,122 @@ impl Checkpointer {
                 }
             }
         }
+    }
+
+    /// File name of rank `rank`'s block checkpoint for epoch `iter`.
+    pub fn block_file_name(rank: usize, iter: u32) -> String {
+        format!("blocks-r{rank:03}-e{iter:05}.dsfb")
+    }
+
+    /// Writes one rank's **block-granular** checkpoint: the post-flip
+    /// tokens this rank carried across the tagged epoch boundary, exactly
+    /// the state they must be re-dealt with on restart. The union of all
+    /// P rank files at a tag is one complete token set (a rank may
+    /// legitimately flip zero tokens at an epoch — the empty file still
+    /// marks that rank's epoch as complete). The write is atomic
+    /// (tmp-file + rename), so a crash mid-checkpoint can never leave a
+    /// truncated file that [`Checkpointer::latest_block_epoch`] would
+    /// count.
+    ///
+    /// Format: `DSFB | version u32 | rank u32 | iter u32 | count u32`,
+    /// then `count` length-prefixed K-strided token frames
+    /// ([`crate::cluster::codec::encode_token_padded`]).
+    pub fn save_blocks(
+        dir: &Path,
+        rank: usize,
+        iter: u32,
+        tokens: &[crate::nomad::token::Token],
+        k: usize,
+    ) -> anyhow::Result<PathBuf> {
+        use std::io::Write;
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+        let mut out = Vec::with_capacity(64);
+        out.extend_from_slice(b"DSFB");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(rank as u32).to_le_bytes());
+        out.extend_from_slice(&iter.to_le_bytes());
+        out.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
+        let mut frame = Vec::new();
+        for tok in tokens {
+            crate::cluster::codec::encode_token_padded(tok, k, &mut frame);
+            out.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+            out.extend_from_slice(&frame);
+        }
+        let path = dir.join(Self::block_file_name(rank, iter));
+        let tmp = dir.join(format!(".{}.tmp", Self::block_file_name(rank, iter)));
+        {
+            let mut f = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+            f.write_all(&out)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing checkpoint {path:?}"))?;
+        Ok(path)
+    }
+
+    /// Reads one rank file back: `(rank, iter, tokens)`, tokens in the
+    /// engine's lane-padded in-memory layout.
+    pub fn load_blocks(path: &Path) -> anyhow::Result<(u32, u32, Vec<crate::nomad::token::Token>)> {
+        let buf = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        anyhow::ensure!(
+            buf.len() >= 20 && &buf[..4] == b"DSFB",
+            "not a block checkpoint: {path:?}"
+        );
+        let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+        anyhow::ensure!(version == 1, "unsupported block checkpoint version {version}");
+        let rank = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        let iter = u32::from_le_bytes(buf[12..16].try_into().unwrap());
+        let count = u32::from_le_bytes(buf[16..20].try_into().unwrap()) as usize;
+        anyhow::ensure!(count <= 1 << 24, "implausible token count {count}");
+        let mut tokens = Vec::with_capacity(count);
+        let mut pos = 20usize;
+        for _ in 0..count {
+            anyhow::ensure!(pos + 4 <= buf.len(), "truncated block checkpoint {path:?}");
+            let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+            pos += 4;
+            anyhow::ensure!(pos + len <= buf.len(), "truncated block checkpoint {path:?}");
+            tokens.push(crate::cluster::codec::decode_token_padded(&buf[pos..pos + len])?);
+            pos += len;
+        }
+        anyhow::ensure!(pos == buf.len(), "trailing bytes in block checkpoint {path:?}");
+        Ok((rank, iter, tokens))
+    }
+
+    /// The newest epoch tag for which **all** `p` rank files exist in
+    /// `dir` — the restart point checkpoint-recovery agrees on. `None` if
+    /// the directory is missing or no epoch is complete (a crash can
+    /// leave a partial set of rank files at the newest tag; those are
+    /// skipped, not an error).
+    pub fn latest_block_epoch(dir: &Path, p: usize) -> anyhow::Result<Option<u32>> {
+        use std::collections::HashMap;
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(_) => return Ok(None),
+        };
+        let mut per_epoch: HashMap<u32, usize> = HashMap::new();
+        for entry in entries {
+            let Ok(entry) = entry else { continue };
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            // blocks-rRRR-eEEEEE.dsfb
+            let Some(rest) = name.strip_prefix("blocks-r").and_then(|s| s.strip_suffix(".dsfb"))
+            else {
+                continue;
+            };
+            let Some((rank, epoch)) = rest.split_once("-e") else { continue };
+            let (Ok(rank), Ok(epoch)) = (rank.parse::<usize>(), epoch.parse::<u32>()) else {
+                continue;
+            };
+            if rank < p {
+                *per_epoch.entry(epoch).or_insert(0) += 1;
+            }
+        }
+        Ok(per_epoch
+            .into_iter()
+            .filter(|&(_, have)| have == p)
+            .map(|(epoch, _)| epoch)
+            .max())
     }
 }
 
@@ -284,6 +402,56 @@ mod tests {
         assert!(ck.saved[2].ends_with("final.dsfm"));
         let back = crate::fm::io::load(&ck.saved[2]).unwrap();
         assert_eq!(back, m);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn block_checkpoints_round_trip_and_scan() {
+        use crate::nomad::token::{Phase, Token, BIAS};
+        let dir = std::env::temp_dir().join("dsfacto_block_ckpt_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let k = 3usize;
+        let kp = crate::kernel::padded_k(k);
+        let mk = |j: u32, iter: u32, ncols: usize| {
+            let mut v = vec![0f32; ncols * kp];
+            for bi in 0..ncols {
+                for kk in 0..k {
+                    v[bi * kp + kk] = (j as usize * 100 + bi * 10 + kk) as f32 * 0.25;
+                }
+            }
+            Token {
+                j,
+                iter,
+                phase: Phase::Update,
+                visits: 0,
+                w: (0..ncols).map(|i| i as f32 - 0.5).collect(),
+                v: v.into_boxed_slice(),
+            }
+        };
+        let bias = Token {
+            j: BIAS,
+            iter: 4,
+            phase: Phase::Update,
+            visits: 0,
+            w: Box::from([0.125f32]),
+            v: Box::from([]),
+        };
+        // Epoch 4 complete across both ranks (rank 1 holds zero tokens:
+        // still a valid, countable file); epoch 6 missing rank 1.
+        let r0 = vec![mk(0, 4, 2), mk(1, 4, 2), bias.clone()];
+        let p0 = Checkpointer::save_blocks(&dir, 0, 4, &r0, k).unwrap();
+        Checkpointer::save_blocks(&dir, 1, 4, &[], k).unwrap();
+        Checkpointer::save_blocks(&dir, 0, 6, &[mk(0, 6, 2)], k).unwrap();
+
+        let (rank, iter, back) = Checkpointer::load_blocks(&p0).unwrap();
+        assert_eq!((rank, iter), (0, 4));
+        assert_eq!(back, r0, "padded payloads must survive the round trip");
+
+        assert_eq!(Checkpointer::latest_block_epoch(&dir, 2).unwrap(), Some(4));
+        // A lone rank can restart from its own newest complete tag too.
+        assert_eq!(Checkpointer::latest_block_epoch(&dir, 1).unwrap(), Some(6));
+        let missing = dir.join("no_such_subdir");
+        assert_eq!(Checkpointer::latest_block_epoch(&missing, 2).unwrap(), None);
         std::fs::remove_dir_all(&dir).ok();
     }
 

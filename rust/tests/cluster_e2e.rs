@@ -1,0 +1,355 @@
+//! Multi-process cluster end-to-end tests: spawn a real `dsfacto driver`
+//! and real `dsfacto worker` OS processes against a shared shard cache,
+//! and check the distributed run against the in-process engine.
+//!
+//! The load-bearing assertion is *bitwise* model equality: under the
+//! default `update_mode = mean` the lane-blocked engine folds deferred
+//! recompute contributions in a canonical order, so the assembled model
+//! must be bit-identical whether the P workers are threads in one process
+//! or separate processes trading tokens over TCP.
+
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use dsfacto::config::{ExperimentConfig, TrainerKind};
+use dsfacto::data::cache::{write_cache, ShardCacheSource};
+use dsfacto::data::synth::table2_dataset;
+use dsfacto::data::DataSource;
+use dsfacto::partition::RowStrategy;
+use dsfacto::train::Trainer;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_dsfacto")
+}
+
+/// A spawned dsfacto process, killed on drop so a failed assertion never
+/// leaks children past the test run.
+struct Proc {
+    child: Child,
+    name: String,
+}
+
+impl Proc {
+    fn spawn(name: &str, args: &[&str], capture_stdout: bool) -> Proc {
+        let mut cmd = Command::new(bin());
+        cmd.args(args)
+            .current_dir(env!("CARGO_MANIFEST_DIR"))
+            .stdin(Stdio::null())
+            .stdout(if capture_stdout {
+                Stdio::piped()
+            } else {
+                Stdio::null()
+            });
+        let child = cmd.spawn().unwrap_or_else(|e| panic!("spawn {name}: {e}"));
+        Proc {
+            child,
+            name: name.to_string(),
+        }
+    }
+
+    /// Streams this process's stdout lines into a shared buffer from a
+    /// background thread (so the pipe never fills and blocks the child).
+    fn capture_lines(&mut self) -> Arc<Mutex<Vec<String>>> {
+        let stdout = self.child.stdout.take().expect("stdout not piped");
+        let lines = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&lines);
+        std::thread::spawn(move || {
+            for line in std::io::BufReader::new(stdout).lines() {
+                match line {
+                    Ok(l) => sink.lock().unwrap().push(l),
+                    Err(_) => break,
+                }
+            }
+        });
+        lines
+    }
+
+    /// Waits for exit within `timeout`; panics on timeout, returns the
+    /// success flag otherwise.
+    fn wait_ok(&mut self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(status) = self.child.try_wait().expect("try_wait") {
+                return status.success();
+            }
+            assert!(
+                Instant::now() < deadline,
+                "{} did not exit within {timeout:?}",
+                self.name
+            );
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Blocks until some captured line satisfies `pred` (scanning new lines
+/// as they stream in), returning the matching line.
+fn wait_for_line(
+    lines: &Arc<Mutex<Vec<String>>>,
+    what: &str,
+    timeout: Duration,
+    pred: impl Fn(&str) -> bool,
+) -> String {
+    let deadline = Instant::now() + timeout;
+    let mut scanned = 0usize;
+    loop {
+        {
+            let buf = lines.lock().unwrap();
+            while scanned < buf.len() {
+                if pred(&buf[scanned]) {
+                    return buf[scanned].clone();
+                }
+                scanned += 1;
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "never saw {what}; driver output so far: {:#?}",
+            lines.lock().unwrap()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Extracts the bound control address from the driver's
+/// `dsfacto driver: control on ADDR` line.
+fn control_addr(lines: &Arc<Mutex<Vec<String>>>) -> String {
+    let line = wait_for_line(lines, "the control-on line", Duration::from_secs(60), |l| {
+        l.contains("control on ")
+    });
+    line.split("control on ")
+        .nth(1)
+        .expect("address after 'control on '")
+        .trim()
+        .to_string()
+}
+
+/// The in-process reference run at the exact schedule the driver ships to
+/// its workers (same seed, eta, token width, partition — same everything).
+fn inprocess_model(cache: &str, p: usize, iters: usize, seed: u64) -> dsfacto::fm::FmModel {
+    let mut cfg = ExperimentConfig::default();
+    for (key, val) in [
+        ("dataset", format!("cache:{cache}")),
+        ("data_cache", cache.to_string()),
+        ("workers", p.to_string()),
+        ("outer_iters", iters.to_string()),
+        ("eta", "constant:0.5".to_string()),
+        ("seed", seed.to_string()),
+        ("cols_per_token", "5".to_string()),
+        ("train_frac", "1".to_string()),
+    ] {
+        cfg.set(key, &val).unwrap();
+    }
+    let ds = ShardCacheSource::open(cache).unwrap().materialize().unwrap();
+    let out = TrainerKind::Nomad
+        .build(&cfg)
+        .fit(&ds, None, &mut ())
+        .unwrap();
+    out.model
+}
+
+fn setup_cache(tag: &str, seed: u64, shards: usize) -> (std::path::PathBuf, String) {
+    let base = std::env::temp_dir().join(format!("dsfacto_cluster_{tag}"));
+    std::fs::remove_dir_all(&base).ok();
+    std::fs::create_dir_all(&base).unwrap();
+    let cache = base.join("cache");
+    let ds = table2_dataset("housing", seed).unwrap();
+    write_cache(&ds, RowStrategy::Contiguous, shards, &cache).unwrap();
+    let cache_s = cache.to_str().unwrap().to_string();
+    (base, cache_s)
+}
+
+fn run_ring(tag: &str, p: usize, iters: usize, seed: u64) {
+    let (base, cache) = setup_cache(tag, seed, p);
+    let model_path = base.join("model.dsfm");
+    let model_s = model_path.to_str().unwrap().to_string();
+    let dataset = format!("cache:{cache}");
+    let (ps, iters_s, seed_s) = (p.to_string(), iters.to_string(), seed.to_string());
+
+    let mut driver = Proc::spawn(
+        "driver",
+        &[
+            "driver",
+            "--dataset",
+            &dataset,
+            "--workers",
+            &ps,
+            "--outer-iters",
+            &iters_s,
+            "--eta",
+            "constant:0.5",
+            "--seed",
+            &seed_s,
+            "--cols-per-token",
+            "5",
+            "--addr",
+            "127.0.0.1:0",
+            "--save-model",
+            &model_s,
+            "--quiet",
+        ],
+        true,
+    );
+    let lines = driver.capture_lines();
+    let addr = control_addr(&lines);
+
+    let mut workers: Vec<Proc> = (0..p)
+        .map(|i| {
+            Proc::spawn(
+                &format!("worker-{i}"),
+                &["worker", "--driver", &addr],
+                false,
+            )
+        })
+        .collect();
+
+    assert!(
+        driver.wait_ok(Duration::from_secs(180)),
+        "driver failed; output: {:#?}",
+        lines.lock().unwrap()
+    );
+    for w in &mut workers {
+        assert!(w.wait_ok(Duration::from_secs(60)), "{} failed", w.name);
+    }
+
+    let cluster = dsfacto::fm::io::load(&model_path).unwrap();
+    let reference = inprocess_model(&cache, p, iters, seed);
+    assert_eq!(
+        cluster, reference,
+        "multi-process model differs from the in-process engine"
+    );
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn two_process_ring_is_bitwise_in_process() {
+    run_ring("p2", 2, 4, 23);
+}
+
+#[test]
+fn three_process_ring_is_bitwise_in_process() {
+    run_ring("p3", 3, 3, 29);
+}
+
+#[test]
+fn killed_worker_recovers_from_block_checkpoints() {
+    let (base, cache) = setup_cache("recover", 31, 2);
+    let ckpt = base.join("ckpt");
+    let ckpt_s = ckpt.to_str().unwrap().to_string();
+    let model_path = base.join("model.dsfm");
+    let model_s = model_path.to_str().unwrap().to_string();
+    let dataset = format!("cache:{cache}");
+
+    // Not --quiet: the test steers off the driver's per-iteration progress
+    // lines and its generation-restart marker.
+    let mut driver = Proc::spawn(
+        "driver",
+        &[
+            "driver",
+            "--dataset",
+            &dataset,
+            "--workers",
+            "2",
+            "--outer-iters",
+            "8",
+            "--eta",
+            "constant:0.5",
+            "--seed",
+            "7",
+            "--cols-per-token",
+            "5",
+            "--addr",
+            "127.0.0.1:0",
+            "--ckpt-dir",
+            &ckpt_s,
+            "--ckpt-every",
+            "1",
+            "--heartbeat-timeout",
+            "2",
+            "--max-restarts",
+            "2",
+            "--save-model",
+            &model_s,
+        ],
+        true,
+    );
+    let lines = driver.capture_lines();
+    let addr = control_addr(&lines);
+
+    let worker_args = [
+        "worker",
+        "--driver",
+        addr.as_str(),
+        "--ckpt-dir",
+        ckpt_s.as_str(),
+        "--ckpt-every",
+        "1",
+    ];
+    let mut worker_a = Proc::spawn("worker-a", &worker_args, false);
+    let mut worker_b = Proc::spawn("worker-b", &worker_args, false);
+
+    // Let training make checkpointable progress, then kill one worker.
+    wait_for_line(&lines, "iteration 3", Duration::from_secs(120), |l| {
+        l.trim_start()
+            .strip_prefix("iter")
+            .and_then(|rest| rest.trim_start().split_whitespace().next())
+            .and_then(|n| n.parse::<u32>().ok())
+            .is_some_and(|n| n >= 3)
+    });
+    worker_b.kill();
+
+    // The driver notices (closed control conn / heartbeat silence), aborts
+    // the generation and opens the next membership round.
+    wait_for_line(
+        &lines,
+        "the generation-restart marker",
+        Duration::from_secs(60),
+        |l| l.contains("restarting from iteration"),
+    );
+    let mut worker_c = Proc::spawn("worker-c", &worker_args, false);
+
+    assert!(
+        driver.wait_ok(Duration::from_secs(180)),
+        "driver failed after recovery; output: {:#?}",
+        lines.lock().unwrap()
+    );
+    assert!(worker_a.wait_ok(Duration::from_secs(60)), "survivor failed");
+    assert!(worker_c.wait_ok(Duration::from_secs(60)), "replacement failed");
+
+    // The run recovered: a restart happened, block checkpoints exist, and
+    // the final model was assembled and saved.
+    let restarted = lines
+        .lock()
+        .unwrap()
+        .iter()
+        .any(|l| l.contains("restarting from iteration"));
+    assert!(restarted);
+    let blocks = std::fs::read_dir(&ckpt)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            name.starts_with("blocks-r") && name.ends_with(".dsfb")
+        })
+        .count();
+    assert!(blocks > 0, "no block checkpoints were written");
+    let model = dsfacto::fm::io::load(&model_path).unwrap();
+    let src = ShardCacheSource::open(&cache).unwrap();
+    assert_eq!(model.d, src.d());
+    std::fs::remove_dir_all(&base).ok();
+}
