@@ -1,15 +1,23 @@
-//! Scaling study: the Fig. 6 experiment as a runnable example. Sweeps the
-//! worker count over {1, 2, 4, 8, ...} in both communication modes
-//! (in-process threads vs simulated multi-machine network) and prints
-//! speedup tables. The transport is an `ExperimentConfig` key, so every
-//! point runs through the same `TrainerKind::build` dispatch as the CLI.
+//! Scaling study: the Fig. 6 experiment as a runnable example, on the
+//! ingest-first out-of-core flow. The dataset is written once as LIBSVM
+//! text, `stream_ingest`ed into a P-shard binary cache per worker count,
+//! and every point trains through `run_experiment` on `cache:<dir>` with
+//! `train_frac = 1` — the coordinator streams shards through the
+//! double-buffered prefetcher and never materializes the full matrix
+//! (each row reports its measured peak residency). The sweep covers both
+//! communication modes (in-process threads vs simulated multi-machine
+//! network); the transport is an `ExperimentConfig` key, so every point
+//! runs through the same `TrainerKind::build` dispatch as the CLI.
 //!
 //! ```bash
 //! cargo run --release --example scaling_study [-- --dataset ijcnn1 --workers 1,2,4,8]
 //! ```
 
+use dsfacto::coordinator::run_experiment;
+use dsfacto::data::libsvm::{self, IngestOptions};
 use dsfacto::data::synth;
 use dsfacto::optim::LrSchedule;
+use dsfacto::partition::RowStrategy;
 use dsfacto::prelude::*;
 use dsfacto::util::cli::Args;
 
@@ -32,49 +40,85 @@ fn main() -> anyhow::Result<()> {
         fm.k
     );
 
+    // Ingest-first: one LIBSVM file, one P-shard cache per sweep point
+    // (the cache bakes in its shard count, so each worker width gets its
+    // own ingest — exactly the `dsfacto ingest` + `--dataset cache:DIR`
+    // flow).
+    let base_dir = std::env::temp_dir().join("dsfacto_scaling_study");
+    std::fs::remove_dir_all(&base_dir).ok();
+    std::fs::create_dir_all(&base_dir)?;
+    let svm_path = base_dir.join(format!("{dataset}.svm"));
+    libsvm::save(&ds, &svm_path)?;
+    let mut caches = std::collections::BTreeMap::new();
+    for &p in &workers {
+        let cache_dir = base_dir.join(format!("cache_p{p}"));
+        let opts = IngestOptions {
+            task: ds.task,
+            n_features: Some(ds.d()),
+            strategy: RowStrategy::Contiguous,
+            shards: p,
+            chunk_rows: 4096,
+        };
+        let report = libsvm::stream_ingest(&svm_path, &dataset, &opts, &cache_dir)?;
+        println!(
+            "ingested {} rows into {p} shard(s) (peak resident {} B, full CSR never built)",
+            report.n, report.peak_resident_bytes
+        );
+        caches.insert(p, cache_dir);
+    }
+    println!();
+
     for (transport, label) in [
         ("local", "multi-threaded (in-process queues)"),
         ("simnet:100us,1.25e9,1", "simulated multi-machine (100us / 10Gbps)"),
     ] {
         println!("== {label} ==");
         println!(
-            "{:>8} {:>10} {:>10} {:>9} {:>9} {:>12}",
-            "workers", "wall-s", "makespan", "speedup", "eff", "msgs"
+            "{:>8} {:>10} {:>10} {:>9} {:>9} {:>12} {:>14}",
+            "workers", "wall-s", "makespan", "speedup", "eff", "msgs", "peak-resident"
         );
         let mut base = None;
         for &p in &workers {
             let mut cfg = ExperimentConfig {
-                dataset: DatasetSpec::Table2(dataset.clone()),
+                dataset: DatasetSpec::Cache {
+                    dir: caches[&p].to_str().unwrap().to_string(),
+                },
                 trainer: TrainerKind::Nomad,
                 fm,
                 workers: p,
                 outer_iters: iters,
                 eta: LrSchedule::Constant(0.5),
                 eval_every: usize::MAX,
+                train_frac: 1.0,
                 ..Default::default()
             };
             cfg.set("transport", transport)?;
-            let trainer = cfg.trainer.build(&cfg);
-            let out = trainer.fit(&ds, None, &mut ())?;
-            let stats = trainer.stats().expect("engine counters");
+            let summary = run_experiment(&cfg)?;
+            let stats = summary.stats.expect("engine counters");
             // Single-core container: wall-clock cannot show parallelism, so
             // speedup uses the simulated parallel makespan max_p(busy_p)
             // (same convention as the fig6_scalability bench).
             let makespan = stats.makespan_secs();
             let base_secs = *base.get_or_insert(makespan);
             let speedup = base_secs / makespan.max(1e-12);
+            let resident = summary
+                .residency
+                .map(|r| format!("{} B", r.peak_resident_bytes))
+                .unwrap_or_else(|| "-".to_string());
             println!(
-                "{:>8} {:>10.3} {:>10.3} {:>9.2} {:>8.0}% {:>12}",
+                "{:>8} {:>10.3} {:>10.3} {:>9.2} {:>8.0}% {:>12} {:>14}",
                 p,
-                out.wall_secs,
+                summary.output.wall_secs,
                 makespan,
                 speedup,
                 100.0 * speedup / p as f64,
-                stats.messages
+                stats.messages,
+                resident
             );
         }
         println!();
     }
     println!("(dotted line in paper Fig. 6 = linear speedup; efficiency = speedup/P)");
+    std::fs::remove_dir_all(&base_dir).ok();
     Ok(())
 }

@@ -521,6 +521,56 @@ fn main() -> anyhow::Result<()> {
         "resident shard_bytes cache (realsim-2k P=8)",
         ingest.peak_resident_bytes as f64,
     );
+
+    section("shard prefetch: synchronous vs double-buffered sweeps (realsim-2k P=8)");
+    // One "epoch" = one full streaming_objective fold over the 8 cached
+    // shards (the coordinator's trace/eval access pattern). `sync` loads
+    // each shard on demand; `prefetch` is the same source behind the
+    // coordinator's double-buffered PrefetchSource decorator, which
+    // overlaps the next shard's disk read with the current fold.
+    {
+        use dsfacto::data::{DataSource, PrefetchSource, ShardCacheSource};
+        let epochs = 4usize;
+        let pmodel = FmModel::init(parsed.d(), 8, 0.05, &mut rng);
+        let sync_src = ShardCacheSource::open(&cache_dir)?;
+        let plan = sync_src.plan(dsfacto::partition::RowStrategy::Contiguous, 8)?;
+        let sw = dsfacto::util::timer::Stopwatch::start();
+        for _ in 0..epochs {
+            std::hint::black_box(dsfacto::train::streaming_objective(
+                &sync_src, &plan, &pmodel, 1e-4, 1e-4,
+            )?);
+        }
+        let sync_epoch = sw.secs() / epochs as f64;
+        let pf_src =
+            PrefetchSource::new(std::sync::Arc::new(ShardCacheSource::open(&cache_dir)?));
+        let sw = dsfacto::util::timer::Stopwatch::start();
+        for _ in 0..epochs {
+            std::hint::black_box(dsfacto::train::streaming_objective(
+                &pf_src, &plan, &pmodel, 1e-4, 1e-4,
+            )?);
+        }
+        let pf_epoch = sw.secs() / epochs as f64;
+        println!(
+            "  sync {:.2} ms/epoch vs prefetch {:.2} ms/epoch ({} hits / {} misses); \
+             coordinator resident: full {full_bytes} B vs stream peak {} B ({} shards)",
+            sync_epoch * 1e3,
+            pf_epoch * 1e3,
+            pf_src.prefetch_hits(),
+            pf_src.prefetch_misses(),
+            pf_src.peak_resident_bytes(),
+            pf_src.peak_resident_shards(),
+        );
+        report.record_value("prefetch epoch_secs sync (realsim-2k P=8)", sync_epoch);
+        report.record_value("prefetch epoch_secs prefetch (realsim-2k P=8)", pf_epoch);
+        report.record_value(
+            "resident coordinator_bytes full (realsim-2k)",
+            full_bytes as f64,
+        );
+        report.record_value(
+            "resident coordinator_bytes stream (realsim-2k P=8)",
+            pf_src.peak_resident_bytes() as f64,
+        );
+    }
     std::fs::remove_dir_all(&tmp).ok();
 
     section("cluster: per-epoch wall clock, in-process vs multi-process (housing, P=2, 3 iters)");
@@ -602,6 +652,8 @@ fn cluster_driver_secs(cache: &std::path::Path, iters: usize) -> anyhow::Result<
             "5",
             "--cols-per-token",
             "5",
+            "--train-frac",
+            "1",
             "--addr",
             "127.0.0.1:0",
             "--quiet",

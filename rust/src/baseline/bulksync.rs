@@ -210,8 +210,8 @@ pub fn bulksync_train_with_stats(
 ) -> crate::Result<(TrainOutput, PartitionStats)> {
     let workers = cfg.workers.max(1).min(train.n().max(1));
     let mut rng = Pcg64::new(cfg.seed, 0xb51c);
-    let mut model = FmModel::init(train.d(), fm.k, fm.init_std, &mut rng);
-    let mut probe = Probe::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
+    let model = FmModel::init(train.d(), fm.k, fm.init_std, &mut rng);
+    let probe = Probe::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
 
     // Row shards, built once (CSR slice + CSC per worker), pulled through
     // the data seam (in-memory by default — bit-identical to the legacy
@@ -221,6 +221,46 @@ pub fn bulksync_train_with_stats(
     let row_plan = source.plan(cfg.row_partition, workers)?;
     let pstats = PartitionStats::from_plan(&row_plan, &train.rows);
     let shards = build_shards_from_source(source, &row_plan)?;
+    let out = bulksync_core(&shards, train.n(), fm, cfg, model, probe, obs)?;
+    Ok((out, pstats))
+}
+
+/// [`bulksync_train_with_stats`] off a [`DataSource`] — no caller-held
+/// full matrix. As in the paper's distributed memory model, each
+/// simulated worker holds its own row shard for the session (resident
+/// across workers, never concatenated), and the convergence probe folds
+/// over those resident shards. Model and trace are bitwise identical to
+/// the in-memory run of the same config.
+///
+/// [`DataSource`]: crate::data::DataSource
+pub fn bulksync_train_from_source(
+    src: &dyn crate::data::DataSource,
+    fm: &FmHyper,
+    cfg: &BulkSyncConfig,
+    obs: &mut dyn TrainObserver,
+) -> crate::Result<(TrainOutput, PartitionStats)> {
+    let workers = cfg.workers.max(1).min(src.n().max(1));
+    let mut rng = Pcg64::new(cfg.seed, 0xb51c);
+    let model = FmModel::init(src.d(), fm.k, fm.init_std, &mut rng);
+    let row_plan = src.plan(cfg.row_partition, workers)?;
+    let shards = build_shards_from_source(src, &row_plan)?;
+    let pstats =
+        PartitionStats::from_shard_nnz(shards.iter().map(|s| s.rows.nnz()).collect());
+    let probe = Probe::from_shards(&shards, src.n(), fm.lambda_w, fm.lambda_v, cfg.eval_every);
+    let out = bulksync_core(&shards, src.n(), fm, cfg, model, probe, obs)?;
+    Ok((out, pstats))
+}
+
+/// The shared map-reduce-step loop behind both entry points.
+fn bulksync_core(
+    shards: &[Shard],
+    n: usize,
+    fm: &FmHyper,
+    cfg: &BulkSyncConfig,
+    mut model: FmModel,
+    mut probe: Probe<'_>,
+    obs: &mut dyn TrainObserver,
+) -> crate::Result<TrainOutput> {
     // Per-worker G / lane-blocked A scratch, grown on the first iteration
     // and reused for the rest of the run.
     let mut aux: Vec<(Vec<f32>, Vec<f32>)> =
@@ -228,10 +268,8 @@ pub fn bulksync_train_with_stats(
 
     let mut sw = Stopwatch::start();
     let mut clock = 0f64;
-    let mut stopped = probe.record(0, 0.0, &model, obs).is_stop();
+    let mut stopped = probe.try_record(0, 0.0, &model, obs)?.is_stop();
     sw.lap();
-
-    let n = train.n();
     for t in 0..cfg.iters {
         if stopped {
             break;
@@ -270,18 +308,15 @@ pub fn bulksync_train_with_stats(
         }
 
         clock += sw.lap();
-        stopped = probe.record(t + 1, clock, &model, obs).is_stop();
+        stopped = probe.try_record(t + 1, clock, &model, obs)?.is_stop();
         sw.lap();
     }
 
-    Ok((
-        TrainOutput {
-            model,
-            trace: probe.into_trace(),
-            wall_secs: clock,
-        },
-        pstats,
-    ))
+    Ok(TrainOutput {
+        model,
+        trace: probe.into_trace(),
+        wall_secs: clock,
+    })
 }
 
 #[cfg(test)]

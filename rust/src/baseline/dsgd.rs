@@ -122,13 +122,9 @@ pub fn dsgd_train_with_stats(
     obs: &mut dyn TrainObserver,
 ) -> crate::Result<(TrainOutput, PartitionStats)> {
     let p = cfg.workers.max(1).min(train.d().max(1));
-    let n = train.n();
-    let d = train.d();
-    let k = fm.k;
-    let kp = padded_k(k);
     let mut rng = Pcg64::new(cfg.seed, 0xd5fd);
-    let mut model = FmModel::init(d, k, fm.init_std, &mut rng);
-    let mut probe = Probe::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
+    let model = FmModel::init(train.d(), fm.k, fm.init_std, &mut rng);
+    let probe = Probe::new(train, test, fm.lambda_w, fm.lambda_v, cfg.eval_every);
 
     // The (row-shard x column-block) grid, built once, with the shards
     // pulled through the data seam (in-memory by default — bit-identical
@@ -138,12 +134,61 @@ pub fn dsgd_train_with_stats(
     let row_plan = source.plan(cfg.row_partition, p)?;
     let pstats = PartitionStats::from_plan(&row_plan, &train.rows);
     let shards = build_shards_from_source(source, &row_plan)?;
+    let out = dsgd_core(&shards, train.n(), train.d(), p, fm, cfg, model, probe, obs)?;
+    Ok((out, pstats))
+}
+
+/// [`dsgd_train_with_stats`] off a [`DataSource`] — no caller-held full
+/// matrix. Each simulated worker still holds its own row shard for the
+/// whole session (that *is* the paper's distributed memory model: the
+/// data is resident across workers, never in one coordinator), and the
+/// convergence probe folds over those resident shards, so no step of the
+/// run materializes the full CSR. Model and trace are bitwise identical
+/// to the in-memory run of the same config (same RNG stream, same visit
+/// order, same probe fold).
+///
+/// [`DataSource`]: crate::data::DataSource
+pub fn dsgd_train_from_source(
+    src: &dyn crate::data::DataSource,
+    fm: &FmHyper,
+    cfg: &DsgdConfig,
+    obs: &mut dyn TrainObserver,
+) -> crate::Result<(TrainOutput, PartitionStats)> {
+    let p = cfg.workers.max(1).min(src.d().max(1));
+    let mut rng = Pcg64::new(cfg.seed, 0xd5fd);
+    let model = FmModel::init(src.d(), fm.k, fm.init_std, &mut rng);
+    let row_plan = src.plan(cfg.row_partition, p)?;
+    let shards = build_shards_from_source(src, &row_plan)?;
+    let pstats =
+        PartitionStats::from_shard_nnz(shards.iter().map(|s| s.rows.nnz()).collect());
+    let probe = Probe::from_shards(&shards, src.n(), fm.lambda_w, fm.lambda_v, cfg.eval_every);
+    let out = dsgd_core(&shards, src.n(), src.d(), p, fm, cfg, model, probe, obs)?;
+    Ok((out, pstats))
+}
+
+/// The shared epoch loop behind both entry points: block-cyclic
+/// sub-epochs over already-built shards, recording through the probe the
+/// caller chose (in-memory trace fold or resident-shard fold).
+#[allow(clippy::too_many_arguments)]
+fn dsgd_core(
+    shards: &[Shard],
+    n: usize,
+    d: usize,
+    p: usize,
+    fm: &FmHyper,
+    cfg: &DsgdConfig,
+    mut model: FmModel,
+    mut probe: Probe<'_>,
+    obs: &mut dyn TrainObserver,
+) -> crate::Result<TrainOutput> {
+    let k = fm.k;
+    let kp = padded_k(k);
     let col_plan = ColPartition::with_n_blocks(d, p);
     let plan = GridPlan::new(p, col_plan.n_blocks());
 
     let mut sw = Stopwatch::start();
     let mut clock = 0f64;
-    let mut stopped = probe.record(0, 0.0, &model, obs).is_stop();
+    let mut stopped = probe.try_record(0, 0.0, &model, obs)?.is_stop();
     sw.lap();
 
     for epoch in 0..cfg.epochs {
@@ -197,18 +242,15 @@ pub fn dsgd_train_with_stats(
             }
         }
         clock += sw.lap();
-        stopped = probe.record(epoch + 1, clock, &model, obs).is_stop();
+        stopped = probe.try_record(epoch + 1, clock, &model, obs)?.is_stop();
         sw.lap();
     }
 
-    Ok((
-        TrainOutput {
-            model,
-            trace: probe.into_trace(),
-            wall_secs: clock,
-        },
-        pstats,
-    ))
+    Ok(TrainOutput {
+        model,
+        trace: probe.into_trace(),
+        wall_secs: clock,
+    })
 }
 
 /// Exact G (multipliers) and lane-blocked A (factor sums, `n x kp` with

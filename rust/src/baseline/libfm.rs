@@ -147,6 +147,70 @@ pub fn libfm_train(
     }
 }
 
+/// [`libfm_train`] off a [`DataSource`], one shard resident at a time:
+/// each epoch sweeps the shards of `part` in order and applies the
+/// eq. 11-13 update to every local row, which visits the global rows in
+/// exactly the identity order of the `shuffle = false` in-memory loop —
+/// model and trace are bitwise identical to
+/// `libfm_train(&src.materialize()?, None, ...)` with shuffling off.
+/// (A streamed epoch cannot shuffle globally without materializing, which
+/// is the point; per-epoch order randomization is future work.) The
+/// per-iteration probe re-reads the shards through the same source, so
+/// peak resident data stays one shard — two behind a prefetching source.
+///
+/// [`DataSource`]: crate::data::DataSource
+pub fn libfm_train_from_source(
+    src: &dyn crate::data::DataSource,
+    part: &crate::partition::RowPartition,
+    fm: &FmHyper,
+    cfg: &LibfmConfig,
+    obs: &mut dyn TrainObserver,
+) -> crate::Result<TrainOutput> {
+    let mut rng = Pcg64::new(cfg.seed, 0x11bf);
+    let mut model = FmModel::init(src.d(), fm.k, fm.init_std, &mut rng);
+    let mut kern = FmKernel::from_model(&model);
+    let mut scratch = Scratch::for_k(fm.k);
+    let mut probe = Probe::streaming(src, part, fm.lambda_w, fm.lambda_v, cfg.eval_every);
+
+    let mut sw = Stopwatch::start();
+    let mut train_clock = 0f64;
+    let mut stopped = probe.try_record(0, 0.0, &model, obs)?.is_stop();
+    sw.lap(); // exclude the initial evaluation
+
+    for epoch in 0..cfg.epochs {
+        if stopped {
+            break;
+        }
+        let eta = cfg.eta.at(epoch);
+        for id in 0..part.n_shards() {
+            let shard = src.shard(part, id)?;
+            for r in 0..shard.nloc() {
+                let (idx, val) = shard.rows.row(r);
+                kern.score_grad_step(
+                    idx,
+                    val,
+                    shard.labels[r],
+                    shard.task,
+                    eta,
+                    fm.lambda_w,
+                    fm.lambda_v,
+                    &mut scratch,
+                );
+            }
+        }
+        train_clock += sw.lap();
+        kern.write_model(&mut model);
+        stopped = probe.try_record(epoch + 1, train_clock, &model, obs)?.is_stop();
+        sw.lap(); // evaluation excluded from the training clock
+    }
+
+    Ok(TrainOutput {
+        model,
+        trace: probe.into_trace(),
+        wall_secs: train_clock,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -268,6 +332,42 @@ mod tests {
         }
         kern.write_model(&mut model);
         assert_eq!(out.model, model);
+    }
+
+    #[test]
+    fn from_source_matches_in_order_in_memory_run_bitwise() {
+        use crate::data::cache::{write_cache, ShardCacheSource};
+        use crate::data::DataSource;
+        use crate::partition::RowStrategy;
+        let ds = synth::table2_dataset("housing", 8).unwrap();
+        let fm = FmHyper {
+            k: 4,
+            ..Default::default()
+        };
+        let cfg = LibfmConfig {
+            epochs: 3,
+            eta: LrSchedule::Constant(0.05),
+            seed: 5,
+            eval_every: 1,
+            shuffle: false,
+        };
+        let want = libfm_train(&ds, None, &fm, &cfg, &mut ());
+        for strat in [RowStrategy::Contiguous, RowStrategy::NnzBalanced] {
+            let dir = std::env::temp_dir()
+                .join(format!("dsfacto_libfm_src_test_{}", strat.spec()));
+            std::fs::remove_dir_all(&dir).ok();
+            write_cache(&ds, strat, 3, &dir).unwrap();
+            let src = ShardCacheSource::open(&dir).unwrap();
+            let part = src.plan(strat, 3).unwrap();
+            let got = libfm_train_from_source(&src, &part, &fm, &cfg, &mut ()).unwrap();
+            assert_eq!(got.model, want.model, "{strat:?}");
+            assert_eq!(got.trace.len(), want.trace.len(), "{strat:?}");
+            for (a, b) in got.trace.iter().zip(&want.trace) {
+                assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{strat:?}");
+                assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{strat:?}");
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
     }
 
     #[test]

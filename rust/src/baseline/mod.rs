@@ -18,6 +18,8 @@ pub mod bulksync;
 pub mod dsgd;
 pub mod libfm;
 
-pub use bulksync::{bulksync_train, bulksync_train_with_stats, BulkSyncConfig};
-pub use dsgd::{dsgd_train, dsgd_train_with_stats, DsgdConfig};
-pub use libfm::{libfm_train, LibfmConfig};
+pub use bulksync::{
+    bulksync_train, bulksync_train_from_source, bulksync_train_with_stats, BulkSyncConfig,
+};
+pub use dsgd::{dsgd_train, dsgd_train_from_source, dsgd_train_with_stats, DsgdConfig};
+pub use libfm::{libfm_train, libfm_train_from_source, LibfmConfig};

@@ -36,7 +36,7 @@ use super::{col_plan_for, ClusterSpec};
 use crate::cluster::codec;
 use crate::config::{DatasetSpec, ExperimentConfig};
 use crate::data::cache::ShardCacheSource;
-use crate::data::DataSource;
+use crate::data::{DataSource, PrefetchSource};
 use crate::fm::FmModel;
 use crate::metrics::TracePoint;
 use crate::nomad::engine::assemble_model;
@@ -225,6 +225,14 @@ pub fn run_driver(opts: &DriverOptions) -> Result<DriverReport> {
         bail!("run_driver needs `cluster = driver:<addr>,p=<P>` in the config");
     };
     ensure!(opts.max_generations >= 1, "max_generations must be >= 1");
+    // A cluster run cannot split: workers train on the shard files as
+    // ingested, so a fractional split would silently train on different
+    // rows than the probe evaluates. Reject instead of ignoring the key.
+    ensure!(
+        cfg.train_frac >= 1.0,
+        "cluster runs require train_frac = 1 (pre-split at ingest): got train_frac = {}",
+        cfg.train_frac
+    );
 
     // The dataset must live in a shard cache both the driver (for the
     // streaming probe) and every worker (for its shard) can open.
@@ -236,8 +244,12 @@ pub fn run_driver(opts: &DriverOptions) -> Result<DriverReport> {
              workers resolve their shards from the shared ingest cache"
         ),
     };
-    let src = ShardCacheSource::open(&cache_dir)
-        .with_context(|| format!("opening shard cache {cache_dir:?}"))?;
+    // Double-buffer the driver's own shard sweeps (the iter-0 probe and
+    // any later folds): one shard in use, the next in flight.
+    let src = PrefetchSource::new(Arc::new(
+        ShardCacheSource::open(&cache_dir)
+            .with_context(|| format!("opening shard cache {cache_dir:?}"))?,
+    ));
     let n = src.n();
     let d = src.d();
     let k = cfg.fm.k;

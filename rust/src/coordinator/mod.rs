@@ -6,10 +6,12 @@
 //! when a trace path is configured), and runs the held-out evaluation on
 //! both scoring backends. It owns no trainer-specific dispatch.
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
-use crate::config::ExperimentConfig;
-use crate::data::Dataset;
+use crate::config::{DatasetSpec, ExperimentConfig};
+use crate::data::{DataSource, Dataset, PrefetchSource, ShardCacheSource, Task};
 use crate::fm::FmModel;
 use crate::metrics::{evaluate_scores, EvalMetrics, TrainOutput};
 use crate::nomad::EngineStats;
@@ -22,13 +24,37 @@ pub struct RunSummary {
     pub output: TrainOutput,
     /// Engine counters (DS-FACTO runs only).
     pub stats: Option<EngineStats>,
-    pub train: Dataset,
-    pub test: Dataset,
-    /// Final held-out metrics via the Rust scorer.
+    /// Training-set rows.
+    pub train_n: usize,
+    /// Training-set feature dimension.
+    pub train_d: usize,
+    pub task: Task,
+    /// The held-out set. `None` for streaming (`cache:` + `train_frac = 1`)
+    /// runs, which never materialize a dataset; `final_eval` then covers
+    /// the cached training rows instead.
+    pub test: Option<Dataset>,
+    /// Final metrics via the Rust scorer: held-out when `test` is present,
+    /// over the training shards otherwise.
     pub final_eval: EvalMetrics,
     /// Final held-out metrics via the XLA artifact (when available): the
     /// request-path number. Tests assert it agrees with `final_eval`.
     pub final_eval_xla: Option<EvalMetrics>,
+    /// Shard-residency meters of a streaming run (`None` for in-memory
+    /// runs): how many shards/bytes the coordinator's prefetching source
+    /// ever held at once, and how often the prefetch buffer hit.
+    pub residency: Option<ResidencyReport>,
+}
+
+/// Peak shard residency + prefetch-buffer meters, read off the
+/// [`PrefetchSource`] that fed a streaming run. The bounded-memory
+/// contract (EXPERIMENTS.md §Data) is `peak_resident_shards <= 2`:
+/// one shard in use, at most one in flight.
+#[derive(Debug, Clone, Copy)]
+pub struct ResidencyReport {
+    pub peak_resident_shards: usize,
+    pub peak_resident_bytes: usize,
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
 }
 
 /// Runs one experiment end to end.
@@ -39,7 +65,19 @@ pub struct RunSummary {
 /// files were cut on the ingested row order, so a permuted training set
 /// would silently train on different shards than the probe evaluates —
 /// the pre-split + `train_frac = 1` flow keeps both views identical.
+///
+/// With a `cache:` dataset and `train_frac = 1` the run is **streaming**:
+/// the trainer, the per-iteration trace and the final metrics all pull
+/// shard by shard through a double-buffered [`PrefetchSource`] and the
+/// full matrix is never materialized ([`RunSummary::residency`] reports
+/// the measured peak). Trace and metrics are bitwise identical to the
+/// in-memory run of the same config.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunSummary> {
+    if let DatasetSpec::Cache { dir } = &cfg.dataset {
+        if cfg.train_frac >= 1.0 {
+            return run_streaming(cfg, dir);
+        }
+    }
     let ds = cfg.dataset.load(cfg.seed).context("load dataset")?;
     let (train, test) = if cfg.train_frac >= 1.0 {
         let test = ds.subset(&[], "test");
@@ -59,12 +97,22 @@ pub fn run_on(cfg: &ExperimentConfig, train: Dataset, test: Dataset) -> Result<R
         Some(path) => Some(CsvStreamer::create(path)?),
         None => None,
     };
-    let output = {
+    let fit_result = {
         let mut obs = Observers::new();
         if let Some(c) = csv.as_mut() {
             obs.push(c);
         }
-        trainer.fit(&train, Some(&test), &mut obs)?
+        trainer.fit(&train, Some(&test), &mut obs)
+    };
+    let output = match fit_result {
+        Ok(out) => out,
+        // Don't leave a half-written trace CSV behind a failed run.
+        Err(e) => {
+            if let Some(c) = csv {
+                c.abort();
+            }
+            return Err(e);
+        }
     };
     if let Some(c) = csv {
         c.finish().context("stream trace CSV")?;
@@ -74,10 +122,7 @@ pub fn run_on(cfg: &ExperimentConfig, train: Dataset, test: Dataset) -> Result<R
     // Held-out evaluation, Rust path + (optionally) the XLA request path.
     let final_eval = crate::metrics::evaluate(&output.model, &test);
     let final_eval_xla = if cfg.xla_eval && Runtime::available(&cfg.artifacts_dir) {
-        match Evaluator::for_dataset(&cfg.artifacts_dir, &test) {
-            Ok(eval) => Some(eval.evaluate(&output.model, &test)?),
-            Err(_) => None, // no artifact for this shape
-        }
+        xla_eval_if_artifact(&cfg.artifacts_dir, &test, &output.model)?
     } else {
         None
     };
@@ -85,11 +130,105 @@ pub fn run_on(cfg: &ExperimentConfig, train: Dataset, test: Dataset) -> Result<R
     Ok(RunSummary {
         output,
         stats,
-        train,
-        test,
+        train_n: train.n(),
+        train_d: train.d(),
+        task: train.task,
+        test: Some(test),
         final_eval,
         final_eval_xla,
+        residency: None,
     })
+}
+
+/// The bounded-memory path behind [`run_experiment`]: a `cache:` dataset
+/// with `train_frac = 1` trains through [`Trainer::fit_source`] off a
+/// double-buffered [`PrefetchSource`] over the shard cache. At most one
+/// shard is in use and one in flight at any time; nothing in the run
+/// holds the full CSR.
+///
+/// [`Trainer::fit_source`]: crate::train::Trainer::fit_source
+fn run_streaming(cfg: &ExperimentConfig, dir: &str) -> Result<RunSummary> {
+    let cache = ShardCacheSource::open(dir).context("open shard cache")?;
+    let src = PrefetchSource::new(Arc::new(cache));
+    let part = src
+        .native_plan()
+        .expect("a shard cache always carries its native plan");
+    let (train_n, train_d, task) = (src.n(), src.d(), src.task());
+
+    let trainer = cfg.trainer.build(cfg);
+    let mut csv = match &cfg.trace_path {
+        Some(path) => Some(CsvStreamer::create(path)?),
+        None => None,
+    };
+    let fit_result = {
+        let mut obs = Observers::new();
+        if let Some(c) = csv.as_mut() {
+            obs.push(c);
+        }
+        trainer.fit_source(&src, &mut obs)
+    };
+    let output = match fit_result {
+        Ok(out) => out,
+        Err(e) => {
+            if let Some(c) = csv {
+                c.abort();
+            }
+            return Err(e);
+        }
+    };
+    if let Some(c) = csv {
+        c.finish().context("stream trace CSV")?;
+    }
+    let stats = trainer.stats();
+
+    // Final metrics shard by shard over the cached training rows (a
+    // streaming run has no held-out set) — bitwise identical to
+    // `evaluate` on the materialized dataset.
+    let final_eval = crate::train::streaming_eval(&src, &part, &output.model)?;
+
+    let residency = Some(ResidencyReport {
+        peak_resident_shards: src.peak_resident_shards(),
+        peak_resident_bytes: src.peak_resident_bytes(),
+        prefetch_hits: src.prefetch_hits(),
+        prefetch_misses: src.prefetch_misses(),
+    });
+
+    Ok(RunSummary {
+        output,
+        stats,
+        train_n,
+        train_d,
+        task,
+        test: None,
+        final_eval,
+        final_eval_xla: None,
+        residency,
+    })
+}
+
+/// Loads the score artifact for `ds`'s shape **if the runtime manifest
+/// lists one** and evaluates through it. A missing artifact is the
+/// expected state on most runs (`Ok(None)`); an artifact that is listed
+/// but fails to load, shape-check or execute is a real error and
+/// propagates — it must not be silently reported as "no artifact".
+fn xla_eval_if_artifact(
+    artifacts_dir: &str,
+    ds: &Dataset,
+    model: &FmModel,
+) -> Result<Option<EvalMetrics>> {
+    let rt = Runtime::new(artifacts_dir)?;
+    let name = artifact_name_for(ds);
+    if !rt
+        .manifest()
+        .entries()
+        .iter()
+        .any(|e| e.name == name && e.entry == "score")
+    {
+        return Ok(None);
+    }
+    let eval = Evaluator::for_dataset(artifacts_dir, ds)
+        .with_context(|| format!("score artifact {name:?} is listed but unusable"))?;
+    Ok(Some(eval.evaluate(model, ds)?))
 }
 
 /// Writes a convergence trace as CSV (the Fig 4/5 series format) after the

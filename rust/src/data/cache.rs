@@ -731,6 +731,17 @@ impl DataSource for ShardCacheSource {
         ds.validate()?;
         Ok(ds)
     }
+
+    fn shard_nnz_hint(&self, part: &RowPartition) -> Option<Vec<usize>> {
+        // The manifest records every shard's nnz at ingest time; answer
+        // only for the partition the cache was actually cut on.
+        (*part == self.manifest.partition)
+            .then(|| self.manifest.shards.iter().map(|r| r.nnz).collect())
+    }
+
+    fn native_plan(&self) -> Option<RowPartition> {
+        Some(self.manifest.partition.clone())
+    }
 }
 
 #[cfg(test)]

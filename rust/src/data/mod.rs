@@ -19,11 +19,13 @@
 
 pub mod cache;
 pub mod libsvm;
+pub mod prefetch;
 pub mod source;
 pub mod sparse;
 pub mod synth;
 
 pub use cache::ShardCacheSource;
+pub use prefetch::PrefetchSource;
 pub use source::{DataSource, InMemorySource, ResolvedSource, ShardSource};
 pub use sparse::{Csc, Csr};
 

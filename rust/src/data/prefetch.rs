@@ -1,0 +1,329 @@
+//! Double-buffered shard prefetch: a [`DataSource`] decorator that
+//! overlaps the *next* shard's disk read + decode with the consumer's
+//! work on the current one.
+//!
+//! The streaming sweeps (the coordinator's cache-fed trace/eval, libFM's
+//! shard-epoch loop, `streaming_objective`) visit shards in partition
+//! order, one at a time. Without prefetch every shard boundary stalls on
+//! a synchronous read + hash check + CSC build; with it, delivering shard
+//! `i` immediately launches shard `i + 1` on a plain worker thread, so a
+//! sequential consumer alternates between *one shard in use* and *one in
+//! flight* — never more. That is the whole buffer: depth one, plain
+//! `std::thread` + `mpsc` channel, no extra dependencies.
+//!
+//! The decorator never changes *what* is delivered, only *when* the read
+//! happens: every shard comes from the inner source verbatim, so the
+//! bitwise parity guarantees of the shard cache pass through unchanged.
+//! Out-of-order requests (e.g. from the parallel pool in
+//! [`build_shards_from_source`]) are safe — a buffered shard that does
+//! not match the request is discarded and the request served with a
+//! synchronous load.
+//!
+//! # Residency accounting
+//!
+//! The inner cache's `peak_load_bytes` keeps its meaning (largest single
+//! shard-file read). On top of that the decorator meters *deliveries*:
+//! at the moment shard `i` is handed out, shard `i - 1` — delivered one
+//! call earlier — is presumed still live at the consumer, so the meter
+//! briefly holds both before retiring the older one. For a sequential
+//! consumer the resulting `peak_resident_shards` is exactly the
+//! double-buffer contract: 2 after the second delivery (1 after a
+//! single delivery). Shard bytes
+//! are counted as the shard's CSR footprint (`8·(nloc+1) + 8·nnz +
+//! 4·nloc` for indptr + indices/values + labels; the derived CSC is the
+//! same order and not double-counted), mirroring the full-CSR accounting
+//! the bounded-memory tests compare against. Under a *parallel* consumer
+//! the meter is an approximation (deliveries retire in request order,
+//! not true drop order) — the pool by design holds every worker's shard
+//! at once anyway, so the sequential sweeps are where the number is
+//! load-bearing.
+//!
+//! [`build_shards_from_source`]: crate::partition::build_shards_from_source
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::partition::{RowPartition, RowStrategy, Shard};
+
+use super::source::DataSource;
+use super::{Dataset, Task};
+
+/// A shard already launched on the prefetch thread.
+#[derive(Debug)]
+struct Pending {
+    /// Shard id the thread is loading.
+    id: usize,
+    /// Partition the load was planned against (a mismatched request
+    /// discards the buffer instead of delivering foreign rows).
+    part: RowPartition,
+    /// Receives the load result exactly once.
+    rx: mpsc::Receiver<Result<Shard>>,
+}
+
+/// Meters + the single-slot prefetch buffer, all under one mutex.
+#[derive(Debug, Default)]
+struct State {
+    pending: Option<Pending>,
+    resident_bytes: usize,
+    resident_shards: usize,
+    delivered_bytes: usize,
+    delivered_shards: usize,
+    peak_bytes: usize,
+    peak_shards: usize,
+    hits: u64,
+    misses: u64,
+}
+
+/// The shard's in-memory CSR footprint, in the same accounting the
+/// bounded-memory tests use for the full matrix: `8·(n+1)` indptr +
+/// `(4+4)·nnz` indices/values + `4·n` labels.
+fn shard_mem_bytes(sh: &Shard) -> usize {
+    8 * (sh.nloc() + 1) + 8 * sh.rows.nnz() + 4 * sh.nloc()
+}
+
+/// Double-buffering [`DataSource`] decorator: one shard in use, one in
+/// flight. See the module docs for the contract.
+#[derive(Debug)]
+pub struct PrefetchSource {
+    inner: Arc<dyn DataSource>,
+    state: Mutex<State>,
+}
+
+impl PrefetchSource {
+    /// Wraps `inner`. The decorator is inert until the first
+    /// [`DataSource::shard`] call; it holds no threads while idle.
+    pub fn new(inner: Arc<dyn DataSource>) -> PrefetchSource {
+        PrefetchSource {
+            inner,
+            state: Mutex::new(State::default()),
+        }
+    }
+
+    fn state(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state.lock().expect("prefetch state poisoned")
+    }
+
+    /// High-water mark of delivered shard bytes (CSR footprint); ≤ 2
+    /// shards' worth for a sequential consumer.
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.state().peak_bytes
+    }
+
+    /// High-water mark of concurrently live deliveries; 2 for any
+    /// sequential sweep with at least two deliveries (1 after a single
+    /// delivery).
+    pub fn peak_resident_shards(&self) -> usize {
+        self.state().peak_shards
+    }
+
+    /// Requests served from the in-flight buffer.
+    pub fn prefetch_hits(&self) -> u64 {
+        self.state().hits
+    }
+
+    /// Requests served by a synchronous load (first shard of a sweep,
+    /// out-of-order access, or a died prefetch thread).
+    pub fn prefetch_misses(&self) -> u64 {
+        self.state().misses
+    }
+}
+
+impl DataSource for PrefetchSource {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn d(&self) -> usize {
+        self.inner.d()
+    }
+
+    fn nnz(&self) -> usize {
+        self.inner.nnz()
+    }
+
+    fn task(&self) -> Task {
+        self.inner.task()
+    }
+
+    fn plan(&self, strategy: RowStrategy, p: usize) -> Result<RowPartition> {
+        self.inner.plan(strategy, p)
+    }
+
+    fn shard(&self, part: &RowPartition, id: usize) -> Result<Shard> {
+        // Claim the in-flight shard (if any) under the lock, then do all
+        // loading outside it so parallel consumers are not serialized.
+        let pending = self.state().pending.take();
+        let (shard, was_hit) = match pending {
+            Some(pf) if pf.id == id && pf.part == *part => match pf.rx.recv() {
+                Ok(Ok(sh)) => (sh, true),
+                Ok(Err(e)) => {
+                    self.state().hits += 1;
+                    return Err(e);
+                }
+                // The prefetch thread died without sending; reload
+                // synchronously rather than surfacing a channel error.
+                Err(_) => (self.inner.shard(part, id)?, false),
+            },
+            // Nothing buffered, or the buffer is for a different shard /
+            // partition: discard it and load synchronously.
+            _ => (self.inner.shard(part, id)?, false),
+        };
+        let sz = shard_mem_bytes(&shard);
+        let mut st = self.state();
+        if was_hit {
+            st.hits += 1;
+        } else {
+            st.misses += 1;
+        }
+        // Add the new delivery before retiring the previous one: the
+        // consumer is presumed to still hold shard `id - 1` at this
+        // moment, and that overlap *is* the double-buffer peak.
+        st.resident_bytes += sz;
+        st.resident_shards += 1;
+        st.peak_bytes = st.peak_bytes.max(st.resident_bytes);
+        st.peak_shards = st.peak_shards.max(st.resident_shards);
+        st.resident_bytes -= st.delivered_bytes;
+        st.resident_shards -= st.delivered_shards;
+        st.delivered_bytes = sz;
+        st.delivered_shards = 1;
+        // Launch the next shard in partition order. Slot already taken
+        // (a parallel consumer got here first) or spawn failure both
+        // degrade to synchronous loads — never an error.
+        if st.pending.is_none() {
+            if let Some(next) = id.checked_add(1).filter(|&nx| nx < part.n_shards()) {
+                let (tx, rx) = mpsc::channel();
+                let inner = Arc::clone(&self.inner);
+                let p2 = part.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("shard-prefetch".into())
+                    .spawn(move || {
+                        let _ = tx.send(inner.shard(&p2, next));
+                    })
+                    .is_ok();
+                if spawned {
+                    st.pending = Some(Pending {
+                        id: next,
+                        part: part.clone(),
+                        rx,
+                    });
+                }
+            }
+        }
+        drop(st);
+        Ok(shard)
+    }
+
+    fn materialize(&self) -> Result<Dataset> {
+        self.inner.materialize()
+    }
+
+    fn shard_nnz_hint(&self, part: &RowPartition) -> Option<Vec<usize>> {
+        self.inner.shard_nnz_hint(part)
+    }
+
+    fn native_plan(&self) -> Option<RowPartition> {
+        self.inner.native_plan()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::cache::{write_cache, ShardCacheSource};
+    use crate::data::synth;
+    use crate::partition::RowStrategy;
+
+    fn cache_source(tag: &str, shards: usize) -> (Dataset, Arc<ShardCacheSource>, RowPartition) {
+        let ds = synth::table2_dataset("housing", 21).unwrap();
+        let dir = std::env::temp_dir().join(format!("dsfacto_prefetch_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        write_cache(&ds, RowStrategy::Contiguous, shards, &dir).unwrap();
+        let src = Arc::new(ShardCacheSource::open(&dir).unwrap());
+        let part = src.plan(RowStrategy::Contiguous, shards).unwrap();
+        (ds, src, part)
+    }
+
+    #[test]
+    fn sequential_sweep_is_bitwise_and_double_buffered() {
+        let (_ds, cache, part) = cache_source("seq", 4);
+        let pf = PrefetchSource::new(cache.clone() as Arc<dyn DataSource>);
+        for _epoch in 0..2 {
+            for id in 0..part.n_shards() {
+                let got = pf.shard(&part, id).unwrap();
+                let want = cache.shard(&part, id).unwrap();
+                assert_eq!(got.rows, want.rows, "shard {id}: CSR");
+                assert_eq!(got.cols, want.cols, "shard {id}: CSC");
+                assert_eq!((got.start, got.end), (want.start, want.end));
+                let a: Vec<u32> = got.labels.iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u32> = want.labels.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b, "shard {id}: labels");
+            }
+        }
+        // One miss per epoch (nothing in flight at the sweep start),
+        // hits for every later shard.
+        assert_eq!(pf.prefetch_misses(), 2);
+        assert_eq!(pf.prefetch_hits(), 6);
+        // The double-buffer contract: never more than 2 deliveries live.
+        assert_eq!(pf.peak_resident_shards(), 2);
+        assert!(pf.peak_resident_bytes() > 0);
+        let full = 8 * (pf.n() + 1) + 8 * pf.nnz() + 4 * pf.n();
+        assert!(
+            pf.peak_resident_bytes() < full,
+            "peak {} not below full CSR {full}",
+            pf.peak_resident_bytes()
+        );
+    }
+
+    #[test]
+    fn out_of_order_requests_fall_back_to_sync_loads() {
+        let (_ds, cache, part) = cache_source("ooo", 4);
+        let pf = PrefetchSource::new(cache.clone() as Arc<dyn DataSource>);
+        for &id in &[2usize, 0, 1, 3] {
+            let got = pf.shard(&part, id).unwrap();
+            let want = cache.shard(&part, id).unwrap();
+            assert_eq!(got.rows, want.rows, "shard {id}");
+            assert_eq!((got.start, got.end), (want.start, want.end));
+        }
+        // 2 (cold) and 0 (buffer holds 3) and 3 (buffer holds 2) miss;
+        // 1 hits the buffer spawned after delivering 0.
+        assert_eq!(pf.prefetch_hits() + pf.prefetch_misses(), 4);
+        assert_eq!(pf.prefetch_hits(), 1);
+    }
+
+    #[test]
+    fn single_shard_plan_peaks_at_one() {
+        let (_ds, cache, part) = cache_source("one", 1);
+        let pf = PrefetchSource::new(cache as Arc<dyn DataSource>);
+        pf.shard(&part, 0).unwrap();
+        assert_eq!(pf.peak_resident_shards(), 1);
+        // No shard 1 to prefetch: a second delivery is another miss.
+        pf.shard(&part, 0).unwrap();
+        assert_eq!(pf.prefetch_hits(), 0);
+        assert_eq!(pf.prefetch_misses(), 2);
+        assert_eq!(pf.peak_resident_shards(), 2);
+    }
+
+    #[test]
+    fn delegation_preserves_shape_and_plans() {
+        let (ds, cache, part) = cache_source("shape", 3);
+        let pf = PrefetchSource::new(cache as Arc<dyn DataSource>);
+        assert_eq!(pf.n(), ds.n());
+        assert_eq!(pf.d(), ds.d());
+        assert_eq!(pf.nnz(), ds.nnz());
+        assert_eq!(pf.task(), ds.task);
+        assert_eq!(pf.name(), "housing");
+        assert_eq!(pf.native_plan().as_ref(), Some(&part));
+        assert_eq!(
+            pf.shard_nnz_hint(&part).map(|v| v.iter().sum::<usize>()),
+            Some(ds.nnz())
+        );
+        let back = pf.materialize().unwrap();
+        assert_eq!(back.rows, ds.rows);
+    }
+}

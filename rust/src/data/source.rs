@@ -69,6 +69,21 @@ pub trait DataSource: Send + Sync + Debug {
 
     /// Materializes the whole dataset.
     fn materialize(&self) -> Result<Dataset>;
+
+    /// Per-shard stored-nnz counts for `part`, when the source can
+    /// answer without loading any shard bytes (the cache reads them off
+    /// its manifest; the in-memory view counts from the CSR). `None`
+    /// means the caller must load shards to find out.
+    fn shard_nnz_hint(&self, part: &RowPartition) -> Option<Vec<usize>> {
+        let _ = part;
+        None
+    }
+
+    /// The partition this source natively serves — a shard cache's
+    /// ingested plan. `None` for sources that can cut any plan.
+    fn native_plan(&self) -> Option<RowPartition> {
+        None
+    }
 }
 
 /// The in-memory source: a view over a borrowed [`Dataset`]. Its
@@ -135,6 +150,10 @@ impl DataSource for InMemorySource<'_> {
     fn materialize(&self) -> Result<Dataset> {
         Ok(self.ds.clone())
     }
+
+    fn shard_nnz_hint(&self, part: &RowPartition) -> Option<Vec<usize>> {
+        (part.n_rows() == self.ds.n()).then(|| part.shard_nnz(&self.ds.rows))
+    }
 }
 
 /// Errors unless `src`'s **shape** — `(n, d, nnz, task)` — matches `ds`.
@@ -199,7 +218,13 @@ impl ShardSource {
                 let src = super::cache::ShardCacheSource::open(dir)?;
                 ensure_matches(&src, train)?;
                 src.verify_content(train)?;
-                Ok(ResolvedSource::Owned(Box::new(src)))
+                // Worker shard loads through the cache get the
+                // double-buffered prefetch decorator: sequential sweeps
+                // overlap the next shard's read with compute, and the
+                // parallel shard-build pool degrades to sync loads.
+                Ok(ResolvedSource::Shared(Arc::new(
+                    super::prefetch::PrefetchSource::new(Arc::new(src)),
+                )))
             }
             ShardSource::Custom(src) => {
                 ensure_matches(src.as_ref(), train)?;

@@ -103,12 +103,18 @@ SPECS:
 OUT-OF-CORE DATA:
   `dsfacto ingest` streams a LIBSVM file into a binary shard cache in one
   bounded-memory pass (never holding the full matrix). Training with
-  `--data-cache DIR` (config key `data_cache`) makes every distributed
-  worker load only its own shard file; a cached dataset can also be
-  trained directly via `--dataset cache:DIR`. The cache bakes in its
-  row-partition plan and shard count, so ingest with the `--shards` /
-  `--row-partition` you will train with (and train with train_frac = 1 or
-  a pre-split file, so the cache covers exactly the training rows).
+  `--dataset cache:DIR --train-frac 1` is then bounded-memory END TO END:
+  the coordinator streams shards through a double-buffered prefetcher (one
+  shard in use + at most one in flight, never the full CSR), the
+  per-iteration trace and the final metrics are computed shard by shard,
+  and the run prints its measured peak residency. The numbers are bitwise
+  identical to the in-memory run of the same config. `--data-cache DIR`
+  (config key `data_cache`) additionally makes every distributed worker
+  load only its own shard file. The cache bakes in its row-partition plan
+  and shard count, so ingest with the `--shards` / `--row-partition` you
+  will train with (and train with train_frac = 1 or a pre-split file, so
+  the cache covers exactly the training rows; cluster runs require
+  train_frac = 1).
 
 CLUSTER (multi-process DS-FACTO):
   `dsfacto driver` + P x `dsfacto worker` run the NOMAD token ring across
@@ -186,7 +192,7 @@ fn cmd_train(mut args: Args) -> Result<()> {
     if !quiet {
         for pt in &out.trace {
             let test_str = match &pt.test {
-                Some(m) => match summary.test.task {
+                Some(m) => match summary.task {
                     Task::Regression => format!(" test_rmse={:.5}", m.rmse),
                     Task::Classification => format!(" test_acc={:.4}", m.accuracy),
                 },
@@ -206,15 +212,22 @@ fn cmd_train(mut args: Args) -> Result<()> {
         "trained {} on {} ({} examples, {} features) in {} — final objective {:.6}",
         cfg.trainer.name(),
         cfg.dataset.name(),
-        summary.train.n(),
-        summary.train.d(),
+        summary.train_n,
+        summary.train_d,
         human_secs(out.wall_secs),
         out.trace.last().map(|p| p.objective).unwrap_or(f64::NAN),
     );
-    match summary.test.task {
-        Task::Regression => println!("test RMSE {:.5}", summary.final_eval.rmse),
+    // Streaming (`cache:` + train_frac = 1) runs have no held-out set:
+    // the final metrics cover the cached training rows.
+    let eval_label = if summary.test.is_some() {
+        "test"
+    } else {
+        "train (train_frac = 1)"
+    };
+    match summary.task {
+        Task::Regression => println!("{eval_label} RMSE {:.5}", summary.final_eval.rmse),
         Task::Classification => println!(
-            "test accuracy {:.4} (AUC {:.4})",
+            "{eval_label} accuracy {:.4} (AUC {:.4})",
             summary.final_eval.accuracy, summary.final_eval.auc
         ),
     }
@@ -222,7 +235,13 @@ fn cmd_train(mut args: Args) -> Result<()> {
         println!(
             "XLA request-path eval: loss={:.6} headline={:.5}",
             x.loss,
-            x.headline(summary.test.task)
+            x.headline(summary.task)
+        );
+    }
+    if let Some(r) = &summary.residency {
+        println!(
+            "streaming: peak resident {} shard(s) / {} bytes; prefetch {} hit(s), {} miss(es)",
+            r.peak_resident_shards, r.peak_resident_bytes, r.prefetch_hits, r.prefetch_misses
         );
     }
     if let Some(stats) = &summary.stats {

@@ -696,13 +696,61 @@ pub fn train_with_transport(
     transport: &dyn Transport,
     obs: &mut dyn TrainObserver,
 ) -> Result<(TrainOutput, EngineStats)> {
-    ensure!(train.n() > 0, "empty training set");
-    ensure!(train.d() > 0, "zero-dimensional training set");
+    train_with_transport_data(EngineData::Memory { train, test }, fm, cfg, transport, obs)
+}
+
+/// [`train_with_transport`] off a [`DataSource`]: shards are pulled
+/// straight from the source (ignoring `cfg.source`), the per-iteration
+/// objective comes from the workers' exact finalize posts as always, and
+/// the iter-0 point is computed with
+/// [`streaming_objective`](crate::train::streaming_objective) — so no
+/// step of the run materializes the full matrix. There is no held-out
+/// set (a streaming run has none); evaluate afterwards with
+/// [`streaming_eval`](crate::train::streaming_eval).
+///
+/// [`DataSource`]: crate::data::DataSource
+pub fn train_from_source_with_transport(
+    src: &dyn crate::data::DataSource,
+    fm: &FmHyper,
+    cfg: &NomadConfig,
+    transport: &dyn Transport,
+    obs: &mut dyn TrainObserver,
+) -> Result<(TrainOutput, EngineStats)> {
+    train_with_transport_data(EngineData::Stream { src }, fm, cfg, transport, obs)
+}
+
+/// What feeds a training run: the borrowed in-memory pair, or a
+/// [`DataSource`](crate::data::DataSource) streamed shard by shard.
+enum EngineData<'a> {
+    Memory {
+        train: &'a Dataset,
+        test: Option<&'a Dataset>,
+    },
+    Stream {
+        src: &'a dyn crate::data::DataSource,
+    },
+}
+
+fn train_with_transport_data(
+    data: EngineData<'_>,
+    fm: &FmHyper,
+    cfg: &NomadConfig,
+    transport: &dyn Transport,
+    obs: &mut dyn TrainObserver,
+) -> Result<(TrainOutput, EngineStats)> {
+    let (n, d) = match &data {
+        EngineData::Memory { train, .. } => (train.n(), train.d()),
+        EngineData::Stream { src } => (src.n(), src.d()),
+    };
+    ensure!(n > 0, "empty training set");
+    ensure!(d > 0, "zero-dimensional training set");
+    let test = match &data {
+        EngineData::Memory { test, .. } => *test,
+        EngineData::Stream { .. } => None,
+    };
     let p = cfg.workers.max(1);
-    let d = train.d();
     let k = fm.k;
     let kp = padded_k(k);
-    let n = train.n();
     // Column-block grid: the granularity optimization (EXPERIMENTS.md
     // §Perf). 0 = auto heuristic.
     let col_plan = if cfg.cols_per_token == 0 {
@@ -719,10 +767,24 @@ pub fn train_with_transport(
     // computed through the data seam: the in-memory source plans off the
     // training CSR exactly as before, a shard cache returns the plan its
     // files were cut on.
-    let resolved = cfg.source.resolve(train)?;
-    let source = resolved.as_dyn();
+    let resolved;
+    let source: &dyn crate::data::DataSource = match &data {
+        EngineData::Memory { train, .. } => {
+            resolved = cfg.source.resolve(train)?;
+            resolved.as_dyn()
+        }
+        EngineData::Stream { src } => *src,
+    };
     let row_plan = source.plan(cfg.row_partition, p)?;
-    let pstats = PartitionStats::from_plan(&row_plan, &train.rows);
+    let pstats = match &data {
+        EngineData::Memory { train, .. } => PartitionStats::from_plan(&row_plan, &train.rows),
+        // No full CSR exists to measure: the cache manifest carries the
+        // per-shard nnz; a hint-less source reports the unmeasured default.
+        EngineData::Stream { src } => src
+            .shard_nnz_hint(&row_plan)
+            .map(PartitionStats::from_shard_nnz)
+            .unwrap_or_default(),
+    };
 
     // ---- Initial model and auxiliary variables (exact, pre-launch).
     let mut rng = Pcg64::new(cfg.seed, 0x0ad);
@@ -750,7 +812,20 @@ pub fn train_with_transport(
     // reported before any token moves so a Stop costs nothing.
     let mut trace: Vec<TracePoint> = Vec::with_capacity(cfg.outer_iters + 1);
     {
-        let pt0 = crate::train::trace_point(train, test, fm.lambda_w, fm.lambda_v, 0, 0.0, &init);
+        let pt0 = match &data {
+            EngineData::Memory { train, test } => {
+                crate::train::trace_point(train, *test, fm.lambda_w, fm.lambda_v, 0, 0.0, &init)
+            }
+            EngineData::Stream { src } => crate::train::streaming_trace_point(
+                *src,
+                &row_plan,
+                &init,
+                fm.lambda_w,
+                fm.lambda_v,
+                0,
+                0.0,
+            )?,
+        };
         let flow = obs.on_iter(&pt0, Some(&init));
         trace.push(pt0);
         if flow.is_stop() {
@@ -986,5 +1061,17 @@ pub(super) fn run(
     obs: &mut dyn TrainObserver,
 ) -> Result<(TrainOutput, EngineStats)> {
     train_with_transport(train, test, fm, cfg, transport, obs)
+        .context("DS-FACTO engine run failed")
+}
+
+/// [`run`] for the streaming path.
+pub(super) fn run_from_source(
+    src: &dyn crate::data::DataSource,
+    fm: &FmHyper,
+    cfg: &NomadConfig,
+    transport: &dyn Transport,
+    obs: &mut dyn TrainObserver,
+) -> Result<(TrainOutput, EngineStats)> {
+    train_from_source_with_transport(src, fm, cfg, transport, obs)
         .context("DS-FACTO engine run failed")
 }

@@ -27,7 +27,7 @@ pub mod engine;
 pub mod mirror;
 pub mod token;
 
-pub use engine::{train_with_transport, EngineStats};
+pub use engine::{train_from_source_with_transport, train_with_transport, EngineStats};
 
 use std::time::Duration;
 
@@ -278,6 +278,39 @@ pub fn train_with_observer(
         TransportKind::Tcp => {
             let t = crate::cluster::tcp::TcpTransport::new(cfg.workers.max(1), Some(fm.k))?;
             let out = engine::run(train_ds, test, fm, cfg, &*t, obs);
+            t.shutdown();
+            out
+        }
+    }
+}
+
+/// Like [`train_with_observer`], but fed by a [`DataSource`] instead of an
+/// in-memory pair: workers pull their shards straight from the source
+/// (`cfg.source` is ignored) and nothing materializes the full matrix. The
+/// iter-0 trace point streams shard by shard; there is no held-out set —
+/// evaluate afterwards with [`crate::train::streaming_eval`].
+///
+/// [`DataSource`]: crate::data::DataSource
+pub fn train_from_source(
+    src: &dyn crate::data::DataSource,
+    fm: &FmHyper,
+    cfg: &NomadConfig,
+    obs: &mut dyn TrainObserver,
+) -> crate::Result<(TrainOutput, EngineStats)> {
+    match cfg.transport {
+        TransportKind::Local => {
+            let t = LocalTransport::new(cfg.workers.max(1));
+            engine::run_from_source(src, fm, cfg, &t, obs)
+        }
+        TransportKind::SimNet(model) => {
+            let t = SimNetTransport::new(cfg.workers.max(1), model, Some(fm.k));
+            let out = engine::run_from_source(src, fm, cfg, &*t, obs);
+            t.shutdown();
+            out
+        }
+        TransportKind::Tcp => {
+            let t = crate::cluster::tcp::TcpTransport::new(cfg.workers.max(1), Some(fm.k))?;
+            let out = engine::run_from_source(src, fm, cfg, &*t, obs);
             t.shutdown();
             out
         }

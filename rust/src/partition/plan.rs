@@ -389,7 +389,16 @@ pub struct PartitionStats {
 impl PartitionStats {
     /// Measures a plan against the matrix it partitions.
     pub fn from_plan(plan: &RowPartition, rows: &Csr) -> PartitionStats {
-        let shard_nnz = plan.shard_nnz(rows);
+        PartitionStats::from_shard_nnz(plan.shard_nnz(rows))
+    }
+
+    /// Builds the summary from already-known per-shard nnz counts — the
+    /// path for streaming sources, where the counts come from a cache
+    /// manifest ([`DataSource::shard_nnz_hint`]) and no full CSR exists
+    /// to measure.
+    ///
+    /// [`DataSource::shard_nnz_hint`]: crate::data::DataSource::shard_nnz_hint
+    pub fn from_shard_nnz(shard_nnz: Vec<usize>) -> PartitionStats {
         let total: usize = shard_nnz.iter().sum();
         let imbalance = if total == 0 {
             1.0

@@ -159,6 +159,23 @@ pub trait Trainer {
         observer: &mut dyn TrainObserver,
     ) -> crate::Result<TrainOutput>;
 
+    /// Trains straight from a [`DataSource`] — no held-out set, no
+    /// caller-held full matrix. The default materializes the source and
+    /// delegates to [`fit`](Self::fit) (correct for the single-machine
+    /// trainers); the shard-native trainers override it with
+    /// bounded-memory loops whose traces are bitwise identical to the
+    /// in-memory run of the same config.
+    ///
+    /// [`DataSource`]: crate::data::DataSource
+    fn fit_source(
+        &self,
+        src: &dyn crate::data::DataSource,
+        observer: &mut dyn TrainObserver,
+    ) -> crate::Result<TrainOutput> {
+        let ds = src.materialize()?;
+        self.fit(&ds, None, observer)
+    }
+
     /// Engine counters from the most recent [`fit`](Self::fit), when the
     /// engine collects them (the DS-FACTO engine does; the sequential
     /// baselines return `None`).
@@ -211,7 +228,12 @@ impl TrainerKind {
                     eta: cfg.eta,
                     seed: cfg.seed,
                     eval_every: cfg.eval_every,
-                    shuffle: true,
+                    // Cache-fed runs stream shards in ingested row order;
+                    // the in-memory run of the same config visits rows in
+                    // the same order so the two traces stay bitwise
+                    // comparable (the parity suite pins this).
+                    shuffle: cfg.data_cache.is_none()
+                        && !matches!(cfg.dataset, crate::config::DatasetSpec::Cache { .. }),
                 },
             )),
             TrainerKind::Dsgd => Box::new(DsgdTrainer::new(
@@ -319,22 +341,136 @@ pub fn streaming_objective(
     Ok((objective, train_loss))
 }
 
+/// [`trace_point`] off a [`DataSource`]: the same objective / train-loss
+/// fold as [`streaming_objective`] packaged as a [`TracePoint`] (no
+/// held-out metrics — a streaming run has no test split; evaluate with
+/// [`streaming_eval`] instead). Bitwise identical to
+/// `trace_point(train, None, ...)` on the materialized dataset for any
+/// partition whose shards cover rows in global order — which both
+/// `contiguous` and `balanced` plans do.
+///
+/// [`DataSource`]: crate::data::DataSource
+pub fn streaming_trace_point(
+    src: &dyn crate::data::DataSource,
+    part: &crate::partition::RowPartition,
+    model: &FmModel,
+    lambda_w: f32,
+    lambda_v: f32,
+    iter: usize,
+    secs: f64,
+) -> crate::Result<TracePoint> {
+    let (objective, train_loss) = streaming_objective(src, part, model, lambda_w, lambda_v)?;
+    Ok(TracePoint {
+        iter,
+        secs,
+        objective,
+        train_loss,
+        test: None,
+    })
+}
+
+/// [`evaluate`] off a [`DataSource`], shard by shard: scores land in a
+/// global buffer at `shard.start + r`, so the score vector — and every
+/// derived metric — is bitwise identical to
+/// [`evaluate`]`(model, &src.materialize()?)` while peak resident data
+/// stays one shard (plus the `n`-length score/label buffers).
+///
+/// [`DataSource`]: crate::data::DataSource
+pub fn streaming_eval(
+    src: &dyn crate::data::DataSource,
+    part: &crate::partition::RowPartition,
+    model: &FmModel,
+) -> crate::Result<crate::metrics::EvalMetrics> {
+    let kern = crate::kernel::FmKernel::from_model(model);
+    let mut scratch = crate::kernel::Scratch::for_k(model.k);
+    let mut scores = vec![0f32; src.n()];
+    let mut labels = vec![0f32; src.n()];
+    for id in 0..part.n_shards() {
+        let shard = src.shard(part, id)?;
+        for r in 0..shard.nloc() {
+            let (idx, val) = shard.rows.row(r);
+            scores[shard.start + r] = kern.score(idx, val, &mut scratch);
+            labels[shard.start + r] = shard.labels[r];
+        }
+    }
+    Ok(crate::metrics::evaluate_scores(&scores, &labels, src.task()))
+}
+
+/// The [`streaming_objective`] fold over shards that are already
+/// resident (the DSGD / bulk-sync epoch loops hold every worker's shard
+/// for the whole session) — same accumulator, same order, no re-read.
+fn shards_trace_point(
+    shards: &[crate::partition::Shard],
+    n: usize,
+    model: &FmModel,
+    lambda_w: f32,
+    lambda_v: f32,
+    iter: usize,
+    secs: f64,
+) -> TracePoint {
+    let kern = crate::kernel::FmKernel::from_model(model);
+    let mut scratch = crate::kernel::Scratch::for_k(model.k);
+    let mut total = 0f64;
+    for shard in shards {
+        for r in 0..shard.nloc() {
+            let (idx, val) = shard.rows.row(r);
+            let f = kern.score(idx, val, &mut scratch);
+            total += crate::fm::loss::loss(f, shard.labels[r], shard.task) as f64;
+        }
+    }
+    let train_loss = total / n.max(1) as f64;
+    let rw: f64 = model.w.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let rv: f64 = model.v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let objective = train_loss + 0.5 * lambda_w as f64 * rw + 0.5 * lambda_v as f64 * rv;
+    TracePoint {
+        iter,
+        secs,
+        objective,
+        train_loss,
+        test: None,
+    }
+}
+
 /// Shared per-session recording helper used by the trainer loops: computes
 /// each [`TracePoint`] (objective, train loss, cadenced test metrics),
 /// accumulates the trace for [`TrainOutput`], and dispatches every point to
 /// the session's observer. Trainer loops reduce to
 /// `if probe.record(iter, clock, &model, obs).is_stop() { break }`.
 pub struct Probe<'a> {
-    train: &'a Dataset,
-    test: Option<&'a Dataset>,
+    data: ProbeData<'a>,
     lambda_w: f32,
     lambda_v: f32,
     eval_every: usize,
     trace: Vec<TracePoint>,
 }
 
+/// Where a [`Probe`] computes its objective from. The three variants are
+/// bitwise interchangeable: all fold the same per-row losses in global
+/// row order with the same `f64` accumulator.
+enum ProbeData<'a> {
+    /// The classic path: full training set (+ optional held-out set).
+    Memory {
+        train: &'a Dataset,
+        test: Option<&'a Dataset>,
+    },
+    /// One shard resident at a time, read back through the seam each
+    /// record (the streaming libFM loop, which holds no shards between
+    /// epochs).
+    Stream {
+        src: &'a dyn crate::data::DataSource,
+        part: &'a crate::partition::RowPartition,
+    },
+    /// Already-resident shards (DSGD / bulk-sync keep every worker's
+    /// shard live for the session) — no re-read per record.
+    Shards {
+        shards: &'a [crate::partition::Shard],
+        n: usize,
+    },
+}
+
 impl<'a> Probe<'a> {
-    /// New probe; `eval_every` controls how often test metrics are run.
+    /// New in-memory probe; `eval_every` controls how often test metrics
+    /// are run.
     pub fn new(
         train: &'a Dataset,
         test: Option<&'a Dataset>,
@@ -343,8 +479,46 @@ impl<'a> Probe<'a> {
         eval_every: usize,
     ) -> Self {
         Probe {
-            train,
-            test,
+            data: ProbeData::Memory { train, test },
+            lambda_w,
+            lambda_v,
+            eval_every: eval_every.max(1),
+            trace: Vec::new(),
+        }
+    }
+
+    /// A probe that computes each point shard-by-shard off a
+    /// [`DataSource`] (no held-out metrics; record through
+    /// [`try_record`](Self::try_record), since shard loads can fail).
+    ///
+    /// [`DataSource`]: crate::data::DataSource
+    pub fn streaming(
+        src: &'a dyn crate::data::DataSource,
+        part: &'a crate::partition::RowPartition,
+        lambda_w: f32,
+        lambda_v: f32,
+        eval_every: usize,
+    ) -> Self {
+        Probe {
+            data: ProbeData::Stream { src, part },
+            lambda_w,
+            lambda_v,
+            eval_every: eval_every.max(1),
+            trace: Vec::new(),
+        }
+    }
+
+    /// A probe over already-materialized shards covering `n` rows in
+    /// partition order (no held-out metrics).
+    pub fn from_shards(
+        shards: &'a [crate::partition::Shard],
+        n: usize,
+        lambda_w: f32,
+        lambda_v: f32,
+        eval_every: usize,
+    ) -> Self {
+        Probe {
+            data: ProbeData::Shards { shards, n },
             lambda_w,
             lambda_v,
             eval_every: eval_every.max(1),
@@ -354,6 +528,9 @@ impl<'a> Probe<'a> {
 
     /// Records a point at outer iteration `iter` with training clock `secs`
     /// and reports it to `obs`. Returns the observer's decision.
+    /// Infallible convenience for the in-memory variant — panics if a
+    /// streaming probe's shard load fails (those callers use
+    /// [`try_record`](Self::try_record)).
     pub fn record(
         &mut self,
         iter: usize,
@@ -361,11 +538,40 @@ impl<'a> Probe<'a> {
         model: &FmModel,
         obs: &mut dyn TrainObserver,
     ) -> ControlFlow {
-        let test = self.test.filter(|_| iter % self.eval_every == 0);
-        let pt = trace_point(self.train, test, self.lambda_w, self.lambda_v, iter, secs, model);
+        self.try_record(iter, secs, model, obs)
+            .expect("in-memory probe cannot fail")
+    }
+
+    /// [`record`](Self::record) with shard-load errors surfaced instead
+    /// of panicking — the form the streaming trainer loops use.
+    pub fn try_record(
+        &mut self,
+        iter: usize,
+        secs: f64,
+        model: &FmModel,
+        obs: &mut dyn TrainObserver,
+    ) -> crate::Result<ControlFlow> {
+        let pt = match &self.data {
+            ProbeData::Memory { train, test } => {
+                let test = test.filter(|_| iter % self.eval_every == 0);
+                trace_point(train, test, self.lambda_w, self.lambda_v, iter, secs, model)
+            }
+            ProbeData::Stream { src, part } => streaming_trace_point(
+                *src,
+                part,
+                model,
+                self.lambda_w,
+                self.lambda_v,
+                iter,
+                secs,
+            )?,
+            ProbeData::Shards { shards, n } => {
+                shards_trace_point(shards, *n, model, self.lambda_w, self.lambda_v, iter, secs)
+            }
+        };
         let flow = obs.on_iter(&pt, Some(model));
         self.trace.push(pt);
-        flow
+        Ok(flow)
     }
 
     /// Consumes the probe, yielding the accumulated trace.
@@ -425,16 +631,53 @@ mod tests {
         let ds = synth::table2_dataset("housing", 11).unwrap();
         let mut rng = Pcg64::seeded(13);
         let model = FmModel::init(ds.d(), 4, 0.1, &mut rng);
-        let dir = std::env::temp_dir().join("dsfacto_stream_obj_test");
-        std::fs::remove_dir_all(&dir).ok();
-        crate::data::cache::write_cache(&ds, RowStrategy::Contiguous, 3, &dir).unwrap();
-        let src = ShardCacheSource::open(&dir).unwrap();
-        let part = src.plan(RowStrategy::Contiguous, 3).unwrap();
-        let (obj, loss) = streaming_objective(&src, &part, &model, 1e-2, 1e-3).unwrap();
-        let pt = trace_point(&ds, None, 1e-2, 1e-3, 0, 0.0, &model);
-        assert_eq!(obj.to_bits(), pt.objective.to_bits());
-        assert_eq!(loss.to_bits(), pt.train_loss.to_bits());
-        std::fs::remove_dir_all(&dir).ok();
+        for strat in [RowStrategy::Contiguous, RowStrategy::NnzBalanced] {
+            let dir =
+                std::env::temp_dir().join(format!("dsfacto_stream_obj_test_{}", strat.spec()));
+            std::fs::remove_dir_all(&dir).ok();
+            crate::data::cache::write_cache(&ds, strat, 3, &dir).unwrap();
+            let src = ShardCacheSource::open(&dir).unwrap();
+            let part = src.plan(strat, 3).unwrap();
+            let (obj, loss) = streaming_objective(&src, &part, &model, 1e-2, 1e-3).unwrap();
+            let pt = trace_point(&ds, None, 1e-2, 1e-3, 0, 0.0, &model);
+            assert_eq!(obj.to_bits(), pt.objective.to_bits(), "{strat:?}");
+            assert_eq!(loss.to_bits(), pt.train_loss.to_bits(), "{strat:?}");
+            // The TracePoint wrapper and the streaming probe agree too.
+            let spt = streaming_trace_point(&src, &part, &model, 1e-2, 1e-3, 0, 0.0).unwrap();
+            assert_eq!(spt.objective.to_bits(), pt.objective.to_bits(), "{strat:?}");
+            let mut probe = Probe::streaming(&src, &part, 1e-2, 1e-3, 1);
+            probe.try_record(0, 0.0, &model, &mut ()).unwrap();
+            assert_eq!(
+                probe.into_trace()[0].objective.to_bits(),
+                pt.objective.to_bits(),
+                "{strat:?}"
+            );
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn streaming_eval_is_bitwise_evaluate() {
+        use crate::data::{cache::ShardCacheSource, DataSource};
+        use crate::partition::RowStrategy;
+        let ds = synth::table2_dataset("housing", 19).unwrap();
+        let mut rng = Pcg64::seeded(23);
+        let model = FmModel::init(ds.d(), 4, 0.1, &mut rng);
+        let want = evaluate(&model, &ds);
+        for strat in [RowStrategy::Contiguous, RowStrategy::NnzBalanced] {
+            let dir =
+                std::env::temp_dir().join(format!("dsfacto_stream_eval_test_{}", strat.spec()));
+            std::fs::remove_dir_all(&dir).ok();
+            crate::data::cache::write_cache(&ds, strat, 3, &dir).unwrap();
+            let src = ShardCacheSource::open(&dir).unwrap();
+            let part = src.plan(strat, 3).unwrap();
+            let got = streaming_eval(&src, &part, &model).unwrap();
+            assert_eq!(got.loss.to_bits(), want.loss.to_bits(), "{strat:?}");
+            assert_eq!(got.rmse.to_bits(), want.rmse.to_bits(), "{strat:?}");
+            assert_eq!(got.accuracy.to_bits(), want.accuracy.to_bits(), "{strat:?}");
+            assert_eq!(got.auc.to_bits(), want.auc.to_bits(), "{strat:?}");
+            std::fs::remove_dir_all(&dir).ok();
+        }
     }
 
     #[test]

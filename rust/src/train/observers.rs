@@ -305,6 +305,7 @@ pub fn trace_row(pt: &TracePoint) -> Vec<String> {
 /// per recorded point, flushed eagerly so partial runs leave usable series.
 pub struct CsvStreamer {
     writer: CsvWriter,
+    path: PathBuf,
     error: Option<anyhow::Error>,
 }
 
@@ -312,7 +313,8 @@ impl CsvStreamer {
     /// Creates the file (and parent dirs) and writes the header.
     pub fn create<P: AsRef<Path>>(path: P) -> crate::Result<Self> {
         Ok(CsvStreamer {
-            writer: CsvWriter::create(path, &TRACE_COLUMNS)?,
+            writer: CsvWriter::create(path.as_ref(), &TRACE_COLUMNS)?,
+            path: path.as_ref().to_path_buf(),
             error: None,
         })
     }
@@ -323,6 +325,16 @@ impl CsvStreamer {
             Some(e) => Err(e),
             None => Ok(()),
         }
+    }
+
+    /// Removes the partially written file — for the session-failed path,
+    /// where a half-streamed trace would otherwise be left looking like a
+    /// finished series. Removal failure is ignored (the file may never
+    /// have made it to disk).
+    pub fn abort(self) {
+        let CsvStreamer { writer, path, .. } = self;
+        drop(writer);
+        let _ = std::fs::remove_file(&path);
     }
 }
 

@@ -9,7 +9,8 @@
 use std::cell::RefCell;
 
 use crate::baseline::{
-    bulksync_train_with_stats, dsgd_train_with_stats, libfm_train, BulkSyncConfig, DsgdConfig,
+    bulksync_train_from_source, bulksync_train_with_stats, dsgd_train_from_source,
+    dsgd_train_with_stats, libfm_train, libfm_train_from_source, BulkSyncConfig, DsgdConfig,
     LibfmConfig,
 };
 use crate::data::Dataset;
@@ -61,6 +62,17 @@ impl Trainer for NomadTrainer {
         Ok(out)
     }
 
+    fn fit_source(
+        &self,
+        src: &dyn crate::data::DataSource,
+        observer: &mut dyn TrainObserver,
+    ) -> crate::Result<TrainOutput> {
+        let (out, stats) = nomad::train_from_source(src, &self.fm, &self.cfg, observer)?;
+        *self.stats.borrow_mut() = Some(stats);
+        observer.on_done(&out);
+        Ok(out)
+    }
+
     fn stats(&self) -> Option<EngineStats> {
         self.stats.borrow().clone()
     }
@@ -98,6 +110,26 @@ impl Trainer for LibfmTrainer {
         observer.on_done(&out);
         Ok(out)
     }
+
+    fn fit_source(
+        &self,
+        src: &dyn crate::data::DataSource,
+        observer: &mut dyn TrainObserver,
+    ) -> crate::Result<TrainOutput> {
+        // A shard-backed source (its files fix the sweep order) streams
+        // epoch by epoch; an unsharded source falls back to materializing.
+        match src.native_plan() {
+            Some(part) => {
+                let out = libfm_train_from_source(src, &part, &self.fm, &self.cfg, observer)?;
+                observer.on_done(&out);
+                Ok(out)
+            }
+            None => {
+                let ds = src.materialize()?;
+                self.fit(&ds, None, observer)
+            }
+        }
+    }
 }
 
 /// Synchronous block-cyclic DSGD behind the session API. Keeps the
@@ -132,6 +164,17 @@ impl Trainer for DsgdTrainer {
         observer: &mut dyn TrainObserver,
     ) -> crate::Result<TrainOutput> {
         let (out, pstats) = dsgd_train_with_stats(train, test, &self.fm, &self.cfg, observer)?;
+        *self.partition.borrow_mut() = Some(pstats);
+        observer.on_done(&out);
+        Ok(out)
+    }
+
+    fn fit_source(
+        &self,
+        src: &dyn crate::data::DataSource,
+        observer: &mut dyn TrainObserver,
+    ) -> crate::Result<TrainOutput> {
+        let (out, pstats) = dsgd_train_from_source(src, &self.fm, &self.cfg, observer)?;
         *self.partition.borrow_mut() = Some(pstats);
         observer.on_done(&out);
         Ok(out)
@@ -175,6 +218,17 @@ impl Trainer for BulkSyncTrainer {
     ) -> crate::Result<TrainOutput> {
         let (out, pstats) =
             bulksync_train_with_stats(train, test, &self.fm, &self.cfg, observer)?;
+        *self.partition.borrow_mut() = Some(pstats);
+        observer.on_done(&out);
+        Ok(out)
+    }
+
+    fn fit_source(
+        &self,
+        src: &dyn crate::data::DataSource,
+        observer: &mut dyn TrainObserver,
+    ) -> crate::Result<TrainOutput> {
+        let (out, pstats) = bulksync_train_from_source(src, &self.fm, &self.cfg, observer)?;
         *self.partition.borrow_mut() = Some(pstats);
         observer.on_done(&out);
         Ok(out)

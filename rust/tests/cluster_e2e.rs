@@ -196,6 +196,8 @@ fn run_ring(tag: &str, p: usize, iters: usize, seed: u64) {
             &seed_s,
             "--cols-per-token",
             "5",
+            "--train-frac",
+            "1",
             "--addr",
             "127.0.0.1:0",
             "--save-model",
@@ -236,6 +238,35 @@ fn run_ring(tag: &str, p: usize, iters: usize, seed: u64) {
 }
 
 #[test]
+fn driver_rejects_fractional_train_split() {
+    // The driver must refuse `train_frac < 1` loudly (workers train on the
+    // ingested shard files; a split would silently change the rows) —
+    // before it binds a port or opens the cache.
+    use dsfacto::cluster::runtime::{run_driver, ClusterSpec, DriverOptions};
+    let mut cfg = ExperimentConfig::default();
+    cfg.set("dataset", "cache:/nonexistent/dir").unwrap();
+    cfg.set("train_frac", "0.5").unwrap();
+    cfg.cluster = Some(ClusterSpec::Driver {
+        addr: "127.0.0.1:0".to_string(),
+        p: 2,
+    });
+    let err = run_driver(&DriverOptions {
+        cfg,
+        ckpt_dir: None,
+        ckpt_every: 1,
+        join_timeout: Duration::from_secs(1),
+        heartbeat_timeout: Duration::from_secs(1),
+        max_generations: 1,
+        quiet: true,
+    })
+    .expect_err("train_frac = 0.5 must be rejected");
+    assert!(
+        format!("{err:#}").contains("train_frac = 1"),
+        "unhelpful error: {err:#}"
+    );
+}
+
+#[test]
 fn two_process_ring_is_bitwise_in_process() {
     run_ring("p2", 2, 4, 23);
 }
@@ -272,6 +303,8 @@ fn killed_worker_recovers_from_block_checkpoints() {
             "7",
             "--cols-per-token",
             "5",
+            "--train-frac",
+            "1",
             "--addr",
             "127.0.0.1:0",
             "--ckpt-dir",

@@ -510,6 +510,181 @@ fn ingest_and_shard_loads_never_hold_the_full_csr() {
 }
 
 // ---------------------------------------------------------------------
+// Streaming coordinator: `run_experiment` on a `cache:` dataset must be
+// bitwise the in-memory run — trace, model and final metrics — while
+// never holding more than the prefetch window (<= 2 shards).
+
+#[test]
+fn streaming_run_experiment_is_bitwise_in_memory() {
+    use dsfacto::config::{DatasetSpec, ExperimentConfig, TrainerKind};
+    use dsfacto::coordinator::run_experiment;
+    use dsfacto::train::Trainer;
+
+    let dir = scratch_dir("stream_coord");
+    let (path, parsed) = twin_file_and_parsed(&dir, "housing", 31);
+    for strat in [RowStrategy::Contiguous, RowStrategy::NnzBalanced] {
+        // NOMAD is run-to-run deterministic only at P = 1; the others are
+        // deterministic at any width.
+        for &(kind, p) in &[
+            (TrainerKind::Nomad, 1usize),
+            (TrainerKind::Libfm, 3),
+            (TrainerKind::Dsgd, 3),
+            (TrainerKind::BulkSync, 3),
+        ] {
+            let cache_dir = dir.join(format!("cache_{}_{}", strat.spec(), kind.name()));
+            let opts = IngestOptions {
+                task: parsed.task,
+                n_features: Some(parsed.d()),
+                strategy: strat,
+                shards: p,
+                chunk_rows: 64,
+            };
+            libsvm::stream_ingest(&path, "housing", &opts, &cache_dir).unwrap();
+
+            let eta = match kind {
+                TrainerKind::Libfm => LrSchedule::Constant(0.02),
+                TrainerKind::BulkSync => LrSchedule::Constant(0.05),
+                _ => LrSchedule::Constant(0.5),
+            };
+            let cfg = ExperimentConfig {
+                dataset: DatasetSpec::Cache {
+                    dir: cache_dir.to_str().unwrap().to_string(),
+                },
+                trainer: kind,
+                fm: FmHyper {
+                    k: 4,
+                    ..Default::default()
+                },
+                workers: p,
+                outer_iters: 4,
+                eta,
+                eval_every: usize::MAX,
+                train_frac: 1.0,
+                row_partition: strat,
+                ..Default::default()
+            };
+            let what = format!("{} {} P={p}", kind.name(), strat.spec());
+
+            // The in-memory reference: the same trainer build, fed the
+            // parsed dataset directly (same shuffle gating, same RNG).
+            let reference = kind.build(&cfg).fit(&parsed, None, &mut ()).unwrap();
+            let summary = run_experiment(&cfg).unwrap_or_else(|e| panic!("{what}: {e:#}"));
+
+            assert_models_bitwise(&reference.model, &summary.output.model, &what);
+            assert_traces_bitwise(&reference, &summary.output, &what);
+
+            // Final metrics stream shard by shard, bitwise the in-memory
+            // evaluation of the same model over the same rows.
+            assert!(summary.test.is_none(), "{what}: streaming runs hold no test set");
+            let want = dsfacto::metrics::evaluate(&summary.output.model, &parsed);
+            let got = summary.final_eval;
+            assert_eq!(got.loss.to_bits(), want.loss.to_bits(), "{what}: loss");
+            assert_eq!(got.rmse.to_bits(), want.rmse.to_bits(), "{what}: rmse");
+            assert_eq!(got.accuracy.to_bits(), want.accuracy.to_bits(), "{what}: accuracy");
+            assert_eq!(got.auc.to_bits(), want.auc.to_bits(), "{what}: auc");
+
+            // The streaming run reports its residency meters.
+            let residency = summary.residency.expect("streaming run reports residency");
+            assert!(residency.peak_resident_shards >= 1, "{what}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cache_fed_run_experiment_never_holds_the_full_csr() {
+    use dsfacto::config::{DatasetSpec, ExperimentConfig, TrainerKind};
+    use dsfacto::coordinator::run_experiment;
+
+    let dir = scratch_dir("stream_bounded");
+    let (path, parsed) = twin_file_and_parsed(&dir, "housing", 37);
+    let cache_dir = dir.join("cache");
+    let opts = IngestOptions {
+        task: parsed.task,
+        n_features: Some(parsed.d()),
+        strategy: RowStrategy::Contiguous,
+        shards: 4,
+        chunk_rows: 64,
+    };
+    libsvm::stream_ingest(&path, "housing", &opts, &cache_dir).unwrap();
+
+    // libFM sweeps shards strictly in order, so the coordinator's prefetch
+    // window is the whole working set: one shard in use + one in flight.
+    let cfg = ExperimentConfig {
+        dataset: DatasetSpec::Cache {
+            dir: cache_dir.to_str().unwrap().to_string(),
+        },
+        trainer: TrainerKind::Libfm,
+        fm: FmHyper {
+            k: 4,
+            ..Default::default()
+        },
+        outer_iters: 3,
+        eta: LrSchedule::Constant(0.02),
+        eval_every: usize::MAX,
+        train_frac: 1.0,
+        ..Default::default()
+    };
+    let summary = run_experiment(&cfg).unwrap();
+    let residency = summary.residency.expect("streaming run reports residency");
+    assert!(
+        residency.peak_resident_shards <= 2,
+        "prefetch window exceeded: {} shards resident",
+        residency.peak_resident_shards
+    );
+    let full = full_csr_bytes(&parsed);
+    assert!(
+        residency.peak_resident_bytes < full,
+        "coordinator resident {} >= full CSR {full}",
+        residency.peak_resident_bytes
+    );
+    // Sequential sweeps actually used the double buffer.
+    assert!(residency.prefetch_hits > 0, "{residency:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn failed_fit_removes_the_trace_csv() {
+    use dsfacto::config::{DatasetSpec, ExperimentConfig, TrainerKind};
+    use dsfacto::coordinator::run_experiment;
+
+    let dir = scratch_dir("trace_abort");
+    let (path, parsed) = twin_file_and_parsed(&dir, "housing", 41);
+    let cache_dir = dir.join("cache");
+    let opts = IngestOptions {
+        task: parsed.task,
+        n_features: Some(parsed.d()),
+        strategy: RowStrategy::Contiguous,
+        shards: 2,
+        chunk_rows: 64,
+    };
+    libsvm::stream_ingest(&path, "housing", &opts, &cache_dir).unwrap();
+
+    // workers = 3 against a 2-shard cache: the plan is refused at fit
+    // time, after the trace CSV was created — the error path must not
+    // leak a header-only file that looks like a finished series.
+    let trace_path = dir.join("trace.csv");
+    let cfg = ExperimentConfig {
+        dataset: DatasetSpec::Cache {
+            dir: cache_dir.to_str().unwrap().to_string(),
+        },
+        trainer: TrainerKind::Dsgd,
+        workers: 3,
+        outer_iters: 2,
+        train_frac: 1.0,
+        trace_path: Some(trace_path.to_str().unwrap().to_string()),
+        ..Default::default()
+    };
+    let err = run_experiment(&cfg).expect_err("mismatched plan must fail");
+    assert!(format!("{err:#}").contains("re-ingest"), "{err:#}");
+    assert!(
+        !trace_path.exists(),
+        "failed run left a partial trace CSV behind"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
 // The seam accepts caller-provided sources (embedding surface).
 
 #[derive(Debug)]
