@@ -616,6 +616,22 @@ fn main() -> anyhow::Result<()> {
                 mp_epoch / inproc_epoch.max(1e-12)
             );
             report.record_value("cluster epoch_secs multiprocess (housing P=2)", mp_epoch);
+            // Recovery tax: the same schedule with one worker scripted to
+            // die mid-epoch (`DSFACTO_CHAOS=kill:2`) and a replacement
+            // joining after the driver's restart marker — detect + abort +
+            // re-join + checkpoint restart, vs the clean run above.
+            report.record_value("cluster recovery_secs clean (housing P=2)", total);
+            match cluster_faulted_secs(&ccache, citers, &ctmp.join("chaos_ckpt")) {
+                Ok(faulted) => {
+                    println!(
+                        "  faulted:       {:.0} ms total ({:.1}x clean; scripted kill + restart)",
+                        faulted * 1e3,
+                        faulted / total.max(1e-12)
+                    );
+                    report.record_value("cluster recovery_secs faulted (housing P=2)", faulted);
+                }
+                Err(e) => eprintln!("  skipping the faulted cluster bench: {e:#}"),
+            }
         }
         // Sandboxed environments without loopback sockets still get the
         // rest of the report.
@@ -722,5 +738,146 @@ fn cluster_driver_secs(cache: &std::path::Path, iters: usize) -> anyhow::Result<
         let _ = w.wait();
     }
     anyhow::ensure!(ok, "cluster driver exited unsuccessfully");
+    Ok(secs)
+}
+
+/// The same subprocess ring under a scripted fault: worker-b runs with
+/// `DSFACTO_CHAOS=kill:2` (exit mid-epoch, before reporting), and a
+/// replacement worker is launched once the driver prints its restart
+/// marker. Returns the wall time from worker launch to driver exit —
+/// the full death-detect + abort + re-join + checkpoint-restart cost on
+/// the same schedule `cluster_driver_secs` times cleanly.
+fn cluster_faulted_secs(
+    cache: &std::path::Path,
+    iters: usize,
+    ckpt: &std::path::Path,
+) -> anyhow::Result<f64> {
+    use std::io::BufRead;
+    use std::process::{Command, Stdio};
+    use std::time::{Duration, Instant};
+
+    std::fs::create_dir_all(ckpt)?;
+    let bin = env!("CARGO_BIN_EXE_dsfacto");
+    let dataset = format!("cache:{}", cache.display());
+    let ckpt_s = ckpt.display().to_string();
+    // Not --quiet: the restart marker on stdout is what cues the
+    // replacement worker.
+    let mut driver = Command::new(bin)
+        .args([
+            "driver",
+            "--dataset",
+            &dataset,
+            "--workers",
+            "2",
+            "--outer-iters",
+            &iters.to_string(),
+            "--eta",
+            "constant:0.5",
+            "--seed",
+            "5",
+            "--cols-per-token",
+            "5",
+            "--train-frac",
+            "1",
+            "--addr",
+            "127.0.0.1:0",
+            "--ckpt-dir",
+            &ckpt_s,
+            "--ckpt-every",
+            "1",
+            "--heartbeat-timeout",
+            "2",
+            "--max-restarts",
+            "2",
+        ])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .spawn()?;
+    let stdout = driver.stdout.take().expect("driver stdout piped");
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut addr = None;
+    let mut line = String::new();
+    while reader.read_line(&mut line)? > 0 {
+        if let Some(rest) = line.split("control on ").nth(1) {
+            addr = Some(rest.trim().to_string());
+            break;
+        }
+        line.clear();
+    }
+    let Some(addr) = addr else {
+        let _ = driver.kill();
+        let _ = driver.wait();
+        anyhow::bail!("driver never printed its control address");
+    };
+
+    let worker_args = [
+        "worker",
+        "--driver",
+        addr.as_str(),
+        "--ckpt-dir",
+        ckpt_s.as_str(),
+        "--ckpt-every",
+        "1",
+    ];
+    let spawn_worker = |chaos: Option<&str>| {
+        let mut cmd = Command::new(bin);
+        cmd.args(worker_args).stdin(Stdio::null()).stdout(Stdio::null());
+        if let Some(spec) = chaos {
+            cmd.env("DSFACTO_CHAOS", spec);
+        }
+        cmd.spawn()
+    };
+    let sw = Instant::now();
+    let mut workers = Vec::new();
+    for chaos in [None, Some("kill:2")] {
+        match spawn_worker(chaos) {
+            Ok(w) => workers.push(w),
+            Err(e) => {
+                let _ = driver.kill();
+                for mut w in workers {
+                    let _ = w.kill();
+                }
+                return Err(e.into());
+            }
+        }
+    }
+    // Drain the pipe (so the driver never blocks on it) while watching
+    // for the generation-restart marker.
+    let (restart_tx, restart_rx) = std::sync::mpsc::channel::<()>();
+    let drain = std::thread::spawn(move || {
+        let mut sink = String::new();
+        while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+            if sink.contains("restarting from iteration") {
+                let _ = restart_tx.send(());
+            }
+            sink.clear();
+        }
+    });
+    let deadline = Instant::now() + Duration::from_secs(180);
+    let mut replaced = false;
+    let ok = loop {
+        if !replaced && restart_rx.try_recv().is_ok() {
+            if let Ok(w) = spawn_worker(None) {
+                workers.push(w);
+            }
+            replaced = true;
+        }
+        match driver.try_wait()? {
+            Some(status) => break status.success(),
+            None if Instant::now() >= deadline => {
+                let _ = driver.kill();
+                break false;
+            }
+            None => std::thread::sleep(Duration::from_millis(50)),
+        }
+    };
+    let secs = sw.elapsed().as_secs_f64();
+    let _ = drain.join();
+    for mut w in workers {
+        let _ = w.kill();
+        let _ = w.wait();
+    }
+    anyhow::ensure!(ok, "faulted cluster driver exited unsuccessfully");
+    anyhow::ensure!(replaced, "the scripted kill never triggered a restart");
     Ok(secs)
 }

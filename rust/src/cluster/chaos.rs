@@ -1,0 +1,269 @@
+//! Deterministic fault injection for the cluster runtime.
+//!
+//! A `ChaosPlan` is a scripted schedule of faults parsed from
+//! `DSFACTO_CHAOS=<spec>` (or `--chaos <spec>`), applied at the wire
+//! seams of the control plane and the token ring. Because the e2e
+//! oracle is *bitwise* model equality after recovery (mean-mode
+//! recompute is arrival-order independent), a replayable schedule is
+//! enough: which concrete frame happens to be the Nth is timing
+//! dependent, but the recovered model must be identical regardless.
+//!
+//! Spec grammar — `;`-separated directives:
+//!
+//! ```text
+//! drop:ring:N     drop the Nth (0-based) outbound ring frame
+//! drop:ctrl:N     drop the Nth outbound control frame
+//! dup:ring:N      send the Nth outbound ring frame twice
+//! dup:ctrl:N      send the Nth outbound control frame twice
+//! delay:ring:N:MS sleep MS ms before sending the Nth ring frame
+//! delay:ctrl:N:MS sleep MS ms before sending the Nth control frame
+//! kill:E          exit(9) once this process observes epoch E complete
+//! refuse:MS       drop inbound connections for the first MS ms of life
+//! ```
+//!
+//! Faults apply only to real socket traffic: the self-rank short
+//! circuit inside `TcpTransport::send` never touches the plan.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+/// Which wire a frame is crossing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// Token-ring frames between workers (`TcpTransport`).
+    Ring,
+    /// Control-plane frames between driver and workers.
+    Ctrl,
+}
+
+impl Scope {
+    fn idx(self) -> usize {
+        match self {
+            Scope::Ring => 0,
+            Scope::Ctrl => 1,
+        }
+    }
+}
+
+/// What the seam should do with one outbound frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SendFate {
+    /// Pretend the network ate it: count it, don't write it.
+    Drop,
+    /// Normal delivery.
+    Deliver,
+    /// Write the identical bytes (same sequence number) twice.
+    Duplicate,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Directive {
+    Drop(Scope, u64),
+    Dup(Scope, u64),
+    Delay(Scope, u64, u64),
+}
+
+/// A parsed, replayable fault schedule for one process.
+pub struct ChaosPlan {
+    directives: Vec<Directive>,
+    sent: [AtomicU64; 2],
+    born: Instant,
+    kill_epoch: Option<u32>,
+    killed: AtomicBool,
+    refuse: Option<Duration>,
+}
+
+fn parse_scope(s: &str, directive: &str) -> Result<Scope> {
+    match s {
+        "ring" => Ok(Scope::Ring),
+        "ctrl" => Ok(Scope::Ctrl),
+        other => bail!("chaos: unknown scope '{other}' in '{directive}' (want ring|ctrl)"),
+    }
+}
+
+impl ChaosPlan {
+    /// Parses a chaos spec; errors name the offending directive.
+    pub fn parse(spec: &str) -> Result<ChaosPlan> {
+        let mut plan = ChaosPlan {
+            directives: Vec::new(),
+            sent: [AtomicU64::new(0), AtomicU64::new(0)],
+            born: Instant::now(),
+            kill_epoch: None,
+            killed: AtomicBool::new(false),
+            refuse: None,
+        };
+        for raw in spec.split(';') {
+            let d = raw.trim();
+            if d.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = d.split(':').collect();
+            let num = |s: &str| -> Result<u64> {
+                s.parse::<u64>()
+                    .with_context(|| format!("chaos: bad number '{s}' in '{d}'"))
+            };
+            match (parts[0], parts.len()) {
+                ("drop", 3) => {
+                    plan.directives
+                        .push(Directive::Drop(parse_scope(parts[1], d)?, num(parts[2])?));
+                }
+                ("dup", 3) => {
+                    plan.directives
+                        .push(Directive::Dup(parse_scope(parts[1], d)?, num(parts[2])?));
+                }
+                ("delay", 4) => {
+                    plan.directives.push(Directive::Delay(
+                        parse_scope(parts[1], d)?,
+                        num(parts[2])?,
+                        num(parts[3])?,
+                    ));
+                }
+                ("kill", 2) => plan.kill_epoch = Some(num(parts[1])? as u32),
+                ("refuse", 2) => plan.refuse = Some(Duration::from_millis(num(parts[1])?)),
+                _ => bail!(
+                    "chaos: unparseable directive '{d}' \
+                     (want drop:SCOPE:N, dup:SCOPE:N, delay:SCOPE:N:MS, kill:E, refuse:MS)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Resolves the plan for this process: an explicit `--chaos` flag
+    /// wins, else the `DSFACTO_CHAOS` environment variable, else none.
+    pub fn from_flag_or_env(flag: Option<&str>) -> Result<Option<std::sync::Arc<ChaosPlan>>> {
+        let spec = match flag {
+            Some(s) => Some(s.to_string()),
+            None => std::env::var("DSFACTO_CHAOS").ok(),
+        };
+        match spec.as_deref().map(str::trim) {
+            None | Some("") => Ok(None),
+            Some(s) => Ok(Some(std::sync::Arc::new(ChaosPlan::parse(s)?))),
+        }
+    }
+
+    /// Consumes one outbound frame slot on `scope`: applies any delay
+    /// directive inline, then reports the frame's fate. Each call
+    /// advances the per-scope frame counter exactly once.
+    pub fn on_send(&self, scope: Scope) -> SendFate {
+        let n = self.sent[scope.idx()].fetch_add(1, Ordering::Relaxed);
+        let mut fate = SendFate::Deliver;
+        for d in &self.directives {
+            match *d {
+                Directive::Delay(s, at, ms) if s == scope && at == n => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Directive::Drop(s, at) if s == scope && at == n => fate = SendFate::Drop,
+                Directive::Dup(s, at) if s == scope && at == n => fate = SendFate::Duplicate,
+                _ => {}
+            }
+        }
+        fate
+    }
+
+    /// How many outbound frames `scope` has presented to the plan.
+    pub fn frames_seen(&self, scope: Scope) -> u64 {
+        self.sent[scope.idx()].load(Ordering::Relaxed)
+    }
+
+    /// True exactly once, when `epoch` first reaches the scripted kill
+    /// point. The caller is expected to `process::exit(9)`.
+    pub fn kill_due(&self, epoch: u32) -> bool {
+        match self.kill_epoch {
+            Some(e) if epoch >= e => !self.killed.swap(true, Ordering::Relaxed),
+            _ => false,
+        }
+    }
+
+    /// Kills the process if the scripted kill epoch has been reached.
+    pub fn kill_if_due(&self, epoch: u32, who: &str) {
+        if self.kill_due(epoch) {
+            eprintln!("dsfacto chaos: {who} exiting at epoch {epoch} (scripted kill)");
+            std::process::exit(9);
+        }
+    }
+
+    /// True while the scripted connection-refusal window is open.
+    pub fn refusing(&self) -> bool {
+        match self.refuse {
+            Some(window) => self.born.elapsed() < window,
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_directive_kind() {
+        let plan =
+            ChaosPlan::parse("drop:ring:3; dup:ctrl:0; delay:ring:1:25; kill:4; refuse:10").unwrap();
+        assert_eq!(plan.directives.len(), 3);
+        assert_eq!(plan.kill_epoch, Some(4));
+        assert_eq!(plan.refuse, Some(Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "drop:3",
+            "drop:lan:3",
+            "dup:ring:x",
+            "delay:ring:1",
+            "explode:now",
+            "kill:ring:2",
+        ] {
+            assert!(ChaosPlan::parse(bad).is_err(), "accepted bad spec '{bad}'");
+        }
+    }
+
+    #[test]
+    fn empty_and_whitespace_specs_are_inert() {
+        let plan = ChaosPlan::parse(" ; ;; ").unwrap();
+        assert_eq!(plan.on_send(Scope::Ring), SendFate::Deliver);
+        assert!(!plan.kill_due(100));
+        assert!(!plan.refusing());
+    }
+
+    #[test]
+    fn fates_fire_at_the_scripted_indices_per_scope() {
+        let plan = ChaosPlan::parse("drop:ring:1;dup:ring:2;drop:ctrl:0").unwrap();
+        assert_eq!(plan.on_send(Scope::Ring), SendFate::Deliver); // ring #0
+        assert_eq!(plan.on_send(Scope::Ctrl), SendFate::Drop); // ctrl #0
+        assert_eq!(plan.on_send(Scope::Ring), SendFate::Drop); // ring #1
+        assert_eq!(plan.on_send(Scope::Ring), SendFate::Duplicate); // ring #2
+        assert_eq!(plan.on_send(Scope::Ring), SendFate::Deliver); // ring #3
+        assert_eq!(plan.on_send(Scope::Ctrl), SendFate::Deliver); // ctrl #1
+        assert_eq!(plan.frames_seen(Scope::Ring), 4);
+        assert_eq!(plan.frames_seen(Scope::Ctrl), 2);
+    }
+
+    #[test]
+    fn kill_fires_exactly_once_at_or_after_the_epoch() {
+        let plan = ChaosPlan::parse("kill:3").unwrap();
+        assert!(!plan.kill_due(2));
+        assert!(plan.kill_due(3));
+        assert!(!plan.kill_due(3), "kill must fire once");
+        assert!(!plan.kill_due(7));
+    }
+
+    #[test]
+    fn refusal_window_opens_then_closes() {
+        let plan = ChaosPlan::parse("refuse:40").unwrap();
+        assert!(plan.refusing());
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(!plan.refusing());
+    }
+
+    #[test]
+    fn explicit_flag_specs_parse_or_error() {
+        assert!(ChaosPlan::from_flag_or_env(Some("kill:1"))
+            .unwrap()
+            .is_some());
+        assert!(ChaosPlan::from_flag_or_env(Some("bogus")).is_err());
+    }
+}

@@ -14,8 +14,16 @@
 //! * [`runtime`] — the multi-process cluster runtime: a driver control
 //!   plane (membership, epoch bookkeeping, checkpoint-restart) plus the
 //!   worker process that hosts one engine worker over a remote TCP ring.
+//!
+//! Robustness support shared by the real-wire paths: [`auth`] (std-only
+//! SHA-256/HMAC for frame tags), [`chaos`] (deterministic fault
+//! injection behind `DSFACTO_CHAOS`), and [`retry`] (the one jittered
+//! backoff policy every reconnect path uses).
 
+pub mod auth;
+pub mod chaos;
 pub mod codec;
+pub mod retry;
 pub mod runtime;
 pub mod tcp;
 

@@ -1,0 +1,241 @@
+//! One retry policy for every reconnect path in the cluster stack.
+//!
+//! Before this module existed the repo had three divergent hand-rolled
+//! backoff loops (worker control connect, `TcpTransport` ring connect,
+//! prefetch fall-back). They disagreed on caps, jitter (none had any —
+//! synchronized retry storms), and deadline handling. `RetryPolicy` is
+//! the single implementation: jittered exponential backoff under a hard
+//! deadline, injectable clock so the unit tests never sleep.
+
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Pcg64;
+
+/// Clock seam: production code uses [`SystemClock`]; tests drive a
+/// [`FakeClock`] so backoff schedules are asserted without real sleeps.
+pub trait Clock {
+    fn now(&self) -> Instant;
+    fn sleep(&mut self, d: Duration);
+}
+
+/// The real wall clock.
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+
+    fn sleep(&mut self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// A manually advanced clock recording every sleep it was asked for.
+pub struct FakeClock {
+    origin: Instant,
+    elapsed: Duration,
+    pub sleeps: Vec<Duration>,
+}
+
+impl FakeClock {
+    pub fn new() -> FakeClock {
+        FakeClock {
+            origin: Instant::now(),
+            elapsed: Duration::ZERO,
+            sleeps: Vec::new(),
+        }
+    }
+}
+
+impl Default for FakeClock {
+    fn default() -> Self {
+        FakeClock::new()
+    }
+}
+
+impl Clock for FakeClock {
+    fn now(&self) -> Instant {
+        self.origin + self.elapsed
+    }
+
+    fn sleep(&mut self, d: Duration) {
+        self.sleeps.push(d);
+        self.elapsed += d;
+    }
+}
+
+/// Outcome of one attempt: retry after backoff, or abort immediately
+/// (e.g. the transport was shut down — waiting longer cannot help).
+pub enum Attempt<E> {
+    Retry(E),
+    Abort(E),
+}
+
+/// Jittered exponential backoff bounded by a hard deadline.
+///
+/// Attempt `i` sleeps `min(max, initial * 2^i)` scaled by a uniform
+/// factor in `[0.5, 1.0)` drawn from a seeded PCG stream, so a fleet of
+/// workers reconnecting to a restarted driver never stampedes in phase.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    pub initial: Duration,
+    pub max: Duration,
+    pub deadline: Duration,
+    pub jitter_seed: u64,
+}
+
+impl RetryPolicy {
+    pub fn new(initial: Duration, max: Duration, deadline: Duration) -> RetryPolicy {
+        RetryPolicy {
+            initial,
+            max,
+            deadline,
+            jitter_seed: 0x9e3779b97f4a7c15,
+        }
+    }
+
+    pub fn with_jitter_seed(mut self, seed: u64) -> RetryPolicy {
+        self.jitter_seed = seed;
+        self
+    }
+
+    /// The raw (pre-jitter) backoff for attempt `i`.
+    fn base_backoff(&self, attempt: u32) -> Duration {
+        let exp = attempt.min(24); // 2^24 * initial is already >> any max we use
+        self.initial
+            .saturating_mul(1u32 << exp)
+            .min(self.max)
+    }
+
+    /// Runs `f(attempt)` until it succeeds, aborts, or the deadline
+    /// (measured from the first call) would pass during the next sleep.
+    /// On give-up the last error is returned.
+    pub fn run<T, E>(
+        &self,
+        clock: &mut impl Clock,
+        mut f: impl FnMut(u32) -> Result<T, Attempt<E>>,
+    ) -> Result<T, E> {
+        let start = clock.now();
+        let mut rng = Pcg64::new(self.jitter_seed, 0x7e7b);
+        let mut attempt = 0u32;
+        loop {
+            let err = match f(attempt) {
+                Ok(v) => return Ok(v),
+                Err(Attempt::Abort(e)) => return Err(e),
+                Err(Attempt::Retry(e)) => e,
+            };
+            let jitter = 0.5 + 0.5 * rng.f64();
+            let backoff = self.base_backoff(attempt).mul_f64(jitter);
+            if clock.now().duration_since(start) + backoff >= self.deadline {
+                return Err(err);
+            }
+            clock.sleep(backoff);
+            attempt += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> RetryPolicy {
+        RetryPolicy::new(
+            Duration::from_millis(10),
+            Duration::from_millis(200),
+            Duration::from_secs(2),
+        )
+    }
+
+    #[test]
+    fn first_success_needs_no_sleep() {
+        let mut clock = FakeClock::new();
+        let got: Result<u32, &str> = policy().run(&mut clock, |_| Ok(7));
+        assert_eq!(got, Ok(7));
+        assert!(clock.sleeps.is_empty());
+    }
+
+    #[test]
+    fn backoff_doubles_up_to_the_cap_with_jitter() {
+        let mut clock = FakeClock::new();
+        let mut calls = 0u32;
+        let got: Result<(), &str> = policy().run(&mut clock, |attempt| {
+            assert_eq!(attempt, calls);
+            calls += 1;
+            if calls == 8 {
+                Ok(())
+            } else {
+                Err(Attempt::Retry("nope"))
+            }
+        });
+        assert_eq!(got, Ok(()));
+        assert_eq!(clock.sleeps.len(), 7);
+        for (i, slept) in clock.sleeps.iter().enumerate() {
+            let base = Duration::from_millis(10)
+                .saturating_mul(1 << i as u32)
+                .min(Duration::from_millis(200));
+            assert!(
+                *slept >= base.mul_f64(0.5) && *slept < base,
+                "sleep {i} = {slept:?} outside [{:?}, {base:?})",
+                base.mul_f64(0.5)
+            );
+        }
+    }
+
+    #[test]
+    fn deadline_returns_the_last_error_without_overshooting() {
+        let mut clock = FakeClock::new();
+        let mut calls = 0u32;
+        let got: Result<(), String> = RetryPolicy::new(
+            Duration::from_millis(100),
+            Duration::from_millis(100),
+            Duration::from_millis(350),
+        )
+        .run(&mut clock, |a| {
+            calls += 1;
+            Err(Attempt::Retry(format!("fail {a}")))
+        });
+        let err = got.unwrap_err();
+        assert!(err.starts_with("fail"), "unexpected error: {err}");
+        assert_eq!(format!("fail {}", calls - 1), err);
+        // Never slept past the deadline.
+        let total: Duration = clock.sleeps.iter().sum();
+        assert!(total < Duration::from_millis(350), "overslept: {total:?}");
+        assert!(calls >= 3, "deadline gave up too early after {calls} calls");
+    }
+
+    #[test]
+    fn abort_short_circuits_immediately() {
+        let mut clock = FakeClock::new();
+        let mut calls = 0u32;
+        let got: Result<(), &str> = policy().run(&mut clock, |_| {
+            calls += 1;
+            Err(Attempt::Abort("shut down"))
+        });
+        assert_eq!(got, Err("shut down"));
+        assert_eq!(calls, 1);
+        assert!(clock.sleeps.is_empty());
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_seed() {
+        let mut a = FakeClock::new();
+        let mut b = FakeClock::new();
+        let mut c = FakeClock::new();
+        let run = |clock: &mut FakeClock, seed: u64| {
+            let _: Result<(), &str> = policy().with_jitter_seed(seed).run(clock, |a| {
+                if a < 4 {
+                    Err(Attempt::Retry("x"))
+                } else {
+                    Ok(())
+                }
+            });
+        };
+        run(&mut a, 1);
+        run(&mut b, 1);
+        run(&mut c, 2);
+        assert_eq!(a.sleeps, b.sleeps);
+        assert_ne!(a.sleeps, c.sleeps);
+    }
+}

@@ -25,18 +25,31 @@
 //! | `Done`       | w → d     | all collected tokens sent + transport stats |
 //! | `Shutdown`   | d → w     | run complete: exit cleanly                  |
 
+//!
+//! On the socket every body travels inside the stream envelope of
+//! [`crate::cluster::codec::FrameSealer`] (sequence numbers + optional
+//! HMAC tag), sent through [`CtrlLink`] and opened by a per-connection
+//! [`FrameOpener`] on the receive side.
+
 use std::io::Read;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure, Context, Result};
+
+use crate::cluster::chaos::{ChaosPlan, Scope, SendFate};
+use crate::cluster::codec::{FrameOpener, FrameSealer, Opened};
 
 const MAGIC: u16 = 0xD5FB;
 
 /// Upper bound on a control frame body. `FinalBlock` carries one token's
 /// wire frame, bounded by the token codec's own size caps.
 const MAX_FRAME: usize = 1 << 26;
+
+/// Envelope header + tag headroom on top of [`MAX_FRAME`] for the
+/// on-wire length check.
+const MAX_ENVELOPE: usize = MAX_FRAME + 64;
 
 /// A control-plane message (see the module table for direction/meaning).
 #[derive(Debug, Clone, PartialEq)]
@@ -283,25 +296,68 @@ pub fn decode(buf: &[u8]) -> Result<Frame> {
     Ok(frame)
 }
 
-/// Writes one length-prefixed frame. The stream handle is shared behind a
-/// mutex because heartbeats, epoch reports and final blocks come from
-/// different threads of a worker process.
-pub fn send_frame(stream: &Mutex<TcpStream>, frame: &Frame) -> Result<()> {
-    use std::io::Write;
-    let body = encode(frame);
-    let mut msg = Vec::with_capacity(body.len() + 4);
-    msg.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    msg.extend_from_slice(&body);
-    let mut s = stream.lock().unwrap();
-    s.write_all(&msg).context("control write")?;
-    s.flush().context("control flush")
+/// The writable half of one control connection: the shared stream plus
+/// its per-connection envelope sealer and the process's chaos seam. The
+/// stream lives behind a mutex because heartbeats, epoch reports and
+/// final blocks come from different threads of a worker process.
+pub struct CtrlLink {
+    stream: Mutex<TcpStream>,
+    sealer: FrameSealer,
+    chaos: Option<Arc<ChaosPlan>>,
+}
+
+impl CtrlLink {
+    pub fn new(
+        stream: TcpStream,
+        key: Option<[u8; 32]>,
+        chaos: Option<Arc<ChaosPlan>>,
+    ) -> CtrlLink {
+        CtrlLink {
+            stream: Mutex::new(stream),
+            sealer: FrameSealer::new(key),
+            chaos,
+        }
+    }
+
+    /// Writes one length-prefixed, enveloped frame — subject to the
+    /// chaos plan's scripted drop/dup/delay schedule when one is live.
+    pub fn send(&self, frame: &Frame) -> Result<()> {
+        use std::io::Write;
+        let body = encode(frame);
+        let mut env = Vec::with_capacity(body.len() + self.sealer.overhead());
+        self.sealer.seal(&body, &mut env);
+        let fate = match &self.chaos {
+            Some(c) => c.on_send(Scope::Ctrl),
+            None => SendFate::Deliver,
+        };
+        if fate == SendFate::Drop {
+            // The network "ate" the frame; its sequence number goes with
+            // it, so the receiver sees a gap, never a desync.
+            return Ok(());
+        }
+        let mut msg = Vec::with_capacity(env.len() + 4);
+        msg.extend_from_slice(&(env.len() as u32).to_le_bytes());
+        msg.extend_from_slice(&env);
+        let mut s = self.stream.lock().unwrap();
+        s.write_all(&msg).context("control write")?;
+        if fate == SendFate::Duplicate {
+            s.write_all(&msg).context("control write (chaos dup)")?;
+        }
+        s.flush().context("control flush")
+    }
 }
 
 /// Reads one length-prefixed frame from a stream that has a read timeout
 /// set. Returns `Ok(None)` if the timeout elapsed *between* frames (the
-/// caller loops and re-checks its flags); a timeout mid-frame keeps
-/// reading. Errors on EOF, shutdown (`down`), or a malformed frame.
-pub fn recv_frame(stream: &mut TcpStream, down: &AtomicBool) -> Result<Option<Frame>> {
+/// caller loops and re-checks its flags) or the envelope was an exact
+/// duplicate (already-seen sequence number); a timeout mid-frame keeps
+/// reading. Errors on EOF, shutdown (`down`), a malformed frame, or an
+/// envelope `opener` rejects (bad magic/flags/tag — drop the connection).
+pub fn recv_frame(
+    stream: &mut TcpStream,
+    opener: &mut FrameOpener,
+    down: &AtomicBool,
+) -> Result<Option<Frame>> {
     let mut len4 = [0u8; 4];
     let mut off = 0usize;
     while off < 4 {
@@ -326,7 +382,7 @@ pub fn recv_frame(stream: &mut TcpStream, down: &AtomicBool) -> Result<Option<Fr
         }
     }
     let len = u32::from_le_bytes(len4) as usize;
-    ensure!(len <= MAX_FRAME, "control frame too large: {len} bytes");
+    ensure!(len <= MAX_ENVELOPE, "control frame too large: {len} bytes");
     let mut body = vec![0u8; len];
     let mut off = 0usize;
     while off < len {
@@ -346,7 +402,10 @@ pub fn recv_frame(stream: &mut TcpStream, down: &AtomicBool) -> Result<Option<Fr
             Err(e) => return Err(e).context("control read body"),
         }
     }
-    decode(&body).map(Some)
+    match opener.open(&body)? {
+        Opened::Duplicate => Ok(None),
+        Opened::Body(b) => decode(b).map(Some),
+    }
 }
 
 #[cfg(test)]
@@ -415,30 +474,39 @@ mod tests {
         assert!(decode(&buf).is_err());
     }
 
-    #[test]
-    fn frames_survive_a_tcp_stream() {
+    fn stream_pair() -> (TcpStream, TcpStream) {
         use std::net::TcpListener;
-        use std::sync::atomic::AtomicBool;
         use std::time::Duration;
-
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let client = Mutex::new(TcpStream::connect(addr).unwrap());
-        let (mut server, _) = listener.accept().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
         server
             .set_read_timeout(Some(Duration::from_millis(50)))
             .unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn frames_survive_a_tcp_stream() {
+        use std::sync::atomic::AtomicBool;
+
+        let (client, mut server) = stream_pair();
+        let link = CtrlLink::new(client, None, None);
+        let mut opener = FrameOpener::new(None, "test");
         let down = AtomicBool::new(false);
 
         // Timeout between frames surfaces as None, not an error.
-        assert!(recv_frame(&mut server, &down).unwrap().is_none());
+        assert!(recv_frame(&mut server, &mut opener, &down)
+            .unwrap()
+            .is_none());
 
         for f in all_frames() {
-            send_frame(&client, &f).unwrap();
+            link.send(&f).unwrap();
         }
         for f in all_frames() {
             let got = loop {
-                if let Some(g) = recv_frame(&mut server, &down).unwrap() {
+                if let Some(g) = recv_frame(&mut server, &mut opener, &down).unwrap() {
                     break g;
                 }
             };
@@ -446,14 +514,87 @@ mod tests {
         }
 
         // A dropped peer surfaces as an error.
-        drop(client);
+        drop(link);
         let mut saw_err = false;
         for _ in 0..100 {
-            if recv_frame(&mut server, &down).is_err() {
+            if recv_frame(&mut server, &mut opener, &down).is_err() {
                 saw_err = true;
                 break;
             }
         }
         assert!(saw_err, "EOF did not surface as an error");
+    }
+
+    #[test]
+    fn authed_frames_survive_and_garbage_is_rejected() {
+        use std::io::Write;
+        use std::sync::atomic::AtomicBool;
+
+        let key = crate::cluster::auth::derive_key("cluster-pw");
+        let (client, mut server) = stream_pair();
+        let link = CtrlLink::new(client, Some(key), None);
+        let mut opener = FrameOpener::new(Some(key), "test");
+        let down = AtomicBool::new(false);
+
+        for f in all_frames() {
+            link.send(&f).unwrap();
+        }
+        for f in all_frames() {
+            let got = loop {
+                if let Some(g) = recv_frame(&mut server, &mut opener, &down).unwrap() {
+                    break g;
+                }
+            };
+            assert_eq!(got, f);
+        }
+
+        // An unauthenticated client knocking on a keyed port: its bytes
+        // must be rejected (counted), never decoded into a frame.
+        let (mut knock, mut server2) = stream_pair();
+        let mut opener2 = FrameOpener::new(Some(key), "test");
+        let junk = [12u8, 0, 0, 0, 0xfb, 0xd5, 8, 0, 0, 0, 0, 0, 0, 0, 0, 0];
+        knock.write_all(&junk).unwrap();
+        knock.flush().unwrap();
+        let mut rejected = false;
+        for _ in 0..100 {
+            if recv_frame(&mut server2, &mut opener2, &down).is_err() {
+                rejected = true;
+                break;
+            }
+        }
+        assert!(rejected, "garbage was not rejected");
+        assert_eq!(opener2.rejected(), 1);
+    }
+
+    #[test]
+    fn chaos_dup_and_drop_on_the_control_wire() {
+        use crate::cluster::chaos::ChaosPlan;
+        use std::sync::atomic::AtomicBool;
+        use std::time::{Duration, Instant};
+
+        // Frame #1 dropped, frame #2 duplicated.
+        let plan = Arc::new(ChaosPlan::parse("drop:ctrl:1;dup:ctrl:2").unwrap());
+        let (client, mut server) = stream_pair();
+        let link = CtrlLink::new(client, None, Some(plan));
+        let mut opener = FrameOpener::new(None, "test");
+        let down = AtomicBool::new(false);
+
+        link.send(&Frame::Ready).unwrap(); // #0 delivered
+        link.send(&Frame::Start).unwrap(); // #1 dropped on the floor
+        link.send(&Frame::Heartbeat).unwrap(); // #2 written twice
+        link.send(&Frame::Shutdown).unwrap(); // #3 delivered
+
+        let mut got = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while got.len() < 3 && Instant::now() < deadline {
+            if let Some(f) = recv_frame(&mut server, &mut opener, &down).unwrap() {
+                got.push(f);
+            }
+        }
+        // The duplicate was swallowed by the opener, the drop shows up
+        // only as a sequence gap.
+        assert_eq!(got, vec![Frame::Ready, Frame::Heartbeat, Frame::Shutdown]);
+        assert_eq!(opener.gaps(), 1);
+        assert_eq!(opener.rejected(), 0);
     }
 }

@@ -23,17 +23,20 @@
 
 use std::collections::BTreeMap;
 use std::net::{TcpListener, TcpStream};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use super::control::{self, Frame};
+use super::control::{self, CtrlLink, Frame};
+use super::journal::{self, DriverJournal};
 use super::{col_plan_for, ClusterSpec};
-use crate::cluster::codec;
+use crate::cluster::auth;
+use crate::cluster::chaos::ChaosPlan;
+use crate::cluster::codec::{self, FrameOpener};
 use crate::config::{DatasetSpec, ExperimentConfig};
 use crate::data::cache::ShardCacheSource;
 use crate::data::{DataSource, PrefetchSource};
@@ -61,8 +64,19 @@ pub struct DriverOptions {
     pub join_timeout: Duration,
     /// A running worker silent for longer than this is presumed dead.
     pub heartbeat_timeout: Duration,
+    /// No *progress* (aggregated iterations, final blocks, done frames)
+    /// for longer than this aborts the generation even while heartbeats
+    /// keep flowing — the recovery path for a token lost on the ring,
+    /// which stalls the ring without killing anyone.
+    pub stall_timeout: Duration,
     /// Upper bound on generations (1 = no fault tolerance).
     pub max_generations: u32,
+    /// Resume a crashed driver from its `driver.dsfj` journal (requires
+    /// `ckpt_dir`): restores the trace, skips the iter-0 probe, and
+    /// refuses to resume a different experiment.
+    pub resume: bool,
+    /// Scripted fault-injection plan for this process (tests/benches).
+    pub chaos: Option<Arc<ChaosPlan>>,
     /// Suppress per-iteration progress lines.
     pub quiet: bool,
 }
@@ -86,7 +100,7 @@ pub struct DriverReport {
 
 /// One control connection as the driver sees it.
 struct Conn {
-    writer: Arc<Mutex<TcpStream>>,
+    writer: Arc<CtrlLink>,
     alive: bool,
     last_heard: Instant,
     ring_addr: Option<String>,
@@ -123,7 +137,7 @@ enum GenOutcome {
 /// Sends a frame to connection `i`; on failure the connection is marked
 /// dead (its rank freed) and `false` is returned.
 fn send_to(conns: &mut [Conn], i: usize, frame: &Frame) -> bool {
-    if control::send_frame(&conns[i].writer, frame).is_ok() {
+    if conns[i].writer.send(frame).is_ok() {
         true
     } else {
         conns[i].alive = false;
@@ -157,28 +171,45 @@ fn abort_all(conns: &mut [Conn]) {
 
 /// Registers a freshly accepted control connection and spawns its reader
 /// thread (frames and death notices flow into the shared event channel).
+/// Socket-option failures are no longer swallowed: a connection whose
+/// timeouts cannot be set could block the driver forever, so it is
+/// rejected with a log line instead of registered broken.
 fn register_conn(
     conns: &mut Vec<Conn>,
     stream: TcpStream,
     ev_tx: &Sender<Ev>,
     down: &Arc<AtomicBool>,
+    key: Option<[u8; 32]>,
+    chaos: Option<&Arc<ChaosPlan>>,
 ) {
     let idx = conns.len();
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    if let Err(e) = stream.set_nodelay(true) {
+        // Latency-only concern; the connection still works.
+        eprintln!("dsfacto driver: set_nodelay failed on a control conn: {e}");
+    }
+    if let Err(e) = stream.set_write_timeout(Some(Duration::from_secs(10))) {
+        eprintln!("dsfacto driver: rejecting control conn (set_write_timeout failed: {e})");
+        return;
+    }
     let reader = match stream.try_clone() {
         Ok(r) => r,
         Err(_) => return, // stillborn connection; nothing to track
     };
-    let _ = reader.set_read_timeout(Some(Duration::from_millis(250)));
+    if let Err(e) = reader.set_read_timeout(Some(Duration::from_millis(250))) {
+        // The reader polls `down` between timeouts; without a timeout it
+        // would block forever and never notice shutdown.
+        eprintln!("dsfacto driver: rejecting control conn (set_read_timeout failed: {e})");
+        return;
+    }
     let tx = ev_tx.clone();
     let down = Arc::clone(down);
     let spawned = std::thread::Builder::new()
         .name(format!("ctrl-read-{idx}"))
         .spawn(move || {
             let mut reader = reader;
+            let mut opener = FrameOpener::new(key, "driver control");
             loop {
-                match control::recv_frame(&mut reader, &down) {
+                match control::recv_frame(&mut reader, &mut opener, &down) {
                     Ok(Some(f)) => {
                         if tx.send(Ev::Frame(idx, f)).is_err() {
                             return;
@@ -200,7 +231,7 @@ fn register_conn(
         return;
     }
     conns.push(Conn {
-        writer: Arc::new(Mutex::new(stream)),
+        writer: Arc::new(CtrlLink::new(stream, key, chaos.cloned())),
         alive: true,
         last_heard: Instant::now(),
         ring_addr: None,
@@ -260,8 +291,9 @@ pub fn run_driver(opts: &DriverOptions) -> Result<DriverReport> {
     let t_max = cfg.outer_iters as u32;
 
     // What ships to workers: the same experiment pinned to this ring
-    // width, with the dataset pointing at the cache. The cluster key is
-    // stripped — each worker's role comes from its own command line.
+    // width, with the dataset pointing at the cache. The cluster key and
+    // the secret are stripped — each worker's role *and its key* come
+    // from its own command line; the secret never transits the wire.
     let ship_cfg = {
         let mut ship = cfg.clone();
         ship.workers = p;
@@ -270,31 +302,66 @@ pub fn run_driver(opts: &DriverOptions) -> Result<DriverReport> {
         };
         ship.data_cache = None;
         ship.cluster = None;
+        ship.cluster_secret = None;
         ship.dump()
     };
+    let key = cfg.cluster_secret.as_deref().map(auth::derive_key);
+    let config_sha = journal::config_sha(&ship_cfg);
 
-    // Iter-0 probe: the exact initial objective, folded shard-by-shard so
-    // the driver never materializes the full matrix.
-    let init = {
-        let mut rng = Pcg64::new(cfg.seed, 0x0ad);
-        FmModel::init(d, k, cfg.fm.init_std, &mut rng)
-    };
-    let (objective, train_loss) = crate::train::streaming_objective(
-        &src,
-        &row_plan,
-        &init,
-        cfg.fm.lambda_w,
-        cfg.fm.lambda_v,
-    )?;
-    let mut trace = vec![TracePoint {
-        iter: 0,
-        secs: 0.0,
-        objective,
-        train_loss,
-        test: None,
-    }];
-    if !opts.quiet {
-        print_point(&trace[0]);
+    let mut gen_base = 0u32;
+    let mut trace;
+    if opts.resume {
+        // Crashed-driver rejoin: restore the control state the journal
+        // captured instead of re-probing iteration 0.
+        let dir = opts.ckpt_dir.as_deref().context(
+            "--resume requires --ckpt-dir (the journal lives next to the block checkpoints)",
+        )?;
+        let j = DriverJournal::load(dir)?.with_context(|| {
+            format!("--resume: no {} found in {dir:?}", DriverJournal::FILE)
+        })?;
+        ensure!(
+            j.p == p,
+            "--resume: journal was written for p = {}, this driver expects p = {p}",
+            j.p
+        );
+        ensure!(
+            j.config_sha == config_sha,
+            "--resume: journal belongs to a different experiment (config hash mismatch)"
+        );
+        ensure!(!j.trace.is_empty(), "--resume: journal has an empty trace");
+        gen_base = j.generations;
+        trace = j.trace;
+        if !opts.quiet {
+            println!(
+                "dsfacto driver: resuming from journal ({} generation(s) used, {} trace points)",
+                gen_base,
+                trace.len()
+            );
+        }
+    } else {
+        // Iter-0 probe: the exact initial objective, folded shard-by-shard
+        // so the driver never materializes the full matrix.
+        let init = {
+            let mut rng = Pcg64::new(cfg.seed, 0x0ad);
+            FmModel::init(d, k, cfg.fm.init_std, &mut rng)
+        };
+        let (objective, train_loss) = crate::train::streaming_objective(
+            &src,
+            &row_plan,
+            &init,
+            cfg.fm.lambda_w,
+            cfg.fm.lambda_v,
+        )?;
+        trace = vec![TracePoint {
+            iter: 0,
+            secs: 0.0,
+            objective,
+            train_loss,
+            test: None,
+        }];
+        if !opts.quiet {
+            print_point(&trace[0]);
+        }
     }
 
     // Control listener. The `control on <addr>` line is parsed by tests
@@ -313,6 +380,7 @@ pub fn run_driver(opts: &DriverOptions) -> Result<DriverReport> {
     let acceptor = {
         let tx = ev_tx.clone();
         let down = Arc::clone(&down);
+        let chaos = opts.chaos.clone();
         std::thread::Builder::new()
             .name("ctrl-accept".into())
             .spawn(move || loop {
@@ -321,6 +389,12 @@ pub fn run_driver(opts: &DriverOptions) -> Result<DriverReport> {
                 }
                 match listener.accept() {
                     Ok((s, _)) => {
+                        if chaos.as_ref().is_some_and(|c| c.refusing()) {
+                            // Scripted refusal window: reset the conn so
+                            // workers exercise their retry policy.
+                            drop(s);
+                            continue;
+                        }
                         if tx.send(Ev::Accepted(s)).is_err() {
                             return;
                         }
@@ -334,18 +408,25 @@ pub fn run_driver(opts: &DriverOptions) -> Result<DriverReport> {
     let sw = Stopwatch::start();
     let mut conns: Vec<Conn> = Vec::new();
     let mut generations = 0u32;
+    let jsink = JournalSink {
+        dir: opts.ckpt_dir.as_deref(),
+        p,
+        config_sha: &config_sha,
+    };
 
     let run = (|| -> Result<(Vec<Token>, u64, u64)> {
-        for gen in 0..opts.max_generations {
+        for gen in gen_base..gen_base.saturating_add(opts.max_generations) {
             generations = gen + 1;
             let start_iter = match &opts.ckpt_dir {
                 Some(dir) => Checkpointer::latest_block_epoch(dir, p)?.unwrap_or(0).min(t_max),
                 None => 0,
             };
             if gen > 0 {
-                // Drop trace points the aborted generation recorded past
-                // the restart iteration — they'll be re-aggregated.
+                // Drop trace points the aborted (or journaled-past-the-
+                // checkpoint) run recorded past the restart iteration —
+                // they'll be re-aggregated.
                 trace.retain(|pt| pt.iter <= start_iter as usize);
+                jsink.save(generations, &trace);
                 if !opts.quiet {
                     println!(
                         "dsfacto driver: generation {} restarting from iteration {start_iter}",
@@ -366,6 +447,8 @@ pub fn run_driver(opts: &DriverOptions) -> Result<DriverReport> {
                 n,
                 ntok,
                 &ship_cfg,
+                key,
+                &jsink,
                 &sw,
                 &mut trace,
             )? {
@@ -406,6 +489,29 @@ fn print_point(pt: &TracePoint) {
     );
 }
 
+/// Best-effort journal writer: a failed save is logged, never fatal —
+/// journal durability must not take down a healthy run.
+struct JournalSink<'a> {
+    dir: Option<&'a Path>,
+    p: usize,
+    config_sha: &'a str,
+}
+
+impl JournalSink<'_> {
+    fn save(&self, generations: u32, trace: &[TracePoint]) {
+        let Some(dir) = self.dir else { return };
+        let j = DriverJournal {
+            p: self.p,
+            config_sha: self.config_sha.to_string(),
+            generations,
+            trace: trace.to_vec(),
+        };
+        if let Err(e) = j.save(dir) {
+            eprintln!("dsfacto driver: journal write failed: {e:#}");
+        }
+    }
+}
+
 /// One generation: membership, assignment, barrier, epoch aggregation,
 /// token drain. Returns `Aborted` (after telling everyone) on any worker
 /// failure; hard errors (join timeout, malformed state) bubble up.
@@ -423,6 +529,8 @@ fn run_generation(
     n: usize,
     ntok: usize,
     ship_cfg: &str,
+    key: Option<[u8; 32]>,
+    jsink: &JournalSink,
     sw: &Stopwatch,
     trace: &mut Vec<TracePoint>,
 ) -> Result<GenOutcome> {
@@ -444,7 +552,7 @@ fn run_generation(
             opts.join_timeout
         );
         match ev_rx.recv_timeout(Duration::from_millis(100)) {
-            Ok(Ev::Accepted(s)) => register_conn(conns, s, ev_tx, down),
+            Ok(Ev::Accepted(s)) => register_conn(conns, s, ev_tx, down, key, opts.chaos.as_ref()),
             Ok(Ev::Frame(i, f)) => {
                 conns[i].last_heard = Instant::now();
                 if let Frame::Join { ring_addr } = f {
@@ -521,7 +629,7 @@ fn run_generation(
             opts.join_timeout
         );
         match ev_rx.recv_timeout(Duration::from_millis(100)) {
-            Ok(Ev::Accepted(s)) => register_conn(conns, s, ev_tx, down),
+            Ok(Ev::Accepted(s)) => register_conn(conns, s, ev_tx, down, key, opts.chaos.as_ref()),
             Ok(Ev::Frame(i, f)) => {
                 conns[i].last_heard = Instant::now();
                 if matches!(f, Frame::Ready)
@@ -562,6 +670,12 @@ fn run_generation(
     // Once aggregation is done the remaining drain is bounded work; give
     // it its own generous deadline instead of the heartbeat cadence.
     let mut drain_deadline: Option<Instant> = None;
+    // Stall detection: heartbeats prove workers are *alive*, not that the
+    // ring is *moving*. A token frame lost on the wire stalls every
+    // worker at a barrier while heartbeats keep flowing — only a lack of
+    // progress (aggregated iterations, final blocks, done frames) reveals
+    // it, and the fix is the same checkpoint restart a death gets.
+    let mut last_progress = Instant::now();
 
     loop {
         if completions >= target && final_frames.len() == ntok && dones == p {
@@ -572,11 +686,24 @@ fn run_generation(
             drain_deadline = Some(now + Duration::from_secs(120));
         }
         if let Some(dl) = drain_deadline {
-            ensure!(
-                now < dl,
-                "token drain timed out: {}/{ntok} blocks, {dones}/{p} done frames",
-                final_frames.len()
+            if now >= dl {
+                eprintln!(
+                    "dsfacto driver: token drain timed out ({}/{ntok} blocks, {dones}/{p} done \
+                     frames); aborting generation",
+                    final_frames.len()
+                );
+                abort_all(conns);
+                return Ok(GenOutcome::Aborted);
+            }
+        }
+        if now.duration_since(last_progress) > opts.stall_timeout {
+            eprintln!(
+                "dsfacto driver: no progress for {:?} (ring stalled or frames lost); \
+                 aborting generation",
+                opts.stall_timeout
             );
+            abort_all(conns);
+            return Ok(GenOutcome::Aborted);
         }
         // Failure detection: a ranked worker silent past the heartbeat
         // timeout is presumed dead.
@@ -592,7 +719,7 @@ fn run_generation(
             }
         }
         match ev_rx.recv_timeout(Duration::from_millis(100)) {
-            Ok(Ev::Accepted(s)) => register_conn(conns, s, ev_tx, down),
+            Ok(Ev::Accepted(s)) => register_conn(conns, s, ev_tx, down, key, opts.chaos.as_ref()),
             Ok(Ev::Frame(i, f)) => {
                 conns[i].last_heard = Instant::now();
                 if conns[i].joined_gen != Some(gen) || conns[i].rank.is_none() {
@@ -651,6 +778,13 @@ fn run_generation(
                                 print_point(&pt);
                             }
                             trace.push(pt);
+                            // Journal after every aggregated iteration —
+                            // the state a `--resume` driver restores.
+                            jsink.save(gen + 1, trace);
+                            last_progress = Instant::now();
+                            if let Some(chaos) = &opts.chaos {
+                                chaos.kill_if_due(start_iter + completions, "driver");
+                            }
                         }
                     }
                     Frame::FinalBlock { frame } => {
@@ -659,6 +793,7 @@ fn run_generation(
                             "more than {ntok} final blocks arrived"
                         );
                         final_frames.push(frame);
+                        last_progress = Instant::now();
                     }
                     Frame::Done {
                         messages: m,
@@ -667,6 +802,7 @@ fn run_generation(
                         dones += 1;
                         messages += m;
                         bytes += b;
+                        last_progress = Instant::now();
                     }
                     // Heartbeats already refreshed last_heard; a stray
                     // Join here belongs to the next generation's loop.

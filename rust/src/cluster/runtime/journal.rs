@@ -1,0 +1,213 @@
+//! Driver control-state journal: the small file that kills the last
+//! single point of failure.
+//!
+//! Block checkpoints already make *workers* restartable; this journal
+//! makes the *driver* restartable. After every aggregated iteration the
+//! driver writes its control state — ring width, a hash of the shipped
+//! config, cumulative generation count, and the convergence trace — to
+//! `driver.dsfj` next to the block checkpoints (same atomic tmp+rename
+//! discipline as `Checkpointer::save_blocks`). A restarted
+//! `dsfacto driver --resume` loads it, refuses a mismatched experiment
+//! (config hash), re-opens membership, and resumes from
+//! `Checkpointer::latest_block_epoch` with the trace intact.
+//!
+//! Format: versioned plain text. Floats are written with Rust's `{}`
+//! formatting, whose shortest-round-trip representation parses back to
+//! the identical bits — the resumed trace is exact, not approximate.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::cluster::auth::sha256;
+use crate::metrics::TracePoint;
+
+const VERSION_LINE: &str = "dsfj v1";
+
+/// The driver's journaled control state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriverJournal {
+    /// Ring width the run was started with.
+    pub p: usize,
+    /// Hex SHA-256 of the shipped config text (`ship_cfg`): a resumed
+    /// driver must be running the *same experiment*.
+    pub config_sha: String,
+    /// Cumulative generations used (across driver restarts).
+    pub generations: u32,
+    /// Convergence trace up to the last fully aggregated iteration.
+    pub trace: Vec<TracePoint>,
+}
+
+/// Hex SHA-256 of the shipped config text.
+pub fn config_sha(ship_cfg: &str) -> String {
+    sha256(ship_cfg.as_bytes())
+        .iter()
+        .map(|b| format!("{b:02x}"))
+        .collect()
+}
+
+impl DriverJournal {
+    /// File name inside the checkpoint directory.
+    pub const FILE: &'static str = "driver.dsfj";
+
+    pub fn path(dir: &Path) -> PathBuf {
+        dir.join(Self::FILE)
+    }
+
+    /// Atomically writes the journal into `dir` (tmp + rename + sync).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        use std::io::Write;
+        let mut text = String::new();
+        text.push_str(VERSION_LINE);
+        text.push('\n');
+        text.push_str(&format!("p {}\n", self.p));
+        text.push_str(&format!("config_sha {}\n", self.config_sha));
+        text.push_str(&format!("generations {}\n", self.generations));
+        text.push_str(&format!("trace {}\n", self.trace.len()));
+        for pt in &self.trace {
+            // The held-out column is never populated in cluster runs.
+            text.push_str(&format!(
+                "{} {} {} {}\n",
+                pt.iter, pt.secs, pt.objective, pt.train_loss
+            ));
+        }
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating journal dir {dir:?}"))?;
+        let tmp = dir.join(format!(".{}.tmp", Self::FILE));
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {tmp:?}"))?;
+            f.write_all(text.as_bytes()).context("writing journal")?;
+            f.sync_all().context("syncing journal")?;
+        }
+        std::fs::rename(&tmp, Self::path(dir)).context("publishing journal")
+    }
+
+    /// Loads the journal from `dir`; `Ok(None)` when none was written.
+    pub fn load(dir: &Path) -> Result<Option<DriverJournal>> {
+        let path = Self::path(dir);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).with_context(|| format!("reading {path:?}")),
+        };
+        let mut lines = text.lines();
+        ensure!(
+            lines.next() == Some(VERSION_LINE),
+            "{path:?} is not a {VERSION_LINE} journal"
+        );
+        let mut field = |name: &str| -> Result<String> {
+            let line = lines
+                .next()
+                .with_context(|| format!("{path:?}: missing `{name}` line"))?;
+            let Some(v) = line.strip_prefix(name).map(str::trim) else {
+                bail!("{path:?}: expected `{name} ...`, found {line:?}");
+            };
+            Ok(v.to_string())
+        };
+        let p: usize = field("p")?.parse().context("journal p")?;
+        let config_sha = field("config_sha")?;
+        let generations: u32 = field("generations")?.parse().context("journal generations")?;
+        let ntrace: usize = field("trace")?.parse().context("journal trace count")?;
+        ensure!(ntrace <= 1 << 24, "implausible trace length {ntrace}");
+        let mut trace = Vec::with_capacity(ntrace);
+        for _ in 0..ntrace {
+            let line = lines
+                .next()
+                .with_context(|| format!("{path:?}: trace truncated"))?;
+            let cols: Vec<&str> = line.split_whitespace().collect();
+            ensure!(cols.len() == 4, "{path:?}: bad trace line {line:?}");
+            trace.push(TracePoint {
+                iter: cols[0].parse().context("trace iter")?,
+                secs: cols[1].parse().context("trace secs")?,
+                objective: cols[2].parse().context("trace objective")?,
+                train_loss: cols[3].parse().context("trace train_loss")?,
+                test: None,
+            });
+        }
+        ensure!(
+            lines.next().is_none(),
+            "{path:?} has trailing content past the trace"
+        );
+        Ok(Some(DriverJournal {
+            p,
+            config_sha,
+            generations,
+            trace,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DriverJournal {
+        DriverJournal {
+            p: 3,
+            config_sha: config_sha("dataset = cache:/x\nworkers = 3\n"),
+            generations: 2,
+            trace: vec![
+                TracePoint {
+                    iter: 0,
+                    secs: 0.0,
+                    objective: 0.123456789012345678,
+                    train_loss: 0.1,
+                    test: None,
+                },
+                TracePoint {
+                    iter: 1,
+                    secs: 1.5e-3,
+                    objective: f64::MIN_POSITIVE,
+                    train_loss: 1.0 / 3.0,
+                    test: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn journal_round_trips_bitwise() {
+        let dir = std::env::temp_dir().join("dsfacto_journal_rt");
+        std::fs::remove_dir_all(&dir).ok();
+        let j = sample();
+        assert_eq!(DriverJournal::load(&dir).unwrap(), None);
+        j.save(&dir).unwrap();
+        let back = DriverJournal::load(&dir).unwrap().expect("journal exists");
+        assert_eq!(back, j, "trace floats must round-trip exactly");
+        assert_eq!(back.trace[1].objective.to_bits(), f64::MIN_POSITIVE.to_bits());
+        // Overwrite is atomic-in-place: a second save fully replaces it.
+        let mut j2 = j.clone();
+        j2.generations = 5;
+        j2.trace.truncate(1);
+        j2.save(&dir).unwrap();
+        assert_eq!(DriverJournal::load(&dir).unwrap().unwrap(), j2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn journal_rejects_corruption() {
+        let dir = std::env::temp_dir().join("dsfacto_journal_bad");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = DriverJournal::path(&dir);
+        for bad in [
+            "",
+            "dsfj v999\np 2\n",
+            "dsfj v1\np 2\nconfig_sha x\ngenerations 1\ntrace 2\n0 0 0 0\n", // truncated trace
+            "dsfj v1\np 2\nconfig_sha x\ngenerations 1\ntrace 1\n0 0 0\n",   // short line
+            "dsfj v1\np 2\nconfig_sha x\ngenerations 1\ntrace 0\nextra\n",   // trailing
+        ] {
+            std::fs::write(&path, bad).unwrap();
+            assert!(DriverJournal::load(&dir).is_err(), "accepted: {bad:?}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn config_sha_discriminates() {
+        assert_ne!(config_sha("a"), config_sha("b"));
+        assert_eq!(config_sha("same"), config_sha("same"));
+        assert_eq!(config_sha("x").len(), 64);
+    }
+}

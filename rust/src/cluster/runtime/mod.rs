@@ -32,6 +32,7 @@
 
 pub mod control;
 pub mod driver;
+pub mod journal;
 pub mod worker;
 
 pub use driver::{run_driver, DriverOptions, DriverReport};

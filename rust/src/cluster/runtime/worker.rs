@@ -28,6 +28,11 @@
 //! and the worker reloads the model from all P per-rank checkpoint files
 //! (every worker reassembles the same global model, then keeps only its
 //! own dealt tokens and its own shard's arenas).
+//!
+//! A *lost control connection* is survivable too: the driver may have
+//! crashed and be on its way back via `dsfacto driver --resume`, so the
+//! worker re-dials (bounded by `connect_timeout` per attempt) and
+//! re-joins instead of dying with it.
 
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -37,11 +42,14 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use super::col_plan_for;
-use super::control::{self, Frame};
-use crate::cluster::codec;
+use super::control::{self, CtrlLink, Frame};
+use crate::cluster::auth;
+use crate::cluster::chaos::ChaosPlan;
+use crate::cluster::codec::{self, FrameOpener};
+use crate::cluster::retry::{Attempt, RetryPolicy, SystemClock};
 use crate::cluster::tcp::TcpTransport;
 use crate::cluster::Transport;
 use crate::config::{DatasetSpec, ExperimentConfig};
@@ -70,8 +78,14 @@ pub struct WorkerOptions {
     pub ckpt_dir: Option<PathBuf>,
     /// Checkpoint every this many completed outer iterations.
     pub ckpt_every: u32,
-    /// How long to keep retrying the initial control connection.
+    /// How long to keep retrying each control connection (the initial
+    /// dial, and every re-dial after the driver drops).
     pub connect_timeout: Duration,
+    /// Shared secret for frame authentication; must match the driver's
+    /// `--cluster-secret` (or both sides run unauthenticated).
+    pub cluster_secret: Option<String>,
+    /// Scripted fault-injection plan for this process (tests/benches).
+    pub chaos: Option<Arc<ChaosPlan>>,
 }
 
 /// Control-channel events funneled from the reader thread.
@@ -86,44 +100,52 @@ enum RelayEnd {
     Completed,
     /// Driver aborted the generation: tear down and re-join.
     Aborted,
-    /// The control connection died: nothing left to coordinate with.
+    /// Driver shut the cluster down mid-run (stale but final).
+    Shutdown,
+    /// The control connection died: re-dial the driver.
     ControlLost,
 }
 
-/// Connects with bounded-backoff retry until `timeout` elapses.
-fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
-    let deadline = Instant::now() + timeout;
-    let mut backoff = Duration::from_millis(50);
-    loop {
-        match TcpStream::connect(addr) {
-            Ok(s) => return Ok(s),
-            Err(e) => {
-                if Instant::now() + backoff >= deadline {
-                    return Err(e).with_context(|| {
-                        format!("connecting to driver {addr} (gave up after {timeout:?})")
-                    });
-                }
-                std::thread::sleep(backoff);
-                backoff = (backoff * 2).min(Duration::from_millis(500));
-            }
-        }
-    }
+/// How one control-connection session ended.
+enum LoopEnd {
+    /// Driver sent `Shutdown`: the cluster run is over.
+    Shutdown,
+    /// The control connection died mid-session: reconnect and re-join.
+    ControlLost,
+}
+
+/// Dials the driver under the shared retry policy (workers may start
+/// before the driver, and a `--resume` driver takes a moment to return).
+fn connect_control(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let policy = RetryPolicy::new(
+        Duration::from_millis(50),
+        Duration::from_millis(500),
+        timeout,
+    );
+    policy
+        .run(&mut SystemClock, |_| {
+            TcpStream::connect(addr)
+                .map_err(|e| Attempt::Retry(anyhow::Error::new(e).context("connect")))
+        })
+        .with_context(|| format!("connecting to driver {addr} (gave up after {timeout:?})"))
 }
 
 /// Sends a heartbeat if the cadence interval elapsed.
-fn maybe_heartbeat(ctrl: &Mutex<TcpStream>, last: &mut Instant) -> Result<()> {
+fn maybe_heartbeat(ctrl: &CtrlLink, last: &mut Instant) -> Result<()> {
     if last.elapsed() >= Duration::from_millis(500) {
-        control::send_frame(ctrl, &Frame::Heartbeat).context("heartbeat")?;
+        ctrl.send(&Frame::Heartbeat).context("heartbeat")?;
         *last = Instant::now();
     }
     Ok(())
 }
 
 /// Persists one completed checkpoint epoch (best-effort: a failed write
-/// costs restart depth, not the run).
+/// costs restart depth, not the run), then prunes superseded epochs so a
+/// long run does not accumulate unbounded checkpoint files.
 fn save_epoch(
     ckpt_dir: &Option<PathBuf>,
     rank: usize,
+    p: usize,
     tag: u32,
     pending: &mut HashMap<u32, Vec<Token>>,
     k: usize,
@@ -132,64 +154,97 @@ fn save_epoch(
     if let Some(dir) = ckpt_dir {
         if let Err(e) = Checkpointer::save_blocks(dir, rank, tag, &blocks, k) {
             eprintln!("dsfacto worker: checkpoint write failed at epoch {tag}: {e:#}");
+        } else if let Err(e) = Checkpointer::prune_block_epochs(dir, p, 2) {
+            eprintln!("dsfacto worker: checkpoint GC failed: {e:#}");
         }
     }
 }
 
 /// Runs the worker process until the driver shuts the cluster down (or
-/// the control channel is lost / a generation cannot be served).
+/// the control channel stays unreachable / a generation cannot be
+/// served). Each pass of the session loop is one control connection; a
+/// `ControlLost` end re-dials and re-joins (checkpoint rejoin after a
+/// driver crash + `--resume`).
 pub fn run_worker(opts: &WorkerOptions) -> Result<()> {
-    let ctrl_raw = connect_with_retry(&opts.driver_addr, opts.connect_timeout)?;
-    let _ = ctrl_raw.set_nodelay(true);
-    let _ = ctrl_raw.set_write_timeout(Some(Duration::from_secs(10)));
-    // The IP the driver (and thus the other workers) can reach us on is
-    // whatever interface this control connection went out of.
-    let local_ip = ctrl_raw.local_addr()?.ip();
+    let key = opts.cluster_secret.as_deref().map(auth::derive_key);
+    let mut session = 0u64;
+    loop {
+        if session > 0 {
+            eprintln!(
+                "dsfacto worker: control connection lost; redialing {} (session {})",
+                opts.driver_addr,
+                session + 1
+            );
+        }
+        let ctrl_raw = connect_control(&opts.driver_addr, opts.connect_timeout)?;
+        if let Err(e) = ctrl_raw.set_nodelay(true) {
+            // Latency-only concern; the connection still works.
+            eprintln!("dsfacto worker: set_nodelay failed on the control conn: {e}");
+        }
+        // A silently unset write timeout would let a wedged driver block
+        // this process forever — propagate instead of shrugging.
+        ctrl_raw
+            .set_write_timeout(Some(Duration::from_secs(10)))
+            .context("setting control write timeout")?;
+        // The IP the driver (and thus the other workers) can reach us on
+        // is whatever interface this control connection went out of.
+        let local_ip = ctrl_raw.local_addr()?.ip();
 
-    let (ctrl_tx, ctrl_rx) = channel::<CtrlEv>();
-    let ctrl_down = Arc::new(AtomicBool::new(false));
-    {
-        let mut reader = ctrl_raw.try_clone().context("cloning control stream")?;
-        reader.set_read_timeout(Some(Duration::from_millis(250)))?;
-        let tx = ctrl_tx.clone();
-        let down = Arc::clone(&ctrl_down);
-        std::thread::Builder::new()
-            .name("ctrl-read".into())
-            .spawn(move || loop {
-                match control::recv_frame(&mut reader, &down) {
-                    Ok(Some(f)) => {
-                        if tx.send(CtrlEv::Frame(f)).is_err() {
-                            return;
+        let (ctrl_tx, ctrl_rx) = channel::<CtrlEv>();
+        let ctrl_down = Arc::new(AtomicBool::new(false));
+        {
+            let mut reader = ctrl_raw.try_clone().context("cloning control stream")?;
+            reader
+                .set_read_timeout(Some(Duration::from_millis(250)))
+                .context("setting control read timeout")?;
+            let tx = ctrl_tx.clone();
+            let down = Arc::clone(&ctrl_down);
+            std::thread::Builder::new()
+                .name("ctrl-read".into())
+                .spawn(move || {
+                    let mut opener = FrameOpener::new(key, "worker control");
+                    loop {
+                        match control::recv_frame(&mut reader, &mut opener, &down) {
+                            Ok(Some(f)) => {
+                                if tx.send(CtrlEv::Frame(f)).is_err() {
+                                    return;
+                                }
+                            }
+                            Ok(None) => {
+                                if down.load(Ordering::Relaxed) {
+                                    return;
+                                }
+                            }
+                            Err(_) => {
+                                let _ = tx.send(CtrlEv::Dead);
+                                return;
+                            }
                         }
                     }
-                    Ok(None) => {
-                        if down.load(Ordering::Relaxed) {
-                            return;
-                        }
-                    }
-                    Err(_) => {
-                        let _ = tx.send(CtrlEv::Dead);
-                        return;
-                    }
-                }
-            })
-            .context("spawning control reader")?;
+                })
+                .context("spawning control reader")?;
+        }
+        drop(ctrl_tx);
+        let ctrl = CtrlLink::new(ctrl_raw, key, opts.chaos.clone());
+
+        let result = worker_loop(opts, key, &ctrl, &ctrl_rx, local_ip);
+        ctrl_down.store(true, Ordering::SeqCst);
+        match result? {
+            LoopEnd::Shutdown => return Ok(()),
+            LoopEnd::ControlLost => session += 1,
+        }
     }
-    let ctrl = Mutex::new(ctrl_raw);
-
-    let result = worker_loop(opts, &ctrl, &ctrl_rx, local_ip);
-    ctrl_down.store(true, Ordering::SeqCst);
-    result
 }
 
-/// The generation loop: join, serve, and either exit on `Shutdown` or
-/// re-join after `Abort`.
+/// The generation loop: join, serve, and either exit on `Shutdown`,
+/// re-join after `Abort`, or report `ControlLost` for a re-dial.
 fn worker_loop(
     opts: &WorkerOptions,
-    ctrl: &Mutex<TcpStream>,
+    key: Option<[u8; 32]>,
+    ctrl: &CtrlLink,
     ctrl_rx: &Receiver<CtrlEv>,
     local_ip: std::net::IpAddr,
-) -> Result<()> {
+) -> Result<LoopEnd> {
     loop {
         // Fresh ring listener per generation: the old ring's peers may
         // still be flushing frames at the old port.
@@ -197,13 +252,14 @@ fn worker_loop(
             .or_else(|_| TcpListener::bind("0.0.0.0:0"))
             .context("binding ring listener")?;
         let ring_addr = format!("{}:{}", local_ip, ring_listener.local_addr()?.port());
-        control::send_frame(
-            ctrl,
-            &Frame::Join {
+        if ctrl
+            .send(&Frame::Join {
                 ring_addr: ring_addr.clone(),
-            },
-        )
-        .context("sending Join")?;
+            })
+            .is_err()
+        {
+            return Ok(LoopEnd::ControlLost);
+        }
 
         // ---- Await Assign (tolerating one full generation of delay: a
         // replacement worker can join while the old generation is mid-run).
@@ -220,15 +276,18 @@ fn worker_loop(
                 Instant::now() < assign_deadline,
                 "no assignment from driver within the join window"
             );
-            maybe_heartbeat(ctrl, &mut last_hb)?;
+            if maybe_heartbeat(ctrl, &mut last_hb).is_err() {
+                return Ok(LoopEnd::ControlLost);
+            }
             if last_join.elapsed() >= Duration::from_secs(2) {
-                control::send_frame(
-                    ctrl,
-                    &Frame::Join {
+                if ctrl
+                    .send(&Frame::Join {
                         ring_addr: ring_addr.clone(),
-                    },
-                )
-                .context("re-sending Join")?;
+                    })
+                    .is_err()
+                {
+                    return Ok(LoopEnd::ControlLost);
+                }
                 last_join = Instant::now();
             }
             match ctrl_rx.recv_timeout(Duration::from_millis(100)) {
@@ -239,10 +298,10 @@ fn worker_loop(
                     peers,
                     config,
                 })) => break (rank as usize, p as usize, start_iter, peers, config),
-                Ok(CtrlEv::Frame(Frame::Shutdown)) => return Ok(()),
+                Ok(CtrlEv::Frame(Frame::Shutdown)) => return Ok(LoopEnd::Shutdown),
                 Ok(CtrlEv::Frame(_)) | Err(RecvTimeoutError::Timeout) => {}
                 Ok(CtrlEv::Dead) | Err(RecvTimeoutError::Disconnected) => {
-                    bail!("control connection lost while awaiting assignment")
+                    return Ok(LoopEnd::ControlLost)
                 }
             }
         };
@@ -328,6 +387,8 @@ fn worker_loop(
             peer_addrs,
             Some(k),
             Duration::from_secs(30),
+            key,
+            opts.chaos.clone(),
         )?;
 
         // ---- Arenas seeded from the (initial or restored) model.
@@ -394,7 +455,10 @@ fn worker_loop(
         };
         drop(ckpt_tx);
 
-        control::send_frame(ctrl, &Frame::Ready).context("sending Ready")?;
+        if ctrl.send(&Frame::Ready).is_err() {
+            transport.shutdown();
+            return Ok(LoopEnd::ControlLost);
+        }
 
         // ---- Await the Start barrier.
         let start_deadline = Instant::now() + opts.connect_timeout + Duration::from_secs(60);
@@ -404,7 +468,10 @@ fn worker_loop(
                 Instant::now() < start_deadline,
                 "driver never released the Start barrier"
             );
-            maybe_heartbeat(ctrl, &mut last_hb)?;
+            if maybe_heartbeat(ctrl, &mut last_hb).is_err() {
+                transport.shutdown();
+                return Ok(LoopEnd::ControlLost);
+            }
             match ctrl_rx.recv_timeout(Duration::from_millis(100)) {
                 Ok(CtrlEv::Frame(Frame::Start)) => break,
                 Ok(CtrlEv::Frame(Frame::Abort)) => {
@@ -413,11 +480,12 @@ fn worker_loop(
                 }
                 Ok(CtrlEv::Frame(Frame::Shutdown)) => {
                     transport.shutdown();
-                    return Ok(());
+                    return Ok(LoopEnd::Shutdown);
                 }
                 Ok(CtrlEv::Frame(_)) | Err(RecvTimeoutError::Timeout) => {}
                 Ok(CtrlEv::Dead) | Err(RecvTimeoutError::Disconnected) => {
-                    bail!("control connection lost at the start barrier")
+                    transport.shutdown();
+                    return Ok(LoopEnd::ControlLost);
                 }
             }
         }
@@ -441,6 +509,7 @@ fn worker_loop(
                 &shared,
                 opts,
                 rank,
+                p,
                 k,
                 t_max,
                 start_iter,
@@ -464,26 +533,32 @@ fn worker_loop(
                     match msg {
                         CkptMsg::Block(tok) => pending.entry(tok.iter).or_default().push(tok),
                         CkptMsg::EpochDone(tag) => {
-                            save_epoch(&opts.ckpt_dir, rank, tag, &mut pending, k)
+                            save_epoch(&opts.ckpt_dir, rank, p, tag, &mut pending, k)
                         }
                     }
                 }
                 let tokens = std::mem::take(&mut *shared.collector.lock().unwrap());
                 let mut buf = Vec::new();
+                let mut lost = false;
                 for tok in &tokens {
                     codec::encode_token_padded(tok, k, &mut buf);
-                    control::send_frame(ctrl, &Frame::FinalBlock { frame: buf.clone() })
-                        .context("sending a final block")?;
+                    if ctrl.send(&Frame::FinalBlock { frame: buf.clone() }).is_err() {
+                        lost = true;
+                        break;
+                    }
                 }
                 let stats = transport.stats();
-                control::send_frame(
-                    ctrl,
-                    &Frame::Done {
-                        messages: stats.messages,
-                        bytes: stats.bytes,
-                    },
-                )
-                .context("sending Done")?;
+                if lost
+                    || ctrl
+                        .send(&Frame::Done {
+                            messages: stats.messages,
+                            bytes: stats.bytes,
+                        })
+                        .is_err()
+                {
+                    transport.shutdown();
+                    return Ok(LoopEnd::ControlLost);
+                }
 
                 // Keep the ring alive until the driver confirms: peers may
                 // still be pulling their last tokens through us.
@@ -493,11 +568,14 @@ fn worker_loop(
                         Instant::now() < bye_deadline,
                         "driver never acknowledged completion"
                     );
-                    maybe_heartbeat(ctrl, &mut last_hb)?;
+                    if maybe_heartbeat(ctrl, &mut last_hb).is_err() {
+                        transport.shutdown();
+                        return Ok(LoopEnd::ControlLost);
+                    }
                     match ctrl_rx.recv_timeout(Duration::from_millis(100)) {
                         Ok(CtrlEv::Frame(Frame::Shutdown)) => {
                             transport.shutdown();
-                            return Ok(());
+                            return Ok(LoopEnd::Shutdown);
                         }
                         Ok(CtrlEv::Frame(Frame::Abort)) => {
                             transport.shutdown();
@@ -505,7 +583,8 @@ fn worker_loop(
                         }
                         Ok(CtrlEv::Frame(_)) | Err(RecvTimeoutError::Timeout) => {}
                         Ok(CtrlEv::Dead) | Err(RecvTimeoutError::Disconnected) => {
-                            bail!("control connection lost awaiting shutdown")
+                            transport.shutdown();
+                            return Ok(LoopEnd::ControlLost);
                         }
                     }
                 }
@@ -513,9 +592,13 @@ fn worker_loop(
             RelayEnd::Aborted => {
                 transport.shutdown();
             }
+            RelayEnd::Shutdown => {
+                transport.shutdown();
+                return Ok(LoopEnd::Shutdown);
+            }
             RelayEnd::ControlLost => {
                 transport.shutdown();
-                bail!("control connection to the driver was lost mid-run");
+                return Ok(LoopEnd::ControlLost);
             }
         }
     }
@@ -524,13 +607,14 @@ fn worker_loop(
 /// The mid-training relay between engine, checkpoint stream and driver.
 #[allow(clippy::too_many_arguments)]
 fn relay_loop(
-    ctrl: &Mutex<TcpStream>,
+    ctrl: &CtrlLink,
     ctrl_rx: &Receiver<CtrlEv>,
     post_rx: &Receiver<FinalizePost>,
     ckpt_rx: &Receiver<CkptMsg>,
     shared: &Shared<'_>,
     opts: &WorkerOptions,
     rank: usize,
+    p: usize,
     k: usize,
     t_max: u32,
     start_iter: u32,
@@ -545,17 +629,21 @@ fn relay_loop(
         // (An Err here is a timeout, or the engine thread quiescing.)
         if let Ok(post) = post_rx.recv_timeout(Duration::from_millis(5)) {
             finished_iters = post.iter + 1;
-            if control::send_frame(
-                ctrl,
-                &Frame::Epoch {
+            if let Some(chaos) = &opts.chaos {
+                // Scripted mid-epoch death: exit before this epoch's
+                // report reaches the driver, so recovery must come from
+                // block checkpoints, not from a graceful handoff.
+                chaos.kill_if_due(finished_iters, "worker");
+            }
+            if ctrl
+                .send(&Frame::Epoch {
                     rank: rank as u32,
                     iter: post.iter,
                     loss_sum: post.loss_sum,
                     reg_w: post.reg_w,
                     reg_v: post.reg_v,
-                },
-            )
-            .is_err()
+                })
+                .is_err()
             {
                 return Ok(RelayEnd::ControlLost);
             }
@@ -563,7 +651,7 @@ fn relay_loop(
         while let Ok(msg) = ckpt_rx.try_recv() {
             match msg {
                 CkptMsg::Block(tok) => pending.entry(tok.iter).or_default().push(tok),
-                CkptMsg::EpochDone(tag) => save_epoch(&opts.ckpt_dir, rank, tag, pending, k),
+                CkptMsg::EpochDone(tag) => save_epoch(&opts.ckpt_dir, rank, p, tag, pending, k),
             }
         }
         loop {
@@ -575,7 +663,7 @@ fn relay_loop(
                     shared.stop_at.fetch_min(at, Ordering::SeqCst);
                 }
                 Ok(CtrlEv::Frame(Frame::Abort)) => return Ok(RelayEnd::Aborted),
-                Ok(CtrlEv::Frame(Frame::Shutdown)) => return Ok(RelayEnd::ControlLost),
+                Ok(CtrlEv::Frame(Frame::Shutdown)) => return Ok(RelayEnd::Shutdown),
                 Ok(CtrlEv::Frame(_)) => {}
                 Ok(CtrlEv::Dead) | Err(TryRecvError::Disconnected) => {
                     return Ok(RelayEnd::ControlLost)

@@ -14,12 +14,19 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use super::chaos::{ChaosPlan, Scope, SendFate};
+use super::codec::{FrameOpener, FrameSealer, Opened};
+use super::retry::{Attempt, RetryPolicy, SystemClock};
 use super::{codec, LocalTransport, Transport, TransportStats};
 use crate::nomad::token::Token;
+
+/// Token frames are capped at 1 MiB; the envelope adds a small header
+/// (+ tag) on top.
+const MAX_RING_ENVELOPE: usize = (1 << 20) + 64;
 
 /// TCP loopback transport for `p` workers.
 pub struct TcpTransport {
@@ -38,6 +45,13 @@ pub struct TcpTransport {
     /// re-padded on receive, so the bytes on the socket are identical to
     /// the unpadded era. `None` = payloads are already K-strided.
     wire_k: Option<usize>,
+    /// HMAC key for the stream envelope (`None` = unauthenticated, the
+    /// in-process loopback mode).
+    key: Option<[u8; 32]>,
+    /// Scripted fault schedule applied to real socket sends only.
+    chaos: Option<Arc<ChaosPlan>>,
+    /// One envelope sealer (sequence counter) per outbound peer.
+    sealers: Vec<FrameSealer>,
     bytes: AtomicU64,
     messages: AtomicU64,
     /// Sends dropped because a peer never became reachable (or its
@@ -66,6 +80,9 @@ impl TcpTransport {
             rank: None,
             connect_deadline: Duration::from_secs(5),
             wire_k,
+            key: None,
+            chaos: None,
+            sealers: (0..p).map(|_| FrameSealer::new(None)).collect(),
             bytes: AtomicU64::new(0),
             messages: AtomicU64::new(0),
             send_failures: AtomicU64::new(0),
@@ -104,9 +121,16 @@ impl TcpTransport {
     }
 
     fn read_loop(&self, worker: usize, mut stream: TcpStream, down: Arc<AtomicBool>) {
-        stream
+        if stream
             .set_read_timeout(Some(Duration::from_millis(50)))
-            .ok();
+            .is_err()
+        {
+            // Without the timeout this reader could not poll `down` and
+            // would block forever; refuse the connection instead.
+            eprintln!("dsfacto: could not set ring read timeout; dropping connection");
+            return;
+        }
+        let mut opener = FrameOpener::new(self.key, "ring");
         let mut len_buf = [0u8; 4];
         let mut frame = Vec::new();
         while !down.load(Ordering::Relaxed) {
@@ -121,17 +145,25 @@ impl TcpTransport {
                 Err(_) => return,
             }
             let len = u32::from_le_bytes(len_buf) as usize;
-            if len > 1 << 20 {
+            if len > MAX_RING_ENVELOPE {
                 return; // corrupt frame; drop the connection
             }
             frame.resize(len, 0);
             if read_fully(&mut stream, &mut frame, &down).is_err() {
                 return;
             }
+            let body = match opener.open(&frame) {
+                Ok(Opened::Body(b)) => b,
+                // Exact retransmit (chaos dup or resend): swallow it.
+                Ok(Opened::Duplicate) => continue,
+                // Unauthenticated/tampered/garbled: rejection already
+                // counted and logged by the opener; drop the connection.
+                Err(_) => return,
+            };
             let decoded = if self.wire_k.is_some() {
-                codec::decode_token_padded(&frame)
+                codec::decode_token_padded(body)
             } else {
-                codec::decode_token(&frame)
+                codec::decode_token(body)
             };
             match decoded {
                 Ok(tok) => self.inbox.send(worker, tok),
@@ -144,13 +176,17 @@ impl TcpTransport {
     /// passed listener (bound by the caller, so its address could be
     /// announced before the peer table existed) accepts all inbound token
     /// traffic into `rank`'s inbox; `peers[d]` is where sends to rank `d`
-    /// connect. Sends to `rank` itself never touch a socket.
+    /// connect. Sends to `rank` itself never touch a socket. `key` (from
+    /// `cluster_secret`) authenticates every envelope; `chaos` is this
+    /// process's scripted fault plan.
     pub fn remote(
         rank: usize,
         listener: TcpListener,
         peers: Vec<SocketAddr>,
         wire_k: Option<usize>,
         connect_deadline: Duration,
+        key: Option<[u8; 32]>,
+        chaos: Option<Arc<ChaosPlan>>,
     ) -> Result<Arc<Self>> {
         let p = peers.len();
         anyhow::ensure!(rank < p, "rank {rank} out of range for {p} peers");
@@ -161,6 +197,9 @@ impl TcpTransport {
             rank: Some(rank),
             connect_deadline,
             wire_k,
+            key,
+            chaos,
+            sealers: (0..p).map(|_| FrameSealer::new(key)).collect(),
             bytes: AtomicU64::new(0),
             messages: AtomicU64::new(0),
             send_failures: AtomicU64::new(0),
@@ -176,6 +215,13 @@ impl TcpTransport {
                 while !down.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            if tt.chaos.as_ref().is_some_and(|c| c.refusing()) {
+                                // Scripted refusal window: reset the
+                                // connection so peers exercise their
+                                // retry policy.
+                                drop(stream);
+                                continue;
+                            }
                             stream.set_nodelay(true).ok();
                             let tt2 = Arc::clone(&tt);
                             let down2 = Arc::clone(&down);
@@ -202,30 +248,29 @@ impl TcpTransport {
         self.send_failures.load(Ordering::Relaxed)
     }
 
-    /// Connects to `dst` with bounded-backoff retry: cluster workers come
-    /// up in arbitrary order, so the first sends of a run can race the
-    /// destination's listener.
+    /// Connects to `dst` under the shared [`RetryPolicy`]: cluster
+    /// workers come up in arbitrary order, so the first sends of a run
+    /// can race the destination's listener. Shutdown aborts the retry
+    /// loop immediately.
     fn connect(&self, dst: usize) -> Result<TcpStream> {
-        let deadline = Instant::now() + self.connect_deadline;
-        let mut backoff = Duration::from_millis(10);
-        loop {
+        let policy = RetryPolicy::new(
+            Duration::from_millis(10),
+            Duration::from_millis(200),
+            self.connect_deadline,
+        )
+        .with_jitter_seed(0x7c90 + dst as u64);
+        policy.run(&mut SystemClock, |_| {
             if self.down.load(Ordering::Relaxed) {
-                anyhow::bail!("transport shut down");
+                return Err(Attempt::Abort(anyhow::anyhow!("transport shut down")));
             }
             match TcpStream::connect(self.addrs[dst]) {
                 Ok(s) => {
                     s.set_nodelay(true).ok();
-                    return Ok(s);
+                    Ok(s)
                 }
-                Err(e) => {
-                    if Instant::now() + backoff >= deadline {
-                        return Err(e).context("connect");
-                    }
-                    std::thread::sleep(backoff);
-                    backoff = (backoff * 2).min(Duration::from_millis(200));
-                }
+                Err(e) => Err(Attempt::Retry(anyhow::Error::new(e).context("connect"))),
             }
-        }
+        })
     }
 }
 
@@ -266,11 +311,22 @@ impl Transport for TcpTransport {
             Some(k) => codec::encode_token_padded(&tok, k, &mut frame),
             None => codec::encode_token(&tok, &mut frame),
         }
-        let mut msg = Vec::with_capacity(frame.len() + 4);
-        msg.extend_from_slice(&(frame.len() as u32).to_le_bytes());
-        msg.extend_from_slice(&frame);
+        let mut env = Vec::with_capacity(frame.len() + self.sealers[dst].overhead());
+        self.sealers[dst].seal(&frame, &mut env);
         self.messages.fetch_add(1, Ordering::Relaxed);
-        self.bytes.fetch_add(msg.len() as u64, Ordering::Relaxed);
+        let fate = match &self.chaos {
+            Some(c) => c.on_send(Scope::Ring),
+            None => SendFate::Deliver,
+        };
+        if fate == SendFate::Drop {
+            // Scripted loss: the sequence number is consumed, nothing is
+            // written — the receiver observes a gap.
+            return;
+        }
+        let mut msg = Vec::with_capacity(env.len() + 4);
+        msg.extend_from_slice(&(env.len() as u32).to_le_bytes());
+        msg.extend_from_slice(&env);
+        let writes = if fate == SendFate::Duplicate { 2 } else { 1 };
 
         let mut guard = self.conns[dst].lock().unwrap();
         if guard.is_none() {
@@ -284,11 +340,19 @@ impl Transport for TcpTransport {
                 }
             }
         }
+        let mut failed = false;
         if let Some(stream) = guard.as_mut() {
-            if stream.write_all(&msg).is_err() {
-                *guard = None;
-                self.send_failures.fetch_add(1, Ordering::Relaxed);
+            for _ in 0..writes {
+                if stream.write_all(&msg).is_err() {
+                    failed = true;
+                    break;
+                }
+                self.bytes.fetch_add(msg.len() as u64, Ordering::Relaxed);
             }
+        }
+        if failed {
+            *guard = None;
+            self.send_failures.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -325,6 +389,7 @@ impl Drop for TcpTransport {
 mod tests {
     use super::*;
     use crate::nomad::token::Phase;
+    use std::time::Instant;
 
     fn tok(j: u32, k: usize) -> Token {
         Token {
@@ -389,11 +454,12 @@ mod tests {
             .expect("tcp delivery");
         // Lossless round-trip including the zero padding lanes.
         assert_eq!(got, padded);
-        // The socket carried the K-strided frame (+ 4-byte length prefix),
-        // not the padded in-memory payload.
+        // The socket carried the K-strided frame (+ 4-byte length prefix
+        // + the stream envelope), not the padded in-memory payload.
         assert_eq!(
             t.stats().bytes,
-            (codec::padded_token_wire_size(&padded, k) + 4) as u64
+            (codec::padded_token_wire_size(&padded, k) + 4 + codec::envelope_overhead(false))
+                as u64
         );
         t.shutdown();
     }
@@ -410,8 +476,16 @@ mod tests {
             // dropped: the port is free (but could in principle be raced
             // away by another process — see the rebind fallback below).
         };
-        let t0 =
-            TcpTransport::remote(0, l0, vec![a0, a1], None, Duration::from_secs(10)).unwrap();
+        let t0 = TcpTransport::remote(
+            0,
+            l0,
+            vec![a0, a1],
+            None,
+            Duration::from_secs(10),
+            None,
+            None,
+        )
+        .unwrap();
         let sender = std::thread::spawn(move || {
             t0.send(1, tok(9, 4));
             t0
@@ -426,8 +500,16 @@ mod tests {
                 return;
             }
         };
-        let t1 =
-            TcpTransport::remote(1, l1, vec![a0, a1], None, Duration::from_secs(10)).unwrap();
+        let t1 = TcpTransport::remote(
+            1,
+            l1,
+            vec![a0, a1],
+            None,
+            Duration::from_secs(10),
+            None,
+            None,
+        )
+        .unwrap();
         let got = t1
             .recv_timeout(1, Duration::from_secs(10))
             .expect("late-bound peer must still receive the token");
@@ -455,8 +537,16 @@ mod tests {
             drop(tmp);
             d
         };
-        let t =
-            TcpTransport::remote(0, l, vec![a, dead], None, Duration::from_millis(120)).unwrap();
+        let t = TcpTransport::remote(
+            0,
+            l,
+            vec![a, dead],
+            None,
+            Duration::from_millis(120),
+            None,
+            None,
+        )
+        .unwrap();
         let start = Instant::now();
         t.send(1, tok(1, 2));
         assert!(
@@ -465,5 +555,55 @@ mod tests {
         );
         assert_eq!(t.send_failures(), 1);
         t.shutdown();
+    }
+
+    #[test]
+    fn keyed_ring_delivers_and_chaos_faults_are_absorbed() {
+        // Two keyed remote ranks; rank 0's chaos plan duplicates its
+        // first ring frame and drops its second. The duplicate must be
+        // deduped (delivered once) and the drop must surface as nothing
+        // but a sequence gap.
+        let key = Some(crate::cluster::auth::derive_key("ring-pw"));
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a0 = l0.local_addr().unwrap();
+        let a1 = l1.local_addr().unwrap();
+        let plan = Arc::new(ChaosPlan::parse("dup:ring:0;drop:ring:1").unwrap());
+        let t0 = TcpTransport::remote(
+            0,
+            l0,
+            vec![a0, a1],
+            None,
+            Duration::from_secs(10),
+            key,
+            Some(plan),
+        )
+        .unwrap();
+        let t1 = TcpTransport::remote(
+            1,
+            l1,
+            vec![a0, a1],
+            None,
+            Duration::from_secs(10),
+            key,
+            None,
+        )
+        .unwrap();
+
+        t0.send(1, tok(10, 2)); // duplicated on the wire, delivered once
+        t0.send(1, tok(11, 2)); // dropped on the floor
+        t0.send(1, tok(12, 2)); // delivered
+
+        let first = t1.recv_timeout(1, Duration::from_secs(10)).expect("first");
+        assert_eq!(first.j, 10);
+        let second = t1.recv_timeout(1, Duration::from_secs(10)).expect("second");
+        assert_eq!(second.j, 12, "dropped frame must not be delivered");
+        assert!(
+            t1.recv_timeout(1, Duration::from_millis(200)).is_none(),
+            "the chaos duplicate leaked through dedup"
+        );
+        assert_eq!(t0.send_failures(), 0);
+        t0.shutdown();
+        t1.shutdown();
     }
 }

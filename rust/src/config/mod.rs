@@ -26,7 +26,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::data::Task;
 use crate::fm::FmHyper;
@@ -198,6 +198,12 @@ pub struct ExperimentConfig {
     /// Multi-process cluster role for `dsfacto driver` / `dsfacto worker`
     /// (`driver:<addr>,p=<P>` or `worker:<addr>`); `None` runs in-process.
     pub cluster: Option<crate::cluster::runtime::ClusterSpec>,
+    /// Shared secret for cluster frame authentication: when set, every
+    /// control and ring frame carries an HMAC-SHA256 tag and unkeyed or
+    /// wrong-keyed peers are dropped. The driver strips this key from the
+    /// config it ships to workers — each process takes the secret from
+    /// its own command line or config file, never from the wire.
+    pub cluster_secret: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -221,6 +227,7 @@ impl Default for ExperimentConfig {
             row_partition: RowStrategy::Contiguous,
             data_cache: None,
             cluster: None,
+            cluster_secret: None,
         }
     }
 }
@@ -274,6 +281,10 @@ impl ExperimentConfig {
             "data_cache" => self.data_cache = Some(value.to_string()),
             "cluster" => {
                 self.cluster = Some(crate::cluster::runtime::ClusterSpec::parse(value)?)
+            }
+            "cluster_secret" => {
+                ensure!(!value.is_empty(), "cluster_secret must be non-empty");
+                self.cluster_secret = Some(value.to_string());
             }
             other => bail!("unknown config key {other:?}"),
         }
@@ -340,6 +351,9 @@ impl ExperimentConfig {
         }
         if let Some(cluster) = &self.cluster {
             kv.insert("cluster", cluster.spec());
+        }
+        if let Some(secret) = &self.cluster_secret {
+            kv.insert("cluster_secret", secret.clone());
         }
         kv.into_iter()
             .map(|(k, v)| format!("{k} = {v}"))
@@ -505,6 +519,20 @@ mod tests {
         assert!(ExperimentConfig::parse_str("cluster = driver:\n").is_err());
         assert!(ExperimentConfig::parse_str("cluster = driver:x:1\n").is_err());
         assert!(ExperimentConfig::parse_str("cluster = peer:x:1\n").is_err());
+    }
+
+    #[test]
+    fn dump_roundtrips_cluster_secret_key() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("cluster_secret", "hunter2 hunter2").unwrap();
+        assert_eq!(cfg.cluster_secret.as_deref(), Some("hunter2 hunter2"));
+        let back = ExperimentConfig::parse_str(&cfg.dump()).unwrap();
+        assert_eq!(back.cluster_secret, cfg.cluster_secret);
+        // Absent by default, and absent from the default dump.
+        assert_eq!(ExperimentConfig::default().cluster_secret, None);
+        assert!(!ExperimentConfig::default().dump().contains("cluster_secret"));
+        // An empty secret is a misconfiguration, not "no auth".
+        assert!(ExperimentConfig::parse_str("cluster_secret =\n").is_err());
     }
 
     #[test]

@@ -80,9 +80,12 @@ USAGE:
   dsfacto driver     [--config FILE] [--addr HOST:PORT] [--workers P]
                      [--ckpt-dir DIR] [--ckpt-every E] [--max-restarts R]
                      [--join-timeout SECS] [--heartbeat-timeout SECS]
+                     [--stall-timeout SECS] [--resume]
+                     [--cluster-secret S] [--chaos SPEC]
                      [--save-model FILE] [--quiet] [train flags...]
   dsfacto worker     --driver HOST:PORT [--data-cache DIR]
                      [--ckpt-dir DIR] [--ckpt-every E] [--connect-timeout SECS]
+                     [--cluster-secret S] [--chaos SPEC]
   dsfacto ingest     --dataset FILE --data-cache DIR [--shards P]
                      [--row-partition contiguous|balanced]
                      [--dataset-task TASK] [--n-features D] [--chunk-rows N]
@@ -125,12 +128,41 @@ CLUSTER (multi-process DS-FACTO):
   neighbors over TCP. `--addr HOST:PORT` (port 0 picks a free port — the
   bound address is printed as `dsfacto driver: control on ADDR`) is
   shorthand for the config key `cluster = driver:HOST:PORT,p=<workers>`.
-  With `--ckpt-dir`, workers write per-epoch block checkpoints and the
-  driver restarts a generation from the newest complete epoch when a
-  worker dies (detected by heartbeat silence); up to `--max-restarts`
+  With `--ckpt-dir`, workers write per-epoch block checkpoints (pruned to
+  the newest two complete epochs) and the driver restarts a generation
+  from the newest complete epoch when a worker dies (detected by
+  heartbeat silence) or the ring stalls without progress for
+  `--stall-timeout` seconds (a lost frame); up to `--max-restarts`
   restarts. With `update-mode mean` (the default) the assembled model is
   bitwise identical to a single-process `dsfacto train` run at the same
-  config.
+  config — including across restarts.
+
+CLUSTER FAULT TOLERANCE:
+  --resume           Restart a crashed DRIVER: with `--ckpt-dir`, the
+                     driver journals its control state (trace, generation
+                     count, config hash) to DIR/driver.dsfj after every
+                     aggregated iteration; a new driver started with
+                     `--resume` and the same config re-opens membership,
+                     restores the trace, and continues from the newest
+                     complete block-checkpoint epoch. Workers that lost
+                     the old driver keep re-dialing for
+                     `--connect-timeout` seconds and re-join.
+  --cluster-secret S (config key `cluster_secret`) tags every control and
+                     ring frame with HMAC-SHA256 keyed by S; frames with
+                     missing/wrong tags are rejected and the connection
+                     dropped, so an unauthenticated or wrong-secret
+                     client cannot join or corrupt a run. All processes
+                     must agree on S; the driver never ships it over the
+                     wire.
+  --chaos SPEC       (or env DSFACTO_CHAOS) deterministic fault injection
+                     for tests/benches, applied to this process only.
+                     SPEC is `;`-separated directives:
+                       drop:ring:N | drop:ctrl:N   swallow the Nth frame
+                       dup:ring:N  | dup:ctrl:N    send the Nth frame twice
+                       delay:ring:N:MS | delay:ctrl:N:MS  stall the Nth send
+                       kill:E                      exit(9) at epoch E
+                       refuse:MS                   refuse conns for MS ms
+                     e.g. --chaos 'drop:ring:7;kill:3'.
 
 Config files use the same keys with underscores (transport, update_mode,
 cols_per_token, data_cache, cluster, ...); `--config` values are
@@ -160,6 +192,7 @@ fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &mut Args) -> Result<()
         ("row-partition", "row_partition"),
         ("data-cache", "data_cache"),
         ("cluster", "cluster"),
+        ("cluster-secret", "cluster_secret"),
     ] {
         if let Some(v) = args.get(flag) {
             cfg.set(key, &v).with_context(|| format!("--{flag}"))?;
@@ -280,7 +313,10 @@ fn cmd_driver(mut args: Args) -> Result<()> {
     let ckpt_every: u32 = args.get_or("ckpt-every", 1)?;
     let join_timeout: u64 = args.get_or("join-timeout", 30)?;
     let heartbeat_timeout: u64 = args.get_or("heartbeat-timeout", 10)?;
+    let stall_timeout: u64 = args.get_or("stall-timeout", 60)?;
     let max_restarts: u32 = args.get_or("max-restarts", 3)?;
+    let resume = args.has("resume");
+    let chaos = dsfacto::cluster::chaos::ChaosPlan::from_flag_or_env(args.get("chaos").as_deref())?;
     args.finish()?;
 
     if !quiet {
@@ -293,7 +329,10 @@ fn cmd_driver(mut args: Args) -> Result<()> {
         ckpt_every,
         join_timeout: Duration::from_secs(join_timeout),
         heartbeat_timeout: Duration::from_secs(heartbeat_timeout),
+        stall_timeout: Duration::from_secs(stall_timeout),
         max_generations: max_restarts.saturating_add(1),
+        resume,
+        chaos,
         quiet,
     })?;
     println!(
@@ -321,6 +360,8 @@ fn cmd_worker(mut args: Args) -> Result<()> {
     let ckpt_dir = args.get("ckpt-dir").map(std::path::PathBuf::from);
     let ckpt_every: u32 = args.get_or("ckpt-every", 1)?;
     let connect_timeout: u64 = args.get_or("connect-timeout", 30)?;
+    let cluster_secret = args.get("cluster-secret");
+    let chaos = dsfacto::cluster::chaos::ChaosPlan::from_flag_or_env(args.get("chaos").as_deref())?;
     args.finish()?;
 
     run_worker(&WorkerOptions {
@@ -329,6 +370,8 @@ fn cmd_worker(mut args: Args) -> Result<()> {
         ckpt_dir,
         ckpt_every,
         connect_timeout: Duration::from_secs(connect_timeout),
+        cluster_secret,
+        chaos,
     })
 }
 

@@ -222,6 +222,13 @@ impl Checkpointer {
         Ok((rank, iter, tokens))
     }
 
+    /// Parses `blocks-rRRR-eEEEEE.dsfb` into `(rank, epoch)`.
+    fn parse_block_name(name: &str) -> Option<(usize, u32)> {
+        let rest = name.strip_prefix("blocks-r")?.strip_suffix(".dsfb")?;
+        let (rank, epoch) = rest.split_once("-e")?;
+        Some((rank.parse().ok()?, epoch.parse().ok()?))
+    }
+
     /// The newest epoch tag for which **all** `p` rank files exist in
     /// `dir` — the restart point checkpoint-recovery agrees on. `None` if
     /// the directory is missing or no epoch is complete (a crash can
@@ -238,15 +245,7 @@ impl Checkpointer {
             let Ok(entry) = entry else { continue };
             let name = entry.file_name();
             let Some(name) = name.to_str() else { continue };
-            // blocks-rRRR-eEEEEE.dsfb
-            let Some(rest) = name.strip_prefix("blocks-r").and_then(|s| s.strip_suffix(".dsfb"))
-            else {
-                continue;
-            };
-            let Some((rank, epoch)) = rest.split_once("-e") else { continue };
-            let (Ok(rank), Ok(epoch)) = (rank.parse::<usize>(), epoch.parse::<u32>()) else {
-                continue;
-            };
+            let Some((rank, epoch)) = Self::parse_block_name(name) else { continue };
             if rank < p {
                 *per_epoch.entry(epoch).or_insert(0) += 1;
             }
@@ -256,6 +255,52 @@ impl Checkpointer {
             .filter(|&(_, have)| have == p)
             .map(|(epoch, _)| epoch)
             .max())
+    }
+
+    /// Checkpoint GC: removes block files of epochs superseded by the
+    /// newest `keep` *complete* epochs (all `p` rank files present), so a
+    /// long run holds a bounded number of checkpoint files instead of one
+    /// set per epoch. Epochs at or above the cutoff — including
+    /// incomplete ones still being written — are never touched, and
+    /// removals are best-effort (a sibling worker process GC-ing the same
+    /// directory concurrently must not fail the caller). Returns the
+    /// number of files removed.
+    pub fn prune_block_epochs(dir: &Path, p: usize, keep: usize) -> anyhow::Result<usize> {
+        use std::collections::HashMap;
+        anyhow::ensure!(keep >= 1, "prune_block_epochs must keep at least one epoch");
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(_) => return Ok(0),
+        };
+        let mut files: Vec<(u32, PathBuf)> = Vec::new();
+        let mut per_epoch: HashMap<u32, usize> = HashMap::new();
+        for entry in entries {
+            let Ok(entry) = entry else { continue };
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some((rank, epoch)) = Self::parse_block_name(name) else { continue };
+            if rank < p {
+                *per_epoch.entry(epoch).or_insert(0) += 1;
+            }
+            files.push((epoch, entry.path()));
+        }
+        let mut complete: Vec<u32> = per_epoch
+            .into_iter()
+            .filter(|&(_, have)| have == p)
+            .map(|(epoch, _)| epoch)
+            .collect();
+        complete.sort_unstable();
+        if complete.len() <= keep {
+            return Ok(0);
+        }
+        let cutoff = complete[complete.len() - keep];
+        let mut removed = 0usize;
+        for (epoch, path) in files {
+            if epoch < cutoff && std::fs::remove_file(&path).is_ok() {
+                removed += 1;
+            }
+        }
+        Ok(removed)
     }
 }
 
@@ -464,6 +509,31 @@ mod tests {
         assert_eq!(Checkpointer::latest_block_epoch(&dir, 1).unwrap(), Some(6));
         let missing = dir.join("no_such_subdir");
         assert_eq!(Checkpointer::latest_block_epoch(&missing, 2).unwrap(), None);
+
+        // ---- GC. Only one complete epoch (4) at p=2: nothing prunable,
+        // and the incomplete epoch-6 file must survive untouched.
+        assert_eq!(Checkpointer::prune_block_epochs(&dir, 2, 2).unwrap(), 0);
+        assert_eq!(Checkpointer::latest_block_epoch(&dir, 2).unwrap(), Some(4));
+        // Complete epochs 2 and 8 as well; keep=2 then drops every file
+        // below the second-newest complete epoch (4): both epoch-2 files.
+        Checkpointer::save_blocks(&dir, 0, 2, &[], k).unwrap();
+        Checkpointer::save_blocks(&dir, 1, 2, &[], k).unwrap();
+        Checkpointer::save_blocks(&dir, 0, 8, &[], k).unwrap();
+        Checkpointer::save_blocks(&dir, 1, 8, &[], k).unwrap();
+        assert_eq!(Checkpointer::prune_block_epochs(&dir, 2, 2).unwrap(), 2);
+        assert_eq!(Checkpointer::latest_block_epoch(&dir, 2).unwrap(), Some(8));
+        // Epoch 4 (the keep-floor) and the incomplete epoch 6 both remain;
+        // the pruned epoch 2 is gone. Restart data stays loadable.
+        assert!(dir.join(Checkpointer::block_file_name(0, 4)).exists());
+        assert!(dir.join(Checkpointer::block_file_name(0, 6)).exists());
+        assert!(!dir.join(Checkpointer::block_file_name(0, 2)).exists());
+        assert!(!dir.join(Checkpointer::block_file_name(1, 2)).exists());
+        let (_, _, back) = Checkpointer::load_blocks(&p0).unwrap();
+        assert_eq!(back, r0, "GC must not disturb kept epochs");
+        // Idempotent: a second sweep finds nothing below the cutoff.
+        assert_eq!(Checkpointer::prune_block_epochs(&dir, 2, 2).unwrap(), 0);
+        // Keeping fewer than one epoch is a caller bug, not a silent wipe.
+        assert!(Checkpointer::prune_block_epochs(&dir, 2, 0).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

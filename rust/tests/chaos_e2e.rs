@@ -1,0 +1,485 @@
+//! Chaos end-to-end tests: real `dsfacto driver` + `dsfacto worker` OS
+//! processes under **deterministic scripted fault injection**
+//! (`DSFACTO_CHAOS`), checked against the in-process engine.
+//!
+//! The recovery oracle is the same bitwise one the clean cluster suite
+//! uses: under `update_mode = mean` the engine's deferred-sorted
+//! recompute fold is arrival-order independent, so whatever the schedule
+//! of drops, duplicates, kills and driver restarts, a run that *recovers*
+//! must assemble the exact in-process model — not an approximation of it.
+//!
+//! Covered here: a duplicated and a dropped ring frame (dedup + stall
+//! detection + checkpoint restart), a worker scripted to die mid-epoch, a
+//! driver kill followed by `--resume` rejoin from its journal, and an
+//! unauthenticated client knocking on a keyed control port.
+
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use dsfacto::config::{ExperimentConfig, TrainerKind};
+use dsfacto::data::cache::{write_cache, ShardCacheSource};
+use dsfacto::data::synth::table2_dataset;
+use dsfacto::data::DataSource;
+use dsfacto::partition::RowStrategy;
+use dsfacto::train::Trainer;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_dsfacto")
+}
+
+/// A spawned dsfacto process, killed on drop so a failed assertion never
+/// leaks children past the test run. Unlike the clean-cluster harness,
+/// this one can carry per-process environment (the chaos schedule).
+struct Proc {
+    child: Child,
+    name: String,
+}
+
+impl Proc {
+    fn spawn(name: &str, args: &[&str], envs: &[(&str, &str)], capture_stdout: bool) -> Proc {
+        let mut cmd = Command::new(bin());
+        cmd.args(args)
+            .current_dir(env!("CARGO_MANIFEST_DIR"))
+            .stdin(Stdio::null())
+            .stdout(if capture_stdout {
+                Stdio::piped()
+            } else {
+                Stdio::null()
+            });
+        for (k, v) in envs {
+            cmd.env(k, v);
+        }
+        let child = cmd.spawn().unwrap_or_else(|e| panic!("spawn {name}: {e}"));
+        Proc {
+            child,
+            name: name.to_string(),
+        }
+    }
+
+    /// Streams this process's stdout lines into a shared buffer from a
+    /// background thread (so the pipe never fills and blocks the child).
+    fn capture_lines(&mut self) -> Arc<Mutex<Vec<String>>> {
+        let stdout = self.child.stdout.take().expect("stdout not piped");
+        let lines = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&lines);
+        std::thread::spawn(move || {
+            for line in std::io::BufReader::new(stdout).lines() {
+                match line {
+                    Ok(l) => sink.lock().unwrap().push(l),
+                    Err(_) => break,
+                }
+            }
+        });
+        lines
+    }
+
+    /// Waits for exit within `timeout`; panics on timeout, returns the
+    /// success flag otherwise.
+    fn wait_ok(&mut self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(status) = self.child.try_wait().expect("try_wait") {
+                return status.success();
+            }
+            assert!(
+                Instant::now() < deadline,
+                "{} did not exit within {timeout:?}",
+                self.name
+            );
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Blocks until some captured line satisfies `pred` (scanning new lines
+/// as they stream in), returning the matching line.
+fn wait_for_line(
+    lines: &Arc<Mutex<Vec<String>>>,
+    what: &str,
+    timeout: Duration,
+    pred: impl Fn(&str) -> bool,
+) -> String {
+    let deadline = Instant::now() + timeout;
+    let mut scanned = 0usize;
+    loop {
+        {
+            let buf = lines.lock().unwrap();
+            while scanned < buf.len() {
+                if pred(&buf[scanned]) {
+                    return buf[scanned].clone();
+                }
+                scanned += 1;
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "never saw {what}; driver output so far: {:#?}",
+            lines.lock().unwrap()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Extracts the bound control address from the driver's
+/// `dsfacto driver: control on ADDR` line.
+fn control_addr(lines: &Arc<Mutex<Vec<String>>>) -> String {
+    let line = wait_for_line(lines, "the control-on line", Duration::from_secs(60), |l| {
+        l.contains("control on ")
+    });
+    line.split("control on ")
+        .nth(1)
+        .expect("address after 'control on '")
+        .trim()
+        .to_string()
+}
+
+/// Matches the driver's per-iteration progress line for iter >= `min`.
+fn iter_line_at_least(min: u32) -> impl Fn(&str) -> bool {
+    move |l: &str| {
+        l.trim_start()
+            .strip_prefix("iter")
+            .and_then(|rest| rest.trim_start().split_whitespace().next())
+            .and_then(|n| n.parse::<u32>().ok())
+            .is_some_and(|n| n >= min)
+    }
+}
+
+/// The in-process reference run at the exact schedule the driver ships to
+/// its workers (same seed, eta, token width, partition — same everything).
+fn inprocess_model(cache: &str, p: usize, iters: usize, seed: u64) -> dsfacto::fm::FmModel {
+    let mut cfg = ExperimentConfig::default();
+    for (key, val) in [
+        ("dataset", format!("cache:{cache}")),
+        ("data_cache", cache.to_string()),
+        ("workers", p.to_string()),
+        ("outer_iters", iters.to_string()),
+        ("eta", "constant:0.5".to_string()),
+        ("seed", seed.to_string()),
+        ("cols_per_token", "5".to_string()),
+        ("train_frac", "1".to_string()),
+    ] {
+        cfg.set(key, &val).unwrap();
+    }
+    let ds = ShardCacheSource::open(cache).unwrap().materialize().unwrap();
+    let out = TrainerKind::Nomad
+        .build(&cfg)
+        .fit(&ds, None, &mut ())
+        .unwrap();
+    out.model
+}
+
+fn setup_cache(tag: &str, seed: u64, shards: usize) -> (std::path::PathBuf, String) {
+    let base = std::env::temp_dir().join(format!("dsfacto_chaos_{tag}"));
+    std::fs::remove_dir_all(&base).ok();
+    std::fs::create_dir_all(&base).unwrap();
+    let cache = base.join("cache");
+    let ds = table2_dataset("housing", seed).unwrap();
+    write_cache(&ds, RowStrategy::Contiguous, shards, &cache).unwrap();
+    let cache_s = cache.to_str().unwrap().to_string();
+    (base, cache_s)
+}
+
+/// Driver args shared by every scenario (schedule must match
+/// [`inprocess_model`]).
+fn driver_args<'a>(
+    dataset: &'a str,
+    iters: &'a str,
+    seed: &'a str,
+    ckpt: &'a str,
+    model: &'a str,
+) -> Vec<&'a str> {
+    vec![
+        "driver",
+        "--dataset",
+        dataset,
+        "--workers",
+        "2",
+        "--outer-iters",
+        iters,
+        "--eta",
+        "constant:0.5",
+        "--seed",
+        seed,
+        "--cols-per-token",
+        "5",
+        "--train-frac",
+        "1",
+        "--ckpt-dir",
+        ckpt,
+        "--ckpt-every",
+        "1",
+        "--save-model",
+        model,
+    ]
+}
+
+fn assert_bitwise(model_path: &std::path::Path, cache: &str, iters: usize, seed: u64) {
+    let cluster = dsfacto::fm::io::load(model_path).unwrap();
+    let reference = inprocess_model(cache, 2, iters, seed);
+    assert_eq!(
+        cluster, reference,
+        "faulted-but-recovered model differs from the in-process engine"
+    );
+}
+
+/// One dropped and one duplicated ring frame. The duplicate is absorbed
+/// by the envelope's sequence dedup (no restart); the drop starves the
+/// ring of a token, heartbeats keep flowing, and only the driver's
+/// *stall* detector can notice — it aborts the generation and restarts
+/// from the newest complete block checkpoint. Either way the final model
+/// must be bitwise the in-process one.
+#[test]
+fn dropped_and_duplicated_ring_frames_recover_bitwise() {
+    let (base, cache) = setup_cache("dropdup", 23, 2);
+    let ckpt_s = base.join("ckpt").to_str().unwrap().to_string();
+    let model_path = base.join("model.dsfm");
+    let model_s = model_path.to_str().unwrap().to_string();
+    let dataset = format!("cache:{cache}");
+
+    let mut args = driver_args(&dataset, "4", "23", &ckpt_s, &model_s);
+    args.extend_from_slice(&[
+        "--addr",
+        "127.0.0.1:0",
+        "--stall-timeout",
+        "3",
+        "--max-restarts",
+        "3",
+    ]);
+    let mut driver = Proc::spawn("driver", &args, &[], true);
+    let lines = driver.capture_lines();
+    let addr = control_addr(&lines);
+
+    let worker_args = [
+        "worker",
+        "--driver",
+        addr.as_str(),
+        "--ckpt-dir",
+        ckpt_s.as_str(),
+        "--ckpt-every",
+        "1",
+    ];
+    // worker-a duplicates its 3rd remote ring frame; worker-b swallows
+    // its 6th. Both schedules are deterministic per process.
+    let chaos_dup = [("DSFACTO_CHAOS", "dup:ring:2")];
+    let chaos_drop = [("DSFACTO_CHAOS", "drop:ring:5")];
+    let mut worker_a = Proc::spawn("worker-a", &worker_args, &chaos_dup, false);
+    let mut worker_b = Proc::spawn("worker-b", &worker_args, &chaos_drop, false);
+
+    // The dropped token stalls the ring; the stall detector must restart
+    // the generation (both workers survive and re-join).
+    wait_for_line(
+        &lines,
+        "the stall-restart marker",
+        Duration::from_secs(120),
+        |l| l.contains("restarting from iteration"),
+    );
+    assert!(
+        driver.wait_ok(Duration::from_secs(180)),
+        "driver failed; output: {:#?}",
+        lines.lock().unwrap()
+    );
+    assert!(worker_a.wait_ok(Duration::from_secs(60)), "worker-a failed");
+    assert!(worker_b.wait_ok(Duration::from_secs(60)), "worker-b failed");
+
+    assert_bitwise(&model_path, &cache, 4, 23);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// A worker scripted to exit(9) mid-epoch — after finalizing iteration 3
+/// but *before* reporting it — so the driver sees a dead member and must
+/// restart the generation from block checkpoints with a replacement.
+#[test]
+fn scripted_worker_kill_recovers_bitwise() {
+    let (base, cache) = setup_cache("kill", 17, 2);
+    let ckpt_s = base.join("ckpt").to_str().unwrap().to_string();
+    let model_path = base.join("model.dsfm");
+    let model_s = model_path.to_str().unwrap().to_string();
+    let dataset = format!("cache:{cache}");
+
+    let mut args = driver_args(&dataset, "6", "17", &ckpt_s, &model_s);
+    args.extend_from_slice(&[
+        "--addr",
+        "127.0.0.1:0",
+        "--heartbeat-timeout",
+        "2",
+        "--max-restarts",
+        "2",
+    ]);
+    let mut driver = Proc::spawn("driver", &args, &[], true);
+    let lines = driver.capture_lines();
+    let addr = control_addr(&lines);
+
+    let worker_args = [
+        "worker",
+        "--driver",
+        addr.as_str(),
+        "--ckpt-dir",
+        ckpt_s.as_str(),
+        "--ckpt-every",
+        "1",
+    ];
+    let chaos_kill = [("DSFACTO_CHAOS", "kill:3")];
+    let mut worker_a = Proc::spawn("worker-a", &worker_args, &[], false);
+    let mut worker_b = Proc::spawn("worker-b", &worker_args, &chaos_kill, false);
+
+    wait_for_line(
+        &lines,
+        "the generation-restart marker",
+        Duration::from_secs(120),
+        |l| l.contains("restarting from iteration"),
+    );
+    // The scripted kill really did exit with the chaos status, not a
+    // clean shutdown.
+    assert!(!worker_b.wait_ok(Duration::from_secs(10)), "worker-b should die");
+    let mut worker_c = Proc::spawn("worker-c", &worker_args, &[], false);
+
+    assert!(
+        driver.wait_ok(Duration::from_secs(180)),
+        "driver failed after recovery; output: {:#?}",
+        lines.lock().unwrap()
+    );
+    assert!(worker_a.wait_ok(Duration::from_secs(60)), "survivor failed");
+    assert!(worker_c.wait_ok(Duration::from_secs(60)), "replacement failed");
+
+    assert_bitwise(&model_path, &cache, 6, 17);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Kill the DRIVER mid-run, then bring up a new one on the same address
+/// with `--resume`: it restores the trace from its journal, the orphaned
+/// workers re-dial and re-join, and the run finishes from the newest
+/// complete checkpoint epoch — bitwise the in-process model.
+#[test]
+fn driver_kill_and_resume_rejoins_bitwise() {
+    let (base, cache) = setup_cache("resume", 7, 2);
+    let ckpt_s = base.join("ckpt").to_str().unwrap().to_string();
+    let model_path = base.join("model.dsfm");
+    let model_s = model_path.to_str().unwrap().to_string();
+    let dataset = format!("cache:{cache}");
+
+    let mut args = driver_args(&dataset, "8", "7", &ckpt_s, &model_s);
+    args.extend_from_slice(&["--addr", "127.0.0.1:0"]);
+    let mut driver = Proc::spawn("driver", &args, &[], true);
+    let lines = driver.capture_lines();
+    let addr = control_addr(&lines);
+
+    // Generous connect timeout: the workers must outlive the driver gap
+    // and keep re-dialing until the resumed driver binds.
+    let worker_args = [
+        "worker",
+        "--driver",
+        addr.as_str(),
+        "--ckpt-dir",
+        ckpt_s.as_str(),
+        "--ckpt-every",
+        "1",
+        "--connect-timeout",
+        "60",
+    ];
+    let mut worker_a = Proc::spawn("worker-a", &worker_args, &[], false);
+    let mut worker_b = Proc::spawn("worker-b", &worker_args, &[], false);
+
+    // Let the journal accumulate some aggregated iterations, then kill
+    // the driver outright (no Shutdown, no Abort — a real crash).
+    wait_for_line(&lines, "iteration 3", Duration::from_secs(120), iter_line_at_least(3));
+    driver.kill();
+
+    // Same experiment, same (now free) address, --resume.
+    let mut args2 = driver_args(&dataset, "8", "7", &ckpt_s, &model_s);
+    args2.extend_from_slice(&["--addr", addr.as_str(), "--resume"]);
+    let mut driver2 = Proc::spawn("driver-2", &args2, &[], true);
+    let lines2 = driver2.capture_lines();
+    wait_for_line(
+        &lines2,
+        "the journal-resume marker",
+        Duration::from_secs(60),
+        |l| l.contains("resuming from journal"),
+    );
+
+    assert!(
+        driver2.wait_ok(Duration::from_secs(180)),
+        "resumed driver failed; output: {:#?}",
+        lines2.lock().unwrap()
+    );
+    assert!(worker_a.wait_ok(Duration::from_secs(120)), "worker-a failed");
+    assert!(worker_b.wait_ok(Duration::from_secs(120)), "worker-b failed");
+
+    assert_bitwise(&model_path, &cache, 8, 7);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// With `--cluster-secret` set, an unauthenticated client knocking on the
+/// control port gets its frames rejected and its connection dropped — and
+/// the keyed cluster around it completes bitwise, undisturbed.
+#[test]
+fn unauthenticated_knock_is_dropped_and_the_keyed_run_completes() {
+    use std::io::{Read, Write};
+
+    let (base, cache) = setup_cache("knock", 41, 2);
+    let ckpt_s = base.join("ckpt").to_str().unwrap().to_string();
+    let model_path = base.join("model.dsfm");
+    let model_s = model_path.to_str().unwrap().to_string();
+    let dataset = format!("cache:{cache}");
+
+    let mut args = driver_args(&dataset, "3", "41", &ckpt_s, &model_s);
+    args.extend_from_slice(&["--addr", "127.0.0.1:0", "--cluster-secret", "rfc4231"]);
+    let mut driver = Proc::spawn("driver", &args, &[], true);
+    let lines = driver.capture_lines();
+    let addr = control_addr(&lines);
+
+    // The knocker: a well-formed length prefix carrying an UNSIGNED
+    // envelope (magic right, auth flag clear). A keyed driver must reject
+    // it for the missing tag and hang up.
+    let mut knock = std::net::TcpStream::connect(&addr).unwrap();
+    let env = [0xfcu8, 0xd5, 0, 0, 0, 0, 0, 0, 0, 0, 0, 1]; // magic|flags=0|seq=0|1 junk byte
+    let mut msg = (env.len() as u32).to_le_bytes().to_vec();
+    msg.extend_from_slice(&env);
+    knock.write_all(&msg).unwrap();
+    knock.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut sink = [0u8; 16];
+    match knock.read(&mut sink) {
+        Ok(0) => {} // EOF: the driver hung up, as it must.
+        Ok(n) => panic!("driver sent {n} bytes to an unauthenticated client"),
+        // A reset is a hang-up too; only silence (a read timeout) fails.
+        Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset => {}
+        Err(e) => panic!("driver kept the unauthenticated connection open: {e}"),
+    }
+    drop(knock);
+
+    let worker_args = [
+        "worker",
+        "--driver",
+        addr.as_str(),
+        "--cluster-secret",
+        "rfc4231",
+        "--ckpt-dir",
+        ckpt_s.as_str(),
+    ];
+    let mut worker_a = Proc::spawn("worker-a", &worker_args, &[], false);
+    let mut worker_b = Proc::spawn("worker-b", &worker_args, &[], false);
+
+    assert!(
+        driver.wait_ok(Duration::from_secs(180)),
+        "keyed driver failed; output: {:#?}",
+        lines.lock().unwrap()
+    );
+    assert!(worker_a.wait_ok(Duration::from_secs(60)), "worker-a failed");
+    assert!(worker_b.wait_ok(Duration::from_secs(60)), "worker-b failed");
+
+    assert_bitwise(&model_path, &cache, 3, 41);
+    std::fs::remove_dir_all(&base).ok();
+}

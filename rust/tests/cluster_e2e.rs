@@ -256,7 +256,10 @@ fn driver_rejects_fractional_train_split() {
         ckpt_every: 1,
         join_timeout: Duration::from_secs(1),
         heartbeat_timeout: Duration::from_secs(1),
+        stall_timeout: Duration::from_secs(60),
         max_generations: 1,
+        resume: false,
+        chaos: None,
         quiet: true,
     })
     .expect_err("train_frac = 0.5 must be rejected");
