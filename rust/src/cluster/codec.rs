@@ -19,6 +19,20 @@
 //! `nv / nw`). [`encode_token`] / [`decode_token`] stay layout-agnostic:
 //! they move `v` verbatim, which is also correct whenever `k` is already
 //! a lane multiple.
+//!
+//! ## bf16 token wires
+//!
+//! With [`WirePrecision::Bf16`] the ring transport swaps in the bf16
+//! body codec ([`encode_token_bf16`] / [`decode_token_bf16`]): the same
+//! header with a distinct magic (`0xDB16`), and **both** the `w` and the
+//! K-stripped `v` payloads carried as bfloat16 (`u16` LE) — the top 16
+//! bits of the f32 pattern, converted with round-to-nearest-even
+//! ([`f32_to_bf16`]). bf16 keeps f32's exponent range, so values map
+//! exactly when bf16-representable (±0, ±inf included; NaNs stay NaN)
+//! and within `2^-8` relative error otherwise. The halved payload applies
+//! only to ring token hops: control frames, `FinalBlock` model frames and
+//! block checkpoints stay f32. Both ends must agree on the precision —
+//! the Join/Assign handshake enforces that (`cluster::runtime`).
 
 //! ## Stream envelope
 //!
@@ -44,6 +58,86 @@ use crate::kernel::padded_k;
 use crate::nomad::token::{Phase, Token};
 
 const MAGIC: u16 = 0xD5FA;
+
+/// Body magic of the bf16 token frame — distinct from the f32 token
+/// (`0xD5FA`) so a precision-mismatched peer fails loudly at decode
+/// instead of misparsing payload bytes.
+const MAGIC_BF16: u16 = 0xDB16;
+
+/// Precision of the ring token payloads on the wire. Negotiated at Join:
+/// driver and workers must agree or the worker is rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WirePrecision {
+    /// Full f32 payloads (the default, bitwise-exact wire).
+    #[default]
+    F32,
+    /// bfloat16 payloads: half the token bytes, `<= 2^-8` relative
+    /// mantissa error per value, full f32 exponent range.
+    Bf16,
+}
+
+impl WirePrecision {
+    /// Stable lowercase name (config value, CLI flag value, logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            WirePrecision::F32 => "f32",
+            WirePrecision::Bf16 => "bf16",
+        }
+    }
+
+    /// Parses a config/CLI value.
+    pub fn parse(s: &str) -> Result<WirePrecision> {
+        match s {
+            "f32" => Ok(WirePrecision::F32),
+            "bf16" => Ok(WirePrecision::Bf16),
+            other => bail!("wire_precision must be f32 or bf16, got {other:?}"),
+        }
+    }
+
+    /// The single-byte wire tag (Join handshake field).
+    pub fn to_byte(self) -> u8 {
+        match self {
+            WirePrecision::F32 => 0,
+            WirePrecision::Bf16 => 1,
+        }
+    }
+
+    /// Inverse of [`to_byte`](WirePrecision::to_byte).
+    pub fn from_byte(b: u8) -> Result<WirePrecision> {
+        match b {
+            0 => Ok(WirePrecision::F32),
+            1 => Ok(WirePrecision::Bf16),
+            other => bail!("unknown wire_precision byte {other}"),
+        }
+    }
+}
+
+/// f32 → bfloat16 with round-to-nearest-even: the value whose top 16
+/// bits survive is the nearest bf16, ties to even mantissa. NaN payloads
+/// are truncated but never rounded (a NaN can not become Inf); a NaN
+/// whose surviving mantissa bits would be zero gets the quiet bit forced
+/// so it stays NaN.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        let mut h = (bits >> 16) as u16;
+        if h & 0x007f == 0 {
+            h |= 0x0040;
+        }
+        return h;
+    }
+    // Round-to-nearest-even on the truncated 16 bits: add 0x7fff plus
+    // the lowest surviving bit, then shift. Finite values that overflow
+    // bf16's (identical) exponent range round to ±inf, exactly as IEEE
+    // RNE prescribes.
+    let round = 0x7fff + ((bits >> 16) & 1);
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// bfloat16 → f32 (exact: bf16 values are a subset of f32).
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
 
 /// Envelope magic, distinct from both the token (`0xD5FA`) and control
 /// (`0xD5FB`) body magics so a peer speaking the pre-envelope protocol
@@ -367,6 +461,115 @@ pub fn decode_token_padded(buf: &[u8]) -> Result<Token> {
     Ok(Token { v, ..tok })
 }
 
+/// Wire size of a lane-padded in-memory token under the bf16 codec: the
+/// same header, both payloads at 2 bytes per value (the factor rows
+/// K-stripped first, as in [`padded_token_wire_size`]).
+pub fn token_wire_size_bf16(tok: &Token, k: usize) -> usize {
+    let kp = padded_k(k);
+    let stripped = if kp == 0 { 0 } else { (tok.v.len() / kp) * k };
+    WIRE_HDR + 2 * tok.w.len() + 2 * stripped
+}
+
+/// Serializes a lane-padded in-memory token into the **bf16** wire form:
+/// the [`encode_token_padded`] frame with magic `0xDB16` and every `w` /
+/// K-stripped `v` value converted to bfloat16 (`u16` LE). Lossy by
+/// design (see the module docs for the error contract); the `nw`/`nv`
+/// counts still count *values*, not bytes.
+pub fn encode_token_bf16(tok: &Token, k: usize, out: &mut Vec<u8>) {
+    let kp = padded_k(k);
+    debug_assert_eq!(
+        tok.v.len(),
+        tok.ncols() * kp,
+        "token payload is not {kp}-padded"
+    );
+    let ncols = tok.ncols();
+    out.clear();
+    out.reserve(token_wire_size_bf16(tok, k));
+    out.extend_from_slice(&MAGIC_BF16.to_le_bytes());
+    out.extend_from_slice(&tok.j.to_le_bytes());
+    out.extend_from_slice(&tok.iter.to_le_bytes());
+    out.push(match tok.phase {
+        Phase::Update => 0,
+        Phase::Recompute => 1,
+    });
+    out.extend_from_slice(&tok.visits.to_le_bytes());
+    out.extend_from_slice(&(tok.w.len() as u32).to_le_bytes());
+    out.extend_from_slice(&((ncols * k) as u32).to_le_bytes());
+    for &x in tok.w.iter() {
+        out.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
+    }
+    if !tok.v.is_empty() {
+        for bi in 0..ncols {
+            for &x in &tok.vrow(bi, kp)[..k] {
+                out.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Deserializes a bf16 wire frame into the lane-padded in-memory layout
+/// (widening every value back to f32; `k` recovered as `nv / nw`, rows
+/// re-dealt to `padded_k(k)` stride with zero padding lanes). Inverse of
+/// [`encode_token_bf16`] up to the bf16 quantization applied on encode —
+/// a decoded token re-encodes to the identical frame.
+pub fn decode_token_bf16(buf: &[u8]) -> Result<Token> {
+    const HDR: usize = WIRE_HDR;
+    if buf.len() < HDR {
+        bail!("bf16 token frame too short: {} bytes", buf.len());
+    }
+    let magic = u16::from_le_bytes([buf[0], buf[1]]);
+    if magic != MAGIC_BF16 {
+        bail!("bad bf16 token magic {magic:#06x} (precision mismatch with the sender?)");
+    }
+    let j = u32::from_le_bytes(buf[2..6].try_into().unwrap());
+    let iter = u32::from_le_bytes(buf[6..10].try_into().unwrap());
+    let phase = match buf[10] {
+        0 => Phase::Update,
+        1 => Phase::Recompute,
+        other => bail!("bad phase byte {other}"),
+    };
+    let visits = u16::from_le_bytes([buf[11], buf[12]]);
+    let nw = u32::from_le_bytes(buf[13..17].try_into().unwrap()) as usize;
+    let nv = u32::from_le_bytes(buf[17..21].try_into().unwrap()) as usize;
+    if nw > (1 << 24) || nv > (1 << 28) {
+        bail!("token block implausibly large: nw={nw} nv={nv}");
+    }
+    let need = HDR + 2 * (nw + nv);
+    if buf.len() != need {
+        bail!("bf16 token frame length {} != expected {need}", buf.len());
+    }
+    let mut w = vec![0f32; nw].into_boxed_slice();
+    for (i, chunk) in buf[HDR..HDR + 2 * nw].chunks_exact(2).enumerate() {
+        w[i] = bf16_to_f32(u16::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    if nv == 0 {
+        return Ok(Token {
+            j,
+            iter,
+            phase,
+            visits,
+            w,
+            v: Box::from([]),
+        });
+    }
+    ensure!(nw > 0 && nv % nw == 0, "cannot infer factor width: nv={nv} nw={nw}");
+    let k = nv / nw;
+    let kp = padded_k(k);
+    let mut v = vec![0f32; nw * kp].into_boxed_slice();
+    for (i, chunk) in buf[HDR + 2 * nw..].chunks_exact(2).enumerate() {
+        let (bi, kk) = (i / k, i % k);
+        v[bi * kp + kk] = bf16_to_f32(u16::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(Token {
+        j,
+        iter,
+        phase,
+        visits,
+        w,
+        v,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -546,6 +749,157 @@ mod tests {
         env[2] = 0x80; // unknown flag bit
         assert!(opener.open(&env).is_err());
         assert_eq!(opener.rejected(), 3);
+    }
+
+    #[test]
+    fn wire_precision_parses_names_and_bytes() {
+        for p in [WirePrecision::F32, WirePrecision::Bf16] {
+            assert_eq!(WirePrecision::parse(p.name()).unwrap(), p);
+            assert_eq!(WirePrecision::from_byte(p.to_byte()).unwrap(), p);
+        }
+        assert_eq!(WirePrecision::default(), WirePrecision::F32);
+        assert!(WirePrecision::parse("f16").is_err());
+        assert!(WirePrecision::from_byte(7).is_err());
+    }
+
+    #[test]
+    fn bf16_is_exact_for_representable_values() {
+        // Anything whose f32 bits have a zero low half is a bf16 value
+        // and must survive the round-trip bit-for-bit.
+        for x in [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            0.5,
+            -2.0,
+            1.984375, // 0x3FFE0000: all 7 explicit bf16 mantissa bits set
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::from_bits(0x0080_0000), // smallest normal
+            f32::from_bits(0x7f7f_0000), // largest bf16 finite
+        ] {
+            let back = bf16_to_f32(f32_to_bf16(x));
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} not preserved");
+        }
+        // NaN stays NaN and keeps its surviving payload bits; a NaN whose
+        // top mantissa bits are all zero must not collapse to Inf.
+        let quiet = f32::from_bits(0x7fc1_2345);
+        let h = f32_to_bf16(quiet);
+        assert_eq!(h, 0x7fc1);
+        assert!(bf16_to_f32(h).is_nan());
+        let low_payload_nan = f32::from_bits(0x7f80_0001);
+        assert!(bf16_to_f32(f32_to_bf16(low_payload_nan)).is_nan());
+        let neg_nan = f32::from_bits(0xff80_0001);
+        assert!(bf16_to_f32(f32_to_bf16(neg_nan)).is_nan());
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even_within_2pow8() {
+        // Exactly halfway between two bf16 values: ties go to the even
+        // mantissa in both directions.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3f80_8000)), 0x3f80);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3f81_8000)), 0x3f82);
+        // Just past halfway rounds up; just short truncates.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3f80_8001)), 0x3f81);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3f80_7fff)), 0x3f80);
+        // f32::MAX overflows bf16's last finite step and rounds to inf.
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MAX)), f32::INFINITY);
+        // Relative error bound for normal values: half a bf16 ulp.
+        let mut rng = crate::util::rng::Pcg64::seeded(41);
+        for _ in 0..2000 {
+            let x = rng.normal32(0.0, 100.0);
+            let back = bf16_to_f32(f32_to_bf16(x));
+            let rel = (back - x).abs() / x.abs().max(f32::MIN_POSITIVE);
+            assert!(rel <= 1.0 / 256.0, "{x} -> {back}: rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn bf16_token_roundtrip_and_size() {
+        for k in [1usize, 3, 7, 8, 9, 16] {
+            let kp = padded_k(k);
+            let ncols = 3;
+            let mut v_pad = vec![0f32; ncols * kp];
+            for bi in 0..ncols {
+                for kk in 0..k {
+                    v_pad[bi * kp + kk] = (bi * 31 + kk) as f32 * 0.25 - 1.0;
+                }
+            }
+            let tok = Token {
+                j: 7,
+                iter: 2,
+                phase: Phase::Update,
+                visits: 1,
+                w: Box::from([0.5f32, -1.0, 2.0]),
+                v: v_pad.into_boxed_slice(),
+            };
+            let mut buf = Vec::new();
+            encode_token_bf16(&tok, k, &mut buf);
+            assert_eq!(buf.len(), token_wire_size_bf16(&tok, k), "k={k}");
+            let back = decode_token_bf16(&buf).unwrap();
+            assert_eq!((back.j, back.iter, back.phase, back.visits), (7, 2, Phase::Update, 1));
+            assert_eq!(back.v.len(), tok.v.len(), "k={k}: padded shape");
+            for (i, (&got, &want)) in back.w.iter().zip(tok.w.iter()).enumerate() {
+                assert_eq!(got, bf16_to_f32(f32_to_bf16(want)), "k={k} w[{i}]");
+            }
+            for (i, (&got, &want)) in back.v.iter().zip(tok.v.iter()).enumerate() {
+                assert_eq!(got, bf16_to_f32(f32_to_bf16(want)), "k={k} v[{i}]");
+            }
+            // Idempotent once quantized: decode -> encode is identical.
+            let mut buf2 = Vec::new();
+            encode_token_bf16(&back, k, &mut buf2);
+            assert_eq!(buf, buf2, "k={k}: re-encode changed bytes");
+        }
+    }
+
+    #[test]
+    fn bf16_codec_passes_bias_tokens_and_rejects_mismatched_magic() {
+        let bias = Token {
+            j: crate::nomad::token::BIAS,
+            iter: 5,
+            phase: Phase::Recompute,
+            visits: 2,
+            w: Box::from([0.75f32]),
+            v: Box::from([]),
+        };
+        let mut b16 = Vec::new();
+        encode_token_bf16(&bias, 7, &mut b16);
+        let back = decode_token_bf16(&b16).unwrap();
+        assert_eq!(back, bias, "0.75 is bf16-representable");
+
+        // A precision-mismatched peer fails loudly, not silently.
+        let mut f32_frame = Vec::new();
+        encode_token_padded(&bias, 7, &mut f32_frame);
+        assert!(decode_token_bf16(&f32_frame).is_err());
+        assert!(decode_token(&b16).is_err());
+        assert!(decode_token_bf16(&[]).is_err());
+        let mut short = b16.clone();
+        short.truncate(short.len() - 1);
+        assert!(decode_token_bf16(&short).is_err());
+    }
+
+    #[test]
+    fn bf16_wire_is_at_most_055x_f32() {
+        // The realsim-like cluster shape (d=20958, k=16, c=40): the bench
+        // records absolute bytes; this pins the ratio contract.
+        let k = 16;
+        let kp = padded_k(k);
+        let ncols = 40;
+        let tok = Token {
+            j: 1,
+            iter: 0,
+            phase: Phase::Update,
+            visits: 0,
+            w: vec![0.1f32; ncols].into_boxed_slice(),
+            v: vec![0.2f32; ncols * kp].into_boxed_slice(),
+        };
+        let f32_bytes = padded_token_wire_size(&tok, k) as f64;
+        let bf16_bytes = token_wire_size_bf16(&tok, k) as f64;
+        assert!(
+            bf16_bytes <= 0.55 * f32_bytes,
+            "bf16 {bf16_bytes} vs f32 {f32_bytes}"
+        );
     }
 
     #[test]

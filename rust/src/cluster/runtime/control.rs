@@ -12,7 +12,7 @@
 //!
 //! | frame        | direction | meaning                                     |
 //! |--------------|-----------|---------------------------------------------|
-//! | `Join`       | w → d     | membership: here is my token-ring address   |
+//! | `Join`       | w → d     | membership: ring address + wire precision   |
 //! | `Assign`     | d → w     | rank + peer ring addresses + config + start |
 //! | `Ready`      | w → d     | shard loaded, ring listener live            |
 //! | `Start`      | d → w     | barrier release: deal tokens and run        |
@@ -24,6 +24,7 @@
 //! | `FinalBlock` | w → d     | one collected token (K-strided wire bytes)  |
 //! | `Done`       | w → d     | all collected tokens sent + transport stats |
 //! | `Shutdown`   | d → w     | run complete: exit cleanly                  |
+//! | `Reject`     | d → w     | membership refused (precision mismatch)     |
 
 //!
 //! On the socket every body travels inside the stream envelope of
@@ -39,7 +40,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::cluster::chaos::{ChaosPlan, Scope, SendFate};
-use crate::cluster::codec::{FrameOpener, FrameSealer, Opened};
+use crate::cluster::codec::{FrameOpener, FrameSealer, Opened, WirePrecision};
 
 const MAGIC: u16 = 0xD5FB;
 
@@ -55,8 +56,14 @@ const MAX_ENVELOPE: usize = MAX_FRAME + 64;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
     /// Worker announces itself; `ring_addr` is where its token-ring
-    /// listener accepts peer connections.
-    Join { ring_addr: String },
+    /// listener accepts peer connections, `wire_precision` the token
+    /// payload format its ring transport will speak. The driver admits
+    /// the worker only if the precision matches its own config — a
+    /// mismatched ring would corrupt every circulating token.
+    Join {
+        ring_addr: String,
+        wire_precision: WirePrecision,
+    },
     /// Driver assigns a rank, the full ring (rank-ordered peer addresses),
     /// the experiment config (its `dump()` text), and the iteration to
     /// start or resume from.
@@ -95,6 +102,11 @@ pub enum Frame {
     Done { messages: u64, bytes: u64 },
     /// Run complete; worker exits.
     Shutdown,
+    /// Driver refuses a `Join` outright (e.g. wire-precision mismatch).
+    /// Unlike [`Frame::Abort`] — which tells a worker to tear down and
+    /// re-`Join` — `Reject` means the worker's configuration can never
+    /// be admitted, so it must exit with the reason.
+    Reject { reason: String },
 }
 
 fn put_u32(out: &mut Vec<u8>, x: u32) {
@@ -181,9 +193,13 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
     let mut out = Vec::with_capacity(16);
     out.extend_from_slice(&MAGIC.to_le_bytes());
     match frame {
-        Frame::Join { ring_addr } => {
+        Frame::Join {
+            ring_addr,
+            wire_precision,
+        } => {
             out.push(1);
             put_str(&mut out, ring_addr);
+            out.push(wire_precision.to_byte());
         }
         Frame::Assign {
             rank,
@@ -238,6 +254,10 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             put_u64(&mut out, *bytes);
         }
         Frame::Shutdown => out.push(12),
+        Frame::Reject { reason } => {
+            out.push(13);
+            put_str(&mut out, reason);
+        }
     }
     out
 }
@@ -250,6 +270,7 @@ pub fn decode(buf: &[u8]) -> Result<Frame> {
     let frame = match r.u8()? {
         1 => Frame::Join {
             ring_addr: r.string()?,
+            wire_precision: WirePrecision::from_byte(r.u8()?)?,
         },
         2 => {
             let rank = r.u32()?;
@@ -290,6 +311,9 @@ pub fn decode(buf: &[u8]) -> Result<Frame> {
             bytes: r.u64()?,
         },
         12 => Frame::Shutdown,
+        13 => Frame::Reject {
+            reason: r.string()?,
+        },
         other => bail!("unknown control frame kind {other}"),
     };
     r.finish()?;
@@ -416,6 +440,11 @@ mod tests {
         vec![
             Frame::Join {
                 ring_addr: "127.0.0.1:4001".into(),
+                wire_precision: WirePrecision::F32,
+            },
+            Frame::Join {
+                ring_addr: "127.0.0.1:4002".into(),
+                wire_precision: WirePrecision::Bf16,
             },
             Frame::Assign {
                 rank: 1,
@@ -445,6 +474,9 @@ mod tests {
                 bytes: u64::MAX / 3,
             },
             Frame::Shutdown,
+            Frame::Reject {
+                reason: "wire_precision mismatch: driver f32, worker bf16".into(),
+            },
         ]
     }
 
@@ -466,8 +498,16 @@ mod tests {
         assert!(decode(&buf).is_err());
         let mut buf = encode(&Frame::Join {
             ring_addr: "x".into(),
+            wire_precision: WirePrecision::F32,
         });
-        buf.truncate(buf.len() - 1); // truncated string
+        buf.truncate(buf.len() - 1); // truncated (precision byte missing)
+        assert!(decode(&buf).is_err());
+        let mut buf = encode(&Frame::Join {
+            ring_addr: "x".into(),
+            wire_precision: WirePrecision::Bf16,
+        });
+        let last = buf.len() - 1;
+        buf[last] = 7; // not a known precision tag
         assert!(decode(&buf).is_err());
         let mut buf = encode(&Frame::Stop { at: 3 });
         buf.push(0); // trailing byte

@@ -36,7 +36,7 @@ use super::journal::{self, DriverJournal};
 use super::{col_plan_for, ClusterSpec};
 use crate::cluster::auth;
 use crate::cluster::chaos::ChaosPlan;
-use crate::cluster::codec::{self, FrameOpener};
+use crate::cluster::codec::{self, FrameOpener, WirePrecision};
 use crate::config::{DatasetSpec, ExperimentConfig};
 use crate::data::cache::ShardCacheSource;
 use crate::data::{DataSource, PrefetchSource};
@@ -293,7 +293,10 @@ pub fn run_driver(opts: &DriverOptions) -> Result<DriverReport> {
     // What ships to workers: the same experiment pinned to this ring
     // width, with the dataset pointing at the cache. The cluster key and
     // the secret are stripped — each worker's role *and its key* come
-    // from its own command line; the secret never transits the wire.
+    // from its own command line; the secret never transits the wire. The
+    // wire precision is stripped too: each worker declares its own
+    // `--wire-precision` in its Join, and the driver *verifies* the match
+    // instead of silently overwriting what the operator launched.
     let ship_cfg = {
         let mut ship = cfg.clone();
         ship.workers = p;
@@ -303,6 +306,7 @@ pub fn run_driver(opts: &DriverOptions) -> Result<DriverReport> {
         ship.data_cache = None;
         ship.cluster = None;
         ship.cluster_secret = None;
+        ship.wire_precision = WirePrecision::F32;
         ship.dump()
     };
     let key = cfg.cluster_secret.as_deref().map(auth::derive_key);
@@ -369,6 +373,12 @@ pub fn run_driver(opts: &DriverOptions) -> Result<DriverReport> {
     let listener = TcpListener::bind(&addr).with_context(|| format!("binding driver on {addr}"))?;
     let local = listener.local_addr()?;
     println!("dsfacto driver: control on {local}");
+    if cfg.wire_precision != WirePrecision::F32 {
+        println!(
+            "dsfacto driver: token wire precision {}",
+            cfg.wire_precision.name()
+        );
+    }
     {
         use std::io::Write;
         let _ = std::io::stdout().flush();
@@ -555,7 +565,25 @@ fn run_generation(
             Ok(Ev::Accepted(s)) => register_conn(conns, s, ev_tx, down, key, opts.chaos.as_ref()),
             Ok(Ev::Frame(i, f)) => {
                 conns[i].last_heard = Instant::now();
-                if let Frame::Join { ring_addr } = f {
+                if let Frame::Join {
+                    ring_addr,
+                    wire_precision,
+                } = f
+                {
+                    if wire_precision != cfg.wire_precision {
+                        // A mixed-precision ring would corrupt every
+                        // circulating token, and an Abort would just make
+                        // the worker re-Join forever — refuse outright so
+                        // it exits with the reason.
+                        let reason = format!(
+                            "wire_precision mismatch: driver runs {}, worker announced {}",
+                            cfg.wire_precision.name(),
+                            wire_precision.name()
+                        );
+                        eprintln!("dsfacto driver: rejecting worker: {reason}");
+                        send_to(conns, i, &Frame::Reject { reason });
+                        continue;
+                    }
                     // A conn marked dead by a missed heartbeat can come
                     // back here; it lost its rank, not its socket.
                     conns[i].alive = true;

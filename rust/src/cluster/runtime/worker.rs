@@ -48,7 +48,7 @@ use super::col_plan_for;
 use super::control::{self, CtrlLink, Frame};
 use crate::cluster::auth;
 use crate::cluster::chaos::ChaosPlan;
-use crate::cluster::codec::{self, FrameOpener};
+use crate::cluster::codec::{self, FrameOpener, WirePrecision};
 use crate::cluster::retry::{Attempt, RetryPolicy, SystemClock};
 use crate::cluster::tcp::TcpTransport;
 use crate::cluster::Transport;
@@ -84,6 +84,11 @@ pub struct WorkerOptions {
     /// Shared secret for frame authentication; must match the driver's
     /// `--cluster-secret` (or both sides run unauthenticated).
     pub cluster_secret: Option<String>,
+    /// Token payload format this worker's ring transport speaks
+    /// (`--wire-precision`). Declared in every `Join`; the driver rejects
+    /// workers whose precision differs from its own config, so a ring
+    /// can never mix formats.
+    pub wire_precision: WirePrecision,
     /// Scripted fault-injection plan for this process (tests/benches).
     pub chaos: Option<Arc<ChaosPlan>>,
 }
@@ -255,6 +260,7 @@ fn worker_loop(
         if ctrl
             .send(&Frame::Join {
                 ring_addr: ring_addr.clone(),
+                wire_precision: opts.wire_precision,
             })
             .is_err()
         {
@@ -283,6 +289,7 @@ fn worker_loop(
                 if ctrl
                     .send(&Frame::Join {
                         ring_addr: ring_addr.clone(),
+                        wire_precision: opts.wire_precision,
                     })
                     .is_err()
                 {
@@ -299,6 +306,11 @@ fn worker_loop(
                     config,
                 })) => break (rank as usize, p as usize, start_iter, peers, config),
                 Ok(CtrlEv::Frame(Frame::Shutdown)) => return Ok(LoopEnd::Shutdown),
+                Ok(CtrlEv::Frame(Frame::Reject { reason })) => {
+                    // The driver will never admit this configuration;
+                    // re-joining forever would just spin.
+                    anyhow::bail!("driver rejected this worker: {reason}");
+                }
                 Ok(CtrlEv::Frame(_)) | Err(RecvTimeoutError::Timeout) => {}
                 Ok(CtrlEv::Dead) | Err(RecvTimeoutError::Disconnected) => {
                     return Ok(LoopEnd::ControlLost)
@@ -386,6 +398,7 @@ fn worker_loop(
             ring_listener,
             peer_addrs,
             Some(k),
+            opts.wire_precision,
             Duration::from_secs(30),
             key,
             opts.chaos.clone(),

@@ -19,7 +19,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::chaos::{ChaosPlan, Scope, SendFate};
-use super::codec::{FrameOpener, FrameSealer, Opened};
+use super::codec::{FrameOpener, FrameSealer, Opened, WirePrecision};
 use super::retry::{Attempt, RetryPolicy, SystemClock};
 use super::{codec, LocalTransport, Transport, TransportStats};
 use crate::nomad::token::Token;
@@ -45,6 +45,12 @@ pub struct TcpTransport {
     /// re-padded on receive, so the bytes on the socket are identical to
     /// the unpadded era. `None` = payloads are already K-strided.
     wire_k: Option<usize>,
+    /// Numeric format of the token payloads on the socket. Only
+    /// meaningful with `wire_k = Some(_)` (the strip/re-pad seam is where
+    /// values are converted); the in-process [`TcpTransport::new`] mode
+    /// is always f32. Both ends of a ring must agree — the cluster
+    /// control plane negotiates this at Join.
+    precision: WirePrecision,
     /// HMAC key for the stream envelope (`None` = unauthenticated, the
     /// in-process loopback mode).
     key: Option<[u8; 32]>,
@@ -80,6 +86,7 @@ impl TcpTransport {
             rank: None,
             connect_deadline: Duration::from_secs(5),
             wire_k,
+            precision: WirePrecision::F32,
             key: None,
             chaos: None,
             sealers: (0..p).map(|_| FrameSealer::new(None)).collect(),
@@ -160,10 +167,10 @@ impl TcpTransport {
                 // counted and logged by the opener; drop the connection.
                 Err(_) => return,
             };
-            let decoded = if self.wire_k.is_some() {
-                codec::decode_token_padded(body)
-            } else {
-                codec::decode_token(body)
+            let decoded = match (self.wire_k, self.precision) {
+                (Some(_), WirePrecision::Bf16) => codec::decode_token_bf16(body),
+                (Some(_), WirePrecision::F32) => codec::decode_token_padded(body),
+                (None, _) => codec::decode_token(body),
             };
             match decoded {
                 Ok(tok) => self.inbox.send(worker, tok),
@@ -176,14 +183,18 @@ impl TcpTransport {
     /// passed listener (bound by the caller, so its address could be
     /// announced before the peer table existed) accepts all inbound token
     /// traffic into `rank`'s inbox; `peers[d]` is where sends to rank `d`
-    /// connect. Sends to `rank` itself never touch a socket. `key` (from
-    /// `cluster_secret`) authenticates every envelope; `chaos` is this
-    /// process's scripted fault plan.
+    /// connect. Sends to `rank` itself never touch a socket. `precision`
+    /// picks the token payload wire format (`bf16` halves the factor
+    /// bytes; every rank of a ring must pass the same value — the control
+    /// plane enforces this at Join). `key` (from `cluster_secret`)
+    /// authenticates every envelope; `chaos` is this process's scripted
+    /// fault plan.
     pub fn remote(
         rank: usize,
         listener: TcpListener,
         peers: Vec<SocketAddr>,
         wire_k: Option<usize>,
+        precision: WirePrecision,
         connect_deadline: Duration,
         key: Option<[u8; 32]>,
         chaos: Option<Arc<ChaosPlan>>,
@@ -197,6 +208,7 @@ impl TcpTransport {
             rank: Some(rank),
             connect_deadline,
             wire_k,
+            precision,
             key,
             chaos,
             sealers: (0..p).map(|_| FrameSealer::new(key)).collect(),
@@ -307,9 +319,10 @@ impl Transport for TcpTransport {
             return;
         }
         let mut frame = Vec::new();
-        match self.wire_k {
-            Some(k) => codec::encode_token_padded(&tok, k, &mut frame),
-            None => codec::encode_token(&tok, &mut frame),
+        match (self.wire_k, self.precision) {
+            (Some(k), WirePrecision::Bf16) => codec::encode_token_bf16(&tok, k, &mut frame),
+            (Some(k), WirePrecision::F32) => codec::encode_token_padded(&tok, k, &mut frame),
+            (None, _) => codec::encode_token(&tok, &mut frame),
         }
         let mut env = Vec::with_capacity(frame.len() + self.sealers[dst].overhead());
         self.sealers[dst].seal(&frame, &mut env);
@@ -465,6 +478,71 @@ mod tests {
     }
 
     #[test]
+    fn bf16_ring_halves_factor_bytes_and_round_trips_exact_values() {
+        // Two remote ranks on the bf16 wire. The payload values are all
+        // bf16-representable (small sums of a few powers of two), so the
+        // round-trip must be exact — and the socket must carry the bf16
+        // frame, not the f32 one.
+        let k = 5usize;
+        let kp = crate::kernel::padded_k(k);
+        let ncols = 2usize;
+        let mut v = vec![0f32; ncols * kp];
+        for bi in 0..ncols {
+            for kk in 0..k {
+                v[bi * kp + kk] = (bi * 10 + kk) as f32 + 0.5;
+            }
+        }
+        let padded = Token {
+            j: 3,
+            iter: 1,
+            phase: Phase::Update,
+            visits: 0,
+            w: Box::from([0.5f32, -1.0]),
+            v: v.into_boxed_slice(),
+        };
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a0 = l0.local_addr().unwrap();
+        let a1 = l1.local_addr().unwrap();
+        let t0 = TcpTransport::remote(
+            0,
+            l0,
+            vec![a0, a1],
+            Some(k),
+            WirePrecision::Bf16,
+            Duration::from_secs(10),
+            None,
+            None,
+        )
+        .unwrap();
+        let t1 = TcpTransport::remote(
+            1,
+            l1,
+            vec![a0, a1],
+            Some(k),
+            WirePrecision::Bf16,
+            Duration::from_secs(10),
+            None,
+            None,
+        )
+        .unwrap();
+        t0.send(1, padded.clone());
+        let got = t1
+            .recv_timeout(1, Duration::from_secs(10))
+            .expect("bf16 tcp delivery");
+        assert_eq!(got, padded, "bf16-representable payload must survive");
+        assert_eq!(
+            t0.stats().bytes,
+            (codec::token_wire_size_bf16(&padded, k) + 4 + codec::envelope_overhead(false)) as u64
+        );
+        assert!(
+            codec::token_wire_size_bf16(&padded, k) < codec::padded_token_wire_size(&padded, k)
+        );
+        t0.shutdown();
+        t1.shutdown();
+    }
+
+    #[test]
     fn remote_send_retries_until_listener_appears() {
         // Rank 0 sends to rank 1 before rank 1's listener exists: the
         // bounded-backoff connect must hold the token until it appears.
@@ -481,6 +559,7 @@ mod tests {
             l0,
             vec![a0, a1],
             None,
+            WirePrecision::F32,
             Duration::from_secs(10),
             None,
             None,
@@ -505,6 +584,7 @@ mod tests {
             l1,
             vec![a0, a1],
             None,
+            WirePrecision::F32,
             Duration::from_secs(10),
             None,
             None,
@@ -542,6 +622,7 @@ mod tests {
             l,
             vec![a, dead],
             None,
+            WirePrecision::F32,
             Duration::from_millis(120),
             None,
             None,
@@ -574,6 +655,7 @@ mod tests {
             l0,
             vec![a0, a1],
             None,
+            WirePrecision::F32,
             Duration::from_secs(10),
             key,
             Some(plan),
@@ -584,6 +666,7 @@ mod tests {
             l1,
             vec![a0, a1],
             None,
+            WirePrecision::F32,
             Duration::from_secs(10),
             key,
             None,

@@ -28,6 +28,7 @@ use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::cluster::codec::WirePrecision;
 use crate::data::Task;
 use crate::fm::FmHyper;
 use crate::nomad::{TransportKind, UpdateMode};
@@ -204,6 +205,13 @@ pub struct ExperimentConfig {
     /// config it ships to workers — each process takes the secret from
     /// its own command line or config file, never from the wire.
     pub cluster_secret: Option<String>,
+    /// Numeric format of the token payloads on the cluster ring (`f32`,
+    /// the exact default, or `bf16`, which halves the factor bytes per
+    /// hop). Every process of a cluster must agree: workers declare
+    /// theirs at `Join` and the driver rejects a mismatch. Like
+    /// `cluster_secret`, this key is stripped from the config the driver
+    /// ships — each process takes it from its own command line or file.
+    pub wire_precision: WirePrecision,
 }
 
 impl Default for ExperimentConfig {
@@ -228,6 +236,7 @@ impl Default for ExperimentConfig {
             data_cache: None,
             cluster: None,
             cluster_secret: None,
+            wire_precision: WirePrecision::F32,
         }
     }
 }
@@ -286,6 +295,7 @@ impl ExperimentConfig {
                 ensure!(!value.is_empty(), "cluster_secret must be non-empty");
                 self.cluster_secret = Some(value.to_string());
             }
+            "wire_precision" => self.wire_precision = WirePrecision::parse(value)?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -354,6 +364,9 @@ impl ExperimentConfig {
         }
         if let Some(secret) = &self.cluster_secret {
             kv.insert("cluster_secret", secret.clone());
+        }
+        if self.wire_precision != WirePrecision::F32 {
+            kv.insert("wire_precision", self.wire_precision.name().to_string());
         }
         kv.into_iter()
             .map(|(k, v)| format!("{k} = {v}"))
@@ -533,6 +546,23 @@ mod tests {
         assert!(!ExperimentConfig::default().dump().contains("cluster_secret"));
         // An empty secret is a misconfiguration, not "no auth".
         assert!(ExperimentConfig::parse_str("cluster_secret =\n").is_err());
+    }
+
+    #[test]
+    fn dump_roundtrips_wire_precision_key() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("wire_precision", "bf16").unwrap();
+        assert_eq!(cfg.wire_precision, WirePrecision::Bf16);
+        let back = ExperimentConfig::parse_str(&cfg.dump()).unwrap();
+        assert_eq!(back.wire_precision, WirePrecision::Bf16);
+        // f32 is the default, and default-absent from the dump.
+        assert_eq!(
+            ExperimentConfig::default().wire_precision,
+            WirePrecision::F32
+        );
+        assert!(!ExperimentConfig::default().dump().contains("wire_precision"));
+        // Unknown precisions fail loudly.
+        assert!(ExperimentConfig::parse_str("wire_precision = f16\n").is_err());
     }
 
     #[test]

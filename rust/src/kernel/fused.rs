@@ -28,11 +28,20 @@
 //! allocates nothing. `FmModel::score_naive` (paper eq. 2) remains the
 //! independent test oracle; `rust/tests/kernel_properties.rs` holds the
 //! parity suite.
+//!
+//! Every entry point dispatches once per call on
+//! [`simd::backend`](super::simd::backend): the lane-blocked loops below
+//! are the portable fallback (and the parity oracle), and on x86_64 CPUs
+//! with AVX2+FMA the explicit intrinsics in [`super::simd`] run instead —
+//! bitwise-identical for scoring, ULP-bounded for the FMA-contracted
+//! eq. 13 update (see the `simd` module docs for the contract).
+//! [`FmKernel::score_backend`] lets benchmarks force a specific backend.
 
 use crate::data::{Csr, Dataset, Task};
 use crate::fm::{loss, FmModel};
 
-use super::scratch::Scratch;
+use super::scratch::{AlignedF32, Scratch};
+use super::simd::{self, KernelBackend};
 
 /// f32 lanes per block: 8 matches one AVX2 register (and two NEON ones).
 pub const LANES: usize = 8;
@@ -58,15 +67,16 @@ pub struct FmKernel {
     pub w0: f32,
     /// Linear weights (length D).
     pub w: Vec<f32>,
-    /// Lane-blocked factors, `D x kp` row-major (padding lanes zero).
-    v: Vec<f32>,
+    /// Lane-blocked factors, `D x kp` row-major (padding lanes zero),
+    /// 32-byte aligned for the explicit SIMD kernels.
+    v: AlignedF32,
 }
 
 impl FmKernel {
     /// Builds the lane-blocked view of a model (copies the parameters).
     pub fn from_model(m: &FmModel) -> Self {
         let kp = padded_k(m.k);
-        let mut v = vec![0f32; m.d * kp];
+        let mut v = AlignedF32::zeroed(m.d * kp);
         for j in 0..m.d {
             v[j * kp..j * kp + m.k].copy_from_slice(&m.v[j * m.k..(j + 1) * m.k]);
         }
@@ -146,11 +156,34 @@ impl FmKernel {
         &self.v[lo * self.kp..hi * self.kp]
     }
 
+    /// The fused accumulation pass through an explicit backend.
+    #[inline]
+    fn accumulate_with(
+        &self,
+        b: KernelBackend,
+        idx: &[u32],
+        val: &[f32],
+        a: &mut [f32],
+        s2: &mut [f32],
+    ) -> f32 {
+        #[cfg(target_arch = "x86_64")]
+        if b == KernelBackend::Avx2 {
+            // SAFETY: `Avx2` is only selected (or force-accepted) when
+            // the CPU supports avx2+fma.
+            return unsafe { simd::accumulate(self.w0, &self.w, &self.v, self.kp, idx, val, a, s2) };
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = b;
+        self.accumulate_lanes(idx, val, a, s2)
+    }
+
     /// The fused accumulation pass: linear term plus lane-blocked factor
     /// sums `a` and squared sums `s2`, one sweep over the non-zeros.
-    /// Returns the linear term `w0 + sum_j w_j x_j`.
+    /// Returns the linear term `w0 + sum_j w_j x_j`. This lane-blocked
+    /// loop is the portable fallback and the bitwise oracle for
+    /// [`simd::accumulate`].
     #[inline]
-    fn accumulate(&self, idx: &[u32], val: &[f32], a: &mut [f32], s2: &mut [f32]) -> f32 {
+    fn accumulate_lanes(&self, idx: &[u32], val: &[f32], a: &mut [f32], s2: &mut [f32]) -> f32 {
         debug_assert_eq!(a.len(), self.kp);
         debug_assert_eq!(s2.len(), self.kp);
         a.fill(0.0);
@@ -175,10 +208,24 @@ impl FmKernel {
         linear
     }
 
-    /// The pairwise term `0.5 * sum_k (a_k^2 - s2_k)` over padded lanes
-    /// (padding contributes exactly zero).
+    /// The pairwise term through an explicit backend.
     #[inline]
-    fn pair_term(a: &[f32], s2: &[f32]) -> f32 {
+    fn pair_term_with(b: KernelBackend, a: &[f32], s2: &[f32]) -> f32 {
+        #[cfg(target_arch = "x86_64")]
+        if b == KernelBackend::Avx2 {
+            // SAFETY: as in `accumulate_with`.
+            return 0.5 * unsafe { simd::pair_sum(a, s2) };
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = b;
+        Self::pair_term_lanes(a, s2)
+    }
+
+    /// The pairwise term `0.5 * sum_k (a_k^2 - s2_k)` over padded lanes
+    /// (padding contributes exactly zero). Portable fallback and bitwise
+    /// oracle for [`simd::pair_sum`].
+    #[inline]
+    fn pair_term_lanes(a: &[f32], s2: &[f32]) -> f32 {
         let mut pair = 0f32;
         for (ab, sb) in a.chunks_exact(LANES).zip(s2.chunks_exact(LANES)) {
             for l in 0..LANES {
@@ -189,13 +236,35 @@ impl FmKernel {
     }
 
     /// FM score of one sparse example (paper eq. 4) in a single fused
-    /// pass. The factor sums remain readable via
-    /// [`Scratch::factor_sums`] until the arena's next scoring call.
+    /// pass through the process-wide [`simd::backend`]. The factor sums
+    /// remain readable via [`Scratch::factor_sums`] until the arena's
+    /// next scoring call.
     #[inline]
     pub fn score(&self, idx: &[u32], val: &[f32], scratch: &mut Scratch) -> f32 {
+        let b = simd::backend();
         let (a, s2) = scratch.sums(self.kp);
-        let linear = self.accumulate(idx, val, a, s2);
-        linear + Self::pair_term(a, s2)
+        let linear = self.accumulate_with(b, idx, val, a, s2);
+        linear + Self::pair_term_with(b, a, s2)
+    }
+
+    /// [`score`](FmKernel::score) through an explicitly chosen backend —
+    /// the benchmark harness forces the lanes/AVX2 variants side by side
+    /// with this. Panics if `b` cannot run on this CPU.
+    pub fn score_backend(
+        &self,
+        b: KernelBackend,
+        idx: &[u32],
+        val: &[f32],
+        scratch: &mut Scratch,
+    ) -> f32 {
+        assert!(
+            b.available(),
+            "kernel backend {:?} is not available on this CPU",
+            b.name()
+        );
+        let (a, s2) = scratch.sums(self.kp);
+        let linear = self.accumulate_with(b, idx, val, a, s2);
+        linear + Self::pair_term_with(b, a, s2)
     }
 
     /// Score plus an explicit copy of the factor sums `a` (eq. 10) into
@@ -259,6 +328,12 @@ impl FmKernel {
     /// non-zeros total (the scalar `sgd_update_example` made three), zero
     /// allocation, and the eq. 13 update uses the pre-update factor sums —
     /// the exact semantics of the scalar reference it replaces.
+    ///
+    /// The eq. 13 v-update is the one kernel where the AVX2 backend uses
+    /// FMA contraction, so under it this step tracks the lane fallback to
+    /// a documented ULP bound rather than bitwise (this per-example path
+    /// feeds only tolerance-tested trainers; the engine's bitwise column
+    /// path goes through [`super::visit`]).
     #[allow(clippy::too_many_arguments)]
     pub fn score_grad_step(
         &mut self,
@@ -271,13 +346,16 @@ impl FmKernel {
         lambda_v: f32,
         scratch: &mut Scratch,
     ) -> f32 {
+        let b = simd::backend();
         let kp = self.kp;
         let (a, s2) = scratch.sums(kp);
-        let linear = self.accumulate(idx, val, a, s2);
-        let f = linear + Self::pair_term(a, s2);
+        let linear = self.accumulate_with(b, idx, val, a, s2);
+        let f = linear + Self::pair_term_with(b, a, s2);
         let g = loss::multiplier(f, y, task);
         let l = loss::loss(f, y, task);
 
+        #[cfg(target_arch = "x86_64")]
+        let use_avx2 = b == KernelBackend::Avx2;
         // eq. 11 (stochastic form).
         self.w0 -= eta * g;
         for (j, &x) in idx.iter().zip(val) {
@@ -287,8 +365,14 @@ impl FmKernel {
             *wj -= eta * (g * x + lambda_w * *wj);
             // eq. 13, lane-blocked; padding lanes have v = a = 0 and thus a
             // zero update, so they remain zero.
-            let x2 = x * x;
             let vj = &mut self.v[j * kp..(j + 1) * kp];
+            #[cfg(target_arch = "x86_64")]
+            if use_avx2 {
+                // SAFETY: as in `accumulate_with`.
+                unsafe { simd::vrow_step(vj, a, x, g, eta, lambda_v) };
+                continue;
+            }
+            let x2 = x * x;
             for (vb, ab) in vj.chunks_exact_mut(LANES).zip(a.chunks_exact(LANES)) {
                 for l in 0..LANES {
                     let vl = vb[l];
@@ -319,10 +403,11 @@ impl FmKernel {
             (self.d, self.kp),
             "AdaGrad state shape mismatch"
         );
+        let b = simd::backend();
         let kp = self.kp;
         let (a, s2) = scratch.sums(kp);
-        let linear = self.accumulate(idx, val, a, s2);
-        let f = linear + Self::pair_term(a, s2);
+        let linear = self.accumulate_with(b, idx, val, a, s2);
+        let f = linear + Self::pair_term_with(b, a, s2);
         let g = loss::multiplier(f, y, task);
         let l = loss::loss(f, y, task);
 

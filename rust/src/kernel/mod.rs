@@ -15,6 +15,16 @@
 //!   eq. 11-13 update into two sweeps total (the scalar path made three).
 //! * **Zero allocation** ([`Scratch`]) — every kernel call borrows a
 //!   per-thread arena; nothing on the steady-state path touches the heap.
+//! * **Explicit SIMD with runtime dispatch** ([`simd`]) — on x86_64 CPUs
+//!   with AVX2+FMA the hot kernels run hand-written `std::arch`
+//!   intrinsics, selected once at startup via [`simd::backend`]
+//!   (`DSFACTO_NO_SIMD=1` forces the portable lane fallback). The
+//!   lane-blocked loops stay in-tree as the fallback and the parity
+//!   oracle: every SIMD kernel except the FMA-contracted
+//!   `score_grad_step` v-update is bitwise-identical to them. Kernel-owned
+//!   buffers ([`Scratch`], the factor matrix) live in 32-byte-aligned
+//!   [`AlignedF32`] storage so every lane block sits on an AVX2 register
+//!   boundary.
 //!
 //! Alongside the per-example (row-major) kernels, [`visit`] holds the
 //! **column-visit kernels** the NOMAD engine drives: the eq. 12-13
@@ -38,7 +48,9 @@
 
 mod fused;
 mod scratch;
+pub mod simd;
 pub mod visit;
 
 pub use fused::{padded_k, AdaGradLanes, FmKernel, LANES};
-pub use scratch::Scratch;
+pub use scratch::{AlignedF32, Scratch};
+pub use simd::{backend, KernelBackend};

@@ -1,4 +1,6 @@
-//! The per-thread scratch arena behind the fused kernels.
+//! The per-thread scratch arena behind the fused kernels, plus the
+//! 32-byte-aligned f32 buffer both the arena and the kernel's factor
+//! matrix live in.
 //!
 //! Every fused kernel entry point ([`FmKernel::score`],
 //! [`FmKernel::score_grad_step`], …) takes a `&mut Scratch` instead of
@@ -21,18 +23,155 @@
 //! [`FmKernel::score`]: super::FmKernel::score
 //! [`FmKernel::score_grad_step`]: super::FmKernel::score_grad_step
 
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
 use super::fused::padded_k;
+
+/// 32-byte alignment: one AVX2 register row.
+const ALIGN: usize = 32;
+
+/// A growable f32 buffer whose storage is 32-byte aligned, so every
+/// lane-block row of the kernel-owned accumulators and the AoSoA factor
+/// matrix starts on an AVX2 register boundary (`kp` is a multiple of
+/// [`LANES`](super::LANES), so row offsets are multiples of 32 bytes).
+///
+/// The explicit SIMD kernels in [`super::simd`] use unaligned-load
+/// instructions for safety on caller-provided slices; this alignment
+/// guarantees those instructions run at full aligned speed on the
+/// kernel-owned buffers. Derefs to `[f32]`, so call sites read like a
+/// `Vec<f32>`. (A dedicated type rather than an over-aligned `Box`,
+/// because a `Box<[f32]>` with a stricter-than-natural alignment would be
+/// undefined behavior to drop.)
+pub struct AlignedF32 {
+    ptr: NonNull<f32>,
+    len: usize,
+}
+
+impl AlignedF32 {
+    /// An empty buffer (no allocation).
+    pub fn new() -> Self {
+        AlignedF32 {
+            ptr: NonNull::dangling(),
+            len: 0,
+        }
+    }
+
+    /// A zero-initialized buffer of `n` floats.
+    pub fn zeroed(n: usize) -> Self {
+        let mut b = AlignedF32::new();
+        b.resize_zeroed(n);
+        b
+    }
+
+    fn layout(n: usize) -> Layout {
+        Layout::array::<f32>(n)
+            .and_then(|l| l.align_to(ALIGN))
+            .expect("AlignedF32 layout overflow")
+    }
+
+    /// Resizes to exactly `n` floats: existing values are preserved up to
+    /// `min(len, n)` and any new tail is zero.
+    pub fn resize_zeroed(&mut self, n: usize) {
+        if n == self.len {
+            return;
+        }
+        let fresh = if n == 0 {
+            NonNull::dangling()
+        } else {
+            let layout = Self::layout(n);
+            // SAFETY: `layout` has non-zero size here.
+            let raw = unsafe { alloc_zeroed(layout) };
+            let Some(p) = NonNull::new(raw.cast::<f32>()) else {
+                handle_alloc_error(layout)
+            };
+            let keep = self.len.min(n);
+            // SAFETY: both allocations are live, disjoint and at least
+            // `keep` floats long.
+            unsafe { p.as_ptr().copy_from_nonoverlapping(self.ptr.as_ptr(), keep) };
+            p
+        };
+        self.release();
+        self.ptr = fresh;
+        self.len = n;
+    }
+
+    fn release(&mut self) {
+        if self.len > 0 {
+            // SAFETY: `ptr` was allocated with exactly this layout.
+            unsafe { dealloc(self.ptr.as_ptr().cast(), Self::layout(self.len)) };
+            self.ptr = NonNull::dangling();
+            self.len = 0;
+        }
+    }
+}
+
+impl Drop for AlignedF32 {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+impl Deref for AlignedF32 {
+    type Target = [f32];
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        // SAFETY: `ptr` covers `len` initialized floats (dangling-but-
+        // aligned is valid for a zero-length slice).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl DerefMut for AlignedF32 {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: as in `deref`, and `&mut self` guarantees uniqueness.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Clone for AlignedF32 {
+    fn clone(&self) -> Self {
+        let mut b = AlignedF32::zeroed(self.len);
+        b.copy_from_slice(self);
+        b
+    }
+}
+
+impl Default for AlignedF32 {
+    fn default() -> Self {
+        AlignedF32::new()
+    }
+}
+
+impl std::fmt::Debug for AlignedF32 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        (**self).fmt(f)
+    }
+}
+
+impl PartialEq for AlignedF32 {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+// SAFETY: plain owned f32 storage with no interior mutability — moving or
+// sharing it across threads is as safe as a Vec<f32>.
+unsafe impl Send for AlignedF32 {}
+unsafe impl Sync for AlignedF32 {}
 
 /// Reusable lane-padded accumulator buffers for the fused kernels.
 #[derive(Debug, Clone, Default)]
 pub struct Scratch {
     /// Factor sums `a_k` (padded to a lane multiple).
-    pub(super) a: Vec<f32>,
+    pub(super) a: AlignedF32,
     /// Squared factor sums `s2_k` (padded to a lane multiple).
-    pub(super) s2: Vec<f32>,
+    pub(super) s2: AlignedF32,
     /// Generic per-column gradient buffer (padded); used by the engine's
     /// column-visit updates so they need no per-visit allocation.
-    pub gv: Vec<f32>,
+    pub gv: AlignedF32,
 }
 
 impl Scratch {
@@ -54,9 +193,9 @@ impl Scratch {
     #[inline]
     pub fn ensure(&mut self, kp: usize) {
         if self.a.len() < kp {
-            self.a.resize(kp, 0.0);
-            self.s2.resize(kp, 0.0);
-            self.gv.resize(kp, 0.0);
+            self.a.resize_zeroed(kp);
+            self.s2.resize_zeroed(kp);
+            self.gv.resize_zeroed(kp);
         }
     }
 
@@ -108,5 +247,29 @@ mod tests {
         s2[0] = 2.0;
         assert_eq!(s.a[0], 1.0);
         assert_eq!(s.s2[0], 2.0);
+    }
+
+    #[test]
+    fn aligned_buffer_is_32_byte_aligned_and_grows() {
+        for n in [1usize, 8, 24, 1024] {
+            let b = AlignedF32::zeroed(n);
+            assert_eq!(b.as_ptr() as usize % 32, 0, "n={n}");
+            assert_eq!(b.len(), n);
+            assert!(b.iter().all(|&x| x == 0.0));
+        }
+        let mut b = AlignedF32::zeroed(8);
+        b[3] = 7.5;
+        b.resize_zeroed(64);
+        assert_eq!(b.as_ptr() as usize % 32, 0);
+        assert_eq!(b[3], 7.5, "grow must preserve contents");
+        assert!(b[8..].iter().all(|&x| x == 0.0), "grown tail must be zero");
+        let c = b.clone();
+        assert_eq!(c, b);
+        assert_eq!(c[3], 7.5);
+        b.resize_zeroed(4);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[3], 7.5);
+        let empty = AlignedF32::new();
+        assert!(empty.is_empty());
     }
 }

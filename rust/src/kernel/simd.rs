@@ -1,0 +1,647 @@
+//! Explicit AVX2+FMA kernels with one-time runtime dispatch.
+//!
+//! The lane-blocked loops in [`super::fused`] and [`super::visit`] were
+//! laid out for SIMD (AoSoA, 8-lane blocks, no remainders) but still
+//! compile as whatever LLVM auto-vectorizes. This module adds the
+//! explicit `std::arch` x86_64 intrinsics variants and the
+//! [`KernelBackend`] selector that picks between them **once** at
+//! startup:
+//!
+//! * [`backend`] probes the CPU via `is_x86_feature_detected!` on first
+//!   call and caches the answer in a `OnceLock`. Setting
+//!   `DSFACTO_NO_SIMD=1` in the environment forces the portable
+//!   lane-blocked fallback regardless of what the CPU supports.
+//! * The lane-blocked code paths stay in-tree as the portable fallback
+//!   on non-x86_64 targets **and** as the parity oracle the AVX2
+//!   variants are held to.
+//!
+//! ## Parity contract
+//!
+//! Every kernel here except [`vrow_step`] applies its floating-point
+//! operations in the exact per-lane order of the lane-blocked loop it
+//! mirrors — vectorized per-lane products, scalar-sequential horizontal
+//! reductions through an 8-float spill buffer — so it is **bitwise
+//! identical** to the lane oracle (and therefore preserves the engine's
+//! scalar-bitwise end-to-end guarantee in
+//! `rust/tests/engine_properties.rs`). [`vrow_step`] (the eq. 13
+//! per-example v-update inside `score_grad_step`, a tolerance-tested
+//! trainer path) is the one place FMA contraction is allowed: three
+//! fused multiply-adds merge one rounding each, so it matches the lane
+//! oracle to a documented ULP bound
+//! ([`crate::util::prop::assert_ulp_close`]) rather than bitwise.
+//!
+//! All loads/stores are `loadu`/`storeu`: the kernel-owned buffers
+//! ([`Scratch`](super::Scratch), `FmKernel`'s factor matrix) are 32-byte
+//! aligned via [`super::scratch::AlignedF32`] — on which unaligned-load
+//! instructions run at full aligned speed on every AVX2 CPU — while
+//! caller-provided token payloads and worker arenas carry no alignment
+//! guarantee, so aligned-only instructions would be undefined behavior
+//! there.
+
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+use crate::data::Task;
+
+/// Which implementation of the hot-path kernels this process runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// The portable lane-blocked loops (auto-vectorized; the parity
+    /// oracle and the only backend on non-x86_64 targets).
+    Lanes,
+    /// Explicit AVX2+FMA intrinsics (x86_64 with `avx2` + `fma`).
+    Avx2,
+}
+
+impl KernelBackend {
+    /// Stable lowercase name (used in bench entry labels and logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Lanes => "lanes",
+            KernelBackend::Avx2 => "avx2",
+        }
+    }
+
+    /// Whether this backend can run on the current CPU.
+    pub fn available(self) -> bool {
+        match self {
+            KernelBackend::Lanes => true,
+            KernelBackend::Avx2 => avx2_available(),
+        }
+    }
+}
+
+/// True when the current CPU supports the AVX2+FMA kernel variants.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The pure selection rule, separated from environment/CPU probing so it
+/// is testable on any machine: the escape hatch wins, then hardware.
+pub fn select(no_simd: bool, avx2: bool) -> KernelBackend {
+    if !no_simd && avx2 {
+        KernelBackend::Avx2
+    } else {
+        KernelBackend::Lanes
+    }
+}
+
+/// The process-wide kernel backend, chosen once on first call:
+/// `DSFACTO_NO_SIMD=1` forces [`KernelBackend::Lanes`]; otherwise AVX2 is
+/// used whenever the CPU supports `avx2` and `fma`.
+pub fn backend() -> KernelBackend {
+    static CHOICE: OnceLock<KernelBackend> = OnceLock::new();
+    *CHOICE.get_or_init(|| {
+        let no_simd = std::env::var("DSFACTO_NO_SIMD").is_ok_and(|v| v == "1");
+        select(no_simd, avx2_available())
+    })
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 kernel bodies (x86_64 only). Callers dispatch through
+// `KernelBackend` and must have verified `avx2_available()` — encoded in
+// the `# Safety` contract of each function.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod body {
+    use super::Task;
+    use crate::fm::loss;
+    use std::arch::x86_64::*;
+
+    use super::super::fused::LANES;
+    use super::super::visit::VisitHyper;
+
+    /// AVX2 variant of `FmKernel::accumulate` (bitwise-identical to the
+    /// lane loop: per-lane `mul`/`add` only, no FMA, no reduction).
+    ///
+    /// # Safety
+    /// CPU must support `avx2` and `fma`; `a.len() == s2.len() == kp`,
+    /// `kp % LANES == 0`, every `idx` entry `< w.len()` with
+    /// `v.len() >= (idx+1) * kp`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn accumulate(
+        w0: f32,
+        w: &[f32],
+        v: &[f32],
+        kp: usize,
+        idx: &[u32],
+        val: &[f32],
+        a: &mut [f32],
+        s2: &mut [f32],
+    ) -> f32 {
+        debug_assert_eq!(a.len(), kp);
+        debug_assert_eq!(s2.len(), kp);
+        debug_assert_eq!(kp % LANES, 0);
+        a.fill(0.0);
+        s2.fill(0.0);
+        let ap = a.as_mut_ptr();
+        let sp = s2.as_mut_ptr();
+        let mut linear = w0;
+        for (j, &x) in idx.iter().zip(val) {
+            let j = *j as usize;
+            linear += w[j] * x;
+            let vp = v.as_ptr().add(j * kp);
+            let xs = _mm256_set1_ps(x);
+            let mut o = 0;
+            while o < kp {
+                let vb = _mm256_loadu_ps(vp.add(o));
+                let vx = _mm256_mul_ps(vb, xs);
+                let ab = _mm256_loadu_ps(ap.add(o));
+                _mm256_storeu_ps(ap.add(o), _mm256_add_ps(ab, vx));
+                let sb = _mm256_loadu_ps(sp.add(o));
+                _mm256_storeu_ps(sp.add(o), _mm256_add_ps(sb, _mm256_mul_ps(vx, vx)));
+                o += LANES;
+            }
+        }
+        linear
+    }
+
+    /// The raw pairwise sum `sum_k (a_k^2 - s2_k)` in the exact scalar
+    /// order: per-block vector `a*a - s2` spilled to a stack buffer, then
+    /// summed lane 0..8 sequentially (bitwise-identical to the lane loop).
+    ///
+    /// # Safety
+    /// CPU must support `avx2` and `fma`; `a.len() == s2.len()` and both
+    /// are a multiple of `LANES`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn pair_sum(a: &[f32], s2: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), s2.len());
+        debug_assert_eq!(a.len() % LANES, 0);
+        let mut pair = 0f32;
+        let mut t = [0f32; LANES];
+        let mut o = 0;
+        while o < a.len() {
+            let ab = _mm256_loadu_ps(a.as_ptr().add(o));
+            let sb = _mm256_loadu_ps(s2.as_ptr().add(o));
+            let tv = _mm256_sub_ps(_mm256_mul_ps(ab, ab), sb);
+            _mm256_storeu_ps(t.as_mut_ptr(), tv);
+            for &tl in &t {
+                pair += tl;
+            }
+            o += LANES;
+        }
+        pair
+    }
+
+    /// The eq. 13 v-row update of `score_grad_step`, **FMA-contracted**:
+    /// `v <- v - eta * (g * (x*a - v*x^2) + lambda_v * v)` with
+    /// `fmsub`/`fmadd`/`fnmadd` merging one rounding each. ULP-bounded
+    /// (not bitwise) against the lane oracle — see the module docs.
+    ///
+    /// # Safety
+    /// CPU must support `avx2` and `fma`; `vj.len() <= a.len()` and
+    /// `vj.len() % LANES == 0`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn vrow_step(vj: &mut [f32], a: &[f32], x: f32, g: f32, eta: f32, lambda_v: f32) {
+        debug_assert!(vj.len() <= a.len());
+        debug_assert_eq!(vj.len() % LANES, 0);
+        let xs = _mm256_set1_ps(x);
+        let x2s = _mm256_set1_ps(x * x);
+        let gs = _mm256_set1_ps(g);
+        let es = _mm256_set1_ps(eta);
+        let ls = _mm256_set1_ps(lambda_v);
+        let vp = vj.as_mut_ptr();
+        let ap = a.as_ptr();
+        let mut o = 0;
+        while o < vj.len() {
+            let vl = _mm256_loadu_ps(vp.add(o));
+            let ab = _mm256_loadu_ps(ap.add(o));
+            let inner = _mm256_fmsub_ps(xs, ab, _mm256_mul_ps(vl, x2s));
+            let grad = _mm256_fmadd_ps(gs, inner, _mm256_mul_ps(ls, vl));
+            _mm256_storeu_ps(vp.add(o), _mm256_fnmadd_ps(es, grad, vl));
+            o += LANES;
+        }
+    }
+
+    /// AVX2 variant of `visit::col_update` (bitwise-identical: vectorized
+    /// per-lane products, same operation order as the lane loop).
+    ///
+    /// # Safety
+    /// CPU must support `avx2` and `fma`; same shape contract as
+    /// `visit::col_update` with `gv.len() == kp`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn col_update(
+        rows: &[u32],
+        xs: &[f32],
+        g: &[f32],
+        aa: &[f32],
+        kp: usize,
+        wj: &mut f32,
+        vj: &mut [f32],
+        h: VisitHyper,
+        gv: &mut [f32],
+    ) {
+        debug_assert_eq!(vj.len(), kp);
+        debug_assert_eq!(gv.len(), kp);
+        debug_assert_eq!(kp % LANES, 0);
+        gv.fill(0.0);
+        let gp = gv.as_mut_ptr();
+        let mut gw = 0f32;
+        for (r, x) in rows.iter().zip(xs) {
+            let r = *r as usize;
+            let gi = g[r];
+            let x = *x;
+            gw += gi * x;
+            let xsv = _mm256_set1_ps(x);
+            let x2v = _mm256_set1_ps(x * x);
+            let giv = _mm256_set1_ps(gi);
+            let ap = aa.as_ptr().add(r * kp);
+            let vp = vj.as_ptr();
+            let mut o = 0;
+            while o < kp {
+                let ab = _mm256_loadu_ps(ap.add(o));
+                let vb = _mm256_loadu_ps(vp.add(o));
+                let d = _mm256_sub_ps(_mm256_mul_ps(xsv, ab), _mm256_mul_ps(vb, x2v));
+                let gb = _mm256_loadu_ps(gp.add(o));
+                _mm256_storeu_ps(gp.add(o), _mm256_add_ps(gb, _mm256_mul_ps(giv, d)));
+                o += LANES;
+            }
+        }
+        *wj -= h.eta * (gw * h.inv_n + h.lambda_w * h.reg_split * *wj);
+        let ev = _mm256_set1_ps(h.eta);
+        let iv = _mm256_set1_ps(h.inv_n);
+        // Same two-operand product the scalar loop evaluates per lane.
+        let lv = _mm256_set1_ps(h.lambda_v * h.reg_split);
+        let vp = vj.as_mut_ptr();
+        let mut o = 0;
+        while o < kp {
+            let vb = _mm256_loadu_ps(vp.add(o));
+            let gb = _mm256_loadu_ps(gp.add(o));
+            let s = _mm256_add_ps(_mm256_mul_ps(gb, iv), _mm256_mul_ps(lv, vb));
+            _mm256_storeu_ps(vp.add(o), _mm256_sub_ps(vb, _mm256_mul_ps(ev, s)));
+            o += LANES;
+        }
+    }
+
+    /// AVX2 variant of `visit::col_recompute` (bitwise-identical).
+    ///
+    /// # Safety
+    /// CPU must support `avx2` and `fma`; same shape contract as
+    /// `visit::col_recompute`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn col_recompute(
+        rows: &[u32],
+        xs: &[f32],
+        wj: f32,
+        vj: &[f32],
+        kp: usize,
+        acc_xw: &mut [f32],
+        acc_a: &mut [f32],
+        acc_s2: &mut [f32],
+    ) {
+        debug_assert_eq!(vj.len(), kp);
+        debug_assert_eq!(kp % LANES, 0);
+        let vp = vj.as_ptr();
+        for (r, x) in rows.iter().zip(xs) {
+            let r = *r as usize;
+            let x = *x;
+            acc_xw[r] += wj * x;
+            let xv = _mm256_set1_ps(x);
+            let ap = acc_a.as_mut_ptr().add(r * kp);
+            let sp = acc_s2.as_mut_ptr().add(r * kp);
+            let mut o = 0;
+            while o < kp {
+                let vb = _mm256_loadu_ps(vp.add(o));
+                let vx = _mm256_mul_ps(vb, xv);
+                let ab = _mm256_loadu_ps(ap.add(o));
+                _mm256_storeu_ps(ap.add(o), _mm256_add_ps(ab, vx));
+                let sb = _mm256_loadu_ps(sp.add(o));
+                _mm256_storeu_ps(sp.add(o), _mm256_add_ps(sb, _mm256_mul_ps(vx, vx)));
+                o += LANES;
+            }
+        }
+    }
+
+    /// AVX2 variant of `visit::finalize_rows` (bitwise-identical: the
+    /// per-row pairwise reduction spills per-block vectors and sums them
+    /// in scalar lane order, exactly like [`pair_sum`]).
+    ///
+    /// # Safety
+    /// CPU must support `avx2` and `fma`; same shape contract as
+    /// `visit::finalize_rows`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn finalize_rows(
+        w0: f32,
+        acc_xw: &[f32],
+        acc_a: &[f32],
+        acc_s2: &[f32],
+        kp: usize,
+        labels: &[f32],
+        task: Task,
+        g: &mut [f32],
+    ) -> f64 {
+        let nloc = g.len();
+        debug_assert_eq!(labels.len(), nloc);
+        debug_assert_eq!(acc_xw.len(), nloc);
+        debug_assert_eq!(kp % LANES, 0);
+        let mut loss_sum = 0f64;
+        for r in 0..nloc {
+            let pair = pair_sum(&acc_a[r * kp..(r + 1) * kp], &acc_s2[r * kp..(r + 1) * kp]);
+            let f = w0 + acc_xw[r] + 0.5 * pair;
+            g[r] = loss::multiplier(f, labels[r], task);
+            loss_sum += loss::loss(f, labels[r], task) as f64;
+        }
+        loss_sum
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(super) use body::{accumulate, col_recompute, col_update, finalize_rows, pair_sum, vrow_step};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_rule_honours_escape_hatch() {
+        assert_eq!(select(false, true), KernelBackend::Avx2);
+        assert_eq!(select(true, true), KernelBackend::Lanes);
+        assert_eq!(select(false, false), KernelBackend::Lanes);
+        assert_eq!(select(true, false), KernelBackend::Lanes);
+    }
+
+    #[test]
+    fn backend_is_available_and_stable() {
+        let b = backend();
+        assert!(b.available());
+        assert_eq!(backend(), b, "backend selection must be one-time");
+        assert!(KernelBackend::Lanes.available());
+        assert!(matches!(b.name(), "lanes" | "avx2"));
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    mod avx2_parity {
+        use super::super::super::fused::{padded_k, LANES};
+        use super::super::super::visit::{self, VisitHyper};
+        use super::super::super::Scratch;
+        use super::super::*;
+        use crate::data::Task;
+        use crate::util::prop::assert_ulp_close;
+        use crate::util::rng::Pcg64;
+
+        /// Random lane-padded column fixture: `n` rows, CSC column with
+        /// every other row populated, padded `aa` arena.
+        #[allow(clippy::type_complexity)]
+        fn fixture(k: usize, n: usize, seed: u64) -> (Vec<u32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+            let kp = padded_k(k);
+            let mut rng = Pcg64::seeded(seed);
+            let rows: Vec<u32> = (0..n as u32).step_by(2).collect();
+            let xs: Vec<f32> = rows.iter().map(|_| rng.normal32(0.0, 1.5)).collect();
+            let g: Vec<f32> = (0..n).map(|_| rng.normal32(0.0, 0.8)).collect();
+            let mut aa = vec![0f32; n * kp];
+            for r in 0..n {
+                for kk in 0..k {
+                    aa[r * kp + kk] = rng.normal32(0.0, 1.0);
+                }
+            }
+            (rows, xs, g, aa)
+        }
+
+        fn padded_row(k: usize, rng: &mut Pcg64) -> Vec<f32> {
+            let kp = padded_k(k);
+            let mut v = vec![0f32; kp];
+            for x in v.iter_mut().take(k) {
+                *x = rng.normal32(0.0, 0.5);
+            }
+            v
+        }
+
+        #[test]
+        fn accumulate_and_pair_sum_are_bitwise() {
+            if !avx2_available() {
+                eprintln!("skipping: no AVX2+FMA on this CPU");
+                return;
+            }
+            for k in [1usize, 7, 8, 9, 16, 40] {
+                let kp = padded_k(k);
+                let d = 13;
+                let mut rng = Pcg64::seeded(77 + k as u64);
+                let mut v = vec![0f32; d * kp];
+                for j in 0..d {
+                    for kk in 0..k {
+                        v[j * kp + kk] = rng.normal32(0.0, 0.6);
+                    }
+                }
+                let w: Vec<f32> = (0..d).map(|_| rng.normal32(0.0, 0.4)).collect();
+                let idx = [0u32, 3, 5, 11, 12];
+                let val = [0.5f32, -1.5, 2.0, 0.25, -0.125];
+
+                // Lane oracle.
+                let mut a_l = vec![0f32; kp];
+                let mut s_l = vec![0f32; kp];
+                let mut lin_l = 0.7f32;
+                for (j, &x) in idx.iter().zip(val.iter()) {
+                    let j = *j as usize;
+                    lin_l += w[j] * x;
+                    for ((ab, sb), vb) in a_l
+                        .chunks_exact_mut(LANES)
+                        .zip(s_l.chunks_exact_mut(LANES))
+                        .zip(v[j * kp..(j + 1) * kp].chunks_exact(LANES))
+                    {
+                        for l in 0..LANES {
+                            let vx = vb[l] * x;
+                            ab[l] += vx;
+                            sb[l] += vx * vx;
+                        }
+                    }
+                }
+                let mut pair_l = 0f32;
+                for (ab, sb) in a_l.chunks_exact(LANES).zip(s_l.chunks_exact(LANES)) {
+                    for l in 0..LANES {
+                        pair_l += ab[l] * ab[l] - sb[l];
+                    }
+                }
+
+                let mut a_v = vec![0f32; kp];
+                let mut s_v = vec![0f32; kp];
+                let (lin_v, pair_v) = unsafe {
+                    let lin = accumulate(0.7, &w, &v, kp, &idx, &val, &mut a_v, &mut s_v);
+                    (lin, pair_sum(&a_v, &s_v))
+                };
+                assert_eq!(lin_v.to_bits(), lin_l.to_bits(), "k={k}: linear term");
+                assert_eq!(pair_v.to_bits(), pair_l.to_bits(), "k={k}: pair sum");
+                for kk in 0..kp {
+                    assert_eq!(a_v[kk].to_bits(), a_l[kk].to_bits(), "k={k} a[{kk}]");
+                    assert_eq!(s_v[kk].to_bits(), s_l[kk].to_bits(), "k={k} s2[{kk}]");
+                }
+            }
+        }
+
+        #[test]
+        fn visit_kernels_are_bitwise_vs_lanes() {
+            if !avx2_available() {
+                eprintln!("skipping: no AVX2+FMA on this CPU");
+                return;
+            }
+            for k in [1usize, 7, 8, 9, 16, 40] {
+                let kp = padded_k(k);
+                let n = 9;
+                let (rows, xs, g, aa) = fixture(k, n, 1000 + k as u64);
+                let mut rng = Pcg64::seeded(2000 + k as u64);
+                let v0 = padded_row(k, &mut rng);
+                let h = VisitHyper {
+                    eta: 0.07,
+                    inv_n: 1.0 / n as f32,
+                    lambda_w: 1e-3,
+                    lambda_v: 2e-3,
+                    reg_split: 0.5,
+                };
+
+                // col_update: lanes vs avx2.
+                let mut w_l = 0.3f32;
+                let mut v_l = v0.clone();
+                let mut scratch = Scratch::new();
+                visit::col_update_backend(
+                    KernelBackend::Lanes,
+                    &rows,
+                    &xs,
+                    &g,
+                    &aa,
+                    kp,
+                    &mut w_l,
+                    &mut v_l,
+                    h,
+                    &mut scratch,
+                );
+                let mut w_a = 0.3f32;
+                let mut v_a = v0.clone();
+                visit::col_update_backend(
+                    KernelBackend::Avx2,
+                    &rows,
+                    &xs,
+                    &g,
+                    &aa,
+                    kp,
+                    &mut w_a,
+                    &mut v_a,
+                    h,
+                    &mut scratch,
+                );
+                assert_eq!(w_a.to_bits(), w_l.to_bits(), "k={k}: w after col_update");
+                for kk in 0..kp {
+                    assert_eq!(v_a[kk].to_bits(), v_l[kk].to_bits(), "k={k} v[{kk}]");
+                }
+
+                // col_recompute: lanes vs avx2.
+                let mut xw_l = vec![0f32; n];
+                let mut a_l = aa.clone();
+                let mut s_l = vec![0.25f32; n * kp];
+                visit::col_recompute_backend(
+                    KernelBackend::Lanes,
+                    &rows,
+                    &xs,
+                    0.4,
+                    &v0,
+                    kp,
+                    &mut xw_l,
+                    &mut a_l,
+                    &mut s_l,
+                );
+                let mut xw_a = vec![0f32; n];
+                let mut a_a = aa.clone();
+                let mut s_a = vec![0.25f32; n * kp];
+                visit::col_recompute_backend(
+                    KernelBackend::Avx2,
+                    &rows,
+                    &xs,
+                    0.4,
+                    &v0,
+                    kp,
+                    &mut xw_a,
+                    &mut a_a,
+                    &mut s_a,
+                );
+                assert_eq!(
+                    xw_a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    xw_l.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "k={k}: acc_xw"
+                );
+                for i in 0..n * kp {
+                    assert_eq!(a_a[i].to_bits(), a_l[i].to_bits(), "k={k} acc_a[{i}]");
+                    assert_eq!(s_a[i].to_bits(), s_l[i].to_bits(), "k={k} acc_s2[{i}]");
+                }
+
+                // finalize_rows: lanes vs avx2.
+                let labels: Vec<f32> =
+                    (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+                let mut g_l = vec![0f32; n];
+                let loss_l = visit::finalize_rows_backend(
+                    KernelBackend::Lanes,
+                    0.15,
+                    &xw_l,
+                    &a_l,
+                    &s_l,
+                    kp,
+                    &labels,
+                    Task::Classification,
+                    &mut g_l,
+                );
+                let mut g_a = vec![0f32; n];
+                let loss_a = visit::finalize_rows_backend(
+                    KernelBackend::Avx2,
+                    0.15,
+                    &xw_a,
+                    &a_a,
+                    &s_a,
+                    kp,
+                    &labels,
+                    Task::Classification,
+                    &mut g_a,
+                );
+                assert_eq!(loss_a.to_bits(), loss_l.to_bits(), "k={k}: finalize loss");
+                for r in 0..n {
+                    assert_eq!(g_a[r].to_bits(), g_l[r].to_bits(), "k={k} g[{r}]");
+                }
+            }
+        }
+
+        #[test]
+        fn fma_vrow_step_is_ulp_close_to_lanes() {
+            if !avx2_available() {
+                eprintln!("skipping: no AVX2+FMA on this CPU");
+                return;
+            }
+            for k in [1usize, 8, 16, 40] {
+                let kp = padded_k(k);
+                let mut rng = Pcg64::seeded(3000 + k as u64);
+                let v0 = padded_row(k, &mut rng);
+                let mut a = vec![0f32; kp];
+                for x in a.iter_mut().take(k) {
+                    *x = rng.normal32(0.0, 1.2);
+                }
+                let (x, g, eta, lambda_v) = (1.75f32, -0.6f32, 0.05f32, 1e-3f32);
+
+                // Lane oracle (the exact eq. 13 loop in score_grad_step).
+                let mut v_l = v0.clone();
+                let x2 = x * x;
+                for (vb, ab) in v_l.chunks_exact_mut(LANES).zip(a.chunks_exact(LANES)) {
+                    for l in 0..LANES {
+                        let vl = vb[l];
+                        vb[l] = vl - eta * (g * (x * ab[l] - vl * x2) + lambda_v * vl);
+                    }
+                }
+
+                let mut v_a = v0.clone();
+                unsafe { vrow_step(&mut v_a, &a, x, g, eta, lambda_v) };
+                // Three FMA contractions merge one rounding each: 4 ULPs
+                // is the documented bound (EXPERIMENTS.md §Perf).
+                for kk in 0..kp {
+                    assert_ulp_close(v_a[kk], v_l[kk], 4, &format!("k={k} v[{kk}]"));
+                }
+                assert!(v_a[k..].iter().all(|&z| z == 0.0), "padding drifted");
+            }
+        }
+    }
+}

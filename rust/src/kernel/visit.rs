@@ -36,6 +36,16 @@
 //! live on, K-strided, in [`scalar`]: the oracle for the parity suite in
 //! `rust/tests/kernel_properties.rs` and the baseline side of the
 //! `engine_visit_*` entries in `BENCH_hotpath.json`.
+//!
+//! [`col_update`], [`col_recompute`] and [`finalize_rows`] dispatch on
+//! the process-wide [`simd::backend`](super::simd::backend): the AVX2
+//! variants in [`super::simd`] vectorize the per-lane products but keep
+//! every reduction in scalar lane order, so **all three stay bitwise
+//! identical** to the lane loops — and therefore the engine's
+//! scalar-bitwise guarantee holds under either backend. The `*_backend`
+//! entry points let benchmarks and parity tests force a specific
+//! backend; [`col_update_stochastic`] and [`col_grad`] (f64 all-reduce
+//! payload) remain lane-only.
 
 use crate::data::Task;
 use crate::fm::loss;
@@ -43,6 +53,7 @@ use crate::util::rng::Pcg64;
 
 use super::fused::LANES;
 use super::scratch::Scratch;
+use super::simd::{self, KernelBackend};
 
 /// Hyper-parameters of one mean-gradient update-phase column visit.
 #[derive(Debug, Clone, Copy)]
@@ -79,10 +90,59 @@ pub fn col_update(
     h: VisitHyper,
     scratch: &mut Scratch,
 ) {
+    col_update_backend(simd::backend(), rows, xs, g, aa, kp, wj, vj, h, scratch)
+}
+
+/// [`col_update`] through an explicitly chosen backend (benchmarks and
+/// the SIMD parity tests force lanes/AVX2 side by side). Panics if `b`
+/// cannot run on this CPU.
+#[allow(clippy::too_many_arguments)]
+pub fn col_update_backend(
+    b: KernelBackend,
+    rows: &[u32],
+    xs: &[f32],
+    g: &[f32],
+    aa: &[f32],
+    kp: usize,
+    wj: &mut f32,
+    vj: &mut [f32],
+    h: VisitHyper,
+    scratch: &mut Scratch,
+) {
+    assert!(
+        b.available(),
+        "kernel backend {:?} is not available on this CPU",
+        b.name()
+    );
     debug_assert_eq!(vj.len(), kp);
     debug_assert_eq!(kp % LANES, 0);
     scratch.ensure(kp);
     let gv = &mut scratch.gv[..kp];
+    #[cfg(target_arch = "x86_64")]
+    if b == KernelBackend::Avx2 {
+        // SAFETY: availability asserted above.
+        unsafe { simd::col_update(rows, xs, g, aa, kp, wj, vj, h, gv) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = b;
+    col_update_lanes(rows, xs, g, aa, kp, wj, vj, h, gv)
+}
+
+/// The portable lane-blocked body of [`col_update`] — the bitwise oracle
+/// the AVX2 variant is held to.
+#[allow(clippy::too_many_arguments)]
+fn col_update_lanes(
+    rows: &[u32],
+    xs: &[f32],
+    g: &[f32],
+    aa: &[f32],
+    kp: usize,
+    wj: &mut f32,
+    vj: &mut [f32],
+    h: VisitHyper,
+    gv: &mut [f32],
+) {
     gv.fill(0.0);
     let mut gw = 0f32;
     for (r, x) in rows.iter().zip(xs) {
@@ -215,7 +275,63 @@ pub fn col_recompute(
     acc_a: &mut [f32],
     acc_s2: &mut [f32],
 ) {
+    col_recompute_backend(
+        simd::backend(),
+        rows,
+        xs,
+        wj,
+        vj,
+        kp,
+        acc_xw,
+        acc_a,
+        acc_s2,
+    )
+}
+
+/// [`col_recompute`] through an explicitly chosen backend. Panics if `b`
+/// cannot run on this CPU.
+#[allow(clippy::too_many_arguments)]
+pub fn col_recompute_backend(
+    b: KernelBackend,
+    rows: &[u32],
+    xs: &[f32],
+    wj: f32,
+    vj: &[f32],
+    kp: usize,
+    acc_xw: &mut [f32],
+    acc_a: &mut [f32],
+    acc_s2: &mut [f32],
+) {
+    assert!(
+        b.available(),
+        "kernel backend {:?} is not available on this CPU",
+        b.name()
+    );
     debug_assert_eq!(vj.len(), kp);
+    #[cfg(target_arch = "x86_64")]
+    if b == KernelBackend::Avx2 {
+        // SAFETY: availability asserted above.
+        unsafe { simd::col_recompute(rows, xs, wj, vj, kp, acc_xw, acc_a, acc_s2) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = b;
+    col_recompute_lanes(rows, xs, wj, vj, kp, acc_xw, acc_a, acc_s2)
+}
+
+/// The portable lane-blocked body of [`col_recompute`] — the bitwise
+/// oracle the AVX2 variant is held to.
+#[allow(clippy::too_many_arguments)]
+fn col_recompute_lanes(
+    rows: &[u32],
+    xs: &[f32],
+    wj: f32,
+    vj: &[f32],
+    kp: usize,
+    acc_xw: &mut [f32],
+    acc_a: &mut [f32],
+    acc_s2: &mut [f32],
+) {
     for (r, x) in rows.iter().zip(xs) {
         let r = *r as usize;
         let x = *x;
@@ -243,6 +359,51 @@ pub fn col_recompute(
 /// determines the row count.
 #[allow(clippy::too_many_arguments)]
 pub fn finalize_rows(
+    w0: f32,
+    acc_xw: &[f32],
+    acc_a: &[f32],
+    acc_s2: &[f32],
+    kp: usize,
+    labels: &[f32],
+    task: Task,
+    g: &mut [f32],
+) -> f64 {
+    finalize_rows_backend(simd::backend(), w0, acc_xw, acc_a, acc_s2, kp, labels, task, g)
+}
+
+/// [`finalize_rows`] through an explicitly chosen backend. Panics if `b`
+/// cannot run on this CPU.
+#[allow(clippy::too_many_arguments)]
+pub fn finalize_rows_backend(
+    b: KernelBackend,
+    w0: f32,
+    acc_xw: &[f32],
+    acc_a: &[f32],
+    acc_s2: &[f32],
+    kp: usize,
+    labels: &[f32],
+    task: Task,
+    g: &mut [f32],
+) -> f64 {
+    assert!(
+        b.available(),
+        "kernel backend {:?} is not available on this CPU",
+        b.name()
+    );
+    #[cfg(target_arch = "x86_64")]
+    if b == KernelBackend::Avx2 {
+        // SAFETY: availability asserted above.
+        return unsafe { simd::finalize_rows(w0, acc_xw, acc_a, acc_s2, kp, labels, task, g) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = b;
+    finalize_rows_lanes(w0, acc_xw, acc_a, acc_s2, kp, labels, task, g)
+}
+
+/// The portable lane-blocked body of [`finalize_rows`] — the bitwise
+/// oracle the AVX2 variant is held to.
+#[allow(clippy::too_many_arguments)]
+fn finalize_rows_lanes(
     w0: f32,
     acc_xw: &[f32],
     acc_a: &[f32],

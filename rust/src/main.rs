@@ -81,11 +81,13 @@ USAGE:
                      [--ckpt-dir DIR] [--ckpt-every E] [--max-restarts R]
                      [--join-timeout SECS] [--heartbeat-timeout SECS]
                      [--stall-timeout SECS] [--resume]
-                     [--cluster-secret S] [--chaos SPEC]
+                     [--cluster-secret S] [--wire-precision f32|bf16]
+                     [--chaos SPEC]
                      [--save-model FILE] [--quiet] [train flags...]
   dsfacto worker     --driver HOST:PORT [--data-cache DIR]
                      [--ckpt-dir DIR] [--ckpt-every E] [--connect-timeout SECS]
-                     [--cluster-secret S] [--chaos SPEC]
+                     [--cluster-secret S] [--wire-precision f32|bf16]
+                     [--chaos SPEC]
   dsfacto ingest     --dataset FILE --data-cache DIR [--shards P]
                      [--row-partition contiguous|balanced]
                      [--dataset-task TASK] [--n-features D] [--chunk-rows N]
@@ -154,6 +156,15 @@ CLUSTER FAULT TOLERANCE:
                      client cannot join or corrupt a run. All processes
                      must agree on S; the driver never ships it over the
                      wire.
+  --wire-precision   (config key `wire_precision`) numeric format of the
+                     token payloads on the ring: `f32` (default, exact)
+                     or `bf16` (top half of each f32; halves the factor
+                     bytes per hop at ~3 significant decimal digits).
+                     Every process must pass the same value — workers
+                     declare theirs when joining and the driver rejects a
+                     mismatch, since a mixed ring would corrupt tokens.
+                     Control frames, checkpoints and the final collected
+                     blocks stay f32 regardless.
   --chaos SPEC       (or env DSFACTO_CHAOS) deterministic fault injection
                      for tests/benches, applied to this process only.
                      SPEC is `;`-separated directives:
@@ -164,9 +175,17 @@ CLUSTER FAULT TOLERANCE:
                        refuse:MS                   refuse conns for MS ms
                      e.g. --chaos 'drop:ring:7;kill:3'.
 
+KERNEL BACKEND:
+  The per-example and column-visit kernels dispatch at startup to
+  hand-written AVX2 SIMD on x86_64 CPUs that support it, with the
+  portable lane-blocked code as the fallback. Set DSFACTO_NO_SIMD=1 to
+  force the fallback (e.g. to bisect a suspected kernel discrepancy);
+  every result except the FMA-contracted SGD v-update is bitwise
+  identical either way.
+
 Config files use the same keys with underscores (transport, update_mode,
-cols_per_token, data_cache, cluster, ...); `--config` values are
-overridden by explicit flags.
+cols_per_token, data_cache, cluster, wire_precision, ...); `--config`
+values are overridden by explicit flags.
 ";
 
 fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &mut Args) -> Result<()> {
@@ -193,6 +212,7 @@ fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &mut Args) -> Result<()
         ("data-cache", "data_cache"),
         ("cluster", "cluster"),
         ("cluster-secret", "cluster_secret"),
+        ("wire-precision", "wire_precision"),
     ] {
         if let Some(v) = args.get(flag) {
             cfg.set(key, &v).with_context(|| format!("--{flag}"))?;
@@ -361,6 +381,11 @@ fn cmd_worker(mut args: Args) -> Result<()> {
     let ckpt_every: u32 = args.get_or("ckpt-every", 1)?;
     let connect_timeout: u64 = args.get_or("connect-timeout", 30)?;
     let cluster_secret = args.get("cluster-secret");
+    let wire_precision = match args.get("wire-precision") {
+        Some(v) => dsfacto::cluster::codec::WirePrecision::parse(&v)
+            .context("--wire-precision")?,
+        None => dsfacto::cluster::codec::WirePrecision::F32,
+    };
     let chaos = dsfacto::cluster::chaos::ChaosPlan::from_flag_or_env(args.get("chaos").as_deref())?;
     args.finish()?;
 
@@ -371,6 +396,7 @@ fn cmd_worker(mut args: Args) -> Result<()> {
         ckpt_every,
         connect_timeout: Duration::from_secs(connect_timeout),
         cluster_secret,
+        wire_precision,
         chaos,
     })
 }

@@ -34,6 +34,15 @@
 //! assembly. The kernels apply identical per-coordinate operation order
 //! to the scalar loops they replaced, so results are bitwise unchanged
 //! (`rust/tests/engine_properties.rs` asserts this end to end).
+//!
+//! That bitwise guarantee survives SIMD dispatch: the visit kernels (and
+//! the fused scoring path behind `seed_arenas`) select their backend via
+//! [`crate::kernel::backend`], and every AVX2 variant the engine can
+//! reach is non-FMA with scalar-ordered reductions — bitwise-identical
+//! to the lane loops — so an engine run produces the same bits whether
+//! the process picked `lanes` (e.g. under `DSFACTO_NO_SIMD=1`) or
+//! `avx2`. The backend is chosen once per process, so all worker threads
+//! agree.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};

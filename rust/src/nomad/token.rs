@@ -30,6 +30,13 @@
 //! to / re-pads from the K-strided wire form, which is byte-identical to
 //! the unpadded era. Hand-built K-strided tokens (tests, oracles) remain
 //! valid with `stride = k`.
+//!
+//! The cluster ring can additionally carry the K-strided payload in
+//! **bf16** (`wire_precision = bf16`: every `w` and `v` value travels as
+//! the top 16 bits of its f32, halving the payload bytes per hop). That
+//! is purely a property of the socket encoding —
+//! `cluster::codec::{encode_token_bf16, decode_token_bf16}` convert at
+//! the transport seam, and the in-memory `Token` is always full f32.
 
 /// Block id of the bias token (carries `w0`).
 pub const BIAS: u32 = u32::MAX;

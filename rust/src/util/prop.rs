@@ -101,6 +101,41 @@ pub fn pad_rows(src: &[f32], n: usize, k: usize, kp: usize) -> Vec<f32> {
     out
 }
 
+/// Distance between two finite f32 values in units in the last place:
+/// the number of representable floats strictly between them. Uses the
+/// standard monotone mapping of the IEEE-754 bit patterns onto a signed
+/// continuum, so the distance is well defined across zero (`-0.0` and
+/// `+0.0` are 0 apart). Infinities and NaNs are only "close" to
+/// themselves (`u32::MAX` otherwise).
+pub fn ulp_distance(a: f32, b: f32) -> u32 {
+    if a.is_nan() || b.is_nan() {
+        return if a.to_bits() == b.to_bits() { 0 } else { u32::MAX };
+    }
+    fn monotone(x: f32) -> i64 {
+        let bits = x.to_bits();
+        if bits & 0x8000_0000 != 0 {
+            -((bits & 0x7fff_ffff) as i64)
+        } else {
+            bits as i64
+        }
+    }
+    (monotone(a) - monotone(b)).unsigned_abs().min(u32::MAX as u64) as u32
+}
+
+/// Asserts `got` is within `max_ulp` units in the last place of `want` —
+/// the relaxed parity bound for SIMD kernels whose FMA contraction
+/// genuinely reorders/merges roundings (everything non-FMA'd is held to
+/// bitwise equality instead).
+pub fn assert_ulp_close(got: f32, want: f32, max_ulp: u32, context: &str) {
+    let d = ulp_distance(got, want);
+    assert!(
+        d <= max_ulp,
+        "{context}: {got} ({:#010x}) is {d} ULPs from {want} ({:#010x}), bound {max_ulp}",
+        got.to_bits(),
+        want.to_bits()
+    );
+}
+
 /// A random CSR of up to `max_rows x max_cols` built from random triplets
 /// (duplicates summed by construction), for data-invariant properties.
 pub fn random_csr(rng: &mut Pcg64, max_rows: usize, max_cols: usize) -> Csr {
@@ -173,6 +208,34 @@ mod tests {
             assert!(idx.windows(2).all(|w| w[0] < w[1]), "{idx:?}");
             assert!(idx.iter().all(|&j| (j as usize) < d));
         }
+    }
+
+    #[test]
+    fn ulp_distance_counts_representable_gaps() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+        assert!(ulp_distance(f32::MIN_POSITIVE, -f32::MIN_POSITIVE) > 0);
+        // Symmetric and monotone across zero.
+        let a = -1e-38f32;
+        let b = 1e-38f32;
+        assert_eq!(ulp_distance(a, b), ulp_distance(b, a));
+        assert_eq!(ulp_distance(f32::NAN, f32::NAN), 0);
+        assert_eq!(ulp_distance(f32::NAN, 1.0), u32::MAX);
+        assert_eq!(ulp_distance(f32::INFINITY, f32::INFINITY), 0);
+    }
+
+    #[test]
+    fn assert_ulp_close_accepts_within_bound() {
+        let next = f32::from_bits(2.5f32.to_bits() + 2);
+        assert_ulp_close(next, 2.5, 2, "two ulps");
+    }
+
+    #[test]
+    #[should_panic(expected = "ULPs")]
+    fn assert_ulp_close_rejects_beyond_bound() {
+        let far = f32::from_bits(2.5f32.to_bits() + 9);
+        assert_ulp_close(far, 2.5, 4, "nine ulps");
     }
 
     #[test]

@@ -7,6 +7,11 @@
 //! recompute contributions in a canonical order, so the assembled model
 //! must be bit-identical whether the P workers are threads in one process
 //! or separate processes trading tokens over TCP.
+//!
+//! The `--wire-precision bf16` variant is the one deliberate exception:
+//! each token hop rounds the payload to 8 significand bits, so that run
+//! is pinned to the f32 reference by *tolerance* (relative L2 distance)
+//! instead, and a ring that mixes precisions must be refused at `Join`.
 
 use std::io::BufRead;
 use std::process::{Child, Command, Stdio};
@@ -47,6 +52,39 @@ impl Proc {
             child,
             name: name.to_string(),
         }
+    }
+
+    /// Like `spawn`, but with stderr piped instead of stdout — for tests
+    /// asserting on a process's error output.
+    fn spawn_capturing_stderr(name: &str, args: &[&str]) -> Proc {
+        let mut cmd = Command::new(bin());
+        cmd.args(args)
+            .current_dir(env!("CARGO_MANIFEST_DIR"))
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::piped());
+        let child = cmd.spawn().unwrap_or_else(|e| panic!("spawn {name}: {e}"));
+        Proc {
+            child,
+            name: name.to_string(),
+        }
+    }
+
+    /// Streams this process's stderr lines like `capture_lines` does for
+    /// stdout (requires `spawn_capturing_stderr`).
+    fn capture_stderr_lines(&mut self) -> Arc<Mutex<Vec<String>>> {
+        let stderr = self.child.stderr.take().expect("stderr not piped");
+        let lines = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&lines);
+        std::thread::spawn(move || {
+            for line in std::io::BufReader::new(stderr).lines() {
+                match line {
+                    Ok(l) => sink.lock().unwrap().push(l),
+                    Err(_) => break,
+                }
+            }
+        });
+        lines
     }
 
     /// Streams this process's stdout lines into a shared buffer from a
@@ -269,9 +307,168 @@ fn driver_rejects_fractional_train_split() {
     );
 }
 
+/// Relative L2 distance between two models over all parameters
+/// (`w0`, `w`, `V`), with `b` as the reference.
+fn rel_l2_dist(a: &dsfacto::fm::FmModel, b: &dsfacto::fm::FmModel) -> f64 {
+    let pairs = a
+        .w
+        .iter()
+        .zip(b.w.iter())
+        .chain(a.v.iter().zip(b.v.iter()))
+        .chain(std::iter::once((&a.w0, &b.w0)));
+    let (mut num, mut den) = (0f64, 0f64);
+    for (x, y) in pairs {
+        num += (*x as f64 - *y as f64).powi(2);
+        den += (*y as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
 #[test]
 fn two_process_ring_is_bitwise_in_process() {
     run_ring("p2", 2, 4, 23);
+}
+
+/// `--wire-precision bf16` on every process: the run completes and the
+/// assembled model tracks the in-process f32 reference. Documented
+/// tolerance (EXPERIMENTS.md §Cluster): every token hop rounds each
+/// circulated value to 8 significand bits (2^-8 relative), so over 4
+/// iterations the model stays within 5e-2 relative L2 of the exact run —
+/// ample headroom over the drift seen in practice, while a mis-wired
+/// decode (wrong half of the f32, swapped byte order) lands far outside.
+#[test]
+fn bf16_two_process_ring_tracks_in_process_f32() {
+    let (base, cache) = setup_cache("bf16", 37, 2);
+    let model_path = base.join("model.dsfm");
+    let model_s = model_path.to_str().unwrap().to_string();
+    let dataset = format!("cache:{cache}");
+
+    let mut driver = Proc::spawn(
+        "driver",
+        &[
+            "driver",
+            "--dataset",
+            &dataset,
+            "--workers",
+            "2",
+            "--outer-iters",
+            "4",
+            "--eta",
+            "constant:0.5",
+            "--seed",
+            "37",
+            "--cols-per-token",
+            "5",
+            "--train-frac",
+            "1",
+            "--addr",
+            "127.0.0.1:0",
+            "--wire-precision",
+            "bf16",
+            "--save-model",
+            &model_s,
+            "--quiet",
+        ],
+        true,
+    );
+    let lines = driver.capture_lines();
+    let addr = control_addr(&lines);
+    wait_for_line(
+        &lines,
+        "the wire-precision banner",
+        Duration::from_secs(10),
+        |l| l.contains("token wire precision bf16"),
+    );
+
+    let mut workers: Vec<Proc> = (0..2)
+        .map(|i| {
+            Proc::spawn(
+                &format!("worker-{i}"),
+                &["worker", "--driver", &addr, "--wire-precision", "bf16"],
+                false,
+            )
+        })
+        .collect();
+
+    assert!(
+        driver.wait_ok(Duration::from_secs(180)),
+        "driver failed; output: {:#?}",
+        lines.lock().unwrap()
+    );
+    for w in &mut workers {
+        assert!(w.wait_ok(Duration::from_secs(60)), "{} failed", w.name);
+    }
+
+    let cluster = dsfacto::fm::io::load(&model_path).unwrap();
+    let reference = inprocess_model(&cache, 2, 4, 37);
+    let dist = rel_l2_dist(&cluster, &reference);
+    assert!(
+        dist.is_finite() && dist < 5e-2,
+        "bf16 ring drifted {dist:.4} relative L2 from the f32 reference"
+    );
+    assert!(
+        dist > 0.0,
+        "bf16 ring is bitwise f32 — is the wire precision actually applied?"
+    );
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// A worker whose `--wire-precision` differs from the driver's can never
+/// be admitted: the driver answers its `Join` with `Reject` (a mixed ring
+/// would corrupt every circulating token), and the worker exits
+/// unsuccessfully with the reason instead of re-joining forever.
+#[test]
+fn mixed_wire_precision_worker_is_rejected() {
+    let (base, cache) = setup_cache("mixprec", 41, 2);
+    let dataset = format!("cache:{cache}");
+
+    // Driver at the f32 default, expecting 2 workers; it holds the
+    // membership round open while we probe it with a bf16 worker.
+    let mut driver = Proc::spawn(
+        "driver",
+        &[
+            "driver",
+            "--dataset",
+            &dataset,
+            "--workers",
+            "2",
+            "--outer-iters",
+            "2",
+            "--eta",
+            "constant:0.5",
+            "--seed",
+            "41",
+            "--cols-per-token",
+            "5",
+            "--train-frac",
+            "1",
+            "--addr",
+            "127.0.0.1:0",
+            "--quiet",
+        ],
+        true,
+    );
+    let lines = driver.capture_lines();
+    let addr = control_addr(&lines);
+
+    let mut worker = Proc::spawn_capturing_stderr(
+        "worker-bf16",
+        &["worker", "--driver", &addr, "--wire-precision", "bf16"],
+    );
+    let errs = worker.capture_stderr_lines();
+    assert!(
+        !worker.wait_ok(Duration::from_secs(60)),
+        "a precision-mismatched worker must exit unsuccessfully"
+    );
+    wait_for_line(
+        &errs,
+        "the rejection reason on the worker's stderr",
+        Duration::from_secs(10),
+        |l| l.contains("wire_precision mismatch"),
+    );
+
+    driver.kill();
+    std::fs::remove_dir_all(&base).ok();
 }
 
 #[test]

@@ -7,8 +7,9 @@
 //! continues to pin the plain K-strided codec itself, untouched.
 
 use dsfacto::cluster::codec::{
-    decode_token, decode_token_padded, encode_token, encode_token_padded,
-    padded_token_wire_size, token_wire_size,
+    bf16_to_f32, decode_token, decode_token_bf16, decode_token_padded, encode_token,
+    encode_token_bf16, encode_token_padded, f32_to_bf16, padded_token_wire_size,
+    token_wire_size, token_wire_size_bf16,
 };
 use dsfacto::kernel::{padded_k, LANES};
 use dsfacto::nomad::token::{Phase, Token, BIAS};
@@ -130,6 +131,123 @@ fn lane_multiple_k_is_identity() {
         assert_eq!(a, b, "k={k}");
         assert_eq!(decode_token_padded(&a).unwrap(), tok, "k={k}");
     }
+}
+
+/// Acceptance criterion for the bf16 wire (`wire_precision = bf16`):
+/// every circulated value comes back as exactly
+/// `bf16_to_f32(f32_to_bf16(x))` — i.e. the wire adds *only* the RNE
+/// rounding to 8 significand bits, never extra drift — which for the
+/// generator's finite values bounds the relative error by 2^-8. Headers,
+/// lengths, and the zero-padding invariant survive unchanged, and the
+/// frame is the size `token_wire_size_bf16` promises.
+#[test]
+fn prop_bf16_tokens_roundtrip_within_bf16_rounding() {
+    forall_res(
+        "bf16 token wire roundtrip",
+        128,
+        random_token_pair,
+        |(padded, _stripped, k)| {
+            let mut wire = Vec::new();
+            encode_token_bf16(padded, *k, &mut wire);
+            if wire.len() != token_wire_size_bf16(padded, *k) {
+                return Err(format!(
+                    "wire {} bytes, token_wire_size_bf16 says {}",
+                    wire.len(),
+                    token_wire_size_bf16(padded, *k)
+                ));
+            }
+            let back = decode_token_bf16(&wire).map_err(|e| format!("{e:#}"))?;
+            if (back.j, back.iter, back.phase, back.visits)
+                != (padded.j, padded.iter, padded.phase, padded.visits)
+            {
+                return Err("bf16 roundtrip corrupted the header".to_string());
+            }
+            if back.w.len() != padded.w.len() || back.v.len() != padded.v.len() {
+                return Err("bf16 roundtrip changed the payload shape".to_string());
+            }
+            let w_pairs = back.w.iter().zip(padded.w.iter());
+            let v_pairs = back.v.iter().zip(padded.v.iter());
+            for (got, want) in w_pairs.chain(v_pairs) {
+                let expect = bf16_to_f32(f32_to_bf16(*want));
+                if got.to_bits() != expect.to_bits() {
+                    return Err(format!(
+                        "bf16 wire is not pure RNE rounding: {want} -> {got}, expected {expect}"
+                    ));
+                }
+                if (got - want).abs() > want.abs() / 256.0 {
+                    return Err(format!("bf16 relative error above 2^-8: {want} -> {got}"));
+                }
+            }
+            if !back.is_bias() {
+                let kp = padded_k(*k);
+                for bi in 0..back.ncols() {
+                    if back.vrow(bi, kp)[*k..].iter().any(|&x| x.to_bits() != 0) {
+                        return Err(format!("non-zero padding after bf16 decode (k={k})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Values whose significand already fits in bf16's 8 bits — plus the
+/// signed zeros and infinities — cross the bf16 wire bit-exactly, and a
+/// NaN stays a NaN (its payload truncates to the top 7 mantissa bits, it
+/// never collapses to a number).
+#[test]
+fn bf16_exact_values_and_specials_survive_the_wire() {
+    let exact = [
+        0.0f32,
+        -0.0,
+        1.0,
+        -1.0,
+        0.5,
+        -0.375,
+        2.0,
+        96.0,
+        -65536.0,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+    ];
+    let k = 5usize; // not a lane multiple, so padding is exercised
+    let kp = padded_k(k);
+    let ncols = exact.len().div_ceil(k);
+    let mut v = vec![0f32; ncols * kp];
+    for (i, &x) in exact.iter().enumerate() {
+        v[(i / k) * kp + i % k] = x;
+    }
+    let tok = Token {
+        j: 9,
+        iter: 2,
+        phase: Phase::Update,
+        visits: 1,
+        w: (0..ncols).map(|c| exact[c % exact.len()]).collect(),
+        v: v.into_boxed_slice(),
+    };
+    let mut wire = Vec::new();
+    encode_token_bf16(&tok, k, &mut wire);
+    let back = decode_token_bf16(&wire).unwrap();
+    for (got, want) in back.w.iter().zip(tok.w.iter()).chain(back.v.iter().zip(tok.v.iter())) {
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "bf16-exact value {want} changed on the wire"
+        );
+    }
+
+    let nan_tok = Token {
+        j: BIAS,
+        iter: 0,
+        phase: Phase::Recompute,
+        visits: 0,
+        w: Box::from([f32::NAN]),
+        v: Box::from([]),
+    };
+    let mut wire = Vec::new();
+    encode_token_bf16(&nan_tok, k, &mut wire);
+    let back = decode_token_bf16(&wire).unwrap();
+    assert!(back.w[0].is_nan(), "NaN collapsed to {} on the bf16 wire", back.w[0]);
 }
 
 /// Decoded padding lanes are exactly zero — the invariant every
