@@ -1,0 +1,148 @@
+//! Serving-path latency/throughput report (EXPERIMENTS.md §Serve): an
+//! in-process `dsfacto serve` instance on loopback, driven at 1, 8 and
+//! 64 concurrent client streams, unbatched (synchronous single-row
+//! requests) vs batched (pipelined 16-request bursts the server gathers
+//! into fused sweeps).
+//!
+//! Run: `cargo bench --bench serve_bench`.
+//!
+//! Writes `BENCH_serve.json` (override with `BENCH_JSON`) with, per
+//! `(streams, mode)` cell, `p50_ns` / `p99_ns` per-request latency and
+//! `rows_per_sec` aggregate throughput — the p50/p99 trajectory CI
+//! uploads from the bench-smoke job. `BENCH_SAMPLES` scales the
+//! per-stream request count for smoke runs.
+
+use std::time::{Duration, Instant};
+
+use dsfacto::data::synth;
+use dsfacto::fm::{io as fm_io, FmModel};
+use dsfacto::serve::{serve, ScoreClient, ServeOptions};
+use dsfacto::util::bench::{section, BenchReport};
+use dsfacto::util::rng::Pcg64;
+use dsfacto::util::stats::percentile;
+
+const BURST: usize = 16;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// One client stream's share of the load. Returns per-request latency
+/// samples in seconds and the number of rows it scored.
+fn drive_stream(
+    addr: &str,
+    rows: &[(&[u32], &[f32])],
+    iters: usize,
+    batched: bool,
+) -> anyhow::Result<(Vec<f64>, usize)> {
+    let mut client = ScoreClient::connect(addr)?;
+    let mut lat = Vec::with_capacity(iters * if batched { BURST } else { 1 });
+    let mut scored = 0usize;
+    let mut cursor = 0usize;
+    for _ in 0..iters {
+        if batched {
+            // Pipelined burst: the server coalesces it into fused sweeps;
+            // the whole burst's wall clock is amortized over its requests.
+            let t0 = Instant::now();
+            for _ in 0..BURST {
+                client.send_score_request(&rows[cursor % rows.len()..cursor % rows.len() + 1])?;
+                cursor += 1;
+            }
+            for _ in 0..BURST {
+                client.recv()?;
+            }
+            let per_req = t0.elapsed().as_secs_f64() / BURST as f64;
+            lat.extend(std::iter::repeat(per_req).take(BURST));
+            scored += BURST;
+        } else {
+            let t0 = Instant::now();
+            let row = &rows[cursor % rows.len()..cursor % rows.len() + 1];
+            client.score(row)?;
+            lat.push(t0.elapsed().as_secs_f64());
+            cursor += 1;
+            scored += 1;
+        }
+    }
+    Ok((lat, scored))
+}
+
+fn main() -> anyhow::Result<()> {
+    let samples = env_usize("BENCH_SAMPLES", 20);
+    let json_path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let mut report = BenchReport::new("serve_bench");
+
+    // Served workload: the housing twin (d=13) under a k=8 model.
+    let ds = synth::table2_dataset("housing", 3)?;
+    let mut rng = Pcg64::seeded(17);
+    let mut model = FmModel::init(ds.d(), 8, 0.3, &mut rng);
+    for x in model.w.iter_mut() {
+        *x = rng.normal32(0.0, 0.5);
+    }
+    let rows: Vec<(&[u32], &[f32])> = (0..ds.n()).map(|i| ds.rows.row(i)).collect();
+
+    let dir = std::env::temp_dir().join("dsfacto_serve_bench");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir)?;
+    let model_path = dir.join("model.dsfm");
+    fm_io::save(&model, &model_path)?;
+    let handle = serve(&ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        model_path,
+        col_blocks: 1,
+        max_batch: 64,
+        batch_window: Duration::from_micros(100),
+        reload_poll: Duration::from_secs(3600),
+    })?;
+    let addr = handle.addr().to_string();
+    println!("serve_bench: server on {addr}, {} rows, d={} k=8", ds.n(), ds.d());
+
+    for &streams in &[1usize, 8, 64] {
+        for &batched in &[false, true] {
+            let mode = if batched { "batched" } else { "unbatched" };
+            section(&format!("{streams} stream(s), {mode}"));
+            // Scale per-stream work down as streams go up so wall clock
+            // stays bounded; floor keeps the percentile sample count sane.
+            let iters = (samples * 8 / streams).max(4);
+            let t0 = Instant::now();
+            let results: Vec<(Vec<f64>, usize)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..streams)
+                    .map(|_| {
+                        let addr = addr.as_str();
+                        let rows = rows.as_slice();
+                        scope.spawn(move || drive_stream(addr, rows, iters, batched))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("stream thread").expect("stream I/O"))
+                    .collect()
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let mut lat: Vec<f64> = Vec::new();
+            let mut total_rows = 0usize;
+            for (l, n) in results {
+                lat.extend(l);
+                total_rows += n;
+            }
+            let p50 = percentile(&lat, 50.0) * 1e9;
+            let p99 = percentile(&lat, 99.0) * 1e9;
+            let rps = total_rows as f64 / wall.max(1e-9);
+            println!(
+                "  {total_rows} rows in {:.3}s: p50 {:.0} ns, p99 {:.0} ns, {:.0} rows/s",
+                wall, p50, p99, rps
+            );
+            report.record_value(&format!("serve_s{streams}_{mode}_p50_ns"), p50);
+            report.record_value(&format!("serve_s{streams}_{mode}_p99_ns"), p99);
+            report.record_value(&format!("serve_s{streams}_{mode}_rows_per_sec"), rps);
+        }
+    }
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+    report.write(&json_path)?;
+    println!("\nwrote {json_path} ({} entries)", report.entries.len());
+    Ok(())
+}

@@ -570,6 +570,119 @@ pub fn decode_token_bf16(buf: &[u8]) -> Result<Token> {
     })
 }
 
+/// Shared little-endian framing helpers for every body codec in the
+/// crate that speaks the `len u32 | magic u16 | kind u8 | fields` wire
+/// discipline (the control plane's `0xD5FB` frames and the scoring
+/// server's `0xD5FE` frames). Writers append to a `Vec<u8>`; the
+/// [`Reader`](wire::Reader) is a bounds-checked cursor whose
+/// [`finish`](wire::Reader::finish) rejects trailing bytes, so every
+/// decoder gets truncation *and* extension rejection from the same code.
+pub(crate) mod wire {
+    use anyhow::{ensure, Context, Result};
+
+    pub(crate) fn put_u8(out: &mut Vec<u8>, x: u8) {
+        out.push(x);
+    }
+
+    pub(crate) fn put_u16(out: &mut Vec<u8>, x: u16) {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub(crate) fn put_u32(out: &mut Vec<u8>, x: u32) {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub(crate) fn put_u64(out: &mut Vec<u8>, x: u64) {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub(crate) fn put_f32(out: &mut Vec<u8>, x: f32) {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub(crate) fn put_f64(out: &mut Vec<u8>, x: f64) {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub(crate) fn put_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
+        put_u32(out, bytes.len() as u32);
+        out.extend_from_slice(bytes);
+    }
+
+    pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
+        put_bytes(out, s.as_bytes());
+    }
+
+    /// Bounds-checked cursor over a frame body.
+    #[derive(Clone)]
+    pub(crate) struct Reader<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Reader<'a> {
+        pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
+            Reader { buf, pos: 0 }
+        }
+
+        pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+            ensure!(
+                n <= self.buf.len() - self.pos,
+                "frame truncated at byte {}",
+                self.pos
+            );
+            let s = &self.buf[self.pos..self.pos + n];
+            self.pos += n;
+            Ok(s)
+        }
+
+        pub(crate) fn u8(&mut self) -> Result<u8> {
+            Ok(self.take(1)?[0])
+        }
+
+        pub(crate) fn u16(&mut self) -> Result<u16> {
+            Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        }
+
+        pub(crate) fn u32(&mut self) -> Result<u32> {
+            Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        }
+
+        pub(crate) fn u64(&mut self) -> Result<u64> {
+            Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+
+        pub(crate) fn f32(&mut self) -> Result<f32> {
+            Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        }
+
+        pub(crate) fn f64(&mut self) -> Result<f64> {
+            Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+
+        /// A u32-length-prefixed byte blob, capped at `max` bytes (each
+        /// protocol passes its own frame bound).
+        pub(crate) fn bytes(&mut self, max: usize) -> Result<Vec<u8>> {
+            let n = self.u32()? as usize;
+            ensure!(n <= max, "embedded blob too large: {n} bytes");
+            Ok(self.take(n)?.to_vec())
+        }
+
+        pub(crate) fn string(&mut self, max: usize) -> Result<String> {
+            String::from_utf8(self.bytes(max)?).context("frame string is not UTF-8")
+        }
+
+        pub(crate) fn finish(&self) -> Result<()> {
+            ensure!(
+                self.pos == self.buf.len(),
+                "frame has {} trailing bytes",
+                self.buf.len() - self.pos
+            );
+            Ok(())
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -109,84 +109,11 @@ pub enum Frame {
     Reject { reason: String },
 }
 
-fn put_u32(out: &mut Vec<u8>, x: u32) {
-    out.extend_from_slice(&x.to_le_bytes());
-}
-
-fn put_u64(out: &mut Vec<u8>, x: u64) {
-    out.extend_from_slice(&x.to_le_bytes());
-}
-
-fn put_f64(out: &mut Vec<u8>, x: f64) {
-    out.extend_from_slice(&x.to_le_bytes());
-}
-
-fn put_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
-    put_u32(out, bytes.len() as u32);
-    out.extend_from_slice(bytes);
-}
-
-fn put_str(out: &mut Vec<u8>, s: &str) {
-    put_bytes(out, s.as_bytes());
-}
-
-/// Bounds-checked cursor over a frame body.
-struct Reader<'a> {
-    buf: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        ensure!(
-            self.pos + n <= self.buf.len(),
-            "control frame truncated at byte {}",
-            self.pos
-        );
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
-    }
-
-    fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
-    }
-
-    fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn bytes(&mut self) -> Result<Vec<u8>> {
-        let n = self.u32()? as usize;
-        ensure!(n <= MAX_FRAME, "embedded blob too large: {n} bytes");
-        Ok(self.take(n)?.to_vec())
-    }
-
-    fn string(&mut self) -> Result<String> {
-        String::from_utf8(self.bytes()?).context("control frame string is not UTF-8")
-    }
-
-    fn finish(&self) -> Result<()> {
-        ensure!(
-            self.pos == self.buf.len(),
-            "control frame has {} trailing bytes",
-            self.buf.len() - self.pos
-        );
-        Ok(())
-    }
-}
+// The put_*/Reader framing primitives are shared with every other body
+// codec that frames `magic u16 | kind u8 | fields` (see
+// [`crate::cluster::codec::wire`]); only the frame vocabulary below is
+// control-plane specific.
+use crate::cluster::codec::wire::{put_bytes, put_f64, put_str, put_u32, put_u64, Reader};
 
 /// Serializes a frame body (no length prefix — the stream writer adds it).
 pub fn encode(frame: &Frame) -> Vec<u8> {
@@ -264,12 +191,12 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
 
 /// Deserializes a frame body.
 pub fn decode(buf: &[u8]) -> Result<Frame> {
-    let mut r = Reader { buf, pos: 0 };
+    let mut r = Reader::new(buf);
     let magic = r.u16()?;
     ensure!(magic == MAGIC, "bad control magic {magic:#06x}");
     let frame = match r.u8()? {
         1 => Frame::Join {
-            ring_addr: r.string()?,
+            ring_addr: r.string(MAX_FRAME)?,
             wire_precision: WirePrecision::from_byte(r.u8()?)?,
         },
         2 => {
@@ -280,14 +207,14 @@ pub fn decode(buf: &[u8]) -> Result<Frame> {
             ensure!(npeers <= 4096, "implausible peer count {npeers}");
             let mut peers = Vec::with_capacity(npeers);
             for _ in 0..npeers {
-                peers.push(r.string()?);
+                peers.push(r.string(MAX_FRAME)?);
             }
             Frame::Assign {
                 rank,
                 p,
                 start_iter,
                 peers,
-                config: r.string()?,
+                config: r.string(MAX_FRAME)?,
             }
         }
         3 => Frame::Ready,
@@ -305,14 +232,14 @@ pub fn decode(buf: &[u8]) -> Result<Frame> {
         7 => Frame::Stop { at: r.u32()? },
         8 => Frame::Heartbeat,
         9 => Frame::Abort,
-        10 => Frame::FinalBlock { frame: r.bytes()? },
+        10 => Frame::FinalBlock { frame: r.bytes(MAX_FRAME)? },
         11 => Frame::Done {
             messages: r.u64()?,
             bytes: r.u64()?,
         },
         12 => Frame::Shutdown,
         13 => Frame::Reject {
-            reason: r.string()?,
+            reason: r.string(MAX_FRAME)?,
         },
         other => bail!("unknown control frame kind {other}"),
     };

@@ -212,6 +212,20 @@ pub struct ExperimentConfig {
     /// `cluster_secret`, this key is stripped from the config the driver
     /// ships — each process takes it from its own command line or file.
     pub wire_precision: WirePrecision,
+    /// `dsfacto serve` listen address.
+    pub serve_addr: String,
+    /// Checkpoint `dsfacto serve` loads and watches (`--model` CLI
+    /// override; required to serve).
+    pub serve_model: Option<String>,
+    /// Most requests the serving batcher gathers into one scoring sweep.
+    pub serve_max_batch: usize,
+    /// Micro-batch gather window in microseconds (0 disables batching).
+    pub serve_batch_window_us: u64,
+    /// Column blocks the served factor matrix is sliced into (1 = the
+    /// fused kernel; >1 = block-wise sweep, bitwise-identical scores).
+    pub serve_col_blocks: usize,
+    /// Checkpoint hot-reload poll period in milliseconds.
+    pub serve_reload_poll_ms: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -237,6 +251,12 @@ impl Default for ExperimentConfig {
             cluster: None,
             cluster_secret: None,
             wire_precision: WirePrecision::F32,
+            serve_addr: "127.0.0.1:7878".into(),
+            serve_model: None,
+            serve_max_batch: 64,
+            serve_batch_window_us: 100,
+            serve_col_blocks: 1,
+            serve_reload_poll_ms: 200,
         }
     }
 }
@@ -296,6 +316,26 @@ impl ExperimentConfig {
                 self.cluster_secret = Some(value.to_string());
             }
             "wire_precision" => self.wire_precision = WirePrecision::parse(value)?,
+            "serve_addr" => self.serve_addr = value.to_string(),
+            "serve_model" => self.serve_model = Some(value.to_string()),
+            "serve_max_batch" => {
+                self.serve_max_batch = value.parse().context("serve_max_batch")?;
+                ensure!(self.serve_max_batch >= 1, "serve_max_batch must be >= 1");
+            }
+            "serve_batch_window_us" => {
+                self.serve_batch_window_us = value.parse().context("serve_batch_window_us")?
+            }
+            "serve_col_blocks" => {
+                self.serve_col_blocks = value.parse().context("serve_col_blocks")?;
+                ensure!(self.serve_col_blocks >= 1, "serve_col_blocks must be >= 1");
+            }
+            "serve_reload_poll_ms" => {
+                self.serve_reload_poll_ms = value.parse().context("serve_reload_poll_ms")?;
+                ensure!(
+                    self.serve_reload_poll_ms >= 1,
+                    "serve_reload_poll_ms must be >= 1"
+                );
+            }
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -367,6 +407,28 @@ impl ExperimentConfig {
         }
         if self.wire_precision != WirePrecision::F32 {
             kv.insert("wire_precision", self.wire_precision.name().to_string());
+        }
+        let serve_defaults = ExperimentConfig::default();
+        if self.serve_addr != serve_defaults.serve_addr {
+            kv.insert("serve_addr", self.serve_addr.clone());
+        }
+        if let Some(model) = &self.serve_model {
+            kv.insert("serve_model", model.clone());
+        }
+        if self.serve_max_batch != serve_defaults.serve_max_batch {
+            kv.insert("serve_max_batch", self.serve_max_batch.to_string());
+        }
+        if self.serve_batch_window_us != serve_defaults.serve_batch_window_us {
+            kv.insert(
+                "serve_batch_window_us",
+                self.serve_batch_window_us.to_string(),
+            );
+        }
+        if self.serve_col_blocks != serve_defaults.serve_col_blocks {
+            kv.insert("serve_col_blocks", self.serve_col_blocks.to_string());
+        }
+        if self.serve_reload_poll_ms != serve_defaults.serve_reload_poll_ms {
+            kv.insert("serve_reload_poll_ms", self.serve_reload_poll_ms.to_string());
         }
         kv.into_iter()
             .map(|(k, v)| format!("{k} = {v}"))
@@ -563,6 +625,30 @@ mod tests {
         assert!(!ExperimentConfig::default().dump().contains("wire_precision"));
         // Unknown precisions fail loudly.
         assert!(ExperimentConfig::parse_str("wire_precision = f16\n").is_err());
+    }
+
+    #[test]
+    fn dump_roundtrips_serve_keys() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("serve_addr", "0.0.0.0:9090").unwrap();
+        cfg.set("serve_model", "out/model.dsfm").unwrap();
+        cfg.set("serve_max_batch", "128").unwrap();
+        cfg.set("serve_batch_window_us", "250").unwrap();
+        cfg.set("serve_col_blocks", "4").unwrap();
+        cfg.set("serve_reload_poll_ms", "50").unwrap();
+        let back = ExperimentConfig::parse_str(&cfg.dump()).unwrap();
+        assert_eq!(back.serve_addr, "0.0.0.0:9090");
+        assert_eq!(back.serve_model.as_deref(), Some("out/model.dsfm"));
+        assert_eq!(back.serve_max_batch, 128);
+        assert_eq!(back.serve_batch_window_us, 250);
+        assert_eq!(back.serve_col_blocks, 4);
+        assert_eq!(back.serve_reload_poll_ms, 50);
+        // Defaults stay out of the dump.
+        assert!(!ExperimentConfig::default().dump().contains("serve_"));
+        // Degenerate values fail loudly.
+        assert!(ExperimentConfig::parse_str("serve_max_batch = 0\n").is_err());
+        assert!(ExperimentConfig::parse_str("serve_col_blocks = 0\n").is_err());
+        assert!(ExperimentConfig::parse_str("serve_reload_poll_ms = 0\n").is_err());
     }
 
     #[test]

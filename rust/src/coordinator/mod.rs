@@ -71,12 +71,23 @@ pub struct ResidencyReport {
 /// shard by shard through a double-buffered [`PrefetchSource`] and the
 /// full matrix is never materialized ([`RunSummary::residency`] reports
 /// the measured peak). Trace and metrics are bitwise identical to the
-/// in-memory run of the same config.
+/// in-memory run of the same config. A `cache:` dataset with any other
+/// `train_frac` is rejected outright (same contract as the cluster
+/// driver): caches are pre-split at ingest.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunSummary> {
     if let DatasetSpec::Cache { dir } = &cfg.dataset {
         if cfg.train_frac >= 1.0 {
             return run_streaming(cfg, dir);
         }
+        // Never fall back to materializing + re-splitting a cache: the
+        // shard files were cut on the ingested row order, so a shuffled
+        // split would train on different rows than the shards the probe
+        // and any cluster run of the same cache see. Same contract (and
+        // wording) as the cluster driver's rejection.
+        anyhow::bail!(
+            "cache datasets require train_frac = 1 (pre-split at ingest): got train_frac = {}",
+            cfg.train_frac
+        );
     }
     let ds = cfg.dataset.load(cfg.seed).context("load dataset")?;
     let (train, test) = if cfg.train_frac >= 1.0 {
@@ -283,6 +294,22 @@ impl Evaluator {
 mod tests {
     use super::*;
     use crate::config::{DatasetSpec, TrainerKind};
+
+    #[test]
+    fn cache_dataset_with_partial_train_frac_is_rejected() {
+        // The error must fire before the cache is even opened: a bogus
+        // directory with train_frac < 1 reports the contract, not ENOENT.
+        let cfg = ExperimentConfig {
+            dataset: DatasetSpec::Cache {
+                dir: "/nonexistent/dsfacto-cache".into(),
+            },
+            train_frac: 0.5,
+            ..Default::default()
+        };
+        let err = format!("{:#}", run_experiment(&cfg).unwrap_err());
+        assert!(err.contains("train_frac = 1"), "{err}");
+        assert!(err.contains("pre-split at ingest"), "{err}");
+    }
 
     #[test]
     fn run_experiment_with_each_cpu_trainer() {

@@ -3,6 +3,15 @@
 //! Format (little-endian): magic `DSFM`, version u32, d u64, k u64, w0 f32,
 //! then `w` (d f32s) and `V` (d*k f32s). Self-describing enough for the CLI
 //! `inspect` subcommand and stable across runs.
+//!
+//! Loading is strict, mirroring the shard-cache reader in
+//! [`crate::data::cache`]: wrong magic, unsupported version, absurd
+//! dimensions, truncation inside any section and trailing bytes after the
+//! last factor are all hard errors with a section-naming context. A model
+//! file either round-trips exactly or is rejected — never silently
+//! zero-filled or partially read. [`save`] writes through a temp file and
+//! renames it into place, so a concurrent reader (the serving reload
+//! watcher) can never observe a half-written checkpoint.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -30,39 +39,53 @@ pub fn write_model<W: Write>(m: &FmModel, mut out: W) -> Result<()> {
     Ok(())
 }
 
-/// Deserializes a model from a reader.
+/// Deserializes a model from a reader. Strict: the reader must hold
+/// exactly one well-formed model and nothing after it.
 pub fn read_model<R: Read>(mut inp: R) -> Result<FmModel> {
     let mut magic = [0u8; 4];
     inp.read_exact(&mut magic).context("read magic")?;
     if &magic != MAGIC {
         bail!("not a DSFM model file (bad magic {magic:?})");
     }
-    let version = read_u32(&mut inp)?;
+    let version = read_u32(&mut inp).context("read version")?;
     if version != VERSION {
         bail!("unsupported model version {version}");
     }
-    let d = read_u64(&mut inp)? as usize;
-    let k = read_u64(&mut inp)? as usize;
+    let d = read_u64(&mut inp).context("read d")? as usize;
+    let k = read_u64(&mut inp).context("read k")? as usize;
     // Guard absurd sizes before allocating.
     if d.checked_mul(k.max(1)).map_or(true, |p| p > 1 << 34) {
         bail!("model dimensions too large: d={d} k={k}");
     }
-    let w0 = read_f32(&mut inp)?;
+    let w0 = read_f32(&mut inp).context("read w0")?;
     let mut w = vec![0f32; d];
-    read_f32s(&mut inp, &mut w)?;
+    read_f32s(&mut inp, &mut w).context("model file truncated in w")?;
     let mut v = vec![0f32; d * k];
-    read_f32s(&mut inp, &mut v)?;
+    read_f32s(&mut inp, &mut v).context("model file truncated in V")?;
+    ensure_eof(&mut inp)?;
     Ok(FmModel { d, k, w0, w, v })
 }
 
-/// Saves a model to a file (creating parent dirs).
+/// Saves a model to a file (creating parent dirs). The bytes land in a
+/// sibling temp file first and are renamed into place, so readers racing
+/// the save — notably `dsfacto serve`'s hot-reload watcher — see either
+/// the old complete model or the new complete model, never a partial one.
 pub fn save<P: AsRef<Path>>(m: &FmModel, path: P) -> Result<()> {
-    if let Some(parent) = path.as_ref().parent() {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let file = std::fs::File::create(&path)
-        .with_context(|| format!("create {}", path.as_ref().display()))?;
-    write_model(m, std::io::BufWriter::new(file))
+    let mut tmp_name = path.file_name().unwrap_or_default().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    let file =
+        std::fs::File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?;
+    let mut out = std::io::BufWriter::new(file);
+    write_model(m, &mut out)?;
+    out.flush().context("flush model file")?;
+    drop(out);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} into place", tmp.display()))
 }
 
 /// Loads a model from a file.
@@ -70,6 +93,20 @@ pub fn load<P: AsRef<Path>>(path: P) -> Result<FmModel> {
     let file = std::fs::File::open(&path)
         .with_context(|| format!("open {}", path.as_ref().display()))?;
     read_model(std::io::BufReader::new(file))
+}
+
+/// Rejects any bytes after the last factor (a truncated-then-appended or
+/// concatenated file is corrupt, not "close enough").
+fn ensure_eof<R: Read>(inp: &mut R) -> Result<()> {
+    let mut probe = [0u8; 1];
+    loop {
+        match inp.read(&mut probe) {
+            Ok(0) => return Ok(()),
+            Ok(_) => bail!("model file has trailing bytes after the factor matrix"),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("probe for trailing bytes"),
+        }
+    }
 }
 
 fn read_u32<R: Read>(inp: &mut R) -> Result<u32> {
@@ -135,18 +172,64 @@ mod tests {
     }
 
     #[test]
+    fn save_leaves_no_temp_file_behind() {
+        let dir = std::env::temp_dir().join("dsfacto_io_atomic_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("model.dsfm");
+        save(&model(), &path).unwrap();
+        let names: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        assert_eq!(names, vec!["model.dsfm".to_string()], "{names:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn rejects_bad_magic() {
         let err = read_model(&b"NOPE...."[..]).unwrap_err().to_string();
         assert!(err.contains("magic"), "{err}");
     }
 
     #[test]
-    fn rejects_truncated() {
+    fn rejects_truncation_at_every_section() {
         let m = model();
         let mut buf = Vec::new();
         write_model(&m, &mut buf).unwrap();
-        buf.truncate(buf.len() - 5);
-        assert!(read_model(&buf[..]).is_err());
+        // Header, inside w (after w0 at 4+4+8+8+4 = 28 bytes), inside V.
+        for cut in [2, 10, 20, 28 + 3, 28 + 4 * m.d - 1, buf.len() - 5] {
+            let err = format!("{:#}", read_model(&buf[..cut]).unwrap_err());
+            assert!(
+                err.contains("read") || err.contains("truncated"),
+                "cut={cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_bytes() {
+        let m = model();
+        let mut buf = Vec::new();
+        write_model(&m, &mut buf).unwrap();
+        buf.push(0);
+        let err = read_model(&buf[..]).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+        // A whole second model appended is equally corrupt.
+        let mut twice = Vec::new();
+        write_model(&m, &mut twice).unwrap();
+        write_model(&m, &mut twice).unwrap();
+        assert!(read_model(&twice[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_absurd_dimensions() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&u64::MAX.to_le_bytes()); // d
+        buf.extend_from_slice(&u64::MAX.to_le_bytes()); // k
+        let err = read_model(&buf[..]).unwrap_err().to_string();
+        assert!(err.contains("too large"), "{err}");
     }
 
     #[test]

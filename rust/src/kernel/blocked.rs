@@ -1,0 +1,287 @@
+//! Column-blocked FM scoring over `ColPartition`-sliced factor blocks.
+//!
+//! [`BlockedFm`] holds `V` as one lane-padded slab **per column block**
+//! of a [`ColPartition`] instead of a single `D x kp` matrix — the
+//! memory-efficient serving layout: a block-wise score sweep touches one
+//! block slab at a time, so for models whose factor matrix dwarfs RAM
+//! the blocks can come from anywhere (today: resident slices; the seam
+//! the ROADMAP's bigger-than-RAM serving item needs).
+//!
+//! ## Bitwise parity contract
+//!
+//! `BlockedFm::score_rows` is **bitwise identical** to
+//! [`FmKernel::score_rows`](super::FmKernel::score_rows) on the same
+//! rows, under either kernel backend. That holds by construction, not by
+//! tolerance:
+//!
+//! * CSR rows keep strictly-ascending column indices (a validated
+//!   invariant), so sweeping blocks `lo..hi` in ascending order with a
+//!   per-row cursor visits every row's non-zeros in exactly the storage
+//!   order the fused per-row kernel uses.
+//! * Each non-zero is folded through [`visit::col_recompute`] — whose
+//!   lane body is the same `vx = v*x; a += vx; s2 += vx*vx` /
+//!   `linear += w_j*x` sequence as the fused accumulate pass, and whose
+//!   AVX2 variant is held bitwise to the lane oracle.
+//! * Per-row `linear` is **seeded with `w0`** before the sweep (the
+//!   fused pass starts its accumulator at `w0`), and the final reduction
+//!   goes through the same
+//!   [`FmKernel::pair_term_with`](super::FmKernel::pair_term_with).
+//!
+//! `rust/tests/kernel_properties.rs`-style parity pins live in the unit
+//! tests below and in `rust/tests/serve_e2e.rs` end to end.
+
+use crate::fm::FmModel;
+use crate::partition::ColPartition;
+
+use super::fused::{padded_k, FmKernel};
+use super::scratch::AlignedF32;
+use super::simd;
+use super::visit;
+
+/// FM parameters with the factor matrix sliced into `ColPartition`
+/// column blocks (each block lane-padded like the fused kernel's AoSoA
+/// layout). Build with [`from_model`](BlockedFm::from_model); score
+/// through [`score_rows`](BlockedFm::score_rows).
+#[derive(Debug, Clone)]
+pub struct BlockedFm {
+    d: usize,
+    k: usize,
+    kp: usize,
+    w0: f32,
+    w: Vec<f32>,
+    part: ColPartition,
+    /// Block `b` holds factor rows `[lo, hi)` as a `(hi - lo) x kp`
+    /// row-major slab, padding lanes zero.
+    blocks: Vec<AlignedF32>,
+}
+
+impl BlockedFm {
+    /// Slices a model's factors along `part` (which must cover the
+    /// model's `d` features).
+    pub fn from_model(m: &FmModel, part: ColPartition) -> Self {
+        assert_eq!(
+            part.d(),
+            m.d,
+            "column partition covers {} features, model has {}",
+            part.d(),
+            m.d
+        );
+        let kp = padded_k(m.k);
+        let mut blocks = Vec::with_capacity(part.n_blocks());
+        for b in 0..part.n_blocks() {
+            let (lo, hi) = part.block_range(b);
+            let mut slab = AlignedF32::zeroed((hi - lo) * kp);
+            for (local, j) in (lo..hi).enumerate() {
+                slab[local * kp..local * kp + m.k]
+                    .copy_from_slice(&m.v[j * m.k..(j + 1) * m.k]);
+            }
+            blocks.push(slab);
+        }
+        BlockedFm {
+            d: m.d,
+            k: m.k,
+            kp,
+            w0: m.w0,
+            w: m.w.clone(),
+            part,
+            blocks,
+        }
+    }
+
+    /// Number of features D.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of factors K.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of column blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.part.n_blocks()
+    }
+
+    /// Largest resident block slab in bytes (the peak per-sweep factor
+    /// residency a block-wise scorer touches at a time).
+    pub fn max_block_bytes(&self) -> usize {
+        self.blocks.iter().map(|s| 4 * s.len()).max().unwrap_or(0)
+    }
+
+    /// Scores rows given as raw CSR parts (row `i` is
+    /// `indices[indptr[i]..indptr[i+1]]`, strictly-ascending in-range
+    /// columns) into `out`, sweeping the column blocks in ascending
+    /// order. Bitwise identical to [`FmKernel::score_rows`] on the same
+    /// rows (see the module docs for why). Zero steady-state allocation:
+    /// `scratch` grows monotonically with the batch row count.
+    pub fn score_rows(
+        &self,
+        indptr: &[usize],
+        indices: &[u32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut BlockScratch,
+    ) {
+        let n = out.len();
+        assert_eq!(
+            indptr.len(),
+            n + 1,
+            "indptr length {} != rows {} + 1",
+            indptr.len(),
+            n
+        );
+        assert_eq!(indices.len(), values.len(), "indices/values length mismatch");
+        let kp = self.kp;
+        let b = simd::backend();
+        scratch.ensure(n, kp);
+        let (linear, a, s2, cursor) = scratch.parts(n, kp);
+        // Per-row state: the fused accumulate pass starts `linear` at w0
+        // and zero-filled (a, s2); the block sweep must match exactly.
+        linear.fill(self.w0);
+        a.fill(0.0);
+        s2.fill(0.0);
+        for (r, c) in cursor.iter_mut().enumerate() {
+            *c = indptr[r];
+        }
+        for (blk, slab) in self.blocks.iter().enumerate() {
+            let (lo, hi) = self.part.block_range(blk);
+            for r in 0..n {
+                let end = indptr[r + 1];
+                let mut c = cursor[r];
+                // Ascending row indices: this block's non-zeros are the
+                // cursor run with lo <= j < hi.
+                while c < end && (indices[c] as usize) < hi {
+                    let j = indices[c] as usize;
+                    debug_assert!(j >= lo, "row {r}: unsorted column index {j}");
+                    let x = values[c];
+                    // One-row, one-column fold through the engine's
+                    // column-visit kernel: identical per-non-zero FP ops
+                    // (and backend dispatch) to the fused accumulate.
+                    visit::col_recompute_backend(
+                        b,
+                        &[0u32],
+                        &[x],
+                        self.w[j],
+                        &slab[(j - lo) * kp..(j - lo + 1) * kp],
+                        kp,
+                        &mut linear[r..r + 1],
+                        &mut a[r * kp..(r + 1) * kp],
+                        &mut s2[r * kp..(r + 1) * kp],
+                    );
+                    c += 1;
+                }
+                cursor[r] = c;
+            }
+        }
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = linear[r]
+                + FmKernel::pair_term_with(b, &a[r * kp..(r + 1) * kp], &s2[r * kp..(r + 1) * kp]);
+        }
+    }
+}
+
+/// Grow-only per-batch accumulators for [`BlockedFm::score_rows`]: the
+/// per-row linear terms, the `n x kp` factor-sum slabs and the per-row
+/// non-zero cursors. One per connection/thread, like
+/// [`Scratch`](super::Scratch); capacity never shrinks, so a steady
+/// request load allocates nothing after the largest batch has been seen.
+#[derive(Debug, Clone, Default)]
+pub struct BlockScratch {
+    linear: Vec<f32>,
+    a: AlignedF32,
+    s2: AlignedF32,
+    cursor: Vec<usize>,
+}
+
+impl BlockScratch {
+    /// An empty arena; buffers grow on first use.
+    pub fn new() -> Self {
+        BlockScratch::default()
+    }
+
+    fn ensure(&mut self, n: usize, kp: usize) {
+        if self.linear.len() < n {
+            self.linear.resize(n, 0.0);
+            self.cursor.resize(n, 0);
+        }
+        if self.a.len() < n * kp {
+            self.a.resize_zeroed(n * kp);
+            self.s2.resize_zeroed(n * kp);
+        }
+    }
+
+    fn parts(
+        &mut self,
+        n: usize,
+        kp: usize,
+    ) -> (&mut [f32], &mut [f32], &mut [f32], &mut [usize]) {
+        (
+            &mut self.linear[..n],
+            &mut self.a[..n * kp],
+            &mut self.s2[..n * kp],
+            &mut self.cursor[..n],
+        )
+    }
+
+    /// Current accumulator capacity in floats (grow-only watermark; see
+    /// [`Scratch::capacity`](super::Scratch::capacity)).
+    pub fn capacity(&self) -> usize {
+        self.a.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Scratch;
+    use crate::util::rng::Pcg64;
+
+    fn random_model(d: usize, k: usize, seed: u64) -> FmModel {
+        let mut rng = Pcg64::seeded(seed);
+        let mut m = FmModel::init(d, k, 0.3, &mut rng);
+        for x in m.w.iter_mut() {
+            *x = rng.normal32(0.0, 0.5);
+        }
+        m.w0 = 0.25;
+        m
+    }
+
+    #[test]
+    fn blocked_score_is_bitwise_equal_to_fused() {
+        let ds = crate::data::synth::table2_dataset("housing", 5).unwrap();
+        let (indptr, indices, values) = ds.rows.raw_parts();
+        for k in [1usize, 4, 7, 16] {
+            let m = random_model(ds.d(), k, 40 + k as u64);
+            let kern = FmKernel::from_model(&m);
+            let mut want = vec![0f32; ds.n()];
+            kern.score_rows(indptr, indices, values, &mut want, &mut Scratch::for_k(k));
+            for nb in [1usize, 2, 3, 5, ds.d()] {
+                let blocked = BlockedFm::from_model(&m, ColPartition::with_n_blocks(ds.d(), nb));
+                let mut got = vec![0f32; ds.n()];
+                blocked.score_rows(indptr, indices, values, &mut got, &mut BlockScratch::new());
+                assert_eq!(got, want, "k={k} nb={nb}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_rows_score_bias_and_scratch_grows_monotonically() {
+        let m = random_model(6, 3, 9);
+        let blocked = BlockedFm::from_model(&m, ColPartition::with_n_blocks(6, 2));
+        let mut scratch = BlockScratch::new();
+        let mut out = vec![0f32; 2];
+        blocked.score_rows(&[0, 0, 0], &[], &[], &mut out, &mut scratch);
+        assert_eq!(out, vec![m.w0; 2]);
+        let cap = scratch.capacity();
+        blocked.score_rows(&[0, 0], &[], &[], &mut out[..1], &mut scratch);
+        assert_eq!(scratch.capacity(), cap, "capacity must never shrink");
+    }
+
+    #[test]
+    #[should_panic(expected = "column partition covers")]
+    fn partition_shape_mismatch_panics() {
+        let m = random_model(6, 3, 11);
+        BlockedFm::from_model(&m, ColPartition::with_n_blocks(7, 2));
+    }
+}

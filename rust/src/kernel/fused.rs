@@ -208,9 +208,12 @@ impl FmKernel {
         linear
     }
 
-    /// The pairwise term through an explicit backend.
+    /// The pairwise term through an explicit backend. `pub(crate)` so the
+    /// column-blocked scorer ([`super::blocked`]) finalizes its per-row
+    /// accumulators through the exact reduction the fused path uses —
+    /// the bitwise-parity contract between the two depends on it.
     #[inline]
-    fn pair_term_with(b: KernelBackend, a: &[f32], s2: &[f32]) -> f32 {
+    pub(crate) fn pair_term_with(b: KernelBackend, a: &[f32], s2: &[f32]) -> f32 {
         #[cfg(target_arch = "x86_64")]
         if b == KernelBackend::Avx2 {
             // SAFETY: as in `accumulate_with`.
@@ -292,9 +295,35 @@ impl FmKernel {
             out.len(),
             rows.n_rows()
         );
+        let (indptr, indices, values) = rows.raw_parts();
+        self.score_rows(indptr, indices, values, out, scratch);
+    }
+
+    /// [`score_batch`](FmKernel::score_batch) over raw CSR parts: row `i`
+    /// is `indices[indptr[i]..indptr[i+1]]` / `values[..]`. This is the
+    /// zero-alloc serving entry — a caller that stages rows in reusable
+    /// grow-only buffers (the scoring server's request path) scores them
+    /// without ever building a [`Csr`], whose constructor takes owned
+    /// `Vec`s and would force a fresh allocation per batch.
+    pub fn score_rows(
+        &self,
+        indptr: &[usize],
+        indices: &[u32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        assert_eq!(
+            indptr.len(),
+            out.len() + 1,
+            "indptr length {} != rows {} + 1",
+            indptr.len(),
+            out.len()
+        );
+        assert_eq!(indices.len(), values.len(), "indices/values length mismatch");
         for (i, o) in out.iter_mut().enumerate() {
-            let (idx, val) = rows.row(i);
-            *o = self.score(idx, val, scratch);
+            let (lo, hi) = (indptr[i], indptr[i + 1]);
+            *o = self.score(&indices[lo..hi], &values[lo..hi], scratch);
         }
     }
 

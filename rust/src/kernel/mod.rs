@@ -46,11 +46,13 @@
 // additionally runs a clippy pass scoped to kernel + nomad).
 #![deny(clippy::all)]
 
+pub mod blocked;
 mod fused;
 mod scratch;
 pub mod simd;
 pub mod visit;
 
+pub use blocked::{BlockScratch, BlockedFm};
 pub use fused::{padded_k, AdaGradLanes, FmKernel, LANES};
 pub use scratch::{AlignedF32, Scratch};
 pub use simd::{backend, KernelBackend};

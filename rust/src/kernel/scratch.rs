@@ -212,6 +212,15 @@ impl Scratch {
     pub fn factor_sums(&self, k: usize) -> &[f32] {
         &self.a[..k]
     }
+
+    /// Current accumulator capacity in floats (the grow-only watermark).
+    /// Because [`ensure`](Scratch::ensure) only ever grows, a steady
+    /// workload leaves this constant — the zero-steady-state-allocation
+    /// tests sample it before and after a load phase and assert equality.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.a.len()
+    }
 }
 
 #[cfg(test)]

@@ -75,6 +75,7 @@ pub mod nomad;
 pub mod optim;
 pub mod partition;
 pub mod runtime;
+pub mod serve;
 pub mod train;
 pub mod util;
 

@@ -44,6 +44,8 @@ fn real_main() -> Result<()> {
         "driver" => cmd_driver(args),
         "worker" => cmd_worker(args),
         "ingest" => cmd_ingest(args),
+        "serve" => cmd_serve(args),
+        "score" => cmd_score(args),
         "evaluate" => cmd_evaluate(args),
         "inspect" => cmd_inspect(args),
         "datasets" => cmd_datasets(args),
@@ -91,6 +93,10 @@ USAGE:
   dsfacto ingest     --dataset FILE --data-cache DIR [--shards P]
                      [--row-partition contiguous|balanced]
                      [--dataset-task TASK] [--n-features D] [--chunk-rows N]
+  dsfacto serve      --model FILE [--config FILE] [--addr HOST:PORT]
+                     [--col-blocks B] [--max-batch N] [--batch-window-us US]
+                     [--reload-poll-ms MS]
+  dsfacto score      --data FILE [--addr HOST:PORT] [--stats]
   dsfacto evaluate   --model FILE --dataset NAME|FILE [--xla] [--artifacts DIR]
   dsfacto inspect    --model FILE
   dsfacto datasets                      # list Table-2 synthetic twins
@@ -117,9 +123,10 @@ OUT-OF-CORE DATA:
   (config key `data_cache`) additionally makes every distributed worker
   load only its own shard file. The cache bakes in its row-partition plan
   and shard count, so ingest with the `--shards` / `--row-partition` you
-  will train with (and train with train_frac = 1 or a pre-split file, so
-  the cache covers exactly the training rows; cluster runs require
-  train_frac = 1).
+  will train with. Caches are pre-split at ingest: every trainer —
+  single-process and cluster alike — rejects `cache:` datasets with
+  train_frac != 1, so pre-split held-out rows into their own file before
+  ingesting.
 
 CLUSTER (multi-process DS-FACTO):
   `dsfacto driver` + P x `dsfacto worker` run the NOMAD token ring across
@@ -174,6 +181,30 @@ CLUSTER FAULT TOLERANCE:
                        kill:E                      exit(9) at epoch E
                        refuse:MS                   refuse conns for MS ms
                      e.g. --chaos 'drop:ring:7;kill:3'.
+
+SERVE (zero-alloc batched scoring):
+  `dsfacto serve` loads a checkpoint and answers scoring requests over a
+  length-prefixed TCP frame protocol (magic 0xD5FE; EXPERIMENTS.md §Serve
+  documents the wire layout). The request path allocates nothing in the
+  steady state: per-connection grow-only arenas absorb decode and
+  scoring, and pipelined requests arriving within `--batch-window-us`
+  (config key `serve_batch_window_us`; up to `--max-batch` requests) are
+  gathered into one fused scoring sweep. Scores are bitwise identical to
+  `dsfacto evaluate`'s rust scorer, batched or not, and independent of
+  `--col-blocks` (which slices the factor matrix into B column blocks
+  for a bounded working set per sweep). The server polls the checkpoint
+  file every `--reload-poll-ms` and hot-swaps a changed model behind an
+  Arc — in-flight connections finish their batch on the old model and
+  pick up the new one at the next batch, without reconnecting. Corrupt
+  or partial checkpoint writes are ignored (saves are atomic tmp+rename,
+  and a failed parse keeps the current model). `dsfacto score --data
+  FILE` is the matching client: it scores a LIBSVM file against a
+  running server and prints one score per line; `--stats` prints the
+  server's stats snapshot (model generation/fingerprint, arena
+  capacities, request counters) instead. Config keys: serve_addr,
+  serve_model, serve_max_batch, serve_batch_window_us, serve_col_blocks,
+  serve_reload_poll_ms. Latency/throughput numbers land in
+  BENCH_serve.json via `cargo bench --bench serve_bench`.
 
 KERNEL BACKEND:
   The per-example and column-visit kernels dispatch at startup to
@@ -458,6 +489,86 @@ fn cmd_ingest(mut args: Args) -> Result<()> {
          --workers {shards} --row-partition {} --train-frac 1",
         strategy.spec()
     );
+    Ok(())
+}
+
+fn cmd_serve(mut args: Args) -> Result<()> {
+    use dsfacto::serve::{serve, ServeOptions};
+    use std::time::Duration;
+
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(&path)?,
+        None => ExperimentConfig::default(),
+    };
+    // Serve flags map onto config keys like the train flags do.
+    for (flag, key) in [
+        ("addr", "serve_addr"),
+        ("model", "serve_model"),
+        ("max-batch", "serve_max_batch"),
+        ("batch-window-us", "serve_batch_window_us"),
+        ("col-blocks", "serve_col_blocks"),
+        ("reload-poll-ms", "serve_reload_poll_ms"),
+    ] {
+        if let Some(v) = args.get(flag) {
+            cfg.set(key, &v).with_context(|| format!("--{flag}"))?;
+        }
+    }
+    args.finish()?;
+    let model_path = match &cfg.serve_model {
+        Some(p) => std::path::PathBuf::from(p),
+        None => bail!("serve needs a checkpoint: --model FILE (config key serve_model)"),
+    };
+
+    let handle = serve(&ServeOptions {
+        addr: cfg.serve_addr.clone(),
+        model_path,
+        col_blocks: cfg.serve_col_blocks,
+        max_batch: cfg.serve_max_batch,
+        batch_window: Duration::from_micros(cfg.serve_batch_window_us),
+        reload_poll: Duration::from_millis(cfg.serve_reload_poll_ms),
+    })?;
+    println!("dsfacto serve: scoring on {}", handle.addr());
+    // Serve until killed; the watcher and acceptor threads do the work.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_score(mut args: Args) -> Result<()> {
+    use dsfacto::data::libsvm;
+    use dsfacto::serve::ScoreClient;
+
+    let addr = args
+        .get("addr")
+        .unwrap_or_else(|| ExperimentConfig::default().serve_addr);
+    let data = args.get("data");
+    let want_stats = args.has("stats");
+    args.finish()?;
+
+    let mut client = ScoreClient::connect(&addr)?;
+    if want_stats {
+        let s = client.stats()?;
+        println!(
+            "model: d={} k={} col_blocks={} generation={} fingerprint={:016x}",
+            s.d, s.k, s.col_blocks, s.generation, s.fingerprint
+        );
+        println!(
+            "served: {} requests, {} rows, {} batches; connection arenas: staging {} B, scratch {} B",
+            s.requests, s.rows, s.batches, s.staging_capacity, s.scratch_capacity
+        );
+        return Ok(());
+    }
+    let path = match data {
+        Some(p) => p,
+        None => bail!("score needs --data FILE (LIBSVM rows) or --stats"),
+    };
+    // Labels in the file are ignored; only the features are scored.
+    let ds = libsvm::load(&path, "score-input", Task::Regression, None)?;
+    let rows: Vec<(&[u32], &[f32])> = (0..ds.n()).map(|i| ds.rows.row(i)).collect();
+    let scores = client.score(&rows)?;
+    for s in scores {
+        println!("{s}");
+    }
     Ok(())
 }
 

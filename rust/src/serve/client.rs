@@ -1,0 +1,107 @@
+//! A small blocking client for the serve wire — what `dsfacto score`,
+//! the e2e suite and the latency bench speak.
+//!
+//! [`ScoreClient::score`] is the synchronous one-request path;
+//! [`send_score_request`](ScoreClient::send_score_request) +
+//! [`recv`](ScoreClient::recv) expose the pipelined path (fire several
+//! requests back to back, then collect responses in order) that the
+//! server's micro-batching rewards.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::frames::{self, Frame, ServerStats, MAX_FRAME};
+
+/// One connection to a scoring server.
+pub struct ScoreClient {
+    stream: TcpStream,
+    body: Vec<u8>,
+    msg: Vec<u8>,
+    next_id: u64,
+}
+
+impl ScoreClient {
+    /// Connects (with Nagle off — the protocol is request/response).
+    pub fn connect(addr: &str) -> Result<ScoreClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .context("set read timeout")?;
+        Ok(ScoreClient {
+            stream,
+            body: Vec::new(),
+            msg: Vec::new(),
+            next_id: 0,
+        })
+    }
+
+    /// Sends one score request without waiting for the response; returns
+    /// the request id to match against [`recv`](ScoreClient::recv).
+    pub fn send_score_request(&mut self, rows: &[(&[u32], &[f32])]) -> Result<u64> {
+        self.next_id += 1;
+        let req_id = self.next_id;
+        frames::encode_score_request(req_id, rows, &mut self.body);
+        self.send_body()?;
+        Ok(req_id)
+    }
+
+    /// Reads the next frame off the connection.
+    pub fn recv(&mut self) -> Result<Frame> {
+        let mut len_buf = [0u8; 4];
+        self.stream
+            .read_exact(&mut len_buf)
+            .context("read frame length")?;
+        let len = u32::from_le_bytes(len_buf) as usize;
+        ensure!(len <= MAX_FRAME, "oversized frame ({len} bytes)");
+        self.body.resize(len, 0);
+        self.stream
+            .read_exact(&mut self.body)
+            .context("read frame body")?;
+        Frame::decode(&self.body)
+    }
+
+    /// Scores a batch of rows synchronously. An error frame from the
+    /// server surfaces as `Err` carrying its message.
+    pub fn score(&mut self, rows: &[(&[u32], &[f32])]) -> Result<Vec<f32>> {
+        let sent = self.send_score_request(rows)?;
+        match self.recv()? {
+            Frame::ScoreResponse { req_id, scores } => {
+                ensure!(req_id == sent, "response for {req_id}, expected {sent}");
+                ensure!(
+                    scores.len() == rows.len(),
+                    "got {} scores for {} rows",
+                    scores.len(),
+                    rows.len()
+                );
+                Ok(scores)
+            }
+            Frame::Error { req_id, message } => {
+                bail!("server rejected request {req_id}: {message}")
+            }
+            other => bail!("unexpected frame {other:?}"),
+        }
+    }
+
+    /// Fetches the server's stats snapshot (flushes any batch the server
+    /// is gathering on this connection first, by protocol).
+    pub fn stats(&mut self) -> Result<ServerStats> {
+        frames::encode_stats_request(&mut self.body);
+        self.send_body()?;
+        match self.recv()? {
+            Frame::StatsResponse(s) => Ok(s),
+            other => bail!("unexpected frame {other:?}"),
+        }
+    }
+
+    fn send_body(&mut self) -> Result<()> {
+        self.msg.clear();
+        self.msg
+            .extend_from_slice(&(self.body.len() as u32).to_le_bytes());
+        self.msg.extend_from_slice(&self.body);
+        self.stream.write_all(&self.msg).context("write frame")
+    }
+}

@@ -1,0 +1,485 @@
+//! The scoring-server wire protocol: length-prefixed little-endian frames
+//! carrying sparse rows in, scores out.
+//!
+//! Every frame on the socket is `len u32 | magic u16 | kind u8 | body`,
+//! with `len` covering everything after itself — the same outer framing
+//! (and the same [`codec::wire`] helpers) as the cluster control plane,
+//! under the serve plane's own magic [`MAGIC`]. Kinds:
+//!
+//! | kind | frame          | body                                                            |
+//! |------|----------------|-----------------------------------------------------------------|
+//! | 1    | ScoreRequest   | `req_id u64, n_rows u32`, then per row `nnz u32, idx u32 x nnz, val f32 x nnz` |
+//! | 2    | ScoreResponse  | `req_id u64, n u32, score f32 x n`                              |
+//! | 3    | Error          | `req_id u64, message (u32-prefixed UTF-8)`                      |
+//! | 4    | StatsRequest   | empty                                                           |
+//! | 5    | StatsResponse  | [`ServerStats`] fields in struct order, all u64 but `col_blocks` (u32) |
+//!
+//! Row indices must be strictly ascending and in `[0, d)` — exactly the
+//! [`Csr`](crate::data::Csr) row invariant, so a request's rows decode
+//! straight into CSR raw parts with no sort or dedup pass. A violating
+//! row rejects the whole request with an [`Error`](Frame::Error) frame
+//! (the connection survives); a frame that is not even well-formed at the
+//! `len`/`magic`/`kind` layer kills the connection, since the stream can
+//! no longer be trusted to be frame-aligned.
+//!
+//! Decoding a request appends into a caller-owned [`RowStaging`] arena —
+//! grow-only, like the kernel's [`Scratch`](crate::kernel::Scratch) — so
+//! the server's steady-state request path performs no allocation.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::cluster::codec::wire::{put_f32, put_str, put_u16, put_u32, put_u64, put_u8, Reader};
+
+/// Serve-plane frame magic (the cluster planes use `0xD5FA`/`0xD5FB`/
+/// `0xD5FC`/`0xDB16`).
+pub const MAGIC: u16 = 0xD5FE;
+
+/// Hard cap on one frame body; larger length prefixes are treated as
+/// stream corruption.
+pub const MAX_FRAME: usize = 1 << 26;
+
+/// Cap on rows per request — batching beyond this belongs to the client.
+pub const MAX_REQUEST_ROWS: usize = 1 << 20;
+
+pub(crate) const KIND_SCORE_REQUEST: u8 = 1;
+pub(crate) const KIND_SCORE_RESPONSE: u8 = 2;
+pub(crate) const KIND_ERROR: u8 = 3;
+pub(crate) const KIND_STATS_REQUEST: u8 = 4;
+pub(crate) const KIND_STATS_RESPONSE: u8 = 5;
+
+/// Server-side counters and identity, as carried by a StatsResponse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServerStats {
+    /// Model feature dimension D.
+    pub d: u64,
+    /// Model factor count K.
+    pub k: u64,
+    /// Hot-reload generation (1 = the initially loaded model).
+    pub generation: u64,
+    /// FNV-1a fingerprint of the served checkpoint bytes.
+    pub fingerprint: u64,
+    /// Column blocks the factor matrix is served in (1 = unblocked).
+    pub col_blocks: u32,
+    /// The answering connection's row-staging arena capacity (elements
+    /// across its index/value/indptr buffers). Grow-only.
+    pub staging_capacity: u64,
+    /// The answering connection's scoring-scratch capacity in floats.
+    /// Together with `staging_capacity` this is the zero-steady-state-
+    /// allocation watermark the e2e suite asserts stops growing.
+    pub scratch_capacity: u64,
+    /// Score requests answered.
+    pub requests: u64,
+    /// Rows scored.
+    pub rows: u64,
+    /// Fused `score_rows` sweeps executed (`batches <= requests` — the
+    /// gap is the micro-batching win).
+    pub batches: u64,
+}
+
+/// A decoded serve-plane frame. Score requests are not decoded into this
+/// enum on the server — they stream into [`RowStaging`] via
+/// [`decode_score_request_into`] to keep the hot path allocation-free;
+/// [`Frame::decode`] (used by the client and the tests) materializes them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    ScoreRequest {
+        req_id: u64,
+        /// Row `i` is `(indices[indptr[i]..indptr[i+1]], values[..])`.
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    },
+    ScoreResponse {
+        req_id: u64,
+        scores: Vec<f32>,
+    },
+    Error {
+        req_id: u64,
+        message: String,
+    },
+    StatsRequest,
+    StatsResponse(ServerStats),
+}
+
+/// Grow-only staging arena for inbound rows: CSR raw parts plus the
+/// originating request id and row span of every request currently staged
+/// in the batch. `clear` keeps capacity, so a connection that has seen
+/// its largest batch never allocates again.
+#[derive(Debug)]
+pub struct RowStaging {
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+    /// `(req_id, first_row, n_rows)` per staged request, in arrival order.
+    pub requests: Vec<(u64, usize, usize)>,
+}
+
+impl Default for RowStaging {
+    fn default() -> Self {
+        RowStaging::new()
+    }
+}
+
+impl RowStaging {
+    pub fn new() -> Self {
+        RowStaging {
+            // A CSR indptr always carries the leading 0.
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            requests: Vec::new(),
+        }
+    }
+
+    /// Drops staged rows, keeping every buffer's capacity.
+    pub fn clear(&mut self) {
+        self.indptr.clear();
+        self.indptr.push(0);
+        self.indices.clear();
+        self.values.clear();
+        self.requests.clear();
+    }
+
+    /// Total staged rows across all staged requests.
+    pub fn n_rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// Capacity watermark (index + value + indptr + request slots): the
+    /// grow-only number the zero-allocation e2e assertions sample.
+    pub fn capacity(&self) -> usize {
+        self.indices.capacity()
+            + self.values.capacity()
+            + self.indptr.capacity()
+            + self.requests.capacity()
+    }
+}
+
+fn header(out: &mut Vec<u8>, kind: u8) {
+    put_u16(out, MAGIC);
+    put_u8(out, kind);
+}
+
+/// Encodes a score request for `rows` (parallel index/value slices per
+/// row) into `out` (cleared first), body only — the caller writes the
+/// u32 length prefix.
+pub fn encode_score_request(req_id: u64, rows: &[(&[u32], &[f32])], out: &mut Vec<u8>) {
+    out.clear();
+    header(out, KIND_SCORE_REQUEST);
+    put_u64(out, req_id);
+    put_u32(out, rows.len() as u32);
+    for (idx, val) in rows {
+        debug_assert_eq!(idx.len(), val.len());
+        put_u32(out, idx.len() as u32);
+        for &j in *idx {
+            put_u32(out, j);
+        }
+        for &x in *val {
+            put_f32(out, x);
+        }
+    }
+}
+
+/// Encodes a score response (body only).
+pub fn encode_score_response(req_id: u64, scores: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    header(out, KIND_SCORE_RESPONSE);
+    put_u64(out, req_id);
+    put_u32(out, scores.len() as u32);
+    for &s in scores {
+        put_f32(out, s);
+    }
+}
+
+/// Encodes an error frame (body only).
+pub fn encode_error(req_id: u64, message: &str, out: &mut Vec<u8>) {
+    out.clear();
+    header(out, KIND_ERROR);
+    put_u64(out, req_id);
+    put_str(out, message);
+}
+
+/// Encodes a stats request (body only).
+pub fn encode_stats_request(out: &mut Vec<u8>) {
+    out.clear();
+    header(out, KIND_STATS_REQUEST);
+}
+
+/// Encodes a stats response (body only).
+pub fn encode_stats_response(s: &ServerStats, out: &mut Vec<u8>) {
+    out.clear();
+    header(out, KIND_STATS_RESPONSE);
+    put_u64(out, s.d);
+    put_u64(out, s.k);
+    put_u64(out, s.generation);
+    put_u64(out, s.fingerprint);
+    put_u32(out, s.col_blocks);
+    put_u64(out, s.staging_capacity);
+    put_u64(out, s.scratch_capacity);
+    put_u64(out, s.requests);
+    put_u64(out, s.rows);
+    put_u64(out, s.batches);
+}
+
+/// Checks the `magic | kind` header and returns the kind. An unexpected
+/// magic means the stream is not speaking this protocol — fatal.
+pub(crate) fn frame_kind(body: &[u8]) -> Result<(u8, Reader<'_>)> {
+    let mut r = Reader::new(body);
+    let magic = r.u16()?;
+    ensure!(magic == MAGIC, "not a serve frame (magic {magic:#06x})");
+    let kind = r.u8()?;
+    Ok((kind, r))
+}
+
+/// Appends one score request's rows into `staging`, validating each row
+/// against the CSR invariant (strictly ascending indices, all `< d`,
+/// index/value arity matched by construction of the wire format). On
+/// error the staging arena is left exactly as it was — the already-staged
+/// requests of the batch stay scorable — and the message names the
+/// offending row. Returns the request id and its row count.
+pub(crate) fn decode_score_request_into(
+    mut r: Reader<'_>,
+    d: usize,
+    staging: &mut RowStaging,
+) -> Result<(u64, usize)> {
+    let req_id = r.u64()?;
+    let n_rows = r.u32()? as usize;
+    let (rows0, idx0, val0) = (staging.n_rows(), staging.indices.len(), staging.values.len());
+    let unwind = |s: &mut RowStaging| {
+        s.indptr.truncate(rows0 + 1);
+        s.indices.truncate(idx0);
+        s.values.truncate(val0);
+    };
+    if let Err(e) = stage_rows(&mut r, d, n_rows, staging) {
+        unwind(staging);
+        return Err(e);
+    }
+    staging.requests.push((req_id, rows0, n_rows));
+    Ok((req_id, n_rows))
+}
+
+fn stage_rows(r: &mut Reader<'_>, d: usize, n_rows: usize, staging: &mut RowStaging) -> Result<()> {
+    ensure!(
+        n_rows <= MAX_REQUEST_ROWS,
+        "request has {n_rows} rows (cap {MAX_REQUEST_ROWS})"
+    );
+    for row in 0..n_rows {
+        let nnz = r.u32()? as usize;
+        ensure!(nnz <= d, "row {row}: {nnz} non-zeros exceed d={d}");
+        let start = staging.indices.len();
+        for t in 0..nnz {
+            let j = r.u32()?;
+            ensure!(
+                (j as usize) < d,
+                "row {row}: feature index {j} out of range for d={d}"
+            );
+            ensure!(
+                t == 0 || j > staging.indices[start + t - 1],
+                "row {row}: column indices not strictly increasing"
+            );
+            staging.indices.push(j);
+        }
+        for _ in 0..nnz {
+            staging.values.push(r.f32()?);
+        }
+        staging.indptr.push(staging.indices.len());
+    }
+    r.finish()
+}
+
+/// Fully decodes one frame body (client side and tests; the server's
+/// request hot path uses [`decode_score_request_into`] instead).
+impl Frame {
+    pub fn decode(body: &[u8]) -> Result<Frame> {
+        let (kind, mut r) = frame_kind(body)?;
+        match kind {
+            KIND_SCORE_REQUEST => {
+                // Permissive width: a decoded request's own validation
+                // against the model's d happens server-side.
+                let mut staging = RowStaging::new();
+                let (req_id, _) = decode_score_request_into(r, u32::MAX as usize, &mut staging)?;
+                Ok(Frame::ScoreRequest {
+                    req_id,
+                    indptr: staging.indptr,
+                    indices: staging.indices,
+                    values: staging.values,
+                })
+            }
+            KIND_SCORE_RESPONSE => {
+                let req_id = r.u64()?;
+                let n = r.u32()? as usize;
+                ensure!(n <= MAX_REQUEST_ROWS, "response has {n} scores");
+                let mut scores = Vec::with_capacity(n);
+                for _ in 0..n {
+                    scores.push(r.f32()?);
+                }
+                r.finish()?;
+                Ok(Frame::ScoreResponse { req_id, scores })
+            }
+            KIND_ERROR => {
+                let req_id = r.u64()?;
+                let message = r.string(MAX_FRAME)?;
+                r.finish()?;
+                Ok(Frame::Error { req_id, message })
+            }
+            KIND_STATS_REQUEST => {
+                r.finish()?;
+                Ok(Frame::StatsRequest)
+            }
+            KIND_STATS_RESPONSE => {
+                let s = ServerStats {
+                    d: r.u64()?,
+                    k: r.u64()?,
+                    generation: r.u64()?,
+                    fingerprint: r.u64()?,
+                    col_blocks: r.u32()?,
+                    staging_capacity: r.u64()?,
+                    scratch_capacity: r.u64()?,
+                    requests: r.u64()?,
+                    rows: r.u64()?,
+                    batches: r.u64()?,
+                };
+                r.finish()?;
+                Ok(Frame::StatsResponse(s))
+            }
+            other => bail!("unknown serve frame kind {other}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_request_roundtrips_through_staging() {
+        let rows: Vec<(&[u32], &[f32])> = vec![
+            (&[0, 3, 7][..], &[1.0, -0.5, 2.0][..]),
+            (&[][..], &[][..]),
+            (&[2][..], &[4.5][..]),
+        ];
+        let mut body = Vec::new();
+        encode_score_request(99, &rows, &mut body);
+        let (kind, r) = frame_kind(&body).unwrap();
+        assert_eq!(kind, KIND_SCORE_REQUEST);
+        let mut staging = RowStaging::new();
+        let (req_id, n) = decode_score_request_into(r, 8, &mut staging).unwrap();
+        assert_eq!((req_id, n), (99, 3));
+        assert_eq!(staging.indptr, vec![0, 3, 3, 4]);
+        assert_eq!(staging.indices, vec![0, 3, 7, 2]);
+        assert_eq!(staging.values, vec![1.0, -0.5, 2.0, 4.5]);
+        assert_eq!(staging.requests, vec![(99, 0, 3)]);
+
+        // A second staged request appends.
+        let rows2: Vec<(&[u32], &[f32])> = vec![(&[1][..], &[9.0][..])];
+        encode_score_request(100, &rows2, &mut body);
+        let (_, r) = frame_kind(&body).unwrap();
+        decode_score_request_into(r, 8, &mut staging).unwrap();
+        assert_eq!(staging.n_rows(), 4);
+        assert_eq!(staging.requests, vec![(99, 0, 3), (100, 3, 1)]);
+    }
+
+    #[test]
+    fn invalid_rows_reject_without_disturbing_staged_batch() {
+        let mut staging = RowStaging::new();
+        let good: Vec<(&[u32], &[f32])> = vec![(&[0, 1][..], &[1.0, 2.0][..])];
+        let mut body = Vec::new();
+        encode_score_request(1, &good, &mut body);
+        let (_, r) = frame_kind(&body).unwrap();
+        decode_score_request_into(r, 4, &mut staging).unwrap();
+
+        // Out-of-range index.
+        let bad: Vec<(&[u32], &[f32])> = vec![(&[0, 9][..], &[1.0, 2.0][..])];
+        encode_score_request(2, &bad, &mut body);
+        let (_, r) = frame_kind(&body).unwrap();
+        let err = decode_score_request_into(r, 4, &mut staging)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of range"), "{err}");
+
+        // Non-ascending indices.
+        let bad: Vec<(&[u32], &[f32])> = vec![(&[2, 2][..], &[1.0, 2.0][..])];
+        encode_score_request(3, &bad, &mut body);
+        let (_, r) = frame_kind(&body).unwrap();
+        let err = decode_score_request_into(r, 4, &mut staging)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("strictly increasing"), "{err}");
+
+        // The staged batch is untouched.
+        assert_eq!(staging.n_rows(), 1);
+        assert_eq!(staging.indices, vec![0, 1]);
+        assert_eq!(staging.requests, vec![(1, 0, 1)]);
+    }
+
+    #[test]
+    fn response_error_and_stats_roundtrip() {
+        let mut body = Vec::new();
+        encode_score_response(7, &[0.5, -1.5], &mut body);
+        assert_eq!(
+            Frame::decode(&body).unwrap(),
+            Frame::ScoreResponse {
+                req_id: 7,
+                scores: vec![0.5, -1.5]
+            }
+        );
+
+        encode_error(8, "row 0: bad", &mut body);
+        assert_eq!(
+            Frame::decode(&body).unwrap(),
+            Frame::Error {
+                req_id: 8,
+                message: "row 0: bad".into()
+            }
+        );
+
+        encode_stats_request(&mut body);
+        assert_eq!(Frame::decode(&body).unwrap(), Frame::StatsRequest);
+
+        let s = ServerStats {
+            d: 10,
+            k: 4,
+            generation: 2,
+            fingerprint: 0xdead_beef,
+            col_blocks: 3,
+            staging_capacity: 123,
+            scratch_capacity: 456,
+            requests: 7,
+            rows: 70,
+            batches: 3,
+        };
+        encode_stats_response(&s, &mut body);
+        assert_eq!(Frame::decode(&body).unwrap(), Frame::StatsResponse(s));
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected() {
+        assert!(frame_kind(&[]).is_err());
+        assert!(frame_kind(&0xBEEFu16.to_le_bytes()).is_err());
+        let mut body = Vec::new();
+        encode_stats_request(&mut body);
+        body[2] = 42; // unknown kind
+        assert!(Frame::decode(&body).is_err());
+        encode_score_response(1, &[1.0], &mut body);
+        body.push(0); // trailing byte
+        assert!(Frame::decode(&body).is_err());
+        encode_score_response(1, &[1.0], &mut body);
+        body.truncate(body.len() - 2); // truncated scores
+        assert!(Frame::decode(&body).is_err());
+    }
+
+    #[test]
+    fn staging_clear_keeps_capacity() {
+        let mut staging = RowStaging::new();
+        let rows: Vec<(&[u32], &[f32])> = vec![(&[0, 1, 2][..], &[1.0, 2.0, 3.0][..])];
+        let mut body = Vec::new();
+        encode_score_request(1, &rows, &mut body);
+        let (_, r) = frame_kind(&body).unwrap();
+        decode_score_request_into(r, 4, &mut staging).unwrap();
+        let cap = staging.capacity();
+        assert!(cap > 0);
+        staging.clear();
+        assert_eq!(staging.n_rows(), 0);
+        assert_eq!(staging.capacity(), cap, "clear must keep capacity");
+    }
+}

@@ -1,0 +1,36 @@
+//! `dsfacto serve` — the zero-allocation batched scoring server.
+//!
+//! Training produces a checkpoint; this module is the request path that
+//! serves it: a std-only TCP server speaking the length-prefixed frame
+//! protocol of [`frames`] (magic `0xD5FE`, sharing the cluster codec's
+//! wire helpers), scoring LIBSVM-shaped sparse rows through the same
+//! fused kernels the trainers use. Three properties define it, each
+//! pinned by `rust/tests/serve_e2e.rs`:
+//!
+//! * **Zero steady-state allocation** — per-connection grow-only arenas
+//!   ([`frames::RowStaging`], [`model::ServeScratch`]) absorb decode and
+//!   scoring; after the largest batch has been seen once, a request
+//!   touches the heap zero times ([`server`] module docs).
+//! * **Micro-batching with bitwise-stable scores** — pipelined requests
+//!   gathered within `batch_window` (up to `max_batch`) score through
+//!   one fused sweep; batched, unbatched, and `col_blocks > 1` block-wise
+//!   serving all produce bitwise-identical scores, equal to
+//!   [`Predictor::predict_batch`](crate::train::Predictor::predict_batch).
+//! * **Hot reload without request disruption** — a watcher thread swaps
+//!   re-fingerprinted checkpoints behind an `Arc`; the request path pays
+//!   one atomic load per batch and never blocks on a swap
+//!   ([`model`] module docs).
+//!
+//! Latency/throughput numbers (p50/p99 at 1/8/64 streams, batched vs
+//! unbatched) land in `BENCH_serve.json` via
+//! `cargo bench --bench serve_bench` (EXPERIMENTS.md §Serve).
+
+pub mod client;
+pub mod frames;
+pub mod model;
+pub mod server;
+
+pub use client::ScoreClient;
+pub use frames::{Frame, RowStaging, ServerStats};
+pub use model::{ModelSlot, ServeScratch, ServedModel};
+pub use server::{serve, ServeHandle, ServeOptions};

@@ -1,0 +1,338 @@
+//! Model management for the scoring server: the immutable served view of
+//! a checkpoint, the generation-stamped swap slot connections read it
+//! through, and the file watcher that hot-reloads new checkpoints.
+//!
+//! ## Swap contract
+//!
+//! A [`ServedModel`] is immutable once built; connections hold it behind
+//! an `Arc` cached alongside the generation number they loaded it at. The
+//! [`ModelSlot`] publishes the live generation in a single atomic — the
+//! request path's *only* synchronization is one relaxed atomic load per
+//! batch; the slot's mutex is touched exclusively when the generation
+//! actually moved (a reload, i.e. almost never). In-flight batches keep
+//! scoring the model they started with; the old `Arc` drops when its last
+//! connection refreshes. No request is ever dropped or blocked by a swap.
+//!
+//! ## Watcher contract
+//!
+//! The watcher polls the checkpoint path's `(len, mtime)` every
+//! `reload_poll_ms`. On a change it reads the file **once**, fingerprints
+//! the bytes (FNV-1a, the shard cache's hash) and re-parses from that
+//! same buffer — no second read, so there is no parse-after-check race
+//! against a writer (and [`crate::fm::io::save`] renames complete files
+//! into place anyway). A fingerprint equal to the served one is a no-op;
+//! a parse failure keeps the current model and logs, so a bad push can
+//! never take the server down.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, SystemTime};
+
+use anyhow::{Context, Result};
+
+use crate::data::cache::fnv1a;
+use crate::fm::{io as fm_io, FmModel};
+use crate::kernel::{BlockScratch, BlockedFm, FmKernel, Scratch};
+use crate::partition::ColPartition;
+
+/// One immutable, scoring-ready view of a checkpoint. `col_blocks = 1`
+/// serves the fused [`FmKernel`] directly; `col_blocks > 1` serves the
+/// [`ColPartition`]-sliced [`BlockedFm`] (bitwise-identical scores, see
+/// its module docs).
+pub struct ServedModel {
+    pub d: usize,
+    pub k: usize,
+    /// Reload generation: 1 for the initially loaded checkpoint, +1 per
+    /// successful hot swap.
+    pub generation: u64,
+    /// FNV-1a fingerprint of the checkpoint bytes this view was built
+    /// from.
+    pub fingerprint: u64,
+    pub col_blocks: usize,
+    scorer: Scorer,
+}
+
+enum Scorer {
+    Fused(FmKernel),
+    Blocked(BlockedFm),
+}
+
+impl ServedModel {
+    /// Builds the served view of `m`. `col_blocks` is clamped to `[1, d]`.
+    pub fn build(m: &FmModel, col_blocks: usize, generation: u64, fingerprint: u64) -> Self {
+        let col_blocks = col_blocks.clamp(1, m.d.max(1));
+        let scorer = if col_blocks == 1 {
+            Scorer::Fused(FmKernel::from_model(m))
+        } else {
+            Scorer::Blocked(BlockedFm::from_model(
+                m,
+                ColPartition::with_n_blocks(m.d, col_blocks),
+            ))
+        };
+        ServedModel {
+            d: m.d,
+            k: m.k,
+            generation,
+            fingerprint,
+            col_blocks,
+            scorer,
+        }
+    }
+
+    /// Reads, fingerprints and builds a checkpoint file as generation
+    /// `generation`.
+    pub fn load(path: &Path, col_blocks: usize, generation: u64) -> Result<ServedModel> {
+        let bytes = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        let m = fm_io::read_model(&bytes[..])
+            .with_context(|| format!("parse model {}", path.display()))?;
+        Ok(ServedModel::build(&m, col_blocks, generation, fnv1a(&bytes)))
+    }
+
+    /// Scores staged CSR rows into `out`. Allocation-free once `scratch`
+    /// has grown to the largest batch. Scores are bitwise identical
+    /// across `col_blocks` settings.
+    pub fn score_rows(
+        &self,
+        indptr: &[usize],
+        indices: &[u32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut ServeScratch,
+    ) {
+        match &self.scorer {
+            Scorer::Fused(k) => k.score_rows(indptr, indices, values, out, &mut scratch.fused),
+            Scorer::Blocked(b) => {
+                b.score_rows(indptr, indices, values, out, &mut scratch.blocked)
+            }
+        }
+    }
+}
+
+/// Per-connection scoring scratch covering both scorer shapes, so a hot
+/// swap that changes `k` (or a future per-generation `col_blocks`) reuses
+/// the same arena. Grow-only, like its parts.
+#[derive(Default)]
+pub struct ServeScratch {
+    fused: Scratch,
+    blocked: BlockScratch,
+}
+
+impl ServeScratch {
+    pub fn new() -> Self {
+        ServeScratch::default()
+    }
+
+    /// Combined grow-only capacity watermark in floats.
+    pub fn capacity(&self) -> usize {
+        self.fused.capacity() + self.blocked.capacity()
+    }
+}
+
+/// The swap slot: the one place a model generation is published.
+pub struct ModelSlot {
+    current: Mutex<Arc<ServedModel>>,
+    generation: AtomicU64,
+}
+
+impl ModelSlot {
+    pub fn new(m: ServedModel) -> Self {
+        let generation = AtomicU64::new(m.generation);
+        ModelSlot {
+            current: Mutex::new(Arc::new(m)),
+            generation,
+        }
+    }
+
+    /// The live generation (one relaxed load; the request path's per-batch
+    /// staleness check).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// A fresh handle to the live model (locks; used at connection setup
+    /// and by the stats path).
+    pub fn get(&self) -> Arc<ServedModel> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// Publishes a new generation. The generation counter is bumped only
+    /// after the model is visible behind the mutex, so a reader that
+    /// observes the new generation always refreshes to the new model.
+    pub fn install(&self, m: ServedModel) {
+        let generation = m.generation;
+        *self.current.lock().unwrap() = Arc::new(m);
+        self.generation.store(generation, Ordering::Release);
+    }
+
+    /// Refreshes a connection's cached handle iff the slot moved past it.
+    /// Steady state this is one atomic load and nothing else.
+    pub fn refresh(&self, cached: &mut Arc<ServedModel>, cached_gen: &mut u64) {
+        let live = self.generation();
+        if live != *cached_gen {
+            *cached = self.get();
+            *cached_gen = cached.generation;
+        }
+    }
+}
+
+/// Spawns the checkpoint watcher thread. Returns its join handle; the
+/// thread exits once `down` is set.
+pub fn spawn_watcher(
+    path: PathBuf,
+    col_blocks: usize,
+    poll: Duration,
+    slot: Arc<ModelSlot>,
+    down: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("serve-reload".into())
+        .spawn(move || {
+            let mut last_meta = file_meta(&path);
+            while !down.load(Ordering::Relaxed) {
+                std::thread::sleep(poll);
+                let meta = file_meta(&path);
+                if meta == last_meta || meta.is_none() {
+                    // Unchanged — or gone (a swap-in-progress rename or a
+                    // deleted checkpoint keeps the served model).
+                    continue;
+                }
+                last_meta = meta;
+                let current = slot.get();
+                match ServedModel::load(&path, col_blocks, current.generation + 1) {
+                    Ok(m) if m.fingerprint == current.fingerprint => {} // touch, not a new model
+                    Ok(m) => {
+                        eprintln!(
+                            "dsfacto serve: reloaded {} (generation {}, fingerprint {:016x})",
+                            path.display(),
+                            m.generation,
+                            m.fingerprint
+                        );
+                        slot.install(m);
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "dsfacto serve: keeping generation {} — reload of {} failed: {e:#}",
+                            current.generation,
+                            path.display()
+                        );
+                    }
+                }
+            }
+        })
+        .expect("spawn reload watcher")
+}
+
+fn file_meta(path: &Path) -> Option<(u64, SystemTime)> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.len(), meta.modified().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn model(seed: u64) -> FmModel {
+        let mut rng = Pcg64::seeded(seed);
+        let mut m = FmModel::init(9, 3, 0.2, &mut rng);
+        for x in m.w.iter_mut() {
+            *x = rng.normal32(0.0, 0.4);
+        }
+        m.w0 = -0.5;
+        m
+    }
+
+    #[test]
+    fn blocked_and_fused_served_scores_are_bitwise_equal() {
+        let m = model(5);
+        let rows: Vec<(Vec<u32>, Vec<f32>)> = vec![
+            (vec![0, 4, 8], vec![1.0, -2.0, 0.5]),
+            (vec![], vec![]),
+            (vec![2, 3], vec![0.25, 4.0]),
+        ];
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (idx, val) in &rows {
+            indices.extend_from_slice(idx);
+            values.extend_from_slice(val);
+            indptr.push(indices.len());
+        }
+        let fused = ServedModel::build(&m, 1, 1, 7);
+        let mut want = vec![0f32; rows.len()];
+        fused.score_rows(&indptr, &indices, &values, &mut want, &mut ServeScratch::new());
+        for blocks in [2usize, 3, 9, 50] {
+            let served = ServedModel::build(&m, blocks, 1, 7);
+            assert_eq!(served.col_blocks, blocks.min(9));
+            let mut got = vec![0f32; rows.len()];
+            served.score_rows(&indptr, &indices, &values, &mut got, &mut ServeScratch::new());
+            assert_eq!(got, want, "blocks={blocks}");
+        }
+    }
+
+    #[test]
+    fn slot_swaps_without_disturbing_cached_handles() {
+        let slot = ModelSlot::new(ServedModel::build(&model(1), 1, 1, 111));
+        let mut cached = slot.get();
+        let mut gen = cached.generation;
+        assert_eq!(gen, 1);
+        slot.refresh(&mut cached, &mut gen);
+        assert_eq!(gen, 1, "no swap, no movement");
+
+        slot.install(ServedModel::build(&model(2), 1, 2, 222));
+        // The cached handle still scores generation 1 until refreshed.
+        assert_eq!(cached.fingerprint, 111);
+        slot.refresh(&mut cached, &mut gen);
+        assert_eq!((gen, cached.fingerprint), (2, 222));
+    }
+
+    #[test]
+    fn watcher_swaps_on_change_and_survives_corrupt_push() {
+        let dir = std::env::temp_dir().join("dsfacto_serve_watcher_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("model.dsfm");
+        fm_io::save(&model(1), &path).unwrap();
+        let first = ServedModel::load(&path, 1, 1).unwrap();
+        let fp1 = first.fingerprint;
+        let slot = Arc::new(ModelSlot::new(first));
+        let down = Arc::new(AtomicBool::new(false));
+        let watcher = spawn_watcher(
+            path.clone(),
+            1,
+            Duration::from_millis(10),
+            Arc::clone(&slot),
+            Arc::clone(&down),
+        );
+
+        let wait_for = |pred: &dyn Fn() -> bool, what: &str| {
+            for _ in 0..500 {
+                if pred() {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            panic!("timed out waiting for {what}");
+        };
+
+        // A real new checkpoint swaps in as generation 2.
+        fm_io::save(&model(2), &path).unwrap();
+        wait_for(&|| slot.generation() == 2, "generation 2");
+        assert_ne!(slot.get().fingerprint, fp1);
+        let fp2 = slot.get().fingerprint;
+
+        // A corrupt push is ignored: generation and fingerprint hold.
+        std::fs::write(&path, b"NOPE not a model").unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(slot.generation(), 2);
+        assert_eq!(slot.get().fingerprint, fp2);
+
+        // And a subsequent good push still lands (generation 3).
+        fm_io::save(&model(3), &path).unwrap();
+        wait_for(&|| slot.generation() == 3, "generation 3");
+
+        down.store(true, Ordering::SeqCst);
+        watcher.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

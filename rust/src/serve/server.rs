@@ -1,0 +1,469 @@
+//! The scoring server: accept loop, per-connection micro-batching request
+//! loop, and the [`ServeHandle`] that owns the whole thing.
+//!
+//! ## Hot-path shape
+//!
+//! Each connection gets one thread and one set of grow-only arenas
+//! ([`RowStaging`] for inbound rows, [`ServeScratch`] for the kernel
+//! accumulators, reused `Vec<u8>`s for frames). After warmup — once the
+//! largest batch a connection will ever see has been staged once — a
+//! request costs **zero heap allocation**: decode appends into staging,
+//! scoring runs through the borrowed-scratch kernels, responses are
+//! assembled into a reused write buffer. The e2e suite pins this by
+//! sampling the arena watermarks over a steady load.
+//!
+//! ## Micro-batching
+//!
+//! A batch opens with the first request frame and keeps gathering while
+//! (a) fewer than `max_batch` requests are staged and (b) the next frame
+//! arrives within `batch_window`. Pipelined clients therefore amortize
+//! one fused [`ServedModel::score_rows`] sweep (and one model-staleness
+//! check, and one socket write) over many requests; a lone synchronous
+//! client pays at most one `batch_window` of extra latency. Batched and
+//! unbatched scores are bitwise identical — scoring is row-independent —
+//! which the e2e suite also pins.
+//!
+//! The model handle is refreshed from the [`ModelSlot`] once per batch,
+//! *before* any of the batch's rows are validated, so a request's width
+//! check and its scoring always see the same model even across a hot
+//! swap (see [`super::model`] for the swap contract).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::frames::{self, RowStaging, ServerStats, MAX_FRAME};
+use super::model::{spawn_watcher, ModelSlot, ServeScratch, ServedModel};
+
+/// Everything `dsfacto serve` needs to come up.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Listen address (`127.0.0.1:0` picks an ephemeral port).
+    pub addr: String,
+    /// Checkpoint to serve (and to watch for hot reloads).
+    pub model_path: PathBuf,
+    /// Column blocks to slice the factor matrix into (1 = the fused
+    /// kernel; >1 = the block-wise sweep, bitwise-identical scores).
+    pub col_blocks: usize,
+    /// Most requests gathered into one scoring batch.
+    pub max_batch: usize,
+    /// How long a non-empty batch waits for the next pipelined request.
+    pub batch_window: Duration,
+    /// Checkpoint poll period for hot reload.
+    pub reload_poll: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:7878".into(),
+            model_path: PathBuf::new(),
+            col_blocks: 1,
+            max_batch: 64,
+            batch_window: Duration::from_micros(100),
+            reload_poll: Duration::from_millis(200),
+        }
+    }
+}
+
+#[derive(Default)]
+pub(crate) struct Counters {
+    pub requests: AtomicU64,
+    pub rows: AtomicU64,
+    pub batches: AtomicU64,
+}
+
+/// A running scoring server. Dropping it (or calling
+/// [`shutdown`](ServeHandle::shutdown)) stops the acceptor, the reload
+/// watcher and every connection thread.
+pub struct ServeHandle {
+    addr: SocketAddr,
+    slot: Arc<ModelSlot>,
+    counters: Arc<Counters>,
+    down: Arc<AtomicBool>,
+    threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl ServeHandle {
+    /// The bound listen address (resolves `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live model generation (1 = initial load).
+    pub fn generation(&self) -> u64 {
+        self.slot.generation()
+    }
+
+    /// Requests answered so far.
+    pub fn requests(&self) -> u64 {
+        self.counters.requests.load(Ordering::Relaxed)
+    }
+
+    /// Stops everything and joins the threads.
+    pub fn shutdown(&self) {
+        self.down.store(true, Ordering::SeqCst);
+        // Join outside the lock: the acceptor pushes new connection
+        // handles under it, so holding it across `join` would deadlock
+        // against a connection accepted during shutdown.
+        loop {
+            let drained: Vec<_> = {
+                let mut threads = self.threads.lock().unwrap();
+                threads.drain(..).collect()
+            };
+            if drained.is_empty() {
+                break;
+            }
+            for h in drained {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for ServeHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Loads the checkpoint, binds the listener and spawns the acceptor and
+/// the reload watcher. Returns once the server is accepting.
+pub fn serve(opts: &ServeOptions) -> Result<ServeHandle> {
+    let initial = ServedModel::load(&opts.model_path, opts.col_blocks, 1)
+        .with_context(|| format!("load model {}", opts.model_path.display()))?;
+    eprintln!(
+        "dsfacto serve: model d={} k={} col_blocks={} fingerprint={:016x}",
+        initial.d, initial.k, initial.col_blocks, initial.fingerprint
+    );
+    let slot = Arc::new(ModelSlot::new(initial));
+    let counters = Arc::new(Counters::default());
+    let down = Arc::new(AtomicBool::new(false));
+    let threads = Arc::new(Mutex::new(Vec::new()));
+
+    let listener = TcpListener::bind(&opts.addr)
+        .with_context(|| format!("bind {}", opts.addr))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+
+    let watcher = spawn_watcher(
+        opts.model_path.clone(),
+        opts.col_blocks,
+        opts.reload_poll,
+        Arc::clone(&slot),
+        Arc::clone(&down),
+    );
+    threads.lock().unwrap().push(watcher);
+
+    let acceptor = {
+        let slot = Arc::clone(&slot);
+        let counters = Arc::clone(&counters);
+        let down = Arc::clone(&down);
+        let threads = Arc::clone(&threads);
+        let conn_opts = ConnOptions {
+            max_batch: opts.max_batch.max(1),
+            batch_window: opts.batch_window,
+        };
+        std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || {
+                let mut conn_id = 0u64;
+                while !down.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            conn_id += 1;
+                            stream.set_nodelay(true).ok();
+                            let slot = Arc::clone(&slot);
+                            let counters = Arc::clone(&counters);
+                            let down = Arc::clone(&down);
+                            let h = std::thread::Builder::new()
+                                .name(format!("serve-conn-{conn_id}"))
+                                .spawn(move || {
+                                    connection_loop(stream, slot, counters, down, conn_opts)
+                                })
+                                .expect("spawn connection thread");
+                            threads.lock().unwrap().push(h);
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .context("spawn acceptor")?
+    };
+    threads.lock().unwrap().push(acceptor);
+
+    Ok(ServeHandle {
+        addr,
+        slot,
+        counters,
+        down,
+        threads,
+    })
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ConnOptions {
+    max_batch: usize,
+    batch_window: Duration,
+}
+
+/// A reply owed for one inbound frame, in arrival order.
+enum Pending {
+    /// `(req_id, first_row, n_rows)` — scores come from the batch output.
+    Scores(u64, usize, usize),
+    /// A request rejected at validation; the connection survives.
+    Error(u64, String),
+    /// Stats snapshot taken at flush time.
+    Stats,
+}
+
+/// Idle read timeout: bounds how long a blocked read can ignore `down`.
+const IDLE_TICK: Duration = Duration::from_millis(50);
+
+fn connection_loop(
+    mut stream: TcpStream,
+    slot: Arc<ModelSlot>,
+    counters: Arc<Counters>,
+    down: Arc<AtomicBool>,
+    opts: ConnOptions,
+) {
+    if stream.set_read_timeout(Some(IDLE_TICK)).is_err() {
+        return;
+    }
+    // Connection-lifetime state: every buffer below is grow-only, so the
+    // steady state allocates nothing.
+    let mut model = slot.get();
+    let mut model_gen = model.generation;
+    let mut staging = RowStaging::new();
+    let mut scratch = ServeScratch::new();
+    let mut scores: Vec<f32> = Vec::new();
+    let mut frame: Vec<u8> = Vec::new();
+    let mut body: Vec<u8> = Vec::new();
+    let mut outbuf: Vec<u8> = Vec::new();
+    let mut pending: Vec<Pending> = Vec::new();
+
+    'conn: loop {
+        // Wait for the frame that opens a batch.
+        match read_frame(&mut stream, &mut frame, &down, None) {
+            ReadOutcome::Frame => {}
+            ReadOutcome::Idle => continue,
+            ReadOutcome::Closed => break,
+        }
+        // One model handle per batch: validation and scoring agree on d
+        // even across a hot swap; in-flight batches are never retargeted.
+        slot.refresh(&mut model, &mut model_gen);
+        staging.clear();
+        pending.clear();
+
+        // Gather: stage frames until the batch is full or the window
+        // closes. The short read timeout makes the window precise.
+        let mut gathering = true;
+        while gathering {
+            match handle_frame(&frame, &model, &mut staging, &mut pending) {
+                FrameAction::Continue => {}
+                FrameAction::Flush => break,
+                FrameAction::Fatal => break 'conn,
+            }
+            if pending.len() >= opts.max_batch {
+                break;
+            }
+            if stream.set_read_timeout(Some(opts.batch_window.max(Duration::from_micros(1)))).is_err() {
+                break 'conn;
+            }
+            let deadline = Instant::now() + opts.batch_window;
+            match read_frame(&mut stream, &mut frame, &down, Some(deadline)) {
+                ReadOutcome::Frame => {}
+                ReadOutcome::Idle => gathering = false,
+                ReadOutcome::Closed => {
+                    // Flush what we have, then close.
+                    gathering = false;
+                    down_after_flush(&mut stream);
+                }
+            }
+        }
+        if stream.set_read_timeout(Some(IDLE_TICK)).is_err() {
+            break;
+        }
+
+        // Score the whole staged batch in one sweep.
+        let n = staging.n_rows();
+        if scores.len() < n {
+            scores.resize(n, 0.0);
+        }
+        if n > 0 {
+            model.score_rows(
+                &staging.indptr,
+                &staging.indices,
+                &staging.values,
+                &mut scores[..n],
+                &mut scratch,
+            );
+            counters.batches.fetch_add(1, Ordering::Relaxed);
+            counters.rows.fetch_add(n as u64, Ordering::Relaxed);
+        }
+
+        // Reply in arrival order, one buffered write for the whole batch.
+        outbuf.clear();
+        for p in &pending {
+            match p {
+                Pending::Scores(req_id, first, rows) => {
+                    counters.requests.fetch_add(1, Ordering::Relaxed);
+                    frames::encode_score_response(*req_id, &scores[*first..*first + *rows], &mut body);
+                }
+                Pending::Error(req_id, msg) => {
+                    frames::encode_error(*req_id, msg, &mut body);
+                }
+                Pending::Stats => {
+                    let stats = ServerStats {
+                        d: model.d as u64,
+                        k: model.k as u64,
+                        generation: model.generation,
+                        fingerprint: model.fingerprint,
+                        col_blocks: model.col_blocks as u32,
+                        staging_capacity: staging.capacity() as u64,
+                        scratch_capacity: scratch.capacity() as u64,
+                        requests: counters.requests.load(Ordering::Relaxed),
+                        rows: counters.rows.load(Ordering::Relaxed),
+                        batches: counters.batches.load(Ordering::Relaxed),
+                    };
+                    frames::encode_stats_response(&stats, &mut body);
+                }
+            }
+            outbuf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            outbuf.extend_from_slice(&body);
+        }
+        if !outbuf.is_empty() && stream.write_all(&outbuf).is_err() {
+            break;
+        }
+    }
+}
+
+enum FrameAction {
+    Continue,
+    Flush,
+    Fatal,
+}
+
+/// Classifies and stages one inbound frame. Request-level problems
+/// (invalid rows) become [`Pending::Error`] replies; protocol-level
+/// problems (wrong magic, unknown kind, garbled header) are fatal for the
+/// connection, since the stream can no longer be trusted.
+fn handle_frame(
+    frame: &[u8],
+    model: &ServedModel,
+    staging: &mut RowStaging,
+    pending: &mut Vec<Pending>,
+) -> FrameAction {
+    let (kind, reader) = match frames::frame_kind(frame) {
+        Ok(k) => k,
+        Err(_) => return FrameAction::Fatal,
+    };
+    match kind {
+        frames::KIND_SCORE_REQUEST => {
+            // Peek the request id off a reader clone so a row-validation
+            // failure can still name the request in its error frame.
+            let req_id = match reader.clone().u64() {
+                Ok(id) => id,
+                Err(_) => return FrameAction::Fatal,
+            };
+            match frames::decode_score_request_into(reader, model.d, staging) {
+                Ok((id, n_rows)) => {
+                    pending.push(Pending::Scores(id, staging.n_rows() - n_rows, n_rows));
+                    FrameAction::Continue
+                }
+                Err(e) => {
+                    pending.push(Pending::Error(req_id, format!("{e:#}")));
+                    FrameAction::Continue
+                }
+            }
+        }
+        frames::KIND_STATS_REQUEST => {
+            // Stats flush the batch: the snapshot must reflect every
+            // request that arrived before it.
+            pending.push(Pending::Stats);
+            FrameAction::Flush
+        }
+        _ => FrameAction::Fatal,
+    }
+}
+
+/// Marks the stream so the post-flush read discovers the close: shutting
+/// down our read half makes the next `read` return `Ok(0)`.
+fn down_after_flush(stream: &mut TcpStream) {
+    stream.shutdown(std::net::Shutdown::Read).ok();
+}
+
+enum ReadOutcome {
+    Frame,
+    /// No frame *started* before the deadline (or, with no deadline, one
+    /// idle tick elapsed) — distinguishable from `Closed` so the batcher
+    /// can flush and keep the connection.
+    Idle,
+    Closed,
+}
+
+/// Reads one length-prefixed frame into `frame`. With a deadline, gives
+/// up (`Idle`) only between frames — a frame whose first byte arrived is
+/// always read to completion. Tolerates `WouldBlock`/`TimedOut` from the
+/// socket's read timeout; polls `down` throughout.
+fn read_frame(
+    stream: &mut TcpStream,
+    frame: &mut Vec<u8>,
+    down: &AtomicBool,
+    deadline: Option<Instant>,
+) -> ReadOutcome {
+    let mut len_buf = [0u8; 4];
+    let mut off = 0usize;
+    while off < 4 {
+        if down.load(Ordering::Relaxed) {
+            return ReadOutcome::Closed;
+        }
+        match stream.read(&mut len_buf[off..]) {
+            Ok(0) => return ReadOutcome::Closed,
+            Ok(n) => off += n,
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if off == 0 {
+                    match deadline {
+                        Some(d) if Instant::now() >= d => return ReadOutcome::Idle,
+                        Some(_) => {}
+                        None => return ReadOutcome::Idle,
+                    }
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return ReadOutcome::Closed,
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return ReadOutcome::Closed; // corrupt stream
+    }
+    frame.resize(len, 0);
+    let mut read = 0usize;
+    while read < len {
+        if down.load(Ordering::Relaxed) {
+            return ReadOutcome::Closed;
+        }
+        match stream.read(&mut frame[read..]) {
+            Ok(0) => return ReadOutcome::Closed,
+            Ok(n) => read += n,
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return ReadOutcome::Closed,
+        }
+    }
+    ReadOutcome::Frame
+}

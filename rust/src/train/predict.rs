@@ -7,6 +7,7 @@ use anyhow::ensure;
 
 use crate::data::{Csr, Dataset};
 use crate::fm::FmModel;
+use crate::kernel::{FmKernel, Scratch};
 use crate::runtime::{artifact_name_for, FmExecutable, Runtime};
 
 /// Scores examples; the request-path abstraction.
@@ -20,6 +21,17 @@ pub trait Predictor {
     /// Scores every row of a sparse block into `out`
     /// (`out.len() == rows.n_rows()`).
     fn predict_batch(&self, rows: &Csr, out: &mut [f32]) -> crate::Result<()>;
+
+    /// [`predict_batch`](Predictor::predict_batch) borrowing the caller's
+    /// scratch arena, so a request loop that keeps one `Scratch` per
+    /// connection allocates nothing per batch. The default ignores the
+    /// arena and falls back to `predict_batch` (which may allocate);
+    /// zero-alloc backends override it. Scores are identical to
+    /// `predict_batch` either way.
+    fn score_batch(&self, rows: &Csr, out: &mut [f32], scratch: &mut Scratch) -> crate::Result<()> {
+        let _ = scratch;
+        self.predict_batch(rows, out)
+    }
 
     /// Convenience: scores a whole dataset.
     fn predict_dataset(&self, ds: &Dataset) -> crate::Result<Vec<f32>> {
@@ -60,9 +72,68 @@ impl Predictor for FmModel {
             rows.n_cols(),
             self.d
         );
-        let kern = crate::kernel::FmKernel::from_model(self);
-        let mut scratch = crate::kernel::Scratch::for_k(self.k);
+        let kern = FmKernel::from_model(self);
+        let mut scratch = Scratch::for_k(self.k);
         kern.score_batch(rows, out, &mut scratch);
+        Ok(())
+    }
+
+    fn score_batch(&self, rows: &Csr, out: &mut [f32], scratch: &mut Scratch) -> crate::Result<()> {
+        ensure!(
+            out.len() == rows.n_rows(),
+            "output buffer {} != rows {}",
+            out.len(),
+            rows.n_rows()
+        );
+        ensure!(
+            rows.n_cols() <= self.d,
+            "block width {} exceeds model d={}",
+            rows.n_cols(),
+            self.d
+        );
+        // Still builds the kernel view per call (the `FmKernel` impl below
+        // skips even that); only the accumulators are borrowed.
+        FmKernel::from_model(self).score_batch(rows, out, scratch);
+        Ok(())
+    }
+}
+
+/// The fused lane-blocked kernel served directly: the scoring server holds
+/// a long-lived `FmKernel` per model generation and drives batches through
+/// the borrowed-scratch path, so steady-state requests allocate nothing.
+impl Predictor for FmKernel {
+    fn name(&self) -> &'static str {
+        "kernel"
+    }
+
+    fn predict_one(&self, idx: &[u32], val: &[f32]) -> crate::Result<f32> {
+        ensure!(idx.len() == val.len(), "index/value length mismatch");
+        ensure!(
+            idx.iter().all(|&j| (j as usize) < self.d()),
+            "feature index out of range for d={}",
+            self.d()
+        );
+        Ok(self.score(idx, val, &mut Scratch::for_k(self.k())))
+    }
+
+    fn predict_batch(&self, rows: &Csr, out: &mut [f32]) -> crate::Result<()> {
+        Predictor::score_batch(self, rows, out, &mut Scratch::for_k(self.k()))
+    }
+
+    fn score_batch(&self, rows: &Csr, out: &mut [f32], scratch: &mut Scratch) -> crate::Result<()> {
+        ensure!(
+            out.len() == rows.n_rows(),
+            "output buffer {} != rows {}",
+            out.len(),
+            rows.n_rows()
+        );
+        ensure!(
+            rows.n_cols() <= self.d(),
+            "block width {} exceeds model d={}",
+            rows.n_cols(),
+            self.d()
+        );
+        FmKernel::score_batch(self, rows, out, scratch);
         Ok(())
     }
 }
@@ -189,6 +260,31 @@ mod tests {
             );
             assert_eq!(p.predict_one(idx, val).unwrap(), want);
         }
+    }
+
+    #[test]
+    fn borrowed_scratch_batches_are_bitwise_equal() {
+        let ds = synth::table2_dataset("housing", 9).unwrap();
+        let mut rng = Pcg64::seeded(11);
+        let model = FmModel::init(ds.d(), 4, 0.1, &mut rng);
+        let mut want = vec![0f32; ds.n()];
+        model.predict_batch(&ds.rows, &mut want).unwrap();
+
+        let mut scratch = Scratch::new();
+        let mut got = vec![0f32; ds.n()];
+        Predictor::score_batch(&model, &ds.rows, &mut got, &mut scratch).unwrap();
+        assert_eq!(got, want, "FmModel::score_batch");
+
+        let kern = FmKernel::from_model(&model);
+        got.fill(0.0);
+        Predictor::score_batch(&kern, &ds.rows, &mut got, &mut scratch).unwrap();
+        assert_eq!(got, want, "FmKernel::score_batch");
+        got.fill(0.0);
+        kern.predict_batch(&ds.rows, &mut got).unwrap();
+        assert_eq!(got, want, "FmKernel::predict_batch");
+        let (idx, val) = ds.rows.row(3);
+        assert_eq!(Predictor::predict_one(&kern, idx, val).unwrap(), want[3]);
+        assert!(Predictor::predict_one(&kern, &[1_000_000], &[1.0]).is_err());
     }
 
     #[test]

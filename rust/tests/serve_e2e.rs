@@ -1,0 +1,299 @@
+//! End-to-end tests for `dsfacto serve` (src/serve/): real TCP
+//! connections against an in-process server, pinning the three
+//! properties the serving layer promises —
+//!
+//! * scores over the wire are **bitwise equal** to
+//!   `Predictor::predict_batch`, concurrently, batched or unbatched,
+//!   and regardless of `col_blocks`;
+//! * the per-connection arenas stop growing once warm (**zero
+//!   steady-state allocation**), observable through the stats frame's
+//!   capacity watermarks;
+//! * a **hot checkpoint swap** lands on live connections without
+//!   dropping them, and request-level errors leave the connection
+//!   scoring.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use dsfacto::data::{synth, Dataset};
+use dsfacto::fm::{io as fm_io, FmModel};
+use dsfacto::serve::{serve, ScoreClient, ServeHandle, ServeOptions};
+use dsfacto::train::Predictor;
+use dsfacto::util::rng::Pcg64;
+
+fn test_model(d: usize, k: usize, seed: u64) -> FmModel {
+    let mut rng = Pcg64::seeded(seed);
+    let mut m = FmModel::init(d, k, 0.3, &mut rng);
+    for x in m.w.iter_mut() {
+        *x = rng.normal32(0.0, 0.5);
+    }
+    m.w0 = 0.25;
+    m
+}
+
+fn test_rows() -> Dataset {
+    synth::table2_dataset("housing", 11).unwrap()
+}
+
+/// Rows as the wire wants them: parallel (indices, values) slices.
+fn wire_rows(ds: &Dataset) -> Vec<(&[u32], &[f32])> {
+    (0..ds.n()).map(|i| ds.rows.row(i)).collect()
+}
+
+/// Reference scores straight off the kernel path the trainers use.
+fn reference_scores(m: &FmModel, ds: &Dataset) -> Vec<f32> {
+    Predictor::predict_dataset(m, ds).unwrap()
+}
+
+struct TestServer {
+    handle: ServeHandle,
+    model_path: PathBuf,
+    dir: PathBuf,
+}
+
+impl TestServer {
+    /// Saves `m` into a fresh temp dir and starts a server over it.
+    fn start(name: &str, m: &FmModel, tweak: impl FnOnce(&mut ServeOptions)) -> TestServer {
+        let dir = std::env::temp_dir().join(format!("dsfacto_serve_e2e_{name}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let model_path = dir.join("model.dsfm");
+        fm_io::save(m, &model_path).unwrap();
+        let mut opts = ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            model_path: model_path.clone(),
+            ..Default::default()
+        };
+        tweak(&mut opts);
+        let handle = serve(&opts).unwrap();
+        TestServer {
+            handle,
+            model_path,
+            dir,
+        }
+    }
+
+    fn connect(&self) -> ScoreClient {
+        ScoreClient::connect(&self.handle.addr().to_string()).unwrap()
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn concurrent_streams_score_bitwise_equal_to_predict_batch() {
+    let ds = test_rows();
+    let m = test_model(ds.d(), 4, 3);
+    let want = reference_scores(&m, &ds);
+    let server = TestServer::start("concurrent", &m, |_| {});
+
+    // 8 concurrent client streams, each scoring its own interleaved row
+    // subset over its own connection, all racing the same server.
+    std::thread::scope(|scope| {
+        for stream_id in 0..8usize {
+            let server = &server;
+            let ds = &ds;
+            let want = &want;
+            scope.spawn(move || {
+                let mut client = server.connect();
+                let picks: Vec<usize> = (0..ds.n()).filter(|i| i % 8 == stream_id).collect();
+                let rows: Vec<(&[u32], &[f32])> = picks.iter().map(|&i| ds.rows.row(i)).collect();
+                let got = client.score(&rows).unwrap();
+                let expect: Vec<f32> = picks.iter().map(|&i| want[i]).collect();
+                assert_eq!(
+                    bits(&got),
+                    bits(&expect),
+                    "stream {stream_id}: served scores are not bitwise equal"
+                );
+            });
+        }
+    });
+    assert_eq!(server.handle.requests(), 8);
+}
+
+#[test]
+fn batched_pipelining_is_bitwise_equal_to_unbatched_and_coalesces() {
+    let ds = test_rows();
+    let m = test_model(ds.d(), 4, 5);
+    let want = reference_scores(&m, &ds);
+    let n_requests = 16usize;
+    // A wide window so every pipelined request of the burst lands in one
+    // gather even on a slow machine.
+    let server = TestServer::start("batched", &m, |o| {
+        o.max_batch = n_requests;
+        o.batch_window = Duration::from_millis(200);
+    });
+
+    // Unbatched: one synchronous request per row — every score waits for
+    // its reply, so each one is its own sweep.
+    let mut sync_client = server.connect();
+    let mut unbatched = Vec::new();
+    for i in 0..n_requests {
+        unbatched.extend(sync_client.score(&[ds.rows.row(i)]).unwrap());
+    }
+    assert_eq!(bits(&unbatched), bits(&want[..n_requests]));
+
+    // Batched: fire the whole burst, then collect. The server gathers the
+    // burst into fewer fused sweeps; scores must not change a bit.
+    let mut pipelined = server.connect();
+    let mut ids = Vec::new();
+    for i in 0..n_requests {
+        ids.push(pipelined.send_score_request(&[ds.rows.row(i)]).unwrap());
+    }
+    let mut batched = Vec::new();
+    for &expect_id in &ids {
+        match pipelined.recv().unwrap() {
+            dsfacto::serve::Frame::ScoreResponse { req_id, mut scores } => {
+                assert_eq!(req_id, expect_id, "responses must come back in order");
+                assert_eq!(scores.len(), 1);
+                batched.push(scores.pop().unwrap());
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert_eq!(
+        bits(&batched),
+        bits(&unbatched),
+        "batched scores diverge from unbatched"
+    );
+
+    let stats = pipelined.stats().unwrap();
+    assert_eq!(stats.requests, 2 * n_requests as u64);
+    assert!(
+        stats.batches < stats.requests,
+        "pipelined burst never coalesced: {} batches for {} requests",
+        stats.batches,
+        stats.requests
+    );
+}
+
+#[test]
+fn steady_state_arena_capacity_stops_growing() {
+    let ds = test_rows();
+    let m = test_model(ds.d(), 4, 7);
+    let server = TestServer::start("zeroalloc", &m, |_| {});
+    let mut client = server.connect();
+    let rows = wire_rows(&ds);
+    let batch = &rows[..32.min(rows.len())];
+
+    // Warmup: let every grow-only arena see the working batch shape.
+    for _ in 0..10 {
+        client.score(batch).unwrap();
+    }
+    let warm = client.stats().unwrap();
+    assert!(warm.staging_capacity > 0 && warm.scratch_capacity > 0);
+
+    // Steady state: the same load must not move either watermark — the
+    // capacities are exactly the connection's allocation history.
+    for _ in 0..50 {
+        client.score(batch).unwrap();
+    }
+    let after = client.stats().unwrap();
+    assert_eq!(
+        (after.staging_capacity, after.scratch_capacity),
+        (warm.staging_capacity, warm.scratch_capacity),
+        "steady-state load grew a per-connection arena"
+    );
+}
+
+#[test]
+fn hot_reload_swaps_models_without_dropping_the_connection() {
+    let ds = test_rows();
+    let m1 = test_model(ds.d(), 4, 21);
+    let m2 = test_model(ds.d(), 4, 22);
+    let want1 = reference_scores(&m1, &ds);
+    let want2 = reference_scores(&m2, &ds);
+    assert_ne!(bits(&want1), bits(&want2), "test models must differ");
+
+    let server = TestServer::start("reload", &m1, |o| {
+        o.reload_poll = Duration::from_millis(10);
+    });
+    let mut client = server.connect();
+    let rows = wire_rows(&ds);
+
+    let got = client.score(&rows).unwrap();
+    assert_eq!(bits(&got), bits(&want1));
+    let fp1 = client.stats().unwrap().fingerprint;
+
+    // Push a new checkpoint; the atomic save renames a complete file into
+    // place, so the watcher can never parse a torn write.
+    fm_io::save(&m2, &server.model_path).unwrap();
+    for _ in 0..500 {
+        if client.stats().unwrap().generation >= 2 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.generation, 2, "hot reload never landed");
+    assert_ne!(stats.fingerprint, fp1);
+
+    // Same connection, no reconnect: the next batch scores the new model.
+    let got = client.score(&rows).unwrap();
+    assert_eq!(
+        bits(&got),
+        bits(&want2),
+        "post-swap scores are not the new model's"
+    );
+}
+
+#[test]
+fn col_blocked_server_is_bitwise_equal_to_unblocked() {
+    let ds = test_rows();
+    let m = test_model(ds.d(), 7, 31);
+    let rows = wire_rows(&ds);
+
+    let unblocked = TestServer::start("blocks1", &m, |o| o.col_blocks = 1);
+    let blocked = TestServer::start("blocks3", &m, |o| o.col_blocks = 3);
+    let want = unblocked.connect().score(&rows).unwrap();
+    assert_eq!(bits(&want), bits(&reference_scores(&m, &ds)));
+
+    let mut client = blocked.connect();
+    assert_eq!(client.stats().unwrap().col_blocks, 3);
+    let got = client.score(&rows).unwrap();
+    assert_eq!(
+        bits(&got),
+        bits(&want),
+        "col_blocks=3 serving diverges from unblocked"
+    );
+}
+
+#[test]
+fn invalid_rows_get_error_frames_and_the_connection_survives() {
+    let ds = test_rows();
+    let m = test_model(ds.d(), 4, 41);
+    let want = reference_scores(&m, &ds);
+    let server = TestServer::start("badrows", &m, |_| {});
+    let mut client = server.connect();
+
+    // Out-of-range feature index: rejected with the row named, no score.
+    let bad_idx = [ds.d() as u32 + 5];
+    let bad_val = [1.0f32];
+    let err = client
+        .score(&[(&bad_idx[..], &bad_val[..])])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("out of range"), "{err}");
+
+    // Non-ascending indices: also a request-level error.
+    let dup_idx = [2u32, 2];
+    let dup_val = [1.0f32, 2.0];
+    let err = client
+        .score(&[(&dup_idx[..], &dup_val[..])])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("strictly increasing"), "{err}");
+
+    // The same connection still scores, bitwise-correctly.
+    let got = client.score(&wire_rows(&ds)).unwrap();
+    assert_eq!(bits(&got), bits(&want));
+}
